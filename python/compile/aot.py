@@ -1,0 +1,153 @@
+# AOT lowering: jax/pallas -> HLO *text* artifacts for the rust runtime.
+#
+# HLO text (NOT lowered.compiler_ir(...).serialize() / HloModuleProto
+# bytes) is the interchange format: jax >= 0.5 emits protos with 64-bit
+# instruction ids that xla_extension 0.5.1 (the version the published
+# `xla` 0.1.6 crate links) rejects with `proto.id() <= INT_MAX`.  The XLA
+# text parser reassigns ids, so text round-trips cleanly — see
+# /opt/xla-example/load_hlo and its README.
+#
+# Alongside each <entry>.hlo.txt we write manifest.json describing the
+# artifact ABI (input/output shapes + dtypes + golden smoke vectors); the
+# rust runtime validates against it at load time and the integration tests
+# replay the goldens through PJRT.
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SCHEMA_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XLA computation -> HLO text (see header)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rng(seed: int):
+    return np.random.default_rng(seed)
+
+
+def _golden_inputs(name: str):
+    """Deterministic smoke inputs per entry (replayed from rust)."""
+    r = _rng(0xC0FFEE)
+    if name in ("docking", "docking_refine"):
+        feats = r.normal(size=(model.DOCK_M, model.DOCK_F)).astype(np.float32)
+        recep = r.normal(size=(model.DOCK_F, model.DOCK_P)).astype(np.float32)
+        return [feats, recep]
+    if name == "genotype":
+        counts = r.integers(0, 40, size=(model.GL_S, 4)).astype(np.float32)
+        err = np.float32(0.01)
+        return [counts, err]
+    if name == "gc_count":
+        codes = r.choice(
+            np.array([65, 67, 71, 84], dtype=np.int32), size=(model.GC_N,)
+        )
+        return [codes]
+    raise KeyError(name)
+
+
+# Registry of AOT entry points: name -> (fn, input specs).
+ENTRIES = {
+    "docking": (
+        model.docking_pipeline,
+        [
+            _spec((model.DOCK_M, model.DOCK_F), jnp.float32),
+            _spec((model.DOCK_F, model.DOCK_P), jnp.float32),
+        ],
+    ),
+    "docking_refine": (
+        model.docking_refine,
+        [
+            _spec((model.DOCK_M, model.DOCK_F), jnp.float32),
+            _spec((model.DOCK_F, model.DOCK_P), jnp.float32),
+        ],
+    ),
+    "genotype": (
+        model.genotype_pipeline,
+        [
+            _spec((model.GL_S, 4), jnp.float32),
+            _spec((), jnp.float32),
+        ],
+    ),
+    "gc_count": (
+        model.gc_pipeline,
+        [_spec((model.GC_N,), jnp.int32)],
+    ),
+}
+
+
+def lower_entry(name: str):
+    fn, specs = ENTRIES[name]
+    return jax.jit(fn).lower(*specs)
+
+
+def build(outdir: str, entries=None) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"schema": SCHEMA_VERSION, "entries": {}}
+    for name in entries or ENTRIES:
+        fn, specs = ENTRIES[name]
+        lowered = lower_entry(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        # Golden smoke vectors: run the jitted fn on deterministic inputs
+        # and record flat checksums the rust side re-verifies via PJRT.
+        inputs = _golden_inputs(name)
+        outputs = jax.tree_util.tree_leaves(jax.jit(fn)(*inputs))
+        goldens = []
+        for out in outputs:
+            arr = np.asarray(out)
+            goldens.append(
+                {
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sum": float(np.sum(arr.astype(np.float64))),
+                    "first": float(arr.reshape(-1)[0]) if arr.size else 0.0,
+                }
+            )
+        manifest["entries"][name] = {
+            "file": os.path.basename(path),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+                for s in specs
+            ],
+            "outputs": goldens,
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--entry", action="append", help="subset of entries")
+    args = ap.parse_args()
+    build(args.out, args.entry)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots (docking score,
+# genotype likelihood, GC count) + pure-jnp oracles in ref.py.
+from . import docking, gc_count, genotype, ref  # noqa: F401

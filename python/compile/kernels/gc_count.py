@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: GC-content count over an ASCII base stream.
+
+The paper's introductory example (Listing 1: ``grep -o '[GC]' | wc -l``).
+Each grid step consumes a block of ASCII codes and emits a partial count;
+L2 sums the partials.  interpret=True (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ASCII_G = 71
+ASCII_C = 67
+BLOCK_N = 512
+
+
+def _gc_kernel(codes_ref, o_ref):
+    codes = codes_ref[...]
+    is_gc = jnp.logical_or(codes == ASCII_G, codes == ASCII_C)
+    o_ref[...] = jnp.sum(is_gc.astype(jnp.int32), keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def gc_partials(codes: jax.Array, *, bn: int = BLOCK_N) -> jax.Array:
+    """Per-block G/C counts.
+
+    Args:
+      codes: (N,) int32 ASCII codes of DNA bases (padding must not be G/C).
+    Returns:
+      (N // bn,) int32 partial counts; sum for the total.
+    """
+    (n,) = codes.shape
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        _gc_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // bn,), jnp.int32),
+        interpret=True,
+    )(codes)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: per-site diploid genotype log-likelihoods.
+
+The numeric core of the (simulated) GATK HaplotypeCaller: given per-site
+base pileup counts ``(S, 4)`` and a per-genotype emission matrix
+``(4, 10)`` of log base-emission probabilities, the log-likelihood of
+genotype g at site s is ``counts[s] @ log_emit[:, g]`` — a skinny matmul
+tiled over site blocks.  argmax / quality extraction happens in L2
+(`model.genotype_pipeline`) where XLA fuses it with the kernel output.
+
+interpret=True (CPU PJRT); TPU notes in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BASES = 4  # A C G T
+N_GENOTYPES = 10  # unordered diploid pairs of 4 alleles
+BLOCK_S = 128  # sites per tile
+
+
+def _gl_kernel(counts_ref, emit_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        counts_ref[...], emit_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def genotype_loglik(
+    counts: jax.Array, log_emit: jax.Array, *, bs: int = BLOCK_S
+) -> jax.Array:
+    """Per-site genotype log-likelihoods.
+
+    Args:
+      counts: (S, 4) float32 pileup base counts per site.
+      log_emit: (4, 10) float32 log P(read base | genotype).
+    Returns:
+      (S, 10) float32 log-likelihood of each genotype at each site.
+    """
+    s, nb = counts.shape
+    nb2, ng = log_emit.shape
+    assert nb == N_BASES and nb2 == N_BASES and ng == N_GENOTYPES
+    assert s % bs == 0, (s, bs)
+    return pl.pallas_call(
+        _gl_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, nb), lambda i: (i, 0)),
+            pl.BlockSpec((nb, ng), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, ng), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, ng), jnp.float32),
+        interpret=True,
+    )(counts, log_emit)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest (python/tests/) asserts kernel == ref across shape/dtype sweeps;
+the rust integration tests re-check the same numbers through the AOT
+artifacts, closing the loop python -> HLO text -> PJRT -> rust.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .docking import SHAPE_BETA, SHAPE_MU, SHAPE_SIGMA
+from .gc_count import ASCII_C, ASCII_G
+
+
+def dock_scores_ref(features: jax.Array, receptor: jax.Array) -> jax.Array:
+    """Oracle for kernels.docking.dock_scores."""
+    raw = features.astype(jnp.float32) @ receptor.astype(jnp.float32)
+    gauss = SHAPE_BETA * jnp.exp(-((raw - SHAPE_MU) ** 2) / (2.0 * SHAPE_SIGMA**2))
+    return -raw - gauss
+
+
+def genotype_loglik_ref(counts: jax.Array, log_emit: jax.Array) -> jax.Array:
+    """Oracle for kernels.genotype.genotype_loglik."""
+    return counts.astype(jnp.float32) @ log_emit.astype(jnp.float32)
+
+
+def gc_count_ref(codes: jax.Array) -> jax.Array:
+    """Oracle for kernels.gc_count (total count, not partials)."""
+    is_gc = jnp.logical_or(codes == ASCII_G, codes == ASCII_C)
+    return jnp.sum(is_gc.astype(jnp.int32))

@@ -1,0 +1,120 @@
+# L2: JAX compute graphs for the containerized tools' numeric cores.
+#
+# Each pipeline below wraps an L1 Pallas kernel (kernels/) with the
+# surrounding math the tool needs (normalization, argmax/quality
+# extraction, gradient-based pose refinement) so that the whole thing
+# lowers into ONE fused HLO module per tool.  aot.py lowers these with
+# static AOT shapes (the rust side pads/batches to them) and the rust
+# runtime executes the artifacts via PJRT — python never runs on the
+# request path.
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import docking, gc_count, genotype
+
+# ---------------------------------------------------------------------------
+# Static AOT shapes (the rust coordinator batches records to these).
+# ---------------------------------------------------------------------------
+DOCK_M = 128  # molecules per batch
+DOCK_F = 256  # feature dimension
+DOCK_P = 32  # receptor poses
+GL_S = 512  # pileup sites per batch
+GC_N = 4096  # bases per batch
+REFINE_STEPS = 3
+REFINE_LR = 0.05
+
+# Unordered diploid genotype enumeration over alleles A,C,G,T — the order
+# is part of the artifact ABI (rust/src/tools/gatk.rs mirrors it).
+GENOTYPES = [(a, b) for a in range(4) for b in range(a, 4)]
+assert len(GENOTYPES) == genotype.N_GENOTYPES
+
+
+def log_emit_matrix(err: jax.Array) -> jax.Array:
+    """(4, 10) log P(read base | genotype) for a scalar error rate."""
+    base = jnp.arange(4)
+    # p(c|allele a) = 1-err if c == a else err/3
+    p_given_allele = jnp.where(
+        base[:, None] == base[None, :], 1.0 - err, err / 3.0
+    )  # (read_base, allele)
+    cols = []
+    for a, b in GENOTYPES:
+        cols.append(0.5 * (p_given_allele[:, a] + p_given_allele[:, b]))
+    emit = jnp.stack(cols, axis=1)  # (4, 10)
+    return jnp.log(emit)
+
+
+# ---------------------------------------------------------------------------
+# Docking (VS pipeline — the FRED tool core).
+# ---------------------------------------------------------------------------
+def docking_pipeline(features: jax.Array, receptor: jax.Array):
+    """Best pose score + index per molecule.
+
+    Returns (best_score (M,) f32, best_pose (M,) i32, scores (M, P) f32).
+    """
+    # Feature normalization is part of the tool, not the data generator:
+    # rows are scaled to unit RMS so scores are library-independent.
+    rms = jnp.sqrt(jnp.mean(features**2, axis=1, keepdims=True) + 1e-6)
+    scores = docking.dock_scores(features / rms, receptor)
+    best_pose = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.min(scores, axis=1)
+    return best_score, best_pose, scores
+
+
+def _refine_loss(weights: jax.Array, scores: jax.Array) -> jax.Array:
+    """Soft pose-assignment energy: softmax-weighted score + entropy reg."""
+    w = jax.nn.softmax(weights, axis=1)
+    energy = jnp.sum(w * scores, axis=1)
+    reg = 1e-2 * jnp.sum(w * jnp.log(w + 1e-9), axis=1)
+    return jnp.sum(energy + reg)
+
+
+def docking_refine(features: jax.Array, receptor: jax.Array):
+    """Gradient-refined soft pose assignment (exercises the bwd graph).
+
+    A few steps of gradient descent on per-molecule pose logits against
+    the kernel-produced score surface.  Returns (refined_score (M,) f32,
+    weights (M, P) f32).
+    """
+    _, _, scores = docking_pipeline(features, receptor)
+    weights = jnp.zeros_like(scores)
+    grad = jax.grad(_refine_loss)
+    for _ in range(REFINE_STEPS):
+        weights = weights - REFINE_LR * grad(weights, scores)
+    w = jax.nn.softmax(weights, axis=1)
+    refined = jnp.sum(w * scores, axis=1)
+    return refined, w
+
+
+# ---------------------------------------------------------------------------
+# Genotype calling (SNP pipeline — the GATK tool core).
+# ---------------------------------------------------------------------------
+def genotype_pipeline(counts: jax.Array, err: jax.Array):
+    """Per-site genotype call.
+
+    Args:
+      counts: (S, 4) f32 pileup base counts.
+      err: scalar f32 sequencing error rate.
+    Returns (loglik (S, 10) f32, best (S,) i32, qual (S,) f32).
+    """
+    loglik = genotype.genotype_loglik(counts, log_emit_matrix(err))
+    best = jnp.argmax(loglik, axis=1).astype(jnp.int32)
+    top = jnp.max(loglik, axis=1)
+    # Phred-scaled distance to the runner-up genotype.
+    masked = jnp.where(
+        jax.nn.one_hot(best, genotype.N_GENOTYPES, dtype=bool), -jnp.inf, loglik
+    )
+    second = jnp.max(masked, axis=1)
+    qual = (10.0 / jnp.log(10.0)) * (top - second)
+    return loglik, best, qual
+
+
+# ---------------------------------------------------------------------------
+# GC count (Listing 1 — the quickstart tool core).
+# ---------------------------------------------------------------------------
+def gc_pipeline(codes: jax.Array):
+    """Total G/C count over an ASCII base block. Returns ((1,) i32,)."""
+    partials = gc_count.gc_partials(codes)
+    return (jnp.sum(partials, keepdims=True),)

@@ -1,0 +1,167 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+#
+# hypothesis sweeps shapes (multiples of the tile sizes) and block
+# configurations; every Pallas kernel must match its pure-jnp oracle in
+# kernels/ref.py bit-for-bit within float tolerance.
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import docking, gc_count, genotype, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _feats(m, f):
+    return RNG.normal(size=(m, f)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# docking kernel
+# ---------------------------------------------------------------------------
+class TestDocking:
+    def test_matches_ref_default_shape(self):
+        x, w = _feats(128, 256), _feats(256, 32)
+        got = docking.dock_scores(x, w)
+        want = ref.dock_scores_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        pi=st.integers(1, 4),
+    )
+    def test_matches_ref_shape_sweep(self, mi, ki, pi):
+        m, f, p = 64 * mi, 128 * ki, 32 * pi
+        x, w = _feats(m, f), _feats(f, p)
+        got = docking.dock_scores(x, w)
+        want = ref.dock_scores_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        bm=st.sampled_from([32, 64, 128]),
+        bp=st.sampled_from([16, 32]),
+        bk=st.sampled_from([64, 128, 256]),
+    )
+    def test_block_shape_invariance(self, bm, bp, bk):
+        """The tiling schedule must not change the numbers."""
+        x, w = _feats(128, 256), _feats(256, 32)
+        got = docking.dock_scores(x, w, bm=bm, bp=bp, bk=bk)
+        want = ref.dock_scores_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_nondivisible_shapes(self):
+        x, w = _feats(100, 256), _feats(256, 32)
+        with pytest.raises(AssertionError):
+            docking.dock_scores(x, w)
+
+    def test_score_upper_bound(self):
+        """score = -raw - gauss <= -raw, and gauss term is <= beta."""
+        x, w = _feats(128, 256), _feats(256, 32)
+        raw = x @ w
+        got = np.asarray(docking.dock_scores(x, w))
+        tol = 1e-3 * (1.0 + np.abs(raw))  # K-blocked accumulation noise
+        assert np.all(got <= -raw + tol)
+        assert np.all(got >= -raw - docking.SHAPE_BETA - tol)
+
+    def test_bf16_inputs_loose_tolerance(self):
+        x = jnp.asarray(_feats(64, 128), jnp.bfloat16).astype(jnp.float32)
+        w = jnp.asarray(_feats(128, 32), jnp.bfloat16).astype(jnp.float32)
+        got = docking.dock_scores(x, w, bm=64, bp=32, bk=128)
+        want = ref.dock_scores_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# genotype kernel
+# ---------------------------------------------------------------------------
+class TestGenotype:
+    def _emit(self, err=0.01):
+        from compile import model
+
+        return np.asarray(model.log_emit_matrix(jnp.float32(err)))
+
+    def test_matches_ref_default_shape(self):
+        counts = RNG.integers(0, 50, size=(512, 4)).astype(np.float32)
+        emit = self._emit()
+        got = genotype.genotype_loglik(counts, emit)
+        want = ref.genotype_loglik_ref(counts, emit)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 8),
+        bs=st.sampled_from([64, 128, 256]),
+        err=st.floats(1e-4, 0.2),
+    )
+    def test_shape_and_block_sweep(self, blocks, bs, err):
+        s = bs * blocks
+        counts = RNG.integers(0, 50, size=(s, 4)).astype(np.float32)
+        emit = self._emit(err)
+        got = genotype.genotype_loglik(counts, emit, bs=bs)
+        want = ref.genotype_loglik_ref(counts, emit)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_pure_pileup_calls_homozygous(self):
+        """All-A pileup must maximize the AA genotype (column 0)."""
+        counts = np.zeros((128, 4), np.float32)
+        counts[:, 0] = 30.0
+        got = np.asarray(genotype.genotype_loglik(counts, self._emit(), bs=128))
+        assert np.all(np.argmax(got, axis=1) == 0)
+
+    def test_het_pileup_calls_het(self):
+        """50/50 A/C pileup must maximize the AC genotype (column 1)."""
+        counts = np.zeros((128, 4), np.float32)
+        counts[:, 0] = 20.0
+        counts[:, 1] = 20.0
+        got = np.asarray(genotype.genotype_loglik(counts, self._emit(), bs=128))
+        assert np.all(np.argmax(got, axis=1) == 1)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            genotype.genotype_loglik(
+                np.zeros((100, 4), np.float32), self._emit()
+            )
+
+
+# ---------------------------------------------------------------------------
+# gc_count kernel
+# ---------------------------------------------------------------------------
+class TestGcCount:
+    @settings(max_examples=25, deadline=None)
+    @given(blocks=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, blocks, seed):
+        r = np.random.default_rng(seed)
+        codes = r.choice(
+            np.array([65, 67, 71, 84], np.int32), size=(512 * blocks,)
+        )
+        partials = gc_count.gc_partials(codes)
+        assert int(np.sum(partials)) == int(ref.gc_count_ref(codes))
+
+    def test_known_string(self):
+        codes = np.frombuffer(b"GATTACAGC" + b"A" * 503, np.uint8).astype(
+            np.int32
+        )
+        assert int(np.sum(gc_count.gc_partials(codes))) == 4
+
+    def test_all_gc(self):
+        codes = np.full((1024,), 71, np.int32)
+        assert int(np.sum(gc_count.gc_partials(codes))) == 1024
+
+    def test_no_gc(self):
+        codes = np.full((1024,), 65, np.int32)
+        assert int(np.sum(gc_count.gc_partials(codes))) == 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(bn=st.sampled_from([128, 256, 512, 1024]))
+    def test_block_invariance(self, bn):
+        r = np.random.default_rng(3)
+        codes = r.choice(np.array([65, 67, 71, 84], np.int32), size=(2048,))
+        total = int(np.sum(gc_count.gc_partials(codes, bn=bn)))
+        assert total == int(ref.gc_count_ref(codes))

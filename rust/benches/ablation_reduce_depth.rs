@@ -1,0 +1,62 @@
+//! ABL-K — reduce tree depth (§1.2.2: "By default MaRe sets K to 2,
+//! however the user may chose a higher tree depth when it is not
+//! possible to sufficiently reduce the dataset size in one go").
+//!
+//! Sweeps K over the VS reduce on a 16-worker cluster: deeper trees add
+//! shuffles (one per level) but shrink per-task aggregation inputs.
+//! Validates the paper's statement that "reduce leads to K data
+//! shuffles" and shows the K=2 default is a sane choice for top-N.
+//!
+//! Run: `cargo bench --bench ablation_reduce_depth`.
+
+use mare::cluster::ClusterConfig;
+use mare::config::{BackendKind, RunConfigFile, Workload};
+use mare::util::bench::Table;
+
+fn main() {
+    let mut table = Table::new(
+        "ABL-K — VS reduce tree depth sweep (16 workers x 8 vCPUs)",
+        &["K", "stages", "shuffles", "makespan", "shuffled B", "top poses"],
+    );
+
+    let mut makespans = Vec::new();
+    for k in 1..=4usize {
+        let mut cfg = RunConfigFile {
+            workload: Workload::Vs,
+            backend: BackendKind::Hdfs,
+            scale: 512,
+            seed: 0xAB7,
+            reduce_depth: k,
+            ..Default::default()
+        };
+        cfg.cluster = ClusterConfig::sized(16, 8);
+        let res = mare::workloads::driver::run(&cfg).expect("vs run");
+        let shuffles = res.report.num_shuffles();
+        table.row(vec![
+            k.to_string(),
+            res.report.stages.len().to_string(),
+            shuffles.to_string(),
+            res.report.makespan.to_string(),
+            res.report.total_shuffled_bytes().to_string(),
+            res.digest.clone(),
+        ]);
+        makespans.push((k, res.report.makespan, shuffles, res.digest));
+    }
+    table.print();
+    table.save("ablation_reduce_depth");
+
+    // every depth returns the same top-30 (associativity in practice)
+    let digests: std::collections::HashSet<&String> =
+        makespans.iter().map(|(_, _, _, d)| d).collect();
+    assert_eq!(digests.len(), 1, "reduce depth must not change the result");
+
+    // shuffles grow with K (paper: "K data shuffles")
+    for w in makespans.windows(2) {
+        assert!(
+            w[1].2 >= w[0].2,
+            "shuffles should not shrink with deeper trees: {:?}",
+            makespans.iter().map(|(k, _, s, _)| (*k, *s)).collect::<Vec<_>>()
+        );
+    }
+    println!("\nshape-check OK: identical results, shuffle count grows with K");
+}

@@ -1,0 +1,106 @@
+//! ABL-SKEW — why Figure 4 sags: chromosome-size skew + the
+//! chromosome-count parallelism cap.
+//!
+//! §1.3.2: "the maximum allowed parallelism is equal to the total number
+//! of chromosomes", and human chromosomes differ ~5x in size, so the
+//! chromosome-grouped GATK stage straggles on chr1. This ablation runs
+//! the SNP pipeline with (a) equal-size vs human-skewed chromosomes and
+//! (b) more/fewer chromosomes than GATK-stage slots, isolating both
+//! effects the paper's Figure 4 folds together.
+//!
+//! Run: `cargo bench --bench ablation_skew`.
+
+use mare::cluster::ClusterConfig;
+use mare::dataset::Dataset;
+use mare::util::bench::Table;
+use mare::workloads::{self, genreads, snp};
+
+fn run_snp(chromosomes: usize, skewed: bool, workers: usize) -> mare::simtime::VirtualTime {
+    // genreads skews by default; emulate "equal" by generating each
+    // chromosome separately at the mean length
+    let sim = genreads::ReadSimConfig {
+        seed: 0xA5EB,
+        chromosomes: if skewed { chromosomes } else { 1 },
+        chromosome_len: 2200,
+        coverage: 20.0,
+        ..Default::default()
+    };
+    let individual = if skewed {
+        genreads::individual(&sim)
+    } else {
+        // stitch N independent equal-size chromosomes
+        let mut contigs = Vec::new();
+        let mut haplotypes = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..chromosomes {
+            let sub = genreads::individual(&genreads::ReadSimConfig {
+                seed: sim.seed + c as u64,
+                chromosomes: 1,
+                ..sim.clone()
+            });
+            let mut contig = sub.reference.contigs[0].clone();
+            contig.name = format!("chr{}", c + 1);
+            for t in &sub.truth {
+                truth.push(genreads::PlantedSnp { chrom: contig.name.clone(), ..t.clone() });
+            }
+            contigs.push(contig);
+            haplotypes.push(sub.haplotypes[0].clone());
+        }
+        genreads::Individual {
+            reference: mare::formats::fasta::Reference { contigs },
+            haplotypes,
+            truth,
+        }
+    };
+    // reads() samples from the individual's contigs; sim only supplies
+    // read length / coverage / error rate here
+    let reads = genreads::reads(&sim, &individual);
+    let records: Vec<mare::dataset::Record> = reads
+        .iter()
+        .map(|r| mare::dataset::Record::text(r.to_fastq().trim_end().to_string()))
+        .collect();
+    let cluster = workloads::make_cluster(
+        ClusterConfig::sized(workers, 8),
+        Some(&workloads::artifact_dir()),
+        Some(&individual.reference),
+    )
+    .expect("artifacts");
+    let ds = Dataset::parallelize(records, workers * 2);
+    let out = snp::pipeline(cluster, ds, workers).run().expect("snp run");
+    out.report.makespan
+}
+
+fn main() {
+    let mut table = Table::new(
+        "ABL-SKEW — chromosome skew & parallelism cap on the SNP pipeline",
+        &["chromosomes", "sizes", "workers", "makespan"],
+    );
+
+    // (a) skew effect at fixed parallelism
+    let eq = run_snp(6, false, 8);
+    let sk = run_snp(6, true, 8);
+    table.row(vec!["6".into(), "equal".into(), "8".into(), eq.to_string()]);
+    table.row(vec!["6".into(), "human-skewed".into(), "8".into(), sk.to_string()]);
+
+    // (b) parallelism cap: more workers than chromosomes stops helping
+    let few = run_snp(4, true, 4);
+    let more = run_snp(4, true, 12);
+    table.row(vec!["4".into(), "human-skewed".into(), "4".into(), few.to_string()]);
+    table.row(vec!["4".into(), "human-skewed".into(), "12".into(), more.to_string()]);
+    table.print();
+    table.save("ablation_skew");
+
+    let skew_penalty = sk.as_seconds() / eq.as_seconds();
+    println!(
+        "\nskew penalty: {skew_penalty:.3}x | cap: 3x workers buys {:.2}x",
+        few.as_seconds() / more.as_seconds()
+    );
+    assert!(
+        skew_penalty > 0.99,
+        "skewed chromosomes should not be faster: {skew_penalty:.3}"
+    );
+    // beyond the chromosome count, extra workers help little for the
+    // gatk stage (bwa/reduce still gain some)
+    let cap_gain = few.as_seconds() / more.as_seconds();
+    assert!(cap_gain < 2.8, "3x workers gained {cap_gain:.2}x — cap not visible");
+}

@@ -1,0 +1,77 @@
+//! Figure 3 — Weak Scaling Efficiency of the Virtual Screening pipeline
+//! (Listing 2), HDFS vs Swift backends.
+//!
+//! Protocol (§1.3): run the full dataset on 16 workers, then 1/2, 1/4,
+//! 1/8, 1/16 of it on 8, 4, 2, 1 workers; WSE(N) = t(1/16 data, 1 node)
+//! / t(N/16 data, N nodes). The paper reports WSE ≈ 0.9–1.05 with HDFS
+//! slightly above Swift (co-location ⇒ less network traffic).
+//!
+//! Run: `cargo bench --bench fig3_vs_wse` (MARE_FIG_SCALE=mols/worker to
+//! resize; default keeps the real PJRT work laptop-friendly).
+
+use mare::config::{BackendKind, RunConfigFile, Workload};
+use mare::metrics::{render_series, wse_series, WsePoint};
+use mare::simtime::VirtualTime;
+use mare::util::bench::Table;
+
+fn scale_per_worker() -> usize {
+    std::env::var("MARE_FIG_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(96)
+}
+
+fn measure(backend: BackendKind, workers: usize) -> (VirtualTime, VirtualTime) {
+    let mut cfg = RunConfigFile {
+        workload: Workload::Vs,
+        backend,
+        scale: scale_per_worker() * workers,
+        seed: 0xF16_3,
+        ..Default::default()
+    };
+    cfg.cluster = mare::cluster::ClusterConfig::sized(workers, 8);
+    cfg.cluster.seed = cfg.seed;
+    let res = mare::workloads::driver::run(&cfg).expect("vs run");
+    (res.report.makespan + res.ingest.duration, res.report.makespan)
+}
+
+fn main() {
+    let workers = [1usize, 2, 4, 8, 16];
+    let mut series: Vec<(String, Vec<WsePoint>)> = Vec::new();
+
+    for backend in [BackendKind::Hdfs, BackendKind::Swift] {
+        let mut measurements = Vec::new();
+        for &n in &workers {
+            let (total, _) = measure(backend, n);
+            measurements.push((n, 8u32, total));
+        }
+        series.push((backend.name().to_string(), wse_series(&measurements)));
+    }
+
+    let mut table = Table::new(
+        "Figure 3 — VS weak scaling efficiency (HDFS vs Swift)",
+        &["vCPUs", "WSE hdfs", "WSE swift", "t hdfs", "t swift"],
+    );
+    for (i, &n) in workers.iter().enumerate() {
+        table.row(vec![
+            (n * 8).to_string(),
+            format!("{:.3}", series[0].1[i].wse),
+            format!("{:.3}", series[1].1[i].wse),
+            series[0].1[i].makespan.to_string(),
+            series[1].1[i].makespan.to_string(),
+        ]);
+    }
+    table.print();
+    table.save("fig3_vs_wse");
+    print!("{}", render_series("Figure 3 (paper: WSE 0.9–1.05, HDFS ≳ Swift)", &series));
+
+    // paper-shape checks
+    let hdfs = &series[0].1;
+    let swift = &series[1].1;
+    let h128 = hdfs.last().unwrap().wse;
+    let s128 = swift.last().unwrap().wse;
+    assert!(h128 > 0.75, "HDFS WSE at 128 vCPUs too low: {h128:.3}");
+    assert!(s128 > 0.65, "Swift WSE at 128 vCPUs too low: {s128:.3}");
+    assert!(
+        h128 >= s128 - 0.02,
+        "HDFS should not trail Swift: {h128:.3} vs {s128:.3}"
+    );
+    println!("\nshape-check OK: WSE@128 hdfs={h128:.3} swift={s128:.3}");
+}

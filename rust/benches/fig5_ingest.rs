@@ -1,0 +1,76 @@
+//! Figure 5 — S3 ingestion speedup for one full 1000-Genomes individual.
+//!
+//! Protocol (§1.3.2): the input size is STATIC (S3 hosts the full
+//! dataset; no downsampling); speedup(N) = t(1 worker) / t(N workers).
+//! The paper observes near-ideal speedup to 4 workers, levelling off
+//! from 8 to 16 — the shared WAN egress pipe saturating.
+//!
+//! Run: `cargo bench --bench fig5_ingest`.
+
+use mare::storage::{ingest_text, StorageBackend, S3};
+use mare::util::bench::Table;
+
+fn doc_mib() -> usize {
+    std::env::var("MARE_FIG_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(128)
+}
+
+fn main() {
+    // a line-structured object standing in for the ~30 GB FASTQ archive
+    let line = "x".repeat(1023);
+    let lines = doc_mib() << 10; // MiB -> 1 KiB lines
+    let doc: String = (0..lines).map(|_| format!("{line}\n")).collect();
+    let mut s3 = S3::new();
+    s3.put("1000genomes/HG02666.fastq", doc.into_bytes()).unwrap();
+
+    let workers = [1usize, 2, 4, 8, 16];
+    let mut times = Vec::new();
+    for &n in &workers {
+        let (_, rep) = ingest_text(
+            &s3,
+            "1000genomes/HG02666.fastq",
+            "\n",
+            (n * 2).max(2),
+            n,
+        )
+        .unwrap();
+        times.push(rep.duration);
+    }
+
+    let t1 = times[0];
+    let mut table = Table::new(
+        "Figure 5 — S3 ingestion speedup (static input)",
+        &["workers", "virtual time", "speedup", "ideal"],
+    );
+    let mut speedups = Vec::new();
+    for (i, &n) in workers.iter().enumerate() {
+        let s = mare::metrics::speedup(
+            mare::simtime::VirtualTime::ZERO + t1,
+            mare::simtime::VirtualTime::ZERO + times[i],
+        );
+        speedups.push(s);
+        table.row(vec![
+            n.to_string(),
+            times[i].to_string(),
+            format!("{s:.2}x"),
+            format!("{n}.00x"),
+        ]);
+    }
+    table.print();
+    table.save("fig5_ingest");
+
+    // paper-shape checks: near-ideal to 4 (modulo per-GET WAN latency),
+    // flattened by 16
+    assert!(speedups[1] > 1.7, "speedup(2) = {:.2}", speedups[1]);
+    assert!(speedups[2] > 3.0, "speedup(4) = {:.2}", speedups[2]);
+    let flattening = speedups[4] / 16.0;
+    assert!(
+        flattening < 0.75,
+        "speedup(16) should level off well below ideal: {:.2}x",
+        speedups[4]
+    );
+    assert!(speedups[4] >= speedups[3] * 0.95, "speedup should not regress");
+    println!(
+        "\nshape-check OK: speedup 2/4/8/16 = {:.2}/{:.2}/{:.2}/{:.2}",
+        speedups[1], speedups[2], speedups[3], speedups[4]
+    );
+}

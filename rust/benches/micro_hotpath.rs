@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the L3 hot paths (§Perf): record splitting,
+//! shuffle routing, slot scheduling, the container VFS + shell, and the
+//! PJRT call path. These are the knobs the performance pass iterates on;
+//! EXPERIMENTS.md §Perf records before/after numbers from this bench.
+//!
+//! Run: `cargo bench --bench micro_hotpath [filter]`.
+
+use std::sync::Arc;
+
+use mare::container::{RunConfig, Vfs};
+use mare::dataset::{split_records, Partitioner, Record};
+use mare::simtime::{Duration, SlotSchedule, SlotTask};
+use mare::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("micro_hotpath");
+
+    // ---- record splitting (ingest + every TextFile stage boundary)
+    let sdf_doc = mare::workloads::genlib::library_sdf(1, 512);
+    b.time("split_records/sdf_512mol", || {
+        let recs = split_records(&sdf_doc, "\n$$$$\n");
+        assert_eq!(recs.len(), 512);
+    });
+    let lines: String = (0..10_000).map(|i| format!("line-{i}\n")).collect();
+    b.time("split_records/10k_lines", || {
+        let recs = split_records(&lines, "\n");
+        assert_eq!(recs.len(), 10_000);
+    });
+
+    // ---- SDF serialization (the VS pipeline's dominant L3 cost per
+    //      the perf profile: float formatting in to_sdf)
+    let mols: Vec<mare::formats::sdf::Molecule> =
+        (0..512).map(|i| mare::workloads::genlib::molecule(1, i)).collect();
+    b.time("sdf/write_512mol", || {
+        let text = mare::formats::sdf::write_many(&mols);
+        assert!(!text.is_empty());
+    });
+    b.time("sdf/parse_512mol", || {
+        let m = mare::formats::sdf::parse_many(&sdf_doc).unwrap();
+        assert_eq!(m.len(), 512);
+    });
+
+    // ---- shuffle routing (every wide stage)
+    let records: Vec<Record> =
+        (0..10_000).map(|i| Record::text(format!("chr{}:{i}", i % 23))).collect();
+    let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+        Arc::new(|r: &Record| r.as_text().unwrap().split(':').next().unwrap().to_string());
+    b.time("route/hash_10k_records_23keys", || {
+        let p = Partitioner::HashByKey { key_fn: key_fn.clone(), num: 16 };
+        let buckets = mare::dataset::plan::route(&p, records.clone());
+        assert_eq!(buckets.len(), 16);
+    });
+    b.time("route/balanced_10k_records", || {
+        let p = Partitioner::Balanced { num: 16 };
+        let buckets = mare::dataset::plan::route(&p, records.clone());
+        assert_eq!(buckets.len(), 16);
+    });
+
+    // ---- virtual scheduling (every stage; must stay <5% of makespan)
+    let tasks: Vec<SlotTask> = (0..10_000)
+        .map(|i| SlotTask {
+            id: i,
+            duration: Duration::seconds(1.0 + (i % 7) as f64),
+            cpus: 1 + (i % 3) as u32,
+            preferred: Some(i % 16),
+            remote_penalty: Duration::seconds(0.2),
+        })
+        .collect();
+    b.time("slot_schedule/10k_tasks_16x8", || {
+        let mut s = SlotSchedule::new(16, 8);
+        let placements = s.run(&tasks);
+        assert_eq!(placements.len(), 10_000);
+    });
+
+    // ---- container VFS + shell (every containerized task)
+    let reg = mare::tools::images::stock_registry(None);
+    let engine = mare::container::Engine::new(Arc::new(reg), None);
+    let payload: String = (0..2_000).map(|i| format!("GATTACA-{i}\n")).collect();
+    b.time("engine/grep_wc_pipeline_2k_lines", || {
+        let cfg = RunConfig::new("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+            .input("/dna", payload.clone().into_bytes());
+        let out = engine.run(&cfg).unwrap();
+        assert!(out.fs.exists("/count"));
+    });
+    b.time("vfs/write_read_1MiB", || {
+        let mut fs = Vfs::disk();
+        fs.write("/x", vec![0u8; 1 << 20]).unwrap();
+        assert_eq!(fs.read("/x").unwrap().len(), 1 << 20);
+    });
+
+    // ---- PJRT call path (fred / gatk request path)
+    if let Ok(rt) = mare::runtime::ToolRuntime::new(
+        mare::workloads::artifact_dir(),
+        mare::workloads::RECEPTOR_SEED,
+    ) {
+        let features = vec![0.25f32; 128 * 256];
+        b.time("pjrt/dock_batch_128x256", || {
+            let r = rt.dock(&features, 128).unwrap();
+            assert_eq!(r.len(), 128);
+        });
+        let counts = vec![[8.0f32, 1.0, 0.0, 0.0]; 512];
+        b.time("pjrt/genotype_512_sites", || {
+            let r = rt.genotype(&counts, 0.01).unwrap();
+            assert_eq!(r.len(), 512);
+        });
+        b.time("pjrt/gc_count_4096", || {
+            let seq = vec![b'G'; 4096];
+            assert_eq!(rt.gc_count(&seq).unwrap(), 4096);
+        });
+    } else {
+        println!("  (PJRT cases skipped: artifacts not built — run `make artifacts`)");
+    }
+
+    // ---- end-to-end small pipeline (the §Perf headline)
+    let mut cfg = mare::config::RunConfigFile {
+        workload: mare::config::Workload::Gc,
+        scale: 512,
+        ..Default::default()
+    };
+    cfg.cluster = mare::cluster::ClusterConfig::sized(4, 4);
+    b.time("e2e/gc_512_lines_4x4", || {
+        let res = mare::workloads::driver::run(&cfg).unwrap();
+        assert!(res.digest.starts_with("gc_count="));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,224 @@
+//! Workflow-system baseline — the "current best practice" MaRe argues
+//! against (§1.1/§1.4): a container-enabled workflow engine that
+//! orchestrates the *same* containerized steps, but
+//!
+//! * synchronizes through a **decoupled shared store** (every stage
+//!   writes all of its output there and the next stage reads it back),
+//! * schedules **without data locality** (tasks go to any free slot),
+//! * runs **batch stages with a submission/polling cadence** instead of
+//!   an in-memory pipelined DAG.
+//!
+//! Outputs are identical to the MaRe pipeline (same tools, same data);
+//! only the data motion and scheduling differ — which is exactly the
+//! claim the TAB-LOC ablation bench quantifies.
+
+use std::sync::Arc;
+
+use crate::cluster::{pool, ClusterConfig};
+use crate::container::Engine;
+use crate::dataset::{PartitionOp, Record, TaskContext};
+use crate::error::Result;
+use crate::mare::{ContainerOp, MountPoint};
+use crate::simtime::{Duration, NetModel, SlotSchedule, SlotTask, VirtualTime};
+
+/// One workflow step (a node in the workflow DAG; our pipelines are
+/// linear, like the paper's two applications).
+pub struct WfStep {
+    pub name: String,
+    pub input_mount: MountPoint,
+    pub output_mount: MountPoint,
+    pub image: String,
+    pub command: String,
+    /// Tasks this step fans out to (the workflow engine's scatter width).
+    pub tasks: usize,
+}
+
+/// Virtual-time account of a workflow run.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowReport {
+    pub makespan: VirtualTime,
+    /// Bytes that crossed the shared store (all of them, twice per
+    /// stage boundary: write + read).
+    pub store_bytes: u64,
+    pub steps: Vec<(String, Duration)>,
+}
+
+/// The workflow engine.
+pub struct WorkflowEngine {
+    engine: Arc<Engine>,
+    pub config: ClusterConfig,
+    /// The shared store's pipe (NFS/object-store-ish; all workers share
+    /// its aggregate bandwidth).
+    pub store_net: NetModel,
+    /// Batch-system submission + polling overhead per step.
+    pub step_overhead: Duration,
+}
+
+impl WorkflowEngine {
+    pub fn new(engine: Arc<Engine>, config: ClusterConfig) -> Self {
+        WorkflowEngine {
+            engine,
+            config,
+            // a decoupled store: good per-connection pipe, shared cap
+            store_net: NetModel::new(0.002, 300e6).with_aggregate(1.5e9),
+            step_overhead: Duration::seconds(5.0),
+        }
+    }
+
+    /// Run a linear workflow over `records`, scattering each step into
+    /// `step.tasks` chunks.
+    pub fn run(&self, steps: &[WfStep], records: Vec<Record>) -> Result<(Vec<Record>, WorkflowReport)> {
+        let mut report = WorkflowReport::default();
+        let mut now = VirtualTime::ZERO;
+        let mut current = records;
+
+        for step in steps {
+            let step_started = now;
+            let op = ContainerOp::new(
+                self.engine.clone(),
+                step.input_mount.clone(),
+                step.output_mount.clone(),
+                &step.image,
+                &step.command,
+            );
+
+            // scatter: contiguous chunks, one per task
+            let n = step.tasks.max(1);
+            let chunks = chop(&current, n);
+
+            // every task first STAGES IN its chunk from the shared store
+            // and finally STAGES OUT its results — both over the store
+            // pipe, all tasks concurrently
+            let in_bytes: Vec<u64> =
+                chunks.iter().map(|c| c.iter().map(Record::size_bytes).sum()).collect();
+
+            let threads = self.config.host_threads.unwrap_or_else(pool::host_threads);
+            let results: Vec<Result<Vec<Record>>> =
+                pool::run_indexed(chunks.len(), threads, |i| {
+                    let ctx = TaskContext {
+                        partition: i,
+                        num_partitions: n,
+                        attempt: 0,
+                        seed: self.config.seed ^ (i as u64) << 16,
+                    };
+                    op.apply(&ctx, chunks[i].clone())
+                });
+            let mut outputs = Vec::with_capacity(results.len());
+            for r in results {
+                outputs.push(r?);
+            }
+            let out_bytes: Vec<u64> =
+                outputs.iter().map(|c| c.iter().map(Record::size_bytes).sum()).collect();
+
+            // virtual schedule: NO locality (preferred=None), store
+            // transfers folded into each task's duration
+            let concurrency = chunks.len() as u32;
+            let mut sched =
+                SlotSchedule::new(self.config.workers, self.config.vcpus_per_worker)
+                    .with_locality_wait(Duration::ZERO);
+            let tasks: Vec<SlotTask> = (0..chunks.len())
+                .map(|i| {
+                    let stage_in = self.store_net.transfer(in_bytes[i], concurrency);
+                    let stage_out = self.store_net.transfer(out_bytes[i], concurrency);
+                    let compute = op.cost_model().compute(in_bytes[i], chunks[i].len() as u64)
+                        + crate::cluster::task::CONTAINER_START;
+                    SlotTask {
+                        id: i,
+                        duration: stage_in + compute + stage_out,
+                        cpus: op.cost_model().cpus.min(self.config.vcpus_per_worker),
+                        preferred: None,
+                        remote_penalty: Duration::ZERO,
+                    }
+                })
+                .collect();
+            sched.run(&tasks);
+
+            report.store_bytes +=
+                in_bytes.iter().sum::<u64>() + out_bytes.iter().sum::<u64>();
+            now = now + (sched.makespan() - VirtualTime::ZERO) + self.step_overhead;
+            report.steps.push((step.name.clone(), now - step_started));
+            current = outputs.into_iter().flatten().collect();
+        }
+
+        report.makespan = now;
+        Ok((current, report))
+    }
+}
+
+/// Contiguous chop into n chunks (workflow scatter).
+fn chop(records: &[Record], n: usize) -> Vec<Vec<Record>> {
+    let n = n.max(1);
+    let total = records.len();
+    let mut out = Vec::with_capacity(n);
+    let mut it = records.iter().cloned();
+    for i in 0..n {
+        let count = total / n + usize::from(i < total % n);
+        out.push(it.by_ref().take(count).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::Registry;
+    use crate::tools::images;
+
+    fn engine() -> Arc<Engine> {
+        let mut reg = Registry::new();
+        reg.push(images::ubuntu());
+        Arc::new(Engine::new(Arc::new(reg), None))
+    }
+
+    fn gc_steps() -> Vec<WfStep> {
+        vec![
+            WfStep {
+                name: "gc-map".into(),
+                input_mount: MountPoint::text("/dna"),
+                output_mount: MountPoint::text("/count"),
+                image: "ubuntu".into(),
+                command: "grep -o '[GC]' /dna | wc -l > /count".into(),
+                tasks: 4,
+            },
+            WfStep {
+                name: "gc-sum".into(),
+                input_mount: MountPoint::text("/counts"),
+                output_mount: MountPoint::text("/sum"),
+                image: "ubuntu".into(),
+                command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+                tasks: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn workflow_produces_same_answer_as_mare() {
+        let genome = crate::workloads::gc::genome_text(5, 32, 60);
+        let want = crate::workloads::gc::oracle(&genome);
+        let records: Vec<Record> =
+            genome.lines().map(Record::text).collect();
+        let wf = WorkflowEngine::new(engine(), ClusterConfig::sized(4, 2));
+        let (out, report) = wf.run(&gc_steps(), records).unwrap();
+        assert_eq!(out, vec![Record::text(want.to_string())]);
+        assert!(report.store_bytes > 0);
+        assert_eq!(report.steps.len(), 2);
+    }
+
+    #[test]
+    fn workflow_charges_store_traffic_and_step_overhead() {
+        let records: Vec<Record> = (0..64).map(|i| Record::text(format!("G{i}"))).collect();
+        let wf = WorkflowEngine::new(engine(), ClusterConfig::sized(4, 2));
+        let (_, report) = wf.run(&gc_steps(), records).unwrap();
+        // at minimum 2 steps x 5 s overhead
+        assert!(report.makespan >= VirtualTime::seconds(10.0), "{}", report.makespan);
+    }
+
+    #[test]
+    fn chop_is_contiguous_and_complete() {
+        let recs: Vec<Record> = (0..10).map(|i| Record::text(format!("{i}"))).collect();
+        let chunks = chop(&recs, 3);
+        assert_eq!(chunks.len(), 3);
+        let flat: Vec<Record> = chunks.into_iter().flatten().collect();
+        assert_eq!(flat, recs);
+    }
+}

@@ -1,0 +1,67 @@
+//! Fault injection + lineage-based recovery.
+//!
+//! The substrate inherits Spark's fault story (§1.2.2 "relies on Apache
+//! Spark to provide ... fault tolerance"): a failed task attempt is
+//! retried, and when a worker is lost its partitions are recomputed from
+//! lineage. Tests and ablation benches inject faults through
+//! [`FaultSpec`] to verify both paths end-to-end: results must be
+//! byte-identical to a fault-free run, with the extra virtual time
+//! showing up in the stage report.
+
+/// What to break during a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// Fail the first `failures` attempts of (stage, partition); the
+    /// retry (attempt index >= failures) succeeds.
+    TaskFlake { stage: usize, partition: usize, failures: u32 },
+    /// Lose a worker right after `after_stage` completes: its stage
+    /// outputs are recomputed on the survivors, and the worker takes no
+    /// further tasks.
+    WorkerLoss { worker: usize, after_stage: usize },
+}
+
+impl FaultSpec {
+    /// Should this (stage, partition, attempt) fail?
+    pub fn fails_task(&self, stage: usize, partition: usize, attempt: u32) -> bool {
+        match *self {
+            FaultSpec::TaskFlake { stage: s, partition: p, failures } => {
+                s == stage && p == partition && attempt < failures
+            }
+            FaultSpec::WorkerLoss { .. } => false,
+        }
+    }
+
+    /// Worker lost after this stage, if any.
+    pub fn worker_lost_after(&self, stage: usize) -> Option<usize> {
+        match *self {
+            FaultSpec::WorkerLoss { worker, after_stage } if after_stage == stage => {
+                Some(worker)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_flake_fails_only_configured_attempts() {
+        let f = FaultSpec::TaskFlake { stage: 1, partition: 2, failures: 2 };
+        assert!(f.fails_task(1, 2, 0));
+        assert!(f.fails_task(1, 2, 1));
+        assert!(!f.fails_task(1, 2, 2)); // retry succeeds
+        assert!(!f.fails_task(0, 2, 0)); // other stage untouched
+        assert!(!f.fails_task(1, 3, 0)); // other partition untouched
+        assert_eq!(f.worker_lost_after(1), None);
+    }
+
+    #[test]
+    fn worker_loss_triggers_once() {
+        let f = FaultSpec::WorkerLoss { worker: 3, after_stage: 0 };
+        assert_eq!(f.worker_lost_after(0), Some(3));
+        assert_eq!(f.worker_lost_after(1), None);
+        assert!(!f.fails_task(0, 0, 0));
+    }
+}

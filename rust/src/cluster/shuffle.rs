@@ -1,0 +1,147 @@
+//! Shuffle service: route stage outputs into the next partitioning and
+//! account the data motion.
+//!
+//! Records route per [`Partitioner`] (hash-by-key or balanced). The new
+//! partition `p` is assigned to worker `p % workers` — deterministic,
+//! spread — and every byte that crosses a worker boundary is charged to
+//! the intra-cluster NIC model. The virtual shuffle duration is the
+//! bottleneck-endpoint time: the busiest sender or receiver NIC drains
+//! its remote bytes at LAN bandwidth (all endpoints in parallel), which
+//! is the behaviour behind the paper's "reduce leads to K data shuffles"
+//! cost discussion (§1.2.2).
+
+use crate::dataset::{plan::route_from, Partition, Partitioner, Record};
+use crate::simtime::{Duration, NetModel};
+
+/// Data-motion summary of one shuffle.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShuffleStats {
+    pub bytes_total: u64,
+    pub bytes_remote: u64,
+    pub duration: Duration,
+}
+
+/// Route `outputs` (records + the worker that produced them) into a new
+/// set of partitions; returns the partitions and the shuffle account.
+pub fn shuffle(
+    outputs: Vec<(usize, Vec<Record>)>,
+    partitioner: &Partitioner,
+    workers: usize,
+    net: &NetModel,
+) -> (Vec<Partition>, ShuffleStats) {
+    let num_out = partitioner.num_partitions();
+    let workers = workers.max(1);
+
+    let mut buckets: Vec<Vec<Record>> = (0..num_out).map(|_| Vec::new()).collect();
+    let mut sent_remote = vec![0u64; workers];
+    let mut recv_remote = vec![0u64; workers];
+    let mut stats = ShuffleStats::default();
+
+    for (src_part, (src_worker, records)) in outputs.into_iter().enumerate() {
+        for (p, routed) in route_from(partitioner, records, src_part).into_iter().enumerate() {
+            let dst_worker = p % workers;
+            let bytes: u64 = routed.iter().map(Record::size_bytes).sum();
+            stats.bytes_total += bytes;
+            if dst_worker != src_worker {
+                stats.bytes_remote += bytes;
+                sent_remote[src_worker.min(workers - 1)] += bytes;
+                recv_remote[dst_worker] += bytes;
+            }
+            buckets[p].extend(routed);
+        }
+    }
+
+    // bottleneck endpoint: busiest NIC moves its bytes at LAN speed,
+    // plus shuffle-file materialization at both ends (Spark writes
+    // shuffle blocks to local disk before serving them — the "large
+    // amount of data materialized on disk" of §1.4)
+    let max_endpoint = sent_remote
+        .iter()
+        .chain(recv_remote.iter())
+        .copied()
+        .max()
+        .unwrap_or(0);
+    let spill = crate::simtime::DiskModel::hdd();
+    stats.duration = net.transfer(max_endpoint, 1) + spill.rw(max_endpoint) + spill.rw(max_endpoint);
+
+    let partitions = buckets
+        .into_iter()
+        .enumerate()
+        .map(|(p, records)| Partition::with_locality(records, p % workers))
+        .collect();
+    (partitions, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(n: usize, tag: &str) -> Vec<Record> {
+        (0..n).map(|i| Record::text(format!("{tag}{i}"))).collect()
+    }
+
+    #[test]
+    fn balanced_shuffle_spreads_and_localizes() {
+        let outputs = vec![(0, recs(6, "a")), (1, recs(6, "b"))];
+        let (parts, stats) = shuffle(
+            outputs,
+            &Partitioner::Balanced { num: 3 },
+            2,
+            &NetModel::lan(),
+        );
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 12);
+        // partition p lives on worker p % 2
+        assert_eq!(parts[0].preferred_worker, Some(0));
+        assert_eq!(parts[1].preferred_worker, Some(1));
+        assert_eq!(parts[2].preferred_worker, Some(0));
+        assert!(stats.bytes_remote > 0);
+        assert!(stats.bytes_remote < stats.bytes_total);
+        assert!(stats.duration > Duration::ZERO);
+    }
+
+    #[test]
+    fn single_worker_shuffle_is_all_local() {
+        let outputs = vec![(0, recs(10, "x"))];
+        let (_, stats) =
+            shuffle(outputs, &Partitioner::Balanced { num: 2 }, 1, &NetModel::lan());
+        assert_eq!(stats.bytes_remote, 0);
+        // only NIC latency-free local motion
+        assert_eq!(stats.duration, Duration::ZERO);
+    }
+
+    #[test]
+    fn hash_partitioning_keeps_keys_together() {
+        let key_fn: std::sync::Arc<dyn Fn(&Record) -> String + Send + Sync> =
+            std::sync::Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
+        let outputs = vec![
+            (0, vec![Record::text("a1"), Record::text("b1")]),
+            (1, vec![Record::text("a2"), Record::text("b2")]),
+        ];
+        let (parts, _) = shuffle(
+            outputs,
+            &Partitioner::HashByKey { key_fn, num: 4 },
+            2,
+            &NetModel::lan(),
+        );
+        for p in &parts {
+            let firsts: std::collections::HashSet<_> =
+                p.records.iter().map(|r| &r.as_text().unwrap()[..1]).collect();
+            assert!(firsts.len() <= 1);
+        }
+    }
+
+    #[test]
+    fn remote_bytes_drive_duration() {
+        // all records on worker 0 shuffled into 4 partitions over 4
+        // workers: 3/4 of bytes cross the NIC
+        let outputs = vec![(0, recs(100, "r"))];
+        let (_, s4) =
+            shuffle(outputs.clone(), &Partitioner::Balanced { num: 4 }, 4, &NetModel::lan());
+        let (_, s1) =
+            shuffle(outputs, &Partitioner::Balanced { num: 4 }, 1, &NetModel::lan());
+        assert!(s4.duration > s1.duration);
+        assert_eq!(s1.bytes_remote, 0);
+        assert_eq!(s4.bytes_total, s1.bytes_total);
+    }
+}

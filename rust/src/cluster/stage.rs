@@ -1,0 +1,196 @@
+//! DAG → stage compiler.
+//!
+//! Walks a [`Plan`] lineage and cuts it into pipelined stages exactly
+//! like Spark's DAGScheduler over the ops MaRe emits: consecutive
+//! `MapPartitions` fuse into one stage (one task per partition, all ops
+//! applied back-to-back in memory); every `Repartition` ends the current
+//! stage with a shuffle. Listing 1's `map().reduce()` therefore compiles
+//! to K+1 stages for a depth-K tree reduce, matching Figure 2.
+
+use std::sync::Arc;
+
+use crate::dataset::{Partition, Partitioner, PartitionOp, Plan};
+
+/// What happens to a stage's output partitions.
+pub enum StageOutput {
+    /// Job output: partitions are collected back to the driver.
+    Final,
+    /// Shuffle into the next stage's input partitioning.
+    Shuffle(Partitioner),
+}
+
+impl std::fmt::Debug for StageOutput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageOutput::Final => write!(f, "Final"),
+            StageOutput::Shuffle(p) => write!(f, "Shuffle({p:?})"),
+        }
+    }
+}
+
+/// One pipelined stage: a chain of narrow ops, then an output boundary.
+pub struct Stage {
+    pub id: usize,
+    /// Ops applied in order to each input partition (may be empty: a
+    /// pure shuffle stage, e.g. `repartition` directly after a source).
+    pub ops: Vec<Arc<dyn PartitionOp>>,
+    pub output: StageOutput,
+}
+
+impl Stage {
+    /// Distinct images the stage's ops run in (pull-cost accounting).
+    pub fn images(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for op in &self.ops {
+            if let Some(img) = op.image() {
+                if !out.contains(&img) {
+                    out.push(img);
+                }
+            }
+        }
+        out
+    }
+
+    /// vCPU slots one task of this stage occupies (max over the chain —
+    /// ops run sequentially inside the task, Spark allocates the max).
+    pub fn cpus(&self) -> u32 {
+        self.ops.iter().map(|o| o.cost_model().cpus).max().unwrap_or(1)
+    }
+
+    pub fn describe(&self) -> String {
+        let ops: Vec<String> = self.ops.iter().map(|o| o.label()).collect();
+        format!("stage {} [{}] -> {:?}", self.id, ops.join(" | "), self.output)
+    }
+}
+
+/// A compiled physical plan.
+pub struct PhysicalPlan {
+    /// Input partitions of stage 0.
+    pub source: Vec<Partition>,
+    pub source_label: String,
+    pub stages: Vec<Stage>,
+}
+
+impl PhysicalPlan {
+    pub fn describe(&self) -> String {
+        let mut s = format!("source[{}] x{}\n", self.source_label, self.source.len());
+        for st in &self.stages {
+            s.push_str(&st.describe());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Compile a lineage into stages.
+pub fn compile(plan: &Plan) -> PhysicalPlan {
+    // Collect lineage source -> root.
+    let mut chain: Vec<&Plan> = Vec::new();
+    let mut cur = plan;
+    loop {
+        chain.push(cur);
+        match cur {
+            Plan::Source { .. } => break,
+            Plan::MapPartitions { parent, .. } | Plan::Repartition { parent, .. } => {
+                cur = parent.as_ref()
+            }
+        }
+    }
+    chain.reverse();
+
+    let (source, source_label) = match chain[0] {
+        Plan::Source { partitions, label } => (partitions.clone(), label.clone()),
+        _ => unreachable!("lineage must bottom out at a source"),
+    };
+
+    let mut stages = Vec::new();
+    let mut ops: Vec<Arc<dyn PartitionOp>> = Vec::new();
+    for node in &chain[1..] {
+        match node {
+            Plan::MapPartitions { op, .. } => ops.push(op.clone()),
+            Plan::Repartition { partitioner, .. } => {
+                stages.push(Stage {
+                    id: stages.len(),
+                    ops: std::mem::take(&mut ops),
+                    output: StageOutput::Shuffle(partitioner.clone()),
+                });
+            }
+            Plan::Source { .. } => unreachable!("source can only be the lineage root"),
+        }
+    }
+    stages.push(Stage { id: stages.len(), ops, output: StageOutput::Final });
+
+    PhysicalPlan { source, source_label, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{ClosureOp, Dataset, Record, TaskContext};
+
+    fn ds() -> Dataset {
+        Dataset::parallelize((0..8).map(|i| Record::text(format!("{i}"))).collect(), 4)
+    }
+
+    fn id_op(name: &str) -> Arc<dyn PartitionOp> {
+        let name = name.to_string();
+        Arc::new(ClosureOp { f: |_: &TaskContext, r| Ok(r), name })
+    }
+
+    #[test]
+    fn consecutive_maps_fuse_into_one_stage() {
+        let d = ds().map_partitions(id_op("a")).map_partitions(id_op("b"));
+        let pp = compile(d.plan());
+        assert_eq!(pp.stages.len(), 1);
+        assert_eq!(pp.stages[0].ops.len(), 2);
+        assert!(matches!(pp.stages[0].output, StageOutput::Final));
+        assert_eq!(pp.source.len(), 4);
+    }
+
+    #[test]
+    fn repartition_cuts_a_stage() {
+        // map | shuffle | map  =>  2 stages
+        let d = ds()
+            .map_partitions(id_op("m1"))
+            .repartition(2)
+            .map_partitions(id_op("m2"));
+        let pp = compile(d.plan());
+        assert_eq!(pp.stages.len(), 2);
+        assert!(matches!(pp.stages[0].output, StageOutput::Shuffle(_)));
+        assert!(matches!(pp.stages[1].output, StageOutput::Final));
+        assert_eq!(pp.stages[1].ops.len(), 1);
+    }
+
+    #[test]
+    fn tree_reduce_shape_matches_figure2() {
+        // map + K=2 tree reduce: agg,shrink,agg,shrink,agg => 3 stages
+        let d = ds()
+            .map_partitions(id_op("map"))
+            .map_partitions(id_op("agg"))
+            .repartition(2)
+            .map_partitions(id_op("agg"))
+            .repartition(1)
+            .map_partitions(id_op("agg"));
+        let pp = compile(d.plan());
+        assert_eq!(pp.stages.len(), 3);
+        assert_eq!(pp.stages[0].ops.len(), 2); // map fused with first agg
+    }
+
+    #[test]
+    fn shuffle_only_plan_has_empty_op_stage() {
+        let d = ds().repartition(2);
+        let pp = compile(d.plan());
+        assert_eq!(pp.stages.len(), 2);
+        assert!(pp.stages[0].ops.is_empty());
+    }
+
+    #[test]
+    fn describe_is_readable() {
+        let d = ds().map_partitions(id_op("fred")).repartition(1);
+        let pp = compile(d.plan());
+        let s = pp.describe();
+        assert!(s.contains("source[parallelize] x4"), "{s}");
+        assert!(s.contains("fred"), "{s}");
+        assert!(s.contains("Shuffle"), "{s}");
+    }
+}

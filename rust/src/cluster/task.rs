@@ -1,0 +1,153 @@
+//! Task execution: really run a stage's op chain over one partition,
+//! accounting virtual cost as we go.
+//!
+//! The virtual duration decomposition follows `simtime::cost`:
+//! container start + stage-in (partition -> mount) + compute (tool
+//! model) + stage-out, per op in the fused chain. Image *pull* is a
+//! per-(worker, image) cost and is charged by the scheduler, not here.
+
+use crate::dataset::{Record, TaskContext};
+use crate::error::Result;
+use crate::simtime::{DiskModel, Duration, TaskCost};
+
+use super::stage::Stage;
+
+/// Docker `run` overhead for a warm image (measured ~0.4-1.5 s in the
+/// wild; the paper's §Data Handling treats it as fixed).
+pub const CONTAINER_START: Duration = Duration(900_000); // 0.9 s
+
+/// Outcome of really running one task.
+pub struct TaskResult {
+    pub records: Vec<Record>,
+    pub cost: TaskCost,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+fn bytes_of(records: &[Record]) -> u64 {
+    records.iter().map(Record::size_bytes).sum()
+}
+
+/// Run the fused op chain over one partition's records.
+pub fn run_task(stage: &Stage, ctx: &TaskContext, input: Vec<Record>) -> Result<TaskResult> {
+    let started = std::time::Instant::now();
+    let bytes_in = bytes_of(&input);
+
+    let mut cost = TaskCost { cpus: stage.cpus(), ..Default::default() };
+    let mut records = input;
+
+    for op in &stage.ops {
+        let in_bytes = bytes_of(&records);
+        let in_records = records.len() as u64;
+
+        // mount-point staging cost: tmpfs by default, disk when the op
+        // opts out (Listing 3's TMPDIR override); streamed sides skip
+        // materialization entirely (§1.4 future work)
+        let mount = if op.uses_disk_mount() { DiskModel::hdd() } else { DiskModel::tmpfs() };
+        let (stream_in, stream_out) = op.streams();
+        if op.image().is_some() {
+            cost.container_start += CONTAINER_START;
+            if !stream_in {
+                cost.stage_in += mount.rw(in_bytes);
+            }
+        }
+
+        records = op.apply(ctx, records)?;
+
+        let out_bytes = bytes_of(&records);
+        if op.image().is_some() && !stream_out {
+            cost.stage_out += mount.rw(out_bytes);
+        }
+        cost.compute += op.cost_model().compute(in_bytes, in_records);
+    }
+
+    let bytes_out = bytes_of(&records);
+    cost.real = started.elapsed();
+    Ok(TaskResult { records, cost, bytes_in, bytes_out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::stage::{Stage, StageOutput};
+    use crate::dataset::{ClosureOp, PartitionOp};
+    use crate::simtime::CostModel;
+    use std::sync::Arc;
+
+    struct FakeContainerOp;
+    impl PartitionOp for FakeContainerOp {
+        fn apply(&self, _: &TaskContext, records: Vec<Record>) -> Result<Vec<Record>> {
+            // halve the records (a filter-like tool)
+            Ok(records.into_iter().step_by(2).collect())
+        }
+        fn cost_model(&self) -> CostModel {
+            CostModel {
+                fixed: Duration::seconds(1.0),
+                secs_per_byte: 0.0,
+                secs_per_record: 0.5,
+                cpus: 2,
+            }
+        }
+        fn image(&self) -> Option<&str> {
+            Some("ubuntu")
+        }
+        fn label(&self) -> String {
+            "fake".into()
+        }
+    }
+
+    fn ctx() -> TaskContext {
+        TaskContext { partition: 0, num_partitions: 1, attempt: 0, seed: 1 }
+    }
+
+    #[test]
+    fn accounts_container_lifecycle_and_compute() {
+        let stage = Stage {
+            id: 0,
+            ops: vec![Arc::new(FakeContainerOp)],
+            output: StageOutput::Final,
+        };
+        // records big enough that tmpfs staging is > 1 µs
+        let input: Vec<Record> =
+            (0..4).map(|_| Record::text("x".repeat(64 * 1024))).collect();
+        let r = run_task(&stage, &ctx(), input).unwrap();
+        assert_eq!(r.records.len(), 2);
+        assert_eq!(r.cost.container_start, CONTAINER_START);
+        // fixed 1.0 + 4 records * 0.5
+        assert!((r.cost.compute.as_seconds() - 3.0).abs() < 1e-3);
+        assert_eq!(r.cost.cpus, 2);
+        assert!(r.cost.stage_in > Duration::ZERO);
+        assert!(r.bytes_in > r.bytes_out);
+    }
+
+    #[test]
+    fn native_ops_have_no_container_cost() {
+        let stage = Stage {
+            id: 0,
+            ops: vec![Arc::new(ClosureOp {
+                f: |_: &TaskContext, r| Ok(r),
+                name: "native".into(),
+            })],
+            output: StageOutput::Final,
+        };
+        let r = run_task(&stage, &ctx(), vec![Record::text("x")]).unwrap();
+        assert_eq!(r.cost.container_start, Duration::ZERO);
+        assert_eq!(r.cost.stage_in, Duration::ZERO);
+        assert_eq!(r.cost.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn chain_costs_accumulate() {
+        let stage = Stage {
+            id: 0,
+            ops: vec![Arc::new(FakeContainerOp), Arc::new(FakeContainerOp)],
+            output: StageOutput::Final,
+        };
+        let input: Vec<Record> = (0..4).map(|i| Record::text(format!("{i}"))).collect();
+        let r = run_task(&stage, &ctx(), input).unwrap();
+        assert_eq!(r.records.len(), 1);
+        assert_eq!(r.cost.container_start, CONTAINER_START + CONTAINER_START);
+        // (1.0 + 4*0.5) + (1.0 + 2*0.5)
+        assert!((r.cost.compute.as_seconds() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,221 @@
+//! Run configuration: CLI flags / JSON config file → a fully-resolved
+//! [`RunConfigFile`] describing cluster shape, storage backend, workload
+//! and scale. The `mare` binary and the benches share this so every
+//! experiment is reproducible from a single description.
+
+use crate::cluster::ClusterConfig;
+use crate::error::{MareError, Result};
+use crate::simtime::Duration;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which storage backend serves the input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Hdfs,
+    Swift,
+    S3,
+    Local,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hdfs" => Ok(BackendKind::Hdfs),
+            "swift" => Ok(BackendKind::Swift),
+            "s3" => Ok(BackendKind::S3),
+            "local" => Ok(BackendKind::Local),
+            other => Err(MareError::Config(format!(
+                "unknown storage backend `{other}` (hdfs|swift|s3|local)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Hdfs => "hdfs",
+            BackendKind::Swift => "swift",
+            BackendKind::S3 => "s3",
+            BackendKind::Local => "local",
+        }
+    }
+}
+
+/// Which pipeline to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Gc,
+    Vs,
+    Snp,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gc" => Ok(Workload::Gc),
+            "vs" | "virtual-screening" => Ok(Workload::Vs),
+            "snp" | "snp-calling" => Ok(Workload::Snp),
+            other => Err(MareError::Config(format!(
+                "unknown workload `{other}` (gc|vs|snp)"
+            ))),
+        }
+    }
+}
+
+/// A fully-resolved run description.
+#[derive(Debug, Clone)]
+pub struct RunConfigFile {
+    pub workload: Workload,
+    pub backend: BackendKind,
+    pub cluster: ClusterConfig,
+    /// Scale knob: molecules for VS, reads for SNP, lines for GC.
+    pub scale: usize,
+    pub seed: u64,
+    /// Tree-reduce depth (VS / GC).
+    pub reduce_depth: usize,
+    pub artifacts: String,
+}
+
+impl Default for RunConfigFile {
+    fn default() -> Self {
+        RunConfigFile {
+            workload: Workload::Gc,
+            backend: BackendKind::Hdfs,
+            cluster: ClusterConfig::paper(),
+            scale: 1000,
+            seed: 42,
+            reduce_depth: 2,
+            artifacts: crate::workloads::artifact_dir(),
+        }
+    }
+}
+
+impl RunConfigFile {
+    /// From CLI flags (`--workload vs --workers 16 --vcpus 8 ...`),
+    /// optionally starting from `--config file.json`.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = match args.flag("config") {
+            Some(path) => Self::from_json_file(path)?,
+            None => Self::default(),
+        };
+        if let Some(w) = args.flag("workload") {
+            cfg.workload = Workload::parse(w)?;
+        }
+        if let Some(b) = args.flag("storage") {
+            cfg.backend = BackendKind::parse(b)?;
+        }
+        let workers = args.flag_usize("workers", cfg.cluster.workers)?;
+        let vcpus = args.flag_usize("vcpus", cfg.cluster.vcpus_per_worker as usize)?;
+        let mut cluster = ClusterConfig::sized(workers, vcpus as u32);
+        cluster.locality_wait = cfg.cluster.locality_wait;
+        cluster.seed = args.flag_u64("seed", cfg.seed)?;
+        cfg.cluster = cluster;
+        cfg.scale = args.flag_usize("scale", cfg.scale)?;
+        cfg.seed = args.flag_u64("seed", cfg.seed)?;
+        cfg.reduce_depth = args.flag_usize("reduce-depth", cfg.reduce_depth)?;
+        if let Some(a) = args.flag("artifacts") {
+            cfg.artifacts = a.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(w) = j.get("workload") {
+            cfg.workload = Workload::parse(w.as_str()?)?;
+        }
+        if let Some(b) = j.get("storage") {
+            cfg.backend = BackendKind::parse(b.as_str()?)?;
+        }
+        if let Some(c) = j.get("cluster") {
+            let workers = c.get("workers").map(|v| v.as_usize()).transpose()?.unwrap_or(16);
+            let vcpus = c.get("vcpus").map(|v| v.as_usize()).transpose()?.unwrap_or(8);
+            cfg.cluster = ClusterConfig::sized(workers, vcpus as u32);
+            if let Some(lw) = c.get("locality_wait_s") {
+                cfg.cluster.locality_wait = Duration::seconds(lw.as_f64()?);
+            }
+        }
+        if let Some(s) = j.get("scale") {
+            cfg.scale = s.as_usize()?;
+        }
+        if let Some(s) = j.get("seed") {
+            cfg.seed = s.as_u64()?;
+            cfg.cluster.seed = cfg.seed;
+        }
+        if let Some(d) = j.get("reduce_depth") {
+            cfg.reduce_depth = d.as_usize()?;
+        }
+        if let Some(a) = j.get("artifacts") {
+            cfg.artifacts = a.as_str()?.to_string();
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let cfg = RunConfigFile::default();
+        assert_eq!(cfg.cluster.workers, 16);
+        assert_eq!(cfg.cluster.vcpus_per_worker, 8);
+        assert_eq!(cfg.reduce_depth, 2);
+    }
+
+    #[test]
+    fn cli_flags_override() {
+        let cfg = RunConfigFile::from_args(&args(&[
+            "run",
+            "--workload",
+            "vs",
+            "--storage=swift",
+            "--workers",
+            "4",
+            "--vcpus",
+            "2",
+            "--scale",
+            "500",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.workload, Workload::Vs);
+        assert_eq!(cfg.backend, BackendKind::Swift);
+        assert_eq!(cfg.cluster.workers, 4);
+        assert_eq!(cfg.cluster.vcpus_per_worker, 2);
+        assert_eq!(cfg.scale, 500);
+    }
+
+    #[test]
+    fn json_config_parses() {
+        let j = Json::parse(
+            r#"{"workload":"snp","storage":"s3",
+                "cluster":{"workers":8,"vcpus":8,"locality_wait_s":1.5},
+                "scale":2000,"seed":7,"reduce_depth":3}"#,
+        )
+        .unwrap();
+        let cfg = RunConfigFile::from_json(&j).unwrap();
+        assert_eq!(cfg.workload, Workload::Snp);
+        assert_eq!(cfg.backend, BackendKind::S3);
+        assert_eq!(cfg.cluster.workers, 8);
+        assert_eq!(cfg.cluster.locality_wait, Duration::seconds(1.5));
+        assert_eq!(cfg.reduce_depth, 3);
+        assert_eq!(cfg.cluster.seed, 7);
+    }
+
+    #[test]
+    fn bad_values_error_helpfully() {
+        assert!(BackendKind::parse("gcs").is_err());
+        assert!(Workload::parse("montecarlo").is_err());
+        assert!(RunConfigFile::from_args(&args(&["run", "--workers", "x"])).is_err());
+    }
+}

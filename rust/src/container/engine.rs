@@ -1,0 +1,248 @@
+//! The container engine: pull image, bake files, bind volumes, run the
+//! command through the mini-shell, hand back the filesystem.
+//!
+//! Functionally faithful to what MaRe needs from Docker: an isolated fs
+//! per container, volumes in/out, deterministic environment. All *cost*
+//! accounting (pull, start, stage-in/out) happens in the cluster layer —
+//! the engine is pure execution.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::runtime::ToolRuntime;
+use crate::util::rng::Rng;
+
+use super::image::Registry;
+use super::shell::Shell;
+use super::vfs::{Backing, Vfs};
+
+/// Default tmpfs capacity per container (half of a worker's 32 GB in the
+/// paper's setup would be 16 GB; scaled down for in-process runs).
+pub const DEFAULT_TMPFS_CAPACITY: u64 = 256 << 20;
+
+/// One container run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub image: String,
+    pub command: String,
+    pub env: BTreeMap<String, String>,
+    /// Files pre-bound into the container (input volumes).
+    pub input_files: Vec<(String, Vec<u8>)>,
+    /// Disk-backed mount space instead of tmpfs (paper: TMPDIR on disk).
+    pub disk_backed: bool,
+    /// tmpfs capacity (ignored for disk).
+    pub tmpfs_capacity: u64,
+    /// Deterministic seed for $RANDOM etc.
+    pub seed: u64,
+    /// Bytes streamed to the command's stdin (the streaming mount of
+    /// §1.4 future work; empty = no stream).
+    pub stdin: Vec<u8>,
+}
+
+impl RunConfig {
+    pub fn new(image: impl Into<String>, command: impl Into<String>) -> Self {
+        RunConfig {
+            image: image.into(),
+            command: command.into(),
+            env: BTreeMap::new(),
+            input_files: Vec::new(),
+            disk_backed: false,
+            tmpfs_capacity: DEFAULT_TMPFS_CAPACITY,
+            seed: 0,
+            stdin: Vec::new(),
+        }
+    }
+
+    pub fn stdin(mut self, bytes: Vec<u8>) -> Self {
+        self.stdin = bytes;
+        self
+    }
+
+    pub fn input(mut self, path: impl Into<String>, bytes: Vec<u8>) -> Self {
+        self.input_files.push((path.into(), bytes));
+        self
+    }
+
+    pub fn env_var(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.env.insert(k.into(), v.into());
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn disk(mut self, disk: bool) -> Self {
+        self.disk_backed = disk;
+        self
+    }
+}
+
+/// What a finished container leaves behind.
+#[derive(Debug)]
+pub struct RunOutcome {
+    /// The container filesystem (read output mounts from here).
+    pub fs: Vfs,
+    /// Captured stdout of the last non-redirected pipeline.
+    pub stdout: Vec<u8>,
+    /// Total bytes written by the run (stage-out cost model input).
+    pub bytes_written: u64,
+}
+
+/// The engine: a registry plus the shared PJRT runtime for
+/// compute-backed tools.
+#[derive(Clone)]
+pub struct Engine {
+    registry: Arc<Registry>,
+    runtime: Option<ToolRuntime>,
+}
+
+impl Engine {
+    pub fn new(registry: Arc<Registry>, runtime: Option<ToolRuntime>) -> Self {
+        Engine { registry, runtime }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    pub fn runtime(&self) -> Option<&ToolRuntime> {
+        self.runtime.as_ref()
+    }
+
+    /// Run one container to completion.
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome> {
+        let image = self.registry.pull(&cfg.image)?;
+
+        let mut fs = if cfg.disk_backed {
+            Vfs::disk()
+        } else {
+            Vfs::new(Backing::Tmpfs, Some(cfg.tmpfs_capacity))
+        };
+
+        // Bake image files (never charged against the volume capacity in
+        // real Docker; here they share the fs, so baked files get a free
+        // pass by building them into an uncapped fs first).
+        for (path, bytes) in image.baked_files() {
+            fs.write(path, bytes.clone())?;
+        }
+        for (path, bytes) in &cfg.input_files {
+            fs.write(path, bytes.clone())?;
+        }
+        let baseline = fs.used_bytes();
+
+        let mut env = cfg.env.clone();
+        env.entry("HOME".into()).or_insert_with(|| "/root".into());
+        env.entry("HOSTNAME".into()).or_insert_with(|| "mare-container".into());
+
+        let mut shell = Shell::new(&image, env, Rng::new(cfg.seed));
+        shell.runtime = self.runtime.as_ref();
+        shell.stdin = cfg.stdin.clone();
+        let stdout = shell.run(&cfg.command, &mut fs)?;
+
+        let bytes_written = fs.peak_bytes().saturating_sub(baseline);
+        Ok(RunOutcome { fs, stdout, bytes_written })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::Image;
+    use crate::container::tool::{Tool, ToolCtx, ToolOutput};
+
+    /// `upper <in >out`-style test tool: uppercases stdin.
+    struct Upper;
+    impl Tool for Upper {
+        fn name(&self) -> &'static str {
+            "upper"
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+            ToolOutput::ok(ctx.stdin.to_ascii_uppercase())
+        }
+    }
+
+    /// reads a file arg, writes stdout
+    struct CatTest;
+    impl Tool for CatTest {
+        fn name(&self) -> &'static str {
+            "cat"
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+            let mut out = Vec::new();
+            for a in ctx.args.clone() {
+                out.extend_from_slice(ctx.fs.read(&a)?);
+            }
+            ToolOutput::ok(out)
+        }
+    }
+
+    fn engine() -> Engine {
+        let mut reg = Registry::new();
+        reg.push(
+            Image::builder("test")
+                .tool(Arc::new(Upper))
+                .tool(Arc::new(CatTest))
+                .file("/etc/motd", b"hi".to_vec())
+                .build(),
+        );
+        Engine::new(Arc::new(reg), None)
+    }
+
+    #[test]
+    fn run_pipeline_with_mounts() {
+        let e = engine();
+        let cfg = RunConfig::new("test", "cat /in | upper > /out")
+            .input("/in", b"hello".to_vec());
+        let out = e.run(&cfg).unwrap();
+        assert_eq!(out.fs.read("/out").unwrap(), b"HELLO");
+    }
+
+    #[test]
+    fn baked_files_visible() {
+        let e = engine();
+        let cfg = RunConfig::new("test", "cat /etc/motd > /o");
+        let out = e.run(&cfg).unwrap();
+        assert_eq!(out.fs.read("/o").unwrap(), b"hi");
+    }
+
+    #[test]
+    fn unknown_image_fails() {
+        let e = engine();
+        assert!(e.run(&RunConfig::new("nope", "upper")).is_err());
+    }
+
+    #[test]
+    fn unknown_tool_fails_with_image_name() {
+        let e = engine();
+        let err = e.run(&RunConfig::new("test", "bash -c hi")).unwrap_err().to_string();
+        assert!(err.contains("bash") && err.contains("test"), "{err}");
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let e = engine();
+        let run = |seed| {
+            let cfg = RunConfig::new("test", "cat /in > /o.$RANDOM")
+                .input("/in", b"x".to_vec())
+                .seed(seed);
+            e.run(&cfg).unwrap().fs.list_all().join(",")
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn tmpfs_capacity_propagates() {
+        let e = engine();
+        let mut cfg = RunConfig::new("test", "cat /in > /copy").input("/in", vec![b'x'; 100]);
+        cfg.tmpfs_capacity = 150; // input (100) + copy (100) > 150
+        let err = e.run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("no space left"), "{err}");
+        // disk-backed succeeds
+        let cfg = cfg.disk(true);
+        assert!(e.run(&cfg).is_ok());
+    }
+}

@@ -1,0 +1,171 @@
+//! Container images and the registry.
+//!
+//! An [`Image`] is a named bundle of tools (binaries) + baked-in files
+//! (e.g. the reference genome under `/ref`, as in the paper's
+//! `mcapuccini/alignment` image) + a size that drives the pull-cost
+//! model. The [`Registry`] plays Docker Hub: the engine "pulls" an image
+//! the first time a worker uses it, which the scheduler charges as
+//! virtual time.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{MareError, Result};
+
+use super::tool::Tool;
+
+/// An immutable container image.
+pub struct Image {
+    pub name: String,
+    /// Compressed image size (pull cost model input).
+    pub size_bytes: u64,
+    tools: BTreeMap<&'static str, Arc<dyn Tool>>,
+    /// Files baked into the image (path -> content).
+    files: Vec<(String, Vec<u8>)>,
+}
+
+impl Image {
+    pub fn builder(name: impl Into<String>) -> ImageBuilder {
+        ImageBuilder {
+            name: name.into(),
+            size_bytes: 64 << 20, // 64 MiB default
+            tools: BTreeMap::new(),
+            files: Vec::new(),
+        }
+    }
+
+    pub fn tool(&self, name: &str) -> Result<&Arc<dyn Tool>> {
+        self.tools
+            .get(name)
+            .ok_or_else(|| MareError::ToolNotFound(name.to_string(), self.name.clone()))
+    }
+
+    pub fn tool_names(&self) -> Vec<&'static str> {
+        self.tools.keys().copied().collect()
+    }
+
+    pub fn baked_files(&self) -> &[(String, Vec<u8>)] {
+        &self.files
+    }
+}
+
+impl std::fmt::Debug for Image {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Image")
+            .field("name", &self.name)
+            .field("size_bytes", &self.size_bytes)
+            .field("tools", &self.tool_names())
+            .field("files", &self.files.len())
+            .finish()
+    }
+}
+
+/// Builder (the `Dockerfile` analogue).
+pub struct ImageBuilder {
+    name: String,
+    size_bytes: u64,
+    tools: BTreeMap<&'static str, Arc<dyn Tool>>,
+    files: Vec<(String, Vec<u8>)>,
+}
+
+impl ImageBuilder {
+    pub fn size(mut self, bytes: u64) -> Self {
+        self.size_bytes = bytes;
+        self
+    }
+
+    pub fn tool(mut self, t: Arc<dyn Tool>) -> Self {
+        self.tools.insert(t.name(), t);
+        self
+    }
+
+    pub fn file(mut self, path: impl Into<String>, bytes: Vec<u8>) -> Self {
+        self.files.push((path.into(), bytes));
+        self
+    }
+
+    pub fn build(self) -> Arc<Image> {
+        Arc::new(Image {
+            name: self.name,
+            size_bytes: self.size_bytes,
+            tools: self.tools,
+            files: self.files,
+        })
+    }
+}
+
+/// The image registry (Docker Hub analogue).
+#[derive(Default)]
+pub struct Registry {
+    images: BTreeMap<String, Arc<Image>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn push(&mut self, image: Arc<Image>) {
+        self.images.insert(image.name.clone(), image);
+    }
+
+    pub fn pull(&self, name: &str) -> Result<Arc<Image>> {
+        self.images.get(name).cloned().ok_or_else(|| {
+            MareError::Container(format!(
+                "image `{name}` not found in registry (have: {:?})",
+                self.images.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.images.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry").field("images", &self.names()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::tool::{ToolCtx, ToolOutput};
+
+    struct NoopTool;
+    impl Tool for NoopTool {
+        fn name(&self) -> &'static str {
+            "noop"
+        }
+        fn run(&self, _ctx: &mut ToolCtx) -> Result<ToolOutput> {
+            ToolOutput::empty()
+        }
+    }
+
+    #[test]
+    fn builder_and_lookup() {
+        let img = Image::builder("ubuntu")
+            .size(30 << 20)
+            .tool(Arc::new(NoopTool))
+            .file("/etc/os-release", b"ubuntu".to_vec())
+            .build();
+        assert!(img.tool("noop").is_ok());
+        let err = match img.tool("bash") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected missing tool"),
+        };
+        assert!(err.contains("bash") && err.contains("ubuntu"), "{err}");
+        assert_eq!(img.baked_files().len(), 1);
+    }
+
+    #[test]
+    fn registry_pull() {
+        let mut reg = Registry::new();
+        reg.push(Image::builder("a").build());
+        assert!(reg.pull("a").is_ok());
+        assert!(reg.pull("b").is_err());
+        assert_eq!(reg.names(), vec!["a"]);
+    }
+}

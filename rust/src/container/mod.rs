@@ -1,0 +1,27 @@
+//! Docker-like container engine substrate.
+//!
+//! The paper uses Docker for exactly four things: (1) image distribution,
+//! (2) an isolated filesystem per run, (3) volume binds for partition
+//! data, (4) running a shell command against bundled tools. This module
+//! rebuilds that contract in-process:
+//!
+//! * [`vfs`] — the container filesystem (tmpfs-capped or disk-backed)
+//! * [`image`] — images + registry (Docker Hub analogue)
+//! * [`tool`] — the "binary" trait; domain tools call the PJRT runtime
+//! * [`shell`] — the command interpreter (pipes, redirects, globs, $RANDOM)
+//! * [`engine`] — pull → bake → bind → run → collect
+
+pub mod engine;
+pub mod image;
+pub mod shell;
+pub mod tool;
+pub mod vfs;
+
+pub use engine::{Engine, RunConfig, RunOutcome, DEFAULT_TMPFS_CAPACITY};
+pub use image::{Image, ImageBuilder, Registry};
+pub use shell::Shell;
+pub use tool::{Tool, ToolCtx, ToolOutput};
+pub use vfs::{Backing, Vfs};
+
+/// Mount backing choice exposed at the MaRe API level.
+pub type MountKind = Backing;

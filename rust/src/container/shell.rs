@@ -1,0 +1,390 @@
+//! Mini POSIX-ish shell interpreter for container commands.
+//!
+//! Exactly the subset the paper's listings use (and a little margin):
+//!
+//! * backslash-newline continuation, `;` / newline / `&&` sequencing
+//! * pipelines `a | b | c`
+//! * redirections `> f`, `>> f`, `< f`
+//! * single/double quotes; `$VAR`, `${VAR}` expansion (double quotes
+//!   expand, single quotes don't); `$RANDOM` from a deterministic
+//!   per-task RNG
+//! * glob expansion (`/in/*.vcf.gz`) against the container [`Vfs`]
+//!
+//! Runs with `set -e` semantics: a non-zero tool status aborts the
+//! command (the paper's pipelines assume success).
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+use crate::runtime::ToolRuntime;
+use crate::util::rng::Rng;
+
+use super::image::Image;
+use super::tool::{ToolCtx, ToolOutput};
+use super::vfs::Vfs;
+
+/// One parsed simple command within a pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimpleCmd {
+    pub argv: Vec<String>,
+    pub stdin_file: Option<String>,
+    pub stdout_file: Option<(String, bool)>, // (path, append)
+}
+
+/// A `|`-connected pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pipeline {
+    pub cmds: Vec<SimpleCmd>,
+}
+
+/// Token from the lexer: text + whether quoting suppressed expansion.
+#[derive(Debug, Clone, PartialEq)]
+struct Token {
+    text: String,
+    /// true if any part was single-quoted (no glob expansion).
+    literal: bool,
+}
+
+/// The shell: executes scripts against an image's tool table and a Vfs.
+pub struct Shell<'a> {
+    pub image: &'a Image,
+    pub env: BTreeMap<String, String>,
+    pub runtime: Option<&'a ToolRuntime>,
+    pub rng: Rng,
+    /// Bytes fed to the first command of the script that reads stdin
+    /// (the MaRe streaming mount, §1.4 future work). Consumed once.
+    pub stdin: Vec<u8>,
+}
+
+impl<'a> Shell<'a> {
+    pub fn new(image: &'a Image, env: BTreeMap<String, String>, rng: Rng) -> Self {
+        Shell { image, env, runtime: None, rng, stdin: Vec::new() }
+    }
+
+    /// Run a whole script; returns the captured stdout of the last
+    /// pipeline that wasn't redirected.
+    pub fn run(&mut self, script: &str, fs: &mut Vfs) -> Result<Vec<u8>> {
+        let mut last_stdout = Vec::new();
+        for line in split_commands(script) {
+            let pipelines = self.parse_line(&line, fs)?;
+            for p in pipelines {
+                if p.cmds.is_empty() {
+                    continue;
+                }
+                last_stdout = self.run_pipeline(&p, fs)?;
+            }
+        }
+        Ok(last_stdout)
+    }
+
+    fn parse_line(&mut self, line: &str, fs: &Vfs) -> Result<Vec<Pipeline>> {
+        let tokens = tokenize(line)?;
+        if tokens.is_empty() {
+            return Ok(vec![]);
+        }
+        let mut pipelines = Vec::new();
+        let mut cur = Pipeline { cmds: vec![] };
+        let mut cmd = SimpleCmd { argv: vec![], stdin_file: None, stdout_file: None };
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            match t.text.as_str() {
+                "|" if !t.literal => {
+                    if cmd.argv.is_empty() {
+                        return Err(MareError::Shell(format!("empty pipeline segment: {line}")));
+                    }
+                    cur.cmds.push(std::mem::replace(
+                        &mut cmd,
+                        SimpleCmd { argv: vec![], stdin_file: None, stdout_file: None },
+                    ));
+                }
+                ">" | ">>" if !t.literal => {
+                    let path = tokens
+                        .get(i + 1)
+                        .ok_or_else(|| MareError::Shell(format!("`{}` wants a path", t.text)))?;
+                    cmd.stdout_file =
+                        Some((self.expand(&path.text)?, t.text == ">>"));
+                    i += 1;
+                }
+                "<" if !t.literal => {
+                    let path = tokens
+                        .get(i + 1)
+                        .ok_or_else(|| MareError::Shell("`<` wants a path".into()))?;
+                    cmd.stdin_file = Some(self.expand(&path.text)?);
+                    i += 1;
+                }
+                _ => {
+                    let expanded = if t.literal { t.text.clone() } else { self.expand(&t.text)? };
+                    // glob expansion on unquoted words containing wildcards
+                    if !t.literal && (expanded.contains('*') || expanded.contains('?'))
+                        && expanded.starts_with('/')
+                    {
+                        let matches = fs.glob(&expanded)?;
+                        if matches.is_empty() {
+                            // bash passes the pattern through when nothing
+                            // matches; tools then fail with "no such file",
+                            // which is the more debuggable behaviour.
+                            cmd.argv.push(expanded);
+                        } else {
+                            cmd.argv.extend(matches.into_iter().map(String::from));
+                        }
+                    } else {
+                        cmd.argv.push(expanded);
+                    }
+                }
+            }
+            i += 1;
+        }
+        if !cmd.argv.is_empty() {
+            cur.cmds.push(cmd);
+        }
+        if !cur.cmds.is_empty() {
+            pipelines.push(cur);
+        }
+        Ok(pipelines)
+    }
+
+    /// `$VAR`, `${VAR}`, `$RANDOM`.
+    fn expand(&mut self, s: &str) -> Result<String> {
+        let bytes = s.as_bytes();
+        let mut out = String::new();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b'$' && i + 1 < bytes.len() {
+                let (name, consumed) = if bytes[i + 1] == b'{' {
+                    let end = s[i + 2..]
+                        .find('}')
+                        .ok_or_else(|| MareError::Shell(format!("unclosed ${{ in `{s}`")))?;
+                    (s[i + 2..i + 2 + end].to_string(), end + 3)
+                } else {
+                    let rest = &s[i + 1..];
+                    let len = rest
+                        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+                        .unwrap_or(rest.len());
+                    (rest[..len].to_string(), len + 1)
+                };
+                if name.is_empty() {
+                    out.push('$');
+                    i += 1;
+                    continue;
+                }
+                let val = if name == "RANDOM" {
+                    (self.rng.next_u64() % 32768).to_string()
+                } else {
+                    self.env.get(&name).cloned().unwrap_or_default()
+                };
+                out.push_str(&val);
+                i += consumed;
+            } else {
+                out.push(bytes[i] as char);
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_pipeline(&mut self, p: &Pipeline, fs: &mut Vfs) -> Result<Vec<u8>> {
+        let mut stdin: Vec<u8>;
+        let mut stdout: Vec<u8> = Vec::new();
+        for (i, cmd) in p.cmds.iter().enumerate() {
+            if let Some(path) = &cmd.stdin_file {
+                stdin = fs.read(path)?.to_vec();
+            } else if i > 0 {
+                stdin = std::mem::take(&mut stdout);
+            } else {
+                // head of a pipeline: the container's streamed input, if
+                // any (first consumer wins)
+                stdin = std::mem::take(&mut self.stdin);
+            }
+
+            let tool_name = &cmd.argv[0];
+            let tool = self.image.tool(tool_name)?;
+            let mut ctx = ToolCtx {
+                args: cmd.argv[1..].to_vec(),
+                stdin: std::mem::take(&mut stdin),
+                fs,
+                env: &self.env,
+                runtime: self.runtime,
+                rng: self.rng.fork(i as u64),
+            };
+            let out: ToolOutput = tool.run(&mut ctx)?;
+            if out.status != 0 {
+                return Err(MareError::Shell(format!(
+                    "`{}` exited with status {} in image `{}`",
+                    cmd.argv.join(" "),
+                    out.status,
+                    self.image.name
+                )));
+            }
+            stdout = out.stdout;
+
+            if let Some((path, append)) = &cmd.stdout_file {
+                if *append {
+                    fs.append(path, &stdout)?;
+                } else {
+                    fs.write(path, std::mem::take(&mut stdout))?;
+                }
+                stdout = Vec::new();
+            }
+        }
+        Ok(stdout)
+    }
+}
+
+/// Split a script into logical commands: join `\`-continuations, then
+/// split on newline / `;` / `&&` outside quotes.
+pub fn split_commands(script: &str) -> Vec<String> {
+    let joined = script.replace("\\\n", " ");
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = joined.chars().peekable();
+    let mut quote: Option<char> = None;
+    while let Some(c) = chars.next() {
+        match quote {
+            Some(q) => {
+                cur.push(c);
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                '\'' | '"' => {
+                    quote = Some(c);
+                    cur.push(c);
+                }
+                '\n' | ';' => {
+                    if !cur.trim().is_empty() {
+                        out.push(cur.trim().to_string());
+                    }
+                    cur.clear();
+                }
+                '&' if chars.peek() == Some(&'&') => {
+                    chars.next();
+                    if !cur.trim().is_empty() {
+                        out.push(cur.trim().to_string());
+                    }
+                    cur.clear();
+                }
+                c => cur.push(c),
+            },
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+/// Tokenize one command respecting quotes; `|`, `>`, `>>`, `<` become
+/// standalone tokens when unquoted.
+fn tokenize(line: &str) -> Result<Vec<Token>> {
+    let mut out: Vec<Token> = Vec::new();
+    let mut cur = String::new();
+    let mut literal = false;
+    let mut has_content = false;
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+
+    macro_rules! flush {
+        () => {
+            if has_content || !cur.is_empty() {
+                out.push(Token { text: std::mem::take(&mut cur), literal });
+                #[allow(unused_assignments)]
+                {
+                    literal = false;
+                    has_content = false;
+                }
+            }
+        };
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            ' ' | '\t' => {
+                flush!();
+            }
+            '\'' => {
+                literal = true;
+                has_content = true;
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    cur.push(chars[i]);
+                    i += 1;
+                }
+                if i >= chars.len() {
+                    return Err(MareError::Shell(format!("unterminated quote: {line}")));
+                }
+            }
+            '"' => {
+                has_content = true;
+                i += 1;
+                while i < chars.len() && chars[i] != '"' {
+                    cur.push(chars[i]);
+                    i += 1;
+                }
+                if i >= chars.len() {
+                    return Err(MareError::Shell(format!("unterminated quote: {line}")));
+                }
+            }
+            '|' | '<' => {
+                flush!();
+                out.push(Token { text: c.to_string(), literal: false });
+            }
+            '>' => {
+                flush!();
+                if chars.get(i + 1) == Some(&'>') {
+                    out.push(Token { text: ">>".into(), literal: false });
+                    i += 1;
+                } else {
+                    out.push(Token { text: ">".into(), literal: false });
+                }
+            }
+            c => {
+                cur.push(c);
+                has_content = true;
+            }
+        }
+        i += 1;
+    }
+    flush!();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_handles_continuations_and_separators() {
+        let script = "a one \\\n  two\nb; c && d";
+        assert_eq!(split_commands(script), vec!["a one    two", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn split_respects_quotes() {
+        let script = "awk '{s+=$1} END {print s}' /in > /out";
+        assert_eq!(split_commands(script).len(), 1);
+        let script2 = "echo 'a;b' ; echo c";
+        assert_eq!(split_commands(script2), vec!["echo 'a;b'", "echo c"]);
+    }
+
+    #[test]
+    fn tokenize_pipeline_and_redirects() {
+        let toks = tokenize("grep -o '[GC]' /dna | wc -l > /count").unwrap();
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["grep", "-o", "[GC]", "/dna", "|", "wc", "-l", ">", "/count"]);
+        assert!(toks[2].literal); // single-quoted
+    }
+
+    #[test]
+    fn tokenize_double_gt() {
+        let toks = tokenize("x >> /log").unwrap();
+        assert_eq!(toks[1].text, ">>");
+    }
+
+    #[test]
+    fn tokenize_rejects_unterminated() {
+        assert!(tokenize("echo 'oops").is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! The tool trait: what a binary inside a container image looks like.
+//!
+//! Real Docker runs arbitrary ELF binaries; our simulated engine runs
+//! `Tool` implementations against the container's [`Vfs`]. The
+//! domain tools (fred, gatk) reach the AOT compute through the
+//! [`ToolRuntime`] handle carried in the context — that is the paper's
+//! "containerized tool wrapping heavy numeric code" path.
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::runtime::ToolRuntime;
+use crate::util::rng::Rng;
+
+use super::vfs::Vfs;
+
+/// Execution context for one tool invocation inside a container.
+pub struct ToolCtx<'a> {
+    /// argv[1..] (argv[0] is the tool name).
+    pub args: Vec<String>,
+    /// Bytes piped into stdin.
+    pub stdin: Vec<u8>,
+    /// The container filesystem (volumes already bound).
+    pub fs: &'a mut Vfs,
+    /// Environment (includes RANDOM, MARE_PARTITION, ...).
+    pub env: &'a BTreeMap<String, String>,
+    /// PJRT runtime for compute-heavy tools (None in plain images).
+    pub runtime: Option<&'a ToolRuntime>,
+    /// Deterministic per-invocation RNG.
+    pub rng: Rng,
+}
+
+impl<'a> ToolCtx<'a> {
+    /// Stdin as UTF-8.
+    pub fn stdin_string(&self) -> Result<String> {
+        String::from_utf8(self.stdin.clone())
+            .map_err(|_| crate::error::MareError::Shell("stdin is not UTF-8".into()))
+    }
+
+    /// Flag helper: `--key=value` or `-key value` styles used by the
+    /// paper's commands.
+    pub fn flag_value(&self, name: &str) -> Option<String> {
+        let eq_prefix = format!("{name}=");
+        let mut it = self.args.iter();
+        while let Some(a) = it.next() {
+            if let Some(v) = a.strip_prefix(&eq_prefix) {
+                return Some(v.to_string());
+            }
+            if a == name {
+                return it.next().cloned();
+            }
+        }
+        None
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name || a.starts_with(&format!("{name}=")))
+    }
+
+    /// Positional args (not starting with '-').
+    pub fn positionals(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut skip_next = false;
+        for (i, a) in self.args.iter().enumerate() {
+            if skip_next {
+                skip_next = false;
+                continue;
+            }
+            if a.starts_with('-') {
+                // a flag that takes a separate value consumes the next
+                // token only if the token is clearly a value for it; we
+                // can't know generally, so tools that mix styles use
+                // flag_value() and slice positionals themselves.
+                let _ = i;
+                continue;
+            }
+            out.push(a.as_str());
+        }
+        out
+    }
+}
+
+/// Result of a tool run.
+#[derive(Debug, Default, Clone)]
+pub struct ToolOutput {
+    pub stdout: Vec<u8>,
+    pub status: i32,
+}
+
+impl ToolOutput {
+    pub fn ok(stdout: Vec<u8>) -> Result<ToolOutput> {
+        Ok(ToolOutput { stdout, status: 0 })
+    }
+
+    pub fn ok_str(stdout: impl Into<String>) -> Result<ToolOutput> {
+        Self::ok(stdout.into().into_bytes())
+    }
+
+    pub fn empty() -> Result<ToolOutput> {
+        Self::ok(Vec::new())
+    }
+}
+
+/// A binary installed in a container image.
+pub trait Tool: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::vfs::Vfs;
+
+    fn ctx_with_args<'a>(
+        fs: &'a mut Vfs,
+        env: &'a BTreeMap<String, String>,
+        args: &[&str],
+    ) -> ToolCtx<'a> {
+        ToolCtx {
+            args: args.iter().map(|s| s.to_string()).collect(),
+            stdin: vec![],
+            fs,
+            env,
+            runtime: None,
+            rng: Rng::new(1),
+        }
+    }
+
+    #[test]
+    fn flag_value_both_styles() {
+        let mut fs = Vfs::disk();
+        let env = BTreeMap::new();
+        let ctx = ctx_with_args(
+            &mut fs,
+            &env,
+            &["-receptor", "/r.oeb", "--INPUT=/in.sam", "-nbest=30"],
+        );
+        assert_eq!(ctx.flag_value("-receptor").as_deref(), Some("/r.oeb"));
+        assert_eq!(ctx.flag_value("--INPUT").as_deref(), Some("/in.sam"));
+        assert_eq!(ctx.flag_value("-nbest").as_deref(), Some("30"));
+        assert_eq!(ctx.flag_value("-missing"), None);
+        assert!(ctx.has_flag("--INPUT"));
+    }
+}

@@ -1,0 +1,292 @@
+//! In-memory container filesystem (the tmpfs the paper mounts volumes
+//! on), with optional capacity limits and a disk-backed flavour.
+//!
+//! Paths are absolute, `/`-separated, normalized; directories are
+//! implicit (created by writing files under them), like an object store.
+//! The `Backing` kind does not change behaviour — it drives the virtual
+//! cost accounting (tmpfs vs disk bandwidth) and the capacity default,
+//! mirroring the paper's §Data Handling: tmpfs by default, disk for
+//! partitions that exceed it.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+
+/// What the filesystem is "backed" by (cost accounting + capacity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backing {
+    Tmpfs,
+    Disk,
+}
+
+/// In-memory filesystem.
+#[derive(Debug, Clone)]
+pub struct Vfs {
+    files: BTreeMap<String, Vec<u8>>,
+    capacity: Option<u64>,
+    used: u64,
+    backing: Backing,
+    /// Peak usage (for tmpfs-capacity diagnostics + cost models).
+    peak: u64,
+}
+
+/// Normalize a path: force leading '/', collapse '//' and '.', reject '..'.
+pub fn normalize(path: &str) -> Result<String> {
+    let mut parts: Vec<&str> = Vec::new();
+    for part in path.split('/') {
+        match part {
+            "" | "." => {}
+            ".." => {
+                return Err(MareError::Container(format!("`..` not allowed in `{path}`")))
+            }
+            p => parts.push(p),
+        }
+    }
+    if parts.is_empty() {
+        return Ok("/".to_string());
+    }
+    Ok(format!("/{}", parts.join("/")))
+}
+
+impl Vfs {
+    pub fn new(backing: Backing, capacity: Option<u64>) -> Self {
+        Vfs { files: BTreeMap::new(), capacity, used: 0, backing, peak: 0 }
+    }
+
+    pub fn tmpfs(capacity: u64) -> Self {
+        Vfs::new(Backing::Tmpfs, Some(capacity))
+    }
+
+    pub fn disk() -> Self {
+        Vfs::new(Backing::Disk, None)
+    }
+
+    pub fn backing(&self) -> Backing {
+        self.backing
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    fn charge(&mut self, old: u64, new: u64) -> Result<()> {
+        let next = self.used - old + new;
+        if let Some(cap) = self.capacity {
+            if next > cap {
+                return Err(MareError::Container(format!(
+                    "no space left on {:?} mount: need {next} bytes, capacity {cap} \
+                     (use a disk-backed mount for large partitions)",
+                    self.backing
+                )));
+            }
+        }
+        self.used = next;
+        self.peak = self.peak.max(next);
+        Ok(())
+    }
+
+    pub fn write(&mut self, path: &str, bytes: Vec<u8>) -> Result<()> {
+        let path = normalize(path)?;
+        let old = self.files.get(&path).map(|b| b.len() as u64).unwrap_or(0);
+        self.charge(old, bytes.len() as u64)?;
+        self.files.insert(path, bytes);
+        Ok(())
+    }
+
+    pub fn append(&mut self, path: &str, bytes: &[u8]) -> Result<()> {
+        let path = normalize(path)?;
+        let old = self.files.get(&path).map(|b| b.len() as u64).unwrap_or(0);
+        self.charge(old, old + bytes.len() as u64)?;
+        self.files.entry(path).or_default().extend_from_slice(bytes);
+        Ok(())
+    }
+
+    pub fn read(&self, path: &str) -> Result<&[u8]> {
+        let path = normalize(path)?;
+        self.files
+            .get(&path)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| MareError::Container(format!("no such file: {path}")))
+    }
+
+    pub fn read_string(&self, path: &str) -> Result<String> {
+        String::from_utf8(self.read(path)?.to_vec())
+            .map_err(|_| MareError::Container(format!("{path}: not UTF-8")))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        normalize(path).map(|p| self.files.contains_key(&p)).unwrap_or(false)
+    }
+
+    pub fn remove(&mut self, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        match self.files.remove(&path) {
+            Some(b) => {
+                self.used -= b.len() as u64;
+                Ok(())
+            }
+            None => Err(MareError::Container(format!("no such file: {path}"))),
+        }
+    }
+
+    /// All file paths (sorted).
+    pub fn list_all(&self) -> Vec<&str> {
+        self.files.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Files directly or transitively under a directory.
+    pub fn list_dir(&self, dir: &str) -> Result<Vec<&str>> {
+        let dir = normalize(dir)?;
+        let prefix = if dir == "/" { "/".to_string() } else { format!("{dir}/") };
+        Ok(self
+            .files
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|s| s.as_str())
+            .collect())
+    }
+
+    /// Shell-glob match over all paths. Supports `*` (within a path
+    /// segment) and `?`; e.g. `/in/*.vcf.gz`.
+    pub fn glob(&self, pattern: &str) -> Result<Vec<&str>> {
+        let pattern = normalize(pattern)?;
+        Ok(self
+            .files
+            .keys()
+            .filter(|k| glob_match(&pattern, k))
+            .map(|s| s.as_str())
+            .collect())
+    }
+
+    /// Take ownership of all files (used to extract output mounts).
+    pub fn take_dir(&mut self, dir: &str) -> Result<Vec<(String, Vec<u8>)>> {
+        let names: Vec<String> = self.list_dir(dir)?.into_iter().map(String::from).collect();
+        let mut out = Vec::with_capacity(names.len());
+        for n in names {
+            let bytes = self.files.remove(&n).unwrap();
+            self.used -= bytes.len() as u64;
+            out.push((n, bytes));
+        }
+        Ok(out)
+    }
+}
+
+/// Match `pattern` against `path`, `*`/`?` within segments.
+pub fn glob_match(pattern: &str, path: &str) -> bool {
+    let psegs: Vec<&str> = pattern.split('/').collect();
+    let fsegs: Vec<&str> = path.split('/').collect();
+    if psegs.len() != fsegs.len() {
+        return false;
+    }
+    psegs.iter().zip(&fsegs).all(|(p, f)| seg_match(p, f))
+}
+
+fn seg_match(pat: &str, s: &str) -> bool {
+    // classic backtracking wildcard match
+    let p: Vec<char> = pat.chars().collect();
+    let t: Vec<char> = s.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = pi;
+            mark = ti;
+            pi += 1;
+        } else if star != usize::MAX {
+            pi = star + 1;
+            mark += 1;
+            ti = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut fs = Vfs::disk();
+        fs.write("/a/b.txt", b"hello".to_vec()).unwrap();
+        assert_eq!(fs.read("/a/b.txt").unwrap(), b"hello");
+        assert_eq!(fs.read_string("a/b.txt").unwrap(), "hello"); // normalized
+        assert!(fs.exists("/a/b.txt"));
+        assert_eq!(fs.used_bytes(), 5);
+    }
+
+    #[test]
+    fn normalize_paths() {
+        assert_eq!(normalize("//a//b/./c").unwrap(), "/a/b/c");
+        assert_eq!(normalize("/").unwrap(), "/");
+        assert!(normalize("/a/../b").is_err());
+    }
+
+    #[test]
+    fn capacity_enforced_with_helpful_error() {
+        let mut fs = Vfs::tmpfs(10);
+        fs.write("/x", vec![0; 8]).unwrap();
+        let err = fs.write("/y", vec![0; 8]).unwrap_err().to_string();
+        assert!(err.contains("no space left"), "{err}");
+        // overwrite within budget is fine
+        fs.write("/x", vec![0; 10]).unwrap();
+        assert_eq!(fs.peak_bytes(), 10);
+    }
+
+    #[test]
+    fn append_and_remove_track_usage() {
+        let mut fs = Vfs::disk();
+        fs.append("/log", b"ab").unwrap();
+        fs.append("/log", b"cd").unwrap();
+        assert_eq!(fs.read_string("/log").unwrap(), "abcd");
+        fs.remove("/log").unwrap();
+        assert_eq!(fs.used_bytes(), 0);
+        assert!(fs.remove("/log").is_err());
+    }
+
+    #[test]
+    fn list_dir_and_take() {
+        let mut fs = Vfs::disk();
+        fs.write("/out/a.vcf", b"1".to_vec()).unwrap();
+        fs.write("/out/b.vcf", b"2".to_vec()).unwrap();
+        fs.write("/other", b"3".to_vec()).unwrap();
+        assert_eq!(fs.list_dir("/out").unwrap().len(), 2);
+        let taken = fs.take_dir("/out").unwrap();
+        assert_eq!(taken.len(), 2);
+        assert!(!fs.exists("/out/a.vcf"));
+        assert_eq!(fs.used_bytes(), 1);
+    }
+
+    #[test]
+    fn globbing() {
+        let mut fs = Vfs::disk();
+        fs.write("/in/x.vcf.gz", vec![]).unwrap();
+        fs.write("/in/y.vcf.gz", vec![]).unwrap();
+        fs.write("/in/z.txt", vec![]).unwrap();
+        fs.write("/in/sub/w.vcf.gz", vec![]).unwrap();
+        assert_eq!(fs.glob("/in/*.vcf.gz").unwrap().len(), 2);
+        assert_eq!(fs.glob("/in/?.txt").unwrap(), vec!["/in/z.txt"]);
+        assert_eq!(fs.glob("/in/*/*.vcf.gz").unwrap(), vec!["/in/sub/w.vcf.gz"]);
+    }
+
+    #[test]
+    fn glob_match_edge_cases() {
+        assert!(glob_match("/a/*", "/a/b"));
+        assert!(!glob_match("/a/*", "/a/b/c"));
+        assert!(glob_match("/a/*b*", "/a/xbyz"));
+        assert!(glob_match("/*", "/x"));
+        assert!(!glob_match("/a", "/b"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Partitioned, lineage-tracked dataset — the RDD analogue.
+//!
+//! [`Dataset`] is a cheap lazy handle over a [`plan::Plan`]; operations
+//! extend the lineage, `cluster::Cluster::run` executes it. Construction
+//! helpers mirror the Spark API surface MaRe uses: `parallelize_*`
+//! (driver-side data) and `storage::ingest` (backend reads with
+//! locality metadata).
+
+pub mod plan;
+pub mod record;
+
+use std::sync::Arc;
+
+pub use plan::{ClosureOp, PartitionOp, Partitioner, Plan, TaskContext};
+pub use record::{Partition, Record};
+
+/// Lazy, immutable dataset handle (clones share lineage).
+#[derive(Clone)]
+pub struct Dataset {
+    plan: Arc<Plan>,
+}
+
+impl Dataset {
+    pub fn from_plan(plan: Arc<Plan>) -> Self {
+        Dataset { plan }
+    }
+
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
+    }
+
+    // ------------------------------------------------------ constructors
+
+    /// Split `text` on `sep` into records, then pack into `num_partitions`.
+    pub fn parallelize_text(text: &str, sep: &str, num_partitions: usize) -> Self {
+        let records: Vec<Record> = split_records(text, sep)
+            .into_iter()
+            .map(Record::text)
+            .collect();
+        Self::parallelize(records, num_partitions)
+    }
+
+    /// Pack records into `num_partitions` (round-robin, like
+    /// `sc.parallelize`), no locality info.
+    pub fn parallelize(records: Vec<Record>, num_partitions: usize) -> Self {
+        let n = num_partitions.max(1);
+        let mut parts: Vec<Vec<Record>> = (0..n).map(|_| Vec::new()).collect();
+        let total = records.len();
+        // contiguous chunks (matches Spark's slicing, keeps order)
+        let mut it = records.into_iter();
+        for (i, part) in parts.iter_mut().enumerate() {
+            let count = total / n + usize::from(i < total % n);
+            part.extend(it.by_ref().take(count));
+        }
+        let partitions = parts.into_iter().map(Partition::new).collect();
+        Dataset::from_plan(Arc::new(Plan::Source { partitions, label: "parallelize".into() }))
+    }
+
+    /// Pre-partitioned source (storage ingest paths use this to carry
+    /// block locality).
+    pub fn from_partitions(partitions: Vec<Partition>, label: impl Into<String>) -> Self {
+        Dataset::from_plan(Arc::new(Plan::Source { partitions, label: label.into() }))
+    }
+
+    // ----------------------------------------------------- transformations
+
+    /// Narrow per-partition transformation (fuses into the current stage).
+    pub fn map_partitions(&self, op: Arc<dyn PartitionOp>) -> Dataset {
+        Dataset::from_plan(Arc::new(Plan::MapPartitions { parent: self.plan.clone(), op }))
+    }
+
+    /// Wide transformation: hash-partition by a record key
+    /// (`repartitionBy` in the paper).
+    pub fn repartition_by_key(
+        &self,
+        key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>,
+        num: usize,
+    ) -> Dataset {
+        Dataset::from_plan(Arc::new(Plan::Repartition {
+            parent: self.plan.clone(),
+            partitioner: Partitioner::HashByKey { key_fn, num: num.max(1) },
+        }))
+    }
+
+    /// Wide transformation: rebalance into `num` partitions (the
+    /// tree-reduce shrink step).
+    pub fn repartition(&self, num: usize) -> Dataset {
+        Dataset::from_plan(Arc::new(Plan::Repartition {
+            parent: self.plan.clone(),
+            partitioner: Partitioner::Balanced { num: num.max(1) },
+        }))
+    }
+
+    // ------------------------------------------------------------ queries
+
+    pub fn num_partitions(&self) -> usize {
+        self.plan.num_partitions()
+    }
+
+    pub fn describe(&self) -> String {
+        self.plan.describe()
+    }
+}
+
+/// Split on a separator, dropping empty chunks (the paper's TextFile
+/// record semantics: records joined by `sep`, e.g. "\n$$$$\n" for SDF).
+pub fn split_records(text: &str, sep: &str) -> Vec<String> {
+    if sep.is_empty() {
+        return if text.is_empty() { vec![] } else { vec![text.to_string()] };
+    }
+    text.split(sep)
+        .filter(|chunk| !chunk.trim().is_empty())
+        .map(|chunk| chunk.to_string())
+        .collect()
+}
+
+/// Join records with a separator for mounting (inverse of
+/// [`split_records`]; a trailing separator is added so round-trips are
+/// stable for tools that append).
+pub fn join_records(records: &[String], sep: &str) -> String {
+    if records.is_empty() {
+        return String::new();
+    }
+    let mut out = records.join(sep);
+    out.push_str(sep);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelize_balances_contiguously() {
+        let ds = Dataset::parallelize_text("a\nb\nc\nd\ne", "\n", 2);
+        match ds.plan().as_ref() {
+            Plan::Source { partitions, .. } => {
+                assert_eq!(partitions.len(), 2);
+                assert_eq!(partitions[0].len(), 3);
+                assert_eq!(partitions[1].len(), 2);
+                assert_eq!(partitions[0].records[0], Record::text("a"));
+                assert_eq!(partitions[1].records[0], Record::text("d"));
+            }
+            _ => panic!("expected source"),
+        }
+    }
+
+    #[test]
+    fn empty_dataset_is_fine() {
+        let ds = Dataset::parallelize(vec![], 4);
+        assert_eq!(ds.num_partitions(), 4);
+    }
+
+    #[test]
+    fn split_records_custom_separator() {
+        let text = "mol1\n$$$$\nmol2\n$$$$\n";
+        let recs = split_records(text, "\n$$$$\n");
+        assert_eq!(recs, vec!["mol1", "mol2"]);
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let recs = vec!["a".to_string(), "b".to_string()];
+        let joined = join_records(&recs, "\n$$$$\n");
+        assert_eq!(split_records(&joined, "\n$$$$\n"), recs);
+    }
+
+    #[test]
+    fn lineage_grows() {
+        let ds = Dataset::parallelize_text("a\nb", "\n", 2)
+            .map_partitions(Arc::new(ClosureOp {
+                f: |_: &TaskContext, r| Ok(r),
+                name: "id".into(),
+            }))
+            .repartition(1);
+        assert_eq!(ds.num_partitions(), 1);
+        assert_eq!(ds.plan().depth(), 3);
+        assert_eq!(ds.plan().num_shuffles(), 1);
+    }
+}

@@ -1,0 +1,294 @@
+//! Lazy execution plan with lineage (the RDD DAG analogue).
+//!
+//! A [`Plan`] is an immutable, refcounted lineage tree. Nothing executes
+//! until the cluster runs it (`cluster::runner`). The stage compiler
+//! turns a plan into pipelined stages exactly like Spark: chains of
+//! `MapPartitions` fuse into one stage (no shuffle); `Repartition` /
+//! `Coalesce` cut stages and shuffle.
+//!
+//! Lineage is also the fault-tolerance mechanism: when a simulated worker
+//! dies, its materialized partitions are recomputed by re-running the
+//! plan suffix (see `cluster::fault`).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::simtime::CostModel;
+
+use super::record::{Partition, Record};
+
+/// A per-partition transformation (the paper's containerized command, or
+/// a native closure for tests/internal ops).
+pub trait PartitionOp: Send + Sync {
+    /// Transform one partition's records. `ctx` identifies the partition
+    /// and provides a deterministic per-task RNG seed ($RANDOM etc).
+    fn apply(&self, ctx: &TaskContext, records: Vec<Record>) -> Result<Vec<Record>>;
+
+    /// Virtual-cost model of the wrapped tool.
+    fn cost_model(&self) -> CostModel {
+        CostModel::free()
+    }
+
+    /// Container image this op runs in (None = native/no container).
+    fn image(&self) -> Option<&str> {
+        None
+    }
+
+    /// Whether the op's mount points are disk-backed (vs tmpfs).
+    fn uses_disk_mount(&self) -> bool {
+        false
+    }
+
+    /// Whether (input, output) are streamed over stdin/stdout instead of
+    /// materialized mounts (no stage-in/out cost; §1.4 future work).
+    fn streams(&self) -> (bool, bool) {
+        (false, false)
+    }
+
+    /// Human-readable label for plans and reports.
+    fn label(&self) -> String {
+        "op".into()
+    }
+}
+
+/// Execution context handed to each task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskContext {
+    pub partition: usize,
+    pub num_partitions: usize,
+    pub attempt: u32,
+    /// Deterministic seed for this (partition, attempt).
+    pub seed: u64,
+}
+
+/// How `Repartition` assigns records to output partitions.
+pub enum Partitioner {
+    /// Hash of a record key (the paper's `keyBy` + HashPartitioner).
+    HashByKey { key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>, num: usize },
+    /// Concatenate-and-chop into `num` roughly equal partitions
+    /// (Spark `repartition(n)` without keys; used by tree-reduce).
+    Balanced { num: usize },
+}
+
+impl Clone for Partitioner {
+    fn clone(&self) -> Self {
+        match self {
+            Partitioner::HashByKey { key_fn, num } => {
+                Partitioner::HashByKey { key_fn: key_fn.clone(), num: *num }
+            }
+            Partitioner::Balanced { num } => Partitioner::Balanced { num: *num },
+        }
+    }
+}
+
+impl std::fmt::Debug for Partitioner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Partitioner::HashByKey { num, .. } => write!(f, "HashByKey({num})"),
+            Partitioner::Balanced { num } => write!(f, "Balanced({num})"),
+        }
+    }
+}
+
+impl Partitioner {
+    pub fn num_partitions(&self) -> usize {
+        match self {
+            Partitioner::HashByKey { num, .. } | Partitioner::Balanced { num } => *num,
+        }
+    }
+
+    /// Stable string hash (FNV-1a) — record routing must be
+    /// deterministic across runs for the benches to be reproducible.
+    pub fn hash_key(key: &str) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// The lineage tree.
+pub enum Plan {
+    /// Materialized input partitions (parallelize / storage ingest).
+    Source { partitions: Vec<Partition>, label: String },
+    /// Narrow transformation: one task per partition, no shuffle.
+    MapPartitions { parent: Arc<Plan>, op: Arc<dyn PartitionOp> },
+    /// Wide transformation: shuffle into a new partitioning.
+    Repartition { parent: Arc<Plan>, partitioner: Partitioner },
+}
+
+impl Plan {
+    pub fn num_partitions(&self) -> usize {
+        match self {
+            Plan::Source { partitions, .. } => partitions.len(),
+            Plan::MapPartitions { parent, .. } => parent.num_partitions(),
+            Plan::Repartition { partitioner, .. } => partitioner.num_partitions(),
+        }
+    }
+
+    /// Depth of the lineage chain (for reports/tests).
+    pub fn depth(&self) -> usize {
+        match self {
+            Plan::Source { .. } => 1,
+            Plan::MapPartitions { parent, .. } | Plan::Repartition { parent, .. } => {
+                1 + parent.depth()
+            }
+        }
+    }
+
+    /// Number of shuffle boundaries in the lineage.
+    pub fn num_shuffles(&self) -> usize {
+        match self {
+            Plan::Source { .. } => 0,
+            Plan::MapPartitions { parent, .. } => parent.num_shuffles(),
+            Plan::Repartition { parent, .. } => 1 + parent.num_shuffles(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Plan::Source { label, .. } => format!("source[{label}]"),
+            Plan::MapPartitions { op, .. } => format!("map[{}]", op.label()),
+            Plan::Repartition { partitioner, .. } => format!("shuffle[{partitioner:?}]"),
+        }
+    }
+
+    /// Pretty lineage description, leaf-to-root.
+    pub fn describe(&self) -> String {
+        let mut out = Vec::new();
+        let mut cur = self;
+        loop {
+            out.push(cur.label());
+            match cur {
+                Plan::Source { .. } => break,
+                Plan::MapPartitions { parent, .. } | Plan::Repartition { parent, .. } => {
+                    cur = parent
+                }
+            }
+        }
+        out.reverse();
+        out.join(" -> ")
+    }
+}
+
+/// Route one partition's records to `num` output buckets.
+pub fn route(partitioner: &Partitioner, records: Vec<Record>) -> Vec<Vec<Record>> {
+    route_from(partitioner, records, 0)
+}
+
+/// Route with a per-source-partition `salt` staggering the balanced
+/// round-robin. Without the salt, N partitions holding one record each
+/// would all route to bucket 0 (Spark staggers by partition id for the
+/// same reason).
+pub fn route_from(
+    partitioner: &Partitioner,
+    records: Vec<Record>,
+    salt: usize,
+) -> Vec<Vec<Record>> {
+    let num = partitioner.num_partitions();
+    let mut buckets: Vec<Vec<Record>> = (0..num).map(|_| Vec::new()).collect();
+    match partitioner {
+        Partitioner::HashByKey { key_fn, .. } => {
+            for r in records {
+                let key = key_fn(&r);
+                let b = (Partitioner::hash_key(&key) % num as u64) as usize;
+                buckets[b].push(r);
+            }
+        }
+        Partitioner::Balanced { .. } => {
+            for (i, r) in records.into_iter().enumerate() {
+                buckets[(salt + i) % num].push(r);
+            }
+        }
+    }
+    buckets
+}
+
+/// A native (non-container) op from a closure — used by internal
+/// machinery and tests.
+pub struct ClosureOp<F> {
+    pub f: F,
+    pub name: String,
+}
+
+impl<F> PartitionOp for ClosureOp<F>
+where
+    F: Fn(&TaskContext, Vec<Record>) -> Result<Vec<Record>> + Send + Sync,
+{
+    fn apply(&self, ctx: &TaskContext, records: Vec<Record>) -> Result<Vec<Record>> {
+        (self.f)(ctx, records)
+    }
+
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(n: usize) -> Arc<Plan> {
+        let parts = (0..n)
+            .map(|i| Partition::new(vec![Record::text(format!("r{i}"))]))
+            .collect();
+        Arc::new(Plan::Source { partitions: parts, label: "test".into() })
+    }
+
+    #[test]
+    fn plan_shape_accessors() {
+        let p = src(4);
+        let mapped = Arc::new(Plan::MapPartitions {
+            parent: p,
+            op: Arc::new(ClosureOp { f: |_: &TaskContext, r| Ok(r), name: "id".into() }),
+        });
+        let shuffled = Arc::new(Plan::Repartition {
+            parent: mapped,
+            partitioner: Partitioner::Balanced { num: 2 },
+        });
+        assert_eq!(shuffled.num_partitions(), 2);
+        assert_eq!(shuffled.depth(), 3);
+        assert_eq!(shuffled.num_shuffles(), 1);
+        assert!(shuffled.describe().contains("source[test] -> map[id] -> shuffle"));
+    }
+
+    #[test]
+    fn hash_routing_groups_same_keys() {
+        let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+            Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
+        let p = Partitioner::HashByKey { key_fn, num: 4 };
+        let records = vec![
+            Record::text("a1"),
+            Record::text("b1"),
+            Record::text("a2"),
+            Record::text("b2"),
+        ];
+        let buckets = route(&p, records);
+        // all a* together, all b* together
+        for bucket in &buckets {
+            let prefixes: std::collections::HashSet<_> =
+                bucket.iter().map(|r| &r.as_text().unwrap()[..1]).collect();
+            assert!(prefixes.len() <= 1, "{buckets:?}");
+        }
+        let total: usize = buckets.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn balanced_routing_is_even() {
+        let p = Partitioner::Balanced { num: 3 };
+        let records: Vec<Record> = (0..10).map(|i| Record::text(format!("{i}"))).collect();
+        let buckets = route(&p, records);
+        let sizes: Vec<usize> = buckets.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4), "{sizes:?}");
+    }
+
+    #[test]
+    fn hash_is_stable() {
+        assert_eq!(Partitioner::hash_key("chr1"), Partitioner::hash_key("chr1"));
+        assert_ne!(Partitioner::hash_key("chr1"), Partitioner::hash_key("chr2"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Dataset records: the unit MaRe mounts into containers.
+//!
+//! Mirrors the paper's two mount-point semantics: a *text* record is one
+//! separator-delimited chunk of a `TextFile` mount; a *binary* record is
+//! one distinct file of a `BinaryFiles` mount directory.
+
+/// One dataset record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    /// A text chunk (one line, one SDF molecule, one SAM record, ...).
+    Text(String),
+    /// A named binary file (e.g. a gzipped VCF shard).
+    Binary { name: String, bytes: Vec<u8> },
+}
+
+impl Record {
+    pub fn text(s: impl Into<String>) -> Record {
+        Record::Text(s.into())
+    }
+
+    pub fn binary(name: impl Into<String>, bytes: Vec<u8>) -> Record {
+        Record::Binary { name: name.into(), bytes }
+    }
+
+    /// Payload size in bytes (what the cost models meter).
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Record::Text(s) => s.len() as u64,
+            Record::Binary { name, bytes } => (name.len() + bytes.len()) as u64,
+        }
+    }
+
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            Record::Text(s) => Some(s),
+            Record::Binary { .. } => None,
+        }
+    }
+
+    pub fn is_binary(&self) -> bool {
+        matches!(self, Record::Binary { .. })
+    }
+}
+
+/// One partition: a slice of the dataset plus locality metadata.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Partition {
+    pub records: Vec<Record>,
+    /// Worker holding this partition's data (HDFS block host / cache
+    /// owner); None means no locality information.
+    pub preferred_worker: Option<usize>,
+}
+
+impl Partition {
+    pub fn new(records: Vec<Record>) -> Self {
+        Partition { records, preferred_worker: None }
+    }
+
+    pub fn with_locality(records: Vec<Record>, worker: usize) -> Self {
+        Partition { records, preferred_worker: Some(worker) }
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.records.iter().map(Record::size_bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Record::text("abc").size_bytes(), 3);
+        assert_eq!(Record::binary("f", vec![0; 10]).size_bytes(), 11);
+        let p = Partition::new(vec![Record::text("ab"), Record::binary("x", vec![1, 2, 3])]);
+        assert_eq!(p.size_bytes(), 2 + 4);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn text_accessor() {
+        assert_eq!(Record::text("x").as_text(), Some("x"));
+        assert_eq!(Record::binary("x", vec![]).as_text(), None);
+    }
+}

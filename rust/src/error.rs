@@ -1,0 +1,62 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Every fallible MaRe operation returns this.
+#[derive(Error, Debug)]
+pub enum MareError {
+    /// Artifact loading / PJRT compilation / execution failures.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Artifact ABI mismatch against artifacts/manifest.json.
+    #[error("artifact ABI mismatch for `{entry}`: {detail}")]
+    AbiMismatch { entry: String, detail: String },
+
+    /// Container engine failures (unknown image, bad mount, tool error).
+    #[error("container: {0}")]
+    Container(String),
+
+    /// Mini-shell parse / execution errors inside a container.
+    #[error("shell: {0}")]
+    Shell(String),
+
+    /// Unknown tool in an image's tool table.
+    #[error("tool `{0}` not found in image `{1}`")]
+    ToolNotFound(String, String),
+
+    /// Storage backend errors (missing object, capacity, bad range).
+    #[error("storage: {0}")]
+    Storage(String),
+
+    /// Scheduler / cluster errors.
+    #[error("cluster: {0}")]
+    Cluster(String),
+
+    /// Dataset / plan errors (empty lineage, bad partition count).
+    #[error("dataset: {0}")]
+    Dataset(String),
+
+    /// Data-format parse errors (SDF / FASTQ / SAM / VCF).
+    #[error("format {format}: {detail}")]
+    Format { format: &'static str, detail: String },
+
+    /// Configuration errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse / shape errors (util::json).
+    #[error("json: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for MareError {
+    fn from(e: xla::Error) -> Self {
+        MareError::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, MareError>;

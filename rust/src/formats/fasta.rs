@@ -1,0 +1,108 @@
+//! FASTA reference genomes + the `.dict` sequence dictionary
+//! (the `/ref/human_g1k_v37.{fasta,dict}` files baked into the paper's
+//! alignment image).
+
+use crate::error::{MareError, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Contig {
+    pub name: String,
+    pub seq: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Reference {
+    pub contigs: Vec<Contig>,
+}
+
+impl Reference {
+    pub fn parse(text: &str) -> Result<Reference> {
+        let mut contigs: Vec<Contig> = Vec::new();
+        for line in text.lines() {
+            if let Some(name) = line.strip_prefix('>') {
+                contigs.push(Contig {
+                    name: name.split_whitespace().next().unwrap_or("").to_string(),
+                    seq: Vec::new(),
+                });
+            } else if let Some(c) = contigs.last_mut() {
+                c.seq.extend(line.trim().bytes());
+            } else if !line.trim().is_empty() {
+                return Err(MareError::Format {
+                    format: "fasta",
+                    detail: "sequence before first header".into(),
+                });
+            }
+        }
+        Ok(Reference { contigs })
+    }
+
+    pub fn to_fasta(&self) -> String {
+        let mut out = String::new();
+        for c in &self.contigs {
+            out.push('>');
+            out.push_str(&c.name);
+            out.push('\n');
+            for chunk in c.seq.chunks(70) {
+                out.push_str(std::str::from_utf8(chunk).unwrap_or(""));
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// `.dict` sequence dictionary (SAM-header style, what `cat dict sam`
+    /// prepends in Listing 3).
+    pub fn to_dict(&self) -> String {
+        let mut out = String::from("@HD\tVN:1.6\n");
+        for c in &self.contigs {
+            out.push_str(&format!("@SQ\tSN:{}\tLN:{}\n", c.name, c.seq.len()));
+        }
+        out
+    }
+
+    pub fn contig(&self, name: &str) -> Option<&Contig> {
+        self.contigs.iter().find(|c| c.name == name)
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.contigs.iter().map(|c| c.seq.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let r = Reference {
+            contigs: vec![
+                Contig { name: "chr1".into(), seq: b"ACGTACGTAC".repeat(20) },
+                Contig { name: "chr2".into(), seq: b"GGGCCC".to_vec() },
+            ],
+        };
+        let parsed = Reference::parse(&r.to_fasta()).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.total_len(), 206);
+    }
+
+    #[test]
+    fn dict_has_all_contigs() {
+        let r = Reference {
+            contigs: vec![Contig { name: "chr9".into(), seq: vec![b'A'; 42] }],
+        };
+        let d = r.to_dict();
+        assert!(d.contains("@SQ\tSN:chr9\tLN:42"), "{d}");
+    }
+
+    #[test]
+    fn header_with_description() {
+        let r = Reference::parse(">chr1 homo sapiens\nACGT\n").unwrap();
+        assert_eq!(r.contigs[0].name, "chr1");
+    }
+
+    #[test]
+    fn rejects_headerless() {
+        assert!(Reference::parse("ACGT\n").is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! FASTQ short reads (interleaved, as the paper ingests from 1KGP).
+
+use crate::error::{MareError, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct FastqRead {
+    pub id: String,
+    pub seq: Vec<u8>,
+    pub qual: Vec<u8>,
+}
+
+impl FastqRead {
+    pub fn to_fastq(&self) -> String {
+        format!(
+            "@{}\n{}\n+\n{}\n",
+            self.id,
+            String::from_utf8_lossy(&self.seq),
+            String::from_utf8_lossy(&self.qual)
+        )
+    }
+}
+
+/// Parse a FASTQ chunk (4 lines per read).
+pub fn parse_many(text: &str) -> Result<Vec<FastqRead>> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::with_capacity(lines.len() / 4);
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim().is_empty() {
+            i += 1;
+            continue;
+        }
+        if i + 3 >= lines.len() {
+            return Err(err(format!("truncated read at line {i}")));
+        }
+        let id = lines[i]
+            .strip_prefix('@')
+            .ok_or_else(|| err(format!("expected @ header, got `{}`", lines[i])))?;
+        if !lines[i + 2].starts_with('+') {
+            return Err(err(format!("expected + separator at line {}", i + 2)));
+        }
+        let seq = lines[i + 1].trim().as_bytes().to_vec();
+        let qual = lines[i + 3].trim().as_bytes().to_vec();
+        if seq.len() != qual.len() {
+            return Err(err(format!("seq/qual length mismatch for `{id}`")));
+        }
+        out.push(FastqRead { id: id.to_string(), seq, qual });
+        i += 4;
+    }
+    Ok(out)
+}
+
+pub fn write_many(reads: &[FastqRead]) -> String {
+    reads.iter().map(FastqRead::to_fastq).collect()
+}
+
+fn err(detail: String) -> MareError {
+    MareError::Format { format: "fastq", detail }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let reads = vec![
+            FastqRead { id: "r1/1".into(), seq: b"ACGT".to_vec(), qual: b"IIII".to_vec() },
+            FastqRead { id: "r1/2".into(), seq: b"GGCC".to_vec(), qual: b"HHHH".to_vec() },
+        ];
+        let text = write_many(&reads);
+        assert_eq!(parse_many(&text).unwrap(), reads);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_many("@r1\nACGT\n+\n").is_err()); // truncated
+        assert!(parse_many("r1\nACGT\n+\nIIII\n").is_err()); // no @
+        assert!(parse_many("@r1\nACGT\n+\nII\n").is_err()); // qual mismatch
+    }
+}

@@ -1,0 +1,13 @@
+//! Bioinformatics file formats the pipelines move through containers:
+//! SDF (molecules), FASTA (+ .dict) (reference genomes), FASTQ (reads),
+//! SAM (alignments), VCF (variant calls). Small, real parsers/writers —
+//! the mount-point round-trips in the paper's listings depend on them.
+
+pub mod fasta;
+pub mod fastq;
+pub mod sam;
+pub mod sdf;
+pub mod vcf;
+
+/// SDF record separator used throughout the paper (Listing 2).
+pub const SDF_SEPARATOR: &str = "\n$$$$\n";

@@ -1,0 +1,126 @@
+//! SAM alignment records (the text format the paper converts to so the
+//! chromosome id is parseable for `repartitionBy` — Listing 3).
+
+use crate::error::{MareError, Result};
+
+pub const FLAG_UNMAPPED: u16 = 0x4;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamRecord {
+    pub qname: String,
+    pub flag: u16,
+    /// Reference (chromosome) name, `*` if unmapped.
+    pub rname: String,
+    /// 1-based leftmost position, 0 if unmapped.
+    pub pos: u64,
+    pub mapq: u8,
+    pub cigar: String,
+    pub seq: Vec<u8>,
+    pub qual: Vec<u8>,
+}
+
+impl SamRecord {
+    pub fn is_mapped(&self) -> bool {
+        self.flag & FLAG_UNMAPPED == 0 && self.rname != "*"
+    }
+
+    pub fn parse(line: &str) -> Result<SamRecord> {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() < 11 {
+            return Err(err(format!("{} fields, want >= 11: `{line}`", f.len())));
+        }
+        Ok(SamRecord {
+            qname: f[0].to_string(),
+            flag: f[1].parse().map_err(|_| err(format!("bad flag `{}`", f[1])))?,
+            rname: f[2].to_string(),
+            pos: f[3].parse().map_err(|_| err(format!("bad pos `{}`", f[3])))?,
+            mapq: f[4].parse().map_err(|_| err(format!("bad mapq `{}`", f[4])))?,
+            cigar: f[5].to_string(),
+            seq: f[9].as_bytes().to_vec(),
+            qual: f[10].as_bytes().to_vec(),
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t*\t0\t0\t{}\t{}",
+            self.qname,
+            self.flag,
+            self.rname,
+            self.pos,
+            self.mapq,
+            self.cigar,
+            String::from_utf8_lossy(&self.seq),
+            String::from_utf8_lossy(&self.qual),
+        )
+    }
+}
+
+/// Parse SAM text, skipping header (@) lines.
+pub fn parse_many(text: &str) -> Result<Vec<SamRecord>> {
+    text.lines()
+        .filter(|l| !l.starts_with('@') && !l.trim().is_empty())
+        .map(SamRecord::parse)
+        .collect()
+}
+
+/// The chromosome id of one SAM line — the paper's `parseChromosomeId`
+/// keyBy function (Listing 3, line 12).
+pub fn parse_chromosome_id(sam_line: &str) -> String {
+    sam_line.split('\t').nth(2).unwrap_or("*").to_string()
+}
+
+fn err(detail: String) -> MareError {
+    MareError::Format { format: "sam", detail }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> SamRecord {
+        SamRecord {
+            qname: "read7".into(),
+            flag: 0,
+            rname: "chr2".into(),
+            pos: 12345,
+            mapq: 60,
+            cigar: "100M".into(),
+            seq: b"ACGT".to_vec(),
+            qual: b"IIII".to_vec(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let line = rec().to_line();
+        let parsed = SamRecord::parse(&line).unwrap();
+        assert_eq!(parsed, rec());
+        assert!(parsed.is_mapped());
+    }
+
+    #[test]
+    fn chromosome_key_fn() {
+        assert_eq!(parse_chromosome_id(&rec().to_line()), "chr2");
+        assert_eq!(parse_chromosome_id("garbage"), "*");
+    }
+
+    #[test]
+    fn header_lines_skipped() {
+        let text = format!("@HD\tVN:1.6\n@SQ\tSN:chr2\tLN:100\n{}\n", rec().to_line());
+        let recs = parse_many(&text).unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn unmapped_flag() {
+        let mut r = rec();
+        r.flag = FLAG_UNMAPPED;
+        assert!(!r.is_mapped());
+    }
+
+    #[test]
+    fn rejects_short_lines() {
+        assert!(SamRecord::parse("a\tb\tc").is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! Structure-Data File (SDF) molecules — the VS pipeline's currency.
+//!
+//! One record = molfile block (header, counts, atoms, `M  END`) followed
+//! by `> <tag>` data items. Records are separated by `$$$$` lines; MaRe
+//! mounts them with the `"\n$$$$\n"` separator exactly as Listing 2.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Atom {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub element: String,
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Molecule {
+    pub name: String,
+    pub atoms: Vec<Atom>,
+    pub tags: BTreeMap<String, String>,
+}
+
+impl Molecule {
+    /// Parse one SDF record (no trailing `$$$$`).
+    pub fn parse(record: &str) -> Result<Molecule> {
+        let lines: Vec<&str> = record.lines().collect();
+        if lines.len() < 4 {
+            return Err(fmt_err(format!("record too short: {} lines", lines.len())));
+        }
+        let name = lines[0].trim().to_string();
+        // counts line: aaabbb... (atom count in cols 0-2) — we wrote it,
+        // we parse it leniently (whitespace split).
+        let counts = lines[3];
+        let natoms: usize = counts
+            .split_whitespace()
+            .next()
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| fmt_err(format!("bad counts line `{counts}`")))?;
+        if lines.len() < 4 + natoms {
+            return Err(fmt_err(format!("{natoms} atoms declared, record truncated")));
+        }
+        let mut atoms = Vec::with_capacity(natoms);
+        for line in &lines[4..4 + natoms] {
+            // no-collect, fast-float parse: atom lines are half the
+            // bytes of an SDF and std f32 parsing dominated the profile
+            let mut it = line.split_ascii_whitespace();
+            let (Some(xs), Some(ys), Some(zs), Some(el)) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                return Err(fmt_err(format!("bad atom line `{line}`")));
+            };
+            atoms.push(Atom {
+                x: parse_f32(xs).ok_or_else(|| fmt_err(format!("bad x in `{line}`")))?,
+                y: parse_f32(ys).ok_or_else(|| fmt_err(format!("bad y in `{line}`")))?,
+                z: parse_f32(zs).ok_or_else(|| fmt_err(format!("bad z in `{line}`")))?,
+                element: el.to_string(),
+            });
+        }
+        // data items after "M  END"
+        let mut tags = BTreeMap::new();
+        let mut i = 4 + natoms;
+        while i < lines.len() {
+            let line = lines[i].trim();
+            if let Some(tag) = line.strip_prefix("> <").and_then(|l| l.strip_suffix('>')) {
+                let mut value = String::new();
+                i += 1;
+                while i < lines.len() && !lines[i].trim().is_empty() {
+                    if !value.is_empty() {
+                        value.push('\n');
+                    }
+                    value.push_str(lines[i].trim_end());
+                    i += 1;
+                }
+                tags.insert(tag.to_string(), value);
+            }
+            i += 1;
+        }
+        Ok(Molecule { name, atoms, tags })
+    }
+
+    /// Serialize back to one SDF record (no trailing `$$$$`).
+    pub fn to_sdf(&self) -> String {
+        // hand-rolled atom-line rendering: `{:>10.4}` goes through the
+        // exact (Dragon) float formatter and dominated the whole VS
+        // pipeline's L3 profile (EXPERIMENTS.md §Perf); fixed-point
+        // rendering of the already-4-decimal coordinates is ~10x faster
+        let mut out = String::with_capacity(64 + self.atoms.len() * 70);
+        out.push_str(&self.name);
+        out.push('\n');
+        out.push_str("  MaRe-sim\n\n"); // program + comment lines
+        out.push_str(&format!("{:>3}{:>3}  0  0  0  0  0  0  0  0999 V2000\n",
+            self.atoms.len(), 0));
+        for a in &self.atoms {
+            push_f4_w10(&mut out, a.x);
+            push_f4_w10(&mut out, a.y);
+            push_f4_w10(&mut out, a.z);
+            out.push(' ');
+            out.push_str(&a.element);
+            for _ in a.element.len()..3 {
+                out.push(' ');
+            }
+            out.push_str(" 0  0  0  0  0  0  0  0  0  0  0  0\n");
+        }
+        out.push_str("M  END\n");
+        for (tag, value) in &self.tags {
+            out.push_str(&format!("> <{tag}>\n{value}\n\n"));
+        }
+        out.trim_end().to_string()
+    }
+
+    /// Numeric tag accessor (e.g. the FRED score).
+    pub fn tag_f32(&self, tag: &str) -> Option<f32> {
+        self.tags.get(tag).and_then(|v| v.trim().parse().ok())
+    }
+}
+
+/// Fast decimal f32 parse for the common SDF shape `[-]intpart[.frac]`
+/// with few digits; falls back to `str::parse` for anything else
+/// (exponents, long mantissas, inf/nan).
+pub fn parse_f32(s: &str) -> Option<f32> {
+    let b = s.as_bytes();
+    if b.is_empty() {
+        return None;
+    }
+    let (neg, mut i) = match b[0] {
+        b'-' => (true, 1),
+        b'+' => (false, 1),
+        _ => (false, 0),
+    };
+    let mut mant: u64 = 0;
+    let mut digits = 0u32;
+    let mut frac_digits = 0i32;
+    let mut seen_dot = false;
+    while i < b.len() {
+        match b[i] {
+            c @ b'0'..=b'9' => {
+                mant = mant * 10 + (c - b'0') as u64;
+                digits += 1;
+                if seen_dot {
+                    frac_digits += 1;
+                }
+            }
+            b'.' if !seen_dot => seen_dot = true,
+            // exponent / hex / inf / nan: punt to std
+            _ => return s.parse().ok(),
+        }
+        i += 1;
+    }
+    if digits == 0 || digits > 15 {
+        return s.parse().ok();
+    }
+    // exact in f64 for <=15 digits; one rounding to f32 like std
+    const POW10: [f64; 16] = [
+        1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14,
+        1e15,
+    ];
+    let v = mant as f64 / POW10[frac_digits as usize];
+    Some(if neg { -v as f32 } else { v as f32 })
+}
+
+/// Fixed-point `{:>10.4}` equivalent: render `v` with exactly 4
+/// decimals, right-aligned to width 10, without invoking the generic
+/// exact float formatter. Matches `format!("{:>10.4}", v)` for every
+/// value the SDF path produces (|v| < 10^5, finite).
+pub fn push_f4_w10(out: &mut String, v: f32) {
+    debug_assert!(v.is_finite());
+    let neg = v.is_sign_negative(); // std keeps the sign even for -0.0000
+    // ties-to-even to match std's exact formatter (e.g. 6189.28125
+    // renders as 6189.2812, not .2813)
+    let n = (f64::from(v).abs() * 1e4).round_ties_even() as u64;
+    let (int, frac) = (n / 10_000, n % 10_000);
+
+    // digits, rendered backwards into a stack buffer
+    let mut buf = [0u8; 24];
+    let mut len = 0;
+    let mut f = frac;
+    for _ in 0..4 {
+        buf[len] = b'0' + (f % 10) as u8;
+        f /= 10;
+        len += 1;
+    }
+    buf[len] = b'.';
+    len += 1;
+    let mut i = int;
+    loop {
+        buf[len] = b'0' + (i % 10) as u8;
+        i /= 10;
+        len += 1;
+        if i == 0 {
+            break;
+        }
+    }
+    if neg {
+        buf[len] = b'-';
+        len += 1;
+    }
+    for _ in len..10 {
+        out.push(' ');
+    }
+    for k in (0..len).rev() {
+        out.push(buf[k] as char);
+    }
+}
+
+/// Parse a multi-record SDF chunk (records separated by `$$$$` lines).
+pub fn parse_many(text: &str) -> Result<Vec<Molecule>> {
+    let mut out = Vec::new();
+    for rec in text.split("$$$$") {
+        if rec.trim().is_empty() {
+            continue;
+        }
+        out.push(Molecule::parse(rec.trim_matches('\n'))?);
+    }
+    Ok(out)
+}
+
+/// Serialize molecules with `$$$$` separators (paper mount-point format).
+pub fn write_many(mols: &[Molecule]) -> String {
+    let mut out = String::new();
+    for m in mols {
+        out.push_str(&m.to_sdf());
+        out.push_str("\n$$$$\n");
+    }
+    out
+}
+
+fn fmt_err(detail: String) -> MareError {
+    MareError::Format { format: "sdf", detail }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_point_formatter_matches_std() {
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..5000 {
+            let v = (rng.range_f32(-9999.0, 9999.0) * 1e4).round() / 1e4;
+            let mut fast = String::new();
+            push_f4_w10(&mut fast, v);
+            assert_eq!(fast, format!("{v:>10.4}"), "v={v}");
+        }
+        for v in [0.0f32, -0.0, 0.00004, -0.00004, 12345.4999] {
+            let mut fast = String::new();
+            push_f4_w10(&mut fast, v);
+            assert_eq!(fast, format!("{v:>10.4}"), "v={v}");
+        }
+    }
+
+    fn mol(name: &str) -> Molecule {
+        Molecule {
+            name: name.into(),
+            atoms: vec![
+                Atom { x: 0.0, y: 0.0, z: 0.0, element: "C".into() },
+                Atom { x: 1.5, y: 0.0, z: 0.0, element: "N".into() },
+            ],
+            tags: BTreeMap::from([("ZINC_ID".to_string(), name.to_string())]),
+        }
+    }
+
+    #[test]
+    fn roundtrip_single() {
+        let m = mol("ZINC001");
+        let parsed = Molecule::parse(&m.to_sdf()).unwrap();
+        assert_eq!(parsed.name, "ZINC001");
+        assert_eq!(parsed.atoms.len(), 2);
+        assert_eq!(parsed.atoms[1].element, "N");
+        assert!((parsed.atoms[1].x - 1.5).abs() < 1e-4);
+        assert_eq!(parsed.tags["ZINC_ID"], "ZINC001");
+    }
+
+    #[test]
+    fn roundtrip_many() {
+        let mols = vec![mol("A"), mol("B"), mol("C")];
+        let text = write_many(&mols);
+        let parsed = parse_many(&text).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[2].name, "C");
+        // stable under a second round-trip
+        assert_eq!(write_many(&parsed), text);
+    }
+
+    #[test]
+    fn score_tag_accessor() {
+        let mut m = mol("X");
+        m.tags.insert("FRED Chemgauss4 score".into(), "-42.25".into());
+        assert_eq!(m.tag_f32("FRED Chemgauss4 score"), Some(-42.25));
+        assert_eq!(m.tag_f32("missing"), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Molecule::parse("x").is_err());
+        assert!(Molecule::parse("name\n\n\nnot-a-count line\n").is_err());
+    }
+
+    #[test]
+    fn multiline_tag_value() {
+        let text = "m\n  p\n\n  1  0  0  0  0  0  0  0  0  0999 V2000\n    0.0 0.0 0.0 C 0\nM  END\n> <NOTES>\nline1\nline2\n\n";
+        let m = Molecule::parse(text).unwrap();
+        assert_eq!(m.tags["NOTES"], "line1\nline2");
+    }
+}

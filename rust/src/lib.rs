@@ -1,0 +1,41 @@
+//! # MaRe — MapReduce-oriented processing with application containers
+//!
+//! A from-scratch reproduction of *"MaRe: a MapReduce-Oriented Framework
+//! for Processing Big Data with Application Containers"* (Capuccini,
+//! Dahlö, Toor, Spjuth, 2018) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the MaRe programming model ([`mare`]) on top of
+//!   a Spark-like substrate built here: a partitioned, lineage-tracked
+//!   dataset ([`dataset`]), a DAG/stage compiler and locality-aware task
+//!   scheduler over a simulated cluster ([`cluster`]), a Docker-like
+//!   container engine with an in-memory filesystem and a mini shell
+//!   ([`container`]), pluggable storage backends modelling HDFS / Swift /
+//!   S3 ([`storage`]), and an execution-driven discrete-event simulation
+//!   of cluster time ([`simtime`]).
+//! * **L2/L1 (build time)** — JAX compute graphs calling Pallas kernels,
+//!   AOT-lowered to HLO text (`python/compile/`); executed on the request
+//!   path through the PJRT runtime ([`runtime`]). Python never runs at
+//!   request time.
+//!
+//! The paper's evaluation pipelines (virtual screening, SNP calling, GC
+//! count) live in [`workloads`]; every figure in the paper is regenerated
+//! by a bench in `rust/benches/` (see DESIGN.md §5).
+
+pub mod baseline;
+pub mod cluster;
+pub mod config;
+pub mod container;
+pub mod dataset;
+pub mod metrics;
+pub mod error;
+pub mod formats;
+pub mod mare;
+pub mod repl;
+pub mod runtime;
+pub mod simtime;
+pub mod storage;
+pub mod tools;
+pub mod util;
+pub mod workloads;
+
+pub use error::{MareError, Result};

@@ -1,0 +1,194 @@
+//! `mare` CLI — leader entrypoint.
+//!
+//! ```text
+//! mare run  --workload gc|vs|snp --storage hdfs|swift|s3|local
+//!           [--workers N] [--vcpus M] [--scale S] [--seed K]
+//!           [--reduce-depth D] [--config file.json] [--artifacts DIR]
+//! mare plan --workload gc|vs|snp ...        # print the physical plan
+//! mare inspect [--artifacts DIR]            # artifacts + stock images
+//! mare help
+//! ```
+
+use mare::config::{RunConfigFile, Workload};
+use mare::error::Result;
+use mare::util::cli::Args;
+
+const HELP: &str = "\
+mare — MapReduce-oriented processing with application containers
+(rust + JAX + Pallas reproduction of Capuccini et al., 2018)
+
+USAGE:
+  mare run   [options]   run a workload end-to-end, print the report
+  mare plan  [options]   print the compiled physical plan (stages/shuffles)
+  mare shell [options]   interactive session (the paper's Zeppelin workflow)
+  mare inspect           show AOT artifacts and stock container images
+  mare help              this text
+
+OPTIONS (run/plan):
+  --workload gc|vs|snp    pipeline to run              [gc]
+  --storage hdfs|swift|s3|local   ingestion backend    [hdfs]
+  --workers N             cluster workers              [16]
+  --vcpus M               vCPUs per worker             [8]
+  --scale S               lines / molecules / chromosome-bp   [1000]
+  --seed K                workload + cluster seed      [42]
+  --reduce-depth D        tree-reduce depth K          [2]
+  --config FILE           JSON config (flags override it)
+  --artifacts DIR         AOT artifact dir             [./artifacts]
+";
+
+fn main() -> std::process::ExitCode {
+    mare::util::logging::init(log::LevelFilter::Info);
+    match dispatch() {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("shell") => cmd_shell(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand `{other}`\n{HELP}");
+            Err(mare::error::MareError::Config(format!("unknown subcommand `{other}`")))
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = RunConfigFile::from_args(args)?;
+    log::info!(
+        "run: workload={:?} storage={} cluster={}x{} scale={}",
+        cfg.workload,
+        cfg.backend.name(),
+        cfg.cluster.workers,
+        cfg.cluster.vcpus_per_worker,
+        cfg.scale
+    );
+    let res = mare::workloads::driver::run(&cfg)?;
+    println!("== ingestion ==");
+    println!(
+        "backend={} bytes={} readers={} virtual={}",
+        cfg.backend.name(),
+        res.ingest.bytes,
+        res.ingest.readers,
+        res.ingest.duration
+    );
+    println!("== run ==");
+    print!("{}", res.report.summary());
+    println!("== result ==");
+    println!("{}", res.digest);
+    println!("(real wall-clock: {:?})", res.report.real);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = RunConfigFile::from_args(args)?;
+    // a small dataset is enough to compile the plan; nothing executes
+    let cluster = mare::workloads::make_cluster(cfg.cluster.clone(), None, None)?;
+    let ds = match cfg.workload {
+        Workload::Gc => mare::dataset::Dataset::parallelize_text(
+            &mare::workloads::gc::genome_text(cfg.seed, 16, 80),
+            "\n",
+            cfg.cluster.workers * 2,
+        ),
+        Workload::Vs => mare::dataset::Dataset::parallelize_text(
+            &mare::workloads::genlib::library_sdf(cfg.seed, 8),
+            mare::workloads::vs::SDF_SEP,
+            cfg.cluster.workers * 2,
+        ),
+        Workload::Snp => mare::dataset::Dataset::parallelize_text(
+            "@r/1\nACGT\n+\nIIII",
+            "\x00",
+            cfg.cluster.workers * 2,
+        ),
+    };
+    let pipeline = match cfg.workload {
+        Workload::Gc => mare::workloads::gc::pipeline(cluster, ds),
+        Workload::Vs => mare::workloads::vs::pipeline(cluster, ds, cfg.reduce_depth),
+        Workload::Snp => mare::workloads::snp::pipeline(cluster, ds, cfg.cluster.workers),
+    };
+    let pp = mare::cluster::compile(pipeline.dataset().plan());
+    println!("lineage: {}", pipeline.dataset().describe());
+    println!("{}", pp.describe());
+    Ok(())
+}
+
+fn cmd_shell(args: &Args) -> Result<()> {
+    use std::io::{BufRead, Write};
+    let cfg = RunConfigFile::from_args(args)?;
+    // runtime is optional: POSIX-only sessions work without artifacts
+    let runtime_dir = std::path::Path::new(&cfg.artifacts)
+        .join("manifest.json")
+        .exists()
+        .then_some(cfg.artifacts.as_str());
+    let mut session = mare::repl::Session::with_config(cfg.cluster.clone(), runtime_dir)?;
+    println!("mare interactive shell — `help` for commands, `quit` to leave");
+    println!("{}", session.status());
+
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        print!("mare> ");
+        std::io::stdout().flush().ok();
+        line.clear();
+        if stdin.lock().read_line(&mut line)? == 0 {
+            break; // EOF
+        }
+        match session.eval(&line) {
+            Ok(out) if out.is_empty() => {}
+            Ok(out) => println!("{out}"),
+            Err(e) if mare::repl::is_quit(&e) => break,
+            Err(e) => println!("error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.flag_or("artifacts", &mare::workloads::artifact_dir());
+    println!("== artifacts ({dir}) ==");
+    match mare::runtime::Manifest::load(std::path::Path::new(&dir)) {
+        Ok(m) => {
+            for (name, e) in &m.entries {
+                let ins: Vec<String> =
+                    e.inputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+                let outs: Vec<String> =
+                    e.outputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+                println!(
+                    "  {:<16} {} -> {}   ({})",
+                    name,
+                    ins.join(", "),
+                    outs.join(", "),
+                    e.file
+                );
+            }
+        }
+        Err(e) => println!("  (unavailable: {e})"),
+    }
+    println!("== stock images ==");
+    let reg = mare::tools::images::stock_registry(None);
+    for name in reg.names() {
+        let img = reg.pull(name)?;
+        let mut tools = img.tool_names();
+        tools.truncate(8);
+        println!(
+            "  {:<36} {:>5} MiB, tools: {}, ...",
+            img.name,
+            img.size_bytes >> 20,
+            tools.join(", ")
+        );
+    }
+    println!("  mcapuccini/alignment:latest          (baked per-run with the reference genome)");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Cost-model inference for containerized commands.
+//!
+//! The user writes a shell command (Listings 1–3); the DES needs a
+//! virtual-time model for it. We scan the command for the tools it
+//! invokes and sum their calibrated models (`tools/*::cost_model`,
+//! calibrated against the paper's reported wall-clocks); a pipeline's
+//! slot occupancy is the max `cpus` over its parts (`bwa -t 8` ⇒ 8).
+
+use crate::simtime::{CostModel, Duration};
+use crate::tools::{bwa::Bwa, fred::Fred, gatk::Gatk, sdsorter::SdSorter, vcf_concat::VcfConcat};
+
+/// POSIX text tools: cheap, IO-bound.
+fn posix_model() -> CostModel {
+    CostModel {
+        fixed: Duration::seconds(0.01),
+        secs_per_byte: 1.5e-9,
+        secs_per_record: 0.0,
+        cpus: 1,
+    }
+}
+
+/// `-t N` / `--threads N` style thread count, defaulting to 1.
+fn threads_of(tokens: &[&str], flag: &str) -> u32 {
+    tokens
+        .iter()
+        .position(|t| *t == flag)
+        .and_then(|i| tokens.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Infer the cost model of a full container command (may be a pipeline
+/// of several tools over several lines).
+pub fn infer(command: &str) -> CostModel {
+    let tokens: Vec<&str> = command.split_whitespace().collect();
+    let mut total = CostModel::free();
+    let mut cpus = 1u32;
+    let mut matched = false;
+
+    for (i, t) in tokens.iter().enumerate() {
+        let model = match *t {
+            "fred" => Some(Fred::cost_model()),
+            "sdsorter" => Some(SdSorter::cost_model()),
+            "bwa" => Some(Bwa::cost_model(threads_of(&tokens[i..], "-t"))),
+            "gatk" => {
+                // HaplotypeCaller dominates; the helper subcommands are
+                // folded into its fixed cost
+                match tokens.get(i + 1).copied() {
+                    Some("HaplotypeCallerSpark") | Some("HaplotypeCaller") => {
+                        Some(Gatk::cost_model(8))
+                    }
+                    _ => Some(CostModel {
+                        fixed: Duration::seconds(6.0), // JVM startup
+                        secs_per_byte: 4e-9,
+                        secs_per_record: 0.0,
+                        cpus: 1,
+                    }),
+                }
+            }
+            "vcf-concat" => Some(VcfConcat::cost_model()),
+            "grep" | "awk" | "wc" | "sort" | "cat" | "gzip" | "gunzip" | "zcat"
+            | "samtools" | "head" | "tail" | "uniq" | "tr" | "sed" | "cut" | "echo"
+            | "tee" => Some(posix_model()),
+            _ => None,
+        };
+        if let Some(m) = model {
+            matched = true;
+            total.fixed += m.fixed;
+            total.secs_per_byte += m.secs_per_byte;
+            total.secs_per_record += m.secs_per_record;
+            cpus = cpus.max(m.cpus);
+        }
+    }
+
+    if !matched {
+        total = posix_model();
+    }
+    total.cpus = cpus;
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listing1_commands_are_posix_cheap() {
+        let m = infer("grep -o '[GC]' /dna | wc -l > /count");
+        assert_eq!(m.cpus, 1);
+        assert!(m.fixed < Duration::seconds(0.1));
+        assert!(m.secs_per_record == 0.0);
+    }
+
+    #[test]
+    fn listing2_fred_dominates() {
+        let m = infer("fred -receptor /var/openeye/hiv1_protease.oeb -dbase /in.sdf");
+        assert!(m.secs_per_record >= 0.5); // ~0.6 core-s per molecule
+        assert_eq!(m.cpus, 1);
+    }
+
+    #[test]
+    fn listing3_bwa_parses_threads() {
+        let m = infer("bwa mem -t 8 -p /ref/x.fasta /in.fastq | samtools view > /out.sam");
+        assert_eq!(m.cpus, 8);
+    }
+
+    #[test]
+    fn listing3_gatk_haplotypecaller_is_multithreaded() {
+        let m = infer(
+            "gatk AddOrReplaceReadGroups --INPUT=/a --OUTPUT=/b\n\
+             gatk BuildBamIndex --INPUT=/b\n\
+             gatk HaplotypeCallerSpark -R /ref -I /b -O /out/x.vcf\n\
+             gzip /out/*",
+        );
+        assert_eq!(m.cpus, 8);
+        // helper JVMs + HC fixed costs accumulate
+        assert!(m.fixed >= Duration::seconds(12.0));
+    }
+
+    #[test]
+    fn unknown_commands_default_posix() {
+        let m = infer("./my-custom-binary --do-things");
+        assert_eq!(m, posix_model());
+    }
+}

@@ -1,0 +1,360 @@
+//! The MaRe programming model — the paper's contribution.
+//!
+//! A [`MaRe`] wraps a [`Dataset`] (the RDD analogue) and exposes the
+//! three primitives of §1.2.1, each taking a containerized command:
+//!
+//! * [`MaRe::map`] — apply a command to every partition (Figure 1; one
+//!   fused stage, no shuffle),
+//! * [`MaRe::reduce`] — tree-aggregate all partitions into one with a
+//!   user-configurable depth K, default 2 (Figure 2; K shuffles),
+//! * [`MaRe::repartition_by`] — keyBy + hash partitioner regrouping.
+//!
+//! Everything is lazy: primitives extend lineage; [`MaRe::run`] /
+//! [`MaRe::collect_text`] hand the lineage to the [`Cluster`]. Listing 1
+//! (GC count) in this API:
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use mare::mare::{MaRe, MapSpec, ReduceSpec, MountPoint};
+//! # use mare::cluster::{Cluster, ClusterConfig};
+//! # use mare::container::Registry;
+//! # use mare::dataset::Dataset;
+//! # let mut reg = Registry::new();
+//! # reg.push(mare::tools::images::ubuntu());
+//! # let cluster = Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(2, 4)));
+//! # let genome = Dataset::parallelize_text("GATTACA", "\n", 2);
+//! let gc_count = MaRe::new(cluster, genome)
+//!     .map(MapSpec {
+//!         input_mount: MountPoint::text("/dna"),
+//!         output_mount: MountPoint::text("/count"),
+//!         image: "ubuntu".into(),
+//!         command: "grep -o '[GC]' /dna | wc -l > /count".into(),
+//!     })
+//!     .reduce(ReduceSpec {
+//!         input_mount: MountPoint::text("/counts"),
+//!         output_mount: MountPoint::text("/sum"),
+//!         image: "ubuntu".into(),
+//!         command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+//!         depth: 2,
+//!     })
+//!     .collect_text()
+//!     .unwrap();
+//! ```
+
+pub mod cost;
+pub mod mount;
+pub mod op;
+
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, RunOutput};
+use crate::dataset::{Dataset, Record};
+use crate::error::Result;
+
+pub use mount::MountPoint;
+pub use op::ContainerOp;
+
+/// Default tree-reduce depth (§1.2.2: "By default MaRe sets K to 2").
+pub const DEFAULT_REDUCE_DEPTH: usize = 2;
+
+/// A `map` primitive invocation (paper's named parameters).
+#[derive(Debug, Clone)]
+pub struct MapSpec {
+    pub input_mount: MountPoint,
+    pub output_mount: MountPoint,
+    pub image: String,
+    pub command: String,
+}
+
+/// A `reduce` primitive invocation. The command MUST be associative and
+/// commutative and should shrink its input (§1.2.2).
+#[derive(Debug, Clone)]
+pub struct ReduceSpec {
+    pub input_mount: MountPoint,
+    pub output_mount: MountPoint,
+    pub image: String,
+    pub command: String,
+    /// Tree depth K.
+    pub depth: usize,
+}
+
+impl ReduceSpec {
+    pub fn with_default_depth(
+        input_mount: MountPoint,
+        output_mount: MountPoint,
+        image: impl Into<String>,
+        command: impl Into<String>,
+    ) -> Self {
+        ReduceSpec {
+            input_mount,
+            output_mount,
+            image: image.into(),
+            command: command.into(),
+            depth: DEFAULT_REDUCE_DEPTH,
+        }
+    }
+}
+
+/// The MaRe handle: a dataset + the cluster that will run it.
+#[derive(Clone)]
+pub struct MaRe {
+    cluster: Arc<Cluster>,
+    dataset: Dataset,
+    /// Mount points disk-backed instead of tmpfs (Listing 3's TMPDIR
+    /// override for chromosome-sized partitions).
+    disk_mounts: bool,
+}
+
+impl MaRe {
+    pub fn new(cluster: Arc<Cluster>, dataset: Dataset) -> Self {
+        MaRe { cluster, dataset, disk_mounts: false }
+    }
+
+    /// Write temporary mount-point data to disk instead of tmpfs.
+    pub fn with_disk_mounts(mut self, disk: bool) -> Self {
+        self.disk_mounts = disk;
+        self
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.dataset.num_partitions()
+    }
+
+    fn container_op(
+        &self,
+        input: MountPoint,
+        output: MountPoint,
+        image: &str,
+        command: &str,
+    ) -> Arc<ContainerOp> {
+        let mut op = ContainerOp::new(
+            Arc::new(self.cluster.engine()),
+            input,
+            output,
+            image,
+            command,
+        );
+        op.disk_mounts = self.disk_mounts;
+        Arc::new(op)
+    }
+
+    /// Apply a containerized command to each partition (Figure 1).
+    pub fn map(self, spec: MapSpec) -> MaRe {
+        let op = self.container_op(
+            spec.input_mount,
+            spec.output_mount,
+            &spec.image,
+            &spec.command,
+        );
+        MaRe { dataset: self.dataset.map_partitions(op), ..self }
+    }
+
+    /// Tree-aggregate all partitions into one (Figure 2).
+    ///
+    /// K levels: aggregate within partitions (mapPartitions), shrink the
+    /// partition count (repartition ⇒ shuffle), repeat; then one final
+    /// in-partition aggregation. K shuffles total.
+    pub fn reduce(self, spec: ReduceSpec) -> MaRe {
+        let k = spec.depth.max(1);
+        let mut ds = self.dataset.clone();
+        let mut parts = ds.num_partitions().max(1);
+
+        // per-level shrink factor: N^(1/K), so K levels reach 1
+        let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
+
+        for _ in 0..k {
+            let op = self.container_op(
+                spec.input_mount.clone(),
+                spec.output_mount.clone(),
+                &spec.image,
+                &spec.command,
+            );
+            ds = ds.map_partitions(op);
+            if parts == 1 {
+                break;
+            }
+            parts = parts.div_ceil(scale).max(1);
+            ds = ds.repartition(parts);
+        }
+        // final aggregation over the remaining partition(s)
+        if parts > 1 {
+            ds = ds.repartition(1);
+        }
+        let op = self.container_op(
+            spec.input_mount.clone(),
+            spec.output_mount.clone(),
+            &spec.image,
+            &spec.command,
+        );
+        ds = ds.map_partitions(op);
+
+        MaRe { dataset: ds, ..self }
+    }
+
+    /// Regroup records so those with equal keys share a partition
+    /// (keyBy + HashPartitioner, §1.2.2).
+    pub fn repartition_by(
+        self,
+        key_by: Arc<dyn Fn(&Record) -> String + Send + Sync>,
+        num_partitions: usize,
+    ) -> MaRe {
+        MaRe {
+            dataset: self.dataset.repartition_by_key(key_by, num_partitions),
+            ..self
+        }
+    }
+
+    /// Execute the lineage on the cluster.
+    pub fn run(&self) -> Result<RunOutput> {
+        self.cluster.run(&self.dataset)
+    }
+
+    /// Execute and join all text records with `\n` (driver-side collect).
+    pub fn collect_text(&self) -> Result<String> {
+        Ok(self.run()?.collect_text("\n").trim_end().to_string())
+    }
+
+    /// Execute and return all records.
+    pub fn collect(&self) -> Result<Vec<Record>> {
+        Ok(self.run()?.collect_records())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterConfig, StageOutput};
+    use crate::container::Registry;
+    use crate::tools::images;
+
+    fn cluster(workers: usize) -> Arc<Cluster> {
+        let mut reg = Registry::new();
+        reg.push(images::ubuntu());
+        Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(workers, 4)))
+    }
+
+    fn gc_spec() -> MapSpec {
+        MapSpec {
+            input_mount: MountPoint::text("/dna"),
+            output_mount: MountPoint::text("/count"),
+            image: "ubuntu".into(),
+            command: "grep -o '[GC]' /dna | wc -l > /count".into(),
+        }
+    }
+
+    fn sum_spec(depth: usize) -> ReduceSpec {
+        ReduceSpec {
+            input_mount: MountPoint::text("/counts"),
+            output_mount: MountPoint::text("/sum"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+            depth,
+        }
+    }
+
+    /// Listing 1 end-to-end: the GC count of a genome, distributed.
+    #[test]
+    fn listing1_gc_count_end_to_end() {
+        let genome = "GATTACAGGCC\nTTGGCCAA\nGCGCGCGC\nAAAA";
+        let expected = genome.chars().filter(|c| *c == 'G' || *c == 'C').count();
+
+        let ds = Dataset::parallelize_text(genome, "\n", 4);
+        let out = MaRe::new(cluster(2), ds)
+            .map(gc_spec())
+            .reduce(sum_spec(2))
+            .collect_text()
+            .unwrap();
+        assert_eq!(out, expected.to_string());
+    }
+
+    #[test]
+    fn reduce_depth_controls_shuffle_count() {
+        for k in 1..=3usize {
+            let ds = Dataset::parallelize_text(&"G\n".repeat(64), "\n", 16);
+            let m = MaRe::new(cluster(4), ds).map(gc_spec()).reduce(sum_spec(k));
+            let shuffles = m.dataset().plan().num_shuffles();
+            assert!(
+                shuffles <= k,
+                "depth {k} gave {shuffles} shuffles: {}",
+                m.dataset().describe()
+            );
+            // deeper tree, same answer
+            assert_eq!(m.collect_text().unwrap(), "64");
+        }
+    }
+
+    #[test]
+    fn reduce_always_ends_single_partition() {
+        for parts in [1usize, 2, 5, 16, 33] {
+            let ds = Dataset::parallelize_text(&"G\n".repeat(33), "\n", parts);
+            let m = MaRe::new(cluster(4), ds).map(gc_spec()).reduce(sum_spec(2));
+            let out = m.run().unwrap();
+            assert_eq!(out.partitions.len(), 1, "parts={parts}");
+            assert_eq!(out.collect_text("\n").trim(), "33", "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn repartition_by_groups_keys() {
+        // records "chrN:value"; group by chromosome, then count per
+        // partition — every partition must see exactly one chromosome
+        let recs: Vec<String> = (0..24)
+            .map(|i| format!("chr{}:r{}", i % 3, i))
+            .collect();
+        let ds = Dataset::parallelize_text(&recs.join("\n"), "\n", 8);
+        let m = MaRe::new(cluster(4), ds).repartition_by(
+            Arc::new(|r: &Record| r.as_text().unwrap().split(':').next().unwrap().into()),
+            3,
+        );
+        let out = m.run().unwrap();
+        assert_eq!(out.partitions.len(), 3);
+        let mut seen_chroms = std::collections::HashSet::new();
+        for p in &out.partitions {
+            let chroms: std::collections::HashSet<String> = p
+                .records
+                .iter()
+                .map(|r| r.as_text().unwrap().split(':').next().unwrap().to_string())
+                .collect();
+            assert!(chroms.len() <= 1, "mixed partition: {chroms:?}");
+            seen_chroms.extend(chroms);
+        }
+        assert_eq!(seen_chroms.len(), 3);
+    }
+
+    #[test]
+    fn map_generates_single_stage() {
+        let ds = Dataset::parallelize_text("G\nC", "\n", 2);
+        let m = MaRe::new(cluster(2), ds).map(gc_spec()).map(gc_spec());
+        let pp = crate::cluster::compile(m.dataset().plan());
+        assert_eq!(pp.stages.len(), 1, "maps must fuse (Figure 1)");
+        assert!(matches!(pp.stages[0].output, StageOutput::Final));
+    }
+
+    #[test]
+    fn disk_mounts_propagate_to_ops() {
+        let ds = Dataset::parallelize_text("G", "\n", 1);
+        let m = MaRe::new(cluster(1), ds).with_disk_mounts(true).map(gc_spec());
+        let pp = crate::cluster::compile(m.dataset().plan());
+        assert!(pp.stages[0].ops[0].uses_disk_mount());
+    }
+
+    #[test]
+    fn interactive_reuse_same_mare_multiple_actions() {
+        // the paper's interactivity claim: actions can be re-run and
+        // extended from the same handle (lineage is immutable)
+        let ds = Dataset::parallelize_text("GG\nCC", "\n", 2);
+        let m = MaRe::new(cluster(2), ds).map(gc_spec());
+        let a = m.clone().reduce(sum_spec(2)).collect_text().unwrap();
+        let b = m.reduce(sum_spec(1)).collect_text().unwrap();
+        assert_eq!(a, "4");
+        assert_eq!(b, "4");
+    }
+}

@@ -1,0 +1,274 @@
+//! Mount points: how partitions shuttle between RDD records and
+//! container volumes (§1.2.1).
+//!
+//! * [`MountPoint::TextFile`] — the partition's text records joined by a
+//!   (configurable) separator into ONE file; results split back on the
+//!   same separator. Default separator is `\n` ("each line is a
+//!   record"); Listing 2 uses `\n$$$$\n` for SDF.
+//! * [`MountPoint::BinaryFiles`] — each record is a DISTINCT file in a
+//!   mount *directory*; results are every file found under the output
+//!   directory.
+
+use crate::container::Vfs;
+use crate::dataset::{join_records, split_records, Record};
+use crate::error::{MareError, Result};
+
+/// A configured mount point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MountPoint {
+    TextFile { path: String, sep: String },
+    BinaryFiles { dir: String },
+    /// Stream records over the command's stdin/stdout instead of
+    /// materializing a mount file — the §1.4 future-work improvement
+    /// ("enabling data streams via standard input and output between
+    /// MaRe and containers"). Avoids tmpfs/disk staging entirely; the
+    /// command must read stdin / write stdout.
+    StdStream { sep: String },
+}
+
+impl MountPoint {
+    /// `TextFile("/dna")` — newline records.
+    pub fn text(path: impl Into<String>) -> Self {
+        MountPoint::TextFile { path: path.into(), sep: "\n".into() }
+    }
+
+    /// `TextFile("/in.sdf", "\n$$$$\n")` — custom record separator.
+    pub fn text_sep(path: impl Into<String>, sep: impl Into<String>) -> Self {
+        MountPoint::TextFile { path: path.into(), sep: sep.into() }
+    }
+
+    /// `BinaryFiles("/out")`.
+    pub fn binary(dir: impl Into<String>) -> Self {
+        MountPoint::BinaryFiles { dir: dir.into() }
+    }
+
+    /// Stream with newline records.
+    pub fn stream() -> Self {
+        MountPoint::StdStream { sep: "\n".into() }
+    }
+
+    /// Stream with a custom record separator.
+    pub fn stream_sep(sep: impl Into<String>) -> Self {
+        MountPoint::StdStream { sep: sep.into() }
+    }
+
+    pub fn is_stream(&self) -> bool {
+        matches!(self, MountPoint::StdStream { .. })
+    }
+
+    pub fn path(&self) -> &str {
+        match self {
+            MountPoint::TextFile { path, .. } => path,
+            MountPoint::BinaryFiles { dir } => dir,
+            MountPoint::StdStream { .. } => "<stdio>",
+        }
+    }
+
+    /// Bytes to stream to the command's stdin (StdStream input only).
+    pub fn stage_stdin(&self, records: &[Record]) -> Result<Option<Vec<u8>>> {
+        match self {
+            MountPoint::StdStream { sep } => {
+                let texts: Vec<String> = records
+                    .iter()
+                    .map(|r| {
+                        r.as_text().map(String::from).ok_or_else(|| {
+                            MareError::Container(
+                                "binary record in StdStream mount (use BinaryFiles)".into(),
+                            )
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(Some(join_records(&texts, sep).into_bytes()))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Records from the command's captured stdout (StdStream output only).
+    pub fn stage_stdout(&self, stdout: &[u8]) -> Result<Option<Vec<Record>>> {
+        match self {
+            MountPoint::StdStream { sep } => {
+                let text = std::str::from_utf8(stdout).map_err(|_| {
+                    MareError::Container("streamed stdout is not UTF-8".into())
+                })?;
+                Ok(Some(split_records(text, sep).into_iter().map(Record::text).collect()))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Materialize records into container input files (none for
+    /// streams — see [`Self::stage_stdin`]).
+    pub fn stage_in(&self, records: &[Record]) -> Result<Vec<(String, Vec<u8>)>> {
+        match self {
+            MountPoint::StdStream { .. } => Ok(Vec::new()),
+            MountPoint::TextFile { path, sep } => {
+                let texts: Vec<String> = records
+                    .iter()
+                    .map(|r| {
+                        r.as_text().map(String::from).ok_or_else(|| {
+                            MareError::Container(format!(
+                                "binary record `{}` in TextFile mount {path} \
+                                 (use BinaryFiles)",
+                                match r {
+                                    Record::Binary { name, .. } => name.as_str(),
+                                    _ => "?",
+                                }
+                            ))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(vec![(path.clone(), join_records(&texts, sep).into_bytes())])
+            }
+            MountPoint::BinaryFiles { dir } => {
+                let mut files = Vec::with_capacity(records.len());
+                let mut seen = std::collections::HashSet::new();
+                for (i, r) in records.iter().enumerate() {
+                    let (name, bytes) = match r {
+                        Record::Binary { name, bytes } => (basename(name), bytes.clone()),
+                        Record::Text(t) => {
+                            (format!("part-{i:05}.txt"), t.clone().into_bytes())
+                        }
+                    };
+                    // de-clash names merged from different partitions
+                    let name = if seen.insert(name.clone()) {
+                        name
+                    } else {
+                        format!("{i:05}-{name}")
+                    };
+                    files.push((format!("{dir}/{name}"), bytes));
+                }
+                Ok(files)
+            }
+        }
+    }
+
+    /// Read the tool's output back into records (streams are read from
+    /// captured stdout instead — see [`Self::stage_stdout`]).
+    pub fn stage_out(&self, fs: &mut Vfs) -> Result<Vec<Record>> {
+        match self {
+            MountPoint::StdStream { .. } => Ok(Vec::new()),
+            MountPoint::TextFile { path, sep } => {
+                if !fs.exists(path) {
+                    return Ok(vec![]); // tool produced nothing
+                }
+                let text = fs.read_string(path)?;
+                Ok(split_records(&text, sep).into_iter().map(Record::text).collect())
+            }
+            MountPoint::BinaryFiles { dir } => {
+                let files = fs.take_dir(dir)?;
+                Ok(files
+                    .into_iter()
+                    .map(|(path, bytes)| {
+                        let name = path
+                            .strip_prefix(&format!("{dir}/"))
+                            .unwrap_or(&path)
+                            .to_string();
+                        Record::binary(name, bytes)
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+fn basename(p: &str) -> String {
+    p.rsplit('/').next().unwrap_or(p).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::Vfs;
+
+    #[test]
+    fn textfile_roundtrip_with_custom_sep() {
+        let mp = MountPoint::text_sep("/in.sdf", "\n$$$$\n");
+        let records = vec![Record::text("molA"), Record::text("molB")];
+        let files = mp.stage_in(&records).unwrap();
+        assert_eq!(files.len(), 1);
+        assert_eq!(files[0].0, "/in.sdf");
+        let mut fs = Vfs::disk();
+        fs.write("/in.sdf", files[0].1.clone()).unwrap();
+        // pretend the tool copied input to output unchanged
+        let out = MountPoint::text_sep("/in.sdf", "\n$$$$\n").stage_out(&mut fs).unwrap();
+        assert_eq!(out, records);
+    }
+
+    #[test]
+    fn textfile_missing_output_is_empty() {
+        let mp = MountPoint::text("/nope");
+        let mut fs = Vfs::disk();
+        assert!(mp.stage_out(&mut fs).unwrap().is_empty());
+    }
+
+    #[test]
+    fn textfile_rejects_binary_records() {
+        let mp = MountPoint::text("/t");
+        let err = mp.stage_in(&[Record::binary("x.gz", vec![1])]).err().unwrap();
+        assert!(err.to_string().contains("BinaryFiles"), "{err}");
+    }
+
+    #[test]
+    fn binaryfiles_roundtrip_and_declash() {
+        let mp = MountPoint::binary("/in");
+        let records = vec![
+            Record::binary("a.vcf.gz", vec![1]),
+            Record::binary("sub/a.vcf.gz", vec![2]), // same basename
+            Record::text("loose text"),
+        ];
+        let files = mp.stage_in(&records).unwrap();
+        assert_eq!(files.len(), 3);
+        let mut fs = Vfs::disk();
+        for (p, b) in &files {
+            fs.write(p, b.clone()).unwrap();
+        }
+        let out = MountPoint::binary("/in").stage_out(&mut fs).unwrap();
+        assert_eq!(out.len(), 3);
+        // all names distinct
+        let names: std::collections::HashSet<_> = out
+            .iter()
+            .map(|r| match r {
+                Record::Binary { name, .. } => name.clone(),
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(names.len(), 3);
+        // mount dir is drained after stage_out
+        assert!(fs.list_dir("/in").unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_partition_stages_empty_file() {
+        let mp = MountPoint::text("/in");
+        let files = mp.stage_in(&[]).unwrap();
+        assert_eq!(files[0].1.len(), 0);
+    }
+
+    #[test]
+    fn stream_mount_roundtrips_via_stdio() {
+        let mp = MountPoint::stream_sep("\n$$$$\n");
+        let records = vec![Record::text("molA"), Record::text("molB")];
+        // no files materialized
+        assert!(mp.stage_in(&records).unwrap().is_empty());
+        let stdin = mp.stage_stdin(&records).unwrap().unwrap();
+        // pretend the tool echoed its input
+        let out = mp.stage_stdout(&stdin).unwrap().unwrap();
+        assert_eq!(out, records);
+        assert!(mp.is_stream());
+    }
+
+    #[test]
+    fn stream_mount_rejects_binary_records() {
+        let mp = MountPoint::stream();
+        assert!(mp.stage_stdin(&[Record::binary("x", vec![1])]).is_err());
+    }
+
+    #[test]
+    fn non_stream_mounts_have_no_stdio() {
+        let mp = MountPoint::text("/in");
+        assert!(mp.stage_stdin(&[Record::text("x")]).unwrap().is_none());
+        assert!(mp.stage_stdout(b"y").unwrap().is_none());
+        assert!(!mp.is_stream());
+    }
+}

@@ -1,0 +1,125 @@
+//! Evaluation metrics — the quantities the paper's figures plot.
+//!
+//! * [`wse`] — Weak Scaling Efficiency (§1.3): t(1/16 data, 1 node) /
+//!   t(N/16 data, N nodes). Higher is better, 1.0 is ideal.
+//! * [`speedup`] — ingestion speedup (Figure 5): t(1 worker) / t(N).
+//! * [`WsePoint`] / [`wse_series`] — figure series helpers shared by the
+//!   benches.
+
+use crate::simtime::VirtualTime;
+
+/// Weak Scaling Efficiency: `t_base` measured at the smallest scale,
+/// `t_scaled` at N× data on N× nodes.
+pub fn wse(t_base: VirtualTime, t_scaled: VirtualTime) -> f64 {
+    if t_scaled == VirtualTime::ZERO {
+        return 1.0;
+    }
+    t_base.as_seconds() / t_scaled.as_seconds()
+}
+
+/// Speedup of t1 over tn.
+pub fn speedup(t1: VirtualTime, tn: VirtualTime) -> f64 {
+    if tn == VirtualTime::ZERO {
+        return 1.0;
+    }
+    t1.as_seconds() / tn.as_seconds()
+}
+
+/// One figure point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WsePoint {
+    pub workers: usize,
+    pub vcpus: u32,
+    pub makespan: VirtualTime,
+    pub wse: f64,
+}
+
+/// Build a WSE series from (workers, vcpus_per_worker, makespan)
+/// measurements, base = the smallest-workers entry.
+pub fn wse_series(measurements: &[(usize, u32, VirtualTime)]) -> Vec<WsePoint> {
+    let base = measurements
+        .iter()
+        .min_by_key(|(w, _, _)| *w)
+        .map(|&(_, _, t)| t)
+        .unwrap_or(VirtualTime::ZERO);
+    measurements
+        .iter()
+        .map(|&(workers, per, t)| WsePoint {
+            workers,
+            vcpus: workers as u32 * per,
+            makespan: t,
+            wse: wse(base, t),
+        })
+        .collect()
+}
+
+/// Render a WSE series like the paper's figures (vCPUs on a log-2 axis).
+pub fn render_series(title: &str, series: &[(String, Vec<WsePoint>)]) -> String {
+    let mut out = format!("# {title}\n");
+    out.push_str("vCPUs");
+    for (name, _) in series {
+        out.push_str(&format!("\t{name}"));
+    }
+    out.push('\n');
+    if let Some((_, first)) = series.first() {
+        for (i, p) in first.iter().enumerate() {
+            out.push_str(&p.vcpus.to_string());
+            for (_, points) in series {
+                out.push_str(&format!("\t{:.3}", points[i].wse));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_weak_scaling_is_one() {
+        let t = VirtualTime::seconds(100.0);
+        assert_eq!(wse(t, t), 1.0);
+    }
+
+    #[test]
+    fn slower_at_scale_is_below_one() {
+        let base = VirtualTime::seconds(100.0);
+        let scaled = VirtualTime::seconds(125.0);
+        assert!((wse(base, scaled) - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_uses_smallest_scale_as_base() {
+        let series = wse_series(&[
+            (4, 8, VirtualTime::seconds(110.0)),
+            (1, 8, VirtualTime::seconds(100.0)),
+            (2, 8, VirtualTime::seconds(105.0)),
+        ]);
+        let p1 = series.iter().find(|p| p.workers == 1).unwrap();
+        let p4 = series.iter().find(|p| p.workers == 4).unwrap();
+        assert_eq!(p1.wse, 1.0);
+        assert!((p4.wse - 100.0 / 110.0).abs() < 1e-9);
+        assert_eq!(p4.vcpus, 32);
+    }
+
+    #[test]
+    fn render_has_figure_shape() {
+        let pts = wse_series(&[
+            (1, 8, VirtualTime::seconds(10.0)),
+            (2, 8, VirtualTime::seconds(11.0)),
+        ]);
+        let s = render_series("Figure 3", &[("hdfs".into(), pts)]);
+        assert!(s.contains("# Figure 3"));
+        assert!(s.contains("8\t1.000"));
+        assert!(s.contains("16\t0.909"));
+    }
+
+    #[test]
+    fn speedup_of_equal_times_is_one() {
+        let t = VirtualTime::seconds(5.0);
+        assert_eq!(speedup(t, t), 1.0);
+        assert_eq!(speedup(VirtualTime::seconds(10.0), t), 2.0);
+    }
+}

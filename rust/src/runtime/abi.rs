@@ -1,0 +1,89 @@
+//! Artifact ABI constants — MUST mirror `python/compile/model.py`.
+//!
+//! The AOT artifacts are lowered with static shapes; the typed API in
+//! [`super::api`] batches/pads arbitrary workloads to these.
+
+/// Molecules per docking batch (`model.DOCK_M`).
+pub const DOCK_M: usize = 128;
+/// Docking feature dimension (`model.DOCK_F`).
+pub const DOCK_F: usize = 256;
+/// Receptor poses (`model.DOCK_P`).
+pub const DOCK_P: usize = 32;
+/// Pileup sites per genotype batch (`model.GL_S`).
+pub const GL_S: usize = 512;
+/// Bases per GC-count batch (`model.GC_N`).
+pub const GC_N: usize = 4096;
+/// Diploid genotypes over {A,C,G,T} (`kernels.genotype.N_GENOTYPES`).
+pub const N_GENOTYPES: usize = 10;
+
+/// Genotype column order — mirrors `model.GENOTYPES` exactly:
+/// unordered pairs (a,b), a<=b, over alleles A=0 C=1 G=2 T=3.
+pub const GENOTYPES: [(u8, u8); N_GENOTYPES] = [
+    (0, 0),
+    (0, 1),
+    (0, 2),
+    (0, 3),
+    (1, 1),
+    (1, 2),
+    (1, 3),
+    (2, 2),
+    (2, 3),
+    (3, 3),
+];
+
+/// Allele index -> base character.
+pub const ALLELE_BASES: [u8; 4] = [b'A', b'C', b'G', b'T'];
+
+/// Base character -> allele index (None for non-ACGT).
+pub fn base_index(b: u8) -> Option<usize> {
+    match b.to_ascii_uppercase() {
+        b'A' => Some(0),
+        b'C' => Some(1),
+        b'G' => Some(2),
+        b'T' => Some(3),
+        _ => None,
+    }
+}
+
+/// Human-readable genotype string, e.g. column 1 -> "A/C".
+pub fn genotype_name(col: usize) -> String {
+    let (a, b) = GENOTYPES[col];
+    format!(
+        "{}/{}",
+        ALLELE_BASES[a as usize] as char,
+        ALLELE_BASES[b as usize] as char
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genotype_table_matches_python_enumeration() {
+        // python: [(a, b) for a in range(4) for b in range(a, 4)]
+        let mut expect = vec![];
+        for a in 0..4u8 {
+            for b in a..4u8 {
+                expect.push((a, b));
+            }
+        }
+        assert_eq!(expect.as_slice(), &GENOTYPES);
+    }
+
+    #[test]
+    fn base_index_roundtrip() {
+        for (i, &b) in ALLELE_BASES.iter().enumerate() {
+            assert_eq!(base_index(b), Some(i));
+            assert_eq!(base_index(b.to_ascii_lowercase()), Some(i));
+        }
+        assert_eq!(base_index(b'N'), None);
+    }
+
+    #[test]
+    fn genotype_names() {
+        assert_eq!(genotype_name(0), "A/A");
+        assert_eq!(genotype_name(1), "A/C");
+        assert_eq!(genotype_name(9), "T/T");
+    }
+}

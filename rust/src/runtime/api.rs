@@ -1,0 +1,269 @@
+//! Typed, batch-padding API over the raw [`RuntimeHandle`].
+//!
+//! The containerized tools (fred, gatk, the gc counter) deal in arbitrary
+//! record counts; the AOT artifacts have static shapes (see [`super::abi`]).
+//! `ToolRuntime` chunks + zero-pads workloads to artifact batches and
+//! strips the padding from the results.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+
+use super::abi::*;
+use super::service::RuntimeHandle;
+use super::tensor::Tensor;
+
+/// One molecule's docking outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DockResult {
+    /// Best (lowest) Chemgauss-like score across poses.
+    pub score: f32,
+    /// Index of the best pose.
+    pub pose: u32,
+}
+
+/// One pileup site's genotype call.
+#[derive(Debug, Clone)]
+pub struct GenotypeCall {
+    /// Winning genotype column (see [`GENOTYPES`]).
+    pub best: usize,
+    /// Phred-scaled distance to the runner-up genotype.
+    pub qual: f32,
+    /// Full log-likelihood vector.
+    pub loglik: [f32; N_GENOTYPES],
+}
+
+/// Shared, cloneable typed runtime.
+#[derive(Clone, Debug)]
+pub struct ToolRuntime {
+    handle: RuntimeHandle,
+    /// (DOCK_F, DOCK_P) row-major grid (kept for [`Self::receptor`]).
+    receptor: Arc<Vec<f32>>,
+    /// Pre-built receptor tensor — the dock hot path reuses it instead
+    /// of re-validating + copying 32 KiB per call (§Perf).
+    receptor_tensor: Tensor,
+}
+
+impl ToolRuntime {
+    /// Load artifacts and fix a receptor grid (the paper wraps the HIV-1
+    /// protease receptor inside the FRED image; here the receptor is
+    /// deterministic synthetic data keyed by `receptor_seed`).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>, receptor_seed: u64) -> Result<Self> {
+        let handle = RuntimeHandle::spawn(artifact_dir)?;
+        Ok(Self::assemble(handle, receptor_seed))
+    }
+
+    pub fn with_handle(handle: RuntimeHandle, receptor_seed: u64) -> Self {
+        Self::assemble(handle, receptor_seed)
+    }
+
+    fn assemble(handle: RuntimeHandle, receptor_seed: u64) -> Self {
+        let receptor = Arc::new(Self::make_receptor(receptor_seed));
+        let receptor_tensor = Tensor::f32(vec![DOCK_F, DOCK_P], receptor.as_ref().clone())
+            .expect("receptor shape is static");
+        Self { handle, receptor, receptor_tensor }
+    }
+
+    /// Deterministic pseudo-random receptor grid (f32, (F, P) row-major).
+    /// Uses SplitMix64 so rust tests and docs can regenerate it anywhere.
+    pub fn make_receptor(seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = move || {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        (0..DOCK_F * DOCK_P)
+            .map(|_| {
+                // uniform(-1, 1) from the top 24 bits
+                let u = (next() >> 40) as f32 / (1u64 << 24) as f32;
+                2.0 * u - 1.0
+            })
+            .collect()
+    }
+
+    pub fn handle(&self) -> &RuntimeHandle {
+        &self.handle
+    }
+
+    /// The receptor grid this runtime docks against ((DOCK_F, DOCK_P)
+    /// row-major) — tests and oracles read it to mirror the artifact.
+    pub fn receptor(&self) -> &[f32] {
+        &self.receptor
+    }
+
+    /// Dock `n` molecules, each a `DOCK_F`-length feature row.
+    /// Chunks into `DOCK_M`-sized artifact batches; pads the tail.
+    pub fn dock(&self, features: &[f32], n: usize) -> Result<Vec<DockResult>> {
+        assert_eq!(features.len(), n * DOCK_F, "features must be (n, DOCK_F)");
+        let mut out = Vec::with_capacity(n);
+        for chunk in features.chunks(DOCK_M * DOCK_F) {
+            let rows = chunk.len() / DOCK_F;
+            let mut batch = chunk.to_vec();
+            batch.resize(DOCK_M * DOCK_F, 0.0);
+            let feats = Tensor::f32(vec![DOCK_M, DOCK_F], batch)?;
+            let outs =
+                self.handle.call("docking", vec![feats, self.receptor_tensor.clone()])?;
+            let scores = outs[0].as_f32()?;
+            let poses = outs[1].as_i32()?;
+            for i in 0..rows {
+                out.push(DockResult { score: scores[i], pose: poses[i] as u32 });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Gradient-refined soft pose scores (exercises the bwd artifact).
+    pub fn dock_refined(&self, features: &[f32], n: usize) -> Result<Vec<f32>> {
+        assert_eq!(features.len(), n * DOCK_F);
+        let mut out = Vec::with_capacity(n);
+        for chunk in features.chunks(DOCK_M * DOCK_F) {
+            let rows = chunk.len() / DOCK_F;
+            let mut batch = chunk.to_vec();
+            batch.resize(DOCK_M * DOCK_F, 0.0);
+            let feats = Tensor::f32(vec![DOCK_M, DOCK_F], batch)?;
+            let outs = self
+                .handle
+                .call("docking_refine", vec![feats, self.receptor_tensor.clone()])?;
+            out.extend_from_slice(&outs[0].as_f32()?[..rows]);
+        }
+        Ok(out)
+    }
+
+    /// Call genotypes for `n` pileup sites (each `[f32; 4]` base counts).
+    pub fn genotype(&self, counts: &[[f32; 4]], err: f32) -> Result<Vec<GenotypeCall>> {
+        let n = counts.len();
+        let mut out = Vec::with_capacity(n);
+        for chunk in counts.chunks(GL_S) {
+            let rows = chunk.len();
+            let mut batch: Vec<f32> = chunk.iter().flatten().copied().collect();
+            batch.resize(GL_S * 4, 0.0);
+            let t = Tensor::f32(vec![GL_S, 4], batch)?;
+            let outs =
+                self.handle.call("genotype", vec![t, Tensor::scalar_f32(err)])?;
+            let ll = outs[0].as_f32()?;
+            let best = outs[1].as_i32()?;
+            let qual = outs[2].as_f32()?;
+            for i in 0..rows {
+                let mut row = [0f32; N_GENOTYPES];
+                row.copy_from_slice(&ll[i * N_GENOTYPES..(i + 1) * N_GENOTYPES]);
+                out.push(GenotypeCall {
+                    best: best[i] as usize,
+                    qual: qual[i],
+                    loglik: row,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Count G/C bases in an arbitrary-length sequence via the artifact.
+    /// Pads with 'A' (never counted).
+    pub fn gc_count(&self, seq: &[u8]) -> Result<u64> {
+        let mut total = 0u64;
+        for chunk in seq.chunks(GC_N) {
+            let mut codes: Vec<i32> = chunk.iter().map(|&b| b as i32).collect();
+            codes.resize(GC_N, b'A' as i32);
+            let t = Tensor::i32(vec![GC_N], codes)?;
+            let outs = self.handle.call("gc_count", vec![t])?;
+            total += outs[0].as_i32()?[0] as u64;
+        }
+        Ok(total)
+    }
+}
+
+/// Pure-rust oracle of the docking score — used by integration tests to
+/// close the loop python -> HLO -> PJRT -> rust (see DESIGN.md §5).
+pub mod oracle {
+    use super::{DOCK_F, DOCK_P};
+
+    pub const SHAPE_MU: f32 = 4.0;
+    pub const SHAPE_SIGMA: f32 = 2.0;
+    pub const SHAPE_BETA: f32 = 3.0;
+
+    /// Mirror of `model.docking_pipeline` for a single molecule row.
+    pub fn dock_row(features: &[f32], receptor: &[f32]) -> (f32, u32) {
+        assert_eq!(features.len(), DOCK_F);
+        assert_eq!(receptor.len(), DOCK_F * DOCK_P);
+        let rms = (features.iter().map(|x| x * x).sum::<f32>() / DOCK_F as f32
+            + 1e-6)
+            .sqrt();
+        let mut best = (f32::INFINITY, 0u32);
+        for p in 0..DOCK_P {
+            let mut raw = 0f32;
+            for f in 0..DOCK_F {
+                raw += features[f] / rms * receptor[f * DOCK_P + p];
+            }
+            let gauss = SHAPE_BETA
+                * (-((raw - SHAPE_MU) * (raw - SHAPE_MU))
+                    / (2.0 * SHAPE_SIGMA * SHAPE_SIGMA))
+                    .exp();
+            let score = -raw - gauss;
+            if score < best.0 {
+                best = (score, p as u32);
+            }
+        }
+        best
+    }
+
+    /// Mirror of `model.log_emit_matrix` + the genotype matmul for one site.
+    pub fn genotype_row(counts: &[f32; 4], err: f32) -> [f32; 10] {
+        let mut out = [0f32; 10];
+        for (g, &(a, b)) in super::GENOTYPES.iter().enumerate() {
+            let mut ll = 0f32;
+            for c in 0..4usize {
+                let pa = if c == a as usize { 1.0 - err } else { err / 3.0 };
+                let pb = if c == b as usize { 1.0 - err } else { err / 3.0 };
+                ll += counts[c] * (0.5 * (pa + pb)).ln();
+            }
+            out[g] = ll;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receptor_is_deterministic_and_bounded() {
+        let a = ToolRuntime::make_receptor(42);
+        let b = ToolRuntime::make_receptor(42);
+        let c = ToolRuntime::make_receptor(43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), DOCK_F * DOCK_P);
+        assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn oracle_dock_row_prefers_aligned_pose() {
+        // Receptor with pose 0 = +features direction: raw positive large
+        // -> score very negative -> pose 0 wins.
+        let features = vec![1.0f32; DOCK_F];
+        let mut receptor = vec![0.0f32; DOCK_F * DOCK_P];
+        for f in 0..DOCK_F {
+            receptor[f * DOCK_P] = 1.0; // pose 0
+            receptor[f * DOCK_P + 1] = -1.0; // pose 1 (anti-aligned)
+        }
+        let (score, pose) = oracle::dock_row(&features, &receptor);
+        assert_eq!(pose, 0);
+        assert!(score < 0.0);
+    }
+
+    #[test]
+    fn oracle_genotype_row_matches_intuition() {
+        let counts = [30.0, 0.0, 0.0, 0.0];
+        let ll = oracle::genotype_row(&counts, 0.01);
+        let best = ll
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 0); // A/A
+    }
+}

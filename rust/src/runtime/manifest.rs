@@ -1,0 +1,152 @@
+//! `artifacts/manifest.json` — the ABI contract emitted by
+//! `python/compile/aot.py` and validated here at load time.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{MareError, Result};
+use crate::util::json::Json;
+
+pub const SCHEMA_VERSION: u64 = 2;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema: u64,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<GoldenOutput>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Output spec + golden checksums from the python-side smoke run.
+#[derive(Debug, Clone)]
+pub struct GoldenOutput {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub sum: f64,
+    pub first: f64,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { shape, dtype: j.req("dtype")?.as_str()?.to_string() })
+}
+
+fn golden(j: &Json) -> Result<GoldenOutput> {
+    let spec = tensor_spec(j)?;
+    Ok(GoldenOutput {
+        shape: spec.shape,
+        dtype: spec.dtype,
+        sum: j.req("sum")?.as_f64()?,
+        first: j.req("first")?.as_f64()?,
+    })
+}
+
+impl Manifest {
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let schema = root.req("schema")?.as_u64()?;
+        if schema != SCHEMA_VERSION {
+            return Err(MareError::Runtime(format!(
+                "manifest schema {schema} != supported {SCHEMA_VERSION}"
+            )));
+        }
+        let mut entries = BTreeMap::new();
+        for (name, e) in root.req("entries")?.as_obj()? {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs =
+                e.req("outputs")?.as_arr()?.iter().map(golden).collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                Entry {
+                    file: e.req("file")?.as_str()?.to_string(),
+                    sha256: e.req("sha256")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { schema, entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            MareError::Runtime(format!(
+                "cannot read {} — run `make artifacts` first: {e}",
+                path.display()
+            ))
+        })?;
+        Self::from_json(&text)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).ok_or_else(|| MareError::AbiMismatch {
+            entry: name.to_string(),
+            detail: format!(
+                "not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "schema": 2,
+        "entries": {
+            "gc_count": {
+                "file": "gc_count.hlo.txt",
+                "sha256": "ab",
+                "inputs": [{"shape": [4096], "dtype": "int32"}],
+                "outputs": [{"shape": [1], "dtype": "int32", "sum": 2048.0, "first": 2048.0}]
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_and_validates_schema() {
+        let m = Manifest::from_json(SAMPLE).unwrap();
+        assert_eq!(m.schema, 2);
+        let e = m.entry("gc_count").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![4096]);
+        assert_eq!(e.outputs[0].sum, 2048.0);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let bad = SAMPLE.replace("\"schema\": 2", "\"schema\": 1");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("\"sha256\": \"ab\",", "");
+        assert!(Manifest::from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! PJRT runtime: load + execute the AOT artifacts from the request path.
+//!
+//! Layering (see DESIGN.md §2):
+//! * [`manifest`] — the ABI contract written by `python/compile/aot.py`.
+//! * [`tensor`] — host tensors crossing the PJRT boundary.
+//! * [`service`] — the dedicated thread owning the (!Send) PJRT client
+//!   and compiled executables; everything else holds a [`RuntimeHandle`].
+//! * [`api`] — typed, batch-padding calls used by the containerized
+//!   tools (fred / gatk / gc), plus pure-rust oracles for tests.
+//! * [`abi`] — static artifact shapes, mirrored from `model.py`.
+//!
+//! HLO **text** is the interchange format (not serialized protos):
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the
+//! text parser reassigns ids. See /opt/xla-example/README.md.
+
+pub mod abi;
+pub mod api;
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+pub use abi::{DOCK_F, DOCK_M, DOCK_P, GC_N, GL_S, N_GENOTYPES};
+pub use api::{DockResult, GenotypeCall, ToolRuntime};
+pub use manifest::Manifest;
+pub use service::{RuntimeHandle, RuntimeStats};
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact dir: `$MARE_ARTIFACTS` or `artifacts/` upwards
+/// from the current dir (so tests/benches work from any crate subdir).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("MARE_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return DEFAULT_ARTIFACT_DIR.into();
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT execution service.
+//!
+//! The `xla` crate's types wrap raw pointers and are `!Send`, so a single
+//! dedicated thread owns the `PjRtClient` and every compiled executable;
+//! the rest of the system talks to it through a cloneable
+//! [`RuntimeHandle`] over an mpsc channel. This mirrors the paper's
+//! architecture: the "containerized tool binary" is a local service the
+//! coordinator invokes — python is never on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::error::{MareError, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+enum Req {
+    Call {
+        entry: String,
+        inputs: Vec<Tensor>,
+        resp: mpsc::SyncSender<Result<Vec<Tensor>>>,
+    },
+    Entries {
+        resp: mpsc::SyncSender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Cumulative execution statistics (lock-free reads).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub calls: AtomicU64,
+    pub exec_nanos: AtomicU64,
+    pub transfer_nanos: AtomicU64,
+}
+
+impl RuntimeStats {
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+    pub fn exec_seconds(&self) -> f64 {
+        self.exec_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+    pub fn transfer_seconds(&self) -> f64 {
+        self.transfer_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Req>,
+    stats: Arc<RuntimeStats>,
+    artifact_dir: PathBuf,
+}
+
+impl std::fmt::Debug for RuntimeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RuntimeHandle")
+            .field("artifact_dir", &self.artifact_dir)
+            .field("calls", &self.stats.calls())
+            .finish()
+    }
+}
+
+impl RuntimeHandle {
+    /// Spawn the service thread: load the manifest, parse + compile every
+    /// HLO-text artifact, then serve calls until the last handle drops.
+    pub fn spawn(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let stats = Arc::new(RuntimeStats::default());
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+
+        let thread_dir = dir.clone();
+        let thread_stats = stats.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                service_main(thread_dir, manifest, rx, ready_tx, thread_stats)
+            })
+            .map_err(|e| MareError::Runtime(format!("spawn: {e}")))?;
+
+        ready_rx
+            .recv()
+            .map_err(|e| MareError::Runtime(format!("service died during init: {e}")))??;
+        Ok(RuntimeHandle { tx, stats, artifact_dir: dir })
+    }
+
+    /// Execute one artifact entry with the given inputs.
+    pub fn call(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::Call { entry: entry.to_string(), inputs, resp: resp_tx })
+            .map_err(|_| MareError::Runtime("runtime service is down".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| MareError::Runtime("runtime service dropped request".into()))?
+    }
+
+    /// Names of the loaded artifact entries.
+    pub fn entries(&self) -> Result<Vec<String>> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req::Entries { resp: resp_tx })
+            .map_err(|_| MareError::Runtime("runtime service is down".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| MareError::Runtime("runtime service dropped request".into()))
+    }
+
+    pub fn stats(&self) -> &RuntimeStats {
+        &self.stats
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Ask the service to exit once queued work completes.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+struct LoadedEntry {
+    exe: xla::PjRtLoadedExecutable,
+    inputs: Vec<super::manifest::TensorSpec>,
+    n_outputs: usize,
+}
+
+fn service_main(
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::SyncSender<Result<()>>,
+    stats: Arc<RuntimeStats>,
+) {
+    let loaded = match load_all(&dir, &manifest) {
+        Ok(l) => {
+            let _ = ready.send(Ok(()));
+            l
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Entries { resp } => {
+                let _ = resp.send(loaded.keys().cloned().collect());
+            }
+            Req::Call { entry, inputs, resp } => {
+                let result = run_entry(&loaded, &entry, inputs, &stats);
+                let _ = resp.send(result);
+            }
+        }
+    }
+}
+
+fn load_all(dir: &Path, manifest: &Manifest) -> Result<HashMap<String, LoadedEntry>> {
+    let client = xla::PjRtClient::cpu()?;
+    log::info!(
+        "pjrt client up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut out = HashMap::new();
+    for (name, entry) in &manifest.entries {
+        let path = dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        log::info!("compiled artifact `{name}` in {} ms", t0.elapsed().as_millis());
+        out.insert(
+            name.clone(),
+            LoadedEntry {
+                exe,
+                inputs: entry.inputs.clone(),
+                n_outputs: entry.outputs.len(),
+            },
+        );
+    }
+    Ok(out)
+}
+
+fn run_entry(
+    loaded: &HashMap<String, LoadedEntry>,
+    entry: &str,
+    inputs: Vec<Tensor>,
+    stats: &RuntimeStats,
+) -> Result<Vec<Tensor>> {
+    let le = loaded.get(entry).ok_or_else(|| MareError::AbiMismatch {
+        entry: entry.to_string(),
+        detail: "artifact not loaded".into(),
+    })?;
+
+    // ABI validation against the manifest.
+    if inputs.len() != le.inputs.len() {
+        return Err(MareError::AbiMismatch {
+            entry: entry.to_string(),
+            detail: format!("{} inputs given, artifact wants {}", inputs.len(), le.inputs.len()),
+        });
+    }
+    for (i, (got, want)) in inputs.iter().zip(&le.inputs).enumerate() {
+        if got.shape() != want.shape.as_slice() || got.dtype_name() != want.dtype {
+            return Err(MareError::AbiMismatch {
+                entry: entry.to_string(),
+                detail: format!(
+                    "input {i}: got {}{:?}, artifact wants {}{:?}",
+                    got.dtype_name(),
+                    got.shape(),
+                    want.dtype,
+                    want.shape
+                ),
+            });
+        }
+    }
+
+    let t0 = Instant::now();
+    let literals: Vec<xla::Literal> =
+        inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+    let t_in = t0.elapsed();
+
+    let t1 = Instant::now();
+    let bufs = le.exe.execute::<xla::Literal>(&literals)?;
+    let result = bufs[0][0].to_literal_sync()?;
+    let t_exec = t1.elapsed();
+
+    // aot.py lowers with return_tuple=True: always a tuple literal.
+    let parts = result.to_tuple()?;
+    if parts.len() != le.n_outputs {
+        return Err(MareError::AbiMismatch {
+            entry: entry.to_string(),
+            detail: format!("{} outputs, manifest says {}", parts.len(), le.n_outputs),
+        });
+    }
+    let outs: Vec<Tensor> = parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+
+    stats.calls.fetch_add(1, Ordering::Relaxed);
+    stats.exec_nanos.fetch_add(t_exec.as_nanos() as u64, Ordering::Relaxed);
+    stats
+        .transfer_nanos
+        .fetch_add(t_in.as_nanos() as u64, Ordering::Relaxed);
+    Ok(outs)
+}

@@ -1,0 +1,146 @@
+//! Host-side tensor type crossing the PJRT boundary.
+//!
+//! Only the dtypes the AOT artifacts actually use (f32, i32) are
+//! supported; anything else is an ABI error by construction.
+
+use crate::error::{MareError, Result};
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Result<Self> {
+        let shape = shape.into();
+        Self::check_len(&shape, data.len())?;
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: impl Into<Vec<usize>>, data: Vec<i32>) -> Result<Self> {
+        let shape = shape.into();
+        Self::check_len(&shape, data.len())?;
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    /// Scalar f32 (rank 0).
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    fn check_len(shape: &[usize], len: usize) -> Result<()> {
+        let want: usize = shape.iter().product();
+        if want != len {
+            return Err(MareError::Runtime(format!(
+                "tensor shape {shape:?} wants {want} elements, got {len}"
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "float32",
+            Tensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            t => Err(MareError::Runtime(format!(
+                "expected f32 tensor, got {}",
+                t.dtype_name()
+            ))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            t => Err(MareError::Runtime(format!(
+                "expected i32 tensor, got {}",
+                t.dtype_name()
+            ))),
+        }
+    }
+
+    /// Convert to an XLA literal (service-thread side only).
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, shape } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32 { data, shape } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from an XLA literal (service-thread side only).
+    pub(crate) fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.element_type() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => Err(MareError::Runtime(format!(
+                "unsupported artifact output element type {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_len_mismatch_rejected() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = Tensor::i32(vec![4], vec![1, 2, 3, 4]).unwrap();
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.dtype_name(), "int32");
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(0.25);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.as_f32().unwrap(), &[0.25]);
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-task cost models.
+//!
+//! A containerized task's virtual duration decomposes as
+//!
+//! ```text
+//!   pull (once per image per worker)            container/registry
+//! + container start                             fixed per task
+//! + stage-in  (partition bytes -> mount point)  tmpfs or disk bandwidth
+//! + compute   (tool model: fixed + per byte + per record)
+//! + stage-out (output bytes <- mount point)
+//! ```
+//!
+//! Tool models are calibrated against the paper's reported wall-clocks
+//! (e.g. VS: ~2.2M molecules in ~3h on 128 vCPUs -> ~0.6 core-seconds
+//! per molecule dominated by FRED). See `tools/*::cost_model`.
+
+use super::Duration;
+
+/// How a tool's compute time scales with its input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Fixed cost per invocation (startup of the wrapped binary).
+    pub fixed: Duration,
+    /// Seconds per input byte (parsing/IO-bound part).
+    pub secs_per_byte: f64,
+    /// Seconds per record (compute-bound part, e.g. per molecule).
+    pub secs_per_record: f64,
+    /// How many vCPU slots the tool saturates (bwa -t 8 => 8).
+    pub cpus: u32,
+}
+
+impl CostModel {
+    pub const fn free() -> Self {
+        CostModel { fixed: Duration::ZERO, secs_per_byte: 0.0, secs_per_record: 0.0, cpus: 1 }
+    }
+
+    pub fn compute(&self, input_bytes: u64, records: u64) -> Duration {
+        let secs = self.secs_per_byte * input_bytes as f64
+            + self.secs_per_record * records as f64;
+        self.fixed + Duration::seconds(secs)
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::free()
+    }
+}
+
+/// Full accounted cost of one executed task (virtual), with the real
+/// measured wall time kept alongside for the §Perf tables.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskCost {
+    pub pull: Duration,
+    pub container_start: Duration,
+    pub stage_in: Duration,
+    pub compute: Duration,
+    pub stage_out: Duration,
+    /// vCPU slots this task occupies while running.
+    pub cpus: u32,
+    /// Real wall-clock of the actual in-process execution.
+    pub real: std::time::Duration,
+}
+
+impl TaskCost {
+    /// Total virtual duration of the task on its worker.
+    pub fn total(&self) -> Duration {
+        self.pull + self.container_start + self.stage_in + self.compute + self.stage_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_scales_linearly() {
+        let m = CostModel {
+            fixed: Duration::seconds(1.0),
+            secs_per_byte: 1e-6,
+            secs_per_record: 0.5,
+            cpus: 1,
+        };
+        let d = m.compute(1_000_000, 10);
+        assert!((d.as_seconds() - (1.0 + 1.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        assert_eq!(CostModel::free().compute(1 << 30, 1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn task_cost_totals() {
+        let c = TaskCost {
+            pull: Duration::seconds(2.0),
+            container_start: Duration::seconds(0.5),
+            stage_in: Duration::seconds(0.25),
+            compute: Duration::seconds(10.0),
+            stage_out: Duration::seconds(0.25),
+            cpus: 1,
+            real: std::time::Duration::ZERO,
+        };
+        assert!((c.total().as_seconds() - 13.0).abs() < 1e-9);
+    }
+}

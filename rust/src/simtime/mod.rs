@@ -1,0 +1,121 @@
+//! Execution-driven discrete-event simulation of cluster time.
+//!
+//! Tasks *really execute* (real bytes through real tools, including the
+//! PJRT artifacts), while their *durations* are charged to a virtual
+//! clock against a calibrated cluster model (DESIGN.md §6). Weak-scaling
+//! efficiency and speedup — the paper's metrics — are ratios of virtual
+//! makespans, which makes the curves deterministic and lets a laptop
+//! reproduce the shape of a 16-node OpenStack cluster.
+//!
+//! * [`VirtualTime`] / [`Duration`] — fixed-point virtual seconds.
+//! * [`CostModel`] — per-task cost: container lifecycle + per-byte work.
+//! * [`NetModel`] / [`DiskModel`] — transfer-time models.
+//! * [`SlotSchedule`] — list-scheduling of weighted tasks onto vCPU
+//!   slots, the core of stage makespan computation.
+
+pub mod cost;
+pub mod net;
+pub mod schedule;
+
+pub use cost::{CostModel, TaskCost};
+pub use net::{DiskModel, NetModel};
+pub use schedule::{SlotSchedule, SlotTask, TaskPlacement};
+
+/// Virtual time in microseconds (fixed point; f64 drift would make the
+/// WSE tables flaky).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default, Hash)]
+pub struct VirtualTime(pub u64);
+
+/// Virtual duration in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default, Hash)]
+pub struct Duration(pub u64);
+
+impl VirtualTime {
+    pub const ZERO: VirtualTime = VirtualTime(0);
+
+    pub fn seconds(s: f64) -> Self {
+        VirtualTime((s * 1e6).round() as u64)
+    }
+
+    pub fn as_seconds(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+
+    pub fn max(self, other: Self) -> Self {
+        VirtualTime(self.0.max(other.0))
+    }
+}
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    pub fn seconds(s: f64) -> Self {
+        Duration((s * 1e6).round() as u64)
+    }
+
+    pub fn micros(us: u64) -> Self {
+        Duration(us)
+    }
+
+    pub fn as_seconds(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+}
+
+impl std::ops::Add<Duration> for VirtualTime {
+    type Output = VirtualTime;
+    fn add(self, d: Duration) -> VirtualTime {
+        VirtualTime(self.0 + d.0)
+    }
+}
+
+impl std::ops::Add for Duration {
+    type Output = Duration;
+    fn add(self, d: Duration) -> Duration {
+        Duration(self.0 + d.0)
+    }
+}
+
+impl std::ops::AddAssign for Duration {
+    fn add_assign(&mut self, d: Duration) {
+        self.0 += d.0;
+    }
+}
+
+impl std::ops::Sub for VirtualTime {
+    type Output = Duration;
+    fn sub(self, t: VirtualTime) -> Duration {
+        Duration(self.0.saturating_sub(t.0))
+    }
+}
+
+impl std::fmt::Display for VirtualTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3}s", self.as_seconds())
+    }
+}
+
+impl std::fmt::Display for Duration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3}s", self.as_seconds())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = VirtualTime::seconds(1.0) + Duration::seconds(0.5);
+        assert_eq!(t, VirtualTime::seconds(1.5));
+        assert_eq!(t - VirtualTime::seconds(1.0), Duration::seconds(0.5));
+        // saturating: no negative durations
+        assert_eq!(VirtualTime::ZERO - t, Duration::ZERO);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(VirtualTime::seconds(2.5).to_string(), "2.500s");
+    }
+}

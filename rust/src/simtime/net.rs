@@ -1,0 +1,131 @@
+//! Network and disk transfer-time models.
+//!
+//! Everything is a simple latency + bandwidth pipe, but with the two
+//! features the paper's curves hinge on:
+//!
+//! * per-endpoint NIC caps (intra-cluster shuffles are limited by the
+//!   slowest of sender/receiver), and
+//! * an *aggregate* cap for external services (Swift's service pipe,
+//!   S3's WAN egress) — this is what makes Figure 5's ingestion speedup
+//!   flatten between 8 and 16 workers.
+
+use super::Duration;
+
+/// A latency + bandwidth pipe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    /// One-way latency per transfer.
+    pub latency: Duration,
+    /// Per-connection bandwidth, bytes/second.
+    pub bw_bytes_per_sec: f64,
+    /// Aggregate cap across all concurrent users of this pipe
+    /// (bytes/second); `f64::INFINITY` when unconstrained.
+    pub aggregate_bw: f64,
+}
+
+impl NetModel {
+    pub fn new(latency_s: f64, bw: f64) -> Self {
+        NetModel { latency: Duration::seconds(latency_s), bw_bytes_per_sec: bw, aggregate_bw: f64::INFINITY }
+    }
+
+    pub fn with_aggregate(mut self, agg: f64) -> Self {
+        self.aggregate_bw = agg;
+        self
+    }
+
+    /// Time for one transfer of `bytes` with `concurrency` equal sharers
+    /// of the aggregate pipe.
+    pub fn transfer(&self, bytes: u64, concurrency: u32) -> Duration {
+        if bytes == 0 {
+            return Duration::ZERO;
+        }
+        let per_conn = self
+            .bw_bytes_per_sec
+            .min(self.aggregate_bw / concurrency.max(1) as f64);
+        self.latency + Duration::seconds(bytes as f64 / per_conn)
+    }
+
+    /// 10 GbE-ish intra-cluster link.
+    pub fn lan() -> Self {
+        NetModel::new(0.0002, 1.1e9)
+    }
+
+    /// Nearby object store (Swift at the cloud provider): good pipe but a
+    /// shared service cap.
+    pub fn swift_service() -> Self {
+        NetModel::new(0.004, 400e6).with_aggregate(2.4e9)
+    }
+
+    /// Remote S3 over WAN: high latency, modest per-connection bandwidth,
+    /// tight aggregate egress.
+    pub fn s3_wan() -> Self {
+        NetModel::new(0.070, 60e6).with_aggregate(500e6)
+    }
+}
+
+/// Disk model for disk-backed mount points and spill files.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiskModel {
+    pub seek: Duration,
+    pub bw_bytes_per_sec: f64,
+}
+
+impl DiskModel {
+    /// Cloud-volume HDD-ish defaults (matching cPouta's ephemeral disks).
+    pub fn hdd() -> Self {
+        DiskModel { seek: Duration::seconds(0.008), bw_bytes_per_sec: 160e6 }
+    }
+
+    /// HDFS datanode sequential read: striped ephemeral disks + page
+    /// cache — the co-location advantage of §1.3/Figure 3.
+    pub fn datanode() -> Self {
+        DiskModel { seek: Duration::seconds(0.004), bw_bytes_per_sec: 450e6 }
+    }
+
+    /// tmpfs: memory bandwidth, no seek. The paper's default mount.
+    pub fn tmpfs() -> Self {
+        DiskModel { seek: Duration::ZERO, bw_bytes_per_sec: 8e9 }
+    }
+
+    pub fn rw(&self, bytes: u64) -> Duration {
+        if bytes == 0 {
+            return Duration::ZERO;
+        }
+        self.seek + Duration::seconds(bytes as f64 / self.bw_bytes_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(NetModel::lan().transfer(0, 1), Duration::ZERO);
+        assert_eq!(DiskModel::hdd().rw(0), Duration::ZERO);
+    }
+
+    #[test]
+    fn aggregate_cap_bites_at_high_concurrency() {
+        let s3 = NetModel::s3_wan();
+        let one = s3.transfer(1 << 30, 1);
+        let sixteen = s3.transfer(1 << 30, 16);
+        // At concurrency 16 each connection gets 500/16 ≈ 31 MB/s < 60 MB/s.
+        assert!(sixteen > one);
+        let per_conn_16 = 500e6 / 16.0;
+        let want = 0.070 + (1u64 << 30) as f64 / per_conn_16;
+        assert!((sixteen.as_seconds() - want).abs() < 0.01, "{sixteen}");
+    }
+
+    #[test]
+    fn lan_uncapped_by_concurrency() {
+        let lan = NetModel::lan();
+        assert_eq!(lan.transfer(1 << 20, 1), lan.transfer(1 << 20, 64));
+    }
+
+    #[test]
+    fn tmpfs_much_faster_than_hdd() {
+        let b = 256u64 << 20;
+        assert!(DiskModel::tmpfs().rw(b) < DiskModel::hdd().rw(b));
+    }
+}

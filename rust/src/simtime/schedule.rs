@@ -1,0 +1,284 @@
+//! List scheduling of weighted tasks onto vCPU slots — the core of the
+//! per-stage virtual makespan computation.
+//!
+//! Mirrors Spark's behaviour closely enough for the paper's curves:
+//! tasks are offered in descending duration (LPT), each goes to its
+//! locality-preferred worker if a slot frees up there no later than
+//! `locality_wait` after the best remote slot (Spark's
+//! `spark.locality.wait` analogue), else to the earliest-available
+//! worker. Multi-cpu tasks (`spark.task.cpus`) occupy several slots of
+//! one worker simultaneously.
+
+use super::{Duration, VirtualTime};
+
+/// One schedulable task.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotTask {
+    /// Caller's identifier (index into the stage's task vec).
+    pub id: usize,
+    pub duration: Duration,
+    /// vCPU slots required on a single worker.
+    pub cpus: u32,
+    /// Preferred worker for data locality, if any.
+    pub preferred: Option<usize>,
+    /// Extra duration if scheduled *off* the preferred worker
+    /// (remote read of the cached partition).
+    pub remote_penalty: Duration,
+}
+
+/// Where a task ended up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskPlacement {
+    pub id: usize,
+    pub worker: usize,
+    pub start: VirtualTime,
+    pub end: VirtualTime,
+    pub local: bool,
+}
+
+/// Slot-level schedule over a set of workers.
+#[derive(Debug)]
+pub struct SlotSchedule {
+    /// `slots[w][s]` = virtual time at which slot `s` of worker `w` frees.
+    slots: Vec<Vec<VirtualTime>>,
+    locality_wait: Duration,
+    killed: Vec<bool>,
+}
+
+impl SlotSchedule {
+    pub fn new(workers: usize, vcpus_per_worker: u32) -> Self {
+        SlotSchedule {
+            slots: vec![vec![VirtualTime::ZERO; vcpus_per_worker as usize]; workers],
+            locality_wait: Duration::seconds(3.0),
+            killed: vec![false; workers],
+        }
+    }
+
+    pub fn with_locality_wait(mut self, wait: Duration) -> Self {
+        self.locality_wait = wait;
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Push a worker's earliest availability to at least `ready` (image
+    /// pull, container-runtime warmup — anything that blocks the whole
+    /// worker before its first task of the stage).
+    pub fn delay_worker(&mut self, worker: usize, ready: VirtualTime) {
+        for s in &mut self.slots[worker] {
+            *s = (*s).max(ready);
+        }
+    }
+
+    /// Remove a worker from further placement (simulated worker loss).
+    /// Existing placements stand; makespan ignores the dead worker.
+    pub fn kill_worker(&mut self, worker: usize) {
+        self.killed[worker] = true;
+    }
+
+    /// Earliest time `cpus` slots are simultaneously free on `worker`.
+    ///
+    /// Slot vectors are kept sorted (see [`Self::reserve`]), so this is
+    /// a direct index — the scheduler runs once per task per stage and
+    /// was the top L3 hot spot before (clone + sort per probe,
+    /// EXPERIMENTS.md §Perf).
+    fn earliest_on(&self, worker: usize, cpus: u32) -> VirtualTime {
+        let frees = &self.slots[worker];
+        let need = (cpus as usize).min(frees.len());
+        debug_assert!(frees.windows(2).all(|w| w[0] <= w[1]));
+        frees[need - 1]
+    }
+
+    /// Reserve `cpus` slots on `worker` until `end`, keeping the slot
+    /// vector sorted: the `cpus` earliest slots become `end`, which is
+    /// ≥ every untouched earlier slot, so rotating them into place is a
+    /// single in-place merge step.
+    fn reserve(&mut self, worker: usize, cpus: u32, end: VirtualTime) {
+        let slots = &mut self.slots[worker];
+        let take = (cpus as usize).min(slots.len());
+        // overwrite the `take` smallest (prefix, since sorted) ...
+        for s in slots.iter_mut().take(take) {
+            *s = end;
+        }
+        // ... and restore order: the prefix is now uniform `end`;
+        // rotate it past every remaining element smaller than `end`
+        let rest = &slots[take..];
+        let shift = rest.partition_point(|&s| s < end);
+        slots[..take + shift].rotate_left(take);
+    }
+
+    /// Schedule all tasks; returns placements (same order as input ids).
+    pub fn run(&mut self, tasks: &[SlotTask]) -> Vec<TaskPlacement> {
+        // LPT order: longest tasks first minimizes makespan skew.
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(tasks[i].duration));
+
+        let mut placements = Vec::with_capacity(tasks.len());
+        for &i in &order {
+            let t = tasks[i];
+            let cpus = t.cpus.max(1);
+
+            // Earliest option anywhere (live workers only).
+            let (mut best_w, mut best_start) = (0usize, VirtualTime(u64::MAX));
+            for w in 0..self.slots.len() {
+                if self.killed[w] || (cpus as usize) > self.slots[w].len() {
+                    continue;
+                }
+                let s = self.earliest_on(w, cpus);
+                if s < best_start {
+                    best_start = s;
+                    best_w = w;
+                }
+            }
+            assert!(
+                best_start != VirtualTime(u64::MAX),
+                "task wants {cpus} cpus but no worker has that many slots"
+            );
+
+            // Locality preference within the wait window.
+            let (worker, start, local) = match t.preferred {
+                Some(p) if !self.killed[p] && (cpus as usize) <= self.slots[p].len() => {
+                    let ps = self.earliest_on(p, cpus);
+                    if ps.0 <= best_start.0 + self.locality_wait.0 {
+                        (p, ps, true)
+                    } else {
+                        (best_w, best_start, false)
+                    }
+                }
+                _ => (best_w, best_start, t.preferred.is_none()),
+            };
+
+            let dur = if local {
+                t.duration
+            } else {
+                t.duration + t.remote_penalty
+            };
+            let end = start + dur;
+            self.reserve(worker, cpus, end);
+            placements.push(TaskPlacement { id: t.id, worker, start, end, local });
+        }
+        placements.sort_by_key(|p| p.id);
+        placements
+    }
+
+    /// Makespan so far (max slot free time over live workers).
+    pub fn makespan(&self) -> VirtualTime {
+        self.slots
+            .iter()
+            .zip(&self.killed)
+            .filter(|(_, &k)| !k)
+            .flat_map(|(w, _)| w.iter())
+            .copied()
+            .max()
+            .unwrap_or(VirtualTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: usize, secs: f64) -> SlotTask {
+        SlotTask {
+            id,
+            duration: Duration::seconds(secs),
+            cpus: 1,
+            preferred: None,
+            remote_penalty: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn perfect_packing_on_equal_tasks() {
+        // 16 x 1s tasks on 2 workers x 4 slots => 2 waves => 2s.
+        let mut s = SlotSchedule::new(2, 4);
+        let tasks: Vec<SlotTask> = (0..16).map(|i| task(i, 1.0)).collect();
+        s.run(&tasks);
+        assert_eq!(s.makespan(), VirtualTime::seconds(2.0));
+    }
+
+    #[test]
+    fn weak_scaling_is_flat_for_embarrassingly_parallel() {
+        // N workers, N*8 equal tasks: makespan independent of N.
+        let mut spans = vec![];
+        for n in [1usize, 2, 4, 8] {
+            let mut s = SlotSchedule::new(n, 8);
+            let tasks: Vec<SlotTask> = (0..n * 8 * 4).map(|i| task(i, 2.0)).collect();
+            s.run(&tasks);
+            spans.push(s.makespan());
+        }
+        assert!(spans.iter().all(|&m| m == spans[0]), "{spans:?}");
+    }
+
+    #[test]
+    fn locality_preferred_when_cheap() {
+        let mut s = SlotSchedule::new(2, 1);
+        let t = SlotTask {
+            id: 0,
+            duration: Duration::seconds(1.0),
+            cpus: 1,
+            preferred: Some(1),
+            remote_penalty: Duration::seconds(10.0),
+        };
+        let p = s.run(&[t]);
+        assert_eq!(p[0].worker, 1);
+        assert!(p[0].local);
+    }
+
+    #[test]
+    fn falls_off_locality_when_preferred_worker_is_busy() {
+        let mut s = SlotSchedule::new(2, 1).with_locality_wait(Duration::seconds(0.5));
+        // Fill worker 0 for 100s, then prefer it: should run remote on 1.
+        let filler = SlotTask {
+            id: 0,
+            duration: Duration::seconds(100.0),
+            cpus: 1,
+            preferred: Some(0),
+            remote_penalty: Duration::ZERO,
+        };
+        let wants_zero = SlotTask {
+            id: 1,
+            duration: Duration::seconds(1.0),
+            cpus: 1,
+            preferred: Some(0),
+            remote_penalty: Duration::seconds(2.0),
+        };
+        let p = s.run(&[filler, wants_zero]);
+        assert_eq!(p[1].worker, 1);
+        assert!(!p[1].local);
+        // remote penalty applied
+        assert_eq!(p[1].end - p[1].start, Duration::seconds(3.0));
+    }
+
+    #[test]
+    fn multicpu_task_occupies_whole_worker() {
+        let mut s = SlotSchedule::new(1, 8);
+        let big = SlotTask {
+            id: 0,
+            duration: Duration::seconds(4.0),
+            cpus: 8,
+            preferred: None,
+            remote_penalty: Duration::ZERO,
+        };
+        let small = task(1, 1.0);
+        let p = s.run(&[big, small]);
+        // small must wait for the 8-cpu task (LPT runs big first)
+        assert_eq!(p[1].start, VirtualTime::seconds(4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "no worker has that many slots")]
+    fn rejects_oversized_tasks() {
+        let mut s = SlotSchedule::new(2, 4);
+        let t = SlotTask {
+            id: 0,
+            duration: Duration::seconds(1.0),
+            cpus: 16,
+            preferred: None,
+            remote_penalty: Duration::ZERO,
+        };
+        s.run(&[t]);
+    }
+}

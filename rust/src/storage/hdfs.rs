@@ -1,0 +1,166 @@
+//! HDFS model: block-based store co-located with the workers.
+//!
+//! The paper's setup: "HDFS daemons ran in the worker nodes, allowing
+//! for near-zero network communication". Objects split into fixed-size
+//! blocks; block `b` of object `k` has its primary replica on worker
+//! `(hash(k) + b) % workers` (plus `replication-1` followers on the next
+//! workers), so a large file spreads evenly. A local read moves at disk
+//! speed; a remote read crosses the LAN.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+use crate::simtime::{DiskModel, Duration, NetModel};
+
+use super::{BlockInfo, StorageBackend};
+
+pub const DEFAULT_BLOCK_SIZE: u64 = 128 << 20;
+pub const DEFAULT_REPLICATION: usize = 3;
+
+pub struct Hdfs {
+    objects: BTreeMap<String, Vec<u8>>,
+    workers: usize,
+    block_size: u64,
+    replication: usize,
+    disk: DiskModel,
+    net: NetModel,
+}
+
+impl Hdfs {
+    pub fn new(workers: usize, block_size: u64) -> Self {
+        Hdfs {
+            objects: BTreeMap::new(),
+            workers: workers.max(1),
+            block_size: block_size.max(1),
+            replication: DEFAULT_REPLICATION,
+            disk: DiskModel::datanode(),
+            net: NetModel::lan(),
+        }
+    }
+
+    pub fn with_replication(mut self, r: usize) -> Self {
+        self.replication = r.max(1);
+        self
+    }
+
+    fn key_hash(key: &str) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// All replica hosts of block `index` of `key`.
+    pub fn replicas(&self, key: &str, index: usize) -> Vec<usize> {
+        let base = (Self::key_hash(key) as usize + index) % self.workers;
+        (0..self.replication.min(self.workers))
+            .map(|r| (base + r) % self.workers)
+            .collect()
+    }
+}
+
+impl StorageBackend for Hdfs {
+    fn name(&self) -> &'static str {
+        "hdfs"
+    }
+
+    fn put(&mut self, key: &str, bytes: Vec<u8>) -> Result<()> {
+        self.objects.insert(key.to_string(), bytes);
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<&[u8]> {
+        self.objects
+            .get(key)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| MareError::Storage(format!("hdfs: no such object `{key}`")))
+    }
+
+    fn list(&self) -> Vec<&str> {
+        self.objects.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn blocks(&self, key: &str) -> Result<Vec<BlockInfo>> {
+        let len = self.get(key)?.len() as u64;
+        let n = len.div_ceil(self.block_size).max(1);
+        Ok((0..n as usize)
+            .map(|i| BlockInfo {
+                index: i,
+                len: (len - i as u64 * self.block_size).min(self.block_size),
+                primary: Some(self.replicas(key, i)[0]),
+            })
+            .collect())
+    }
+
+    fn read_time(
+        &self,
+        reader_worker: usize,
+        primary: Option<usize>,
+        bytes: u64,
+        _concurrency: u32,
+    ) -> Duration {
+        match primary {
+            // short-circuit local read: straight off the datanode disk
+            Some(p) if p == reader_worker => self.disk.rw(bytes),
+            // remote: datanode disk + one LAN hop
+            _ => self.disk.rw(bytes) + self.net.transfer(bytes, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_split_and_spread() {
+        let mut h = Hdfs::new(4, 100);
+        h.put("big", vec![0u8; 350]).unwrap();
+        let blocks = h.blocks("big").unwrap();
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0].len, 100);
+        assert_eq!(blocks[3].len, 50);
+        // consecutive blocks land on consecutive workers
+        let hosts: Vec<usize> = blocks.iter().map(|b| b.primary.unwrap()).collect();
+        for w in 0..4 {
+            assert!(hosts.contains(&w), "{hosts:?}");
+        }
+    }
+
+    #[test]
+    fn replication_gives_distinct_hosts() {
+        let h = Hdfs::new(8, 100).with_replication(3);
+        let reps = h.replicas("k", 0);
+        assert_eq!(reps.len(), 3);
+        let set: std::collections::HashSet<_> = reps.iter().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn local_read_beats_remote() {
+        let mut h = Hdfs::new(4, 1 << 20);
+        h.put("k", vec![0u8; 1 << 20]).unwrap();
+        let primary = h.blocks("k").unwrap()[0].primary.unwrap();
+        let local = h.read_time(primary, Some(primary), 1 << 20, 1);
+        let remote = h.read_time((primary + 1) % 4, Some(primary), 1 << 20, 1);
+        assert!(local < remote);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let h = Hdfs::new(2, 100);
+        assert!(h.get("nope").is_err());
+        assert!(h.blocks("nope").is_err());
+    }
+
+    #[test]
+    fn empty_object_has_one_empty_block() {
+        let mut h = Hdfs::new(2, 100);
+        h.put("e", vec![]).unwrap();
+        let blocks = h.blocks("e").unwrap();
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].len, 0);
+    }
+}

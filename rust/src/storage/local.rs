@@ -1,0 +1,92 @@
+//! Driver-local store — free reads, no locality. Used by tests, the
+//! quickstart example, and as the decoupled shared store of the
+//! workflow-system baseline (where its *metered* variant applies).
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+use crate::simtime::{DiskModel, Duration};
+
+use super::{BlockInfo, StorageBackend};
+
+pub struct LocalFs {
+    objects: BTreeMap<String, Vec<u8>>,
+    /// Metered variant: charge reads at disk speed (workflow baseline's
+    /// shared-store traffic); unmetered reads are free.
+    disk: Option<DiskModel>,
+}
+
+impl LocalFs {
+    pub fn new() -> Self {
+        LocalFs { objects: BTreeMap::new(), disk: None }
+    }
+
+    /// Shared-store variant: all reads/writes cross a disk+NFS-ish pipe.
+    pub fn metered(disk: DiskModel) -> Self {
+        LocalFs { objects: BTreeMap::new(), disk: Some(disk) }
+    }
+}
+
+impl Default for LocalFs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StorageBackend for LocalFs {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn put(&mut self, key: &str, bytes: Vec<u8>) -> Result<()> {
+        self.objects.insert(key.to_string(), bytes);
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<&[u8]> {
+        self.objects
+            .get(key)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| MareError::Storage(format!("local: no such object `{key}`")))
+    }
+
+    fn list(&self) -> Vec<&str> {
+        self.objects.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn blocks(&self, key: &str) -> Result<Vec<BlockInfo>> {
+        let len = self.get(key)?.len() as u64;
+        Ok(vec![BlockInfo { index: 0, len, primary: None }])
+    }
+
+    fn read_time(
+        &self,
+        _reader_worker: usize,
+        _primary: Option<usize>,
+        bytes: u64,
+        _concurrency: u32,
+    ) -> Duration {
+        match self.disk {
+            Some(d) => d.rw(bytes),
+            None => Duration::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unmetered_reads_are_free() {
+        let mut l = LocalFs::new();
+        l.put("k", vec![0; 1000]).unwrap();
+        assert_eq!(l.read_time(0, None, 1000, 1), Duration::ZERO);
+    }
+
+    #[test]
+    fn metered_reads_cost_disk_time() {
+        let l = LocalFs::metered(DiskModel::hdd());
+        assert!(l.read_time(0, None, 1 << 20, 1) > Duration::ZERO);
+    }
+}

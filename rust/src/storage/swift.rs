@@ -1,0 +1,108 @@
+//! Swift model: the provider's object store, decoupled from the workers
+//! but *near* them ("by setting up the cluster on cPouta, we ran the
+//! analyses close to Swift, thus enabling fast ingestion"). No locality
+//! — every read crosses the service pipe, which has a healthy
+//! per-connection bandwidth and a shared aggregate cap.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+use crate::simtime::{Duration, NetModel};
+
+use super::{BlockInfo, StorageBackend};
+
+/// Swift segments large objects; 256 MiB keeps partition/block mapping
+/// comparable to HDFS runs.
+pub const SEGMENT_SIZE: u64 = 256 << 20;
+
+pub struct Swift {
+    objects: BTreeMap<String, Vec<u8>>,
+    net: NetModel,
+}
+
+impl Swift {
+    pub fn new() -> Self {
+        Swift { objects: BTreeMap::new(), net: NetModel::swift_service() }
+    }
+
+    pub fn with_net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+}
+
+impl Default for Swift {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StorageBackend for Swift {
+    fn name(&self) -> &'static str {
+        "swift"
+    }
+
+    fn put(&mut self, key: &str, bytes: Vec<u8>) -> Result<()> {
+        self.objects.insert(key.to_string(), bytes);
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<&[u8]> {
+        self.objects
+            .get(key)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| MareError::Storage(format!("swift: no such object `{key}`")))
+    }
+
+    fn list(&self) -> Vec<&str> {
+        self.objects.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn blocks(&self, key: &str) -> Result<Vec<BlockInfo>> {
+        let len = self.get(key)?.len() as u64;
+        let n = len.div_ceil(SEGMENT_SIZE).max(1);
+        Ok((0..n as usize)
+            .map(|i| BlockInfo {
+                index: i,
+                len: (len - i as u64 * SEGMENT_SIZE).min(SEGMENT_SIZE),
+                primary: None, // not on any worker
+            })
+            .collect())
+    }
+
+    fn read_time(
+        &self,
+        _reader_worker: usize,
+        _primary: Option<usize>,
+        bytes: u64,
+        concurrency: u32,
+    ) -> Duration {
+        self.net.transfer(bytes, concurrency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_locality_hints() {
+        let mut s = Swift::new();
+        s.put("k", vec![0u8; 100]).unwrap();
+        assert!(s.blocks("k").unwrap().iter().all(|b| b.primary.is_none()));
+    }
+
+    #[test]
+    fn aggregate_cap_slows_concurrent_readers() {
+        let s = Swift::new();
+        let one = s.read_time(0, None, 1 << 30, 1);
+        let many = s.read_time(0, None, 1 << 30, 32);
+        assert!(many > one);
+    }
+
+    #[test]
+    fn reader_identity_is_irrelevant() {
+        let s = Swift::new();
+        assert_eq!(s.read_time(0, None, 1 << 20, 4), s.read_time(7, Some(3), 1 << 20, 4));
+    }
+}

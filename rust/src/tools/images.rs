@@ -1,0 +1,148 @@
+//! Stock container images — the set the paper's listings pull.
+//!
+//! | Paper image                       | Here               | Contents |
+//! |-----------------------------------|--------------------|----------|
+//! | `ubuntu`                          | [`ubuntu`]         | POSIX coreutils subset |
+//! | `mcapuccini/oe:latest`            | [`oe`]             | fred + receptor baked at `/var/openeye/` |
+//! | `mcapuccini/sdsorter:latest`      | [`sdsorter_image`] | sdsorter |
+//! | `mcapuccini/alignment:latest`     | [`alignment`]      | bwa, samtools, gatk + `/ref/*` |
+//! | `opengenomics/vcftools-tools`     | [`vcftools`]       | vcf-concat |
+//!
+//! Image sizes are the real compressed sizes of the originals (pull-cost
+//! model inputs). [`stock_registry`] assembles the Docker-Hub analogue
+//! the examples and benches pull from.
+
+use std::sync::Arc;
+
+use crate::container::image::{Image, Registry};
+use crate::formats::fasta::Reference;
+use crate::tools::{bwa, fred, gatk, posix, sdsorter, vcf_concat};
+
+/// Receptor path Listing 2 passes to fred.
+pub const RECEPTOR_PATH: &str = "/var/openeye/hiv1_protease.oeb";
+/// Reference paths Listing 3 reads inside the alignment image.
+pub const REF_FASTA_PATH: &str = "/ref/human_g1k_v37.fasta";
+pub const REF_DICT_PATH: &str = "/ref/human_g1k_v37.dict";
+
+/// `ubuntu` — coreutils only (Listing 1's grep/wc/awk).
+pub fn ubuntu() -> Arc<Image> {
+    let mut b = Image::builder("ubuntu").size(29 << 20);
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
+/// `mcapuccini/oe:latest` — FRED + the receptor structure. The real image
+/// is private (carries a license); the baked receptor here is an opaque
+/// marker file, the actual receptor grid being deterministic synthetic
+/// data inside the runtime (see `ToolRuntime::make_receptor`).
+pub fn oe() -> Arc<Image> {
+    let mut b = Image::builder("mcapuccini/oe:latest")
+        .size(612 << 20)
+        .tool(fred::tool())
+        .file(RECEPTOR_PATH, b"OEB receptor: HIV-1 protease (synthetic grid in runtime)".to_vec());
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
+/// `mcapuccini/sdsorter:latest`.
+pub fn sdsorter_image() -> Arc<Image> {
+    let mut b = Image::builder("mcapuccini/sdsorter:latest").size(87 << 20).tool(sdsorter::tool());
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
+/// `mcapuccini/alignment:latest` — bwa + samtools + gatk with the
+/// reference genome (and its `.dict`) baked under `/ref`, exactly the
+/// layout Listing 3's commands expect.
+pub fn alignment(reference: &Reference) -> Arc<Image> {
+    let mut b = Image::builder("mcapuccini/alignment:latest")
+        .size(1740 << 20) // gatk images are chunky
+        .tool(bwa::tool())
+        .tool(bwa::samtools_tool())
+        .tool(gatk::tool())
+        .file(REF_FASTA_PATH, reference.to_fasta().into_bytes())
+        .file(REF_DICT_PATH, reference.to_dict().into_bytes());
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
+/// `opengenomics/vcftools-tools:latest`.
+pub fn vcftools() -> Arc<Image> {
+    let mut b =
+        Image::builder("opengenomics/vcftools-tools:latest").size(301 << 20).tool(vcf_concat::tool());
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
+/// The full stock registry. `reference` is only needed when the SNP
+/// pipeline images are (it is baked into `mcapuccini/alignment`).
+pub fn stock_registry(reference: Option<&Reference>) -> Registry {
+    let mut reg = Registry::new();
+    reg.push(ubuntu());
+    reg.push(oe());
+    reg.push(sdsorter_image());
+    reg.push(vcftools());
+    if let Some(r) = reference {
+        reg.push(alignment(r));
+    }
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::fasta::Contig;
+
+    #[test]
+    fn stock_images_carry_their_tools() {
+        let reg = stock_registry(None);
+        assert!(reg.pull("ubuntu").unwrap().tool("grep").is_ok());
+        assert!(reg.pull("mcapuccini/oe:latest").unwrap().tool("fred").is_ok());
+        assert!(reg.pull("mcapuccini/sdsorter:latest").unwrap().tool("sdsorter").is_ok());
+        assert!(reg.pull("opengenomics/vcftools-tools:latest").unwrap().tool("vcf-concat").is_ok());
+        // alignment image absent without a reference
+        assert!(reg.pull("mcapuccini/alignment:latest").is_err());
+    }
+
+    #[test]
+    fn oe_image_bakes_the_receptor() {
+        let img = oe();
+        assert!(img.baked_files().iter().any(|(p, _)| p == RECEPTOR_PATH));
+    }
+
+    #[test]
+    fn alignment_image_bakes_reference_and_dict() {
+        let r = Reference {
+            contigs: vec![Contig { name: "chr1".into(), seq: b"ACGT".repeat(10) }],
+        };
+        let reg = stock_registry(Some(&r));
+        let img = reg.pull("mcapuccini/alignment:latest").unwrap();
+        assert!(img.tool("bwa").is_ok());
+        assert!(img.tool("samtools").is_ok());
+        assert!(img.tool("gatk").is_ok());
+        let fasta = img
+            .baked_files()
+            .iter()
+            .find(|(p, _)| p == REF_FASTA_PATH)
+            .map(|(_, b)| String::from_utf8(b.clone()).unwrap())
+            .unwrap();
+        assert!(fasta.starts_with(">chr1"));
+        let dict = img
+            .baked_files()
+            .iter()
+            .find(|(p, _)| p == REF_DICT_PATH)
+            .map(|(_, b)| String::from_utf8(b.clone()).unwrap())
+            .unwrap();
+        assert!(dict.contains("@SQ\tSN:chr1\tLN:40"));
+    }
+}

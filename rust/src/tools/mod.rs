@@ -1,0 +1,21 @@
+//! Tools installable into container images.
+//!
+//! * [`posix`] — the coreutils subset the paper's Listing 1/3 commands
+//!   use (grep, wc, awk, cat, gzip, sort, ...), built from scratch.
+//! * Domain tools, each the simulated analogue of a real bioinformatics
+//!   binary (DESIGN.md §3 documents every substitution):
+//!   [`fred`] (OpenEye FRED docking — scores via the AOT docking
+//!   artifact), [`sdsorter`], [`bwa`] (+ a `samtools view` shim),
+//!   [`gatk`] (HaplotypeCaller via the AOT genotype artifact),
+//!   [`vcf_concat`] (vcftools).
+//! * [`images`] — the stock image set the examples/benches pull
+//!   (`ubuntu`, `mare/oe`, `mare/sdsorter`, `mare/alignment`,
+//!   `mare/vcftools`).
+
+pub mod bwa;
+pub mod fred;
+pub mod gatk;
+pub mod images;
+pub mod posix;
+pub mod sdsorter;
+pub mod vcf_concat;

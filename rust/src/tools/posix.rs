@@ -1,0 +1,632 @@
+//! POSIX coreutils subset — exactly what the paper's commands use, plus
+//! small margin. Each tool reads file args from the container [`Vfs`]
+//! and/or stdin, like the real thing.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::container::tool::{Tool, ToolCtx, ToolOutput};
+use crate::error::{MareError, Result};
+
+/// All POSIX tools, ready for `ImageBuilder::tool`.
+pub fn all() -> Vec<Arc<dyn Tool>> {
+    vec![
+        Arc::new(Cat),
+        Arc::new(Echo),
+        Arc::new(Grep),
+        Arc::new(Wc),
+        Arc::new(Awk),
+        Arc::new(Head),
+        Arc::new(Tail),
+        Arc::new(Sort),
+        Arc::new(Uniq),
+        Arc::new(Gzip),
+        Arc::new(Gunzip),
+        Arc::new(Zcat),
+        Arc::new(Tee),
+        Arc::new(Tr),
+    ]
+}
+
+/// Read all file args concatenated; stdin when no args.
+fn inputs(ctx: &ToolCtx, args: &[String]) -> Result<Vec<u8>> {
+    let files: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
+    if files.is_empty() {
+        return Ok(ctx.stdin.clone());
+    }
+    let mut out = Vec::new();
+    for f in files {
+        out.extend_from_slice(ctx.fs.read(f)?);
+    }
+    Ok(out)
+}
+
+fn to_lines(bytes: &[u8]) -> Result<Vec<String>> {
+    let s = String::from_utf8(bytes.to_vec())
+        .map_err(|_| MareError::Shell("binary data where text expected".into()))?;
+    Ok(s.lines().map(String::from).collect())
+}
+
+// ---------------------------------------------------------------- cat
+pub struct Cat;
+impl Tool for Cat {
+    fn name(&self) -> &'static str {
+        "cat"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let args = ctx.args.clone();
+        ToolOutput::ok(inputs(ctx, &args)?)
+    }
+}
+
+// --------------------------------------------------------------- echo
+pub struct Echo;
+impl Tool for Echo {
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let mut s = ctx.args.join(" ");
+        s.push('\n');
+        ToolOutput::ok_str(s)
+    }
+}
+
+// --------------------------------------------------------------- grep
+/// `grep [-o|-c|-v] PATTERN [FILE...]` (regex via the regex crate; POSIX
+/// bracket expressions like `[GC]` work unchanged).
+pub struct Grep;
+impl Tool for Grep {
+    fn name(&self) -> &'static str {
+        "grep"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let only_matching = ctx.args.iter().any(|a| a == "-o");
+        let count = ctx.args.iter().any(|a| a == "-c");
+        let invert = ctx.args.iter().any(|a| a == "-v");
+        let rest: Vec<String> =
+            ctx.args.iter().filter(|a| !a.starts_with('-')).cloned().collect();
+        let pattern = rest
+            .first()
+            .ok_or_else(|| MareError::Shell("grep: missing pattern".into()))?;
+        let re = regex::Regex::new(pattern)
+            .map_err(|e| MareError::Shell(format!("grep: bad pattern: {e}")))?;
+
+        let file_args: Vec<String> = rest[1..].to_vec();
+        let data = inputs(ctx, &file_args)?;
+        let lines = to_lines(&data)?;
+
+        let mut out = String::new();
+        let mut n = 0u64;
+        for line in &lines {
+            let matched = re.is_match(line) != invert;
+            if !matched {
+                continue;
+            }
+            n += 1;
+            if count {
+                continue;
+            }
+            if only_matching && !invert {
+                for m in re.find_iter(line) {
+                    out.push_str(m.as_str());
+                    out.push('\n');
+                }
+            } else {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        if count {
+            out = format!("{n}\n");
+        }
+        // grep exits 1 on no match; the paper's pipelines never rely on
+        // that, and set -e would kill them, so we stay permissive.
+        ToolOutput::ok_str(out)
+    }
+}
+
+// ----------------------------------------------------------------- wc
+pub struct Wc;
+impl Tool for Wc {
+    fn name(&self) -> &'static str {
+        "wc"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let args = ctx.args.clone();
+        let data = inputs(ctx, &args)?;
+        let lines = data.iter().filter(|&&b| b == b'\n').count();
+        let words = String::from_utf8_lossy(&data).split_whitespace().count();
+        let bytes = data.len();
+        let out = if ctx.args.iter().any(|a| a == "-l") {
+            format!("{lines}\n")
+        } else if ctx.args.iter().any(|a| a == "-c") {
+            format!("{bytes}\n")
+        } else if ctx.args.iter().any(|a| a == "-w") {
+            format!("{words}\n")
+        } else {
+            format!("{lines} {words} {bytes}\n")
+        };
+        ToolOutput::ok_str(out)
+    }
+}
+
+// ---------------------------------------------------------------- awk
+/// The awk programs the paper uses, interpreted structurally:
+/// * `{s+=$N} END {print s}` — numeric column sum
+/// * `{print $N}` — column projection
+/// * `END {print NR}` — record count
+pub struct Awk;
+impl Tool for Awk {
+    fn name(&self) -> &'static str {
+        "awk"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let rest: Vec<String> =
+            ctx.args.iter().filter(|a| !a.starts_with('-')).cloned().collect();
+        let program = rest
+            .first()
+            .ok_or_else(|| MareError::Shell("awk: missing program".into()))?
+            .clone();
+        let file_args: Vec<String> = rest[1..].to_vec();
+        let data = inputs(ctx, &file_args)?;
+        let lines = to_lines(&data)?;
+
+        static SUM_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
+            regex::Regex::new(
+                r"^\{\s*(\w+)\s*\+=\s*\$(\d+)\s*\}\s*END\s*\{\s*print\s+(\w+)\s*\}$",
+            )
+            .unwrap()
+        });
+        static PRINT_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
+            regex::Regex::new(r"^\{\s*print\s+\$(\d+)\s*\}$").unwrap()
+        });
+        static NR_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
+            regex::Regex::new(r"^END\s*\{\s*print\s+NR\s*\}$").unwrap()
+        });
+
+        let program = program.trim().to_string();
+        if let Some(caps) = SUM_RE.captures(&program) {
+            if caps[1] != caps[3] {
+                return Err(MareError::Shell(format!(
+                    "awk: accumulator mismatch in `{program}`"
+                )));
+            }
+            let col: usize = caps[2].parse().unwrap();
+            let mut sum = 0f64;
+            for line in &lines {
+                if let Some(v) = line.split_whitespace().nth(col.saturating_sub(1)) {
+                    sum += v.parse::<f64>().unwrap_or(0.0);
+                }
+            }
+            let out = if sum.fract() == 0.0 {
+                format!("{}\n", sum as i64)
+            } else {
+                format!("{sum}\n")
+            };
+            return ToolOutput::ok_str(out);
+        }
+        if let Some(caps) = PRINT_RE.captures(&program) {
+            let col: usize = caps[1].parse().unwrap();
+            let mut out = String::new();
+            for line in &lines {
+                if let Some(v) = line.split_whitespace().nth(col.saturating_sub(1)) {
+                    out.push_str(v);
+                    out.push('\n');
+                }
+            }
+            return ToolOutput::ok_str(out);
+        }
+        if NR_RE.is_match(&program) {
+            return ToolOutput::ok_str(format!("{}\n", lines.len()));
+        }
+        Err(MareError::Shell(format!("awk: unsupported program `{program}`")))
+    }
+}
+
+// ------------------------------------------------------------ head/tail
+pub struct Head;
+impl Tool for Head {
+    fn name(&self) -> &'static str {
+        "head"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let n = n_flag(&ctx.args, 10)?;
+        let args: Vec<String> = strip_n_flag(&ctx.args);
+        let lines = to_lines(&inputs(ctx, &args)?)?;
+        ToolOutput::ok_str(join_lines(lines.iter().take(n)))
+    }
+}
+
+pub struct Tail;
+impl Tool for Tail {
+    fn name(&self) -> &'static str {
+        "tail"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let n = n_flag(&ctx.args, 10)?;
+        let args: Vec<String> = strip_n_flag(&ctx.args);
+        let lines = to_lines(&inputs(ctx, &args)?)?;
+        let skip = lines.len().saturating_sub(n);
+        ToolOutput::ok_str(join_lines(lines.iter().skip(skip)))
+    }
+}
+
+fn n_flag(args: &[String], default: usize) -> Result<usize> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "-n" {
+            let v = it.next().ok_or_else(|| MareError::Shell("-n wants a value".into()))?;
+            return v
+                .parse()
+                .map_err(|_| MareError::Shell(format!("bad -n value `{v}`")));
+        }
+        if let Some(v) = a.strip_prefix("-n") {
+            if let Ok(n) = v.parse() {
+                return Ok(n);
+            }
+        }
+    }
+    Ok(default)
+}
+
+fn strip_n_flag(args: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut skip = false;
+    for a in args {
+        if skip {
+            skip = false;
+            continue;
+        }
+        if a == "-n" {
+            skip = true;
+            continue;
+        }
+        if a.starts_with("-n") && a[2..].parse::<usize>().is_ok() {
+            continue;
+        }
+        out.push(a.clone());
+    }
+    out
+}
+
+fn join_lines<'a, I: Iterator<Item = &'a String>>(lines: I) -> String {
+    let mut out = String::new();
+    for l in lines {
+        out.push_str(l);
+        out.push('\n');
+    }
+    out
+}
+
+// --------------------------------------------------------------- sort
+pub struct Sort;
+impl Tool for Sort {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let numeric = ctx.args.iter().any(|a| a == "-n");
+        let reverse = ctx.args.iter().any(|a| a == "-r");
+        let args = ctx.args.clone();
+        let mut lines = to_lines(&inputs(ctx, &args)?)?;
+        if numeric {
+            lines.sort_by(|a, b| {
+                let fa = a.split_whitespace().next().and_then(|v| v.parse::<f64>().ok());
+                let fb = b.split_whitespace().next().and_then(|v| v.parse::<f64>().ok());
+                fa.partial_cmp(&fb).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        } else {
+            lines.sort();
+        }
+        if reverse {
+            lines.reverse();
+        }
+        ToolOutput::ok_str(join_lines(lines.iter()))
+    }
+}
+
+// --------------------------------------------------------------- uniq
+pub struct Uniq;
+impl Tool for Uniq {
+    fn name(&self) -> &'static str {
+        "uniq"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let counts = ctx.args.iter().any(|a| a == "-c");
+        let args = ctx.args.clone();
+        let lines = to_lines(&inputs(ctx, &args)?)?;
+        let mut out = String::new();
+        let mut i = 0;
+        while i < lines.len() {
+            let mut j = i + 1;
+            while j < lines.len() && lines[j] == lines[i] {
+                j += 1;
+            }
+            if counts {
+                out.push_str(&format!("{:>7} {}\n", j - i, lines[i]));
+            } else {
+                out.push_str(&lines[i]);
+                out.push('\n');
+            }
+            i = j;
+        }
+        ToolOutput::ok_str(out)
+    }
+}
+
+// ----------------------------------------------------------------- tr
+/// `tr -d CHARS` and `tr A B` (the two useful forms).
+pub struct Tr;
+impl Tool for Tr {
+    fn name(&self) -> &'static str {
+        "tr"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let s = ctx.stdin_string()?;
+        if ctx.args.first().map(|a| a == "-d").unwrap_or(false) {
+            let del = ctx.args.get(1).cloned().unwrap_or_default();
+            let out: String = s.chars().filter(|c| !del.contains(*c)).collect();
+            return ToolOutput::ok_str(out);
+        }
+        let from = ctx.args.first().cloned().unwrap_or_default();
+        let to = ctx.args.get(1).cloned().unwrap_or_default();
+        let from: Vec<char> = from.chars().collect();
+        let to: Vec<char> = to.chars().collect();
+        let out: String = s
+            .chars()
+            .map(|c| match from.iter().position(|&f| f == c) {
+                Some(i) => *to.get(i).or(to.last()).unwrap_or(&c),
+                None => c,
+            })
+            .collect();
+        ToolOutput::ok_str(out)
+    }
+}
+
+// ---------------------------------------------------------- gzip family
+/// `gzip FILE...` (in place, adds .gz), `gzip -c` (stdin->stdout),
+/// `gzip /dir/*` via shell glob.
+pub struct Gzip;
+impl Tool for Gzip {
+    fn name(&self) -> &'static str {
+        "gzip"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        if ctx.args.iter().any(|a| a == "-c") {
+            return ToolOutput::ok(compress(&ctx.stdin)?);
+        }
+        let files: Vec<String> =
+            ctx.args.iter().filter(|a| !a.starts_with('-')).cloned().collect();
+        if files.is_empty() {
+            return ToolOutput::ok(compress(&ctx.stdin)?);
+        }
+        for f in files {
+            let data = ctx.fs.read(&f)?.to_vec();
+            ctx.fs.write(&format!("{f}.gz"), compress(&data)?)?;
+            ctx.fs.remove(&f)?;
+        }
+        ToolOutput::empty()
+    }
+}
+
+pub struct Gunzip;
+impl Tool for Gunzip {
+    fn name(&self) -> &'static str {
+        "gunzip"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        if ctx.args.iter().any(|a| a == "-c") {
+            let files: Vec<String> = ctx
+                .args
+                .iter()
+                .filter(|a| !a.starts_with('-'))
+                .cloned()
+                .collect();
+            let mut out = Vec::new();
+            for f in files {
+                let data = ctx.fs.read(&f)?.to_vec();
+                out.extend(decompress(&data)?);
+            }
+            if out.is_empty() {
+                out = decompress(&ctx.stdin)?;
+            }
+            return ToolOutput::ok(out);
+        }
+        let files: Vec<String> =
+            ctx.args.iter().filter(|a| !a.starts_with('-')).cloned().collect();
+        for f in files {
+            let data = ctx.fs.read(&f)?.to_vec();
+            let plain = decompress(&data)?;
+            let target = f.strip_suffix(".gz").unwrap_or(&f).to_string();
+            ctx.fs.write(&target, plain)?;
+            if target != f {
+                ctx.fs.remove(&f)?;
+            }
+        }
+        ToolOutput::empty()
+    }
+}
+
+pub struct Zcat;
+impl Tool for Zcat {
+    fn name(&self) -> &'static str {
+        "zcat"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let mut out = Vec::new();
+        let files: Vec<String> =
+            ctx.args.iter().filter(|a| !a.starts_with('-')).cloned().collect();
+        if files.is_empty() {
+            out = decompress(&ctx.stdin)?;
+        }
+        for f in files {
+            let data = ctx.fs.read(&f)?.to_vec();
+            out.extend(decompress(&data)?);
+        }
+        ToolOutput::ok(out)
+    }
+}
+
+pub fn compress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
+    enc.write_all(data)?;
+    Ok(enc.finish()?)
+}
+
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = flate2::read::GzDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out)
+        .map_err(|e| MareError::Shell(format!("gunzip: {e}")))?;
+    Ok(out)
+}
+
+// ----------------------------------------------------------------- tee
+pub struct Tee;
+impl Tool for Tee {
+    fn name(&self) -> &'static str {
+        "tee"
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let stdin = ctx.stdin.clone();
+        for f in ctx.args.clone() {
+            if !f.starts_with('-') {
+                ctx.fs.write(&f, stdin.clone())?;
+            }
+        }
+        ToolOutput::ok(stdin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::vfs::Vfs;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn run_tool(
+        tool: &dyn Tool,
+        args: &[&str],
+        stdin: &[u8],
+        fs: &mut Vfs,
+    ) -> Result<ToolOutput> {
+        let env = BTreeMap::new();
+        let mut ctx = ToolCtx {
+            args: args.iter().map(|s| s.to_string()).collect(),
+            stdin: stdin.to_vec(),
+            fs,
+            env: &env,
+            runtime: None,
+            rng: Rng::new(0),
+        };
+        tool.run(&mut ctx)
+    }
+
+    #[test]
+    fn grep_o_counts_gc_like_listing1() {
+        let mut fs = Vfs::disk();
+        fs.write("/dna", b"GATTACA\nGCGC\n".to_vec()).unwrap();
+        let out = run_tool(&Grep, &["-o", "[GC]", "/dna"], b"", &mut fs).unwrap();
+        let wc = run_tool(&Wc, &["-l"], &out.stdout, &mut fs).unwrap();
+        assert_eq!(String::from_utf8(wc.stdout).unwrap().trim(), "6");
+    }
+
+    #[test]
+    fn grep_variants() {
+        let mut fs = Vfs::disk();
+        fs.write("/f", b"aaa\nbbb\nab\n".to_vec()).unwrap();
+        let c = run_tool(&Grep, &["-c", "a", "/f"], b"", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(c.stdout).unwrap().trim(), "2");
+        let v = run_tool(&Grep, &["-v", "a", "/f"], b"", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(v.stdout).unwrap(), "bbb\n");
+    }
+
+    #[test]
+    fn awk_sum_like_listing1() {
+        let mut fs = Vfs::disk();
+        fs.write("/counts", b"3\n4\n5\n".to_vec()).unwrap();
+        let out =
+            run_tool(&Awk, &["{s+=$1} END {print s}", "/counts"], b"", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap().trim(), "12");
+    }
+
+    #[test]
+    fn awk_print_column() {
+        let mut fs = Vfs::disk();
+        let out =
+            run_tool(&Awk, &["{print $2}"], b"a b c\nd e f\n", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap(), "b\ne\n");
+    }
+
+    #[test]
+    fn awk_rejects_unknown_program() {
+        let mut fs = Vfs::disk();
+        assert!(run_tool(&Awk, &["BEGIN {weird}"], b"", &mut fs).is_err());
+    }
+
+    #[test]
+    fn wc_modes() {
+        let mut fs = Vfs::disk();
+        let out = run_tool(&Wc, &["-l"], b"a\nb\n", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap().trim(), "2");
+        let out = run_tool(&Wc, &["-c"], b"abcd", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap().trim(), "4");
+        let out = run_tool(&Wc, &["-w"], b"a b  c\n", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap().trim(), "3");
+    }
+
+    #[test]
+    fn sort_numeric_reverse() {
+        let mut fs = Vfs::disk();
+        let out = run_tool(&Sort, &["-n", "-r"], b"2\n10\n1\n", &mut fs).unwrap();
+        assert_eq!(String::from_utf8(out.stdout).unwrap(), "10\n2\n1\n");
+    }
+
+    #[test]
+    fn head_tail() {
+        let mut fs = Vfs::disk();
+        let data = b"1\n2\n3\n4\n5\n";
+        let h = run_tool(&Head, &["-n", "2"], data, &mut fs).unwrap();
+        assert_eq!(String::from_utf8(h.stdout).unwrap(), "1\n2\n");
+        let t = run_tool(&Tail, &["-n2"], data, &mut fs).unwrap();
+        assert_eq!(String::from_utf8(t.stdout).unwrap(), "4\n5\n");
+    }
+
+    #[test]
+    fn uniq_counts() {
+        let mut fs = Vfs::disk();
+        let out = run_tool(&Uniq, &["-c"], b"a\na\nb\n", &mut fs).unwrap();
+        let text = String::from_utf8(out.stdout).unwrap();
+        assert!(text.contains("2 a") && text.contains("1 b"), "{text}");
+    }
+
+    #[test]
+    fn gzip_roundtrip_in_place() {
+        let mut fs = Vfs::disk();
+        fs.write("/out/x.vcf", b"data".to_vec()).unwrap();
+        run_tool(&Gzip, &["/out/x.vcf"], b"", &mut fs).unwrap();
+        assert!(fs.exists("/out/x.vcf.gz"));
+        assert!(!fs.exists("/out/x.vcf"));
+        run_tool(&Gunzip, &["/out/x.vcf.gz"], b"", &mut fs).unwrap();
+        assert_eq!(fs.read("/out/x.vcf").unwrap(), b"data");
+    }
+
+    #[test]
+    fn gzip_stream_roundtrip() {
+        let mut fs = Vfs::disk();
+        let gz = run_tool(&Gzip, &["-c"], b"hello world", &mut fs).unwrap();
+        let plain = run_tool(&Zcat, &[], &gz.stdout, &mut fs).unwrap();
+        assert_eq!(plain.stdout, b"hello world");
+    }
+
+    #[test]
+    fn tr_forms() {
+        let mut fs = Vfs::disk();
+        let out = run_tool(&Tr, &["-d", "\n"], b"a\nb\n", &mut fs).unwrap();
+        assert_eq!(out.stdout, b"ab");
+        let out = run_tool(&Tr, &["ab", "xy"], b"abc", &mut fs).unwrap();
+        assert_eq!(out.stdout, b"xyc");
+    }
+}

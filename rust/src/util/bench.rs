@@ -1,0 +1,192 @@
+//! Micro-bench harness driving `rust/benches/*` (offline substitute for
+//! criterion; the Cargo.toml bench targets use `harness = false`).
+//!
+//! Benches do two things here:
+//! 1. timing loops with warmup + robust statistics (`Bench::time`), and
+//! 2. paper-figure regeneration tables (`Table`), which print the same
+//!    rows/series the paper reports and are archived as JSON under
+//!    `target/mare-bench/` so EXPERIMENTS.md can reference exact runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// One timing sample set with robust stats.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn throughput(&self, per_iter_items: f64) -> f64 {
+        per_iter_items / self.median.as_secs_f64()
+    }
+}
+
+/// Bench context: filters from argv (substring match like criterion).
+pub struct Bench {
+    filter: Option<String>,
+    timings: Vec<Timing>,
+    name: String,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        println!("== bench: {name} ==");
+        Bench { filter, timings: Vec::new(), name: name.to_string() }
+    }
+
+    fn enabled(&self, case: &str) -> bool {
+        self.filter.as_ref().map(|f| case.contains(f.as_str())).unwrap_or(true)
+    }
+
+    /// Time `f` with warmup; target ~`budget` of total measurement.
+    pub fn time<F: FnMut()>(&mut self, case: &str, mut f: F) -> Option<Timing> {
+        if !self.enabled(case) {
+            return None;
+        }
+        // Warmup + calibration: find iters that fit the budget.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(100));
+        let budget = Duration::from_millis(
+            std::env::var("MARE_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
+        );
+        let iters = (budget.as_nanos() / once.as_nanos()).clamp(5, 1000) as u32;
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / iters;
+        let timing = Timing {
+            name: case.to_string(),
+            iters,
+            mean,
+            median,
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!(
+            "  {case:<44} median {:>10.3?}  mean {:>10.3?}  ({iters} iters)",
+            timing.median, timing.mean
+        );
+        self.timings.push(timing.clone());
+        Some(timing)
+    }
+
+    /// Persist all timings under target/mare-bench/<bench>.json.
+    pub fn finish(&self) {
+        let dir = std::path::Path::new("target/mare-bench");
+        let _ = std::fs::create_dir_all(dir);
+        let entries: Vec<Json> = self
+            .timings
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::str(t.name.clone())),
+                    ("iters", Json::num(t.iters as f64)),
+                    ("median_ns", Json::num(t.median.as_nanos() as f64)),
+                    ("mean_ns", Json::num(t.mean.as_nanos() as f64)),
+                    ("min_ns", Json::num(t.min.as_nanos() as f64)),
+                    ("max_ns", Json::num(t.max.as_nanos() as f64)),
+                ])
+            })
+            .collect();
+        let _ = std::fs::write(
+            dir.join(format!("{}.json", self.name)),
+            Json::obj(vec![("bench", Json::str(self.name.clone())), ("timings", Json::Arr(entries))])
+                .to_string_pretty(),
+        );
+    }
+}
+
+/// Paper-style results table (printed + archived as JSON).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n-- {} --", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("  {:<w$}", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Archive under target/mare-bench/<slug>.table.json.
+    pub fn save(&self, slug: &str) {
+        let dir = std::path::Path::new("target/mare-bench");
+        let _ = std::fs::create_dir_all(dir);
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+            .collect();
+        let j = Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("headers", Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let _ = std::fs::write(dir.join(format!("{slug}.table.json")), j.to_string_pretty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Byte-size formatting/parsing helpers shared by configs and reports.
+
+/// Human-readable byte size ("1.50 GiB").
+pub fn human(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Parse "512", "64KiB", "1.5 GiB", "2GB" (decimal suffixes are 1024-based
+/// here; cluster configs don't care about the SI distinction).
+pub fn parse(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !(c.is_ascii_digit() || c == '.'))?;
+    let (num, unit) = if split == 0 { return None } else { s.split_at(split) };
+    let num: f64 = num.parse().ok()?;
+    let mult: u64 = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" | "" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1u64 << 40,
+        _ => return None,
+    };
+    Some((num * mult as f64) as u64)
+}
+
+/// Parse with a pure-number fallback ("4096" -> 4096 bytes).
+pub fn parse_or_number(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_round_numbers() {
+        assert_eq!(human(0), "0 B");
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(1536), "1.50 KiB");
+        assert_eq!(human(3 << 30), "3.00 GiB");
+    }
+
+    #[test]
+    fn parses_suffixes() {
+        assert_eq!(parse("64KiB"), Some(64 << 10));
+        assert_eq!(parse("1.5 GiB"), Some((1.5 * (1u64 << 30) as f64) as u64));
+        assert_eq!(parse("2GB"), Some(2 << 30));
+        assert_eq!(parse_or_number("4096"), Some(4096));
+        assert_eq!(parse("x"), None);
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny argv parser for the `mare` binary (offline substitute for clap).
+//!
+//! Grammar: `mare <subcommand> [--flag[=value]|--flag value]... [positional]...`
+
+use std::collections::BTreeMap;
+
+use crate::error::{MareError, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| MareError::Config(format!("--{name} wants an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| MareError::Config(format!("--{name} wants an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        let a = parse(&["run", "--workers", "8", "--storage=hdfs", "input.sdf", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.flag("workers"), Some("8"));
+        assert_eq!(a.flag("storage"), Some("hdfs"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["input.sdf"]);
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.flag_usize("n", 1).unwrap(), 12);
+        assert_eq!(a.flag_usize("m", 7).unwrap(), 7);
+        let bad = parse(&["x", "--n", "NaN"]);
+        assert!(bad.flag_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Minimal stderr logger for the `log` facade.
+//!
+//! Level comes from `MARE_LOG` (error|warn|info|debug|trace); defaults to
+//! `info` for the binary and `warn` under tests.
+
+use std::io::Write;
+use std::sync::Once;
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:<5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent).
+pub fn init(default_level: log::LevelFilter) {
+    INIT.call_once(|| {
+        let level = std::env::var("MARE_LOG")
+            .ok()
+            .and_then(|s| s.parse::<log::LevelFilter>().ok())
+            .unwrap_or(default_level);
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init(log::LevelFilter::Warn);
+        super::init(log::LevelFilter::Trace);
+        log::warn!("logger smoke test");
+    }
+}

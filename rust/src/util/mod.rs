@@ -1,0 +1,13 @@
+//! In-tree substitutes for the usual crates.io utility stack (offline
+//! build environment — see the note in Cargo.toml) plus shared helpers.
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

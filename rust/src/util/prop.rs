@@ -1,0 +1,91 @@
+//! Mini property-testing loop (offline substitute for proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs the property against `cases`
+//! deterministically-seeded random inputs. On failure it re-runs the same
+//! case to confirm, then panics with the reproducing seed so the case can
+//! be pinned: `check_seed(name, seed, f)`.
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of property `f`.
+pub fn check<F: Fn(&mut Rng) -> PropResult>(name: &str, cases: u64, f: F) {
+    let base = fixed_base_seed(name);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {i}/{cases}\n  seed: {seed:#x}\n  {msg}\n\
+                 reproduce with: check_seed(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing seed.
+pub fn check_seed<F: Fn(&mut Rng) -> PropResult>(name: &str, seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property `{name}` failed at pinned seed {seed:#x}: {msg}");
+    }
+}
+
+/// Seeds are derived from the property name so adding properties does not
+/// reshuffle others' cases; `MARE_PROP_SEED` overrides for exploration.
+fn fixed_base_seed(name: &str) -> u64 {
+    if let Ok(s) = std::env::var("MARE_PROP_SEED") {
+        if let Ok(v) = s.parse::<u64>() {
+            return v;
+        }
+    }
+    // FNV-1a over the name.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_stable_per_name() {
+        assert_eq!(fixed_base_seed("x"), fixed_base_seed("x"));
+        assert_ne!(fixed_base_seed("x"), fixed_base_seed("y"));
+    }
+}

@@ -1,0 +1,263 @@
+//! Shared experiment driver: a resolved [`RunConfigFile`] → generated
+//! data on the configured storage backend → ingestion → pipeline →
+//! report. The `mare run` subcommand, the examples and the benches all
+//! go through here, so every number in EXPERIMENTS.md has one code path.
+
+use crate::cluster::RunReport;
+use crate::config::{BackendKind, RunConfigFile, Workload};
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::storage::{ingest_text, Hdfs, IngestReport, LocalFs, StorageBackend, Swift, S3};
+
+use super::{gc, genlib, genreads, snp, vs};
+
+/// Everything a run produces.
+pub struct DriverResult {
+    pub ingest: IngestReport,
+    pub report: RunReport,
+    /// Workload-specific result digest (GC count, top poses, SNP calls).
+    pub digest: String,
+}
+
+/// Build the configured backend holding `key` = `bytes`.
+pub fn make_backend(kind: BackendKind, workers: usize, key: &str, bytes: Vec<u8>) -> Result<Box<dyn StorageBackend>> {
+    // block size that spreads any input over all workers
+    let block = (bytes.len() as u64 / (workers as u64 * 4)).max(64 << 10);
+    let mut backend: Box<dyn StorageBackend> = match kind {
+        BackendKind::Hdfs => Box::new(Hdfs::new(workers, block)),
+        BackendKind::Swift => Box::new(Swift::new()),
+        BackendKind::S3 => Box::new(S3::new()),
+        BackendKind::Local => Box::new(LocalFs::new()),
+    };
+    backend.put(key, bytes)?;
+    Ok(backend)
+}
+
+/// Run the configured workload end-to-end.
+pub fn run(cfg: &RunConfigFile) -> Result<DriverResult> {
+    match cfg.workload {
+        Workload::Gc => run_gc(cfg),
+        Workload::Vs => run_vs(cfg),
+        Workload::Snp => run_snp(cfg),
+    }
+}
+
+/// Default partition count: 2 waves per vCPU-bound stage.
+fn partitions(cfg: &RunConfigFile) -> usize {
+    cfg.cluster.workers * 2
+}
+
+fn run_gc(cfg: &RunConfigFile) -> Result<DriverResult> {
+    let genome = gc::genome_text(cfg.seed, cfg.scale, 80);
+    let backend =
+        make_backend(cfg.backend, cfg.cluster.workers, "genome.txt", genome.into_bytes())?;
+    let (ds, ingest) = ingest_text(
+        backend.as_ref(),
+        "genome.txt",
+        "\n",
+        partitions(cfg),
+        cfg.cluster.workers,
+    )?;
+    let cluster = super::make_cluster(cfg.cluster.clone(), None, None)?;
+    let pipeline = gc::pipeline(cluster, ds);
+    let out = pipeline.run()?;
+    let digest = format!("gc_count={}", out.collect_text("\n").trim());
+    Ok(DriverResult { ingest, report: out.report, digest })
+}
+
+fn run_vs(cfg: &RunConfigFile) -> Result<DriverResult> {
+    let library = genlib::library_sdf(cfg.seed, cfg.scale);
+    let backend =
+        make_backend(cfg.backend, cfg.cluster.workers, "library.sdf", library.into_bytes())?;
+    let (ds, ingest) = ingest_text(
+        backend.as_ref(),
+        "library.sdf",
+        vs::SDF_SEP,
+        partitions(cfg),
+        cfg.cluster.workers,
+    )?;
+    let cluster = super::make_cluster(cfg.cluster.clone(), Some(&cfg.artifacts), None)?;
+    let out = vs::pipeline(cluster, ds, cfg.reduce_depth).run()?;
+    let text = out.collect_text(vs::SDF_SEP);
+    let top = crate::formats::sdf::parse_many(&text)?;
+    let digest = format!(
+        "top_poses={} best={}",
+        top.len(),
+        top.first().map(|m| m.name.as_str()).unwrap_or("-")
+    );
+    Ok(DriverResult { ingest, report: out.report, digest })
+}
+
+fn run_snp(cfg: &RunConfigFile) -> Result<DriverResult> {
+    // 8 chromosomes: enough for chromosome-wise grouping to matter, and
+    // (like the paper's 25-chromosome cap, §1.3.2) fewer than the
+    // largest cluster's worker count — the gatk stage's max parallelism
+    let sim = genreads::ReadSimConfig {
+        seed: cfg.seed,
+        chromosomes: 8,
+        chromosome_len: cfg.scale.max(500),
+        ..Default::default()
+    };
+    let (fastq, individual) = genreads::reads_fastq(&sim);
+    // the paper ingests *compressed* FASTQ from S3 ("~30GB compressed
+    // FASTQ files"); store gzipped and decompress at ingestion
+    let gz = crate::tools::posix::compress(fastq.as_bytes())?;
+    let backend =
+        make_backend(cfg.backend, cfg.cluster.workers, "reads.fastq.gz", gz)?;
+    // FASTQ records are 4-line blocks; ingest whole reads, not lines
+    let (ds, ingest) =
+        ingest_fastq(backend.as_ref(), "reads.fastq.gz", partitions(cfg), cfg)?;
+    let cluster = super::make_cluster(
+        cfg.cluster.clone(),
+        Some(&cfg.artifacts),
+        Some(&individual.reference),
+    )?;
+    let out = snp::pipeline(cluster, ds, cfg.cluster.workers).run()?;
+    let calls = parse_vcf_records(&out)?;
+    let (tp, fp, fn_) = snp::score_calls(&calls, &individual.truth);
+    let digest = format!("snps={} tp={tp} fp={fp} fn={fn_}", calls.len());
+    Ok(DriverResult { ingest, report: out.report, digest })
+}
+
+/// Decode the final gzipped-VCF records of an SNP run.
+pub fn parse_vcf_records(
+    out: &crate::cluster::RunOutput,
+) -> Result<Vec<crate::formats::vcf::VcfRecord>> {
+    let mut calls = Vec::new();
+    for r in out.partitions.iter().flat_map(|p| p.records.iter()) {
+        if let crate::dataset::Record::Binary { name, bytes } = r {
+            let text = if name.ends_with(".gz") {
+                String::from_utf8(crate::tools::posix::decompress(bytes)?)
+                    .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
+            } else {
+                String::from_utf8(bytes.clone())
+                    .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
+            };
+            calls.extend(crate::formats::vcf::parse_many(&text)?);
+        }
+    }
+    calls.sort_by(|a, b| (a.chrom.clone(), a.pos).cmp(&(b.chrom.clone(), b.pos)));
+    Ok(calls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn make_backend_spreads_blocks_over_workers() {
+        let b = make_backend(BackendKind::Hdfs, 4, "k", vec![0u8; 2 << 20]).unwrap();
+        let blocks = b.blocks("k").unwrap();
+        assert!(blocks.len() >= 4, "{} blocks", blocks.len());
+        let hosts: std::collections::HashSet<_> =
+            blocks.iter().filter_map(|x| x.primary).collect();
+        assert!(hosts.len() >= 3, "{hosts:?}");
+    }
+
+    #[test]
+    fn make_backend_kinds() {
+        for (kind, name) in [
+            (BackendKind::Hdfs, "hdfs"),
+            (BackendKind::Swift, "swift"),
+            (BackendKind::S3, "s3"),
+            (BackendKind::Local, "local"),
+        ] {
+            let b = make_backend(kind, 2, "k", b"x".to_vec()).unwrap();
+            assert_eq!(b.name(), name);
+            assert_eq!(b.get("k").unwrap(), b"x");
+        }
+    }
+
+    #[test]
+    fn ingest_fastq_decompresses_gz_and_partitions_reads() {
+        let sim = crate::workloads::genreads::ReadSimConfig {
+            seed: 9,
+            chromosomes: 2,
+            chromosome_len: 600,
+            coverage: 5.0,
+            ..Default::default()
+        };
+        let (fastq, _) = crate::workloads::genreads::reads_fastq(&sim);
+        let n_reads = fastq.matches("\n+\n").count();
+        let gz = crate::tools::posix::compress(fastq.as_bytes()).unwrap();
+
+        let mut cfg = RunConfigFile::default();
+        cfg.cluster = ClusterConfig::sized(2, 2);
+        let backend = make_backend(BackendKind::S3, 2, "r.fastq.gz", gz).unwrap();
+        let (ds, rep) =
+            ingest_fastq(backend.as_ref(), "r.fastq.gz", 4, &cfg).unwrap();
+        assert_eq!(ds.num_partitions(), 4);
+        assert!(rep.bytes > 0);
+        match ds.plan().as_ref() {
+            crate::dataset::Plan::Source { partitions, .. } => {
+                let total: usize = partitions.iter().map(|p| p.len()).sum();
+                assert_eq!(total, n_reads);
+                // every record is a well-formed 4-line FASTQ block
+                for p in partitions {
+                    for r in &p.records {
+                        let t = r.as_text().unwrap();
+                        assert!(t.starts_with('@'), "{t}");
+                        assert_eq!(t.lines().count(), 4, "{t}");
+                    }
+                }
+            }
+            _ => panic!("expected source"),
+        }
+    }
+
+    #[test]
+    fn ingest_fastq_rejects_garbage() {
+        let cfg = RunConfigFile::default();
+        let backend =
+            make_backend(BackendKind::Local, 1, "bad.fastq", b"not fastq".to_vec())
+                .unwrap();
+        assert!(ingest_fastq(backend.as_ref(), "bad.fastq", 1, &cfg).is_err());
+    }
+}
+
+/// FASTQ-aware ingestion: records are whole reads (4 lines), the record
+/// separator trick used for SDF does not apply; `.gz` objects are
+/// decompressed transparently (1KGP hosts compressed FASTQ).
+pub fn ingest_fastq(
+    backend: &dyn StorageBackend,
+    key: &str,
+    num_partitions: usize,
+    cfg: &RunConfigFile,
+) -> Result<(Dataset, IngestReport)> {
+    // split on read boundaries: "\n@" is ambiguous (quality lines may
+    // start with @), so split every 4 lines via the parser
+    let bytes = backend.get(key)?;
+    let plain;
+    let text = if key.ends_with(".gz") {
+        plain = crate::tools::posix::decompress(bytes)?;
+        std::str::from_utf8(&plain)
+            .map_err(|_| crate::error::MareError::Storage(format!("{key}: not UTF-8")))?
+    } else {
+        std::str::from_utf8(bytes)
+            .map_err(|_| crate::error::MareError::Storage(format!("{key}: not UTF-8")))?
+    };
+    let reads = crate::formats::fastq::parse_many(text)?;
+    let records: Vec<crate::dataset::Record> = reads
+        .iter()
+        .map(|r| crate::dataset::Record::text(r.to_fastq().trim_end().to_string()))
+        .collect();
+
+    let n = num_partitions.max(1);
+    let mut parts: Vec<crate::dataset::Partition> = Vec::with_capacity(n);
+    let total = records.len();
+    let mut it = records.into_iter();
+    let blocks = backend.blocks(key)?;
+    for i in 0..n {
+        let count = total / n + usize::from(i < total % n);
+        let recs: Vec<crate::dataset::Record> = it.by_ref().take(count).collect();
+        let primary = blocks.get(i * blocks.len() / n).and_then(|b| b.primary);
+        parts.push(crate::dataset::Partition { records: recs, preferred_worker: primary });
+    }
+    let report =
+        crate::storage::ingest::account(backend, &parts, cfg.cluster.workers.max(1), 0);
+    Ok((
+        Dataset::from_partitions(parts, format!("{}://{key}", backend.name())),
+        report,
+    ))
+}

@@ -1,0 +1,87 @@
+//! GC-count pipeline — Listing 1, verbatim.
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::util::rng::Rng;
+
+/// Listing 1: count G/C occurrences in a genome with POSIX tools from
+/// the `ubuntu` image.
+pub fn pipeline(cluster: Arc<Cluster>, genome: Dataset) -> MaRe {
+    MaRe::new(cluster, genome)
+        .map(MapSpec {
+            input_mount: MountPoint::text("/dna"),
+            output_mount: MountPoint::text("/count"),
+            image: "ubuntu".into(),
+            command: "grep -o '[GC]' /dna | wc -l > /count".into(),
+        })
+        .reduce(ReduceSpec {
+            input_mount: MountPoint::text("/counts"),
+            output_mount: MountPoint::text("/sum"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+            depth: 2,
+        })
+}
+
+/// Run end-to-end and parse the count.
+pub fn run(cluster: Arc<Cluster>, genome: Dataset) -> Result<u64> {
+    let text = pipeline(cluster, genome).collect_text()?;
+    text.trim().parse().map_err(|_| {
+        crate::error::MareError::Dataset(format!("gc pipeline returned non-count `{text}`"))
+    })
+}
+
+/// Deterministic synthetic DNA (one line per record).
+pub fn genome_text(seed: u64, lines: usize, line_len: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::with_capacity(lines * (line_len + 1));
+    for _ in 0..lines {
+        for _ in 0..line_len {
+            out.push(['A', 'C', 'G', 'T'][rng.below(4)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Driver-side oracle.
+pub fn oracle(genome: &str) -> u64 {
+    genome.chars().filter(|c| *c == 'G' || *c == 'C' || *c == 'g' || *c == 'c').count()
+        as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::container::Registry;
+    use crate::tools::images;
+
+    fn cluster() -> Arc<Cluster> {
+        let mut reg = Registry::new();
+        reg.push(images::ubuntu());
+        Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(4, 2)))
+    }
+
+    #[test]
+    fn matches_oracle_across_partitionings() {
+        let genome = genome_text(11, 64, 80);
+        let want = oracle(&genome);
+        for parts in [1usize, 3, 16] {
+            let ds = Dataset::parallelize_text(&genome, "\n", parts);
+            assert_eq!(run(cluster(), ds).unwrap(), want, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn empty_genome_counts_zero() {
+        // grep matches nothing; awk prints empty sum => "" parse fails;
+        // guard: single empty record
+        let ds = Dataset::parallelize_text("AATT", "\n", 1);
+        assert_eq!(run(cluster(), ds).unwrap(), 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Synthetic molecular-library generator (the SureChEMBL substitute,
+//! DESIGN.md §3).
+//!
+//! The paper screens ~2.2 M molecules from SureChEMBL/ZINC. The bench
+//! varies data *volume*, not chemistry, so we generate deterministic,
+//! structurally plausible small molecules: 8–48 heavy atoms, organic
+//! element distribution, 3D coordinates clustered like a conformer.
+//! Seeded: the same (seed, index) always yields the same molecule, so
+//! distributed and single-core runs can be compared molecule-by-molecule
+//! (the paper's own 1 K-sample correctness check).
+
+use std::collections::BTreeMap;
+
+use crate::formats::sdf::{self, Atom, Molecule};
+use crate::util::rng::Rng;
+
+/// Organic elements with rough SureChEMBL abundances.
+const ELEMENTS: [(&str, f64); 7] = [
+    ("C", 0.68),
+    ("N", 0.10),
+    ("O", 0.12),
+    ("S", 0.03),
+    ("F", 0.03),
+    ("Cl", 0.03),
+    ("P", 0.01),
+];
+
+/// Generate molecule `index` of library `seed`.
+pub fn molecule(seed: u64, index: u64) -> Molecule {
+    let mut rng = Rng::new(seed ^ index.wrapping_mul(0x9E3779B97F4A7C15));
+    let natoms = rng.range(8, 48);
+    // conformer-ish: atoms on a random-walk backbone + jitter
+    let (mut x, mut y, mut z) = (0f32, 0f32, 0f32);
+    // coordinates quantized to the SDF's 4-decimal precision so
+    // serialization round-trips exactly (distributed-vs-oracle checks
+    // compare molecules structurally)
+    let q = |v: f32| (v * 1e4).round() / 1e4;
+    let atoms = (0..natoms)
+        .map(|_| {
+            x += rng.range_f32(-1.6, 1.6);
+            y += rng.range_f32(-1.6, 1.6);
+            z += rng.range_f32(-1.6, 1.6);
+            Atom { x: q(x), y: q(y), z: q(z), element: pick_element(&mut rng).to_string() }
+        })
+        .collect();
+    let mut tags = BTreeMap::new();
+    tags.insert("SureChEMBL ID".into(), format!("SCHEMBL{:08}", index + 1));
+    Molecule { name: format!("SCHEMBL{:08}", index + 1), atoms, tags }
+}
+
+fn pick_element(rng: &mut Rng) -> &'static str {
+    let mut p = rng.f64();
+    for (e, w) in ELEMENTS {
+        if p < w {
+            return e;
+        }
+        p -= w;
+    }
+    "C"
+}
+
+/// Generate a library of `n` molecules as SDF text (Listing 2's
+/// `libraryRDD` payload, separator `\n$$$$\n`).
+pub fn library_sdf(seed: u64, n: usize) -> String {
+    let mols: Vec<Molecule> = (0..n as u64).map(|i| molecule(seed, i)).collect();
+    sdf::write_many(&mols)
+}
+
+/// Average serialized size of one molecule (bytes) — sizing helper for
+/// benches that target a byte budget.
+pub fn avg_molecule_bytes(seed: u64) -> usize {
+    let sample = library_sdf(seed, 64);
+    sample.len() / 64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_index() {
+        assert_eq!(molecule(1, 5), molecule(1, 5));
+        assert_ne!(molecule(1, 5), molecule(1, 6));
+        assert_ne!(molecule(1, 5), molecule(2, 5));
+    }
+
+    #[test]
+    fn library_roundtrips_through_sdf() {
+        let text = library_sdf(7, 20);
+        let mols = sdf::parse_many(&text).unwrap();
+        assert_eq!(mols.len(), 20);
+        assert_eq!(mols[3], molecule(7, 3));
+        assert!(mols.iter().all(|m| (8..48).contains(&m.atoms.len())));
+    }
+
+    #[test]
+    fn molecules_are_mostly_carbon() {
+        let mols: Vec<Molecule> = (0..100).map(|i| molecule(3, i)).collect();
+        let (c, total) = mols.iter().flat_map(|m| &m.atoms).fold((0u32, 0u32), |(c, t), a| {
+            (c + u32::from(a.element == "C"), t + 1)
+        });
+        let frac = c as f64 / total as f64;
+        assert!((0.55..0.8).contains(&frac), "carbon fraction {frac}");
+    }
+
+    #[test]
+    fn ids_are_stable_and_unique() {
+        let text = library_sdf(1, 50);
+        let mols = sdf::parse_many(&text).unwrap();
+        let ids: std::collections::HashSet<_> = mols.iter().map(|m| &m.name).collect();
+        assert_eq!(ids.len(), 50);
+        assert!(mols[0].tags.contains_key("SureChEMBL ID"));
+    }
+}

@@ -1,0 +1,219 @@
+//! Synthetic genome + sequencing-read generator (the 1000-Genomes
+//! HG02666 substitute, DESIGN.md §3).
+//!
+//! Builds a multi-chromosome reference, plants heterozygous/homozygous
+//! SNPs at a controlled rate (humans: ~1/850 bp, §1.3.2), then emits
+//! FASTQ reads sampled uniformly with sequencing errors — the same
+//! dataflow 30x-coverage resequencing gives the paper's SNP pipeline.
+//! Everything is seed-deterministic, and the planted truth set is
+//! returned so tests can score the pipeline's calls.
+
+use crate::formats::fasta::{Contig, Reference};
+use crate::formats::fastq::{self, FastqRead};
+use crate::util::rng::Rng;
+
+/// One planted variant (the truth set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlantedSnp {
+    pub chrom: String,
+    /// 0-based position in the reference.
+    pub pos: usize,
+    pub ref_base: u8,
+    pub alt_base: u8,
+    /// true: both haplotypes carry alt (expect 1/1); false: het (0/1).
+    pub homozygous: bool,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct ReadSimConfig {
+    pub seed: u64,
+    pub chromosomes: usize,
+    pub chromosome_len: usize,
+    /// SNP rate per bp (humans ≈ 1/850).
+    pub snp_rate: f64,
+    pub read_len: usize,
+    /// Mean coverage depth (the paper's data is 30x).
+    pub coverage: f64,
+    /// Per-base sequencing error rate.
+    pub error_rate: f64,
+}
+
+impl Default for ReadSimConfig {
+    fn default() -> Self {
+        ReadSimConfig {
+            seed: 1000,
+            chromosomes: 4,
+            chromosome_len: 4000,
+            snp_rate: 1.0 / 850.0,
+            read_len: 100,
+            coverage: 30.0,
+            error_rate: 0.01,
+        }
+    }
+}
+
+/// A generated individual: reference, diploid sample genome, truth set.
+pub struct Individual {
+    pub reference: Reference,
+    /// Two haplotypes per chromosome (sample genome with planted SNPs).
+    pub haplotypes: Vec<[Vec<u8>; 2]>,
+    pub truth: Vec<PlantedSnp>,
+}
+
+const BASES: [u8; 4] = [b'A', b'C', b'G', b'T'];
+
+fn other_base(rng: &mut Rng, b: u8) -> u8 {
+    loop {
+        let c = BASES[rng.below(4)];
+        if c != b {
+            return c;
+        }
+    }
+}
+
+/// Build the reference + sample haplotypes + truth set.
+pub fn individual(cfg: &ReadSimConfig) -> Individual {
+    let mut rng = Rng::new(cfg.seed);
+    let mut contigs = Vec::with_capacity(cfg.chromosomes);
+    let mut haplotypes = Vec::with_capacity(cfg.chromosomes);
+    let mut truth = Vec::new();
+
+    for c in 0..cfg.chromosomes {
+        let name = format!("chr{}", c + 1);
+        // human-like size skew: chr1 is ~5x chr21; lengths taper from
+        // ~1.55x the mean down to ~0.45x (mean preserved). This is what
+        // makes the chromosome-grouped GATK stage straggle (§1.3.2).
+        let w = if cfg.chromosomes > 1 {
+            1.55 - 1.1 * c as f64 / (cfg.chromosomes - 1) as f64
+        } else {
+            1.0
+        };
+        let len = ((cfg.chromosome_len as f64 * w).round() as usize).max(cfg.read_len);
+        let seq: Vec<u8> = (0..len).map(|_| BASES[rng.below(4)]).collect();
+        let mut hap0 = seq.clone();
+        let mut hap1 = seq.clone();
+        for pos in 0..seq.len() {
+            if rng.f64() < cfg.snp_rate {
+                let alt = other_base(&mut rng, seq[pos]);
+                let homozygous = rng.bool(0.5);
+                hap0[pos] = alt;
+                if homozygous {
+                    hap1[pos] = alt;
+                }
+                truth.push(PlantedSnp {
+                    chrom: name.clone(),
+                    pos,
+                    ref_base: seq[pos],
+                    alt_base: alt,
+                    homozygous,
+                });
+            }
+        }
+        contigs.push(Contig { name, seq });
+        haplotypes.push([hap0, hap1]);
+    }
+
+    Individual { reference: Reference { contigs }, haplotypes, truth }
+}
+
+/// Emit FASTQ reads of the individual at the configured coverage.
+pub fn reads(cfg: &ReadSimConfig, ind: &Individual) -> Vec<FastqRead> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED_5EED);
+    let mut out = Vec::new();
+    let mut read_id = 0u64;
+    for (ci, contig) in ind.reference.contigs.iter().enumerate() {
+        if contig.seq.len() < cfg.read_len {
+            continue;
+        }
+        let n_reads =
+            (contig.seq.len() as f64 * cfg.coverage / cfg.read_len as f64).round() as usize;
+        for _ in 0..n_reads {
+            let hap = &ind.haplotypes[ci][rng.below(2)];
+            let start = rng.below(hap.len() - cfg.read_len + 1);
+            let mut seq = hap[start..start + cfg.read_len].to_vec();
+            for b in seq.iter_mut() {
+                if rng.f64() < cfg.error_rate {
+                    *b = other_base(&mut rng, *b);
+                }
+            }
+            out.push(FastqRead {
+                id: format!("sim.{read_id}/1"),
+                seq,
+                qual: vec![b'I'; cfg.read_len],
+            });
+            read_id += 1;
+        }
+    }
+    out
+}
+
+/// Full FASTQ document (Listing 3's `readsRDD` payload).
+pub fn reads_fastq(cfg: &ReadSimConfig) -> (String, Individual) {
+    let ind = individual(cfg);
+    let r = reads(cfg, &ind);
+    (fastq::write_many(&r), ind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ReadSimConfig {
+        ReadSimConfig {
+            seed: 7,
+            chromosomes: 2,
+            chromosome_len: 1500,
+            coverage: 10.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = reads_fastq(&small());
+        let (b, _) = reads_fastq(&small());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coverage_approximately_met() {
+        let cfg = small();
+        let ind = individual(&cfg);
+        let r = reads(&cfg, &ind);
+        let total_bases: usize = r.iter().map(|x| x.seq.len()).sum();
+        let genome: usize = ind.reference.total_len();
+        let cov = total_bases as f64 / genome as f64;
+        assert!((cov - cfg.coverage).abs() < 1.0, "coverage {cov}");
+    }
+
+    #[test]
+    fn truth_set_rate_plausible() {
+        let cfg = ReadSimConfig { chromosome_len: 20_000, ..small() };
+        let ind = individual(&cfg);
+        let rate = ind.truth.len() as f64 / ind.reference.total_len() as f64;
+        // 1/850 ± slack
+        assert!((0.0003..0.004).contains(&rate), "snp rate {rate}");
+        // alt never equals ref
+        assert!(ind.truth.iter().all(|s| s.ref_base != s.alt_base));
+    }
+
+    #[test]
+    fn reads_parse_as_fastq() {
+        let (text, _) = reads_fastq(&small());
+        let parsed = crate::formats::fastq::parse_many(&text).unwrap();
+        assert!(!parsed.is_empty());
+        assert!(parsed.iter().all(|r| r.seq.len() == 100));
+    }
+
+    #[test]
+    fn most_reads_align_to_their_individual() {
+        let cfg = small();
+        let ind = individual(&cfg);
+        let r = reads(&cfg, &ind);
+        let idx = crate::tools::bwa::RefIndex::build(ind.reference.clone());
+        let aligned = r.iter().filter(|x| idx.align(&x.seq).is_some()).count();
+        let frac = aligned as f64 / r.len() as f64;
+        assert!(frac > 0.9, "aligned fraction {frac}");
+    }
+}

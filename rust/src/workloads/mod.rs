@@ -1,0 +1,49 @@
+//! Evaluation workloads: generators + the paper's three pipelines.
+//!
+//! * [`genlib`] — synthetic SDF molecule library (SureChEMBL stand-in)
+//! * [`genreads`] — synthetic genome/reads + planted-SNP truth set
+//!   (1000-Genomes stand-in)
+//! * [`gc`] — Listing 1: GC count
+//! * [`vs`] — Listing 2: virtual screening (FRED + sdsorter)
+//! * [`snp`] — Listing 3: SNP calling (BWA + GATK + vcftools)
+
+pub mod driver;
+pub mod gc;
+pub mod genlib;
+pub mod genreads;
+pub mod snp;
+pub mod vs;
+
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::error::Result;
+use crate::formats::fasta::Reference;
+use crate::runtime::ToolRuntime;
+use crate::tools::images;
+
+/// Receptor seed baked into the stock `mcapuccini/oe` deployment.
+pub const RECEPTOR_SEED: u64 = 0x41_56_49_44;
+
+/// A cluster with the stock images and, if provided, the PJRT runtime
+/// (required by fred/gatk; Listing 1's POSIX pipelines run without it).
+pub fn make_cluster(
+    config: ClusterConfig,
+    artifact_dir: Option<&str>,
+    reference: Option<&Reference>,
+) -> Result<Arc<Cluster>> {
+    let registry = Arc::new(images::stock_registry(reference));
+    let runtime = match artifact_dir {
+        Some(dir) => Some(ToolRuntime::new(dir, RECEPTOR_SEED)?),
+        None => None,
+    };
+    Ok(Arc::new(Cluster::new(registry, runtime, config)))
+}
+
+/// Locate `artifacts/` relative to the crate root (works from tests,
+/// examples and benches).
+pub fn artifact_dir() -> String {
+    std::env::var("MARE_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}

@@ -1,0 +1,115 @@
+//! SNP-calling pipeline — Listing 3, verbatim: BWA alignment (map),
+//! chromosome-wise `repartitionBy`, GATK HaplotypeCaller (map,
+//! disk-backed mounts), vcf-concat (reduce).
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::dataset::{Dataset, Record};
+use crate::error::Result;
+use crate::formats::sam::parse_chromosome_id;
+use crate::formats::vcf::{self, VcfRecord};
+use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::tools::posix::decompress;
+
+/// Listing 3 lines 5–10: align + convert to SAM text.
+pub fn bwa_command() -> String {
+    "bwa mem -t 8 \
+     -p /ref/human_g1k_v37.fasta \
+     /in.fastq \
+     | samtools view > /out.sam"
+        .to_string()
+}
+
+/// Listing 3 lines 18–32: header, sort, index, call, zip.
+pub fn gatk_command() -> String {
+    "cat /ref/human_g1k_v37.dict /in.sam > /in.hdr.sam\n\
+     gatk AddOrReplaceReadGroups --INPUT=/in.hdr.sam --OUTPUT=/in.hdr.sort.rg.bam --SORT_ORDER=coordinate\n\
+     gatk BuildBamIndex --INPUT=/in.hdr.sort.rg.bam\n\
+     gatk HaplotypeCallerSpark -R /ref/human_g1k_v37.fasta -I /in.hdr.sort.rg.bam -O /out/$RANDOM.g.vcf\n\
+     gzip /out/*"
+        .to_string()
+}
+
+/// Listing 3 lines 39–40: merge + zip.
+pub fn vcf_concat_command() -> String {
+    "vcf-concat /in/*.vcf.gz | gzip -c > /out/merged.$RANDOM.g.vcf.gz".to_string()
+}
+
+/// Listing 3 as a MaRe pipeline. `num_nodes` is the paper's
+/// `numberOfNodes` (chromosome-group partition count); disk-backed
+/// mounts mirror the TMPDIR override of §1.3.2.
+pub fn pipeline(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> MaRe {
+    MaRe::new(cluster, reads)
+        .map(MapSpec {
+            input_mount: MountPoint::text("/in.fastq"),
+            output_mount: MountPoint::text("/out.sam"),
+            image: "mcapuccini/alignment:latest".into(),
+            command: bwa_command(),
+        })
+        .repartition_by(
+            Arc::new(|r: &Record| parse_chromosomeid_record(r)),
+            num_nodes,
+        )
+        .with_disk_mounts(true)
+        .map(MapSpec {
+            input_mount: MountPoint::text("/in.sam"),
+            output_mount: MountPoint::binary("/out"),
+            image: "mcapuccini/alignment:latest".into(),
+            command: gatk_command(),
+        })
+        .reduce(ReduceSpec {
+            input_mount: MountPoint::binary("/in"),
+            output_mount: MountPoint::binary("/out"),
+            image: "opengenomics/vcftools-tools:latest".into(),
+            command: vcf_concat_command(),
+            depth: 2,
+        })
+}
+
+/// The paper's `parseChromosomeId` keyBy (Listing 3 line 12).
+fn parse_chromosomeid_record(r: &Record) -> String {
+    match r.as_text() {
+        Some(sam) => parse_chromosome_id(sam),
+        None => "*".to_string(),
+    }
+}
+
+/// Run end-to-end and parse the merged VCF out of the final gzipped
+/// record.
+pub fn run(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Result<Vec<VcfRecord>> {
+    let out = pipeline(cluster, reads, num_nodes).run()?;
+    let records = out.collect_records();
+    let mut calls = Vec::new();
+    for r in &records {
+        if let Record::Binary { name, bytes } = r {
+            let text = if name.ends_with(".gz") {
+                String::from_utf8(decompress(bytes)?)
+                    .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
+            } else {
+                String::from_utf8(bytes.clone())
+                    .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
+            };
+            calls.extend(vcf::parse_many(&text)?);
+        }
+    }
+    calls.sort_by(|a, b| (a.chrom.clone(), a.pos).cmp(&(b.chrom.clone(), b.pos)));
+    Ok(calls)
+}
+
+/// Score pipeline calls against the generator's truth set:
+/// (true positives, false positives, false negatives).
+pub fn score_calls(
+    calls: &[VcfRecord],
+    truth: &[super::genreads::PlantedSnp],
+) -> (usize, usize, usize) {
+    use std::collections::HashSet;
+    let truth_set: HashSet<(String, u64)> =
+        truth.iter().map(|t| (t.chrom.clone(), t.pos as u64 + 1)).collect();
+    let call_set: HashSet<(String, u64)> =
+        calls.iter().map(|c| (c.chrom.clone(), c.pos)).collect();
+    let tp = call_set.intersection(&truth_set).count();
+    let fp = call_set.difference(&truth_set).count();
+    let fn_ = truth_set.difference(&call_set).count();
+    (tp, fp, fn_)
+}

@@ -1,0 +1,92 @@
+//! Virtual-screening pipeline — Listing 2, verbatim: FRED docking over
+//! an SDF library (map), top-30 poses by Chemgauss4 score (reduce).
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::formats::sdf::{self, Molecule};
+use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::tools::fred::SCORE_TAG;
+
+/// SDF record separator (Listing 2 line 2).
+pub const SDF_SEP: &str = "\n$$$$\n";
+/// Poses kept by the reduce (Listing 2: `-nbest=30`).
+pub const NBEST: usize = 30;
+
+/// The FRED map command (Listing 2 lines 5–11).
+pub fn fred_command() -> String {
+    "fred -receptor /var/openeye/hiv1_protease.oeb \
+     -hitlist_size 0 \
+     -conftest none \
+     -dbase /in.sdf \
+     -docked_molecule_file /out.sdf"
+        .to_string()
+}
+
+/// The sdsorter reduce command (Listing 2 lines 16–21).
+pub fn sdsorter_command(nbest: usize) -> String {
+    format!(
+        "sdsorter -reversesort=\"FRED Chemgauss4 score\" \
+         -keep-tag=\"FRED Chemgauss4 score\" \
+         -nbest={nbest} \
+         /in.sdf /out.sdf"
+    )
+}
+
+/// Listing 2 as a MaRe pipeline.
+pub fn pipeline(cluster: Arc<Cluster>, library: Dataset, depth: usize) -> MaRe {
+    MaRe::new(cluster, library)
+        .map(MapSpec {
+            input_mount: MountPoint::text_sep("/in.sdf", SDF_SEP),
+            output_mount: MountPoint::text_sep("/out.sdf", SDF_SEP),
+            image: "mcapuccini/oe:latest".into(),
+            command: fred_command(),
+        })
+        .reduce(ReduceSpec {
+            input_mount: MountPoint::text_sep("/in.sdf", SDF_SEP),
+            output_mount: MountPoint::text_sep("/out.sdf", SDF_SEP),
+            image: "mcapuccini/sdsorter:latest".into(),
+            command: sdsorter_command(NBEST),
+            depth,
+        })
+}
+
+/// Run and parse the top poses.
+pub fn run(cluster: Arc<Cluster>, library: Dataset, depth: usize) -> Result<Vec<Molecule>> {
+    let out = pipeline(cluster, library, depth).run()?;
+    let text = out.collect_text(SDF_SEP);
+    sdf::parse_many(&text)
+}
+
+/// Single-core oracle: dock every molecule through the same runtime and
+/// keep the top N — the paper's own correctness check ("we ran sdsorter
+/// and FRED on a single core against 1K molecules ... and compared").
+pub fn oracle(
+    runtime: &crate::runtime::ToolRuntime,
+    library_sdf: &str,
+    nbest: usize,
+) -> Result<Vec<(String, f32)>> {
+    let mols = sdf::parse_many(library_sdf)?;
+    let mut features = Vec::with_capacity(mols.len() * crate::runtime::abi::DOCK_F);
+    for m in &mols {
+        features.extend(crate::tools::fred::featurize(m));
+    }
+    let results = runtime.dock(&features, mols.len())?;
+    let mut scored: Vec<(String, f32)> = mols
+        .iter()
+        .zip(&results)
+        .map(|(m, r)| (m.name.clone(), -r.score))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+    scored.truncate(nbest);
+    Ok(scored)
+}
+
+/// Scores of pipeline output, comparable with [`oracle`].
+pub fn scores(mols: &[Molecule]) -> Vec<(String, f32)> {
+    mols.iter()
+        .map(|m| (m.name.clone(), m.tag_f32(SCORE_TAG).unwrap_or(f32::NAN)))
+        .collect()
+}

@@ -1,0 +1,221 @@
+//! Integration tests: the paper's pipelines end-to-end through all
+//! layers (storage → MaRe → cluster → containers → PJRT artifacts),
+//! including the paper's own correctness protocol (distributed vs
+//! single-core) and fault-injection equivalence.
+//!
+//! These need `artifacts/` (run `make artifacts` first).
+
+use std::sync::Arc;
+
+use mare::cluster::{ClusterConfig, FaultSpec};
+use mare::config::{BackendKind, RunConfigFile, Workload};
+use mare::dataset::Dataset;
+use mare::workloads::{self, genlib, genreads, snp, vs};
+
+fn vs_cluster(workers: usize, fault: Option<FaultSpec>) -> Arc<mare::cluster::Cluster> {
+    let mut cfg = ClusterConfig::sized(workers, 4);
+    cfg.fault = fault;
+    workloads::make_cluster(cfg, Some(&workloads::artifact_dir()), None).expect("artifacts")
+}
+
+/// The paper's §1.3.1 check: distributed top-30 == single-core top-30.
+#[test]
+fn vs_distributed_matches_single_core_oracle() {
+    let library = genlib::library_sdf(77, 200);
+    let cluster = vs_cluster(4, None);
+    let runtime = cluster.runtime().unwrap().clone();
+
+    let ds = Dataset::parallelize_text(&library, vs::SDF_SEP, 8);
+    let mols = vs::run(cluster, ds, 2).unwrap();
+    let distributed = vs::scores(&mols);
+    let oracle = vs::oracle(&runtime, &library, vs::NBEST).unwrap();
+
+    assert_eq!(distributed.len(), oracle.len());
+    for ((dn, ds_), (on, os)) in distributed.iter().zip(&oracle) {
+        assert_eq!(dn, on);
+        assert!((ds_ - os).abs() < 1e-3, "{dn}: {ds_} vs {os}");
+    }
+}
+
+/// Partitioning must not change VS results (associativity in practice).
+#[test]
+fn vs_result_invariant_to_partitioning_and_depth() {
+    let library = genlib::library_sdf(91, 120);
+    let reference: Vec<(String, f32)> = {
+        let ds = Dataset::parallelize_text(&library, vs::SDF_SEP, 1);
+        vs::scores(&vs::run(vs_cluster(1, None), ds, 1).unwrap())
+    };
+    for (parts, depth) in [(4usize, 1usize), (8, 2), (16, 3), (5, 2)] {
+        let ds = Dataset::parallelize_text(&library, vs::SDF_SEP, parts);
+        let got = vs::scores(&vs::run(vs_cluster(4, None), ds, depth).unwrap());
+        assert_eq!(got, reference, "parts={parts} depth={depth}");
+    }
+}
+
+/// Worker loss mid-run must not change the result (lineage recovery).
+#[test]
+fn vs_survives_worker_loss_with_identical_result() {
+    let library = genlib::library_sdf(13, 96);
+    let ds = || Dataset::parallelize_text(&library, vs::SDF_SEP, 12);
+    let clean = vs::run(vs_cluster(4, None), ds(), 2).unwrap();
+    let faulty = vs::run(
+        vs_cluster(4, Some(FaultSpec::WorkerLoss { worker: 2, after_stage: 0 })),
+        ds(),
+        2,
+    )
+    .unwrap();
+    assert_eq!(vs::scores(&clean), vs::scores(&faulty));
+}
+
+/// Flaky task retries must not change the result either.
+#[test]
+fn vs_survives_task_flakes() {
+    let library = genlib::library_sdf(14, 64);
+    let ds = || Dataset::parallelize_text(&library, vs::SDF_SEP, 8);
+    let clean = vs::run(vs_cluster(2, None), ds(), 2).unwrap();
+    let flaky = vs::run(
+        vs_cluster(2, Some(FaultSpec::TaskFlake { stage: 0, partition: 3, failures: 2 })),
+        ds(),
+        2,
+    )
+    .unwrap();
+    assert_eq!(vs::scores(&clean), vs::scores(&flaky));
+}
+
+/// `fred -opt` exercises the backward (gradient-refinement) artifact on
+/// the request path and adds the refined-score tag.
+#[test]
+fn vs_opt_flag_runs_the_bwd_artifact() {
+    let library = genlib::library_sdf(55, 64);
+    let cluster = vs_cluster(2, None);
+    let ds = Dataset::parallelize_text(&library, vs::SDF_SEP, 4);
+    let m = mare::mare::MaRe::new(cluster, ds).map(mare::mare::MapSpec {
+        input_mount: mare::mare::MountPoint::text_sep("/in.sdf", vs::SDF_SEP),
+        output_mount: mare::mare::MountPoint::text_sep("/out.sdf", vs::SDF_SEP),
+        image: "mcapuccini/oe:latest".into(),
+        command: format!("{} -opt", vs::fred_command()),
+    });
+    let out = m.run().unwrap();
+    let mols =
+        mare::formats::sdf::parse_many(&out.collect_text(vs::SDF_SEP)).unwrap();
+    assert_eq!(mols.len(), 64);
+    for mol in &mols {
+        let score = mol.tag_f32(mare::tools::fred::SCORE_TAG).unwrap();
+        let refined = mol.tag_f32(mare::tools::fred::REFINED_TAG).unwrap();
+        assert!(score.is_finite() && refined.is_finite());
+    }
+}
+
+/// SNP pipeline end-to-end: calls recover the planted truth set.
+#[test]
+fn snp_pipeline_recovers_planted_snps() {
+    let sim = genreads::ReadSimConfig {
+        seed: 2024,
+        chromosomes: 3,
+        chromosome_len: 2500,
+        coverage: 30.0,
+        ..Default::default()
+    };
+    let (fastq, individual) = genreads::reads_fastq(&sim);
+    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq)
+        .unwrap()
+        .iter()
+        .map(|r| mare::dataset::Record::text(r.to_fastq().trim_end().to_string()))
+        .collect();
+    let cluster = workloads::make_cluster(
+        ClusterConfig::sized(3, 8),
+        Some(&workloads::artifact_dir()),
+        Some(&individual.reference),
+    )
+    .unwrap();
+    let ds = Dataset::parallelize(reads, 6);
+    let calls = snp::run(cluster, ds, 3).unwrap();
+    let (tp, fp, fn_) = snp::score_calls(&calls, &individual.truth);
+    let recall = tp as f64 / (tp + fn_).max(1) as f64;
+    let precision = tp as f64 / (tp + fp).max(1) as f64;
+    assert!(recall > 0.8, "recall {recall} (tp={tp} fn={fn_})");
+    assert!(precision > 0.8, "precision {precision} (tp={tp} fp={fp})");
+}
+
+/// The full driver path over every backend (GC workload, cheap).
+#[test]
+fn driver_runs_on_every_backend() {
+    for backend in [BackendKind::Hdfs, BackendKind::Swift, BackendKind::S3, BackendKind::Local] {
+        let mut cfg = RunConfigFile {
+            workload: Workload::Gc,
+            backend,
+            scale: 128,
+            seed: 5,
+            ..Default::default()
+        };
+        cfg.cluster = ClusterConfig::sized(4, 2);
+        let res = mare::workloads::driver::run(&cfg).unwrap();
+        let genome = mare::workloads::gc::genome_text(5, 128, 80);
+        let want = mare::workloads::gc::oracle(&genome);
+        assert_eq!(
+            res.digest,
+            format!("gc_count={want}"),
+            "backend {backend:?}"
+        );
+        // locality: hdfs-backed partitions carry hints; object stores don't
+        if backend == BackendKind::Hdfs {
+            assert!(res.report.locality_fraction() > 0.5);
+        }
+    }
+}
+
+/// Virtual time honesty: the same job on a bigger cluster must not be
+/// virtually slower (work-conserving scheduler).
+#[test]
+fn bigger_cluster_is_not_slower() {
+    let library = genlib::library_sdf(3, 128);
+    let mk = |workers: usize| {
+        let ds = Dataset::parallelize_text(&library, vs::SDF_SEP, 16);
+        let m = vs::pipeline(vs_cluster(workers, None), ds, 2);
+        m.run().unwrap().report.makespan
+    };
+    let small = mk(2);
+    let big = mk(8);
+    assert!(
+        big.as_seconds() <= small.as_seconds() * 1.05,
+        "8 workers ({big}) slower than 2 ({small})"
+    );
+}
+
+/// The gzipped VCF artifacts round-trip through the BinaryFiles mounts.
+#[test]
+fn snp_output_is_valid_gzipped_vcf() {
+    let sim = genreads::ReadSimConfig {
+        seed: 31,
+        chromosomes: 2,
+        chromosome_len: 1200,
+        coverage: 20.0,
+        ..Default::default()
+    };
+    let (fastq, individual) = genreads::reads_fastq(&sim);
+    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq)
+        .unwrap()
+        .iter()
+        .map(|r| mare::dataset::Record::text(r.to_fastq().trim_end().to_string()))
+        .collect();
+    let cluster = workloads::make_cluster(
+        ClusterConfig::sized(2, 8),
+        Some(&workloads::artifact_dir()),
+        Some(&individual.reference),
+    )
+    .unwrap();
+    let out = snp::pipeline(cluster, Dataset::parallelize(reads, 4), 2).run().unwrap();
+    let records = out.collect_records();
+    assert!(!records.is_empty());
+    for r in &records {
+        match r {
+            mare::dataset::Record::Binary { name, bytes } => {
+                assert!(name.ends_with(".g.vcf.gz"), "unexpected name {name}");
+                let plain = mare::tools::posix::decompress(bytes).unwrap();
+                let text = String::from_utf8(plain).unwrap();
+                assert!(text.starts_with("##fileformat=VCF"), "bad VCF header");
+            }
+            other => panic!("expected binary record, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Property tests on coordinator invariants: routing, scheduling,
+//! mount-point staging, tree-reduce shape, shuffle conservation.
+
+use std::sync::Arc;
+
+use mare::dataset::{join_records, plan, split_records, Partitioner, Record};
+use mare::mare::MountPoint;
+use mare::prop_assert;
+use mare::simtime::{Duration, SlotSchedule, SlotTask, VirtualTime};
+use mare::util::prop::{check, PropResult};
+use mare::util::rng::Rng;
+
+fn random_records(rng: &mut Rng, max: usize) -> Vec<Record> {
+    let n = rng.below(max + 1);
+    (0..n)
+        .map(|i| {
+            if rng.bool(0.2) {
+                Record::binary(format!("f{i}.bin"), vec![rng.below(256) as u8; rng.below(64)])
+            } else {
+                let len = rng.below(32);
+                let s: String =
+                    (0..len).map(|_| *rng.choice(&['a', 'b', 'G', 'C', '1'])).collect();
+                Record::text(format!("k{}:{s}", rng.below(8)))
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------- routing
+
+#[test]
+fn routing_conserves_and_groups() {
+    check("routing-conserves-records", 200, |rng| {
+        let records = random_records(rng, 64);
+        let num = rng.range(1, 9);
+        let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+            Arc::new(|r: &Record| match r.as_text() {
+                Some(t) => t.split(':').next().unwrap_or("").to_string(),
+                None => "bin".to_string(),
+            });
+        let p = Partitioner::HashByKey { key_fn: key_fn.clone(), num };
+        let buckets = plan::route(&p, records.clone());
+
+        prop_assert!(buckets.len() == num, "want {num} buckets, got {}", buckets.len());
+        let total: usize = buckets.iter().map(|b| b.len()).sum();
+        prop_assert!(total == records.len(), "lost records: {total}/{}", records.len());
+
+        // same key -> same bucket
+        for (i, bucket) in buckets.iter().enumerate() {
+            for r in bucket {
+                let k = key_fn(r);
+                let expect = (Partitioner::hash_key(&k) % num as u64) as usize;
+                prop_assert!(expect == i, "key {k} in bucket {i}, want {expect}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn balanced_routing_is_deterministic_and_even() {
+    check("balanced-routing-even", 200, |rng| {
+        let records = random_records(rng, 64);
+        let num = rng.range(1, 9);
+        let salt = rng.below(16);
+        let p = Partitioner::Balanced { num };
+        let a = plan::route_from(&p, records.clone(), salt);
+        let b = plan::route_from(&p, records.clone(), salt);
+        prop_assert!(a == b, "routing must be deterministic");
+        let sizes: Vec<usize> = a.iter().map(|x| x.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        prop_assert!(mx - mn <= 1, "imbalanced: {sizes:?}");
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------- scheduling
+
+#[test]
+fn schedule_respects_capacity_and_completeness() {
+    check("slot-schedule-capacity", 120, |rng| {
+        let workers = rng.range(1, 9);
+        let vcpus = rng.range(1, 9) as u32;
+        let n = rng.below(64);
+        let tasks: Vec<SlotTask> = (0..n)
+            .map(|id| SlotTask {
+                id,
+                duration: Duration::seconds(rng.f64() * 10.0),
+                cpus: 1 + (rng.below(vcpus as usize)) as u32,
+                preferred: if rng.bool(0.5) { Some(rng.below(workers)) } else { None },
+                remote_penalty: Duration::seconds(rng.f64()),
+            })
+            .collect();
+        let mut s = SlotSchedule::new(workers, vcpus);
+        let placements = s.run(&tasks);
+
+        prop_assert!(placements.len() == n, "placements incomplete");
+        // ids unique and in order
+        for (i, p) in placements.iter().enumerate() {
+            prop_assert!(p.id == i, "placement order broken at {i}");
+            prop_assert!(p.worker < workers, "worker {} out of range", p.worker);
+            prop_assert!(p.end >= p.start, "negative duration");
+            prop_assert!(p.end <= s.makespan(), "placement past makespan");
+        }
+
+        // capacity: at any task boundary, the cpu-weighted overlap on a
+        // worker never exceeds its slots
+        for w in 0..workers {
+            let mut events: Vec<(VirtualTime, i64)> = Vec::new();
+            for (p, t) in placements.iter().zip(&tasks) {
+                if p.worker == w && p.end > p.start {
+                    events.push((p.start, t.cpus as i64));
+                    events.push((p.end, -(t.cpus as i64)));
+                }
+            }
+            events.sort_by_key(|(t, d)| (*t, *d)); // release before acquire at ties
+            let mut load = 0i64;
+            for (_, d) in events {
+                load += d;
+                prop_assert!(
+                    load <= vcpus as i64,
+                    "worker {w} oversubscribed: {load} > {vcpus}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn locality_never_hurts_makespan_much() {
+    // scheduling with locality hints (zero remote penalty) must not be
+    // worse than ignoring them by more than locality_wait per task
+    check("locality-bounded-regret", 60, |rng| {
+        let workers = rng.range(2, 6);
+        let n = rng.range(4, 40);
+        // identical durations for both schedules
+        let durations: Vec<Duration> =
+            (0..n).map(|_| Duration::seconds(1.0 + rng.f64() * 4.0)).collect();
+        let prefs: Vec<usize> = (0..n).map(|_| rng.below(workers)).collect();
+        let mk = |with_pref: bool| -> VirtualTime {
+            let tasks: Vec<SlotTask> = (0..n)
+                .map(|id| SlotTask {
+                    id,
+                    duration: durations[id],
+                    cpus: 1,
+                    preferred: if with_pref { Some(prefs[id]) } else { None },
+                    remote_penalty: Duration::ZERO,
+                })
+                .collect();
+            let mut s = SlotSchedule::new(workers, 4);
+            s.run(&tasks);
+            s.makespan()
+        };
+        let with = mk(true);
+        let without = mk(false);
+        let slack = Duration::seconds(3.0 * n as f64); // locality_wait bound
+        prop_assert!(
+            with.0 <= without.0 + slack.0,
+            "locality regret too large: {with} vs {without}"
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------ record staging
+
+#[test]
+fn textfile_staging_roundtrips() {
+    check("textfile-roundtrip", 200, |rng| {
+        // text records with no separator collisions
+        let n = rng.below(32);
+        let records: Vec<Record> = (0..n)
+            .map(|i| Record::text(format!("mol-{i}-{}", rng.below(1000))))
+            .collect();
+        let sep = *rng.choice(&["\n", "\n$$$$\n", "|SEP|"]);
+        let mp = MountPoint::text_sep("/in", sep);
+        let files = mp.stage_in(&records).map_err(|e| e.to_string())?;
+        let mut fs = mare::container::Vfs::disk();
+        for (p, b) in files {
+            fs.write(&p, b).map_err(|e| e.to_string())?;
+        }
+        let out = mp.stage_out(&mut fs).map_err(|e| e.to_string())?;
+        prop_assert!(out == records, "roundtrip mismatch: {out:?} != {records:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn split_join_are_inverse() {
+    check("split-join-inverse", 200, |rng| {
+        let n = rng.below(20);
+        let recs: Vec<String> =
+            (0..n).map(|i| format!("r{i}x{}", rng.below(100))).collect();
+        let sep = *rng.choice(&["\n", "\n$$$$\n", ";;"]);
+        let joined = join_records(&recs, sep);
+        let split = split_records(&joined, sep);
+        prop_assert!(split == recs, "{split:?} != {recs:?}");
+        Ok(())
+    });
+}
+
+// -------------------------------------------------- tree-reduce shape
+
+#[test]
+fn tree_reduce_always_single_partition_and_bounded_shuffles() {
+    check("tree-reduce-shape", 100, |rng| {
+        let parts = rng.range(1, 65);
+        let depth = rng.range(1, 5);
+        let reg = mare::tools::images::stock_registry(None);
+        let cluster = Arc::new(mare::cluster::Cluster::new(
+            Arc::new(reg),
+            None,
+            mare::cluster::ClusterConfig::sized(4, 2),
+        ));
+        let records: Vec<Record> =
+            (0..parts * 2).map(|i| Record::text(format!("G{i}"))).collect();
+        let ds = mare::dataset::Dataset::parallelize(records, parts);
+        let m = mare::mare::MaRe::new(cluster, ds).reduce(mare::mare::ReduceSpec {
+            input_mount: MountPoint::text("/in"),
+            output_mount: MountPoint::text("/out"),
+            image: "ubuntu".into(),
+            command: "grep -c G /in > /out".into(),
+            depth,
+        });
+        let shuffles = m.dataset().plan().num_shuffles();
+        prop_assert!(shuffles <= depth, "{shuffles} shuffles > depth {depth}");
+        let out = m.run().map_err(|e| e.to_string())?;
+        prop_assert!(
+            out.partitions.len() == 1,
+            "reduce left {} partitions",
+            out.partitions.len()
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------ shuffle account
+
+#[test]
+fn shuffle_conserves_bytes_and_records() {
+    check("shuffle-conservation", 150, |rng| {
+        let workers = rng.range(1, 6);
+        let nparts = rng.range(1, 8);
+        let outputs: Vec<(usize, Vec<Record>)> = (0..nparts)
+            .map(|_| (rng.below(workers), random_records(rng, 32)))
+            .collect();
+        let in_records: usize = outputs.iter().map(|(_, r)| r.len()).sum();
+        let in_bytes: u64 = outputs
+            .iter()
+            .flat_map(|(_, r)| r.iter())
+            .map(Record::size_bytes)
+            .sum();
+        let num = rng.range(1, 8);
+        let (parts, stats) = mare::cluster::shuffle::shuffle(
+            outputs,
+            &Partitioner::Balanced { num },
+            workers,
+            &mare::simtime::NetModel::lan(),
+        );
+        let out_records: usize = parts.iter().map(|p| p.len()).sum();
+        let out_bytes: u64 = parts.iter().map(|p| p.size_bytes()).sum();
+        prop_assert!(out_records == in_records, "records lost");
+        prop_assert!(out_bytes == in_bytes, "bytes lost");
+        prop_assert!(stats.bytes_total == in_bytes, "stats bytes wrong");
+        prop_assert!(stats.bytes_remote <= stats.bytes_total, "remote > total");
+        prop_assert!(parts.len() == num, "partition count");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- vfs / shell
+
+#[test]
+fn vfs_usage_accounting_is_exact() {
+    check("vfs-usage-exact", 150, |rng| {
+        let mut fs = mare::container::Vfs::disk();
+        let mut expect = std::collections::BTreeMap::new();
+        for i in 0..rng.below(40) {
+            let path = format!("/d{}/f{}", rng.below(3), i);
+            match rng.below(3) {
+                0 => {
+                    let b = vec![0u8; rng.below(256)];
+                    expect.insert(path.clone(), b.len() as u64);
+                    fs.write(&path, b).map_err(|e| e.to_string())?;
+                }
+                1 => {
+                    let b = vec![1u8; rng.below(64)];
+                    *expect.entry(path.clone()).or_insert(0) += b.len() as u64;
+                    fs.append(&path, &b).map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    if fs.exists(&path) {
+                        expect.remove(&path);
+                        fs.remove(&path).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+        }
+        let want: u64 = expect.values().sum();
+        prop_assert!(
+            fs.used_bytes() == want,
+            "usage {} != expected {want}",
+            fs.used_bytes()
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,133 @@
+//! Integration: python AOT artifacts -> PJRT -> rust, checked against
+//! pure-rust oracles. This closes the three-layer loop (DESIGN.md §5).
+
+use mare::runtime::{abi, api::oracle, default_artifact_dir, Tensor, ToolRuntime};
+
+fn runtime() -> ToolRuntime {
+    ToolRuntime::new(default_artifact_dir(), 42).expect("run `make artifacts` first")
+}
+
+#[test]
+fn artifacts_load_and_list_entries() {
+    let rt = runtime();
+    let mut entries = rt.handle().entries().unwrap();
+    entries.sort();
+    assert_eq!(entries, vec!["docking", "docking_refine", "gc_count", "genotype"]);
+}
+
+#[test]
+fn gc_count_matches_direct_count() {
+    let rt = runtime();
+    let seq = b"GATTACAGCGCGGGCCCAATTTT".repeat(907); // not a GC_N multiple
+    let want = seq.iter().filter(|&&b| b == b'G' || b == b'C').count() as u64;
+    assert_eq!(rt.gc_count(&seq).unwrap(), want);
+}
+
+#[test]
+fn gc_count_empty_and_padding_edge() {
+    let rt = runtime();
+    assert_eq!(rt.gc_count(b"").unwrap(), 0);
+    assert_eq!(rt.gc_count(&vec![b'G'; abi::GC_N]).unwrap(), abi::GC_N as u64);
+    assert_eq!(rt.gc_count(&vec![b'G'; abi::GC_N + 1]).unwrap(), abi::GC_N as u64 + 1);
+}
+
+#[test]
+fn docking_matches_rust_oracle() {
+    let rt = runtime();
+    let receptor = ToolRuntime::make_receptor(42);
+    let n = 37; // deliberately not a batch multiple
+    let mut feats = Vec::with_capacity(n * abi::DOCK_F);
+    let mut state = 7u64;
+    for _ in 0..n * abi::DOCK_F {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        feats.push(((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5);
+    }
+    let got = rt.dock(&feats, n).unwrap();
+    assert_eq!(got.len(), n);
+    for (i, r) in got.iter().enumerate() {
+        let (score, pose) = oracle::dock_row(&feats[i * abi::DOCK_F..(i + 1) * abi::DOCK_F], &receptor);
+        assert_eq!(r.pose, pose, "molecule {i}");
+        assert!((r.score - score).abs() < 1e-3, "molecule {i}: {} vs {score}", r.score);
+    }
+}
+
+#[test]
+fn docking_refined_not_worse_than_mean_pose() {
+    let rt = runtime();
+    let n = 8;
+    let feats: Vec<f32> = (0..n * abi::DOCK_F).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let refined = rt.dock_refined(&feats, n).unwrap();
+    let best = rt.dock(&feats, n).unwrap();
+    assert_eq!(refined.len(), n);
+    for i in 0..n {
+        // soft assignment can't beat the hard best pose, and GD should
+        // keep it finite and ordered sanely
+        assert!(refined[i] >= best[i].score - 1e-3);
+        assert!(refined[i].is_finite());
+    }
+}
+
+#[test]
+fn genotype_matches_rust_oracle() {
+    let rt = runtime();
+    let sites: Vec<[f32; 4]> = (0..777)
+        .map(|i| {
+            let mut c = [0f32; 4];
+            c[i % 4] = 10.0 + (i % 23) as f32;
+            c[(i + 1) % 4] = (i % 7) as f32;
+            c
+        })
+        .collect();
+    let calls = rt.genotype(&sites, 0.01).unwrap();
+    assert_eq!(calls.len(), sites.len());
+    for (i, call) in calls.iter().enumerate() {
+        let want = oracle::genotype_row(&sites[i], 0.01);
+        let best = want
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(call.best, best, "site {i}");
+        for g in 0..abi::N_GENOTYPES {
+            assert!((call.loglik[g] - want[g]).abs() < 1e-2, "site {i} g {g}");
+        }
+        assert!(call.qual >= 0.0);
+    }
+}
+
+#[test]
+fn abi_mismatch_is_rejected() {
+    let rt = runtime();
+    let bad = Tensor::f32(vec![3], vec![0.0; 3]).unwrap();
+    let err = rt.handle().call("docking", vec![bad]).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("ABI"), "{msg}");
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let rt = runtime();
+    let before = rt.handle().stats().calls();
+    rt.gc_count(b"GGCC").unwrap();
+    assert!(rt.handle().stats().calls() > before);
+    assert!(rt.handle().stats().exec_seconds() >= 0.0);
+}
+
+#[test]
+fn concurrent_callers_share_service() {
+    let rt = runtime();
+    let mut joins = vec![];
+    for t in 0..8 {
+        let rt = rt.clone();
+        joins.push(std::thread::spawn(move || {
+            let seq = vec![b"ACGT"[t % 4]; 1000];
+            rt.gc_count(&seq).unwrap()
+        }));
+    }
+    let results: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for (t, r) in results.iter().enumerate() {
+        let is_gc = matches!(b"ACGT"[t % 4], b'C' | b'G');
+        assert_eq!(*r, if is_gc { 1000 } else { 0 });
+    }
+}
