@@ -1,6 +1,10 @@
 //! Quickstart — Listing 1 of the paper: counting GC bases in a DNA
-//! sequence with POSIX tools from the `ubuntu` image, in ~15 lines of
-//! driver code.
+//! sequence with POSIX tools from the `ubuntu` image, written against
+//! the fluent pipeline-IR API in ~10 lines of driver code.
+//!
+//! The job deliberately chains TWO maps (extract the G/C bases, then
+//! count them) so `explain()` shows the optimizer fusing them into one
+//! container invocation per partition before lowering.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -10,7 +14,7 @@ use std::sync::Arc;
 
 use mare::cluster::{Cluster, ClusterConfig};
 use mare::dataset::Dataset;
-use mare::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use mare::mare::MaRe;
 
 fn main() -> mare::error::Result<()> {
     // a "cluster": 4 workers x 2 vCPUs, stock images pulled from the
@@ -22,21 +26,16 @@ fn main() -> mare::error::Result<()> {
     let genome = mare::workloads::gc::genome_text(42, 256, 80);
     let genome_rdd = Dataset::parallelize_text(&genome, "\n", 8);
 
-    // Listing 1, line for line
-    let gc_count = MaRe::new(cluster, genome_rdd)
-        .map(MapSpec {
-            input_mount: MountPoint::text("/dna"),
-            output_mount: MountPoint::text("/count"),
-            image: "ubuntu".into(),
-            command: "grep -o '[GC]' /dna | wc -l > /count".into(),
-        })
-        .reduce(ReduceSpec {
-            input_mount: MountPoint::text("/counts"),
-            output_mount: MountPoint::text("/sum"),
-            image: "ubuntu".into(),
-            command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
-            depth: 2,
-        });
+    // Listing 1 as a logical pipeline: map, map (fused away), reduce
+    let gc_count = MaRe::source(cluster, genome_rdd)
+        .map("ubuntu", "grep -o '[GC]' /dna > /gc")
+        .mounts("/dna", "/gc")
+        .map("ubuntu", "wc -l /gc > /count")
+        .mounts("/gc", "/count")
+        .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+        .mounts("/counts", "/sum")
+        .depth(2)
+        .build()?;
 
     let result = gc_count.collect_text()?;
     let expected = mare::workloads::gc::oracle(&genome);
@@ -44,8 +43,14 @@ fn main() -> mare::error::Result<()> {
     println!("GC count (driver-side oracle):         {expected}");
     assert_eq!(result, expected.to_string());
 
-    // the physical plan MaRe compiled for this job
-    let pp = mare::cluster::compile(gc_count.dataset().plan());
-    println!("\nphysical plan:\n{}", pp.describe());
+    // the plans MaRe built for this job: the two chained maps fuse into
+    // a single physical stage op (one simulated container per partition)
+    println!("\n{}", gc_count.explain());
+    assert_eq!(gc_count.logical().num_maps(), 2);
+    assert_eq!(gc_count.optimized().num_maps(), 1);
+    println!(
+        "simulated containers launched: {}",
+        gc_count.container_launches()
+    );
     Ok(())
 }

@@ -60,8 +60,10 @@ fn main() -> mare::error::Result<()> {
         Some(&individual.reference),
     )?;
 
-    // Listing 3
-    let out = snp::pipeline(cluster, reads_rdd, workers).run()?;
+    // Listing 3 as a logical pipeline, optimized + lowered by build()
+    let job = snp::pipeline(cluster, reads_rdd, workers);
+    println!("\n{}", job.explain());
+    let out = job.run()?;
     let calls = driver::parse_vcf_records(&out)?;
     print!("\n{}", out.report.summary());
 

@@ -42,8 +42,9 @@ fn main() -> mare::error::Result<()> {
     )?;
     let runtime = cluster.runtime().expect("runtime loaded").clone();
 
-    // Listing 2
+    // Listing 2 as a logical pipeline, optimized + lowered by build()
     let top_poses = vs::pipeline(cluster, library_rdd, 2);
+    println!("\n{}", top_poses.explain());
     let out = top_poses.run()?;
     let mols = mare::formats::sdf::parse_many(&out.collect_text(vs::SDF_SEP))?;
 

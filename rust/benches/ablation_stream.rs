@@ -10,6 +10,9 @@
 //!
 //! Run: `cargo bench --bench ablation_stream`.
 
+// exercises the deprecated eager shims on purpose (shim parity coverage)
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use mare::cluster::{Cluster, ClusterConfig};

@@ -8,6 +8,9 @@
 //!
 //! Run: `cargo bench --bench ablation_tmpfs`.
 
+// exercises the deprecated eager shims on purpose (shim parity coverage)
+#![allow(deprecated)]
+
 use std::sync::Arc;
 
 use mare::cluster::{Cluster, ClusterConfig};

@@ -111,6 +111,51 @@ fn main() {
         println!("  (PJRT cases skipped: artifacts not built — run `make artifacts`)");
     }
 
+    // ---- pipeline optimizer: map fusion (fewer simulated container
+    //      launches per partition; the IR redesign's headline win)
+    {
+        let reg = Arc::new(mare::tools::images::stock_registry(None));
+        let cluster = Arc::new(mare::cluster::Cluster::new(
+            reg,
+            None,
+            mare::cluster::ClusterConfig::sized(4, 4),
+        ));
+        let genome = mare::workloads::gc::genome_text(7, 512, 80);
+        let chain = |optimize: bool| {
+            let ds = mare::dataset::Dataset::parallelize_text(&genome, "\n", 8);
+            let mut builder = mare::mare::MaRe::source(cluster.clone(), ds)
+                .map("ubuntu", "grep -o '[GC]' /dna > /gc")
+                .mounts("/dna", "/gc")
+                .map("ubuntu", "cat /gc > /bases")
+                .mounts("/gc", "/bases")
+                .map("ubuntu", "wc -l /bases > /count")
+                .mounts("/bases", "/count");
+            if !optimize {
+                builder = builder.no_optimize();
+            }
+            builder.build().expect("valid chain")
+        };
+        b.time("pipeline/3map_chain_fused", || {
+            let job = chain(true);
+            job.run().unwrap();
+        });
+        b.time("pipeline/3map_chain_unfused", || {
+            let job = chain(false);
+            job.run().unwrap();
+        });
+        // the fused lowering must launch strictly fewer containers
+        let fused = chain(true);
+        fused.run().unwrap();
+        let unfused = chain(false);
+        unfused.run().unwrap();
+        assert!(
+            fused.container_launches() < unfused.container_launches(),
+            "fusion should cut launches: {} vs {}",
+            fused.container_launches(),
+            unfused.container_launches()
+        );
+    }
+
     // ---- end-to-end small pipeline (the §Perf headline)
     let mut cfg = mare::config::RunConfigFile {
         workload: mare::config::Workload::Gc,

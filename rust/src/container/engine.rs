@@ -7,6 +7,7 @@
 //! the engine is pure execution.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::error::Result;
@@ -91,17 +92,25 @@ pub struct RunOutcome {
     pub bytes_written: u64,
 }
 
-/// The engine: a registry plus the shared PJRT runtime for
+/// The engine: a registry plus the shared compute runtime for
 /// compute-backed tools.
 #[derive(Clone)]
 pub struct Engine {
     registry: Arc<Registry>,
     runtime: Option<ToolRuntime>,
+    /// Containers launched through this engine (clones share the
+    /// counter) — the optimizer's fusion win is asserted against it.
+    launches: Arc<AtomicU64>,
 }
 
 impl Engine {
     pub fn new(registry: Arc<Registry>, runtime: Option<ToolRuntime>) -> Self {
-        Engine { registry, runtime }
+        Engine { registry, runtime, launches: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Total simulated container launches so far (shared across clones).
+    pub fn launch_count(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
     }
 
     pub fn registry(&self) -> &Arc<Registry> {
@@ -114,6 +123,7 @@ impl Engine {
 
     /// Run one container to completion.
     pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome> {
+        self.launches.fetch_add(1, Ordering::Relaxed);
         let image = self.registry.pull(&cfg.image)?;
 
         let mut fs = if cfg.disk_backed {
@@ -232,6 +242,17 @@ mod tests {
         };
         assert_eq!(run(7), run(7));
         assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn launch_counter_shared_across_clones() {
+        let e = engine();
+        let e2 = e.clone();
+        let cfg = RunConfig::new("test", "cat /in > /out").input("/in", b"x".to_vec());
+        e.run(&cfg).unwrap();
+        e2.run(&cfg).unwrap();
+        assert_eq!(e.launch_count(), 2);
+        assert_eq!(e2.launch_count(), 2);
     }
 
     #[test]

@@ -1,62 +1,113 @@
 //! Crate-wide error type.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls (offline build environment — no
+//! `thiserror`; see the note in Cargo.toml).
 
 /// Every fallible MaRe operation returns this.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum MareError {
-    /// Artifact loading / PJRT compilation / execution failures.
-    #[error("runtime: {0}")]
+    /// Artifact loading / compilation / execution failures.
     Runtime(String),
 
     /// Artifact ABI mismatch against artifacts/manifest.json.
-    #[error("artifact ABI mismatch for `{entry}`: {detail}")]
     AbiMismatch { entry: String, detail: String },
 
     /// Container engine failures (unknown image, bad mount, tool error).
-    #[error("container: {0}")]
     Container(String),
 
     /// Mini-shell parse / execution errors inside a container.
-    #[error("shell: {0}")]
     Shell(String),
 
     /// Unknown tool in an image's tool table.
-    #[error("tool `{0}` not found in image `{1}`")]
     ToolNotFound(String, String),
 
     /// Storage backend errors (missing object, capacity, bad range).
-    #[error("storage: {0}")]
     Storage(String),
 
     /// Scheduler / cluster errors.
-    #[error("cluster: {0}")]
     Cluster(String),
 
     /// Dataset / plan errors (empty lineage, bad partition count).
-    #[error("dataset: {0}")]
     Dataset(String),
 
     /// Data-format parse errors (SDF / FASTQ / SAM / VCF).
-    #[error("format {format}: {detail}")]
     Format { format: &'static str, detail: String },
 
     /// Configuration errors.
-    #[error("config: {0}")]
     Config(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Pipeline builder / optimizer validation errors.
+    Pipeline(String),
+
+    Io(std::io::Error),
 
     /// JSON parse / shape errors (util::json).
-    #[error("json: {0}")]
     Json(String),
 }
 
-impl From<xla::Error> for MareError {
-    fn from(e: xla::Error) -> Self {
-        MareError::Runtime(e.to_string())
+impl std::fmt::Display for MareError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MareError::Runtime(m) => write!(f, "runtime: {m}"),
+            MareError::AbiMismatch { entry, detail } => {
+                write!(f, "artifact ABI mismatch for `{entry}`: {detail}")
+            }
+            MareError::Container(m) => write!(f, "container: {m}"),
+            MareError::Shell(m) => write!(f, "shell: {m}"),
+            MareError::ToolNotFound(tool, image) => {
+                write!(f, "tool `{tool}` not found in image `{image}`")
+            }
+            MareError::Storage(m) => write!(f, "storage: {m}"),
+            MareError::Cluster(m) => write!(f, "cluster: {m}"),
+            MareError::Dataset(m) => write!(f, "dataset: {m}"),
+            MareError::Format { format, detail } => write!(f, "format {format}: {detail}"),
+            MareError::Config(m) => write!(f, "config: {m}"),
+            MareError::Pipeline(m) => write!(f, "pipeline: {m}"),
+            MareError::Io(e) => write!(f, "{e}"),
+            MareError::Json(m) => write!(f, "json: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MareError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MareError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MareError {
+    fn from(e: std::io::Error) -> Self {
+        MareError::Io(e)
     }
 }
 
 pub type Result<T> = std::result::Result<T, MareError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_prefixed_and_informative() {
+        assert_eq!(MareError::Runtime("x".into()).to_string(), "runtime: x");
+        assert_eq!(
+            MareError::AbiMismatch { entry: "dock".into(), detail: "bad".into() }.to_string(),
+            "artifact ABI mismatch for `dock`: bad"
+        );
+        assert_eq!(
+            MareError::ToolNotFound("bash".into(), "ubuntu".into()).to_string(),
+            "tool `bash` not found in image `ubuntu`"
+        );
+        assert_eq!(MareError::Pipeline("empty image".into()).to_string(), "pipeline: empty image");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: MareError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, MareError::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -4,18 +4,26 @@
 //! for Processing Big Data with Application Containers"* (Capuccini,
 //! Dahlö, Toor, Spjuth, 2018) as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the MaRe programming model ([`mare`]) on top of
-//!   a Spark-like substrate built here: a partitioned, lineage-tracked
-//!   dataset ([`dataset`]), a DAG/stage compiler and locality-aware task
-//!   scheduler over a simulated cluster ([`cluster`]), a Docker-like
-//!   container engine with an in-memory filesystem and a mini shell
-//!   ([`container`]), pluggable storage backends modelling HDFS / Swift /
-//!   S3 ([`storage`]), and an execution-driven discrete-event simulation
-//!   of cluster time ([`simtime`]).
+//! * **L3 (this crate)** — the MaRe programming model ([`mare`]): a
+//!   fluent, validating builder records a **logical pipeline IR**
+//!   ([`mare::pipeline`]), an optimizer ([`mare::opt`]) fuses
+//!   consecutive containerized maps and plans reduce-tree depths while
+//!   it can still see the whole job, and the lowering translates the
+//!   optimized plan onto a Spark-like substrate built here: a
+//!   partitioned, lineage-tracked dataset ([`dataset`]), a DAG/stage
+//!   compiler and locality-aware task scheduler over a simulated
+//!   cluster ([`cluster`]), a Docker-like container engine with an
+//!   in-memory filesystem and a mini shell ([`container`]), pluggable
+//!   storage backends modelling HDFS / Swift / S3 ([`storage`]), and an
+//!   execution-driven discrete-event simulation of cluster time
+//!   ([`simtime`]).
 //! * **L2/L1 (build time)** — JAX compute graphs calling Pallas kernels,
-//!   AOT-lowered to HLO text (`python/compile/`); executed on the request
-//!   path through the PJRT runtime ([`runtime`]). Python never runs at
-//!   request time.
+//!   AOT-lowered to HLO text (`python/compile/`). On the request path
+//!   the artifact runtime ([`runtime`]) executes their graphs through a
+//!   bit-faithful pure-rust interpreter ([`runtime::native`]) whose ABI
+//!   is cross-checked against `artifacts/manifest.json` when present;
+//!   a PJRT/XLA execution backend is future work for environments that
+//!   ship the native XLA libraries. Python never runs at request time.
 //!
 //! The paper's evaluation pipelines (virtual screening, SNP calling, GC
 //! count) live in [`workloads`]; every figure in the paper is regenerated

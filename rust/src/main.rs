@@ -4,7 +4,7 @@
 //! mare run  --workload gc|vs|snp --storage hdfs|swift|s3|local
 //!           [--workers N] [--vcpus M] [--scale S] [--seed K]
 //!           [--reduce-depth D] [--config file.json] [--artifacts DIR]
-//! mare plan --workload gc|vs|snp ...        # print the physical plan
+//! mare plan --workload gc|vs|snp ...        # logical -> optimized -> physical
 //! mare inspect [--artifacts DIR]            # artifacts + stock images
 //! mare help
 //! ```
@@ -19,7 +19,7 @@ mare — MapReduce-oriented processing with application containers
 
 USAGE:
   mare run   [options]   run a workload end-to-end, print the report
-  mare plan  [options]   print the compiled physical plan (stages/shuffles)
+  mare plan  [options]   print the logical -> optimized -> physical plans
   mare shell [options]   interactive session (the paper's Zeppelin workflow)
   mare inspect           show AOT artifacts and stock container images
   mare help              this text
@@ -37,7 +37,7 @@ OPTIONS (run/plan):
 ";
 
 fn main() -> std::process::ExitCode {
-    mare::util::logging::init(log::LevelFilter::Info);
+    mare::util::logging::init(mare::util::logging::Level::Info);
     match dispatch() {
         Ok(()) => std::process::ExitCode::SUCCESS,
         Err(e) => {
@@ -67,7 +67,7 @@ fn dispatch() -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = RunConfigFile::from_args(args)?;
-    log::info!(
+    mare::log_info!(
         "run: workload={:?} storage={} cluster={}x{} scale={}",
         cfg.workload,
         cfg.backend.name(),
@@ -113,14 +113,12 @@ fn cmd_plan(args: &Args) -> Result<()> {
             cfg.cluster.workers * 2,
         ),
     };
-    let pipeline = match cfg.workload {
+    let job = match cfg.workload {
         Workload::Gc => mare::workloads::gc::pipeline(cluster, ds),
         Workload::Vs => mare::workloads::vs::pipeline(cluster, ds, cfg.reduce_depth),
         Workload::Snp => mare::workloads::snp::pipeline(cluster, ds, cfg.cluster.workers),
     };
-    let pp = mare::cluster::compile(pipeline.dataset().plan());
-    println!("lineage: {}", pipeline.dataset().describe());
-    println!("{}", pp.describe());
+    print!("{}", job.explain());
     Ok(())
 }
 

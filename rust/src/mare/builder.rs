@@ -1,0 +1,623 @@
+//! Fluent, validating builder over the [`Pipeline`] IR — the user-facing
+//! MaRe API.
+//!
+//! ```text
+//! MaRe::source(cluster, dataset)
+//!     .map("ubuntu", "grep -o '[GC]' /dna > /gc").mounts("/dna", "/gc")
+//!     .map("ubuntu", "wc -l /gc > /count").mounts("/gc", "/count")
+//!     .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+//!     .mounts("/counts", "/sum")
+//!     .depth(2)
+//!     .build()?
+//!     .collect_text()?
+//! ```
+//!
+//! `build()` validates the whole job up front — empty images/commands,
+//! `depth(0)`, missing mounts, and reduce mount-kind mismatches are
+//! *errors*, not silent clamps — then runs the optimizer passes
+//! ([`super::opt`]) and lowers the optimized plan to the physical
+//! [`Dataset`] lineage held by the returned [`Job`].
+
+use std::mem::discriminant;
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, RunOutput};
+use crate::container::Engine;
+use crate::dataset::{Dataset, Record};
+use crate::error::{MareError, Result};
+
+use super::mount::MountPoint;
+use super::opt::{self, OptEnv, OptReport};
+use super::pipeline::{
+    source_label, KeyFn, Lowering, MapStep, Pipeline, PipelineOp, ReduceStep,
+};
+
+/// Accumulates [`PipelineOp`]s; step modifiers (`.mounts`, `.depth`, …)
+/// configure the most recently added step. Errors are collected and
+/// reported together by [`PipelineBuilder::build`].
+#[derive(Clone)]
+pub struct PipelineBuilder {
+    cluster: Arc<Cluster>,
+    source: Dataset,
+    ops: Vec<PipelineOp>,
+    disk_default: bool,
+    optimize: bool,
+    errors: Vec<String>,
+}
+
+impl PipelineBuilder {
+    pub fn new(cluster: Arc<Cluster>, source: Dataset) -> Self {
+        let ingest = PipelineOp::Ingest {
+            label: source_label(source.plan()),
+            partitions: source.num_partitions(),
+        };
+        PipelineBuilder {
+            cluster,
+            source,
+            ops: vec![ingest],
+            disk_default: false,
+            optimize: true,
+            errors: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------- primitives
+
+    /// Append a containerized map step (configure mounts with
+    /// [`Self::mounts`] / [`Self::stdio`] / the `*_mount` setters).
+    pub fn map(mut self, image: impl Into<String>, command: impl Into<String>) -> Self {
+        self.ops.push(PipelineOp::Map(MapStep {
+            input_mount: MountPoint::text(""),
+            output_mount: MountPoint::text(""),
+            image: image.into(),
+            command: command.into(),
+            disk_mounts: self.disk_default,
+        }));
+        self
+    }
+
+    /// Append a containerized tree-reduce step. The command MUST be
+    /// associative and commutative and should shrink its input
+    /// (§1.2.2). Depth defaults to `auto` (optimizer-planned); pin it
+    /// with [`Self::depth`].
+    pub fn reduce(mut self, image: impl Into<String>, command: impl Into<String>) -> Self {
+        self.ops.push(PipelineOp::Reduce(ReduceStep {
+            input_mount: MountPoint::text(""),
+            output_mount: MountPoint::text(""),
+            image: image.into(),
+            command: command.into(),
+            depth: None,
+            disk_mounts: self.disk_default,
+        }));
+        self
+    }
+
+    /// Regroup records so those with equal keys share a partition
+    /// (keyBy + HashPartitioner, §1.2.2).
+    pub fn repartition_by(mut self, key_fn: KeyFn, partitions: usize) -> Self {
+        self.ops.push(PipelineOp::RepartitionBy { key_fn, partitions });
+        self
+    }
+
+    /// Rebalance into `partitions` without keys.
+    pub fn repartition(mut self, partitions: usize) -> Self {
+        self.ops.push(PipelineOp::Repartition { partitions });
+        self
+    }
+
+    // ---------------------------------------------------- step modifiers
+
+    /// Text mounts (newline records) for the last map/reduce step.
+    pub fn mounts(self, input: impl Into<String>, output: impl Into<String>) -> Self {
+        self.set_mounts("mounts", MountPoint::text(input), MountPoint::text(output))
+    }
+
+    /// Text mounts with a custom record separator (Listing 2's SDF).
+    pub fn mounts_sep(
+        self,
+        input: impl Into<String>,
+        output: impl Into<String>,
+        sep: &str,
+    ) -> Self {
+        self.set_mounts(
+            "mounts_sep",
+            MountPoint::text_sep(input, sep),
+            MountPoint::text_sep(output, sep),
+        )
+    }
+
+    /// Binary-directory mounts (one file per record) for the last step.
+    pub fn binary_mounts(self, input: impl Into<String>, output: impl Into<String>) -> Self {
+        self.set_mounts("binary_mounts", MountPoint::binary(input), MountPoint::binary(output))
+    }
+
+    /// Stream records over stdin/stdout instead of materialized mounts.
+    pub fn stdio(self) -> Self {
+        self.set_mounts("stdio", MountPoint::stream(), MountPoint::stream())
+    }
+
+    /// Explicit input mount for the last step (mixed-kind steps, e.g.
+    /// the SNP pipeline's SAM-text-in / VCF-binary-out gatk map).
+    pub fn input_mount(mut self, mount: MountPoint) -> Self {
+        match self.ops.last_mut() {
+            Some(PipelineOp::Map(m)) => m.input_mount = mount,
+            Some(PipelineOp::Reduce(r)) => r.input_mount = mount,
+            _ => self.errors.push("`.input_mount` must follow a map or reduce step".into()),
+        }
+        self
+    }
+
+    /// Explicit output mount for the last step.
+    pub fn output_mount(mut self, mount: MountPoint) -> Self {
+        match self.ops.last_mut() {
+            Some(PipelineOp::Map(m)) => m.output_mount = mount,
+            Some(PipelineOp::Reduce(r)) => r.output_mount = mount,
+            _ => self.errors.push("`.output_mount` must follow a map or reduce step".into()),
+        }
+        self
+    }
+
+    fn set_mounts(mut self, what: &str, input: MountPoint, output: MountPoint) -> Self {
+        match self.ops.last_mut() {
+            Some(PipelineOp::Map(m)) => {
+                m.input_mount = input;
+                m.output_mount = output;
+            }
+            Some(PipelineOp::Reduce(r)) => {
+                r.input_mount = input;
+                r.output_mount = output;
+            }
+            _ => self.errors.push(format!("`.{what}` must follow a map or reduce step")),
+        }
+        self
+    }
+
+    /// Pin the tree depth K of the last reduce step (`0` is an error —
+    /// the seed silently clamped it to 1).
+    pub fn depth(mut self, k: usize) -> Self {
+        match self.ops.last_mut() {
+            Some(PipelineOp::Reduce(r)) => {
+                if k == 0 {
+                    self.errors.push(
+                        "`.depth(0)` is invalid — the reduce tree needs at least one level"
+                            .into(),
+                    );
+                } else {
+                    r.depth = Some(k);
+                }
+            }
+            _ => self.errors.push("`.depth(..)` must follow a reduce step".into()),
+        }
+        self
+    }
+
+    /// Disk-backed mount points for all SUBSEQUENT steps (Listing 3's
+    /// `TMPDIR` override for chromosome-sized partitions).
+    pub fn disk_mounts(mut self, disk: bool) -> Self {
+        self.disk_default = disk;
+        self
+    }
+
+    /// Skip the optimizer passes (A/B baselines, benches).
+    pub fn no_optimize(mut self) -> Self {
+        self.optimize = false;
+        self
+    }
+
+    /// Snapshot of the logical plan recorded so far (without the
+    /// terminal `collect` marker `build()` appends).
+    pub fn logical(&self) -> Pipeline {
+        Pipeline::new(self.ops.clone())
+    }
+
+    // ----------------------------------------------------------- build
+
+    fn validate(&self) -> Result<()> {
+        let mut errors = self.errors.clone();
+        let mut step = 0usize;
+        for op in &self.ops {
+            match op {
+                PipelineOp::Map(m) => {
+                    step += 1;
+                    validate_step("map", step, &m.image, &m.command, &mut errors);
+                    validate_mount("map", step, "input", &m.input_mount, &mut errors);
+                    validate_mount("map", step, "output", &m.output_mount, &mut errors);
+                }
+                PipelineOp::Reduce(r) => {
+                    step += 1;
+                    validate_step("reduce", step, &r.image, &r.command, &mut errors);
+                    validate_mount("reduce", step, "input", &r.input_mount, &mut errors);
+                    validate_mount("reduce", step, "output", &r.output_mount, &mut errors);
+                    if discriminant(&r.input_mount) != discriminant(&r.output_mount) {
+                        errors.push(format!(
+                            "reduce step {step}: input mount is {} but output mount is {} — \
+                             the reducer's output re-enters it at the next tree level, so \
+                             both mounts must be the same kind",
+                            mount_kind(&r.input_mount),
+                            mount_kind(&r.output_mount),
+                        ));
+                    }
+                }
+                PipelineOp::RepartitionBy { partitions, .. }
+                | PipelineOp::Repartition { partitions } => {
+                    step += 1;
+                    if *partitions == 0 {
+                        errors.push(format!(
+                            "step {step}: cannot repartition into 0 partitions"
+                        ));
+                    }
+                }
+                PipelineOp::Ingest { .. } | PipelineOp::Collect => {}
+            }
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(MareError::Pipeline(errors.join("; ")))
+        }
+    }
+
+    /// Validate, optimize and lower the pipeline into a runnable [`Job`].
+    pub fn build(self) -> Result<Job> {
+        self.validate()?;
+        let PipelineBuilder { cluster, source, mut ops, optimize, .. } = self;
+        ops.push(PipelineOp::Collect);
+        let logical = Pipeline::new(ops);
+
+        let env = OptEnv {
+            workers: cluster.config.workers,
+            source_partitions: source.num_partitions(),
+        };
+        let (optimized, report) = if optimize {
+            opt::optimize(&logical, &env)
+        } else {
+            (logical.clone(), OptReport::default())
+        };
+
+        let lowering = Lowering::for_cluster(&cluster);
+        let lowered = lowering.lower(&optimized, &source);
+        let engine = lowering.engine().clone();
+        Ok(Job { cluster, source, logical, optimized, report, lowered, engine })
+    }
+}
+
+fn mount_kind(m: &MountPoint) -> &'static str {
+    match m {
+        MountPoint::TextFile { .. } => "text",
+        MountPoint::BinaryFiles { .. } => "binary",
+        MountPoint::StdStream { .. } => "stdio",
+    }
+}
+
+fn validate_step(kind: &str, step: usize, image: &str, command: &str, errors: &mut Vec<String>) {
+    if image.trim().is_empty() {
+        errors.push(format!("{kind} step {step}: image must not be empty"));
+    }
+    if command.trim().is_empty() {
+        errors.push(format!("{kind} step {step}: command must not be empty"));
+    }
+}
+
+fn validate_mount(
+    kind: &str,
+    step: usize,
+    side: &str,
+    mount: &MountPoint,
+    errors: &mut Vec<String>,
+) {
+    let path = mount.path();
+    if !mount.is_stream() && path.is_empty() {
+        errors.push(format!(
+            "{kind} step {step}: {side} mount not configured — \
+             call `.mounts(..)`, `.stdio()` or `.{side}_mount(..)`"
+        ));
+    }
+}
+
+/// A validated, optimized, lowered job: ready to run (possibly many
+/// times — lineage is immutable, the Zeppelin-style workflow).
+pub struct Job {
+    cluster: Arc<Cluster>,
+    source: Dataset,
+    logical: Pipeline,
+    optimized: Pipeline,
+    report: OptReport,
+    lowered: Dataset,
+    engine: Arc<Engine>,
+}
+
+impl Job {
+    /// Execute the lowered lineage on the cluster.
+    pub fn run(&self) -> Result<RunOutput> {
+        self.cluster.run(&self.lowered)
+    }
+
+    /// Execute and join all text records with `\n` (driver-side collect).
+    pub fn collect_text(&self) -> Result<String> {
+        Ok(self.run()?.collect_text("\n").trim_end().to_string())
+    }
+
+    /// Execute and return all records.
+    pub fn collect(&self) -> Result<Vec<Record>> {
+        Ok(self.run()?.collect_records())
+    }
+
+    /// Logical plan as written by the user.
+    pub fn logical(&self) -> &Pipeline {
+        &self.logical
+    }
+
+    /// Logical plan after the optimizer passes.
+    pub fn optimized(&self) -> &Pipeline {
+        &self.optimized
+    }
+
+    /// What the optimizer did.
+    pub fn opt_report(&self) -> &OptReport {
+        &self.report
+    }
+
+    /// The lowered physical lineage.
+    pub fn dataset(&self) -> &Dataset {
+        &self.lowered
+    }
+
+    /// The source dataset the job ingests.
+    pub fn source(&self) -> &Dataset {
+        &self.source
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// The engine all of this job's container ops share.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Simulated containers launched by this job's ops so far.
+    pub fn container_launches(&self) -> u64 {
+        self.engine.launch_count()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.lowered.num_partitions()
+    }
+
+    /// Logical plan → optimized plan → physical plan (rendered like
+    /// `cluster::compile(...).describe()`).
+    pub fn explain(&self) -> String {
+        super::pipeline::render_explain(
+            &self.logical,
+            &self.report,
+            &self.optimized,
+            &self.lowered,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::container::Registry;
+    use crate::mare::MaRe;
+    use crate::tools::images;
+
+    fn cluster(workers: usize) -> Arc<Cluster> {
+        let mut reg = Registry::new();
+        reg.push(images::ubuntu());
+        Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(workers, 4)))
+    }
+
+    fn numbers(n: usize, partitions: usize) -> Dataset {
+        Dataset::parallelize_text(&"1\n".repeat(n), "\n", partitions)
+    }
+
+    fn sum_job(parts: usize, depth: Option<usize>) -> Job {
+        let mut b = MaRe::source(cluster(4), numbers(24, parts))
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+            .mounts("/counts", "/sum");
+        if let Some(k) = depth {
+            b = b.depth(k);
+        }
+        b.build().expect("valid reduce job")
+    }
+
+    #[test]
+    fn fluent_gc_job_end_to_end() {
+        let genome = "GATTACAGGCC\nTTGGCCAA\nGCGCGCGC\nAAAA";
+        let expected =
+            genome.chars().filter(|c| *c == 'G' || *c == 'C').count().to_string();
+        let job = MaRe::source(cluster(2), Dataset::parallelize_text(genome, "\n", 4))
+            .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+            .mounts("/dna", "/count")
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+            .mounts("/counts", "/sum")
+            .depth(2)
+            .build()
+            .unwrap();
+        assert_eq!(job.collect_text().unwrap(), expected);
+        // lineage is immutable: running again gives the same answer
+        assert_eq!(job.collect_text().unwrap(), expected);
+    }
+
+    #[test]
+    fn reduce_depth_edge_cases_all_converge() {
+        // K=1, K far above log2(partitions), and a single-partition
+        // source all end in ONE partition with the right sum
+        for (parts, depth) in
+            [(8usize, Some(1usize)), (8, Some(64)), (1, Some(2)), (1, Some(1)), (8, None)]
+        {
+            let job = sum_job(parts, depth);
+            let out = job.run().unwrap();
+            assert_eq!(out.partitions.len(), 1, "parts={parts} depth={depth:?}");
+            assert_eq!(
+                out.collect_text("\n").trim(),
+                "24",
+                "parts={parts} depth={depth:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_partition_reduce_runs_reducer_once() {
+        // the seed's MaRe::reduce double-ran the reducer here
+        let job = sum_job(1, Some(2));
+        let out = job.run().unwrap();
+        assert_eq!(out.collect_text("\n").trim(), "24");
+        assert_eq!(job.container_launches(), 1);
+    }
+
+    #[test]
+    fn auto_depth_is_planned_and_visible_in_explain() {
+        let job = sum_job(8, None);
+        let s = job.explain();
+        assert!(s.contains("depth=auto"), "{s}");
+        assert!(s.contains("auto-planned to"), "{s}");
+        // the optimized plan carries a concrete depth
+        assert!(!job.opt_report().planned_depths.is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_empty_image_and_command() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .map("", "")
+            .mounts("/in", "/out")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("image must not be empty"), "{err}");
+        assert!(err.contains("command must not be empty"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_depth_zero() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /in > /out")
+            .mounts("/in", "/out")
+            .depth(0)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("depth(0)"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_mount_kind_mismatch_on_reduce() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /in > /out")
+            .input_mount(MountPoint::text("/in"))
+            .output_mount(MountPoint::binary("/out"))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("same kind"), "{err}");
+        assert!(err.contains("text") && err.contains("binary"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_missing_mounts_and_misplaced_modifiers() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .map("ubuntu", "cat /in > /out")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mount not configured"), "{err}");
+
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .depth(2)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must follow a reduce"), "{err}");
+
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .repartition(0)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("0 partitions"), "{err}");
+    }
+
+    #[test]
+    fn mixed_kind_map_is_allowed() {
+        // maps may legitimately change representation (SAM text in,
+        // gzipped VCF files out) — only reduces require kind symmetry
+        let job = MaRe::source(cluster(1), numbers(4, 2))
+            .map("ubuntu", "cat /in > /out/part.txt")
+            .input_mount(MountPoint::text("/in"))
+            .output_mount(MountPoint::binary("/out"))
+            .build();
+        assert!(job.is_ok());
+    }
+
+    #[test]
+    fn stdio_steps_validate_and_run() {
+        let job = MaRe::source(cluster(2), Dataset::parallelize_text("GATTACA\nGCGC", "\n", 2))
+            .map("ubuntu", "grep -o '[GC]' | wc -l")
+            .stdio()
+            .build()
+            .unwrap();
+        let total: u64 = job
+            .run()
+            .unwrap()
+            .collect_records()
+            .iter()
+            .filter_map(|r| r.as_text().and_then(|t| t.trim().parse::<u64>().ok()))
+            .sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn optimized_three_map_chain_launches_strictly_fewer_containers() {
+        let mk = |optimize: bool| {
+            let mut b = MaRe::source(cluster(2), numbers(8, 4))
+                .map("ubuntu", "cat /a > /b")
+                .mounts("/a", "/b")
+                .map("ubuntu", "cat /b > /c")
+                .mounts("/b", "/c")
+                .map("ubuntu", "wc -l /c > /count")
+                .mounts("/c", "/count");
+            if !optimize {
+                b = b.no_optimize();
+            }
+            let job = b.build().unwrap();
+            let out = job.run().unwrap();
+            let total: u64 = out
+                .collect_records()
+                .iter()
+                .filter_map(|r| r.as_text().and_then(|t| t.trim().parse::<u64>().ok()))
+                .sum();
+            assert_eq!(total, 8, "per-partition line counts must sum to the input size");
+            job.container_launches()
+        };
+        let unfused = mk(false);
+        let fused = mk(true);
+        assert_eq!(unfused, 12, "3 ops x 4 partitions");
+        assert_eq!(fused, 4, "1 fused op x 4 partitions");
+        assert!(fused < unfused, "fusion must strictly reduce container launches");
+    }
+
+    #[test]
+    fn explain_shows_fusion_and_single_physical_stage() {
+        let job = MaRe::source(cluster(2), numbers(8, 4))
+            .map("ubuntu", "grep -o 1 /dna > /gc")
+            .mounts("/dna", "/gc")
+            .map("ubuntu", "wc -l /gc > /count")
+            .mounts("/gc", "/count")
+            .build()
+            .unwrap();
+        assert_eq!(job.logical().num_maps(), 2);
+        assert_eq!(job.optimized().num_maps(), 1);
+        let s = job.explain();
+        assert!(s.contains("logical plan:"), "{s}");
+        assert!(s.contains("1 map fused"), "{s}");
+        assert!(s.contains("physical plan:"), "{s}");
+        // the two chained maps compile into ONE physical stage
+        let pp = crate::cluster::compile(job.dataset().plan());
+        assert_eq!(pp.stages.len(), 1);
+        assert_eq!(pp.stages[0].ops.len(), 1);
+    }
+}

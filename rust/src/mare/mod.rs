@@ -1,49 +1,59 @@
 //! The MaRe programming model — the paper's contribution.
 //!
-//! A [`MaRe`] wraps a [`Dataset`] (the RDD analogue) and exposes the
-//! three primitives of §1.2.1, each taking a containerized command:
+//! The user-facing API is the three-primitive surface of §1.2.1 —
+//! `map`, `reduce`, `repartitionBy` — expressed through a fluent,
+//! validating builder that records a **logical pipeline IR**
+//! ([`pipeline::Pipeline`]) instead of eagerly mutating dataset
+//! lineage:
 //!
-//! * [`MaRe::map`] — apply a command to every partition (Figure 1; one
-//!   fused stage, no shuffle),
-//! * [`MaRe::reduce`] — tree-aggregate all partitions into one with a
-//!   user-configurable depth K, default 2 (Figure 2; K shuffles),
-//! * [`MaRe::repartition_by`] — keyBy + hash partitioner regrouping.
+//! * [`MaRe::source`] opens a [`PipelineBuilder`] over a cluster and a
+//!   dataset;
+//! * `.map(image, command)` / `.reduce(image, command)` append
+//!   containerized steps, configured by `.mounts(..)`, `.stdio()`,
+//!   `.depth(K)` etc;
+//! * `.build()` validates the WHOLE job (empty images/commands,
+//!   `depth(0)`, missing mounts and reduce mount-kind mismatches are
+//!   errors, not silent clamps), runs the optimizer passes
+//!   ([`opt`]: map fusion, reduce-depth planning) and lowers the
+//!   optimized plan into the physical lineage held by a [`Job`];
+//! * [`Job::run`] / [`Job::collect_text`] execute (repeatedly — the
+//!   lineage is immutable), and [`Job::explain`] renders
+//!   logical → optimized → physical plans.
 //!
-//! Everything is lazy: primitives extend lineage; [`MaRe::run`] /
-//! [`MaRe::collect_text`] hand the lineage to the [`Cluster`]. Listing 1
-//! (GC count) in this API:
+//! Listing 1 (GC count) in this API:
 //!
 //! ```no_run
 //! # use std::sync::Arc;
-//! # use mare::mare::{MaRe, MapSpec, ReduceSpec, MountPoint};
+//! # use mare::mare::MaRe;
 //! # use mare::cluster::{Cluster, ClusterConfig};
 //! # use mare::container::Registry;
 //! # use mare::dataset::Dataset;
+//! # fn main() -> mare::Result<()> {
 //! # let mut reg = Registry::new();
 //! # reg.push(mare::tools::images::ubuntu());
 //! # let cluster = Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(2, 4)));
 //! # let genome = Dataset::parallelize_text("GATTACA", "\n", 2);
-//! let gc_count = MaRe::new(cluster, genome)
-//!     .map(MapSpec {
-//!         input_mount: MountPoint::text("/dna"),
-//!         output_mount: MountPoint::text("/count"),
-//!         image: "ubuntu".into(),
-//!         command: "grep -o '[GC]' /dna | wc -l > /count".into(),
-//!     })
-//!     .reduce(ReduceSpec {
-//!         input_mount: MountPoint::text("/counts"),
-//!         output_mount: MountPoint::text("/sum"),
-//!         image: "ubuntu".into(),
-//!         command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
-//!         depth: 2,
-//!     })
-//!     .collect_text()
-//!     .unwrap();
+//! let gc_count = MaRe::source(cluster, genome)
+//!     .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+//!     .mounts("/dna", "/count")
+//!     .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+//!     .mounts("/counts", "/sum")
+//!     .depth(2)
+//!     .build()?
+//!     .collect_text()?;
+//! # Ok(())
+//! # }
 //! ```
+//!
+//! The pre-IR eager API ([`MaRe::new`] + [`MapSpec`] / [`ReduceSpec`])
+//! still compiles as thin deprecated shims over the same lowering.
 
+pub mod builder;
 pub mod cost;
 pub mod mount;
 pub mod op;
+pub mod opt;
+pub mod pipeline;
 
 use std::sync::Arc;
 
@@ -51,13 +61,22 @@ use crate::cluster::{Cluster, RunOutput};
 use crate::dataset::{Dataset, Record};
 use crate::error::Result;
 
+pub use builder::{Job, PipelineBuilder};
 pub use mount::MountPoint;
 pub use op::ContainerOp;
+pub use pipeline::{MapStep, Pipeline, PipelineOp, ReduceStep};
+
+use pipeline::Lowering;
 
 /// Default tree-reduce depth (§1.2.2: "By default MaRe sets K to 2").
+/// The builder's `depth=auto` plans K instead; this constant remains
+/// the pinned default of the deprecated eager API and the REPL.
 pub const DEFAULT_REDUCE_DEPTH: usize = 2;
 
-/// A `map` primitive invocation (paper's named parameters).
+/// A `map` primitive invocation (pre-IR eager API).
+#[deprecated(
+    note = "use the fluent builder: MaRe::source(..).map(image, command).mounts(..)"
+)]
 #[derive(Debug, Clone)]
 pub struct MapSpec {
     pub input_mount: MountPoint,
@@ -66,8 +85,11 @@ pub struct MapSpec {
     pub command: String,
 }
 
-/// A `reduce` primitive invocation. The command MUST be associative and
-/// commutative and should shrink its input (§1.2.2).
+/// A `reduce` primitive invocation (pre-IR eager API). The command MUST
+/// be associative and commutative and should shrink its input (§1.2.2).
+#[deprecated(
+    note = "use the fluent builder: MaRe::source(..).reduce(image, command).mounts(..).depth(K)"
+)]
 #[derive(Debug, Clone)]
 pub struct ReduceSpec {
     pub input_mount: MountPoint,
@@ -78,6 +100,7 @@ pub struct ReduceSpec {
     pub depth: usize,
 }
 
+#[allow(deprecated)]
 impl ReduceSpec {
     pub fn with_default_depth(
         input_mount: MountPoint,
@@ -96,6 +119,10 @@ impl ReduceSpec {
 }
 
 /// The MaRe handle: a dataset + the cluster that will run it.
+///
+/// [`MaRe::source`] is the entry point of the fluent pipeline API; the
+/// eager methods below survive as deprecated shims over the same
+/// lowering code.
 #[derive(Clone)]
 pub struct MaRe {
     cluster: Arc<Cluster>,
@@ -106,6 +133,12 @@ pub struct MaRe {
 }
 
 impl MaRe {
+    /// Open a fluent [`PipelineBuilder`] over `dataset` — the preferred
+    /// way to express a job.
+    pub fn source(cluster: Arc<Cluster>, dataset: Dataset) -> PipelineBuilder {
+        PipelineBuilder::new(cluster, dataset)
+    }
+
     pub fn new(cluster: Arc<Cluster>, dataset: Dataset) -> Self {
         MaRe { cluster, dataset, disk_mounts: false }
     }
@@ -128,75 +161,41 @@ impl MaRe {
         self.dataset.num_partitions()
     }
 
-    fn container_op(
-        &self,
-        input: MountPoint,
-        output: MountPoint,
-        image: &str,
-        command: &str,
-    ) -> Arc<ContainerOp> {
-        let mut op = ContainerOp::new(
-            Arc::new(self.cluster.engine()),
-            input,
-            output,
-            image,
-            command,
-        );
-        op.disk_mounts = self.disk_mounts;
-        Arc::new(op)
-    }
-
     /// Apply a containerized command to each partition (Figure 1).
+    #[deprecated(note = "use MaRe::source(..).map(image, command).mounts(..).build()")]
+    #[allow(deprecated)]
     pub fn map(self, spec: MapSpec) -> MaRe {
-        let op = self.container_op(
-            spec.input_mount,
-            spec.output_mount,
-            &spec.image,
-            &spec.command,
-        );
-        MaRe { dataset: self.dataset.map_partitions(op), ..self }
+        let step = MapStep {
+            input_mount: spec.input_mount,
+            output_mount: spec.output_mount,
+            image: spec.image,
+            command: spec.command,
+            disk_mounts: self.disk_mounts,
+        };
+        let lowering = Lowering::for_cluster(&self.cluster);
+        let dataset = lowering.lower_op(self.dataset, &PipelineOp::Map(step));
+        MaRe { dataset, cluster: self.cluster, disk_mounts: self.disk_mounts }
     }
 
-    /// Tree-aggregate all partitions into one (Figure 2).
+    /// Tree-aggregate all partitions into one (Figure 2): K levels of
+    /// aggregate-within-partitions + shrink, at most K shuffles.
     ///
-    /// K levels: aggregate within partitions (mapPartitions), shrink the
-    /// partition count (repartition ⇒ shuffle), repeat; then one final
-    /// in-partition aggregation. K shuffles total.
+    /// A `depth` of 0 is clamped to 1 here for backwards compatibility;
+    /// the fluent builder rejects it instead.
+    #[deprecated(note = "use MaRe::source(..).reduce(image, command).mounts(..).depth(K).build()")]
+    #[allow(deprecated)]
     pub fn reduce(self, spec: ReduceSpec) -> MaRe {
-        let k = spec.depth.max(1);
-        let mut ds = self.dataset.clone();
-        let mut parts = ds.num_partitions().max(1);
-
-        // per-level shrink factor: N^(1/K), so K levels reach 1
-        let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
-
-        for _ in 0..k {
-            let op = self.container_op(
-                spec.input_mount.clone(),
-                spec.output_mount.clone(),
-                &spec.image,
-                &spec.command,
-            );
-            ds = ds.map_partitions(op);
-            if parts == 1 {
-                break;
-            }
-            parts = parts.div_ceil(scale).max(1);
-            ds = ds.repartition(parts);
-        }
-        // final aggregation over the remaining partition(s)
-        if parts > 1 {
-            ds = ds.repartition(1);
-        }
-        let op = self.container_op(
-            spec.input_mount.clone(),
-            spec.output_mount.clone(),
-            &spec.image,
-            &spec.command,
-        );
-        ds = ds.map_partitions(op);
-
-        MaRe { dataset: ds, ..self }
+        let step = ReduceStep {
+            input_mount: spec.input_mount,
+            output_mount: spec.output_mount,
+            image: spec.image,
+            command: spec.command,
+            depth: Some(spec.depth.max(1)),
+            disk_mounts: self.disk_mounts,
+        };
+        let lowering = Lowering::for_cluster(&self.cluster);
+        let dataset = lowering.lower_op(self.dataset, &PipelineOp::Reduce(step));
+        MaRe { dataset, cluster: self.cluster, disk_mounts: self.disk_mounts }
     }
 
     /// Regroup records so those with equal keys share a partition
@@ -229,6 +228,7 @@ impl MaRe {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cluster::{ClusterConfig, StageOutput};
@@ -356,5 +356,29 @@ mod tests {
         let b = m.reduce(sum_spec(1)).collect_text().unwrap();
         assert_eq!(a, "4");
         assert_eq!(b, "4");
+    }
+
+    /// The shim and the fluent builder must lower identically.
+    #[test]
+    fn shim_and_builder_agree() {
+        let genome = "GGCC\nAATT\nGCGC\nTTAA\nCCGG\nATAT";
+        let ds = || Dataset::parallelize_text(genome, "\n", 3);
+        let old = MaRe::new(cluster(2), ds())
+            .map(gc_spec())
+            .reduce(sum_spec(2))
+            .collect_text()
+            .unwrap();
+        let new = MaRe::source(cluster(2), ds())
+            .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+            .mounts("/dna", "/count")
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+            .mounts("/counts", "/sum")
+            .depth(2)
+            .build()
+            .unwrap()
+            .collect_text()
+            .unwrap();
+        assert_eq!(old, new);
+        assert_eq!(old, "10");
     }
 }

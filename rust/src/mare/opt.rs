@@ -1,0 +1,343 @@
+//! Optimizer passes over the logical [`Pipeline`].
+//!
+//! Because primitives now build an IR instead of mutating lineage, the
+//! framework sees the whole job before anything is lowered and can:
+//!
+//! 1. **Fuse consecutive containerized maps** on the same image whose
+//!    mounts chain (`a` writes exactly where `b` reads) into ONE shell
+//!    invocation — fewer simulated container launches, fewer stage-in/
+//!    stage-out staging rounds (measurable in `micro_hotpath` and the
+//!    launch-count assertions below).
+//! 2. **Plan the reduce tree depth K** from the command's cost model
+//!    and the cluster size when the user did not pin it (`depth=auto`).
+//!
+//! A third rewrite — eliding the redundant final aggregation the seed
+//! appended after an already-converged tree — lives in the lowering
+//! itself (`pipeline::Lowering::lower_reduce`), where the partition
+//! count is known exactly.
+
+use crate::cluster::task::CONTAINER_START;
+use crate::simtime::{CostModel, Duration};
+
+use super::pipeline::{MapStep, Pipeline, PipelineOp};
+
+/// What the optimizer knows about the job's environment.
+#[derive(Debug, Clone, Copy)]
+pub struct OptEnv {
+    pub workers: usize,
+    pub source_partitions: usize,
+}
+
+/// What the passes did (surfaced by `explain()`).
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    /// Map nodes eliminated by fusion.
+    pub fused_maps: usize,
+    /// Depths chosen for `depth=auto` reduces, in pipeline order.
+    pub planned_depths: Vec<usize>,
+}
+
+impl OptReport {
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        if self.fused_maps > 0 {
+            parts.push(format!(
+                "{} map{} fused",
+                self.fused_maps,
+                if self.fused_maps == 1 { "" } else { "s" }
+            ));
+        }
+        for k in &self.planned_depths {
+            parts.push(format!("reduce depth auto-planned to {k}"));
+        }
+        if parts.is_empty() {
+            parts.push("no rewrites".into());
+        }
+        parts.join(", ")
+    }
+}
+
+/// Run all passes; returns the rewritten pipeline and a report.
+pub fn optimize(pipeline: &Pipeline, env: &OptEnv) -> (Pipeline, OptReport) {
+    let mut report = OptReport::default();
+    let fused = fuse_maps(pipeline, &mut report);
+    let planned = plan_depths(&fused, env, &mut report);
+    (planned, report)
+}
+
+/// Whether `a` then `b` can run as one container invocation: same
+/// image, same mount backing, and `b` reads exactly the file/dir `a`
+/// wrote (streamed mounts are excluded — the middle stdout capture
+/// would be lost).
+///
+/// Known semantic relaxation (same family as Spark's stage pipelining
+/// of side-effecting ops): the unfused boundary round-trips records
+/// through `split_records`, which drops whitespace-only chunks, while
+/// the fused command reads `a`'s raw output file in place. A map whose
+/// output is entirely whitespace can therefore yield a different
+/// downstream result fused vs unfused. None of the paper's commands
+/// emit whitespace-only records; use `.no_optimize()` to pin the
+/// unfused boundary semantics when yours do.
+pub fn can_fuse(a: &MapStep, b: &MapStep) -> bool {
+    a.image == b.image
+        && a.disk_mounts == b.disk_mounts
+        && !a.output_mount.is_stream()
+        && a.output_mount == b.input_mount
+}
+
+fn fuse_two(a: &MapStep, b: &MapStep) -> MapStep {
+    MapStep {
+        input_mount: a.input_mount.clone(),
+        output_mount: b.output_mount.clone(),
+        image: a.image.clone(),
+        // the mini-shell runs newline-separated commands sequentially
+        // in the same container fs, so `b` sees `a`'s output in place
+        command: format!("{}\n{}", a.command, b.command),
+        disk_mounts: a.disk_mounts,
+    }
+}
+
+/// Pass 1: fold chains of fusable maps left-to-right.
+fn fuse_maps(pipeline: &Pipeline, report: &mut OptReport) -> Pipeline {
+    let mut out: Vec<PipelineOp> = Vec::with_capacity(pipeline.ops().len());
+    for op in pipeline.ops() {
+        if let PipelineOp::Map(next) = op {
+            let fusable =
+                matches!(out.last(), Some(PipelineOp::Map(prev)) if can_fuse(prev, next));
+            if fusable {
+                let Some(PipelineOp::Map(prev)) = out.pop() else {
+                    unreachable!("last element was checked to be a Map");
+                };
+                out.push(PipelineOp::Map(fuse_two(&prev, next)));
+                report.fused_maps += 1;
+                continue;
+            }
+        }
+        out.push(op.clone());
+    }
+    Pipeline::new(out)
+}
+
+/// Pass 2: resolve `depth=auto` reduces via the cost model, tracking
+/// the partition count as it evolves through the pipeline.
+fn plan_depths(pipeline: &Pipeline, env: &OptEnv, report: &mut OptReport) -> Pipeline {
+    let mut parts = env.source_partitions.max(1);
+    let mut out = Vec::with_capacity(pipeline.ops().len());
+    for op in pipeline.ops() {
+        match op {
+            PipelineOp::Reduce(r) => {
+                let mut r = r.clone();
+                if r.depth.is_none() {
+                    let k =
+                        plan_reduce_depth(&super::cost::infer(&r.command), parts, env.workers);
+                    report.planned_depths.push(k);
+                    r.depth = Some(k);
+                }
+                parts = 1;
+                out.push(PipelineOp::Reduce(r));
+            }
+            PipelineOp::RepartitionBy { partitions, .. }
+            | PipelineOp::Repartition { partitions } => {
+                parts = (*partitions).max(1);
+                out.push(op.clone());
+            }
+            other => out.push(other.clone()),
+        }
+    }
+    Pipeline::new(out)
+}
+
+/// Nominal aggregated-record size for depth planning (one reducer
+/// output per partition; molecule/VCF-sized rather than line-sized).
+const PLAN_RECORD_BYTES: f64 = 64.0 * 1024.0;
+/// Nominal per-shuffle latency charged per tree level.
+const PLAN_SHUFFLE: Duration = Duration(1_000_000); // 1 s
+
+/// Choose the tree depth K minimizing the modeled virtual makespan of
+/// the reduce: deeper trees add shuffles and container launches but cap
+/// how many partition outputs any single task must aggregate. Cheap
+/// POSIX reducers on small clusters plan K=1; per-record-expensive
+/// reducers over many partitions plan deeper trees.
+pub fn plan_reduce_depth(cost: &CostModel, partitions: usize, workers: usize) -> usize {
+    let parts = partitions.max(1);
+    let workers = workers.max(1);
+    let k_max = (parts as f64).log2().ceil().max(1.0) as usize;
+
+    let per_unit = cost.secs_per_record + cost.secs_per_byte * PLAN_RECORD_BYTES;
+    let mut best = (1usize, f64::INFINITY);
+    for k in 1..=k_max {
+        let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
+        let mut p = parts;
+        let mut units_per_task = 1f64;
+        let mut total = 0f64;
+        loop {
+            let waves = p.div_ceil(workers) as f64;
+            let task = (CONTAINER_START + cost.fixed).as_seconds() + units_per_task * per_unit;
+            total += waves * task;
+            if p == 1 {
+                break;
+            }
+            let next = p.div_ceil(scale).max(1);
+            units_per_task = (p as f64 / next as f64).ceil();
+            p = next;
+            total += PLAN_SHUFFLE.as_seconds();
+        }
+        if total < best.1 {
+            best = (k, total);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mare::mount::MountPoint;
+    use crate::mare::pipeline::ReduceStep;
+
+    fn map(image: &str, command: &str, input: &str, output: &str) -> MapStep {
+        MapStep {
+            input_mount: MountPoint::text(input),
+            output_mount: MountPoint::text(output),
+            image: image.into(),
+            command: command.into(),
+            disk_mounts: false,
+        }
+    }
+
+    fn wrap(ops: Vec<PipelineOp>) -> Pipeline {
+        let mut all = vec![PipelineOp::Ingest { label: "test".into(), partitions: 8 }];
+        all.extend(ops);
+        all.push(PipelineOp::Collect);
+        Pipeline::new(all)
+    }
+
+    const ENV: OptEnv = OptEnv { workers: 4, source_partitions: 8 };
+
+    #[test]
+    fn chained_maps_on_same_image_fuse() {
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -o G /dna > /a", "/dna", "/a")),
+            PipelineOp::Map(map("ubuntu", "cat /a > /b", "/a", "/b")),
+            PipelineOp::Map(map("ubuntu", "wc -l /b > /count", "/b", "/count")),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(opt.num_maps(), 1, "{}", opt.describe());
+        assert_eq!(report.fused_maps, 2);
+        let fused = opt
+            .ops()
+            .iter()
+            .find_map(|o| match o {
+                PipelineOp::Map(m) => Some(m.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(fused.input_mount, MountPoint::text("/dna"));
+        assert_eq!(fused.output_mount, MountPoint::text("/count"));
+        assert_eq!(fused.command, "grep -o G /dna > /a\ncat /a > /b\nwc -l /b > /count");
+    }
+
+    #[test]
+    fn different_image_or_broken_chain_does_not_fuse() {
+        // different image
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "cat /a > /b", "/a", "/b")),
+            PipelineOp::Map(map("other", "cat /b > /c", "/b", "/c")),
+        ]);
+        assert_eq!(optimize(&p, &ENV).0.num_maps(), 2);
+
+        // mounts don't chain
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "cat /a > /b", "/a", "/b")),
+            PipelineOp::Map(map("ubuntu", "cat /x > /c", "/x", "/c")),
+        ]);
+        assert_eq!(optimize(&p, &ENV).0.num_maps(), 2);
+
+        // a repartition between them is a hard barrier
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "cat /a > /b", "/a", "/b")),
+            PipelineOp::Repartition { partitions: 2 },
+            PipelineOp::Map(map("ubuntu", "cat /b > /c", "/b", "/c")),
+        ]);
+        assert_eq!(optimize(&p, &ENV).0.num_maps(), 2);
+    }
+
+    #[test]
+    fn stream_mounts_do_not_fuse() {
+        let a = MapStep {
+            input_mount: MountPoint::stream(),
+            output_mount: MountPoint::stream(),
+            image: "ubuntu".into(),
+            command: "grep -o G".into(),
+            disk_mounts: false,
+        };
+        let b = a.clone();
+        assert!(!can_fuse(&a, &b));
+    }
+
+    #[test]
+    fn auto_depth_resolves_and_pinned_depth_is_untouched() {
+        let reduce = |depth| {
+            PipelineOp::Reduce(ReduceStep {
+                input_mount: MountPoint::text("/in"),
+                output_mount: MountPoint::text("/out"),
+                image: "ubuntu".into(),
+                command: "awk '{s+=$1} END {print s}' /in > /out".into(),
+                depth,
+                disk_mounts: false,
+            })
+        };
+        let (opt, report) = optimize(&wrap(vec![reduce(None)]), &ENV);
+        let planned = match &opt.ops()[1] {
+            PipelineOp::Reduce(r) => r.depth,
+            other => panic!("expected reduce, got {other:?}"),
+        };
+        assert!(planned.is_some());
+        assert_eq!(report.planned_depths, vec![planned.unwrap()]);
+
+        let (opt, report) = optimize(&wrap(vec![reduce(Some(3))]), &ENV);
+        match &opt.ops()[1] {
+            PipelineOp::Reduce(r) => assert_eq!(r.depth, Some(3)),
+            other => panic!("expected reduce, got {other:?}"),
+        }
+        assert!(report.planned_depths.is_empty());
+    }
+
+    #[test]
+    fn planned_depth_is_bounded_and_scales_with_cost() {
+        let posix = CostModel {
+            fixed: Duration::seconds(0.01),
+            secs_per_byte: 1.5e-9,
+            secs_per_record: 0.0,
+            cpus: 1,
+        };
+        for parts in [1usize, 2, 8, 64, 256] {
+            for workers in [1usize, 4, 16] {
+                let k = plan_reduce_depth(&posix, parts, workers);
+                let bound = (parts as f64).log2().ceil().max(1.0) as usize;
+                assert!(k >= 1 && k <= bound, "parts={parts} workers={workers} k={k}");
+            }
+        }
+        // cheap reducer, few partitions: flat tree
+        assert_eq!(plan_reduce_depth(&posix, 8, 16), 1);
+        // per-record-expensive reducer over many partitions: deeper tree
+        let heavy = CostModel {
+            fixed: Duration::seconds(0.1),
+            secs_per_byte: 0.0,
+            secs_per_record: 2.0,
+            cpus: 1,
+        };
+        assert!(plan_reduce_depth(&heavy, 256, 16) > 1);
+    }
+
+    #[test]
+    fn report_summary_reads_well() {
+        let mut r = OptReport::default();
+        assert_eq!(r.summary(), "no rewrites");
+        r.fused_maps = 2;
+        r.planned_depths.push(2);
+        let s = r.summary();
+        assert!(s.contains("2 maps fused"), "{s}");
+        assert!(s.contains("auto-planned to 2"), "{s}");
+    }
+}

@@ -1,0 +1,406 @@
+//! The logical pipeline IR.
+//!
+//! User-facing primitives no longer extend [`Dataset`] lineage eagerly:
+//! the fluent builder ([`super::builder`]) records an immutable
+//! [`Pipeline`] of typed [`PipelineOp`] nodes, the optimizer
+//! ([`super::opt`]) rewrites it while it can still *see the whole job*
+//! (map fusion, reduce-depth planning), and [`Lowering`] translates the
+//! optimized plan into the physical [`Dataset`] lineage the cluster's
+//! stage compiler consumes. This is the logical/physical-plan seam that
+//! Spark-class engines hang their optimizers off.
+
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::container::Engine;
+use crate::dataset::{Dataset, Plan, Record};
+
+use super::mount::MountPoint;
+use super::op::ContainerOp;
+
+/// Key-extraction closure for `repartitionBy`.
+pub type KeyFn = Arc<dyn Fn(&Record) -> String + Send + Sync>;
+
+/// A containerized map step (Figure 1).
+#[derive(Debug, Clone)]
+pub struct MapStep {
+    pub input_mount: MountPoint,
+    pub output_mount: MountPoint,
+    pub image: String,
+    pub command: String,
+    /// Disk-backed mount points (the paper's `TMPDIR` override).
+    pub disk_mounts: bool,
+}
+
+/// A containerized tree-reduce step (Figure 2). `depth: None` means the
+/// optimizer plans K from the cost model and cluster size.
+#[derive(Debug, Clone)]
+pub struct ReduceStep {
+    pub input_mount: MountPoint,
+    pub output_mount: MountPoint,
+    pub image: String,
+    pub command: String,
+    pub depth: Option<usize>,
+    pub disk_mounts: bool,
+}
+
+/// One node of the logical plan.
+#[derive(Clone)]
+pub enum PipelineOp {
+    /// Source marker: where the records come from.
+    Ingest { label: String, partitions: usize },
+    Map(MapStep),
+    Reduce(ReduceStep),
+    /// keyBy + hash partitioner regrouping (§1.2.2).
+    RepartitionBy { key_fn: KeyFn, partitions: usize },
+    /// Balanced rebalance into `partitions` (no keys).
+    Repartition { partitions: usize },
+    /// Terminal marker: results are collected to the driver.
+    Collect,
+}
+
+impl std::fmt::Debug for PipelineOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+fn first_word(command: &str) -> &str {
+    command.split_whitespace().next().unwrap_or("container")
+}
+
+impl PipelineOp {
+    /// Human-readable node label for [`Pipeline::describe`].
+    pub fn label(&self) -> String {
+        match self {
+            PipelineOp::Ingest { label, partitions } => {
+                format!("ingest[{label}] x{partitions}")
+            }
+            PipelineOp::Map(m) => format!(
+                "map[{}@{} {} -> {}{}]",
+                first_word(&m.command),
+                m.image,
+                m.input_mount.path(),
+                m.output_mount.path(),
+                if m.disk_mounts { ", disk" } else { "" },
+            ),
+            PipelineOp::Reduce(r) => format!(
+                "reduce[{}@{} {} -> {}, depth={}{}]",
+                first_word(&r.command),
+                r.image,
+                r.input_mount.path(),
+                r.output_mount.path(),
+                match r.depth {
+                    Some(k) => k.to_string(),
+                    None => "auto".into(),
+                },
+                if r.disk_mounts { ", disk" } else { "" },
+            ),
+            PipelineOp::RepartitionBy { partitions, .. } => {
+                format!("repartitionBy[keyBy -> {partitions}]")
+            }
+            PipelineOp::Repartition { partitions } => {
+                format!("repartition[{partitions}]")
+            }
+            PipelineOp::Collect => "collect".into(),
+        }
+    }
+}
+
+/// An immutable logical plan: a list of [`PipelineOp`] nodes bracketed
+/// by `Ingest` and `Collect`.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    ops: Vec<PipelineOp>,
+}
+
+impl Pipeline {
+    pub fn new(ops: Vec<PipelineOp>) -> Self {
+        Pipeline { ops }
+    }
+
+    pub fn ops(&self) -> &[PipelineOp] {
+        &self.ops
+    }
+
+    /// Number of containerized map nodes (fusion shrinks this).
+    pub fn num_maps(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, PipelineOp::Map(_))).count()
+    }
+
+    pub fn num_reduces(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, PipelineOp::Reduce(_))).count()
+    }
+
+    /// One node per line, indented — the `logical plan:` rendering.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for op in &self.ops {
+            out.push_str("  ");
+            out.push_str(&op.label());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Full report: logical plan → optimized plan → physical plan
+    /// (rendered like `cluster::compile(...).describe()`), for this
+    /// pipeline run against `cluster` over `source`.
+    pub fn explain(&self, cluster: &Arc<Cluster>, source: &Dataset) -> String {
+        let env = super::opt::OptEnv {
+            workers: cluster.config.workers,
+            source_partitions: source.num_partitions(),
+        };
+        let (optimized, report) = super::opt::optimize(self, &env);
+        let lowering = Lowering::for_cluster(cluster);
+        let lowered = lowering.lower(&optimized, source);
+        render_explain(self, &report, &optimized, &lowered)
+    }
+}
+
+/// The one three-plan rendering, shared by [`Pipeline::explain`] and
+/// `Job::explain` so the two cannot drift apart.
+pub(crate) fn render_explain(
+    logical: &Pipeline,
+    report: &super::opt::OptReport,
+    optimized: &Pipeline,
+    lowered: &Dataset,
+) -> String {
+    let pp = crate::cluster::compile(lowered.plan());
+    format!(
+        "logical plan:\n{}optimized plan ({}):\n{}physical plan:\n{}",
+        logical.describe(),
+        report.summary(),
+        optimized.describe(),
+        pp.describe(),
+    )
+}
+
+/// Label of the lineage's root source (for the `Ingest` node).
+pub fn source_label(plan: &Plan) -> String {
+    match plan {
+        Plan::Source { label, .. } => label.clone(),
+        Plan::MapPartitions { parent, .. } | Plan::Repartition { parent, .. } => {
+            source_label(parent)
+        }
+    }
+}
+
+/// Lowering context: logical plan -> physical [`Dataset`] lineage.
+///
+/// All [`ContainerOp`]s of one lowering share one [`Engine`] (and hence
+/// one launch counter), which is how jobs and tests observe how many
+/// simulated containers a plan actually started.
+pub struct Lowering {
+    engine: Arc<Engine>,
+    workers: usize,
+}
+
+impl Lowering {
+    pub fn for_cluster(cluster: &Cluster) -> Self {
+        Lowering { engine: Arc::new(cluster.engine()), workers: cluster.config.workers }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn container_op(
+        &self,
+        input: MountPoint,
+        output: MountPoint,
+        image: &str,
+        command: &str,
+        disk: bool,
+    ) -> Arc<ContainerOp> {
+        let mut op = ContainerOp::new(self.engine.clone(), input, output, image, command);
+        op.disk_mounts = disk;
+        Arc::new(op)
+    }
+
+    /// Lower a whole pipeline over `source`.
+    pub fn lower(&self, pipeline: &Pipeline, source: &Dataset) -> Dataset {
+        let mut ds = source.clone();
+        for op in pipeline.ops() {
+            ds = self.lower_op(ds, op);
+        }
+        ds
+    }
+
+    /// Lower one logical node onto the lineage so far.
+    pub fn lower_op(&self, ds: Dataset, op: &PipelineOp) -> Dataset {
+        match op {
+            PipelineOp::Ingest { .. } | PipelineOp::Collect => ds,
+            PipelineOp::Map(m) => ds.map_partitions(self.container_op(
+                m.input_mount.clone(),
+                m.output_mount.clone(),
+                &m.image,
+                &m.command,
+                m.disk_mounts,
+            )),
+            PipelineOp::RepartitionBy { key_fn, partitions } => {
+                ds.repartition_by_key(key_fn.clone(), *partitions)
+            }
+            PipelineOp::Repartition { partitions } => ds.repartition(*partitions),
+            PipelineOp::Reduce(r) => self.lower_reduce(ds, r),
+        }
+    }
+
+    /// Tree-aggregate all partitions into one (Figure 2).
+    ///
+    /// K levels: aggregate within partitions (mapPartitions), shrink the
+    /// partition count (repartition ⇒ shuffle), repeat until a single
+    /// aggregated partition remains — at most K shuffles.
+    ///
+    /// Unlike the seed implementation, the loop terminates exactly when
+    /// the last aggregation has run: a reduce over an already-single
+    /// partition launches ONE reducer container, not two, and a tree
+    /// that converges early skips the redundant final aggregation stage.
+    fn lower_reduce(&self, ds: Dataset, r: &ReduceStep) -> Dataset {
+        let k = r
+            .depth
+            .unwrap_or_else(|| {
+                super::opt::plan_reduce_depth(
+                    &super::cost::infer(&r.command),
+                    ds.num_partitions(),
+                    self.workers,
+                )
+            })
+            .max(1);
+        let mut parts = ds.num_partitions().max(1);
+        // per-level shrink factor: N^(1/K), so K levels reach 1
+        let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
+
+        let mut ds = ds;
+        loop {
+            ds = ds.map_partitions(self.container_op(
+                r.input_mount.clone(),
+                r.output_mount.clone(),
+                &r.image,
+                &r.command,
+                r.disk_mounts,
+            ));
+            if parts == 1 {
+                break;
+            }
+            parts = parts.div_ceil(scale).max(1);
+            ds = ds.repartition(parts);
+        }
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::container::Registry;
+    use crate::tools::images;
+
+    fn cluster(workers: usize) -> Arc<Cluster> {
+        let mut reg = Registry::new();
+        reg.push(images::ubuntu());
+        Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(workers, 4)))
+    }
+
+    fn sum_reduce(depth: Option<usize>) -> ReduceStep {
+        ReduceStep {
+            input_mount: MountPoint::text("/in"),
+            output_mount: MountPoint::text("/out"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /in > /out".into(),
+            depth,
+            disk_mounts: false,
+        }
+    }
+
+    #[test]
+    fn reduce_lowering_reaches_one_partition_within_k_shuffles() {
+        for (parts, k) in [(1usize, 1usize), (1, 3), (2, 2), (16, 1), (16, 2), (33, 2), (5, 4)] {
+            let ds = Dataset::parallelize_text(&"1\n".repeat(64), "\n", parts);
+            let lowering = Lowering::for_cluster(&cluster(4));
+            let lowered = lowering.lower_op(ds, &PipelineOp::Reduce(sum_reduce(Some(k))));
+            assert_eq!(lowered.num_partitions(), 1, "parts={parts} k={k}");
+            assert!(
+                lowered.plan().num_shuffles() <= k,
+                "parts={parts} k={k}: {} shuffles",
+                lowered.plan().num_shuffles()
+            );
+        }
+    }
+
+    #[test]
+    fn single_partition_reduce_launches_one_container() {
+        // the seed double-ran the reducer when the tree had already
+        // converged; the corrected lowering launches exactly one
+        let c = cluster(2);
+        let ds = Dataset::parallelize_text("1\n1\n1", "\n", 1);
+        let lowering = Lowering::for_cluster(&c);
+        let lowered = lowering.lower_op(ds, &PipelineOp::Reduce(sum_reduce(Some(2))));
+        let out = c.run(&lowered).unwrap();
+        assert_eq!(out.collect_text("\n").trim(), "3");
+        assert_eq!(lowering.engine().launch_count(), 1);
+    }
+
+    #[test]
+    fn early_converging_tree_skips_redundant_final_stage() {
+        // 2 partitions, K=2: level 1 merges to a single partition and
+        // aggregates it — no second aggregation of the same partition
+        let c = cluster(2);
+        let ds = Dataset::parallelize_text("1\n1\n1\n1", "\n", 2);
+        let lowering = Lowering::for_cluster(&c);
+        let lowered = lowering.lower_op(ds, &PipelineOp::Reduce(sum_reduce(Some(2))));
+        let out = c.run(&lowered).unwrap();
+        assert_eq!(out.collect_text("\n").trim(), "4");
+        // level 0: 2 containers; level 1 (merged): 1 container
+        assert_eq!(lowering.engine().launch_count(), 3);
+    }
+
+    #[test]
+    fn pipeline_explain_renders_all_three_plans() {
+        let c = cluster(2);
+        let ds = Dataset::parallelize_text("1\n1\n1\n1", "\n", 2);
+        let p = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "parallelize".into(), partitions: 2 },
+            PipelineOp::Reduce(sum_reduce(None)),
+            PipelineOp::Collect,
+        ]);
+        let s = p.explain(&c, &ds);
+        assert!(s.contains("logical plan:"), "{s}");
+        assert!(s.contains("optimized plan"), "{s}");
+        assert!(s.contains("physical plan:"), "{s}");
+        // the logical node shows auto; the optimizer pins it
+        assert!(s.contains("depth=auto"), "{s}");
+        assert!(s.contains("auto-planned to"), "{s}");
+    }
+
+    #[test]
+    fn describe_renders_every_node_kind() {
+        let p = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "parallelize".into(), partitions: 8 },
+            PipelineOp::Map(MapStep {
+                input_mount: MountPoint::text("/dna"),
+                output_mount: MountPoint::text("/count"),
+                image: "ubuntu".into(),
+                command: "grep -o '[GC]' /dna > /count".into(),
+                disk_mounts: false,
+            }),
+            PipelineOp::RepartitionBy {
+                key_fn: Arc::new(|_: &Record| "k".into()),
+                partitions: 3,
+            },
+            PipelineOp::Repartition { partitions: 2 },
+            PipelineOp::Reduce(sum_reduce(None)),
+            PipelineOp::Collect,
+        ]);
+        let s = p.describe();
+        assert!(s.contains("ingest[parallelize] x8"), "{s}");
+        assert!(s.contains("map[grep@ubuntu /dna -> /count]"), "{s}");
+        assert!(s.contains("repartitionBy[keyBy -> 3]"), "{s}");
+        assert!(s.contains("repartition[2]"), "{s}");
+        assert!(s.contains("depth=auto"), "{s}");
+        assert!(s.trim_end().ends_with("collect"), "{s}");
+        assert_eq!(p.num_maps(), 1);
+        assert_eq!(p.num_reduces(), 1);
+    }
+}

@@ -3,10 +3,12 @@
 //! than submitting jobs to batch systems", §1.1; the evaluation drove
 //! everything from Apache Zeppelin notebooks).
 //!
-//! `mare shell` wraps a [`Session`]: lineage is built incrementally with
-//! `map` / `reduce` / `repartition`, inspected with `plan`, executed
-//! (repeatedly, lazily) with `run` — the Zeppelin-cell workflow without
-//! leaving the terminal.
+//! `mare shell` wraps a [`Session`]: a logical pipeline is built
+//! incrementally with `map` / `reduce` / `repartition` through the
+//! fluent [`PipelineBuilder`], inspected with `plan` (logical →
+//! optimized → physical, via the optimizer), and executed (repeatedly,
+//! lazily) with `run` — the Zeppelin-cell workflow without leaving the
+//! terminal.
 //!
 //! ```text
 //! mare> gen gc 512
@@ -21,7 +23,7 @@ use std::sync::Arc;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::{Dataset, Record};
 use crate::error::{MareError, Result};
-use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::mare::{Job, MaRe, MountPoint, PipelineBuilder};
 
 const HELP: &str = "\
 commands:
@@ -31,9 +33,9 @@ commands:
   map <image> <in> <out> :: <command>
                             add a map step (mounts: /path, /path:SEP, 'stdio')
   reduce <image> <in> <out> [depth] :: <command>
-                            add a tree-reduce step
+                            add a tree-reduce step (depth omitted = auto-planned)
   repartition <n>           rebalance into n partitions
-  plan                      show lineage + compiled stages
+  plan                      show logical -> optimized -> physical plans
   run                       execute; print report + first records
   collect                   execute; print all text records
   reset                     drop the pipeline, keep the dataset
@@ -44,14 +46,15 @@ commands:
 /// One interactive session.
 pub struct Session {
     cluster: Arc<Cluster>,
-    current: Option<MaRe>,
+    dataset: Option<Dataset>,
+    builder: Option<PipelineBuilder>,
     partitions: usize,
 }
 
 impl Session {
     pub fn new(cluster: Arc<Cluster>) -> Self {
         let partitions = cluster.config.workers * 2;
-        Session { cluster, current: None, partitions }
+        Session { cluster, dataset: None, builder: None, partitions }
     }
 
     pub fn with_config(config: ClusterConfig, runtime_dir: Option<&str>) -> Result<Self> {
@@ -59,10 +62,23 @@ impl Session {
         Ok(Self::new(cluster))
     }
 
-    fn mare(&self) -> Result<&MaRe> {
-        self.current
-            .as_ref()
+    fn builder(&mut self) -> Result<PipelineBuilder> {
+        self.builder
+            .take()
             .ok_or_else(|| MareError::Config("no dataset loaded (try `gen gc 512`)".into()))
+    }
+
+    /// Validate + optimize + lower the pipeline recorded so far.
+    fn job(&self) -> Result<Job> {
+        self.builder
+            .clone()
+            .ok_or_else(|| MareError::Config("no dataset loaded (try `gen gc 512`)".into()))?
+            .build()
+    }
+
+    fn set_dataset(&mut self, ds: Dataset) {
+        self.builder = Some(MaRe::source(self.cluster.clone(), ds.clone()));
+        self.dataset = Some(ds);
     }
 
     /// Evaluate one line; returns the text to display.
@@ -86,8 +102,16 @@ impl Session {
             "run" => self.cmd_run(false),
             "collect" => self.cmd_run(true),
             "reset" => {
-                self.current = None;
-                Ok("pipeline dropped".into())
+                match self.dataset.clone() {
+                    Some(ds) => {
+                        self.set_dataset(ds);
+                        Ok("pipeline dropped (dataset kept)".into())
+                    }
+                    None => {
+                        self.builder = None;
+                        Ok("pipeline dropped".into())
+                    }
+                }
             }
             "status" => Ok(self.status()),
             "quit" | "exit" => Err(MareError::Config("__quit__".into())),
@@ -97,15 +121,30 @@ impl Session {
         }
     }
 
+    fn pipeline_summary(&self) -> String {
+        match &self.builder {
+            Some(b) => {
+                let ops = b.logical();
+                if ops.ops().len() <= 1 {
+                    "(none)".into()
+                } else {
+                    ops.ops()
+                        .iter()
+                        .map(|o| o.label())
+                        .collect::<Vec<_>>()
+                        .join(" -> ")
+                }
+            }
+            None => "(none)".into(),
+        }
+    }
+
     pub fn status(&self) -> String {
         format!(
             "cluster: {} workers x {} vCPUs | pipeline: {}",
             self.cluster.config.workers,
             self.cluster.config.vcpus_per_worker,
-            match &self.current {
-                Some(m) => m.dataset().describe(),
-                None => "(none)".into(),
-            }
+            self.pipeline_summary(),
         )
     }
 
@@ -139,7 +178,7 @@ impl Session {
             }
         };
         let parts = ds.num_partitions();
-        self.current = Some(MaRe::new(self.cluster.clone(), ds));
+        self.set_dataset(ds);
         Ok(format!("loaded {what} in {parts} partitions"))
     }
 
@@ -149,7 +188,7 @@ impl Session {
         }
         let ds = Dataset::parallelize_text(rest, "\n", self.partitions.min(4));
         let parts = ds.num_partitions();
-        self.current = Some(MaRe::new(self.cluster.clone(), ds));
+        self.set_dataset(ds);
         Ok(format!("loaded inline text in {parts} partitions"))
     }
 
@@ -179,28 +218,26 @@ impl Session {
                 "map <image> <in> <out> :: <command>".into(),
             ));
         };
-        let spec = MapSpec {
-            input_mount: Self::parse_mount(in_mp),
-            output_mount: Self::parse_mount(out_mp),
-            image: image.to_string(),
-            command: cmd.to_string(),
-        };
-        let m = self.mare()?.clone().map(spec);
-        let desc = m.dataset().describe();
-        self.current = Some(m);
-        Ok(format!("+map   | {desc}"))
+        let b = self
+            .builder()?
+            .map(*image, cmd)
+            .input_mount(Self::parse_mount(in_mp))
+            .output_mount(Self::parse_mount(out_mp));
+        self.builder = Some(b);
+        Ok(format!("+map    | {}", self.pipeline_summary()))
     }
 
     fn cmd_reduce(&mut self, rest: &str) -> Result<String> {
         let (args, cmd) = Self::split_step(rest)?;
         let (image, in_mp, out_mp, depth) = match args.as_slice() {
-            [i, a, b] => (i, a, b, crate::mare::DEFAULT_REDUCE_DEPTH),
+            [i, a, b] => (i, a, b, None),
             [i, a, b, d] => (
                 i,
                 a,
                 b,
-                d.parse()
-                    .map_err(|_| MareError::Config(format!("bad depth `{d}`")))?,
+                Some(d.parse::<usize>().map_err(|_| {
+                    MareError::Config(format!("bad depth `{d}`"))
+                })?),
             ),
             _ => {
                 return Err(MareError::Config(
@@ -208,17 +245,17 @@ impl Session {
                 ))
             }
         };
-        let spec = ReduceSpec {
-            input_mount: Self::parse_mount(in_mp),
-            output_mount: Self::parse_mount(out_mp),
-            image: image.to_string(),
-            command: cmd.to_string(),
-            depth,
-        };
-        let m = self.mare()?.clone().reduce(spec);
-        let desc = m.dataset().describe();
-        self.current = Some(m);
-        Ok(format!("+reduce(K={depth}) | {desc}"))
+        let mut b = self
+            .builder()?
+            .reduce(*image, cmd)
+            .input_mount(Self::parse_mount(in_mp))
+            .output_mount(Self::parse_mount(out_mp));
+        if let Some(k) = depth {
+            b = b.depth(k);
+        }
+        self.builder = Some(b);
+        let k = depth.map(|k| k.to_string()).unwrap_or_else(|| "auto".into());
+        Ok(format!("+reduce(K={k}) | {}", self.pipeline_summary()))
     }
 
     fn cmd_repartition(&mut self, rest: &str) -> Result<String> {
@@ -226,20 +263,17 @@ impl Session {
             .trim()
             .parse()
             .map_err(|_| MareError::Config("repartition wants a count".into()))?;
-        let m = self.mare()?;
-        let ds = m.dataset().repartition(n);
-        self.current = Some(MaRe::new(self.cluster.clone(), ds));
+        let b = self.builder()?.repartition(n);
+        self.builder = Some(b);
         Ok(format!("repartitioned into {n}"))
     }
 
     fn cmd_plan(&self) -> Result<String> {
-        let m = self.mare()?;
-        let pp = crate::cluster::compile(m.dataset().plan());
-        Ok(format!("lineage: {}\n{}", m.dataset().describe(), pp.describe()))
+        Ok(self.job()?.explain())
     }
 
     fn cmd_run(&self, all: bool) -> Result<String> {
-        let out = self.mare()?.run()?;
+        let out = self.job()?.run()?;
         let mut s = out.report.summary();
         let records: Vec<Record> = out.collect_records();
         let shown = if all { records.len() } else { records.len().min(5) };
@@ -293,10 +327,11 @@ mod tests {
             .unwrap()
             .contains("+map"));
         assert!(s
-            .eval("reduce ubuntu /counts /sum :: awk '{s+=$1} END {print s}' /counts > /sum")
+            .eval("reduce ubuntu /counts /sum 2 :: awk '{s+=$1} END {print s}' /counts > /sum")
             .unwrap()
             .contains("+reduce(K=2)"));
         let plan = s.eval("plan").unwrap();
+        assert!(plan.contains("logical plan:"), "{plan}");
         assert!(plan.contains("stage 0"), "{plan}");
         let run = s.eval("run").unwrap();
         assert!(run.contains("records: 1"), "{run}");
@@ -305,6 +340,19 @@ mod tests {
         let again = s.eval("run").unwrap();
         let result_of = |s: &str| s.split("records:").nth(1).map(str::to_string);
         assert_eq!(result_of(&again), result_of(&run));
+    }
+
+    #[test]
+    fn reduce_without_depth_is_auto_planned() {
+        let mut s = session();
+        s.eval("gen gc 32").unwrap();
+        let msg = s
+            .eval("reduce ubuntu /counts /sum :: awk '{s+=$1} END {print s}' /counts > /sum")
+            .unwrap();
+        assert!(msg.contains("+reduce(K=auto)"), "{msg}");
+        let plan = s.eval("plan").unwrap();
+        assert!(plan.contains("depth=auto"), "{plan}");
+        assert!(plan.contains("auto-planned to"), "{plan}");
     }
 
     #[test]
@@ -323,6 +371,16 @@ mod tests {
     }
 
     #[test]
+    fn builder_validation_errors_surface_at_plan_time() {
+        let mut s = session();
+        s.eval("gen gc 16").unwrap();
+        s.eval("reduce ubuntu /in /out 0 :: awk '{s+=$1} END {print s}' /in > /out")
+            .unwrap();
+        let err = s.eval("plan").unwrap_err().to_string();
+        assert!(err.contains("depth(0)"), "{err}");
+    }
+
+    #[test]
     fn errors_are_friendly() {
         let mut s = session();
         assert!(s.eval("run").unwrap_err().to_string().contains("no dataset"));
@@ -333,13 +391,18 @@ mod tests {
     }
 
     #[test]
-    fn reset_and_status() {
+    fn reset_keeps_dataset_and_drops_pipeline() {
         let mut s = session();
         s.eval("gen gc 16").unwrap();
         s.eval("map ubuntu /dna /out :: cat /dna > /out").unwrap();
         assert!(s.eval("status").unwrap().contains("map"));
         s.eval("reset").unwrap();
         assert!(s.eval("status").unwrap().contains("(none)"));
+        // the dataset survives: a new step can be added right away
+        assert!(s
+            .eval("map ubuntu /dna /out :: cat /dna > /out")
+            .unwrap()
+            .contains("+map"));
     }
 
     #[test]

@@ -1,21 +1,24 @@
-//! PJRT runtime: load + execute the AOT artifacts from the request path.
+//! Artifact runtime: execute the AOT-modelled tool cores on the request
+//! path.
 //!
 //! Layering (see DESIGN.md §2):
 //! * [`manifest`] — the ABI contract written by `python/compile/aot.py`.
-//! * [`tensor`] — host tensors crossing the PJRT boundary.
-//! * [`service`] — the dedicated thread owning the (!Send) PJRT client
-//!   and compiled executables; everything else holds a [`RuntimeHandle`].
+//! * [`tensor`] — host tensors crossing the execution boundary.
+//! * [`native`] — pure-rust interpreter of the four artifact graphs
+//!   (`model.py` mirrored exactly). This is the execution backend; a
+//!   PJRT client for environments shipping the native XLA libraries is
+//!   future work, which is why the manifest cross-check in [`service`]
+//!   keeps the interpreter and the AOT artifacts from drifting.
+//! * [`service`] — ABI validation + dispatch; everything else holds a
+//!   [`RuntimeHandle`].
 //! * [`api`] — typed, batch-padding calls used by the containerized
 //!   tools (fred / gatk / gc), plus pure-rust oracles for tests.
 //! * [`abi`] — static artifact shapes, mirrored from `model.py`.
-//!
-//! HLO **text** is the interchange format (not serialized protos):
-//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids; the
-//! text parser reassigns ids. See /opt/xla-example/README.md.
 
 pub mod abi;
 pub mod api;
 pub mod manifest;
+pub mod native;
 pub mod service;
 pub mod tensor;
 

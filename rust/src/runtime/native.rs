@@ -1,0 +1,321 @@
+//! Pure-rust interpreter of the AOT artifact entries.
+//!
+//! The build environment has no native XLA libraries, so the PJRT
+//! execution path is substituted by a bit-faithful rust implementation
+//! of each lowered graph in `python/compile/model.py` (the same math
+//! the `api::oracle` module mirrors for tests). The ABI — entry names,
+//! static shapes, dtypes, output ordering — is identical to the HLO
+//! artifacts, so the typed API in [`super::api`] and every caller above
+//! it are agnostic to which backend executes an entry.
+
+use crate::error::{MareError, Result};
+
+use super::abi::{DOCK_F, DOCK_M, DOCK_P, GC_N, GENOTYPES, GL_S, N_GENOTYPES};
+use super::api::oracle::{SHAPE_BETA, SHAPE_MU, SHAPE_SIGMA};
+use super::tensor::Tensor;
+
+/// `model.REFINE_STEPS` / `model.REFINE_LR`.
+const REFINE_STEPS: usize = 3;
+const REFINE_LR: f32 = 0.05;
+/// Entropy regularizer weight / epsilon from `model._refine_loss`.
+const REFINE_REG: f32 = 1e-2;
+const REFINE_EPS: f32 = 1e-9;
+
+/// Entry names, in manifest order.
+pub fn entries() -> Vec<String> {
+    ["docking", "docking_refine", "gc_count", "genotype"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Input ABI of an entry: (shape, dtype) per argument.
+pub fn input_spec(entry: &str) -> Option<Vec<(Vec<usize>, &'static str)>> {
+    match entry {
+        "docking" | "docking_refine" => Some(vec![
+            (vec![DOCK_M, DOCK_F], "float32"),
+            (vec![DOCK_F, DOCK_P], "float32"),
+        ]),
+        "genotype" => Some(vec![(vec![GL_S, 4], "float32"), (vec![], "float32")]),
+        "gc_count" => Some(vec![(vec![GC_N], "int32")]),
+        _ => None,
+    }
+}
+
+/// Output ABI of an entry: (shape, dtype) per tensor, in order
+/// (manifest cross-check).
+pub fn output_spec(entry: &str) -> Option<Vec<(Vec<usize>, &'static str)>> {
+    match entry {
+        "docking" => Some(vec![
+            (vec![DOCK_M], "float32"),         // best_score
+            (vec![DOCK_M], "int32"),           // best_pose
+            (vec![DOCK_M, DOCK_P], "float32"), // scores
+        ]),
+        "docking_refine" => Some(vec![
+            (vec![DOCK_M], "float32"),         // refined
+            (vec![DOCK_M, DOCK_P], "float32"), // weights
+        ]),
+        "genotype" => Some(vec![
+            (vec![GL_S, N_GENOTYPES], "float32"), // loglik
+            (vec![GL_S], "int32"),                // best
+            (vec![GL_S], "float32"),              // qual
+        ]),
+        "gc_count" => Some(vec![(vec![1], "int32")]), // total
+        _ => None,
+    }
+}
+
+/// Execute one entry (inputs already ABI-validated by the caller).
+pub fn execute(entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    match entry {
+        "docking" => docking(inputs),
+        "docking_refine" => docking_refine(inputs),
+        "genotype" => genotype(inputs),
+        "gc_count" => gc_count(inputs),
+        other => Err(MareError::AbiMismatch {
+            entry: other.to_string(),
+            detail: "artifact not loaded".into(),
+        }),
+    }
+}
+
+/// `model.docking_pipeline`: RMS-normalized features x receptor, the
+/// Chemgauss-like shape term, per-molecule argmin.
+fn dock_scores(features: &[f32], receptor: &[f32]) -> Vec<f32> {
+    let mut scores = vec![0f32; DOCK_M * DOCK_P];
+    for m in 0..DOCK_M {
+        let row = &features[m * DOCK_F..(m + 1) * DOCK_F];
+        let rms = (row.iter().map(|x| x * x).sum::<f32>() / DOCK_F as f32 + 1e-6).sqrt();
+        for p in 0..DOCK_P {
+            let mut raw = 0f32;
+            for f in 0..DOCK_F {
+                raw += row[f] / rms * receptor[f * DOCK_P + p];
+            }
+            let gauss = SHAPE_BETA
+                * (-((raw - SHAPE_MU) * (raw - SHAPE_MU)) / (2.0 * SHAPE_SIGMA * SHAPE_SIGMA))
+                    .exp();
+            scores[m * DOCK_P + p] = -raw - gauss;
+        }
+    }
+    scores
+}
+
+fn docking(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let features = inputs[0].as_f32()?;
+    let receptor = inputs[1].as_f32()?;
+    let scores = dock_scores(features, receptor);
+
+    let mut best_score = vec![0f32; DOCK_M];
+    let mut best_pose = vec![0i32; DOCK_M];
+    for m in 0..DOCK_M {
+        let mut best = (f32::INFINITY, 0usize);
+        for p in 0..DOCK_P {
+            let s = scores[m * DOCK_P + p];
+            if s < best.0 {
+                best = (s, p);
+            }
+        }
+        best_score[m] = best.0;
+        best_pose[m] = best.1 as i32;
+    }
+    Ok(vec![
+        Tensor::f32(vec![DOCK_M], best_score)?,
+        Tensor::i32(vec![DOCK_M], best_pose)?,
+        Tensor::f32(vec![DOCK_M, DOCK_P], scores)?,
+    ])
+}
+
+fn softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// `model.docking_refine`: a few explicit gradient-descent steps on the
+/// per-molecule soft pose-assignment energy.
+fn docking_refine(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let features = inputs[0].as_f32()?;
+    let receptor = inputs[1].as_f32()?;
+    let scores = dock_scores(features, receptor);
+
+    let mut refined = vec![0f32; DOCK_M];
+    let mut weights_out = vec![0f32; DOCK_M * DOCK_P];
+    for m in 0..DOCK_M {
+        let s = &scores[m * DOCK_P..(m + 1) * DOCK_P];
+        let mut x = vec![0f32; DOCK_P];
+        for _ in 0..REFINE_STEPS {
+            let w = softmax(&x);
+            // dL/dw_p for L = sum(w*s) + reg * sum(w * ln(w + eps))
+            let g: Vec<f32> = w
+                .iter()
+                .zip(s)
+                .map(|(&wp, &sp)| {
+                    sp + REFINE_REG * ((wp + REFINE_EPS).ln() + wp / (wp + REFINE_EPS))
+                })
+                .collect();
+            let dot: f32 = w.iter().zip(&g).map(|(&wp, &gp)| wp * gp).sum();
+            for p in 0..DOCK_P {
+                x[p] -= REFINE_LR * w[p] * (g[p] - dot);
+            }
+        }
+        let w = softmax(&x);
+        refined[m] = w.iter().zip(s).map(|(&wp, &sp)| wp * sp).sum();
+        weights_out[m * DOCK_P..(m + 1) * DOCK_P].copy_from_slice(&w);
+    }
+    Ok(vec![
+        Tensor::f32(vec![DOCK_M], refined)?,
+        Tensor::f32(vec![DOCK_M, DOCK_P], weights_out)?,
+    ])
+}
+
+/// `model.genotype_pipeline`: per-site genotype log-likelihoods + argmax
+/// + phred-scaled distance to the runner-up.
+fn genotype(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let counts = inputs[0].as_f32()?;
+    let err = inputs[1].as_f32()?[0];
+
+    let mut loglik = vec![0f32; GL_S * N_GENOTYPES];
+    let mut best = vec![0i32; GL_S];
+    let mut qual = vec![0f32; GL_S];
+    for s in 0..GL_S {
+        let site: [f32; 4] = counts[s * 4..(s + 1) * 4].try_into().unwrap();
+        let mut ll = [0f32; N_GENOTYPES];
+        for (g, &(a, b)) in GENOTYPES.iter().enumerate() {
+            let mut acc = 0f32;
+            for c in 0..4usize {
+                let pa = if c == a as usize { 1.0 - err } else { err / 3.0 };
+                let pb = if c == b as usize { 1.0 - err } else { err / 3.0 };
+                acc += site[c] * (0.5 * (pa + pb)).ln();
+            }
+            ll[g] = acc;
+        }
+        // same tie-breaking as the test oracles: max_by keeps the LAST max
+        let best_g = ll
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(g, _)| g)
+            .unwrap_or(0);
+        let top = ll[best_g];
+        let second = ll
+            .iter()
+            .enumerate()
+            .filter(|(g, _)| *g != best_g)
+            .map(|(_, v)| *v)
+            .fold(f32::NEG_INFINITY, f32::max);
+        loglik[s * N_GENOTYPES..(s + 1) * N_GENOTYPES].copy_from_slice(&ll);
+        best[s] = best_g as i32;
+        qual[s] = (10.0 / std::f32::consts::LN_10) * (top - second);
+    }
+    Ok(vec![
+        Tensor::f32(vec![GL_S, N_GENOTYPES], loglik)?,
+        Tensor::i32(vec![GL_S], best)?,
+        Tensor::f32(vec![GL_S], qual)?,
+    ])
+}
+
+/// `model.gc_pipeline`: total G/C count over an ASCII base block.
+fn gc_count(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let codes = inputs[0].as_i32()?;
+    let total: i32 = codes.iter().filter(|&&c| c == b'G' as i32 || c == b'C' as i32).count()
+        as i32;
+    Ok(vec![Tensor::i32(vec![1], vec![total])?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::api::oracle;
+
+    fn receptor() -> Vec<f32> {
+        crate::runtime::ToolRuntime::make_receptor(42)
+    }
+
+    fn features(n_seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(n_seed);
+        (0..DOCK_M * DOCK_F).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn docking_matches_oracle_rows() {
+        let feats = features(11);
+        let rec = receptor();
+        let out = docking(&[
+            Tensor::f32(vec![DOCK_M, DOCK_F], feats.clone()).unwrap(),
+            Tensor::f32(vec![DOCK_F, DOCK_P], rec.clone()).unwrap(),
+        ])
+        .unwrap();
+        let scores = out[0].as_f32().unwrap();
+        let poses = out[1].as_i32().unwrap();
+        for m in 0..8 {
+            let (s, p) = oracle::dock_row(&feats[m * DOCK_F..(m + 1) * DOCK_F], &rec);
+            assert_eq!(poses[m] as u32, p, "molecule {m}");
+            assert!((scores[m] - s).abs() < 1e-4, "molecule {m}");
+        }
+    }
+
+    #[test]
+    fn refine_never_beats_hard_best() {
+        let feats = features(5);
+        let rec = receptor();
+        let inputs = [
+            Tensor::f32(vec![DOCK_M, DOCK_F], feats).unwrap(),
+            Tensor::f32(vec![DOCK_F, DOCK_P], rec).unwrap(),
+        ];
+        let hard = docking(&inputs).unwrap();
+        let soft = docking_refine(&inputs).unwrap();
+        let best = hard[0].as_f32().unwrap();
+        let refined = soft[0].as_f32().unwrap();
+        for m in 0..DOCK_M {
+            assert!(refined[m].is_finite());
+            assert!(refined[m] >= best[m] - 1e-3, "molecule {m}");
+        }
+        // refinement weights are a distribution
+        let w = soft[1].as_f32().unwrap();
+        for m in 0..4 {
+            let sum: f32 = w[m * DOCK_P..(m + 1) * DOCK_P].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn genotype_matches_oracle_rows() {
+        let mut counts = vec![0f32; GL_S * 4];
+        for s in 0..GL_S {
+            counts[s * 4 + s % 4] = 12.0;
+            counts[s * 4 + (s + 1) % 4] = (s % 5) as f32;
+        }
+        let out = genotype(&[
+            Tensor::f32(vec![GL_S, 4], counts.clone()).unwrap(),
+            Tensor::scalar_f32(0.01),
+        ])
+        .unwrap();
+        let ll = out[0].as_f32().unwrap();
+        let qual = out[2].as_f32().unwrap();
+        for s in 0..16 {
+            let site: [f32; 4] = counts[s * 4..(s + 1) * 4].try_into().unwrap();
+            let want = oracle::genotype_row(&site, 0.01);
+            for g in 0..N_GENOTYPES {
+                assert!((ll[s * N_GENOTYPES + g] - want[g]).abs() < 1e-4, "site {s} g {g}");
+            }
+            assert!(qual[s] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gc_counts_only_gc() {
+        let mut codes = vec![b'A' as i32; GC_N];
+        codes[0] = b'G' as i32;
+        codes[1] = b'C' as i32;
+        codes[2] = b'T' as i32;
+        let out = gc_count(&[Tensor::i32(vec![GC_N], codes).unwrap()]).unwrap();
+        assert_eq!(out[0].as_i32().unwrap(), &[2]);
+    }
+
+    #[test]
+    fn unknown_entry_is_abi_error() {
+        let err = execute("nope", &[]).unwrap_err().to_string();
+        assert!(err.contains("ABI"), "{err}");
+    }
+}

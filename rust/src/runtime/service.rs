@@ -1,34 +1,24 @@
-//! PJRT execution service.
+//! Artifact execution service.
 //!
-//! The `xla` crate's types wrap raw pointers and are `!Send`, so a single
-//! dedicated thread owns the `PjRtClient` and every compiled executable;
-//! the rest of the system talks to it through a cloneable
-//! [`RuntimeHandle`] over an mpsc channel. This mirrors the paper's
-//! architecture: the "containerized tool binary" is a local service the
-//! coordinator invokes — python is never on this path.
+//! Mirrors the paper's architecture: the "containerized tool binary" is
+//! a local service the coordinator invokes — python is never on this
+//! path. Entries are validated against the static ABI
+//! ([`super::native::input_spec`], mirroring `artifacts/manifest.json`)
+//! and executed by the in-tree interpreter ([`super::native`]); when an
+//! `artifacts/` directory with a manifest is present it is loaded and
+//! cross-checked so AOT-lowered HLO and the interpreter cannot drift
+//! silently.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{MareError, Result};
 
 use super::manifest::Manifest;
+use super::native;
 use super::tensor::Tensor;
-
-enum Req {
-    Call {
-        entry: String,
-        inputs: Vec<Tensor>,
-        resp: mpsc::SyncSender<Result<Vec<Tensor>>>,
-    },
-    Entries {
-        resp: mpsc::SyncSender<Vec<String>>,
-    },
-    Shutdown,
-}
 
 /// Cumulative execution statistics (lock-free reads).
 #[derive(Debug, Default)]
@@ -50,10 +40,9 @@ impl RuntimeStats {
     }
 }
 
-/// Cloneable handle to the PJRT service thread.
+/// Cloneable handle to the runtime service.
 #[derive(Clone)]
 pub struct RuntimeHandle {
-    tx: mpsc::Sender<Req>,
     stats: Arc<RuntimeStats>,
     artifact_dir: PathBuf,
 }
@@ -68,50 +57,68 @@ impl std::fmt::Debug for RuntimeHandle {
 }
 
 impl RuntimeHandle {
-    /// Spawn the service thread: load the manifest, parse + compile every
-    /// HLO-text artifact, then serve calls until the last handle drops.
+    /// Bring the service up. A missing manifest is fine (the
+    /// interpreter IS the artifact set); a PRESENT manifest must parse
+    /// and agree with the interpreter's ABI — entry names plus input
+    /// AND output shapes and dtypes — so AOT-lowered artifacts and the
+    /// interpreter cannot drift silently.
     pub fn spawn(artifact_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let stats = Arc::new(RuntimeStats::default());
-        let (tx, rx) = mpsc::channel::<Req>();
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(&dir)?;
+            for (name, entry) in &manifest.entries {
+                let inputs = native::input_spec(name).ok_or_else(|| MareError::AbiMismatch {
+                    entry: name.clone(),
+                    detail: "manifest entry unknown to the native interpreter".into(),
+                })?;
+                let declared_in: Vec<(&[usize], &str)> =
+                    entry.inputs.iter().map(|t| (t.shape.as_slice(), t.dtype.as_str())).collect();
+                check_abi(name, "input", &declared_in, &inputs)?;
 
-        let thread_dir = dir.clone();
-        let thread_stats = stats.clone();
-        std::thread::Builder::new()
-            .name("pjrt-runtime".into())
-            .spawn(move || {
-                service_main(thread_dir, manifest, rx, ready_tx, thread_stats)
-            })
-            .map_err(|e| MareError::Runtime(format!("spawn: {e}")))?;
-
-        ready_rx
-            .recv()
-            .map_err(|e| MareError::Runtime(format!("service died during init: {e}")))??;
-        Ok(RuntimeHandle { tx, stats, artifact_dir: dir })
+                let outputs = native::output_spec(name).unwrap_or_default();
+                let declared_out: Vec<(&[usize], &str)> = entry
+                    .outputs
+                    .iter()
+                    .map(|t| (t.shape.as_slice(), t.dtype.as_str()))
+                    .collect();
+                check_abi(name, "output", &declared_out, &outputs)?;
+            }
+            crate::log_debug!(
+                "artifact manifest at {} cross-checked ({} entries)",
+                dir.display(),
+                manifest.entries.len()
+            );
+        }
+        Ok(RuntimeHandle { stats: Arc::new(RuntimeStats::default()), artifact_dir: dir })
     }
 
     /// Execute one artifact entry with the given inputs.
     pub fn call(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Req::Call { entry: entry.to_string(), inputs, resp: resp_tx })
-            .map_err(|_| MareError::Runtime("runtime service is down".into()))?;
-        resp_rx
-            .recv()
-            .map_err(|_| MareError::Runtime("runtime service dropped request".into()))?
+        let spec = native::input_spec(entry).ok_or_else(|| MareError::AbiMismatch {
+            entry: entry.to_string(),
+            detail: "artifact not loaded".into(),
+        })?;
+
+        // ABI validation against the static shapes.
+        let t0 = Instant::now();
+        let given: Vec<(&[usize], &str)> =
+            inputs.iter().map(|t| (t.shape(), t.dtype_name())).collect();
+        check_abi(entry, "input", &given, &spec)?;
+        let t_in = t0.elapsed();
+
+        let t1 = Instant::now();
+        let outs = native::execute(entry, &inputs)?;
+        let t_exec = t1.elapsed();
+
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        self.stats.exec_nanos.fetch_add(t_exec.as_nanos() as u64, Ordering::Relaxed);
+        self.stats.transfer_nanos.fetch_add(t_in.as_nanos() as u64, Ordering::Relaxed);
+        Ok(outs)
     }
 
     /// Names of the loaded artifact entries.
     pub fn entries(&self) -> Result<Vec<String>> {
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Req::Entries { resp: resp_tx })
-            .map_err(|_| MareError::Runtime("runtime service is down".into()))?;
-        resp_rx
-            .recv()
-            .map_err(|_| MareError::Runtime("runtime service dropped request".into()))
+        Ok(native::entries())
     }
 
     pub fn stats(&self) -> &RuntimeStats {
@@ -122,134 +129,93 @@ impl RuntimeHandle {
         &self.artifact_dir
     }
 
-    /// Ask the service to exit once queued work completes.
-    pub fn shutdown(&self) {
-        let _ = self.tx.send(Req::Shutdown);
-    }
+    /// Ask the service to exit once queued work completes (no-op for the
+    /// in-process interpreter; kept for API parity with a PJRT thread).
+    pub fn shutdown(&self) {}
 }
 
-struct LoadedEntry {
-    exe: xla::PjRtLoadedExecutable,
-    inputs: Vec<super::manifest::TensorSpec>,
-    n_outputs: usize,
-}
-
-fn service_main(
-    dir: PathBuf,
-    manifest: Manifest,
-    rx: mpsc::Receiver<Req>,
-    ready: mpsc::SyncSender<Result<()>>,
-    stats: Arc<RuntimeStats>,
-) {
-    let loaded = match load_all(&dir, &manifest) {
-        Ok(l) => {
-            let _ = ready.send(Ok(()));
-            l
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
-    while let Ok(req) = rx.recv() {
-        match req {
-            Req::Shutdown => break,
-            Req::Entries { resp } => {
-                let _ = resp.send(loaded.keys().cloned().collect());
-            }
-            Req::Call { entry, inputs, resp } => {
-                let result = run_entry(&loaded, &entry, inputs, &stats);
-                let _ = resp.send(result);
-            }
-        }
-    }
-}
-
-fn load_all(dir: &Path, manifest: &Manifest) -> Result<HashMap<String, LoadedEntry>> {
-    let client = xla::PjRtClient::cpu()?;
-    log::info!(
-        "pjrt client up: platform={} devices={}",
-        client.platform_name(),
-        client.device_count()
-    );
-    let mut out = HashMap::new();
-    for (name, entry) in &manifest.entries {
-        let path = dir.join(&entry.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        log::info!("compiled artifact `{name}` in {} ms", t0.elapsed().as_millis());
-        out.insert(
-            name.clone(),
-            LoadedEntry {
-                exe,
-                inputs: entry.inputs.clone(),
-                n_outputs: entry.outputs.len(),
-            },
-        );
-    }
-    Ok(out)
-}
-
-fn run_entry(
-    loaded: &HashMap<String, LoadedEntry>,
+/// The one (shape, dtype) list comparison, shared by the manifest
+/// cross-check (inputs AND outputs) and per-call input validation.
+fn check_abi(
     entry: &str,
-    inputs: Vec<Tensor>,
-    stats: &RuntimeStats,
-) -> Result<Vec<Tensor>> {
-    let le = loaded.get(entry).ok_or_else(|| MareError::AbiMismatch {
-        entry: entry.to_string(),
-        detail: "artifact not loaded".into(),
-    })?;
-
-    // ABI validation against the manifest.
-    if inputs.len() != le.inputs.len() {
+    kind: &str,
+    declared: &[(&[usize], &str)],
+    expected: &[(Vec<usize>, &'static str)],
+) -> Result<()> {
+    if declared.len() != expected.len() {
         return Err(MareError::AbiMismatch {
             entry: entry.to_string(),
-            detail: format!("{} inputs given, artifact wants {}", inputs.len(), le.inputs.len()),
+            detail: format!(
+                "{} {kind}s given, artifact wants {}",
+                declared.len(),
+                expected.len()
+            ),
         });
     }
-    for (i, (got, want)) in inputs.iter().zip(&le.inputs).enumerate() {
-        if got.shape() != want.shape.as_slice() || got.dtype_name() != want.dtype {
+    for (i, ((dshape, ddtype), (shape, dtype))) in declared.iter().zip(expected).enumerate() {
+        if *dshape != shape.as_slice() || *ddtype != *dtype {
             return Err(MareError::AbiMismatch {
                 entry: entry.to_string(),
                 detail: format!(
-                    "input {i}: got {}{:?}, artifact wants {}{:?}",
-                    got.dtype_name(),
-                    got.shape(),
-                    want.dtype,
-                    want.shape
+                    "{kind} {i}: got {ddtype}{dshape:?}, artifact wants {dtype}{shape:?}"
                 ),
             });
         }
     }
+    Ok(())
+}
 
-    let t0 = Instant::now();
-    let literals: Vec<xla::Literal> =
-        inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-    let t_in = t0.elapsed();
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::abi::{DOCK_F, DOCK_M, DOCK_P};
 
-    let t1 = Instant::now();
-    let bufs = le.exe.execute::<xla::Literal>(&literals)?;
-    let result = bufs[0][0].to_literal_sync()?;
-    let t_exec = t1.elapsed();
-
-    // aot.py lowers with return_tuple=True: always a tuple literal.
-    let parts = result.to_tuple()?;
-    if parts.len() != le.n_outputs {
-        return Err(MareError::AbiMismatch {
-            entry: entry.to_string(),
-            detail: format!("{} outputs, manifest says {}", parts.len(), le.n_outputs),
-        });
+    #[test]
+    fn spawn_without_artifacts_dir_succeeds() {
+        let h = RuntimeHandle::spawn("/definitely/not/a/dir").unwrap();
+        let mut names = h.entries().unwrap();
+        names.sort();
+        assert_eq!(names, vec!["docking", "docking_refine", "gc_count", "genotype"]);
     }
-    let outs: Vec<Tensor> = parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
 
-    stats.calls.fetch_add(1, Ordering::Relaxed);
-    stats.exec_nanos.fetch_add(t_exec.as_nanos() as u64, Ordering::Relaxed);
-    stats
-        .transfer_nanos
-        .fetch_add(t_in.as_nanos() as u64, Ordering::Relaxed);
-    Ok(outs)
+    #[test]
+    fn call_validates_input_count_and_shape() {
+        let h = RuntimeHandle::spawn("artifacts").unwrap();
+        let err = h.call("docking", vec![]).unwrap_err().to_string();
+        assert!(err.contains("ABI"), "{err}");
+        let bad = Tensor::f32(vec![3], vec![0.0; 3]).unwrap();
+        let err = h.call("docking", vec![bad]).unwrap_err().to_string();
+        assert!(err.contains("ABI"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_or_drifted_manifest_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("mare-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        std::fs::write(dir.join("manifest.json"), b"{ not json").unwrap();
+        assert!(RuntimeHandle::spawn(&dir).is_err(), "corrupt manifest must not be ignored");
+
+        // same entry name + inputs, drifted output dtype
+        let drift = r#"{"schema": 2, "entries": {"gc_count": {
+            "file": "gc_count.hlo.txt", "sha256": "x",
+            "inputs": [{"shape": [4096], "dtype": "int32"}],
+            "outputs": [{"shape": [1], "dtype": "float32", "sum": 0.0, "first": 0.0}]}}}"#;
+        std::fs::write(dir.join("manifest.json"), drift).unwrap();
+        let err = RuntimeHandle::spawn(&dir).unwrap_err().to_string();
+        assert!(err.contains("output 0"), "{err}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn call_executes_and_accumulates_stats() {
+        let h = RuntimeHandle::spawn("artifacts").unwrap();
+        let feats = Tensor::f32(vec![DOCK_M, DOCK_F], vec![0.5; DOCK_M * DOCK_F]).unwrap();
+        let rec = Tensor::f32(vec![DOCK_F, DOCK_P], vec![0.1; DOCK_F * DOCK_P]).unwrap();
+        let outs = h.call("docking", vec![feats, rec]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].shape(), &[DOCK_M]);
+        assert!(h.stats().calls() == 1);
+    }
 }

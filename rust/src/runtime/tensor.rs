@@ -1,4 +1,4 @@
-//! Host-side tensor type crossing the PJRT boundary.
+//! Host-side tensor type crossing the artifact-execution boundary.
 //!
 //! Only the dtypes the AOT artifacts actually use (f32, i32) are
 //! supported; anything else is an ABI error by construction.
@@ -84,38 +84,6 @@ impl Tensor {
         }
     }
 
-    /// Convert to an XLA literal (service-thread side only).
-    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32 { data, shape } => {
-                if shape.is_empty() {
-                    return Ok(xla::Literal::scalar(data[0]));
-                }
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-            Tensor::I32 { data, shape } => {
-                if shape.is_empty() {
-                    return Ok(xla::Literal::scalar(data[0]));
-                }
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-        };
-        Ok(lit)
-    }
-
-    /// Convert back from an XLA literal (service-thread side only).
-    pub(crate) fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.element_type() {
-            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
-            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
-            other => Err(MareError::Runtime(format!(
-                "unsupported artifact output element type {other:?}"
-            ))),
-        }
-    }
 }
 
 #[cfg(test)]

@@ -2,11 +2,11 @@
 //! small margin. Each tool reads file args from the container [`Vfs`]
 //! and/or stdin, like the real thing.
 
-use std::io::{Read, Write};
 use std::sync::Arc;
 
 use crate::container::tool::{Tool, ToolCtx, ToolOutput};
 use crate::error::{MareError, Result};
+use crate::util::rx::Rx;
 
 /// All POSIX tools, ready for `ImageBuilder::tool`.
 pub fn all() -> Vec<Arc<dyn Tool>> {
@@ -73,8 +73,8 @@ impl Tool for Echo {
 }
 
 // --------------------------------------------------------------- grep
-/// `grep [-o|-c|-v] PATTERN [FILE...]` (regex via the regex crate; POSIX
-/// bracket expressions like `[GC]` work unchanged).
+/// `grep [-o|-c|-v] PATTERN [FILE...]` (regex via [`crate::util::rx`];
+/// POSIX bracket expressions like `[GC]` work unchanged).
 pub struct Grep;
 impl Tool for Grep {
     fn name(&self) -> &'static str {
@@ -89,7 +89,7 @@ impl Tool for Grep {
         let pattern = rest
             .first()
             .ok_or_else(|| MareError::Shell("grep: missing pattern".into()))?;
-        let re = regex::Regex::new(pattern)
+        let re = Rx::new(pattern)
             .map_err(|e| MareError::Shell(format!("grep: bad pattern: {e}")))?;
 
         let file_args: Vec<String> = rest[1..].to_vec();
@@ -108,8 +108,8 @@ impl Tool for Grep {
                 continue;
             }
             if only_matching && !invert {
-                for m in re.find_iter(line) {
-                    out.push_str(m.as_str());
+                for m in re.find_all(line) {
+                    out.push_str(m);
                     out.push('\n');
                 }
             } else {
@@ -157,6 +157,85 @@ impl Tool for Wc {
 /// * `{print $N}` — column projection
 /// * `END {print NR}` — record count
 pub struct Awk;
+
+/// The recognized awk program shapes (parsed by hand — no regex).
+enum AwkProgram {
+    /// `{VAR+=$COL} END {print VAR}`
+    Sum { col: usize },
+    /// `{print $COL}`
+    PrintCol { col: usize },
+    /// `END {print NR}`
+    CountRecords,
+}
+
+/// Strip one brace block `{ ... }` off the front; returns (body, rest).
+fn brace_block(s: &str) -> Option<(&str, &str)> {
+    let s = s.trim_start();
+    let inner = s.strip_prefix('{')?;
+    let end = inner.find('}')?;
+    Some((inner[..end].trim(), inner[end + 1..].trim_start()))
+}
+
+/// `$N` -> N (N >= 1).
+fn column_ref(s: &str) -> Option<usize> {
+    let n = s.trim().strip_prefix('$')?;
+    let col: usize = n.parse().ok()?;
+    (col >= 1).then_some(col)
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_alphanumeric() || c == '_')
+}
+
+fn parse_awk(program: &str) -> Result<AwkProgram> {
+    let program = program.trim();
+    let unsupported =
+        || MareError::Shell(format!("awk: unsupported program `{program}`"));
+
+    // `END {print NR}`
+    if let Some(rest) = program.strip_prefix("END") {
+        let (body, tail) = brace_block(rest).ok_or_else(unsupported)?;
+        let expr = body.strip_prefix("print").ok_or_else(unsupported)?.trim();
+        if expr == "NR" && tail.is_empty() {
+            return Ok(AwkProgram::CountRecords);
+        }
+        return Err(unsupported());
+    }
+
+    let (body, tail) = brace_block(program).ok_or_else(unsupported)?;
+
+    // `{VAR += $COL} END {print VAR}`
+    if let Some((var, rhs)) = body.split_once("+=") {
+        let var = var.trim();
+        if !is_ident(var) {
+            return Err(unsupported());
+        }
+        let col = column_ref(rhs).ok_or_else(unsupported)?;
+        let end = tail.strip_prefix("END").ok_or_else(unsupported)?;
+        let (end_body, end_tail) = brace_block(end).ok_or_else(unsupported)?;
+        let printed =
+            end_body.strip_prefix("print").ok_or_else(unsupported)?.trim();
+        if !end_tail.is_empty() {
+            return Err(unsupported());
+        }
+        if printed != var {
+            return Err(MareError::Shell(format!(
+                "awk: accumulator mismatch in `{program}`"
+            )));
+        }
+        return Ok(AwkProgram::Sum { col });
+    }
+
+    // `{print $COL}`
+    if let Some(expr) = body.strip_prefix("print") {
+        if tail.is_empty() {
+            let col = column_ref(expr).ok_or_else(unsupported)?;
+            return Ok(AwkProgram::PrintCol { col });
+        }
+    }
+    Err(unsupported())
+}
+
 impl Tool for Awk {
     fn name(&self) -> &'static str {
         "awk"
@@ -172,55 +251,35 @@ impl Tool for Awk {
         let data = inputs(ctx, &file_args)?;
         let lines = to_lines(&data)?;
 
-        static SUM_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
-            regex::Regex::new(
-                r"^\{\s*(\w+)\s*\+=\s*\$(\d+)\s*\}\s*END\s*\{\s*print\s+(\w+)\s*\}$",
-            )
-            .unwrap()
-        });
-        static PRINT_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
-            regex::Regex::new(r"^\{\s*print\s+\$(\d+)\s*\}$").unwrap()
-        });
-        static NR_RE: once_cell::sync::Lazy<regex::Regex> = once_cell::sync::Lazy::new(|| {
-            regex::Regex::new(r"^END\s*\{\s*print\s+NR\s*\}$").unwrap()
-        });
-
-        let program = program.trim().to_string();
-        if let Some(caps) = SUM_RE.captures(&program) {
-            if caps[1] != caps[3] {
-                return Err(MareError::Shell(format!(
-                    "awk: accumulator mismatch in `{program}`"
-                )));
-            }
-            let col: usize = caps[2].parse().unwrap();
-            let mut sum = 0f64;
-            for line in &lines {
-                if let Some(v) = line.split_whitespace().nth(col.saturating_sub(1)) {
-                    sum += v.parse::<f64>().unwrap_or(0.0);
+        match parse_awk(&program)? {
+            AwkProgram::Sum { col } => {
+                let mut sum = 0f64;
+                for line in &lines {
+                    if let Some(v) = line.split_whitespace().nth(col - 1) {
+                        sum += v.parse::<f64>().unwrap_or(0.0);
+                    }
                 }
+                let out = if sum.fract() == 0.0 {
+                    format!("{}\n", sum as i64)
+                } else {
+                    format!("{sum}\n")
+                };
+                ToolOutput::ok_str(out)
             }
-            let out = if sum.fract() == 0.0 {
-                format!("{}\n", sum as i64)
-            } else {
-                format!("{sum}\n")
-            };
-            return ToolOutput::ok_str(out);
-        }
-        if let Some(caps) = PRINT_RE.captures(&program) {
-            let col: usize = caps[1].parse().unwrap();
-            let mut out = String::new();
-            for line in &lines {
-                if let Some(v) = line.split_whitespace().nth(col.saturating_sub(1)) {
-                    out.push_str(v);
-                    out.push('\n');
+            AwkProgram::PrintCol { col } => {
+                let mut out = String::new();
+                for line in &lines {
+                    if let Some(v) = line.split_whitespace().nth(col - 1) {
+                        out.push_str(v);
+                        out.push('\n');
+                    }
                 }
+                ToolOutput::ok_str(out)
             }
-            return ToolOutput::ok_str(out);
+            AwkProgram::CountRecords => {
+                ToolOutput::ok_str(format!("{}\n", lines.len()))
+            }
         }
-        if NR_RE.is_match(&program) {
-            return ToolOutput::ok_str(format!("{}\n", lines.len()));
-        }
-        Err(MareError::Shell(format!("awk: unsupported program `{program}`")))
     }
 }
 
@@ -468,18 +527,14 @@ impl Tool for Zcat {
     }
 }
 
+/// Compress bytes (LZ77-style in-tree codec — see [`crate::util::gz`]).
 pub fn compress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut enc = flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::fast());
-    enc.write_all(data)?;
-    Ok(enc.finish()?)
+    Ok(crate::util::gz::compress(data))
 }
 
+/// Inverse of [`compress`]; errors on non-compressed input.
 pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = flate2::read::GzDecoder::new(data);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out)
-        .map_err(|e| MareError::Shell(format!("gunzip: {e}")))?;
-    Ok(out)
+    crate::util::gz::decompress(data)
 }
 
 // ----------------------------------------------------------------- tee

@@ -1,0 +1,191 @@
+//! Byte-exact LZ77-style codec (offline substitute for `flate2` — see
+//! the note in Cargo.toml).
+//!
+//! The simulated `gzip`/`gunzip`/`zcat` tools and the compressed-FASTQ
+//! ingestion path only need a deterministic, self-inverse codec whose
+//! output is smaller than its input for the repetitive text the
+//! workloads produce (genomes, FASTQ, VCF); nothing outside the
+//! simulation ever reads the bytes, so the container format is ours:
+//!
+//! ```text
+//! magic "MGZ1" | u64-le original length | tokens...
+//! token 0x00..=0x7F: literal run of (byte+1) bytes following
+//! token 0x80..=0xFF: match, len = (byte & 0x7f) + 3, then u16-le distance
+//! ```
+
+use crate::error::{MareError, Result};
+
+const MAGIC: &[u8; 4] = b"MGZ1";
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 127 + MIN_MATCH;
+const MAX_DIST: usize = u16::MAX as usize;
+const HASH_BITS: u32 = 15;
+
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E3779B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `data`; always succeeds, output is self-describing.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
+        let mut s = from;
+        while s < to {
+            let n = (to - s).min(128);
+            out.push((n - 1) as u8);
+            out.extend_from_slice(&data[s..s + n]);
+            s += n;
+        }
+    };
+
+    while i < data.len() {
+        let mut emitted = false;
+        if i + MIN_MATCH <= data.len() {
+            let h = hash3(data, i);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX && i - cand <= MAX_DIST {
+                let limit = (data.len() - i).min(MAX_MATCH);
+                let mut len = 0usize;
+                while len < limit && data[cand + len] == data[i + len] {
+                    len += 1;
+                }
+                if len >= MIN_MATCH {
+                    flush_literals(&mut out, lit_start, i);
+                    out.push(0x80 | (len - MIN_MATCH) as u8);
+                    out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+                    i += len;
+                    lit_start = i;
+                    emitted = true;
+                }
+            }
+        }
+        if !emitted {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, data.len());
+    out
+}
+
+/// Decompress a [`compress`] blob; errors on bad magic or truncation.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 12 || &data[..4] != MAGIC {
+        return Err(MareError::Shell("gunzip: not in mare-gzip format".into()));
+    }
+    let want = u64::from_le_bytes(data[4..12].try_into().unwrap()) as usize;
+    // The header length is untrusted: cap the reservation by the codec's
+    // real expansion bound (a 3-byte match token emits <= MAX_MATCH
+    // bytes) and let the final length check reject lying headers —
+    // reserving u64::MAX would abort instead of erroring.
+    let bound = data.len().saturating_mul(MAX_MATCH / MIN_MATCH + 1);
+    let mut out = Vec::with_capacity(want.min(bound));
+    let mut i = 12usize;
+    while i < data.len() {
+        let tok = data[i];
+        i += 1;
+        if tok < 0x80 {
+            let n = tok as usize + 1;
+            if i + n > data.len() {
+                return Err(MareError::Shell("gunzip: truncated literal run".into()));
+            }
+            out.extend_from_slice(&data[i..i + n]);
+            i += n;
+        } else {
+            let len = (tok & 0x7F) as usize + MIN_MATCH;
+            if i + 2 > data.len() {
+                return Err(MareError::Shell("gunzip: truncated match token".into()));
+            }
+            let dist = u16::from_le_bytes([data[i], data[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(MareError::Shell("gunzip: match distance out of range".into()));
+            }
+            // byte-by-byte: overlapping copies (dist < len) are the
+            // RLE-ish case and must see freshly written bytes
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    if out.len() != want {
+        return Err(MareError::Shell(format!(
+            "gunzip: corrupt stream ({} bytes, header says {want})",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_text() {
+        let doc = "the quick brown fox jumps over the lazy dog\n".repeat(100);
+        let c = compress(doc.as_bytes());
+        assert!(c.len() < doc.len(), "{} !< {}", c.len(), doc.len());
+        assert_eq!(decompress(&c).unwrap(), doc.as_bytes());
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for case in [&b""[..], b"a", b"ab", b"abc"] {
+            assert_eq!(decompress(&compress(case)).unwrap(), case);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_bytes() {
+        let mut rng = Rng::new(7);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.below(256) as u8).collect();
+        assert_eq!(decompress(&compress(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_overlapping_runs() {
+        // dist < len exercises the overlapping-copy path
+        let data = vec![b'G'; 5000];
+        let c = compress(&data);
+        assert!(c.len() < 200, "run-length case should crush: {}", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn genome_like_text_compresses() {
+        let genome = crate::workloads::gc::genome_text(3, 200, 80);
+        let c = compress(genome.as_bytes());
+        assert!(c.len() < genome.len());
+        assert_eq!(decompress(&c).unwrap(), genome.as_bytes());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decompress(b"not compressed").is_err());
+        assert!(decompress(b"").is_err());
+        let mut c = compress(b"hello world hello world hello");
+        c.truncate(c.len() - 1);
+        assert!(decompress(&c).is_err());
+    }
+
+    #[test]
+    fn lying_length_header_errors_instead_of_aborting() {
+        // huge claimed length must not drive Vec::with_capacity
+        let mut c = compress(b"abc");
+        c[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decompress(&c).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+}

@@ -1,59 +1,160 @@
-//! Minimal stderr logger for the `log` facade.
+//! Minimal stderr logger (offline substitute for the `log` facade —
+//! see the note in Cargo.toml).
 //!
-//! Level comes from `MARE_LOG` (error|warn|info|debug|trace); defaults to
-//! `info` for the binary and `warn` under tests.
+//! Level comes from `MARE_LOG` (off|error|warn|info|debug|trace);
+//! defaults to whatever [`init`] was first called with. Use the
+//! crate-level macros [`crate::log_info!`] / [`crate::log_warn!`] /
+//! [`crate::log_debug!`] / [`crate::log_error!`].
 
 use std::io::Write;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Once;
 
-struct StderrLogger {
-    level: log::LevelFilter,
+/// Log verbosity, ordered: `Off < Error < Warn < Info < Debug < Trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &log::Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{:<5} {}] {}",
-            record.level(),
-            record.target().split("::").last().unwrap_or(""),
-            record.args()
-        );
     }
-
-    fn flush(&self) {}
 }
 
+impl FromStr for Level {
+    type Err = ();
+
+    fn from_str(s: &str) -> std::result::Result<Self, ()> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(Level::Off),
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            "trace" => Ok(Level::Trace),
+            _ => Err(()),
+        }
+    }
+}
+
+/// Current max level (usize for atomic storage; 0 = off).
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
 static INIT: Once = Once::new();
 
-/// Install the logger (idempotent).
-pub fn init(default_level: log::LevelFilter) {
+/// Install the logger (idempotent). `MARE_LOG` overrides the default.
+pub fn init(default_level: Level) {
     INIT.call_once(|| {
         let level = std::env::var("MARE_LOG")
             .ok()
-            .and_then(|s| s.parse::<log::LevelFilter>().ok())
+            .and_then(|s| s.parse::<Level>().ok())
             .unwrap_or(default_level);
-        let logger = Box::new(StderrLogger { level });
-        if log::set_boxed_logger(logger).is_ok() {
-            log::set_max_level(level);
-        }
+        MAX_LEVEL.store(level as usize, Ordering::Relaxed);
     });
+}
+
+/// Whether a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level != Level::Off && (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*!` macros; call those instead).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "[{:<5} {}] {}",
+        level.label(),
+        target.split("::").last().unwrap_or(""),
+        args
+    );
+}
+
+/// Shared body of the level macros: the `enabled` gate runs BEFORE the
+/// format arguments are evaluated (like the `log` crate this replaces),
+/// so disabled-level calls cost one atomic load, not an `explain()`.
+#[macro_export]
+macro_rules! log_at {
+    ($level:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($level) {
+            $crate::util::logging::log($level, module_path!(), format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Error, $($arg)*)
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Warn, $($arg)*)
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Info, $($arg)*)
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::log_at!($crate::util::logging::Level::Debug, $($arg)*)
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_is_idempotent() {
-        super::init(log::LevelFilter::Warn);
-        super::init(log::LevelFilter::Trace);
-        log::warn!("logger smoke test");
+    fn init_is_idempotent_and_levels_order() {
+        init(Level::Warn);
+        init(Level::Trace); // second call is a no-op
+        assert!(Level::Error < Level::Trace);
+        assert!(!enabled(Level::Off));
+        crate::log_warn!("logger smoke test");
+    }
+
+    #[test]
+    fn disabled_levels_do_not_evaluate_arguments() {
+        init(Level::Warn);
+        let mut evaluated = false;
+        // trace is only enabled by an explicit MARE_LOG=trace
+        crate::log_at!(Level::Trace, "{}", {
+            evaluated = true;
+            "x"
+        });
+        assert!(!evaluated, "format arguments must not run for disabled levels");
+    }
+
+    #[test]
+    fn level_parses() {
+        assert_eq!("info".parse::<Level>(), Ok(Level::Info));
+        assert_eq!("WARN".parse::<Level>(), Ok(Level::Warn));
+        assert!("verbose".parse::<Level>().is_err());
     }
 }

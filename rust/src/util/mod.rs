@@ -4,10 +4,12 @@
 pub mod bench;
 pub mod bytes;
 pub mod cli;
+pub mod gz;
 pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod rx;
 
 pub use json::Json;
 pub use rng::Rng;

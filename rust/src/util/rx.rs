@@ -1,0 +1,483 @@
+//! Mini regular-expression engine (offline substitute for the `regex`
+//! crate — see the note in Cargo.toml).
+//!
+//! Supports exactly the POSIX-ish subset the paper's `grep` commands
+//! use, with margin:
+//!
+//! * literals, `.`
+//! * character classes `[GC]`, ranges `[a-z0-9]`, negation `[^x]`
+//! * escapes `\d \w \s \D \W \S` and escaped metacharacters (`\.`)
+//! * anchors `^` / `$`
+//! * greedy quantifiers `*` `+` `?` on the previous atom
+//! * groups `(ab|cd)` with alternation
+//!
+//! Backtracking matcher over `char`s; leftmost-first, greedy — the grep
+//! semantics the listings rely on (`grep -o '[GC]'`).
+
+/// A compiled pattern.
+#[derive(Debug, Clone)]
+pub struct Rx {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    atom: Atom,
+    quant: Quant,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Quant {
+    One,
+    Opt,
+    Star,
+    Plus,
+}
+
+#[derive(Debug, Clone)]
+enum Atom {
+    Char(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    /// Alternation of sequences: `(ab|cd)`.
+    Group(Vec<Vec<Node>>),
+    Start,
+    End,
+}
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Char(char),
+    Range(char, char),
+    Digit(bool),
+    Word(bool),
+    Space(bool),
+}
+
+impl ClassItem {
+    fn matches(&self, c: char) -> bool {
+        match *self {
+            ClassItem::Char(x) => c == x,
+            ClassItem::Range(a, b) => a <= c && c <= b,
+            ClassItem::Digit(pos) => c.is_ascii_digit() == pos,
+            ClassItem::Word(pos) => (c.is_alphanumeric() || c == '_') == pos,
+            ClassItem::Space(pos) => c.is_whitespace() == pos,
+        }
+    }
+}
+
+impl Rx {
+    /// Compile a pattern; errors describe the offending construct.
+    pub fn new(pattern: &str) -> Result<Rx, String> {
+        let chars: Vec<char> = pattern.chars().collect();
+        let (alts, consumed) = parse_alternation(&chars, 0)?;
+        if consumed != chars.len() {
+            return Err(format!("unbalanced `)` at offset {consumed} in `{pattern}`"));
+        }
+        let nodes = if alts.len() == 1 {
+            alts.into_iter().next().unwrap()
+        } else {
+            vec![Node { atom: Atom::Group(alts), quant: Quant::One }]
+        };
+        Ok(Rx { nodes })
+    }
+
+    /// Whether the pattern matches anywhere in `hay`.
+    pub fn is_match(&self, hay: &str) -> bool {
+        self.find(hay).is_some()
+    }
+
+    /// Leftmost match as (start, end) byte-free char offsets resolved to
+    /// the matched substring.
+    pub fn find<'h>(&self, hay: &'h str) -> Option<&'h str> {
+        let chars: Vec<char> = hay.chars().collect();
+        for start in 0..=chars.len() {
+            if let Some(end) = match_seq(&self.nodes, &chars, start) {
+                return Some(slice_of(hay, start, end));
+            }
+        }
+        None
+    }
+
+    /// All non-overlapping leftmost matches (like `regex::find_iter`).
+    /// Empty matches advance by one char so iteration always terminates.
+    pub fn find_all<'h>(&self, hay: &'h str) -> Vec<&'h str> {
+        let chars: Vec<char> = hay.chars().collect();
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start <= chars.len() {
+            match match_seq(&self.nodes, &chars, start) {
+                Some(end) => {
+                    out.push(slice_of(hay, start, end));
+                    start = if end > start { end } else { start + 1 };
+                }
+                None => start += 1,
+            }
+        }
+        // drop empty matches: grep -o never prints them
+        out.retain(|m| !m.is_empty());
+        out
+    }
+}
+
+/// Char-offset substring (patterns and hay are small; O(n) is fine).
+fn slice_of(hay: &str, start: usize, end: usize) -> &str {
+    let mut it = hay.char_indices().map(|(i, _)| i).chain(std::iter::once(hay.len()));
+    let b0 = it.by_ref().nth(start).unwrap_or(hay.len());
+    let b1 = if end > start {
+        hay[b0..]
+            .char_indices()
+            .map(|(i, _)| b0 + i)
+            .chain(std::iter::once(hay.len()))
+            .nth(end - start)
+            .unwrap_or(hay.len())
+    } else {
+        b0
+    };
+    &hay[b0..b1]
+}
+
+// ------------------------------------------------------------- parser
+
+type ParseResult<T> = Result<T, String>;
+
+/// Parse alternatives until `)` or end-of-pattern; returns (alts, next).
+fn parse_alternation(chars: &[char], mut i: usize) -> ParseResult<(Vec<Vec<Node>>, usize)> {
+    let mut alts: Vec<Vec<Node>> = Vec::new();
+    let mut seq: Vec<Node> = Vec::new();
+    while i < chars.len() {
+        match chars[i] {
+            ')' => break,
+            '|' => {
+                alts.push(std::mem::take(&mut seq));
+                i += 1;
+            }
+            '*' | '+' | '?' => {
+                let q = match chars[i] {
+                    '*' => Quant::Star,
+                    '+' => Quant::Plus,
+                    _ => Quant::Opt,
+                };
+                let last = seq
+                    .last_mut()
+                    .ok_or_else(|| format!("quantifier `{}` with nothing to repeat", chars[i]))?;
+                if last.quant != Quant::One {
+                    return Err("stacked quantifiers are not supported".into());
+                }
+                if matches!(last.atom, Atom::Start | Atom::End) {
+                    return Err("cannot quantify an anchor".into());
+                }
+                last.quant = q;
+                i += 1;
+            }
+            '(' => {
+                let (inner, next) = parse_alternation(chars, i + 1)?;
+                if next >= chars.len() || chars[next] != ')' {
+                    return Err("unbalanced `(`".into());
+                }
+                seq.push(Node { atom: Atom::Group(inner), quant: Quant::One });
+                i = next + 1;
+            }
+            '[' => {
+                let (class, next) = parse_class(chars, i + 1)?;
+                seq.push(Node { atom: class, quant: Quant::One });
+                i = next;
+            }
+            '.' => {
+                seq.push(Node { atom: Atom::Any, quant: Quant::One });
+                i += 1;
+            }
+            '^' => {
+                seq.push(Node { atom: Atom::Start, quant: Quant::One });
+                i += 1;
+            }
+            '$' => {
+                seq.push(Node { atom: Atom::End, quant: Quant::One });
+                i += 1;
+            }
+            '\\' => {
+                let c = *chars.get(i + 1).ok_or("trailing backslash")?;
+                seq.push(Node { atom: escape_atom(c), quant: Quant::One });
+                i += 2;
+            }
+            c => {
+                seq.push(Node { atom: Atom::Char(c), quant: Quant::One });
+                i += 1;
+            }
+        }
+    }
+    alts.push(seq);
+    Ok((alts, i))
+}
+
+fn escape_atom(c: char) -> Atom {
+    let item = match c {
+        'd' => Some(ClassItem::Digit(true)),
+        'D' => Some(ClassItem::Digit(false)),
+        'w' => Some(ClassItem::Word(true)),
+        'W' => Some(ClassItem::Word(false)),
+        's' => Some(ClassItem::Space(true)),
+        'S' => Some(ClassItem::Space(false)),
+        'n' => return Atom::Char('\n'),
+        't' => return Atom::Char('\t'),
+        _ => None,
+    };
+    match item {
+        Some(it) => Atom::Class { neg: false, items: vec![it] },
+        None => Atom::Char(c),
+    }
+}
+
+/// Parse a `[...]` body starting after `[`; returns (atom, index past `]`).
+fn parse_class(chars: &[char], mut i: usize) -> ParseResult<(Atom, usize)> {
+    let mut items = Vec::new();
+    let neg = chars.get(i) == Some(&'^');
+    if neg {
+        i += 1;
+    }
+    let mut first = true;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == ']' && !first {
+            return Ok((Atom::Class { neg, items }, i + 1));
+        }
+        first = false;
+        if c == '\\' {
+            let e = *chars.get(i + 1).ok_or("trailing backslash in class")?;
+            match escape_atom(e) {
+                Atom::Char(lit) => items.push(ClassItem::Char(lit)),
+                Atom::Class { items: mut sub, .. } => items.append(&mut sub),
+                _ => unreachable!("escape_atom yields Char or Class"),
+            }
+            i += 2;
+            continue;
+        }
+        // range `a-z` (a `-` at the edge is a literal)
+        if chars.get(i + 1) == Some(&'-') && chars.get(i + 2).map(|&c| c != ']').unwrap_or(false)
+        {
+            items.push(ClassItem::Range(c, chars[i + 2]));
+            i += 3;
+        } else {
+            items.push(ClassItem::Char(c));
+            i += 1;
+        }
+    }
+    Err("unbalanced `[`".into())
+}
+
+// ------------------------------------------------------------ matcher
+//
+// The engine is end-set based: every construct reports ALL positions it
+// can stop at (greedy-first, deduped), so quantifiers and groups
+// backtrack through each other — `(ab|a)+b` retries the shorter
+// alternative, `(ab*)b` gives back a `b` from inside the group.
+
+/// Match `nodes` at `pos`; returns the (greedy) end of the first match.
+fn match_seq(nodes: &[Node], hay: &[char], pos: usize) -> Option<usize> {
+    seq_ends(nodes, hay, pos).into_iter().next()
+}
+
+/// All end positions `nodes` can reach from `pos`, greedy-first.
+fn seq_ends(nodes: &[Node], hay: &[char], pos: usize) -> Vec<usize> {
+    let Some((node, rest)) = nodes.split_first() else {
+        return vec![pos];
+    };
+    let mut out = Vec::new();
+    match node.quant {
+        Quant::One => {
+            for end in atom_ends(&node.atom, hay, pos) {
+                merge(&mut out, seq_ends(rest, hay, end));
+            }
+        }
+        Quant::Opt => {
+            for end in atom_ends(&node.atom, hay, pos) {
+                merge(&mut out, seq_ends(rest, hay, end));
+            }
+            merge(&mut out, seq_ends(rest, hay, pos));
+        }
+        Quant::Star => repeat_ends(&node.atom, 0, rest, hay, pos, &mut out),
+        Quant::Plus => repeat_ends(&node.atom, 1, rest, hay, pos, &mut out),
+    }
+    out
+}
+
+fn merge(out: &mut Vec<usize>, ends: Vec<usize>) {
+    for e in ends {
+        if !out.contains(&e) {
+            out.push(e);
+        }
+    }
+}
+
+/// Ends reachable by >= `min` repetitions of `atom` followed by `rest`.
+/// More repetitions are tried before fewer (greedy); every step must
+/// strictly advance, so recursion depth is bounded by the hay length.
+fn repeat_ends(
+    atom: &Atom,
+    min: usize,
+    rest: &[Node],
+    hay: &[char],
+    pos: usize,
+    out: &mut Vec<usize>,
+) {
+    for end in atom_ends(atom, hay, pos) {
+        if end > pos {
+            repeat_ends(atom, min.saturating_sub(1), rest, hay, end, out);
+        }
+    }
+    if min == 0 {
+        merge(out, seq_ends(rest, hay, pos));
+    }
+}
+
+/// All end positions `atom` can reach from `pos` (greedy order).
+fn atom_ends(atom: &Atom, hay: &[char], pos: usize) -> Vec<usize> {
+    match atom {
+        Atom::Char(c) => {
+            if hay.get(pos) == Some(c) {
+                vec![pos + 1]
+            } else {
+                vec![]
+            }
+        }
+        Atom::Any => {
+            if pos < hay.len() {
+                vec![pos + 1]
+            } else {
+                vec![]
+            }
+        }
+        Atom::Class { neg, items } => match hay.get(pos) {
+            Some(&c) if items.iter().any(|it| it.matches(c)) != *neg => vec![pos + 1],
+            _ => vec![],
+        },
+        Atom::Group(alts) => {
+            let mut out = Vec::new();
+            for alt in alts {
+                merge(&mut out, seq_ends(alt, hay, pos));
+            }
+            out
+        }
+        Atom::Start => {
+            if pos == 0 {
+                vec![pos]
+            } else {
+                vec![]
+            }
+        }
+        Atom::End => {
+            if pos == hay.len() {
+                vec![pos]
+            } else {
+                vec![]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listing1_class_matches_gc_bases() {
+        let rx = Rx::new("[GC]").unwrap();
+        assert_eq!(rx.find_all("GATTACA"), vec!["G", "C"]);
+        assert_eq!(rx.find_all("GCGC").len(), 4);
+        assert!(!rx.is_match("ATTA"));
+    }
+
+    #[test]
+    fn literals_and_any() {
+        let rx = Rx::new("a.c").unwrap();
+        assert!(rx.is_match("xabcx"));
+        assert!(!rx.is_match("ac"));
+        assert_eq!(Rx::new("G").unwrap().find_all("GG"), vec!["G", "G"]);
+    }
+
+    #[test]
+    fn ranges_and_negation() {
+        let rx = Rx::new("[a-c1-3]").unwrap();
+        assert_eq!(rx.find_all("zb2x"), vec!["b", "2"]);
+        let neg = Rx::new("[^0-9]").unwrap();
+        assert_eq!(neg.find_all("a1b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn quantifiers_are_greedy() {
+        let rx = Rx::new("ab+").unwrap();
+        assert_eq!(rx.find("xabbbc"), Some("abbb"));
+        let star = Rx::new("ab*c").unwrap();
+        assert!(star.is_match("ac"));
+        assert!(star.is_match("abbc"));
+        let opt = Rx::new("colou?r").unwrap();
+        assert!(opt.is_match("color") && opt.is_match("colour"));
+    }
+
+    #[test]
+    fn anchors() {
+        let rx = Rx::new("^chr[0-9]+$").unwrap();
+        assert!(rx.is_match("chr12"));
+        assert!(!rx.is_match("xchr12"));
+        assert!(!rx.is_match("chr12x"));
+    }
+
+    #[test]
+    fn groups_and_alternation() {
+        let rx = Rx::new("(foo|ba[rz])").unwrap();
+        assert!(rx.is_match("xxfoo"));
+        assert!(rx.is_match("barx"));
+        assert!(rx.is_match("baz"));
+        assert!(!rx.is_match("bax"));
+    }
+
+    #[test]
+    fn quantified_groups_backtrack_across_alternatives() {
+        // the greedy branch (ab) must be retried as (a) so the trailing
+        // `b` can match — real grep semantics
+        let rx = Rx::new("(ab|a)+b").unwrap();
+        assert!(rx.is_match("ab"));
+        assert!(rx.is_match("aab"));
+        assert!(rx.is_match("abab"));
+        assert!(!rx.is_match("a"));
+        let star = Rx::new("(ab|a)*b").unwrap();
+        assert!(star.is_match("b"));
+        assert!(star.is_match("ab"));
+    }
+
+    #[test]
+    fn quantifiers_inside_groups_give_back_characters() {
+        // b* inside the group must release one `b` for the tail
+        let rx = Rx::new("(ab*)b").unwrap();
+        assert!(rx.is_match("abb"));
+        assert!(rx.is_match("ab"));
+        assert!(!rx.is_match("a"));
+        assert_eq!(rx.find("xabbbz"), Some("abbb"));
+        // nested: group-with-plus under a plus
+        let nested = Rx::new("(a+b)+c").unwrap();
+        assert!(nested.is_match("abaabc"));
+        assert!(!nested.is_match("aab"));
+    }
+
+    #[test]
+    fn escapes() {
+        let rx = Rx::new(r"\d+\.\d+").unwrap();
+        assert_eq!(rx.find("v1.25 "), Some("1.25"));
+        assert!(Rx::new(r"\w+").unwrap().is_match("x_1"));
+        assert!(Rx::new(r"\s").unwrap().is_match("a b"));
+    }
+
+    #[test]
+    fn bad_patterns_error() {
+        assert!(Rx::new("[GC").is_err());
+        assert!(Rx::new("(ab").is_err());
+        assert!(Rx::new("*x").is_err());
+        assert!(Rx::new("ab)").is_err());
+    }
+
+    #[test]
+    fn unicode_safe_slicing() {
+        let rx = Rx::new("é").unwrap();
+        assert_eq!(rx.find_all("café é"), vec!["é", "é"]);
+    }
+}

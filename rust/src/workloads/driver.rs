@@ -60,6 +60,7 @@ fn run_gc(cfg: &RunConfigFile) -> Result<DriverResult> {
     )?;
     let cluster = super::make_cluster(cfg.cluster.clone(), None, None)?;
     let pipeline = gc::pipeline(cluster, ds);
+    crate::log_debug!("gc job:\n{}", pipeline.explain());
     let out = pipeline.run()?;
     let digest = format!("gc_count={}", out.collect_text("\n").trim());
     Ok(DriverResult { ingest, report: out.report, digest })
@@ -77,7 +78,9 @@ fn run_vs(cfg: &RunConfigFile) -> Result<DriverResult> {
         cfg.cluster.workers,
     )?;
     let cluster = super::make_cluster(cfg.cluster.clone(), Some(&cfg.artifacts), None)?;
-    let out = vs::pipeline(cluster, ds, cfg.reduce_depth).run()?;
+    let pipeline = vs::pipeline(cluster, ds, cfg.reduce_depth);
+    crate::log_debug!("vs job:\n{}", pipeline.explain());
+    let out = pipeline.run()?;
     let text = out.collect_text(vs::SDF_SEP);
     let top = crate::formats::sdf::parse_many(&text)?;
     let digest = format!(
@@ -112,7 +115,9 @@ fn run_snp(cfg: &RunConfigFile) -> Result<DriverResult> {
         Some(&cfg.artifacts),
         Some(&individual.reference),
     )?;
-    let out = snp::pipeline(cluster, ds, cfg.cluster.workers).run()?;
+    let pipeline = snp::pipeline(cluster, ds, cfg.cluster.workers);
+    crate::log_debug!("snp job:\n{}", pipeline.explain());
+    let out = pipeline.run()?;
     let calls = parse_vcf_records(&out)?;
     let (tp, fp, fn_) = snp::score_calls(&calls, &individual.truth);
     let digest = format!("snps={} tp={tp} fp={fp} fn={fn_}", calls.len());

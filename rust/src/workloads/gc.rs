@@ -1,30 +1,25 @@
-//! GC-count pipeline — Listing 1, verbatim.
+//! GC-count pipeline — Listing 1, verbatim, through the fluent
+//! pipeline-IR API.
 
 use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::dataset::Dataset;
 use crate::error::Result;
-use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::mare::{Job, MaRe};
 use crate::util::rng::Rng;
 
 /// Listing 1: count G/C occurrences in a genome with POSIX tools from
 /// the `ubuntu` image.
-pub fn pipeline(cluster: Arc<Cluster>, genome: Dataset) -> MaRe {
-    MaRe::new(cluster, genome)
-        .map(MapSpec {
-            input_mount: MountPoint::text("/dna"),
-            output_mount: MountPoint::text("/count"),
-            image: "ubuntu".into(),
-            command: "grep -o '[GC]' /dna | wc -l > /count".into(),
-        })
-        .reduce(ReduceSpec {
-            input_mount: MountPoint::text("/counts"),
-            output_mount: MountPoint::text("/sum"),
-            image: "ubuntu".into(),
-            command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
-            depth: 2,
-        })
+pub fn pipeline(cluster: Arc<Cluster>, genome: Dataset) -> Job {
+    MaRe::source(cluster, genome)
+        .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+        .mounts("/dna", "/count")
+        .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+        .mounts("/counts", "/sum")
+        .depth(2)
+        .build()
+        .expect("the GC pipeline is statically valid")
 }
 
 /// Run end-to-end and parse the count.

@@ -9,7 +9,7 @@ use crate::dataset::{Dataset, Record};
 use crate::error::Result;
 use crate::formats::sam::parse_chromosome_id;
 use crate::formats::vcf::{self, VcfRecord};
-use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::mare::{Job, MaRe, MountPoint};
 use crate::tools::posix::decompress;
 
 /// Listing 3 lines 5–10: align + convert to SAM text.
@@ -39,32 +39,23 @@ pub fn vcf_concat_command() -> String {
 /// Listing 3 as a MaRe pipeline. `num_nodes` is the paper's
 /// `numberOfNodes` (chromosome-group partition count); disk-backed
 /// mounts mirror the TMPDIR override of §1.3.2.
-pub fn pipeline(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> MaRe {
-    MaRe::new(cluster, reads)
-        .map(MapSpec {
-            input_mount: MountPoint::text("/in.fastq"),
-            output_mount: MountPoint::text("/out.sam"),
-            image: "mcapuccini/alignment:latest".into(),
-            command: bwa_command(),
-        })
+pub fn pipeline(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Job {
+    MaRe::source(cluster, reads)
+        .map("mcapuccini/alignment:latest", bwa_command())
+        .mounts("/in.fastq", "/out.sam")
         .repartition_by(
             Arc::new(|r: &Record| parse_chromosomeid_record(r)),
-            num_nodes,
+            num_nodes.max(1),
         )
-        .with_disk_mounts(true)
-        .map(MapSpec {
-            input_mount: MountPoint::text("/in.sam"),
-            output_mount: MountPoint::binary("/out"),
-            image: "mcapuccini/alignment:latest".into(),
-            command: gatk_command(),
-        })
-        .reduce(ReduceSpec {
-            input_mount: MountPoint::binary("/in"),
-            output_mount: MountPoint::binary("/out"),
-            image: "opengenomics/vcftools-tools:latest".into(),
-            command: vcf_concat_command(),
-            depth: 2,
-        })
+        .disk_mounts(true)
+        .map("mcapuccini/alignment:latest", gatk_command())
+        .input_mount(MountPoint::text("/in.sam"))
+        .output_mount(MountPoint::binary("/out"))
+        .reduce("opengenomics/vcftools-tools:latest", vcf_concat_command())
+        .binary_mounts("/in", "/out")
+        .depth(2)
+        .build()
+        .expect("the SNP pipeline is statically valid")
 }
 
 /// The paper's `parseChromosomeId` keyBy (Listing 3 line 12).

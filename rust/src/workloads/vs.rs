@@ -1,5 +1,6 @@
 //! Virtual-screening pipeline — Listing 2, verbatim: FRED docking over
-//! an SDF library (map), top-30 poses by Chemgauss4 score (reduce).
+//! an SDF library (map), top-30 poses by Chemgauss4 score (reduce),
+//! through the fluent pipeline-IR API.
 
 use std::sync::Arc;
 
@@ -7,7 +8,7 @@ use crate::cluster::Cluster;
 use crate::dataset::Dataset;
 use crate::error::Result;
 use crate::formats::sdf::{self, Molecule};
-use crate::mare::{MapSpec, MaRe, MountPoint, ReduceSpec};
+use crate::mare::{Job, MaRe};
 use crate::tools::fred::SCORE_TAG;
 
 /// SDF record separator (Listing 2 line 2).
@@ -36,21 +37,15 @@ pub fn sdsorter_command(nbest: usize) -> String {
 }
 
 /// Listing 2 as a MaRe pipeline.
-pub fn pipeline(cluster: Arc<Cluster>, library: Dataset, depth: usize) -> MaRe {
-    MaRe::new(cluster, library)
-        .map(MapSpec {
-            input_mount: MountPoint::text_sep("/in.sdf", SDF_SEP),
-            output_mount: MountPoint::text_sep("/out.sdf", SDF_SEP),
-            image: "mcapuccini/oe:latest".into(),
-            command: fred_command(),
-        })
-        .reduce(ReduceSpec {
-            input_mount: MountPoint::text_sep("/in.sdf", SDF_SEP),
-            output_mount: MountPoint::text_sep("/out.sdf", SDF_SEP),
-            image: "mcapuccini/sdsorter:latest".into(),
-            command: sdsorter_command(NBEST),
-            depth,
-        })
+pub fn pipeline(cluster: Arc<Cluster>, library: Dataset, depth: usize) -> Job {
+    MaRe::source(cluster, library)
+        .map("mcapuccini/oe:latest", fred_command())
+        .mounts_sep("/in.sdf", "/out.sdf", SDF_SEP)
+        .reduce("mcapuccini/sdsorter:latest", sdsorter_command(NBEST))
+        .mounts_sep("/in.sdf", "/out.sdf", SDF_SEP)
+        .depth(depth.max(1))
+        .build()
+        .expect("the VS pipeline is statically valid")
 }
 
 /// Run and parse the top poses.
