@@ -33,16 +33,38 @@ impl Dataset {
 
     /// Split `text` on `sep` into records, then pack into `num_partitions`.
     pub fn parallelize_text(text: &str, sep: &str, num_partitions: usize) -> Self {
+        Self::parallelize_text_labeled(text, sep, num_partitions, "parallelize")
+    }
+
+    /// [`Self::parallelize_text`] recording `label` as the source label.
+    /// The submit subsystem resolves `gen:`/`inline:` labels back to
+    /// data, so plans over such sources are executable on any driver
+    /// (see `docs/WIRE_FORMAT.md`).
+    pub fn parallelize_text_labeled(
+        text: &str,
+        sep: &str,
+        num_partitions: usize,
+        label: impl Into<String>,
+    ) -> Self {
         let records: Vec<Record> = split_records(text, sep)
             .into_iter()
             .map(Record::text)
             .collect();
-        Self::parallelize(records, num_partitions)
+        Self::parallelize_labeled(records, num_partitions, label)
     }
 
     /// Pack records into `num_partitions` (round-robin, like
     /// `sc.parallelize`), no locality info.
     pub fn parallelize(records: Vec<Record>, num_partitions: usize) -> Self {
+        Self::parallelize_labeled(records, num_partitions, "parallelize")
+    }
+
+    /// [`Self::parallelize`] with an explicit source label.
+    pub fn parallelize_labeled(
+        records: Vec<Record>,
+        num_partitions: usize,
+        label: impl Into<String>,
+    ) -> Self {
         let n = num_partitions.max(1);
         let mut parts: Vec<Vec<Record>> = (0..n).map(|_| Vec::new()).collect();
         let total = records.len();
@@ -53,7 +75,7 @@ impl Dataset {
             part.extend(it.by_ref().take(count));
         }
         let partitions = parts.into_iter().map(Partition::new).collect();
-        Dataset::from_plan(Arc::new(Plan::Source { partitions, label: "parallelize".into() }))
+        Dataset::from_plan(Arc::new(Plan::Source { partitions, label: label.into() }))
     }
 
     /// Pre-partitioned source (storage ingest paths use this to carry

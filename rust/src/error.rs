@@ -43,6 +43,12 @@ pub enum MareError {
 
     /// JSON parse / shape errors (util::json).
     Json(String),
+
+    /// Wire-format encode/decode errors (mare::wire).
+    Wire(crate::mare::wire::WireError),
+
+    /// Job-submission / queue errors (submit).
+    Submit(String),
 }
 
 impl std::fmt::Display for MareError {
@@ -65,6 +71,8 @@ impl std::fmt::Display for MareError {
             MareError::Pipeline(m) => write!(f, "pipeline: {m}"),
             MareError::Io(e) => write!(f, "{e}"),
             MareError::Json(m) => write!(f, "json: {m}"),
+            MareError::Wire(e) => write!(f, "wire: {e}"),
+            MareError::Submit(m) => write!(f, "submit: {m}"),
         }
     }
 }
@@ -73,6 +81,7 @@ impl std::error::Error for MareError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             MareError::Io(e) => Some(e),
+            MareError::Wire(e) => Some(e),
             _ => None,
         }
     }

@@ -28,6 +28,13 @@
 //! The paper's evaluation pipelines (virtual screening, SNP calling, GC
 //! count) live in [`workloads`]; every figure in the paper is regenerated
 //! by a bench in `rust/benches/` (see DESIGN.md §5).
+//!
+//! Logical plans are also *portable artifacts*: [`mare::wire`] codes the
+//! pipeline IR to/from the documented v1 JSON envelope
+//! (`docs/WIRE_FORMAT.md`), and [`submit`] builds a job-submission
+//! subsystem on top — a file-backed queue, admission control, and a
+//! multi-driver simulation in which any driver executes a submitted
+//! plan identically. See `docs/ARCHITECTURE.md` for the module map.
 
 pub mod baseline;
 pub mod cluster;
@@ -42,6 +49,7 @@ pub mod repl;
 pub mod runtime;
 pub mod simtime;
 pub mod storage;
+pub mod submit;
 pub mod tools;
 pub mod util;
 pub mod workloads;

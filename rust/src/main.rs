@@ -4,7 +4,11 @@
 //! mare run  --workload gc|vs|snp --storage hdfs|swift|s3|local
 //!           [--workers N] [--vcpus M] [--scale S] [--seed K]
 //!           [--reduce-depth D] [--config file.json] [--artifacts DIR]
-//! mare plan --workload gc|vs|snp ...        # logical -> optimized -> physical
+//! mare plan --workload gc|vs|snp [--json]   # logical -> optimized -> physical
+//! mare submit <plan.json> [--queue DIR]     # validate + enqueue a wire plan
+//! mare jobs [--queue DIR]                   # list queued/running/done/failed
+//! mare work [--queue DIR] [--drivers N]     # N simulated drivers drain the queue
+//! mare requeue <id> [--queue DIR]           # put a stuck/finished job back
 //! mare inspect [--artifacts DIR]            # artifacts + stock images
 //! mare help
 //! ```
@@ -20,7 +24,21 @@ mare — MapReduce-oriented processing with application containers
 USAGE:
   mare run   [options]   run a workload end-to-end, print the report
   mare plan  [options]   print the logical -> optimized -> physical plans
-  mare shell [options]   interactive session (the paper's Zeppelin workflow)
+                         (--json: emit the v1 wire envelope instead,
+                          submittable via `mare submit`)
+  mare shell [options]   interactive session (the paper's Zeppelin workflow;
+                         `:save`/`:load` persist plans as wire JSON)
+  mare submit <plan.json> [--queue DIR]
+                         validate a wire plan (docs/WIRE_FORMAT.md) and
+                         enqueue it on the spool directory
+  mare jobs  [--queue DIR]
+                         list submitted jobs with status + launch counts
+  mare work  [--queue DIR] [--drivers N]
+                         spin N simulated drivers that drain the queue
+  mare requeue <id> [--queue DIR]
+                         put a job back in the queue (recovers jobs
+                         stuck `running` after a worker died; also
+                         re-runs `failed`/`done` jobs)
   mare inspect           show AOT artifacts and stock container images
   mare help              this text
 
@@ -34,7 +52,14 @@ OPTIONS (run/plan):
   --reduce-depth D        tree-reduce depth K          [2]
   --config FILE           JSON config (flags override it)
   --artifacts DIR         AOT artifact dir             [./artifacts]
+
+OPTIONS (submit/jobs/work):
+  --queue DIR             job spool directory          [.mare/queue]
+  --drivers N             simulated drivers for work   [2]
 ";
+
+/// Default job spool directory shared by submit/jobs/work.
+const DEFAULT_QUEUE: &str = ".mare/queue";
 
 fn main() -> std::process::ExitCode {
     mare::util::logging::init(mare::util::logging::Level::Info);
@@ -53,6 +78,10 @@ fn dispatch() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("plan") => cmd_plan(&args),
         Some("shell") => cmd_shell(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("jobs") => cmd_jobs(&args),
+        Some("work") => cmd_work(&args),
+        Some("requeue") => cmd_requeue(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             println!("{HELP}");
@@ -94,31 +123,117 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let cfg = RunConfigFile::from_args(args)?;
-    // a small dataset is enough to compile the plan; nothing executes
+    // a small dataset is enough to compile the plan; nothing executes.
+    // sources come from gen: labels so `--json` plans stay executable
+    // after `mare submit` / under `mare work` (docs/WIRE_FORMAT.md §4)
     let cluster = mare::workloads::make_cluster(cfg.cluster.clone(), None, None)?;
-    let ds = match cfg.workload {
-        Workload::Gc => mare::dataset::Dataset::parallelize_text(
-            &mare::workloads::gc::genome_text(cfg.seed, 16, 80),
-            "\n",
-            cfg.cluster.workers * 2,
-        ),
-        Workload::Vs => mare::dataset::Dataset::parallelize_text(
-            &mare::workloads::genlib::library_sdf(cfg.seed, 8),
-            mare::workloads::vs::SDF_SEP,
-            cfg.cluster.workers * 2,
-        ),
-        Workload::Snp => mare::dataset::Dataset::parallelize_text(
-            "@r/1\nACGT\n+\nIIII",
-            "\x00",
-            cfg.cluster.workers * 2,
-        ),
+    let label = match cfg.workload {
+        Workload::Gc => "gen:gc:16",
+        Workload::Vs => "gen:vs:8",
+        Workload::Snp => "gen:snp:500",
     };
+    // a stub with the right label + partition count is all a plan
+    // needs (same O(1) admission trick as Submitter::validate);
+    // executing drivers materialize the real records from the label
+    let ds = mare::submit::SourceSpec::parse(label).stub(cfg.cluster.workers * 2);
     let job = match cfg.workload {
         Workload::Gc => mare::workloads::gc::pipeline(cluster, ds),
         Workload::Vs => mare::workloads::vs::pipeline(cluster, ds, cfg.reduce_depth),
         Workload::Snp => mare::workloads::snp::pipeline(cluster, ds, cfg.cluster.workers),
     };
-    print!("{}", job.explain());
+    if args.flag_bool("json") {
+        // the v1 wire envelope (docs/WIRE_FORMAT.md) — submittable as-is
+        println!("{}", mare::mare::wire::encode_string(job.logical())?);
+    } else {
+        print!("{}", job.explain());
+    }
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        return Err(mare::error::MareError::Config(
+            "usage: mare submit <plan.json> [--queue DIR]".into(),
+        ));
+    };
+    let text = std::fs::read_to_string(path)?;
+    let cfg = RunConfigFile::from_args(args)?;
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    let submitter = mare::submit::Submitter::new(cfg.cluster);
+    let (id, plan) = submitter.submit(&queue, &text)?;
+    println!("job {id} queued in {}", queue.dir().display());
+    println!("  plan:      {}", plan.summary);
+    println!("  optimizer: {}", plan.opt_summary);
+    if !plan.executable {
+        println!(
+            "  note: source is not resolvable by simulated drivers \
+             (only gen:/inline: labels execute under `mare work`)"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    let jobs = queue.list()?;
+    if jobs.is_empty() {
+        println!("no jobs in {}", queue.dir().display());
+        return Ok(());
+    }
+    println!("{:>5}  {:<8} {:>9}  {}", "id", "status", "launches", "plan");
+    for job in jobs {
+        let launches = match &job.result {
+            Some(r) => r.launches.to_string(),
+            None => "-".into(),
+        };
+        println!("{:>5}  {:<8} {:>9}  {}", job.id, job.status.name(), launches, job.summary);
+        if let Some(r) = &job.result {
+            if r.detail != "ok" {
+                println!("       {} on {}: {}", job.status.name(), r.driver, r.detail);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_requeue(args: &Args) -> Result<()> {
+    let id: u64 = args
+        .positional
+        .first()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            mare::error::MareError::Config("usage: mare requeue <id> [--queue DIR]".into())
+        })?;
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    let job = queue.requeue(id)?;
+    println!("job {} requeued ({})", job.id, job.summary);
+    Ok(())
+}
+
+fn cmd_work(args: &Args) -> Result<()> {
+    let cfg = RunConfigFile::from_args(args)?;
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    let n = args.flag_usize("drivers", 2)?.max(1);
+    let drivers: Vec<mare::submit::Driver> = (0..n)
+        .map(|i| mare::submit::Driver::new(format!("driver-{i}"), cfg.cluster.clone()))
+        .collect();
+    let finished = mare::submit::drain(&queue, &drivers)?;
+    if finished.is_empty() {
+        println!("queue {} is empty", queue.dir().display());
+        return Ok(());
+    }
+    for job in finished {
+        let r = job.result.as_ref().expect("drained jobs carry a result");
+        println!(
+            "job {} -> {} on {} (launches={}, records={}{})",
+            job.id,
+            job.status.name(),
+            r.driver,
+            r.launches,
+            r.records,
+            if r.detail == "ok" { String::new() } else { format!(", {}", r.detail) },
+        );
+    }
     Ok(())
 }
 

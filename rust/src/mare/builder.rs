@@ -1,22 +1,50 @@
 //! Fluent, validating builder over the [`Pipeline`] IR — the user-facing
 //! MaRe API.
 //!
-//! ```text
-//! MaRe::source(cluster, dataset)
-//!     .map("ubuntu", "grep -o '[GC]' /dna > /gc").mounts("/dna", "/gc")
-//!     .map("ubuntu", "wc -l /gc > /count").mounts("/gc", "/count")
-//!     .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
-//!     .mounts("/counts", "/sum")
-//!     .depth(2)
-//!     .build()?
-//!     .collect_text()?
-//! ```
-//!
 //! `build()` validates the whole job up front — empty images/commands,
 //! `depth(0)`, missing mounts, and reduce mount-kind mismatches are
 //! *errors*, not silent clamps — then runs the optimizer passes
 //! ([`super::opt`]) and lowers the optimized plan to the physical
 //! [`Dataset`] lineage held by the returned [`Job`].
+//!
+//! Listing 1 (GC count), built, executed and round-tripped through the
+//! wire codec ([`super::wire`]):
+//!
+//! ```
+//! use std::sync::Arc;
+//! use mare::cluster::{Cluster, ClusterConfig};
+//! use mare::container::Registry;
+//! use mare::dataset::Dataset;
+//! use mare::mare::{wire, MaRe};
+//!
+//! # fn main() -> mare::Result<()> {
+//! let mut registry = Registry::new();
+//! registry.push(mare::tools::images::ubuntu());
+//! let cluster = Arc::new(Cluster::new(
+//!     Arc::new(registry),
+//!     None,
+//!     ClusterConfig::sized(2, 2),
+//! ));
+//! let genome = Dataset::parallelize_text("GATTACA\nGGCC", "\n", 2);
+//!
+//! let job = MaRe::source(cluster.clone(), genome.clone())
+//!     .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+//!     .mounts("/dna", "/count")
+//!     .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+//!     .mounts("/counts", "/sum")
+//!     .depth(2)
+//!     .build()?;
+//! assert_eq!(job.collect_text()?, "6");
+//!
+//! // every buildable plan is also persistable: encode -> decode ->
+//! // rebuild yields the same plans (docs/WIRE_FORMAT.md)
+//! let encoded = wire::encode(job.logical())?;
+//! let decoded = wire::decode(&encoded)?;
+//! let rebuilt = MaRe::source(cluster, genome).append_pipeline(&decoded).build()?;
+//! assert_eq!(rebuilt.explain(), job.explain());
+//! # Ok(())
+//! # }
+//! ```
 
 use std::mem::discriminant;
 use std::sync::Arc;
@@ -29,7 +57,7 @@ use crate::error::{MareError, Result};
 use super::mount::MountPoint;
 use super::opt::{self, OptEnv, OptReport};
 use super::pipeline::{
-    source_label, KeyFn, Lowering, MapStep, Pipeline, PipelineOp, ReduceStep,
+    source_label, KeyFn, KeySelector, Lowering, MapStep, Pipeline, PipelineOp, ReduceStep,
 };
 
 /// Accumulates [`PipelineOp`]s; step modifiers (`.mounts`, `.depth`, …)
@@ -93,9 +121,45 @@ impl PipelineBuilder {
     }
 
     /// Regroup records so those with equal keys share a partition
-    /// (keyBy + HashPartitioner, §1.2.2).
+    /// (keyBy + HashPartitioner, §1.2.2), keyed by an arbitrary
+    /// driver-local closure. Plans holding one of these cannot be
+    /// serialized — prefer [`Self::repartition_by_named`] when a
+    /// registered key function fits.
     pub fn repartition_by(mut self, key_fn: KeyFn, partitions: usize) -> Self {
-        self.ops.push(PipelineOp::RepartitionBy { key_fn, partitions });
+        self.ops.push(PipelineOp::RepartitionBy {
+            key: KeySelector::opaque(key_fn),
+            partitions,
+        });
+        self
+    }
+
+    /// Regroup records keyed by a *registered* key function
+    /// ([`KeySelector::named`]; e.g. `"chromosome"` for the SNP
+    /// pipeline's SAM keyBy). Named keys survive the wire codec
+    /// ([`super::wire`]), so the plan stays submittable to other
+    /// drivers. An unknown name is a build error.
+    pub fn repartition_by_named(mut self, name: &str, partitions: usize) -> Self {
+        match KeySelector::named(name) {
+            Some(key) => self.ops.push(PipelineOp::RepartitionBy { key, partitions }),
+            None => self.errors.push(format!(
+                "unknown key function `{name}` (registered: {})",
+                KeySelector::known().join(", ")
+            )),
+        }
+        self
+    }
+
+    /// Append every computational op of `pipeline` — e.g. one decoded
+    /// from the wire ([`super::wire::decode`]). `Ingest`/`Collect`
+    /// markers are skipped: the builder's own source and `build()`
+    /// supply them.
+    pub fn append_pipeline(mut self, pipeline: &Pipeline) -> Self {
+        for op in pipeline.ops() {
+            match op {
+                PipelineOp::Ingest { .. } | PipelineOp::Collect => {}
+                other => self.ops.push(other.clone()),
+            }
+        }
         self
     }
 
@@ -539,6 +603,41 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("0 partitions"), "{err}");
+    }
+
+    #[test]
+    fn repartition_by_named_validates_the_name() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .repartition_by_named("no-such-key", 2)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key function"), "{err}");
+        assert!(err.contains("chromosome"), "{err}");
+
+        let job = MaRe::source(cluster(2), numbers(8, 4))
+            .repartition_by_named("prefix_colon", 2)
+            .build()
+            .unwrap();
+        assert!(
+            job.logical().describe().contains("repartitionBy[prefix_colon -> 2]"),
+            "{}",
+            job.logical().describe()
+        );
+    }
+
+    #[test]
+    fn append_pipeline_rebuilds_an_identical_job() {
+        let job = MaRe::source(cluster(2), numbers(8, 4))
+            .map("ubuntu", "wc -l /in > /out")
+            .mounts("/in", "/out")
+            .build()
+            .unwrap();
+        let rebuilt = MaRe::source(cluster(2), numbers(8, 4))
+            .append_pipeline(job.logical())
+            .build()
+            .unwrap();
+        assert_eq!(rebuilt.explain(), job.explain());
     }
 
     #[test]

@@ -46,7 +46,14 @@
 //! ```
 //!
 //! The pre-IR eager API ([`MaRe::new`] + [`MapSpec`] / [`ReduceSpec`])
-//! still compiles as thin deprecated shims over the same lowering.
+//! still compiles as thin deprecated shims over the same lowering (the
+//! migration recipe is `docs/MIGRATION.md`).
+//!
+//! Because the IR is a plain engine-agnostic value, a whole plan can
+//! also leave the driver: [`wire`] round-trips `Pipeline` ⇄ JSON under
+//! the documented v1 envelope (`docs/WIRE_FORMAT.md`), and
+//! [`crate::submit`] queues encoded plans so any driver can rebuild
+//! and execute them identically.
 
 pub mod builder;
 pub mod cost;
@@ -54,6 +61,7 @@ pub mod mount;
 pub mod op;
 pub mod opt;
 pub mod pipeline;
+pub mod wire;
 
 use std::sync::Arc;
 
@@ -64,7 +72,7 @@ use crate::error::Result;
 pub use builder::{Job, PipelineBuilder};
 pub use mount::MountPoint;
 pub use op::ContainerOp;
-pub use pipeline::{MapStep, Pipeline, PipelineOp, ReduceStep};
+pub use pipeline::{KeySelector, MapStep, Pipeline, PipelineOp, ReduceStep};
 
 use pipeline::Lowering;
 

@@ -7,7 +7,30 @@
 //! (map fusion, reduce-depth planning), and [`Lowering`] translates the
 //! optimized plan into the physical [`Dataset`] lineage the cluster's
 //! stage compiler consumes. This is the logical/physical-plan seam that
-//! Spark-class engines hang their optimizers off.
+//! Spark-class engines hang their optimizers off — and because the IR
+//! holds no engine handles, it is also the unit of serialization
+//! ([`super::wire`]) and job submission ([`crate::submit`]).
+//!
+//! The IR is plain data; plans can be built directly (the fluent
+//! builder is sugar over exactly this):
+//!
+//! ```
+//! use mare::mare::{MapStep, MountPoint, Pipeline, PipelineOp};
+//!
+//! let plan = Pipeline::new(vec![
+//!     PipelineOp::Ingest { label: "gen:gc:8".into(), partitions: 2 },
+//!     PipelineOp::Map(MapStep {
+//!         input_mount: MountPoint::text("/dna"),
+//!         output_mount: MountPoint::text("/gc"),
+//!         image: "ubuntu".into(),
+//!         command: "grep -o '[GC]' /dna > /gc".into(),
+//!         disk_mounts: false,
+//!     }),
+//!     PipelineOp::Collect,
+//! ]);
+//! assert_eq!(plan.num_maps(), 1);
+//! assert!(plan.describe().contains("map[grep@ubuntu /dna -> /gc]"));
+//! ```
 
 use std::sync::Arc;
 
@@ -20,6 +43,92 @@ use super::op::ContainerOp;
 
 /// Key-extraction closure for `repartitionBy`.
 pub type KeyFn = Arc<dyn Fn(&Record) -> String + Send + Sync>;
+
+/// How `repartitionBy` extracts a record's key.
+///
+/// Named selectors come from the registry behind [`KeySelector::named`]
+/// and are serializable by [`super::wire`] (the wire format's `"key"`
+/// values); opaque selectors carry an arbitrary driver-local closure
+/// and cannot cross the wire — encoding a plan that contains one is a
+/// typed error, not a panic.
+#[derive(Clone)]
+pub enum KeySelector {
+    /// A registered key function, referenced by wire name.
+    Named { name: &'static str, key_fn: KeyFn },
+    /// An arbitrary driver-local closure (not serializable).
+    Opaque(KeyFn),
+}
+
+/// SAM RNAME field — the SNP pipeline's `parseChromosomeId` keyBy
+/// (Listing 3); `*` for non-text records.
+fn key_chromosome(r: &Record) -> String {
+    match r.as_text() {
+        Some(sam) => crate::formats::sam::parse_chromosome_id(sam),
+        None => "*".to_string(),
+    }
+}
+
+/// First whitespace-separated token.
+fn key_first_word(r: &Record) -> String {
+    r.as_text().and_then(|t| t.split_whitespace().next()).unwrap_or("").to_string()
+}
+
+/// Text before the first `:`.
+fn key_prefix_colon(r: &Record) -> String {
+    r.as_text().and_then(|t| t.split(':').next()).unwrap_or("").to_string()
+}
+
+/// The single registry table — [`KeySelector::known`] and
+/// [`KeySelector::named`] both derive from it, so the name list and
+/// the lookups cannot drift apart.
+const KEY_REGISTRY: &[(&str, fn(&Record) -> String)] = &[
+    ("chromosome", key_chromosome),
+    ("first_word", key_first_word),
+    ("prefix_colon", key_prefix_colon),
+];
+
+impl KeySelector {
+    /// Wire names of every registered key function, in registry order.
+    pub fn known() -> Vec<&'static str> {
+        KEY_REGISTRY.iter().map(|(name, _)| *name).collect()
+    }
+
+    /// Look up a registered key function by wire name (the per-name
+    /// semantics are documented on the `key_*` functions above and in
+    /// `docs/WIRE_FORMAT.md` §5).
+    pub fn named(name: &str) -> Option<KeySelector> {
+        KEY_REGISTRY
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(n, f)| KeySelector::Named { name: n, key_fn: Arc::new(f) })
+    }
+
+    /// Wrap a driver-local closure (not serializable).
+    pub fn opaque(key_fn: KeyFn) -> KeySelector {
+        KeySelector::Opaque(key_fn)
+    }
+
+    /// The wire name, if this selector is serializable.
+    pub fn name(&self) -> Option<&'static str> {
+        match self {
+            KeySelector::Named { name, .. } => Some(name),
+            KeySelector::Opaque(_) => None,
+        }
+    }
+
+    /// The executable key function.
+    pub fn key_fn(&self) -> &KeyFn {
+        match self {
+            KeySelector::Named { key_fn, .. } | KeySelector::Opaque(key_fn) => key_fn,
+        }
+    }
+}
+
+impl std::fmt::Debug for KeySelector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name().unwrap_or("keyBy"))
+    }
+}
 
 /// A containerized map step (Figure 1).
 #[derive(Debug, Clone)]
@@ -52,7 +161,7 @@ pub enum PipelineOp {
     Map(MapStep),
     Reduce(ReduceStep),
     /// keyBy + hash partitioner regrouping (§1.2.2).
-    RepartitionBy { key_fn: KeyFn, partitions: usize },
+    RepartitionBy { key: KeySelector, partitions: usize },
     /// Balanced rebalance into `partitions` (no keys).
     Repartition { partitions: usize },
     /// Terminal marker: results are collected to the driver.
@@ -96,8 +205,8 @@ impl PipelineOp {
                 },
                 if r.disk_mounts { ", disk" } else { "" },
             ),
-            PipelineOp::RepartitionBy { partitions, .. } => {
-                format!("repartitionBy[keyBy -> {partitions}]")
+            PipelineOp::RepartitionBy { key, partitions } => {
+                format!("repartitionBy[{} -> {partitions}]", key.name().unwrap_or("keyBy"))
             }
             PipelineOp::Repartition { partitions } => {
                 format!("repartition[{partitions}]")
@@ -238,8 +347,8 @@ impl Lowering {
                 &m.command,
                 m.disk_mounts,
             )),
-            PipelineOp::RepartitionBy { key_fn, partitions } => {
-                ds.repartition_by_key(key_fn.clone(), *partitions)
+            PipelineOp::RepartitionBy { key, partitions } => {
+                ds.repartition_by_key(key.key_fn().clone(), *partitions)
             }
             PipelineOp::Repartition { partitions } => ds.repartition(*partitions),
             PipelineOp::Reduce(r) => self.lower_reduce(ds, r),
@@ -375,6 +484,32 @@ mod tests {
     }
 
     #[test]
+    fn named_key_selectors_resolve_and_compute() {
+        for name in KeySelector::known() {
+            let k = KeySelector::named(name).expect("registered key fn");
+            assert_eq!(k.name(), Some(name));
+        }
+        assert!(KeySelector::named("no-such-key").is_none());
+
+        let key_of = |name: &str, r: &Record| {
+            let f: KeyFn = KeySelector::named(name).unwrap().key_fn().clone();
+            f(r)
+        };
+        let sam = Record::text("read1\t0\tchr7\t100\tACGT");
+        assert_eq!(key_of("chromosome", &sam), "chr7");
+        assert_eq!(key_of("first_word", &sam), "read1");
+        assert_eq!(key_of("prefix_colon", &Record::text("chr2:r9")), "chr2");
+        // non-text records fall back rather than panic
+        assert_eq!(key_of("chromosome", &Record::binary("x.gz", vec![1])), "*");
+
+        let p = Pipeline::new(vec![PipelineOp::RepartitionBy {
+            key: KeySelector::named("chromosome").unwrap(),
+            partitions: 4,
+        }]);
+        assert!(p.describe().contains("repartitionBy[chromosome -> 4]"), "{}", p.describe());
+    }
+
+    #[test]
     fn describe_renders_every_node_kind() {
         let p = Pipeline::new(vec![
             PipelineOp::Ingest { label: "parallelize".into(), partitions: 8 },
@@ -386,7 +521,7 @@ mod tests {
                 disk_mounts: false,
             }),
             PipelineOp::RepartitionBy {
-                key_fn: Arc::new(|_: &Record| "k".into()),
+                key: KeySelector::opaque(Arc::new(|_: &Record| "k".into())),
                 partitions: 3,
             },
             PipelineOp::Repartition { partitions: 2 },

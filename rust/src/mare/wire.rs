@@ -1,0 +1,803 @@
+//! The v1 wire format: lossless `Pipeline` ⇄ JSON codec.
+//!
+//! A logical plan ([`Pipeline`]) is an engine-agnostic value, so it can
+//! leave the driver that built it: `mare submit` ships encoded plans
+//! into a job queue, `mare shell` persists them with `:save`/`:load`,
+//! and any driver can [`decode`] and rebuild an identical job
+//! ([`crate::submit`]). The normative spec — every node kind, field,
+//! mount kind and error condition — is `docs/WIRE_FORMAT.md`; this
+//! module is its reference implementation, and the golden-file tests in
+//! `rust/tests/wire_golden.rs` pin the two together.
+//!
+//! Guarantees:
+//!
+//! * **Lossless**: `encode → decode → encode` is a fixed point for every
+//!   serializable pipeline (property-tested).
+//! * **Strict**: decoding never panics; unknown node kinds, unknown
+//!   mount kinds, missing fields and malformed values are typed
+//!   [`WireError`]s.
+//! * **Forward-compatible**: unknown *envelope* keys and unknown *node
+//!   fields* are ignored (a v1 reader accepts envelopes with additive
+//!   extensions), while unknown node kinds, mount kinds and versions
+//!   are rejected (a v1 reader never mis-executes a plan it does not
+//!   fully understand).
+//!
+//! ```
+//! use mare::mare::wire;
+//!
+//! let text = r#"{
+//!   "version": 1,
+//!   "ops": [
+//!     {"op": "ingest", "label": "gen:gc:8", "partitions": 2},
+//!     {"op": "map", "image": "ubuntu", "command": "wc -l /in > /out",
+//!      "input": {"kind": "text", "path": "/in"},
+//!      "output": {"kind": "text", "path": "/out"}},
+//!     {"op": "collect"}
+//!   ]
+//! }"#;
+//! let pipeline = wire::decode_str(text).unwrap();
+//! assert_eq!(pipeline.num_maps(), 1);
+//!
+//! // encode -> decode -> encode is a fixed point
+//! let encoded = wire::encode(&pipeline).unwrap();
+//! assert_eq!(wire::encode(&wire::decode(&encoded).unwrap()).unwrap(), encoded);
+//! ```
+
+use std::fmt;
+
+use crate::error::MareError;
+use crate::util::json::Json;
+
+use super::mount::MountPoint;
+use super::pipeline::{KeySelector, MapStep, Pipeline, PipelineOp, ReduceStep};
+
+/// The envelope version this build reads and writes.
+pub const WIRE_VERSION: u64 = 1;
+
+/// The envelope `"kind"` tag (optional on input, always written).
+pub const WIRE_KIND: &str = "mare/pipeline";
+
+/// Everything that can go wrong crossing the wire. Decoding is total:
+/// every malformed input maps to one of these — never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The top-level value is not a JSON object.
+    NotAnEnvelope(String),
+    /// `"version"` is not a version this build speaks.
+    UnsupportedVersion(u64),
+    /// `"kind"` is present but is not [`WIRE_KIND`].
+    WrongKind(String),
+    /// A required field is absent.
+    MissingField { at: String, field: &'static str },
+    /// A field is present but malformed.
+    BadField { at: String, field: &'static str, detail: String },
+    /// `"op"` names a node kind unknown to this version.
+    UnknownOp { at: String, op: String },
+    /// A mount `"kind"` unknown to this version.
+    UnknownMountKind { at: String, kind: String },
+    /// `"key"` names an unregistered key function.
+    UnknownKeyFn { at: String, name: String },
+    /// Encoding hit a `repartitionBy` keyed by a driver-local closure.
+    OpaqueKeyFn { at: String },
+    /// Plan bracketing broken (must be `ingest … collect`).
+    Structure(String),
+    /// The input is not valid JSON at all.
+    Syntax(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::NotAnEnvelope(d) => write!(f, "not a plan envelope: {d}"),
+            WireError::UnsupportedVersion(v) => write!(
+                f,
+                "unsupported wire version {v} (this build speaks version {WIRE_VERSION})"
+            ),
+            WireError::WrongKind(k) => write!(f, "envelope kind `{k}` is not `{WIRE_KIND}`"),
+            WireError::MissingField { at, field } => {
+                write!(f, "{at}: missing field `{field}`")
+            }
+            WireError::BadField { at, field, detail } => {
+                write!(f, "{at}: bad field `{field}`: {detail}")
+            }
+            WireError::UnknownOp { at, op } => write!(f, "{at}: unknown node kind `{op}`"),
+            WireError::UnknownMountKind { at, kind } => {
+                write!(f, "{at}: unknown mount kind `{kind}`")
+            }
+            WireError::UnknownKeyFn { at, name } => write!(
+                f,
+                "{at}: unknown key function `{name}` (registered: {})",
+                KeySelector::known().join(", ")
+            ),
+            WireError::OpaqueKeyFn { at } => write!(
+                f,
+                "{at}: repartitionBy is keyed by a driver-local closure and cannot be \
+                 serialized — use a registered key function (repartition_by_named)"
+            ),
+            WireError::Structure(d) => write!(f, "bad plan structure: {d}"),
+            WireError::Syntax(d) => write!(f, "json syntax: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for MareError {
+    fn from(e: WireError) -> Self {
+        MareError::Wire(e)
+    }
+}
+
+// ------------------------------------------------------------- encoding
+
+/// Encode a complete (bracketed) pipeline into a v1 envelope.
+pub fn encode(pipeline: &Pipeline) -> Result<Json, WireError> {
+    check_structure(pipeline.ops())?;
+    let mut ops = Vec::with_capacity(pipeline.ops().len());
+    for (i, op) in pipeline.ops().iter().enumerate() {
+        ops.push(encode_op(op, &format!("ops[{i}]"))?);
+    }
+    Ok(Json::obj(vec![
+        ("version", Json::Num(WIRE_VERSION as f64)),
+        ("kind", Json::str(WIRE_KIND)),
+        ("ops", Json::Arr(ops)),
+    ]))
+}
+
+/// [`encode`] rendered as pretty JSON — what `:save` and `mare plan
+/// --json` emit, and what the golden files under `rust/tests/golden/`
+/// hold.
+pub fn encode_string(pipeline: &Pipeline) -> Result<String, WireError> {
+    Ok(encode(pipeline)?.to_string_pretty())
+}
+
+/// Encode-side twin of the decoder's `req_count`: a plan that encodes
+/// must decode, so zero counts are rejected symmetrically and the
+/// fixed-point guarantee holds for every envelope we ever emit.
+fn check_count(at: &str, field: &'static str, n: usize) -> Result<(), WireError> {
+    if n == 0 {
+        return Err(WireError::BadField { at: at.into(), field, detail: "must be >= 1".into() });
+    }
+    Ok(())
+}
+
+fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
+    Ok(match op {
+        PipelineOp::Ingest { label, partitions } => {
+            check_count(at, "partitions", *partitions)?;
+            Json::obj(vec![
+                ("op", Json::str("ingest")),
+                ("label", Json::str(label.as_str())),
+                ("partitions", Json::Num(*partitions as f64)),
+            ])
+        }
+        PipelineOp::Map(m) => Json::obj(vec![
+            ("op", Json::str("map")),
+            ("image", Json::str(m.image.as_str())),
+            ("command", Json::str(m.command.as_str())),
+            ("input", encode_mount(&m.input_mount)),
+            ("output", encode_mount(&m.output_mount)),
+            ("disk_mounts", Json::Bool(m.disk_mounts)),
+        ]),
+        PipelineOp::Reduce(r) => {
+            if let Some(k) = r.depth {
+                check_count(at, "depth", k)?;
+            }
+            Json::obj(vec![
+                ("op", Json::str("reduce")),
+                ("image", Json::str(r.image.as_str())),
+                ("command", Json::str(r.command.as_str())),
+                ("input", encode_mount(&r.input_mount)),
+                ("output", encode_mount(&r.output_mount)),
+                (
+                    "depth",
+                    match r.depth {
+                        Some(k) => Json::Num(k as f64),
+                        None => Json::str("auto"),
+                    },
+                ),
+                ("disk_mounts", Json::Bool(r.disk_mounts)),
+            ])
+        }
+        PipelineOp::RepartitionBy { key, partitions } => {
+            let name = key.name().ok_or_else(|| WireError::OpaqueKeyFn { at: at.into() })?;
+            check_count(at, "partitions", *partitions)?;
+            Json::obj(vec![
+                ("op", Json::str("repartition_by")),
+                ("key", Json::str(name)),
+                ("partitions", Json::Num(*partitions as f64)),
+            ])
+        }
+        PipelineOp::Repartition { partitions } => {
+            check_count(at, "partitions", *partitions)?;
+            Json::obj(vec![
+                ("op", Json::str("repartition")),
+                ("partitions", Json::Num(*partitions as f64)),
+            ])
+        }
+        PipelineOp::Collect => Json::obj(vec![("op", Json::str("collect"))]),
+    })
+}
+
+fn encode_mount(m: &MountPoint) -> Json {
+    match m {
+        MountPoint::TextFile { path, sep } => Json::obj(vec![
+            ("kind", Json::str("text")),
+            ("path", Json::str(path.as_str())),
+            ("sep", Json::str(sep.as_str())),
+        ]),
+        MountPoint::BinaryFiles { dir } => Json::obj(vec![
+            ("kind", Json::str("binary")),
+            ("dir", Json::str(dir.as_str())),
+        ]),
+        MountPoint::StdStream { sep } => Json::obj(vec![
+            ("kind", Json::str("stream")),
+            ("sep", Json::str(sep.as_str())),
+        ]),
+    }
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Decode a v1 envelope into a [`Pipeline`]. Strict: see [`WireError`].
+pub fn decode(envelope: &Json) -> Result<Pipeline, WireError> {
+    if !matches!(envelope, Json::Obj(_)) {
+        return Err(WireError::NotAnEnvelope(format!(
+            "expected a JSON object, got {envelope}"
+        )));
+    }
+    let version = req(envelope, "envelope", "version")?;
+    let version = version.as_u64().map_err(|e| WireError::BadField {
+        at: "envelope".into(),
+        field: "version",
+        detail: e.to_string(),
+    })?;
+    if version != WIRE_VERSION {
+        return Err(WireError::UnsupportedVersion(version));
+    }
+    if let Some(kind) = envelope.get("kind") {
+        let kind = kind.as_str().map_err(|e| WireError::BadField {
+            at: "envelope".into(),
+            field: "kind",
+            detail: e.to_string(),
+        })?;
+        if kind != WIRE_KIND {
+            return Err(WireError::WrongKind(kind.to_string()));
+        }
+    }
+    // any other envelope key is ignored (forward compatibility)
+    let ops_json = req(envelope, "envelope", "ops")?;
+    let ops_json = ops_json.as_arr().map_err(|e| WireError::BadField {
+        at: "envelope".into(),
+        field: "ops",
+        detail: e.to_string(),
+    })?;
+
+    let mut ops = Vec::with_capacity(ops_json.len());
+    for (i, node) in ops_json.iter().enumerate() {
+        ops.push(decode_op(node, &format!("ops[{i}]"))?);
+    }
+    check_structure(&ops)?;
+    Ok(Pipeline::new(ops))
+}
+
+/// Parse JSON text and [`decode`] it.
+pub fn decode_str(text: &str) -> Result<Pipeline, WireError> {
+    let json = Json::parse(text).map_err(|e| WireError::Syntax(e.to_string()))?;
+    decode(&json)
+}
+
+fn decode_op(node: &Json, at: &str) -> Result<PipelineOp, WireError> {
+    if !matches!(node, Json::Obj(_)) {
+        return Err(WireError::Structure(format!("{at}: node must be a JSON object")));
+    }
+    let op = req_str(node, at, "op")?;
+    match op.as_str() {
+        "ingest" => Ok(PipelineOp::Ingest {
+            label: req_str(node, at, "label")?,
+            partitions: req_count(node, at, "partitions")?,
+        }),
+        "map" => Ok(PipelineOp::Map(MapStep {
+            image: req_str(node, at, "image")?,
+            command: req_str(node, at, "command")?,
+            input_mount: decode_mount(req(node, at, "input")?, &format!("{at}.input"))?,
+            output_mount: decode_mount(req(node, at, "output")?, &format!("{at}.output"))?,
+            disk_mounts: opt_bool(node, at, "disk_mounts", false)?,
+        })),
+        "reduce" => Ok(PipelineOp::Reduce(ReduceStep {
+            image: req_str(node, at, "image")?,
+            command: req_str(node, at, "command")?,
+            input_mount: decode_mount(req(node, at, "input")?, &format!("{at}.input"))?,
+            output_mount: decode_mount(req(node, at, "output")?, &format!("{at}.output"))?,
+            depth: decode_depth(req(node, at, "depth")?, at)?,
+            disk_mounts: opt_bool(node, at, "disk_mounts", false)?,
+        })),
+        "repartition_by" => {
+            let name = req_str(node, at, "key")?;
+            let key = KeySelector::named(&name)
+                .ok_or_else(|| WireError::UnknownKeyFn { at: at.into(), name })?;
+            Ok(PipelineOp::RepartitionBy {
+                key,
+                partitions: req_count(node, at, "partitions")?,
+            })
+        }
+        "repartition" => Ok(PipelineOp::Repartition {
+            partitions: req_count(node, at, "partitions")?,
+        }),
+        "collect" => Ok(PipelineOp::Collect),
+        other => Err(WireError::UnknownOp { at: at.into(), op: other.to_string() }),
+    }
+}
+
+fn decode_mount(mount: &Json, at: &str) -> Result<MountPoint, WireError> {
+    if !matches!(mount, Json::Obj(_)) {
+        return Err(WireError::Structure(format!("{at}: mount must be a JSON object")));
+    }
+    let kind = req_str(mount, at, "kind")?;
+    match kind.as_str() {
+        "text" => Ok(MountPoint::TextFile {
+            path: req_str(mount, at, "path")?,
+            sep: opt_str(mount, at, "sep", "\n")?,
+        }),
+        "binary" => Ok(MountPoint::BinaryFiles { dir: req_str(mount, at, "dir")? }),
+        "stream" => Ok(MountPoint::StdStream { sep: opt_str(mount, at, "sep", "\n")? }),
+        other => Err(WireError::UnknownMountKind { at: at.into(), kind: other.to_string() }),
+    }
+}
+
+/// `"depth"`: a positive integer, or the string `"auto"` for
+/// optimizer-planned depth.
+fn decode_depth(depth: &Json, at: &str) -> Result<Option<usize>, WireError> {
+    match depth {
+        Json::Str(s) if s == "auto" => Ok(None),
+        Json::Num(_) => {
+            let k = depth.as_u64().map_err(|e| WireError::BadField {
+                at: at.into(),
+                field: "depth",
+                detail: e.to_string(),
+            })?;
+            if k == 0 {
+                return Err(WireError::BadField {
+                    at: at.into(),
+                    field: "depth",
+                    detail: "must be >= 1 (or the string \"auto\")".into(),
+                });
+            }
+            Ok(Some(k as usize))
+        }
+        other => Err(WireError::BadField {
+            at: at.into(),
+            field: "depth",
+            detail: format!("expected a positive integer or \"auto\", got {other}"),
+        }),
+    }
+}
+
+// ------------------------------------------------------------- helpers
+
+fn req<'a>(obj: &'a Json, at: &str, field: &'static str) -> Result<&'a Json, WireError> {
+    obj.get(field).ok_or_else(|| WireError::MissingField { at: at.into(), field })
+}
+
+fn req_str(obj: &Json, at: &str, field: &'static str) -> Result<String, WireError> {
+    req(obj, at, field)?
+        .as_str()
+        .map(str::to_string)
+        .map_err(|e| WireError::BadField { at: at.into(), field, detail: e.to_string() })
+}
+
+/// A required partition count: an integer >= 1.
+fn req_count(obj: &Json, at: &str, field: &'static str) -> Result<usize, WireError> {
+    let n = req(obj, at, field)?
+        .as_u64()
+        .map_err(|e| WireError::BadField { at: at.into(), field, detail: e.to_string() })?;
+    if n == 0 {
+        return Err(WireError::BadField {
+            at: at.into(),
+            field,
+            detail: "must be >= 1".into(),
+        });
+    }
+    Ok(n as usize)
+}
+
+fn opt_bool(obj: &Json, at: &str, field: &'static str, default: bool) -> Result<bool, WireError> {
+    match obj.get(field) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .map_err(|e| WireError::BadField { at: at.into(), field, detail: e.to_string() }),
+    }
+}
+
+fn opt_str(
+    obj: &Json,
+    at: &str,
+    field: &'static str,
+    default: &str,
+) -> Result<String, WireError> {
+    match obj.get(field) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .map_err(|e| WireError::BadField { at: at.into(), field, detail: e.to_string() }),
+    }
+}
+
+/// A complete plan is bracketed: exactly one `ingest` (first), exactly
+/// one `collect` (last), computational nodes in between.
+fn check_structure(ops: &[PipelineOp]) -> Result<(), WireError> {
+    if ops.len() < 2 {
+        return Err(WireError::Structure(format!(
+            "a plan needs at least `ingest` and `collect`, got {} node(s)",
+            ops.len()
+        )));
+    }
+    if !matches!(ops.first(), Some(PipelineOp::Ingest { .. })) {
+        return Err(WireError::Structure("the first node must be `ingest`".into()));
+    }
+    if !matches!(ops.last(), Some(PipelineOp::Collect)) {
+        return Err(WireError::Structure("the last node must be `collect`".into()));
+    }
+    for (i, op) in ops.iter().enumerate().take(ops.len() - 1).skip(1) {
+        match op {
+            PipelineOp::Ingest { .. } => {
+                return Err(WireError::Structure(format!(
+                    "ops[{i}]: `ingest` is only allowed as the first node"
+                )));
+            }
+            PipelineOp::Collect => {
+                return Err(WireError::Structure(format!(
+                    "ops[{i}]: `collect` is only allowed as the last node"
+                )));
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::dataset::Record;
+
+    fn text_mount(path: &str) -> MountPoint {
+        MountPoint::text(path)
+    }
+
+    /// The decode error of `text` (panics if decoding succeeds).
+    fn err_of(text: &str) -> WireError {
+        match decode_str(text) {
+            Ok(p) => panic!("expected a decode error, got plan:\n{}", p.describe()),
+            Err(e) => e,
+        }
+    }
+
+    /// One pipeline exercising every node kind and every mount kind.
+    fn kitchen_sink() -> Pipeline {
+        Pipeline::new(vec![
+            PipelineOp::Ingest { label: "gen:gc:64".into(), partitions: 8 },
+            PipelineOp::Map(MapStep {
+                input_mount: MountPoint::text_sep("/in.sdf", "\n$$$$\n"),
+                output_mount: MountPoint::text_sep("/out.sdf", "\n$$$$\n"),
+                image: "mcapuccini/oe:latest".into(),
+                command: "fred -dbase /in.sdf".into(),
+                disk_mounts: true,
+            }),
+            PipelineOp::RepartitionBy {
+                key: KeySelector::named("chromosome").unwrap(),
+                partitions: 3,
+            },
+            PipelineOp::Map(MapStep {
+                input_mount: MountPoint::stream(),
+                output_mount: MountPoint::stream_sep("\t"),
+                image: "ubuntu".into(),
+                command: "grep -o '[GC]' | wc -l".into(),
+                disk_mounts: false,
+            }),
+            PipelineOp::Repartition { partitions: 2 },
+            PipelineOp::Reduce(ReduceStep {
+                input_mount: MountPoint::binary("/in"),
+                output_mount: MountPoint::binary("/out"),
+                image: "opengenomics/vcftools-tools:latest".into(),
+                command: "vcf-concat /in/*.vcf.gz | gzip -c > /out/m.vcf.gz".into(),
+                depth: Some(3),
+                disk_mounts: false,
+            }),
+            PipelineOp::Reduce(ReduceStep {
+                input_mount: text_mount("/counts"),
+                output_mount: text_mount("/sum"),
+                image: "ubuntu".into(),
+                command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+                depth: None,
+                disk_mounts: false,
+            }),
+            PipelineOp::Collect,
+        ])
+    }
+
+    #[test]
+    fn kitchen_sink_roundtrips_losslessly() {
+        let p = kitchen_sink();
+        let encoded = encode(&p).unwrap();
+        let decoded = decode(&encoded).unwrap();
+        // same rendering, same re-encoding: nothing was lost
+        assert_eq!(decoded.describe(), p.describe());
+        assert_eq!(encode(&decoded).unwrap(), encoded);
+        // and through text too
+        let text = encode_string(&p).unwrap();
+        let from_text = decode_str(&text).unwrap();
+        assert_eq!(encode(&from_text).unwrap(), encoded);
+    }
+
+    #[test]
+    fn defaults_are_applied_and_canonicalized() {
+        // sep and disk_mounts omitted -> "\n" and false
+        let text = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "map", "image": "ubuntu", "command": "cat /a > /b",
+             "input": {"kind": "text", "path": "/a"},
+             "output": {"kind": "text", "path": "/b"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        let p = decode_str(text).unwrap();
+        let PipelineOp::Map(m) = &p.ops()[1] else { panic!("expected map") };
+        assert_eq!(m.input_mount, MountPoint::text("/a"));
+        assert!(!m.disk_mounts);
+        // canonical re-encoding carries the defaults explicitly
+        let encoded = encode(&p).unwrap();
+        let node = &encoded.get("ops").unwrap().as_arr().unwrap()[1];
+        assert_eq!(node.get("disk_mounts").unwrap(), &Json::Bool(false));
+        assert_eq!(
+            node.get("input").unwrap().get("sep").unwrap(),
+            &Json::Str("\n".into())
+        );
+    }
+
+    #[test]
+    fn unknown_envelope_keys_are_ignored_unknown_ops_rejected() {
+        let ok = r#"{
+          "version": 1,
+          "kind": "mare/pipeline",
+          "submitted_by": "driver-7",
+          "future_extension": {"x": 1},
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(decode_str(ok).is_ok());
+
+        let bad = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "teleport", "where": "/moon"},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert_eq!(
+            err_of(bad),
+            WireError::UnknownOp { at: "ops[1]".into(), op: "teleport".into() }
+        );
+    }
+
+    #[test]
+    fn unknown_node_fields_are_ignored() {
+        let text = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 2, "hint": "future"},
+            {"op": "repartition", "partitions": 4, "shuffle_codec": "zstd"},
+            {"op": "collect"}
+          ]
+        }"#;
+        let p = decode_str(text).unwrap();
+        assert!(matches!(p.ops()[1], PipelineOp::Repartition { partitions: 4 }));
+    }
+
+    #[test]
+    fn version_and_kind_are_checked() {
+        let v2 = r#"{"version": 2, "ops": []}"#;
+        assert_eq!(err_of(v2), WireError::UnsupportedVersion(2));
+
+        let missing = r#"{"ops": []}"#;
+        assert_eq!(
+            err_of(missing),
+            WireError::MissingField { at: "envelope".into(), field: "version" }
+        );
+
+        let wrong_kind = r#"{"version": 1, "kind": "mare/cluster", "ops": []}"#;
+        assert_eq!(err_of(wrong_kind), WireError::WrongKind("mare/cluster".into()));
+
+        assert!(matches!(err_of("[1, 2]"), WireError::NotAnEnvelope(_)));
+        assert!(matches!(err_of("{nope"), WireError::Syntax(_)));
+    }
+
+    #[test]
+    fn missing_and_malformed_fields_are_typed_errors() {
+        let missing_cmd = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "map", "image": "ubuntu",
+             "input": {"kind": "text", "path": "/a"},
+             "output": {"kind": "text", "path": "/b"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert_eq!(
+            err_of(missing_cmd),
+            WireError::MissingField { at: "ops[1]".into(), field: "command" }
+        );
+
+        let bad_mount = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "map", "image": "ubuntu", "command": "c",
+             "input": {"kind": "quantum", "path": "/a"},
+             "output": {"kind": "text", "path": "/b"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert_eq!(
+            err_of(bad_mount),
+            WireError::UnknownMountKind { at: "ops[1].input".into(), kind: "quantum".into() }
+        );
+
+        let zero_parts = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 0},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(matches!(
+            err_of(zero_parts),
+            WireError::BadField { field: "partitions", .. }
+        ));
+    }
+
+    #[test]
+    fn depth_accepts_auto_and_positive_integers_only() {
+        let plan = |depth: &str| {
+            format!(
+                r#"{{
+                  "version": 1,
+                  "ops": [
+                    {{"op": "ingest", "label": "x", "partitions": 4}},
+                    {{"op": "reduce", "image": "ubuntu", "command": "c",
+                      "input": {{"kind": "text", "path": "/a"}},
+                      "output": {{"kind": "text", "path": "/a"}},
+                      "depth": {depth}}},
+                    {{"op": "collect"}}
+                  ]
+                }}"#
+            )
+        };
+        let auto = decode_str(&plan("\"auto\"")).unwrap();
+        let PipelineOp::Reduce(r) = &auto.ops()[1] else { panic!("expected reduce") };
+        assert_eq!(r.depth, None);
+
+        let pinned = decode_str(&plan("3")).unwrap();
+        let PipelineOp::Reduce(r) = &pinned.ops()[1] else { panic!("expected reduce") };
+        assert_eq!(r.depth, Some(3));
+
+        assert!(matches!(err_of(&plan("0")), WireError::BadField { field: "depth", .. }));
+        assert!(matches!(err_of(&plan("1.5")), WireError::BadField { field: "depth", .. }));
+        assert!(matches!(
+            err_of(&plan("\"deep\"")),
+            WireError::BadField { field: "depth", .. }
+        ));
+    }
+
+    #[test]
+    fn unknown_key_fn_is_rejected_opaque_cannot_encode() {
+        let unknown = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 4},
+            {"op": "repartition_by", "key": "by-zodiac-sign", "partitions": 12},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert_eq!(
+            err_of(unknown),
+            WireError::UnknownKeyFn { at: "ops[1]".into(), name: "by-zodiac-sign".into() }
+        );
+
+        let opaque = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "x".into(), partitions: 2 },
+            PipelineOp::RepartitionBy {
+                key: KeySelector::opaque(Arc::new(|_: &Record| "k".into())),
+                partitions: 2,
+            },
+            PipelineOp::Collect,
+        ]);
+        assert_eq!(encode(&opaque), Err(WireError::OpaqueKeyFn { at: "ops[1]".into() }));
+    }
+
+    #[test]
+    fn encode_rejects_what_decode_would_reject() {
+        // a directly built IR with zero counts must fail at encode with
+        // the same typed error decode gives — every emitted envelope
+        // is guaranteed decodable
+        let zero_ingest = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "x".into(), partitions: 0 },
+            PipelineOp::Collect,
+        ]);
+        assert!(matches!(
+            encode(&zero_ingest),
+            Err(WireError::BadField { field: "partitions", .. })
+        ));
+
+        let zero_depth = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "x".into(), partitions: 2 },
+            PipelineOp::Reduce(ReduceStep {
+                input_mount: MountPoint::text("/a"),
+                output_mount: MountPoint::text("/a"),
+                image: "ubuntu".into(),
+                command: "c".into(),
+                depth: Some(0),
+                disk_mounts: false,
+            }),
+            PipelineOp::Collect,
+        ]);
+        assert!(matches!(
+            encode(&zero_depth),
+            Err(WireError::BadField { field: "depth", .. })
+        ));
+    }
+
+    #[test]
+    fn structure_is_enforced_on_both_sides() {
+        let no_collect = r#"{
+          "version": 1,
+          "ops": [{"op": "ingest", "label": "x", "partitions": 1}]
+        }"#;
+        assert!(matches!(err_of(no_collect), WireError::Structure(_)));
+
+        let ingest_not_first = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "repartition", "partitions": 2},
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(matches!(err_of(ingest_not_first), WireError::Structure(_)));
+
+        let ingest_mid = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 1},
+            {"op": "ingest", "label": "y", "partitions": 1},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(matches!(err_of(ingest_mid), WireError::Structure(_)));
+
+        // encode refuses unbracketed pipelines too
+        let bare = Pipeline::new(vec![PipelineOp::Repartition { partitions: 2 }]);
+        assert!(matches!(encode(&bare), Err(WireError::Structure(_))));
+    }
+
+    #[test]
+    fn errors_display_helpfully() {
+        let e = WireError::UnknownOp { at: "ops[3]".into(), op: "warp".into() };
+        assert_eq!(e.to_string(), "ops[3]: unknown node kind `warp`");
+        let e = WireError::UnsupportedVersion(9);
+        assert!(e.to_string().contains("version 9"), "{e}");
+        assert!(e.to_string().contains("version 1"), "{e}");
+        let e = WireError::UnknownKeyFn { at: "ops[1]".into(), name: "zz".into() };
+        assert!(e.to_string().contains("chromosome"), "{e}");
+    }
+}

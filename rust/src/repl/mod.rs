@@ -23,7 +23,8 @@ use std::sync::Arc;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::{Dataset, Record};
 use crate::error::{MareError, Result};
-use crate::mare::{Job, MaRe, MountPoint, PipelineBuilder};
+use crate::mare::{wire, Job, MaRe, MountPoint, Pipeline, PipelineBuilder, PipelineOp};
+use crate::submit::{ingest_of, SourceSpec};
 
 const HELP: &str = "\
 commands:
@@ -38,6 +39,9 @@ commands:
   plan                      show logical -> optimized -> physical plans
   run                       execute; print report + first records
   collect                   execute; print all text records
+  :save <file>              persist the pipeline as wire JSON (docs/WIRE_FORMAT.md);
+                            submit it later with `mare submit <file>`
+  :load <file>              restore a saved plan (regenerates gen:/inline: sources)
   reset                     drop the pipeline, keep the dataset
   status                    cluster + pipeline summary
   help                      this text
@@ -101,6 +105,8 @@ impl Session {
             "plan" => self.cmd_plan(),
             "run" => self.cmd_run(false),
             "collect" => self.cmd_run(true),
+            ":save" => self.cmd_save(rest),
+            ":load" => self.cmd_load_plan(rest),
             "reset" => {
                 match self.dataset.clone() {
                     Some(ds) => {
@@ -156,27 +162,17 @@ impl Session {
             .unwrap_or("256")
             .parse()
             .map_err(|_| MareError::Config("gen wants a count".into()))?;
-        let (ds, what) = match kind {
-            "gc" => (
-                Dataset::parallelize_text(
-                    &crate::workloads::gc::genome_text(42, n, 80),
-                    "\n",
-                    self.partitions,
-                ),
-                format!("genome, {n} lines"),
-            ),
-            "vs" => (
-                Dataset::parallelize_text(
-                    &crate::workloads::genlib::library_sdf(42, n),
-                    crate::workloads::vs::SDF_SEP,
-                    self.partitions,
-                ),
-                format!("SDF library, {n} molecules"),
-            ),
+        // sessions generate through SourceSpec — the same path `mare
+        // work` and `:load` use — so a `:save`d plan regenerates
+        // byte-identical records on any driver
+        let (spec, what) = match kind {
+            "gc" => (SourceSpec::GenGc { lines: n }, format!("genome, {n} lines")),
+            "vs" => (SourceSpec::GenVs { molecules: n }, format!("SDF library, {n} molecules")),
             other => {
                 return Err(MareError::Config(format!("gen gc|vs, not `{other}`")))
             }
         };
+        let ds = spec.materialize(self.partitions)?;
         let parts = ds.num_partitions();
         self.set_dataset(ds);
         Ok(format!("loaded {what} in {parts} partitions"))
@@ -186,10 +182,66 @@ impl Session {
         if rest.is_empty() {
             return Err(MareError::Config("load wants text".into()));
         }
-        let ds = Dataset::parallelize_text(rest, "\n", self.partitions.min(4));
+        let ds = Dataset::parallelize_text_labeled(
+            rest,
+            "\n",
+            self.partitions.min(4),
+            format!("inline:{rest}"),
+        );
         let parts = ds.num_partitions();
         self.set_dataset(ds);
         Ok(format!("loaded inline text in {parts} partitions"))
+    }
+
+    /// `:save <file>` — persist the recorded pipeline (bracketed with
+    /// its `collect` marker) as a v1 wire envelope.
+    fn cmd_save(&self, rest: &str) -> Result<String> {
+        let path = rest.trim();
+        if path.is_empty() {
+            return Err(MareError::Config(":save wants a file path".into()));
+        }
+        let b = self.builder.as_ref().ok_or_else(|| {
+            MareError::Config("no dataset loaded (try `gen gc 512`)".into())
+        })?;
+        let mut ops = b.logical().ops().to_vec();
+        ops.push(PipelineOp::Collect);
+        let text = wire::encode_string(&Pipeline::new(ops))?;
+        std::fs::write(path, text)?;
+        Ok(format!("saved plan to {path} (submit with `mare submit {path}`)"))
+    }
+
+    /// `:load <file>` — restore a saved plan. `gen:`/`inline:` sources
+    /// are regenerated; other sources need a dataset loaded first.
+    fn cmd_load_plan(&mut self, rest: &str) -> Result<String> {
+        let path = rest.trim();
+        if path.is_empty() {
+            return Err(MareError::Config(":load wants a file path".into()));
+        }
+        let text = std::fs::read_to_string(path)?;
+        let pipeline = wire::decode_str(&text)?;
+        let (label, partitions) = ingest_of(&pipeline)?;
+        let spec = SourceSpec::parse(&label);
+        if spec.is_executable() {
+            self.set_dataset(spec.materialize(partitions)?);
+        } else {
+            match self.dataset.clone() {
+                // keep the current dataset, apply the plan's steps to it
+                Some(ds) => self.set_dataset(ds),
+                None => {
+                    return Err(MareError::Config(format!(
+                        "plan source `{label}` is not resolvable — load a dataset first \
+                         (`gen`/`load`), then `:load` applies the plan's steps to it"
+                    )))
+                }
+            }
+        }
+        let b = self
+            .builder
+            .take()
+            .expect("set_dataset installs a builder")
+            .append_pipeline(&pipeline);
+        self.builder = Some(b);
+        Ok(format!("loaded plan from {path} | {}", self.pipeline_summary()))
     }
 
     fn parse_mount(spec: &str) -> MountPoint {
@@ -403,6 +455,39 @@ mod tests {
             .eval("map ubuntu /dna /out :: cat /dna > /out")
             .unwrap()
             .contains("+map"));
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_a_session_plan() {
+        let path = std::env::temp_dir()
+            .join(format!("mare-repl-plan-{}.json", std::process::id()));
+        let path_s = path.to_string_lossy().to_string();
+
+        let mut s = session();
+        s.eval("gen gc 32").unwrap();
+        s.eval("map ubuntu /dna /count :: grep -o '[GC]' /dna | wc -l > /count").unwrap();
+        s.eval("reduce ubuntu /counts /sum 2 :: awk '{s+=$1} END {print s}' /counts > /sum")
+            .unwrap();
+        let plan_before = s.eval("plan").unwrap();
+        let run_before = s.eval("run").unwrap();
+        assert!(s.eval(&format!(":save {path_s}")).unwrap().contains("saved"), "{path_s}");
+
+        // a FRESH session restores plan AND regenerated source
+        let mut s2 = session();
+        assert!(s2.eval(&format!(":load {path_s}")).unwrap().contains("loaded"));
+        assert_eq!(s2.eval("plan").unwrap(), plan_before);
+        let run_after = s2.eval("run").unwrap();
+        let result_of = |s: &str| s.split("records:").nth(1).map(str::to_string);
+        assert_eq!(result_of(&run_after), result_of(&run_before));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_without_dataset_and_load_of_missing_file_error() {
+        let mut s = session();
+        assert!(s.eval(":save /tmp/x.json").unwrap_err().to_string().contains("no dataset"));
+        assert!(s.eval(":save").unwrap_err().to_string().contains("file path"));
+        assert!(s.eval(":load /no/such/mare-plan.json").is_err());
     }
 
     #[test]

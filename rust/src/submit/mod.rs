@@ -1,0 +1,387 @@
+//! Job submission: encoded plans as first-class, shippable jobs.
+//!
+//! PR 1 made the logical plan an engine-agnostic value; [`crate::mare::wire`]
+//! made it a portable artifact. This module is the production-scale step
+//! the ROADMAP called for on top of those two: a [`JobQueue`] (file-backed
+//! spool shared by `mare submit` / `mare jobs` / `mare work`), a
+//! [`Submitter`] doing admission control (decode → dry-run `build()` →
+//! canonicalize → enqueue), and a multi-driver simulation ([`sim`])
+//! demonstrating that a plan built on one driver executes *identically*
+//! on any other — byte-identical `Job::explain()` physical plans and
+//! equal container-launch counters.
+//!
+//! Sources travel by *label*: the plan's `ingest` node carries a label
+//! that every driver resolves with [`SourceSpec`] (`gen:gc:<lines>`,
+//! `gen:vs:<molecules>`, `gen:snp:<chromosome_bp>`, `inline:<text>`),
+//! regenerating identical records from a pinned seed. Labels outside that grammar (e.g.
+//! `hdfs://genome.txt`) still validate and enqueue, but only drivers
+//! that can reach the named storage may execute them.
+//!
+//! ```
+//! use mare::cluster::ClusterConfig;
+//! use mare::submit::{sim::Driver, SourceSpec, Submitter};
+//!
+//! let plan = r#"{
+//!   "version": 1,
+//!   "ops": [
+//!     {"op": "ingest", "label": "gen:gc:16", "partitions": 2},
+//!     {"op": "map", "image": "ubuntu",
+//!      "command": "grep -o '[GC]' /dna | wc -l > /count",
+//!      "input": {"kind": "text", "path": "/dna"},
+//!      "output": {"kind": "text", "path": "/count"}},
+//!     {"op": "collect"}
+//!   ]
+//! }"#;
+//! // admission control: decode + dry-run build, nothing executes
+//! let submitter = Submitter::new(ClusterConfig::sized(2, 2));
+//! let validated = submitter.validate(plan).unwrap();
+//! assert!(validated.executable);
+//!
+//! // any driver rebuilds and runs the same job
+//! let driver = Driver::new("driver-0", ClusterConfig::sized(2, 2));
+//! let run = driver.execute(&validated.envelope).unwrap();
+//! assert!(run.launches > 0);
+//! assert!(SourceSpec::parse("gen:gc:16").is_executable());
+//! ```
+
+pub mod queue;
+pub mod sim;
+
+pub use queue::{JobQueue, JobRecord, JobResult, JobStatus};
+pub use sim::{crosscheck, drain, Driver, Executed};
+
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::dataset::Dataset;
+use crate::error::{MareError, Result};
+use crate::mare::{wire, MaRe, Pipeline, PipelineOp};
+use crate::util::json::Json;
+
+/// Seed for regenerated `gen:` sources — pinned so every driver
+/// materializes byte-identical records (same default as the CLI).
+pub const GEN_SEED: u64 = 42;
+
+/// How a submitted plan's `ingest` label materializes into records on
+/// the executing driver.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SourceSpec {
+    /// `gen:gc:<lines>` — synthetic genome ([`crate::workloads::gc`]).
+    GenGc { lines: usize },
+    /// `gen:vs:<molecules>` — synthetic SDF library.
+    GenVs { molecules: usize },
+    /// `gen:snp:<chromosome_bp>` — synthetic FASTQ reads over the
+    /// standard 8-chromosome simulated individual
+    /// ([`crate::workloads::genreads`]).
+    GenSnp { chromosome_bp: usize },
+    /// `inline:<text>` — the records travel in the label itself.
+    Inline { text: String },
+    /// Anything else (e.g. `hdfs://genome.txt`): validate-only here.
+    Opaque { label: String },
+}
+
+impl SourceSpec {
+    /// Parse an `ingest` label. Never fails — unresolvable labels
+    /// become [`SourceSpec::Opaque`].
+    pub fn parse(label: &str) -> SourceSpec {
+        if let Some(rest) = label.strip_prefix("gen:gc:") {
+            if let Ok(lines) = rest.parse::<usize>() {
+                return SourceSpec::GenGc { lines };
+            }
+        }
+        if let Some(rest) = label.strip_prefix("gen:vs:") {
+            if let Ok(molecules) = rest.parse::<usize>() {
+                return SourceSpec::GenVs { molecules };
+            }
+        }
+        if let Some(rest) = label.strip_prefix("gen:snp:") {
+            if let Ok(chromosome_bp) = rest.parse::<usize>() {
+                return SourceSpec::GenSnp { chromosome_bp };
+            }
+        }
+        if let Some(text) = label.strip_prefix("inline:") {
+            return SourceSpec::Inline { text: text.to_string() };
+        }
+        SourceSpec::Opaque { label: label.to_string() }
+    }
+
+    /// Whether [`Self::materialize`] can succeed on any driver.
+    pub fn is_executable(&self) -> bool {
+        !matches!(self, SourceSpec::Opaque { .. })
+    }
+
+    /// The canonical label this spec round-trips through.
+    pub fn label(&self) -> String {
+        match self {
+            SourceSpec::GenGc { lines } => format!("gen:gc:{lines}"),
+            SourceSpec::GenVs { molecules } => format!("gen:vs:{molecules}"),
+            SourceSpec::GenSnp { chromosome_bp } => format!("gen:snp:{chromosome_bp}"),
+            SourceSpec::Inline { text } => format!("inline:{text}"),
+            SourceSpec::Opaque { label } => label.clone(),
+        }
+    }
+
+    /// Materialize the dataset AND the reference genome the source
+    /// implies (if any) from ONE generation pass — `gen:snp:` derives
+    /// both from a single simulated individual instead of running the
+    /// read simulation twice.
+    pub fn materialize_with_reference(
+        &self,
+        partitions: usize,
+    ) -> Result<(Dataset, Option<crate::formats::fasta::Reference>)> {
+        match self {
+            SourceSpec::GenSnp { .. } => {
+                let (fastq, individual) =
+                    crate::workloads::genreads::reads_fastq(&self.snp_sim());
+                Ok((
+                    Self::fastq_dataset(&fastq, partitions, self.label())?,
+                    Some(individual.reference),
+                ))
+            }
+            _ => Ok((self.materialize(partitions)?, None)),
+        }
+    }
+
+    /// Deterministically regenerate the source dataset ([`GEN_SEED`] is
+    /// pinned, so every driver sees identical partitions).
+    pub fn materialize(&self, partitions: usize) -> Result<Dataset> {
+        match self {
+            SourceSpec::GenGc { lines } => Ok(Dataset::parallelize_text_labeled(
+                &crate::workloads::gc::genome_text(GEN_SEED, *lines, 80),
+                "\n",
+                partitions,
+                self.label(),
+            )),
+            SourceSpec::GenVs { molecules } => Ok(Dataset::parallelize_text_labeled(
+                &crate::workloads::genlib::library_sdf(GEN_SEED, *molecules),
+                crate::workloads::vs::SDF_SEP,
+                partitions,
+                self.label(),
+            )),
+            SourceSpec::GenSnp { .. } => {
+                let (fastq, _) = crate::workloads::genreads::reads_fastq(&self.snp_sim());
+                Self::fastq_dataset(&fastq, partitions, self.label())
+            }
+            SourceSpec::Inline { text } => {
+                Ok(Dataset::parallelize_text_labeled(text, "\n", partitions, self.label()))
+            }
+            SourceSpec::Opaque { label } => Err(MareError::Submit(format!(
+                "source `{label}` is not resolvable on this driver (executable labels: \
+                 gen:gc:<lines>, gen:vs:<molecules>, gen:snp:<chromosome_bp>, inline:<text>)"
+            ))),
+        }
+    }
+
+    /// A placeholder dataset with the declared partition count — enough
+    /// for a dry-run `build()` (validation + optimizer), never executed.
+    pub fn stub(&self, partitions: usize) -> Dataset {
+        Dataset::parallelize_text_labeled("stub", "\n", partitions, self.label())
+    }
+
+    /// The reference genome the executing cluster must bake into its
+    /// alignment image, for sources that imply one (`gen:snp:`). The
+    /// reference regenerates from the same pinned seed as the reads,
+    /// so every driver aligns against identical bytes.
+    pub fn reference(&self) -> Option<crate::formats::fasta::Reference> {
+        match self {
+            SourceSpec::GenSnp { .. } => {
+                let (_, individual) = crate::workloads::genreads::reads_fastq(&self.snp_sim());
+                Some(individual.reference)
+            }
+            _ => None,
+        }
+    }
+
+    /// Records are whole 4-line reads, like the driver's FASTQ-aware
+    /// ingestion (line-splitting would break them).
+    fn fastq_dataset(fastq: &str, partitions: usize, label: String) -> Result<Dataset> {
+        let reads = crate::formats::fastq::parse_many(fastq)?;
+        let records: Vec<crate::dataset::Record> = reads
+            .iter()
+            .map(|r| crate::dataset::Record::text(r.to_fastq().trim_end().to_string()))
+            .collect();
+        Ok(Dataset::parallelize_labeled(records, partitions, label))
+    }
+
+    /// The one simulation config both the reads and the reference of a
+    /// `gen:snp:` source derive from.
+    fn snp_sim(&self) -> crate::workloads::genreads::ReadSimConfig {
+        let chromosome_bp = match self {
+            SourceSpec::GenSnp { chromosome_bp } => *chromosome_bp,
+            _ => unreachable!("snp_sim is only called for GenSnp sources"),
+        };
+        crate::workloads::genreads::ReadSimConfig {
+            seed: GEN_SEED,
+            chromosomes: 8,
+            chromosome_len: chromosome_bp.max(500),
+            ..Default::default()
+        }
+    }
+}
+
+/// The plan's `ingest` node — first op, guaranteed by the wire codec's
+/// structure rules.
+pub fn ingest_of(pipeline: &Pipeline) -> Result<(String, usize)> {
+    match pipeline.ops().first() {
+        Some(PipelineOp::Ingest { label, partitions }) => Ok((label.clone(), *partitions)),
+        _ => Err(MareError::Submit("plan has no ingest node".into())),
+    }
+}
+
+/// A decoded, validated, canonicalized plan — what admission control
+/// hands to the queue.
+pub struct ValidatedPlan {
+    /// The decoded logical plan.
+    pub pipeline: Pipeline,
+    /// Canonical v1 re-encoding (what gets enqueued; unknown envelope
+    /// keys from the submission are dropped here).
+    pub envelope: Json,
+    /// `ingest[..] -> ... -> collect` one-liner.
+    pub summary: String,
+    /// What the optimizer would rewrite.
+    pub opt_summary: String,
+    /// Whether `mare work` drivers can materialize the source.
+    pub executable: bool,
+}
+
+/// Admission control for `mare submit`: decode → dry-run `build()`
+/// (whole-job validation + optimizer passes) → canonical re-encode.
+/// Nothing executes; bad plans are rejected before they reach the
+/// queue, with the builder's full error list.
+pub struct Submitter {
+    cluster: Arc<Cluster>,
+}
+
+impl Submitter {
+    pub fn new(config: ClusterConfig) -> Submitter {
+        // validation never executes containers, so no artifact runtime;
+        // the cluster still comes from the one assembly path `mare run`
+        // uses (workloads::make_cluster)
+        let cluster = crate::workloads::make_cluster(config, None, None)
+            .expect("a cluster without a runtime always constructs");
+        Submitter { cluster }
+    }
+
+    /// Decode and dry-run-build `text` without enqueueing it.
+    pub fn validate(&self, text: &str) -> Result<ValidatedPlan> {
+        let pipeline = wire::decode_str(text)?;
+        let (label, partitions) = ingest_of(&pipeline)?;
+        let spec = SourceSpec::parse(&label);
+        // validation is data-independent: build() only needs the
+        // partition count, so admission stays O(1) in source size —
+        // drivers materialize the real records at execution time
+        let source = spec.stub(partitions);
+        let job = MaRe::source(self.cluster.clone(), source)
+            .append_pipeline(&pipeline)
+            .build()?;
+        let summary =
+            pipeline.ops().iter().map(|o| o.label()).collect::<Vec<_>>().join(" -> ");
+        Ok(ValidatedPlan {
+            envelope: wire::encode(&pipeline)?,
+            pipeline,
+            summary,
+            opt_summary: job.opt_report().summary(),
+            executable: spec.is_executable(),
+        })
+    }
+
+    /// Validate then enqueue. Returns the assigned job id.
+    pub fn submit(&self, queue: &JobQueue, text: &str) -> Result<(u64, ValidatedPlan)> {
+        let plan = self.validate(text)?;
+        let id = queue.submit(plan.envelope.clone(), plan.summary.clone())?;
+        Ok((id, plan))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_specs_parse_and_roundtrip_labels() {
+        assert_eq!(SourceSpec::parse("gen:gc:64"), SourceSpec::GenGc { lines: 64 });
+        assert_eq!(SourceSpec::parse("gen:vs:8"), SourceSpec::GenVs { molecules: 8 });
+        assert_eq!(
+            SourceSpec::parse("gen:snp:500"),
+            SourceSpec::GenSnp { chromosome_bp: 500 }
+        );
+        assert_eq!(
+            SourceSpec::parse("inline:ACGT\nGGCC"),
+            SourceSpec::Inline { text: "ACGT\nGGCC".into() }
+        );
+        assert_eq!(
+            SourceSpec::parse("hdfs://genome.txt"),
+            SourceSpec::Opaque { label: "hdfs://genome.txt".into() }
+        );
+        // malformed counts degrade to opaque, not panic
+        assert!(matches!(SourceSpec::parse("gen:gc:lots"), SourceSpec::Opaque { .. }));
+
+        for label in ["gen:gc:64", "gen:vs:8", "gen:snp:500", "inline:ACGT", "swift://x"] {
+            assert_eq!(SourceSpec::parse(label).label(), label);
+        }
+    }
+
+    #[test]
+    fn materialized_sources_are_deterministic() {
+        let a = SourceSpec::parse("gen:gc:32").materialize(4).unwrap();
+        let b = SourceSpec::parse("gen:gc:32").materialize(4).unwrap();
+        assert_eq!(a.num_partitions(), 4);
+        assert_eq!(a.describe(), b.describe());
+        assert!(SourceSpec::parse("nope://x").materialize(2).is_err());
+
+        // snp sources carry the matching reference genome; others don't
+        assert!(SourceSpec::parse("gen:snp:500").reference().is_some());
+        assert!(SourceSpec::parse("gen:gc:8").reference().is_none());
+
+        // snp sources are whole 4-line FASTQ reads, not lines
+        let reads = SourceSpec::parse("gen:snp:500").materialize(2).unwrap();
+        assert_eq!(reads.num_partitions(), 2);
+        match reads.plan().as_ref() {
+            crate::dataset::Plan::Source { partitions, .. } => {
+                let r = partitions
+                    .iter()
+                    .flat_map(|p| p.records.iter())
+                    .next()
+                    .expect("generated reads");
+                let text = r.as_text().unwrap();
+                assert!(text.starts_with('@'), "{text}");
+                assert_eq!(text.lines().count(), 4, "{text}");
+            }
+            _ => panic!("expected a source plan"),
+        }
+    }
+
+    #[test]
+    fn submitter_accepts_good_plans_and_rejects_bad_ones() {
+        let submitter = Submitter::new(crate::cluster::ClusterConfig::sized(2, 2));
+        let good = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "gen:gc:16", "partitions": 2},
+            {"op": "map", "image": "ubuntu", "command": "wc -l /in > /out",
+             "input": {"kind": "text", "path": "/in"},
+             "output": {"kind": "text", "path": "/out"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        let v = submitter.validate(good).unwrap();
+        assert!(v.executable);
+        assert!(v.summary.contains("ingest[gen:gc:16]"), "{}", v.summary);
+        assert!(v.summary.ends_with("collect"), "{}", v.summary);
+
+        // wire-level rejection: unknown node kind
+        let unknown_op = good.replace("\"op\": \"map\"", "\"op\": \"teleport\"");
+        let err = submitter.validate(&unknown_op).unwrap_err().to_string();
+        assert!(err.contains("unknown node kind"), "{err}");
+
+        // builder-level rejection: empty image
+        let empty_image = good.replace("\"image\": \"ubuntu\"", "\"image\": \"\"");
+        let err = submitter.validate(&empty_image).unwrap_err().to_string();
+        assert!(err.contains("image must not be empty"), "{err}");
+
+        // opaque sources validate (against a stub) but are not executable
+        let opaque = good.replace("gen:gc:16", "hdfs://genome.txt");
+        let v = submitter.validate(&opaque).unwrap();
+        assert!(!v.executable);
+    }
+}

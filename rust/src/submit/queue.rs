@@ -1,0 +1,468 @@
+//! File-backed job queue: one spool directory, one JSON file per job.
+//!
+//! `mare submit` writes `job-NNNNNN.json` files holding the canonical
+//! v1 plan envelope plus queue state; `mare jobs` lists them; `mare
+//! work` (or any driver — the files are the coordination point, there
+//! is no daemon) claims queued jobs FIFO and records outcomes. The
+//! spool schema is documented alongside the plan envelope in
+//! `docs/WIRE_FORMAT.md`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{MareError, Result};
+use crate::util::json::Json;
+
+/// Claim holds older than this are presumed abandoned by a dead worker
+/// (live claims last milliseconds) and are swept back into the queue
+/// on [`JobQueue::open`].
+const STALE_CLAIM_SECS: u64 = 10;
+
+/// Queue lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        match s {
+            "queued" => Ok(JobStatus::Queued),
+            "running" => Ok(JobStatus::Running),
+            "done" => Ok(JobStatus::Done),
+            "failed" => Ok(JobStatus::Failed),
+            other => Err(MareError::Submit(format!("unknown job status `{other}`"))),
+        }
+    }
+}
+
+/// Execution outcome recorded by the driver that ran the job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Name of the executing driver.
+    pub driver: String,
+    /// Simulated container launches the job performed.
+    pub launches: u64,
+    /// Records in the collected output.
+    pub records: u64,
+    /// `ok`, or the error that failed the job.
+    pub detail: String,
+}
+
+/// One spool entry: a plan plus its queue state.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: u64,
+    pub status: JobStatus,
+    /// `ingest[..] -> ... -> collect` summary (display only).
+    pub summary: String,
+    /// The canonical v1 plan envelope, exactly as admitted.
+    pub plan: Json,
+    /// Present once a driver has executed (or failed) the job.
+    pub result: Option<JobResult>,
+}
+
+impl JobRecord {
+    pub fn to_json(&self) -> Json {
+        let result = match &self.result {
+            Some(r) => Json::obj(vec![
+                ("driver", Json::str(r.driver.as_str())),
+                ("launches", Json::Num(r.launches as f64)),
+                ("records", Json::Num(r.records as f64)),
+                ("detail", Json::str(r.detail.as_str())),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("status", Json::str(self.status.name())),
+            ("summary", Json::str(self.summary.as_str())),
+            ("plan", self.plan.clone()),
+            ("result", result),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<JobRecord> {
+        let result = match json.get("result") {
+            None | Some(Json::Null) => None,
+            Some(r) => Some(JobResult {
+                driver: r.req("driver")?.as_str()?.to_string(),
+                launches: r.req("launches")?.as_u64()?,
+                records: r.req("records")?.as_u64()?,
+                detail: r.req("detail")?.as_str()?.to_string(),
+            }),
+        };
+        Ok(JobRecord {
+            id: json.req("id")?.as_u64()?,
+            status: JobStatus::parse(json.req("status")?.as_str()?)?,
+            summary: json.req("summary")?.as_str()?.to_string(),
+            plan: json.req("plan")?.clone(),
+            result,
+        })
+    }
+}
+
+/// The spool directory. Opening creates it and sweeps stale claim
+/// holds (left by crashed workers) back into the queue; every
+/// operation re-reads the files, so concurrent CLI invocations and
+/// multiple drivers share one queue.
+pub struct JobQueue {
+    dir: PathBuf,
+}
+
+impl JobQueue {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<JobQueue> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let queue = JobQueue { dir };
+        queue.recover_stale_claims()?;
+        Ok(queue)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id:06}.json"))
+    }
+
+    /// Claim holds are transient (they live for the few file ops inside
+    /// one [`Self::claim`] call); a hold that is still present — and
+    /// has AGED well past any live claim — when a process opens the
+    /// queue belongs to a dead worker. Sweep it back so the job is
+    /// claimable again rather than silently lost. The age gate keeps a
+    /// fresh `open()` from yanking an in-flight claim out from under a
+    /// live worker; if a holder is merely slower than the gate, the
+    /// job may execute twice — recoverable — while silent loss is not.
+    fn recover_stale_claims(&self) -> Result<()> {
+        self.recover_claims_older_than(STALE_CLAIM_SECS)
+    }
+
+    fn recover_claims_older_than(&self, min_age_secs: u64) -> Result<()> {
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy().to_string();
+            let Some(stem) = name.strip_suffix(".claim") else {
+                continue;
+            };
+            let age_secs = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .map(|d| d.as_secs());
+            // unreadable age counts as fresh: never sweep a hold we
+            // cannot prove stale
+            if age_secs.map(|a| a >= min_age_secs).unwrap_or(false) {
+                let _ = fs::rename(entry.path(), self.dir.join(stem));
+            }
+        }
+        Ok(())
+    }
+
+    /// Highest id present in the spool under ANY state — canonical,
+    /// reservation marker, claim hold, or temp — so ids are never
+    /// reused while a job's file is temporarily renamed aside.
+    fn max_spool_id(&self) -> Result<u64> {
+        let mut max = 0;
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix("job-") {
+                let digits: String =
+                    rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                if let Ok(id) = digits.parse::<u64>() {
+                    max = max.max(id);
+                }
+            }
+        }
+        Ok(max)
+    }
+
+    /// All jobs, sorted by id.
+    pub fn list(&self) -> Result<Vec<JobRecord>> {
+        let mut jobs = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if !(name.starts_with("job-") && name.ends_with(".json")) {
+                continue;
+            }
+            let text = match fs::read_to_string(entry.path()) {
+                Ok(text) => text,
+                // renamed away by a concurrent claimer between read_dir
+                // and here — the job is held, not gone; skip it
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            };
+            if text.trim().is_empty() {
+                continue; // reservation marker: a submit() in progress
+            }
+            let json = Json::parse(&text)
+                .map_err(|e| MareError::Submit(format!("spool file {name}: {e}")))?;
+            jobs.push(JobRecord::from_json(&json)?);
+        }
+        jobs.sort_by_key(|j| j.id);
+        Ok(jobs)
+    }
+
+    pub fn get(&self, id: u64) -> Result<JobRecord> {
+        let text = fs::read_to_string(self.path_of(id))
+            .map_err(|e| MareError::Submit(format!("job {id}: {e}")))?;
+        let json = Json::parse(&text)?;
+        JobRecord::from_json(&json)
+    }
+
+    /// Enqueue a validated plan; returns the assigned id.
+    ///
+    /// The id is reserved by atomically creating an empty canonical
+    /// file (`create_new`; losers bump and retry — ids count files in
+    /// ANY spool state, so a job held aside by a claimer keeps its id
+    /// reserved). The content then lands via the atomic temp+rename in
+    /// [`Self::write`], so readers see either the empty marker (which
+    /// [`Self::list`] skips) or complete JSON — never a partial file.
+    pub fn submit(&self, plan: Json, summary: String) -> Result<u64> {
+        let mut id = self.max_spool_id()? + 1;
+        loop {
+            match fs::OpenOptions::new().write(true).create_new(true).open(self.path_of(id)) {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => id += 1,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let rec = JobRecord { id, status: JobStatus::Queued, summary, plan, result: None };
+        self.write(&rec)?;
+        Ok(id)
+    }
+
+    /// Persist a record atomically: the full content goes to a temp
+    /// file that is renamed over the canonical path, so concurrent
+    /// readers never observe truncated or partial JSON.
+    pub fn write(&self, rec: &JobRecord) -> Result<()> {
+        let tmp = self.dir.join(format!("job-{:06}.json.tmp", rec.id));
+        fs::write(&tmp, rec.to_json().to_string_pretty())?;
+        fs::rename(&tmp, self.path_of(rec.id))?;
+        Ok(())
+    }
+
+    /// Claim the lowest-id queued job (FIFO), marking it running.
+    ///
+    /// The claim is a rename: exactly one claimant wins moving the
+    /// spool file aside, so concurrent workers (processes included)
+    /// never execute the same job twice. Losers skip to the next
+    /// queued candidate; any failure under the hold restores the file
+    /// instead of stranding the job.
+    pub fn claim(&self) -> Result<Option<JobRecord>> {
+        for candidate in self.list()? {
+            if candidate.status != JobStatus::Queued {
+                continue;
+            }
+            let path = self.path_of(candidate.id);
+            let hold = path.with_extension("json.claim");
+            if fs::rename(&path, &hold).is_err() {
+                continue; // another worker claimed it first
+            }
+            // the rename is the lock; the held file is authoritative
+            let text = match fs::read_to_string(&hold) {
+                Ok(text) => text,
+                // hold vanished: a recovering peer swept it back; retry
+                Err(_) => continue,
+            };
+            // re-stamp the hold: rename preserves the submit-time
+            // mtime, which would make any not-freshly-submitted job
+            // look instantly "stale" to a racing open(); rewriting
+            // pins the age gate to the CLAIM instant. (Sweepers only
+            // rename holds, never read them, so this plain write
+            // cannot be partially observed.)
+            let _ = fs::write(&hold, &text);
+            let mut job = match Json::parse(&text).and_then(|j| JobRecord::from_json(&j)) {
+                Ok(job) => job,
+                Err(e) => {
+                    let _ = fs::rename(&hold, &path);
+                    return Err(e);
+                }
+            };
+            if job.status != JobStatus::Queued {
+                fs::rename(&hold, &path)?;
+                continue;
+            }
+            job.status = JobStatus::Running;
+            // commit by renames only: the Running record lands in the
+            // hold atomically (temp+rename), then the hold moves back
+            // to the canonical path, consuming it. After the commit no
+            // hold exists, so a stale-claim sweep can never resurrect
+            // the Queued copy over a committed Running record. (A
+            // sweep racing the *middle* of this claim can re-queue the
+            // job and at worst run it twice — the documented recovery
+            // tradeoff; it can no longer corrupt or lose state.)
+            let tmp = self.dir.join(format!("job-{:06}.json.tmp", job.id));
+            fs::write(&tmp, job.to_json().to_string_pretty())?;
+            fs::rename(&tmp, &hold)?;
+            if fs::rename(&hold, &path).is_err() {
+                // a recovering peer swept the hold (carrying our fresh
+                // Running record) to the canonical path between the two
+                // renames — nobody would execute it, so put the job
+                // back in the queue instead of stranding it `running`
+                let _ = self.requeue(job.id);
+                continue;
+            }
+            return Ok(Some(job));
+        }
+        Ok(None)
+    }
+
+    /// Record an execution outcome for a claimed job; returns the
+    /// record exactly as persisted (callers should use it rather than
+    /// re-reading the spool, which a concurrent `mare requeue` may
+    /// have already rewritten).
+    pub fn finish(
+        &self,
+        mut job: JobRecord,
+        status: JobStatus,
+        result: JobResult,
+    ) -> Result<JobRecord> {
+        job.status = status;
+        job.result = Some(result);
+        self.write(&job)?;
+        Ok(job)
+    }
+
+    /// Put a job back in the queue, clearing any recorded result — the
+    /// operator's recovery path (`mare requeue <id>`) for jobs stuck
+    /// `running` after their worker died post-claim, and for re-running
+    /// `failed`/`done` jobs.
+    pub fn requeue(&self, id: u64) -> Result<JobRecord> {
+        let mut job = self.get(id)?;
+        job.status = JobStatus::Queued;
+        job.result = None;
+        self.write(&job)?;
+        Ok(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_queue(name: &str) -> JobQueue {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-queue-test-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        JobQueue::open(dir).unwrap()
+    }
+
+    fn plan() -> Json {
+        Json::parse(
+            r#"{"version": 1, "ops": [
+                {"op": "ingest", "label": "gen:gc:8", "partitions": 2},
+                {"op": "collect"}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_list_claim_finish_lifecycle() {
+        let q = tmp_queue("lifecycle");
+        assert!(q.list().unwrap().is_empty());
+        assert!(q.claim().unwrap().is_none());
+
+        let a = q.submit(plan(), "a".into()).unwrap();
+        let b = q.submit(plan(), "b".into()).unwrap();
+        assert_eq!((a, b), (1, 2));
+        assert_eq!(q.list().unwrap().len(), 2);
+
+        // FIFO claim flips queued -> running, persistently
+        let claimed = q.claim().unwrap().unwrap();
+        assert_eq!(claimed.id, 1);
+        assert_eq!(q.get(1).unwrap().status, JobStatus::Running);
+        assert_eq!(q.claim().unwrap().unwrap().id, 2);
+        assert!(q.claim().unwrap().is_none());
+
+        q.finish(
+            claimed,
+            JobStatus::Done,
+            JobResult { driver: "d0".into(), launches: 4, records: 1, detail: "ok".into() },
+        )
+        .unwrap();
+        let done = q.get(1).unwrap();
+        assert_eq!(done.status, JobStatus::Done);
+        let r = done.result.unwrap();
+        assert_eq!((r.launches, r.records), (4, 1));
+        assert_eq!(r.driver, "d0");
+
+        // ids keep increasing past finished jobs
+        assert_eq!(q.submit(plan(), "c".into()).unwrap(), 3);
+
+        // requeue clears the result and makes the job claimable again
+        let requeued = q.requeue(1).unwrap();
+        assert_eq!(requeued.status, JobStatus::Queued);
+        assert!(requeued.result.is_none());
+        assert_eq!(q.claim().unwrap().unwrap().id, 1);
+    }
+
+    #[test]
+    fn stale_claims_recover_and_held_ids_are_not_reused() {
+        let q = tmp_queue("recover");
+        let id = q.submit(plan(), "a".into()).unwrap();
+        // simulate a worker that died mid-claim: the job sits in a hold
+        let path = q.dir().join(format!("job-{id:06}.json"));
+        let hold = q.dir().join(format!("job-{id:06}.json.claim"));
+        fs::rename(&path, &hold).unwrap();
+        assert!(q.list().unwrap().is_empty());
+        // the held id stays reserved — a concurrent submit cannot take
+        // it and have the claimer's write clobber the new job
+        assert_eq!(q.submit(plan(), "b".into()).unwrap(), id + 1);
+        // a fresh open() leaves FRESH holds alone (they may belong to a
+        // live claim in another process)...
+        let q2 = JobQueue::open(q.dir().to_path_buf()).unwrap();
+        assert_eq!(q2.list().unwrap().len(), 1);
+        // ...but once a hold has aged past any live claim, the sweep
+        // returns the job to the queue
+        q2.recover_claims_older_than(0).unwrap();
+        let jobs = q2.list().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!((jobs[0].id, jobs[0].status), (id, JobStatus::Queued));
+        assert_eq!(q2.claim().unwrap().unwrap().id, id);
+    }
+
+    #[test]
+    fn spool_files_roundtrip_through_json() {
+        let rec = JobRecord {
+            id: 7,
+            status: JobStatus::Failed,
+            summary: "ingest -> collect".into(),
+            plan: plan(),
+            result: Some(JobResult {
+                driver: "driver-1".into(),
+                launches: 0,
+                records: 0,
+                detail: "container: image not found".into(),
+            }),
+        };
+        let back = JobRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.status, JobStatus::Failed);
+        assert_eq!(back.plan, rec.plan);
+        assert_eq!(back.result.unwrap().detail, "container: image not found");
+
+        assert!(JobStatus::parse("zombie").is_err());
+        for s in [JobStatus::Queued, JobStatus::Running, JobStatus::Done, JobStatus::Failed] {
+            assert_eq!(JobStatus::parse(s.name()).unwrap(), s);
+        }
+    }
+}

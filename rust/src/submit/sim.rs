@@ -1,0 +1,217 @@
+//! Multi-driver simulation: N drivers, one queue, identical execution.
+//!
+//! The scale-out story of the wire format: a [`Driver`] is an
+//! independent execution context (its own cluster, its own container
+//! engine and launch counter). [`drain`] has a fleet of drivers pull
+//! jobs from one shared [`JobQueue`]; [`crosscheck`] runs the *same*
+//! encoded plan on every driver so callers can assert the
+//! `Job::explain()` physical plans are byte-identical and the container
+//! launch counters equal — the determinism contract a submitted plan
+//! relies on (docs/WIRE_FORMAT.md §7).
+
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::error::{MareError, Result};
+use crate::mare::{wire, MaRe};
+use crate::util::json::Json;
+
+use super::queue::{JobQueue, JobRecord, JobResult, JobStatus};
+use super::{ingest_of, SourceSpec};
+
+/// One simulated driver: a name plus its own cluster (and therefore
+/// its own engine and container-launch counter).
+pub struct Driver {
+    pub name: String,
+    config: ClusterConfig,
+    cluster: Arc<Cluster>,
+}
+
+/// What executing a plan on one driver produced.
+#[derive(Debug, Clone)]
+pub struct Executed {
+    /// `Job::explain()` — logical → optimized → physical plans.
+    pub explain: String,
+    /// Simulated container launches this job performed on this driver.
+    pub launches: u64,
+    /// Records in the collected output.
+    pub records: u64,
+}
+
+impl Driver {
+    pub fn new(name: impl Into<String>, config: ClusterConfig) -> Driver {
+        let cluster = Self::assemble(&config, None);
+        Driver { name: name.into(), config, cluster }
+    }
+
+    /// Same cluster-assembly path as `mare run` (workloads::make_cluster),
+    /// with the artifact runtime when it loads (fred/gatk plans) and a
+    /// runtime-less fallback otherwise (POSIX plans still execute).
+    fn assemble(
+        config: &ClusterConfig,
+        reference: Option<&crate::formats::fasta::Reference>,
+    ) -> Arc<Cluster> {
+        let dir = crate::workloads::artifact_dir();
+        crate::workloads::make_cluster(config.clone(), Some(&dir), reference)
+            .or_else(|_| crate::workloads::make_cluster(config.clone(), None, reference))
+            .expect("a cluster without a runtime always constructs")
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Decode, rebuild and execute an encoded plan on THIS driver:
+    /// materialize the source from the ingest label, re-run validation,
+    /// the optimizer and the lowering, then run the job.
+    pub fn execute(&self, envelope: &Json) -> Result<Executed> {
+        let pipeline = wire::decode(envelope)?;
+        let (label, partitions) = ingest_of(&pipeline)?;
+        let spec = SourceSpec::parse(&label);
+        let (source, reference) = spec.materialize_with_reference(partitions)?;
+        // sources that imply a reference genome (gen:snp:) need it
+        // baked into the registry's alignment image, so those jobs run
+        // on a per-job cluster; everything else shares the driver's
+        let cluster = match reference {
+            Some(reference) => Self::assemble(&self.config, Some(&reference)),
+            None => self.cluster.clone(),
+        };
+        let job = MaRe::source(cluster, source).append_pipeline(&pipeline).build()?;
+        let out = job.run()?;
+        let records = out.partitions.iter().map(|p| p.records.len() as u64).sum();
+        Ok(Executed { explain: job.explain(), launches: job.container_launches(), records })
+    }
+}
+
+/// Drain the shared queue: drivers claim jobs FIFO, round-robin, and
+/// record outcomes (`done` with launch counts, or `failed` with the
+/// error). Returns the finished records in execution order.
+pub fn drain(queue: &JobQueue, drivers: &[Driver]) -> Result<Vec<JobRecord>> {
+    if drivers.is_empty() {
+        return Err(MareError::Submit("drain needs at least one driver".into()));
+    }
+    let mut finished = Vec::new();
+    let mut turn = 0usize;
+    while let Some(job) = queue.claim()? {
+        let driver = &drivers[turn % drivers.len()];
+        turn += 1;
+        let (status, result) = match driver.execute(&job.plan) {
+            Ok(ex) => (
+                JobStatus::Done,
+                JobResult {
+                    driver: driver.name.clone(),
+                    launches: ex.launches,
+                    records: ex.records,
+                    detail: "ok".into(),
+                },
+            ),
+            Err(e) => (
+                JobStatus::Failed,
+                JobResult {
+                    driver: driver.name.clone(),
+                    launches: 0,
+                    records: 0,
+                    detail: e.to_string(),
+                },
+            ),
+        };
+        finished.push(queue.finish(job, status, result)?);
+    }
+    Ok(finished)
+}
+
+/// Run the SAME encoded plan on every driver. Callers assert the
+/// returned executions agree — identical `explain`, equal `launches` —
+/// which is exactly the acceptance check for plan portability.
+pub fn crosscheck(envelope: &Json, drivers: &[Driver]) -> Result<Vec<Executed>> {
+    drivers.iter().map(|d| d.execute(envelope)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_drivers() -> Vec<Driver> {
+        vec![
+            Driver::new("driver-0", ClusterConfig::sized(2, 2)),
+            Driver::new("driver-1", ClusterConfig::sized(2, 2)),
+        ]
+    }
+
+    /// Build the GC job with the fluent builder on a "home" driver and
+    /// encode it — the plan artifact the other drivers receive.
+    fn gc_plan_built_on_driver_a() -> (String, String) {
+        let home = Driver::new("driver-a", ClusterConfig::sized(2, 2));
+        let source = SourceSpec::parse("gen:gc:64").materialize(4).unwrap();
+        let job = MaRe::source(home.cluster().clone(), source)
+            .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+            .mounts("/dna", "/count")
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+            .mounts("/counts", "/sum")
+            .depth(2)
+            .build()
+            .unwrap();
+        (wire::encode_string(job.logical()).unwrap(), job.explain())
+    }
+
+    #[test]
+    fn a_plan_built_on_one_driver_executes_identically_on_others() {
+        let (text, home_explain) = gc_plan_built_on_driver_a();
+        let envelope = Json::parse(&text).unwrap();
+        let drivers = two_drivers();
+        let runs = crosscheck(&envelope, &drivers).unwrap();
+        assert_eq!(runs.len(), 2);
+        // byte-identical physical plans across drivers — and identical
+        // to the plan the home driver built directly from the builder
+        assert_eq!(runs[0].explain, runs[1].explain);
+        assert_eq!(runs[0].explain, home_explain);
+        // equal container-launch counters
+        assert_eq!(runs[0].launches, runs[1].launches);
+        assert!(runs[0].launches > 0, "the job must actually run containers");
+        assert_eq!(runs[0].records, runs[1].records);
+    }
+
+    #[test]
+    fn drivers_drain_a_shared_queue_round_robin() {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-sim-test-{}-drain", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let queue = JobQueue::open(dir).unwrap();
+
+        let (text, _) = gc_plan_built_on_driver_a();
+        let submitter = super::super::Submitter::new(ClusterConfig::sized(2, 2));
+        for _ in 0..3 {
+            submitter.submit(&queue, &text).unwrap();
+        }
+        // one plan with an unresolvable source fails cleanly
+        let opaque = text.replace("gen:gc:64", "hdfs://genome.txt");
+        submitter.submit(&queue, &opaque).unwrap();
+
+        let drivers = two_drivers();
+        let finished = drain(&queue, &drivers).unwrap();
+        assert_eq!(finished.len(), 4);
+
+        let ok: Vec<&JobRecord> =
+            finished.iter().filter(|j| j.status == JobStatus::Done).collect();
+        assert_eq!(ok.len(), 3);
+        // the same plan produced the same launch count on BOTH drivers
+        let launches: Vec<u64> = ok.iter().map(|j| j.result.as_ref().unwrap().launches).collect();
+        assert!(launches.windows(2).all(|w| w[0] == w[1]), "{launches:?}");
+        let names: std::collections::HashSet<String> =
+            ok.iter().map(|j| j.result.as_ref().unwrap().driver.clone()).collect();
+        assert_eq!(names.len(), 2, "both drivers took work: {names:?}");
+
+        let failed: Vec<&JobRecord> =
+            finished.iter().filter(|j| j.status == JobStatus::Failed).collect();
+        assert_eq!(failed.len(), 1);
+        assert!(
+            failed[0].result.as_ref().unwrap().detail.contains("not resolvable"),
+            "{}",
+            failed[0].result.as_ref().unwrap().detail
+        );
+
+        // queue is drained
+        assert!(queue.claim().unwrap().is_none());
+        assert!(drain(&queue, &[]).is_err());
+    }
+}

@@ -7,6 +7,7 @@ use crate::cluster::RunReport;
 use crate::config::{BackendKind, RunConfigFile, Workload};
 use crate::dataset::Dataset;
 use crate::error::Result;
+use crate::mare::{wire, Job, MaRe};
 use crate::storage::{ingest_text, Hdfs, IngestReport, LocalFs, StorageBackend, Swift, S3};
 
 use super::{gc, genlib, genreads, snp, vs};
@@ -42,6 +43,26 @@ pub fn run(cfg: &RunConfigFile) -> Result<DriverResult> {
     }
 }
 
+/// Round-trip a job's logical plan through the wire codec and rebuild
+/// it over the same source. Every `mare run` executes the REBUILT job,
+/// so the direct path and the `mare submit` path share one artifact:
+/// any plan this driver can run, it can also persist and resubmit
+/// (docs/WIRE_FORMAT.md). Drift between the two is a bug, caught by
+/// the debug assertion.
+fn reship(job: Job) -> Result<Job> {
+    let encoded = wire::encode(job.logical())?;
+    let decoded = wire::decode(&encoded)?;
+    let rebuilt = MaRe::source(job.cluster().clone(), job.source().clone())
+        .append_pipeline(&decoded)
+        .build()?;
+    debug_assert_eq!(
+        rebuilt.explain(),
+        job.explain(),
+        "wire round-trip changed the plan"
+    );
+    Ok(rebuilt)
+}
+
 /// Default partition count: 2 waves per vCPU-bound stage.
 fn partitions(cfg: &RunConfigFile) -> usize {
     cfg.cluster.workers * 2
@@ -59,7 +80,7 @@ fn run_gc(cfg: &RunConfigFile) -> Result<DriverResult> {
         cfg.cluster.workers,
     )?;
     let cluster = super::make_cluster(cfg.cluster.clone(), None, None)?;
-    let pipeline = gc::pipeline(cluster, ds);
+    let pipeline = reship(gc::pipeline(cluster, ds))?;
     crate::log_debug!("gc job:\n{}", pipeline.explain());
     let out = pipeline.run()?;
     let digest = format!("gc_count={}", out.collect_text("\n").trim());
@@ -78,7 +99,7 @@ fn run_vs(cfg: &RunConfigFile) -> Result<DriverResult> {
         cfg.cluster.workers,
     )?;
     let cluster = super::make_cluster(cfg.cluster.clone(), Some(&cfg.artifacts), None)?;
-    let pipeline = vs::pipeline(cluster, ds, cfg.reduce_depth);
+    let pipeline = reship(vs::pipeline(cluster, ds, cfg.reduce_depth))?;
     crate::log_debug!("vs job:\n{}", pipeline.explain());
     let out = pipeline.run()?;
     let text = out.collect_text(vs::SDF_SEP);
@@ -115,7 +136,7 @@ fn run_snp(cfg: &RunConfigFile) -> Result<DriverResult> {
         Some(&cfg.artifacts),
         Some(&individual.reference),
     )?;
-    let pipeline = snp::pipeline(cluster, ds, cfg.cluster.workers);
+    let pipeline = reship(snp::pipeline(cluster, ds, cfg.cluster.workers))?;
     crate::log_debug!("snp job:\n{}", pipeline.explain());
     let out = pipeline.run()?;
     let calls = parse_vcf_records(&out)?;
@@ -149,6 +170,40 @@ pub fn parse_vcf_records(
 mod tests {
     use super::*;
     use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn all_three_workload_plans_survive_the_wire() {
+        use crate::mare::wire;
+        let mk = || {
+            crate::workloads::make_cluster(ClusterConfig::sized(2, 2), None, None).unwrap()
+        };
+        let gc = crate::workloads::gc::pipeline(
+            mk(),
+            Dataset::parallelize_text("GATTACA\nGGCC", "\n", 2),
+        );
+        let vs = crate::workloads::vs::pipeline(
+            mk(),
+            Dataset::parallelize_text(
+                "molA\n$$$$\nmolB",
+                crate::workloads::vs::SDF_SEP,
+                2,
+            ),
+            2,
+        );
+        let snp = crate::workloads::snp::pipeline(
+            mk(),
+            Dataset::parallelize_text("@r/1\nACGT\n+\nIIII", "\x00", 2),
+            2,
+        );
+        for job in [gc, vs, snp] {
+            let text = wire::encode_string(job.logical()).unwrap();
+            let decoded = wire::decode_str(&text).unwrap();
+            assert_eq!(decoded.describe(), job.logical().describe());
+            // reship() debug-asserts explain() equality internally
+            let rebuilt = reship(job).unwrap();
+            assert!(rebuilt.explain().contains("physical plan:"));
+        }
+    }
 
     #[test]
     fn make_backend_spreads_blocks_over_workers() {

@@ -7,7 +7,6 @@ use std::sync::Arc;
 use crate::cluster::Cluster;
 use crate::dataset::{Dataset, Record};
 use crate::error::Result;
-use crate::formats::sam::parse_chromosome_id;
 use crate::formats::vcf::{self, VcfRecord};
 use crate::mare::{Job, MaRe, MountPoint};
 use crate::tools::posix::decompress;
@@ -43,10 +42,9 @@ pub fn pipeline(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Job 
     MaRe::source(cluster, reads)
         .map("mcapuccini/alignment:latest", bwa_command())
         .mounts("/in.fastq", "/out.sam")
-        .repartition_by(
-            Arc::new(|r: &Record| parse_chromosomeid_record(r)),
-            num_nodes.max(1),
-        )
+        // the registered "chromosome" key keeps this plan serializable
+        // (mare::wire), so the SNP job can be submitted to any driver
+        .repartition_by_named("chromosome", num_nodes.max(1))
         .disk_mounts(true)
         .map("mcapuccini/alignment:latest", gatk_command())
         .input_mount(MountPoint::text("/in.sam"))
@@ -56,14 +54,6 @@ pub fn pipeline(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Job 
         .depth(2)
         .build()
         .expect("the SNP pipeline is statically valid")
-}
-
-/// The paper's `parseChromosomeId` keyBy (Listing 3 line 12).
-fn parse_chromosomeid_record(r: &Record) -> String {
-    match r.as_text() {
-        Some(sam) => parse_chromosome_id(sam),
-        None => "*".to_string(),
-    }
 }
 
 /// Run end-to-end and parse the merged VCF out of the final gzipped

@@ -1,0 +1,190 @@
+//! Wire-format conformance: golden files, spec drift, and the
+//! encode→decode→encode fixed-point property.
+//!
+//! The golden files under `rust/tests/golden/` are byte-for-byte the
+//! worked examples in `docs/WIRE_FORMAT.md`; these tests pin all three
+//! (spec, golden files, codec) together so none can drift:
+//!
+//! 1. every golden file decodes;
+//! 2. its canonical re-encoding is structurally identical (same fields,
+//!    same order, same values — whitespace-independent);
+//! 3. the spec document contains the golden text verbatim;
+//! 4. `mare submit`-style admission (decode + dry-run build) accepts it;
+//! 5. property: encode→decode→encode is a fixed point for arbitrary
+//!    valid pipelines.
+
+use std::sync::Arc;
+
+use mare::cluster::ClusterConfig;
+use mare::dataset::Record;
+use mare::mare::wire::{self, WireError};
+use mare::mare::{KeySelector, MapStep, MountPoint, Pipeline, PipelineOp, ReduceStep};
+use mare::prop_assert;
+use mare::submit::Submitter;
+use mare::util::json::Json;
+use mare::util::prop::check;
+use mare::util::rng::Rng;
+
+const GOLDEN: &[&str] = &[
+    "gc_map.json",
+    "gc_reduce.json",
+    "repartition.json",
+    "collect_minimal.json",
+];
+
+fn golden_path(name: &str) -> String {
+    format!("{}/rust/tests/golden/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn spec_text() -> String {
+    std::fs::read_to_string(format!("{}/docs/WIRE_FORMAT.md", env!("CARGO_MANIFEST_DIR")))
+        .expect("docs/WIRE_FORMAT.md exists")
+}
+
+#[test]
+fn golden_files_decode_and_reencode_canonically() {
+    for name in GOLDEN {
+        let text = std::fs::read_to_string(golden_path(name)).expect(name);
+        let decoded = wire::decode_str(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        // the file is already in canonical form: same structure as the
+        // codec's own encoding (field names, order, values)
+        let reencoded = wire::encode(&decoded).expect(name);
+        let parsed = Json::parse(&text).expect(name);
+        assert_eq!(reencoded, parsed, "{name}: golden file is not canonical");
+        // and the codec's text output parses back to the same thing
+        let via_text = wire::decode_str(&wire::encode_string(&decoded).expect(name))
+            .expect(name);
+        assert_eq!(wire::encode(&via_text).expect(name), parsed, "{name}");
+    }
+}
+
+#[test]
+fn golden_files_appear_verbatim_in_the_spec() {
+    let spec = spec_text();
+    for name in GOLDEN {
+        let text = std::fs::read_to_string(golden_path(name)).expect(name);
+        assert!(
+            spec.contains(text.trim_end()),
+            "docs/WIRE_FORMAT.md no longer contains the worked example {name} — \
+             update the spec and the golden file together"
+        );
+    }
+}
+
+#[test]
+fn golden_files_pass_submit_admission() {
+    // "copy-pasteable into `mare submit`": the same admission path the
+    // CLI runs (decode + dry-run build + optimizer) accepts every
+    // worked example
+    let submitter = Submitter::new(ClusterConfig::sized(2, 2));
+    for name in GOLDEN {
+        let text = std::fs::read_to_string(golden_path(name)).expect(name);
+        let validated = submitter.validate(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(validated.executable, "{name}: worked examples use executable sources");
+    }
+}
+
+// ---------------------------------------------------------- property
+
+fn arbitrary_mount(rng: &mut Rng) -> MountPoint {
+    match rng.below(3) {
+        0 => {
+            let path = *rng.choice(&["/in", "/data/x.sdf", "/path with spaces"]);
+            let sep = *rng.choice(&["\n", "\n$$$$\n", "\t", "\u{1}"]);
+            MountPoint::text_sep(path, sep)
+        }
+        1 => MountPoint::binary(*rng.choice(&["/out", "/dir/nested"])),
+        _ => MountPoint::stream_sep(*rng.choice(&["\n", "\u{0}"])),
+    }
+}
+
+fn arbitrary_command(rng: &mut Rng) -> String {
+    (*rng.choice(&[
+        "grep -o '[GC]' /dna | wc -l > /count",
+        "awk '{s+=$1} END {print s}' /in > /out",
+        "echo \"quotes\\and\\backslashes\" > /out",
+        "printf 'tab\there\nnewline' > /out",
+        "sort /in.sdf > /ö-utf8.sdf",
+    ]))
+    .to_string()
+}
+
+fn arbitrary_pipeline(rng: &mut Rng) -> Pipeline {
+    let label = (*rng.choice(&[
+        "gen:gc:64",
+        "gen:vs:8",
+        "inline:ACGT\nGGCC",
+        "hdfs://genome.txt",
+        "parallelize",
+    ]))
+    .to_string();
+    let mut ops = vec![PipelineOp::Ingest { label, partitions: rng.range(1, 9) }];
+    for _ in 0..rng.below(6) {
+        let op = match rng.below(4) {
+            0 => PipelineOp::Map(MapStep {
+                input_mount: arbitrary_mount(rng),
+                output_mount: arbitrary_mount(rng),
+                image: (*rng.choice(&["ubuntu", "mcapuccini/oe:latest"])).to_string(),
+                command: arbitrary_command(rng),
+                disk_mounts: rng.bool(0.5),
+            }),
+            1 => PipelineOp::Reduce(ReduceStep {
+                input_mount: arbitrary_mount(rng),
+                output_mount: arbitrary_mount(rng),
+                image: (*rng.choice(&["ubuntu", "opengenomics/vcftools-tools:latest"]))
+                    .to_string(),
+                command: arbitrary_command(rng),
+                depth: if rng.bool(0.5) { None } else { Some(rng.range(1, 5)) },
+                disk_mounts: rng.bool(0.5),
+            }),
+            2 => PipelineOp::RepartitionBy {
+                key: KeySelector::named(rng.choice(&KeySelector::known()))
+                    .expect("registered name"),
+                partitions: rng.range(1, 9),
+            },
+            _ => PipelineOp::Repartition { partitions: rng.range(1, 9) },
+        };
+        ops.push(op);
+    }
+    ops.push(PipelineOp::Collect);
+    Pipeline::new(ops)
+}
+
+#[test]
+fn encode_decode_encode_is_a_fixed_point() {
+    check("wire-roundtrip-fixed-point", 250, |rng| {
+        let p = arbitrary_pipeline(rng);
+        let e1 = wire::encode(&p).map_err(|e| e.to_string())?;
+        let d1 = wire::decode(&e1).map_err(|e| e.to_string())?;
+        let e2 = wire::encode(&d1).map_err(|e| e.to_string())?;
+        prop_assert!(e1 == e2, "encode∘decode not identity:\n{e1}\nvs\n{e2}");
+        prop_assert!(
+            d1.describe() == p.describe(),
+            "decoded plan renders differently:\n{}\nvs\n{}",
+            d1.describe(),
+            p.describe()
+        );
+        // the same holds through the pretty-printed text form
+        let text = e1.to_string_pretty();
+        let d2 = wire::decode_str(&text).map_err(|e| e.to_string())?;
+        let e3 = wire::encode(&d2).map_err(|e| e.to_string())?;
+        prop_assert!(e3 == e1, "text roundtrip drift");
+        Ok(())
+    });
+}
+
+#[test]
+fn opaque_key_fns_never_encode_but_everything_else_does() {
+    // the ONE construct the wire format excludes, and its typed error
+    let p = Pipeline::new(vec![
+        PipelineOp::Ingest { label: "parallelize".into(), partitions: 2 },
+        PipelineOp::RepartitionBy {
+            key: KeySelector::opaque(Arc::new(|r: &Record| {
+                r.as_text().unwrap_or("").len().to_string()
+            })),
+            partitions: 2,
+        },
+        PipelineOp::Collect,
+    ]);
+    assert_eq!(wire::encode(&p), Err(WireError::OpaqueKeyFn { at: "ops[1]".into() }));
+}
