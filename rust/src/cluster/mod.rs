@@ -375,7 +375,17 @@ impl Cluster {
             .collect();
         let placements = sched.run(&slot_tasks);
 
-        sreport.local_tasks = placements.iter().filter(|p| p.local).count();
+        // a task only counts as local when it HAD a locality preference
+        // and honored it — tasks with no preference (driver-side
+        // parallelize, object-store ingests) have no locality to honor,
+        // and counting them inflated the metric to the point where
+        // HDFS- and Swift-backed runs were indistinguishable on
+        // `local_tasks` (the Figure 3 quantity)
+        sreport.local_tasks = placements
+            .iter()
+            .zip(&slot_tasks)
+            .filter(|(p, t)| t.preferred.is_some() && p.local)
+            .count();
         sreport.makespan = sched.makespan() - VirtualTime::ZERO;
         sreport.busy = slot_tasks
             .iter()

@@ -19,6 +19,12 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every registered backend, in registry order — the ONE table the
+    /// scheme lists elsewhere (storage catalog, error messages) derive
+    /// from, so adding a backend here propagates everywhere.
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Hdfs, BackendKind::Swift, BackendKind::S3, BackendKind::Local];
+
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "hdfs" => Ok(BackendKind::Hdfs),
@@ -210,6 +216,14 @@ mod tests {
         assert_eq!(cfg.cluster.locality_wait, Duration::seconds(1.5));
         assert_eq!(cfg.reduce_depth, 3);
         assert_eq!(cfg.cluster.seed, 7);
+    }
+
+    #[test]
+    fn backend_registry_is_self_consistent() {
+        // ALL is the one table: every entry round-trips name -> parse
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@ USAGE:
   mare run   [options]   run a workload end-to-end, print the report
   mare plan  [options]   print the logical -> optimized -> physical plans
                          (--json: emit the v1 wire envelope instead,
-                          submittable via `mare submit`)
+                          submittable via `mare submit`; with an explicit
+                          --storage, the plan ingests from a storage URI
+                          like hdfs://genome.txt, still executable under
+                          `mare work` via the simulated storage catalog)
   mare shell [options]   interactive session (the paper's Zeppelin workflow;
                          `:save`/`:load` persist plans as wire JSON)
   mare submit <plan.json> [--queue DIR]
@@ -124,14 +127,32 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_plan(args: &Args) -> Result<()> {
     let cfg = RunConfigFile::from_args(args)?;
     // a small dataset is enough to compile the plan; nothing executes.
-    // sources come from gen: labels so `--json` plans stay executable
-    // after `mare submit` / under `mare work` (docs/WIRE_FORMAT.md §4)
+    // sources come from gen: labels — or, when --storage is passed
+    // explicitly, from storage URIs the executing driver resolves
+    // through its catalog — so `--json` plans stay executable after
+    // `mare submit` / under `mare work` (docs/WIRE_FORMAT.md §4)
     let cluster = mare::workloads::make_cluster(cfg.cluster.clone(), None, None)?;
-    let label = match cfg.workload {
-        Workload::Gc => "gen:gc:16",
-        Workload::Vs => "gen:vs:8",
-        Workload::Snp => "gen:snp:500",
+    let storage_backed = args.flag("storage").is_some();
+    let label = match (cfg.workload, storage_backed) {
+        (Workload::Gc, true) => format!("{}://genome.txt?lines=16", cfg.backend.name()),
+        (Workload::Vs, true) => format!("{}://library.sdf?molecules=8", cfg.backend.name()),
+        (Workload::Gc, false) => "gen:gc:16".to_string(),
+        (Workload::Vs, false) => "gen:vs:8".to_string(),
+        (Workload::Snp, _) => {
+            if storage_backed {
+                // not a silent ignore: the user asked for a storage
+                // source they won't get
+                eprintln!(
+                    "note: snp plans always ingest `gen:snp:` — the reference genome \
+                     must be baked into the alignment image, which only gen:snp: \
+                     sources imply; --storage {} is ignored for this workload",
+                    cfg.backend.name()
+                );
+            }
+            "gen:snp:500".to_string()
+        }
     };
+    let label = label.as_str();
     // a stub with the right label + partition count is all a plan
     // needs (same O(1) admission trick as Submitter::validate);
     // executing drivers materialize the real records from the label
@@ -167,7 +188,8 @@ fn cmd_submit(args: &Args) -> Result<()> {
     if !plan.executable {
         println!(
             "  note: source is not resolvable by simulated drivers \
-             (only gen:/inline: labels execute under `mare work`)"
+             (gen:/inline: labels and hdfs://|swift://|s3://|local:// \
+             URIs execute under `mare work`)"
         );
     }
     Ok(())

@@ -70,6 +70,7 @@ pub struct PipelineBuilder {
     ops: Vec<PipelineOp>,
     disk_default: bool,
     optimize: bool,
+    observed_bytes: Option<Vec<u64>>,
     errors: Vec<String>,
 }
 
@@ -85,6 +86,7 @@ impl PipelineBuilder {
             ops: vec![ingest],
             disk_default: false,
             optimize: true,
+            observed_bytes: None,
             errors: Vec::new(),
         }
     }
@@ -268,6 +270,16 @@ impl PipelineBuilder {
         self
     }
 
+    /// Thread an ingestion's observed per-partition byte sizes into the
+    /// optimizer's auto reduce-depth planning. The builder already
+    /// derives the same sizes from the materialized source, so this is
+    /// only needed when the source dataset does not carry them (e.g. a
+    /// format-aware ingest that re-encoded records after metering).
+    pub fn observed_ingest(mut self, report: &crate::storage::IngestReport) -> Self {
+        self.observed_bytes = Some(report.partition_bytes.clone());
+        self
+    }
+
     /// Snapshot of the logical plan recorded so far (without the
     /// terminal `collect` marker `build()` appends).
     pub fn logical(&self) -> Pipeline {
@@ -324,14 +336,19 @@ impl PipelineBuilder {
     /// Validate, optimize and lower the pipeline into a runnable [`Job`].
     pub fn build(self) -> Result<Job> {
         self.validate()?;
-        let PipelineBuilder { cluster, source, mut ops, optimize, .. } = self;
+        let PipelineBuilder { cluster, source, mut ops, optimize, observed_bytes, .. } = self;
         ops.push(PipelineOp::Collect);
         let logical = Pipeline::new(ops);
 
-        let env = OptEnv {
-            workers: cluster.config.workers,
-            source_partitions: source.num_partitions(),
-        };
+        // auto reduce-depth plans against the OBSERVED ingested byte
+        // sizes (ROADMAP item): from the explicit IngestReport when one
+        // was threaded in, else derived from the materialized source.
+        // Zero-byte sources (SourceSpec::stub placeholders) read as "no
+        // observation" and fall back to nominal sizes inside the planner.
+        let mut env = OptEnv::for_source(cluster.config.workers, &source);
+        if observed_bytes.is_some() {
+            env.partition_bytes = observed_bytes;
+        }
         let (optimized, report) = if optimize {
             opt::optimize(&logical, &env)
         } else {
@@ -624,6 +641,34 @@ mod tests {
             "{}",
             job.logical().describe()
         );
+    }
+
+    #[test]
+    fn observed_ingest_report_overrides_planner_sizes() {
+        // an explicitly threaded IngestReport takes precedence over the
+        // (tiny) source-derived sizes: fat observed partitions push the
+        // byte-cost term past the per-level container-start cost and
+        // the auto planner picks a deeper tree
+        let planned = |bytes_per_partition: u64| {
+            let report = crate::storage::IngestReport {
+                bytes: bytes_per_partition * 256,
+                readers: 4,
+                duration: crate::simtime::Duration::ZERO,
+                partition_bytes: vec![bytes_per_partition; 256],
+                local_reads: 256,
+                remote_reads: 0,
+            };
+            let job = MaRe::source(cluster(4), numbers(256, 256))
+                .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+                .mounts("/counts", "/sum")
+                .observed_ingest(&report)
+                .build()
+                .unwrap();
+            job.opt_report().planned_depths[0]
+        };
+        let fat = planned(512 << 20);
+        let thin = planned(1);
+        assert!(fat > thin, "512 MiB partitions must plan deeper than 1 B (K={fat} vs K={thin})");
     }
 
     #[test]

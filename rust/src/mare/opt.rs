@@ -22,10 +22,52 @@ use crate::simtime::{CostModel, Duration};
 use super::pipeline::{MapStep, Pipeline, PipelineOp};
 
 /// What the optimizer knows about the job's environment.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct OptEnv {
     pub workers: usize,
     pub source_partitions: usize,
+    /// Observed per-partition ingested byte sizes, in partition order
+    /// (what `IngestReport::partition_bytes` measured, or equivalently
+    /// the materialized source's partition payload sizes). `None` —
+    /// e.g. during O(1) stub validation — falls back to the nominal
+    /// `PLAN_RECORD_BYTES` the planner used before observation.
+    pub partition_bytes: Option<Vec<u64>>,
+}
+
+impl OptEnv {
+    /// The environment for a job over `source` on a `workers`-wide
+    /// cluster, observing the source's actual per-partition byte sizes
+    /// (source datasets are always fully materialized `Plan::Source`
+    /// nodes; anything else planned against nominal sizes).
+    pub fn for_source(workers: usize, source: &crate::dataset::Dataset) -> OptEnv {
+        let partition_bytes = match source.plan().as_ref() {
+            crate::dataset::Plan::Source { partitions, .. } => {
+                Some(partitions.iter().map(|p| p.size_bytes()).collect())
+            }
+            _ => None,
+        };
+        OptEnv {
+            workers,
+            source_partitions: source.num_partitions(),
+            partition_bytes,
+        }
+    }
+
+    /// Bytes one aggregation unit is planned at: the observed mean
+    /// partition size when ingestion measured one, else nominal.
+    fn unit_bytes(&self) -> f64 {
+        match &self.partition_bytes {
+            Some(bytes) if !bytes.is_empty() => {
+                let mean = bytes.iter().sum::<u64>() as f64 / bytes.len() as f64;
+                if mean > 0.0 {
+                    mean
+                } else {
+                    PLAN_RECORD_BYTES
+                }
+            }
+            _ => PLAN_RECORD_BYTES,
+        }
+    }
 }
 
 /// What the passes did (surfaced by `explain()`).
@@ -128,8 +170,12 @@ fn plan_depths(pipeline: &Pipeline, env: &OptEnv, report: &mut OptReport) -> Pip
             PipelineOp::Reduce(r) => {
                 let mut r = r.clone();
                 if r.depth.is_none() {
-                    let k =
-                        plan_reduce_depth(&super::cost::infer(&r.command), parts, env.workers);
+                    let k = plan_reduce_depth_bytes(
+                        &super::cost::infer(&r.command),
+                        parts,
+                        env.workers,
+                        env.unit_bytes(),
+                    );
                     report.planned_depths.push(k);
                     r.depth = Some(k);
                 }
@@ -158,12 +204,28 @@ const PLAN_SHUFFLE: Duration = Duration(1_000_000); // 1 s
 /// how many partition outputs any single task must aggregate. Cheap
 /// POSIX reducers on small clusters plan K=1; per-record-expensive
 /// reducers over many partitions plan deeper trees.
+///
+/// Plans against the nominal aggregated-record size; prefer
+/// [`plan_reduce_depth_bytes`] when ingestion observed real sizes.
 pub fn plan_reduce_depth(cost: &CostModel, partitions: usize, workers: usize) -> usize {
+    plan_reduce_depth_bytes(cost, partitions, workers, PLAN_RECORD_BYTES)
+}
+
+/// [`plan_reduce_depth`] with the aggregation-unit size measured by
+/// ingestion (`IngestReport::partition_bytes` mean) instead of nominal —
+/// byte-dominated reducers over fat partitions plan deeper trees than
+/// the same command over thin ones.
+pub fn plan_reduce_depth_bytes(
+    cost: &CostModel,
+    partitions: usize,
+    workers: usize,
+    unit_bytes: f64,
+) -> usize {
     let parts = partitions.max(1);
     let workers = workers.max(1);
     let k_max = (parts as f64).log2().ceil().max(1.0) as usize;
 
-    let per_unit = cost.secs_per_record + cost.secs_per_byte * PLAN_RECORD_BYTES;
+    let per_unit = cost.secs_per_record + cost.secs_per_byte * unit_bytes;
     let mut best = (1usize, f64::INFINITY);
     for k in 1..=k_max {
         let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
@@ -212,7 +274,8 @@ mod tests {
         Pipeline::new(all)
     }
 
-    const ENV: OptEnv = OptEnv { workers: 4, source_partitions: 8 };
+    const ENV: OptEnv =
+        OptEnv { workers: 4, source_partitions: 8, partition_bytes: None };
 
     #[test]
     fn chained_maps_on_same_image_fuse() {
@@ -328,6 +391,52 @@ mod tests {
             cpus: 1,
         };
         assert!(plan_reduce_depth(&heavy, 256, 16) > 1);
+    }
+
+    #[test]
+    fn observed_partition_bytes_drive_auto_depth() {
+        // a byte-dominated reducer: unit size decides the tree shape
+        let byte_bound = CostModel {
+            fixed: Duration::seconds(0.01),
+            secs_per_byte: 1e-6,
+            secs_per_record: 0.0,
+            cpus: 1,
+        };
+        let thin = plan_reduce_depth_bytes(&byte_bound, 256, 4, 512.0);
+        let fat = plan_reduce_depth_bytes(&byte_bound, 256, 4, 512.0 * 1024.0);
+        assert!(
+            fat > thin,
+            "fat partitions must plan a deeper tree (thin K={thin}, fat K={fat})"
+        );
+
+        // the same distinction flows through optimize() via OptEnv
+        let reduce = PipelineOp::Reduce(ReduceStep {
+            input_mount: MountPoint::text("/in"),
+            output_mount: MountPoint::text("/out"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /in > /out".into(),
+            depth: None,
+            disk_mounts: false,
+        });
+        let plan_with = |bytes: Option<Vec<u64>>| {
+            let env = OptEnv { workers: 4, source_partitions: 256, partition_bytes: bytes };
+            let mut p = vec![PipelineOp::Ingest { label: "test".into(), partitions: 256 }];
+            p.push(reduce.clone());
+            p.push(PipelineOp::Collect);
+            let (_, report) = optimize(&Pipeline::new(p), &env);
+            report.planned_depths[0]
+        };
+        let observed_fat = plan_with(Some(vec![8 << 20; 256]));
+        let nominal = plan_with(None);
+        assert!(
+            observed_fat >= nominal,
+            "observed 8 MiB partitions must not plan a flatter tree than \
+             the 64 KiB nominal (observed K={observed_fat}, nominal K={nominal})"
+        );
+        // and the observed sizes are actually consumed: zero-byte
+        // observations fall back to nominal rather than planning K for
+        // an empty job
+        assert_eq!(plan_with(Some(vec![0; 256])), nominal);
     }
 
     #[test]

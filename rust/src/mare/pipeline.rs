@@ -256,10 +256,9 @@ impl Pipeline {
     /// (rendered like `cluster::compile(...).describe()`), for this
     /// pipeline run against `cluster` over `source`.
     pub fn explain(&self, cluster: &Arc<Cluster>, source: &Dataset) -> String {
-        let env = super::opt::OptEnv {
-            workers: cluster.config.workers,
-            source_partitions: source.num_partitions(),
-        };
+        // same environment derivation as `PipelineBuilder::build`, so
+        // this rendering matches what a built job would plan
+        let env = super::opt::OptEnv::for_source(cluster.config.workers, source);
         let (optimized, report) = super::opt::optimize(self, &env);
         let lowering = Lowering::for_cluster(cluster);
         let lowered = lowering.lower(&optimized, source);

@@ -46,6 +46,7 @@
 use std::fmt;
 
 use crate::error::MareError;
+use crate::storage::StorageUri;
 use crate::util::json::Json;
 
 use super::mount::MountPoint;
@@ -165,11 +166,19 @@ fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
     Ok(match op {
         PipelineOp::Ingest { label, partitions } => {
             check_count(at, "partitions", *partitions)?;
-            Json::obj(vec![
+            let mut fields = vec![
                 ("op", Json::str("ingest")),
                 ("label", Json::str(label.as_str())),
                 ("partitions", Json::Num(*partitions as f64)),
-            ])
+            ];
+            // storage-backed labels carry an explicit storage envelope
+            // (backend scheme, object key, partitioning) so readers
+            // need not re-derive the URI grammar; derived from the
+            // label, so the fixed-point property holds
+            if let Some(uri) = StorageUri::parse(label) {
+                fields.push(("storage", storage_json(&uri)));
+            }
+            Json::obj(fields)
         }
         PipelineOp::Map(m) => Json::obj(vec![
             ("op", Json::str("map")),
@@ -217,6 +226,19 @@ fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
         }
         PipelineOp::Collect => Json::obj(vec![("op", Json::str("collect"))]),
     })
+}
+
+/// The `"storage"` envelope of a storage-backed ingest node
+/// (docs/WIRE_FORMAT.md §2.1): backend scheme + object key + how the
+/// object partitions into records (`sep` for text objects, `glob` for
+/// `BinaryFiles`-style object sets).
+fn storage_json(uri: &StorageUri) -> Json {
+    Json::obj(vec![
+        ("scheme", Json::str(uri.kind.name())),
+        ("key", Json::str(uri.key.as_str())),
+        ("sep", Json::str(uri.sep())),
+        ("glob", Json::Bool(uri.is_glob())),
+    ])
 }
 
 fn encode_mount(m: &MountPoint) -> Json {
@@ -293,10 +315,17 @@ fn decode_op(node: &Json, at: &str) -> Result<PipelineOp, WireError> {
     }
     let op = req_str(node, at, "op")?;
     match op.as_str() {
-        "ingest" => Ok(PipelineOp::Ingest {
-            label: req_str(node, at, "label")?,
-            partitions: req_count(node, at, "partitions")?,
-        }),
+        "ingest" => {
+            let label = req_str(node, at, "label")?;
+            let partitions = req_count(node, at, "partitions")?;
+            // the storage envelope is derived metadata: when present it
+            // must agree with the label, or the plan is rejected rather
+            // than mis-executed against the wrong backend/object
+            if let Some(storage) = node.get("storage") {
+                check_storage(storage, &label, at)?;
+            }
+            Ok(PipelineOp::Ingest { label, partitions })
+        }
         "map" => Ok(PipelineOp::Map(MapStep {
             image: req_str(node, at, "image")?,
             command: req_str(node, at, "command")?,
@@ -343,6 +372,58 @@ fn decode_mount(mount: &Json, at: &str) -> Result<MountPoint, WireError> {
         "stream" => Ok(MountPoint::StdStream { sep: opt_str(mount, at, "sep", "\n")? }),
         other => Err(WireError::UnknownMountKind { at: at.into(), kind: other.to_string() }),
     }
+}
+
+/// Validate an ingest node's `"storage"` envelope against its label
+/// (the label is authoritative; the envelope is derived, §2.1).
+///
+/// An envelope on a label THIS reader cannot parse as a storage URI
+/// (a scheme outside its registry — e.g. written by an implementation
+/// with more backends) is ignored like any unknown node field: this
+/// reader resolves sources from the label alone, so the label decodes
+/// as opaque and the plan still validates and enqueues for capable
+/// drivers. Only when the reader WILL resolve the label does a
+/// disagreeing envelope reject — it must never ingest from a
+/// different backend/object than the label names.
+fn check_storage(storage: &Json, label: &str, at: &str) -> Result<(), WireError> {
+    let bad = |detail: String| WireError::BadField {
+        at: at.into(),
+        field: "storage",
+        detail,
+    };
+    // order matters: an unparseable label means the envelope is a
+    // foreign writer's field and is ignored WHATEVER its shape, per
+    // the unknown-node-field rule — only then is the shape enforced
+    let Some(uri) = StorageUri::parse(label) else {
+        return Ok(());
+    };
+    if !matches!(storage, Json::Obj(_)) {
+        return Err(bad("must be a JSON object".into()));
+    }
+    for (field, want) in [
+        ("scheme", uri.kind.name().to_string()),
+        ("key", uri.key.clone()),
+        ("sep", uri.sep().to_string()),
+    ] {
+        if let Some(v) = storage.get(field) {
+            let got = v.as_str().map_err(|e| bad(format!("{field}: {e}")))?;
+            if got != want {
+                return Err(bad(format!(
+                    "{field} `{got}` does not match the label's `{want}`"
+                )));
+            }
+        }
+    }
+    if let Some(v) = storage.get("glob") {
+        let got = v.as_bool().map_err(|e| bad(format!("glob: {e}")))?;
+        if got != uri.is_glob() {
+            return Err(bad(format!(
+                "glob `{got}` does not match the label's `{}`",
+                uri.is_glob()
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// `"depth"`: a positive integer, or the string `"auto"` for
@@ -697,6 +778,76 @@ mod tests {
             err_of(&plan("\"deep\"")),
             WireError::BadField { field: "depth", .. }
         ));
+    }
+
+    #[test]
+    fn storage_labels_carry_a_consistent_storage_envelope() {
+        let p = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "hdfs://genome.txt?lines=64".into(), partitions: 4 },
+            PipelineOp::Collect,
+        ]);
+        let encoded = encode(&p).unwrap();
+        let node = &encoded.get("ops").unwrap().as_arr().unwrap()[0];
+        let storage = node.get("storage").expect("storage envelope on a storage label");
+        assert_eq!(storage.get("scheme").unwrap(), &Json::Str("hdfs".into()));
+        assert_eq!(storage.get("key").unwrap(), &Json::Str("genome.txt".into()));
+        assert_eq!(storage.get("sep").unwrap(), &Json::Str("\n".into()));
+        assert_eq!(storage.get("glob").unwrap(), &Json::Bool(false));
+        // the envelope is derived from the label: fixed point holds
+        assert_eq!(encode(&decode(&encoded).unwrap()).unwrap(), encoded);
+
+        // non-storage labels carry no envelope
+        let gen = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "gen:gc:8".into(), partitions: 2 },
+            PipelineOp::Collect,
+        ]);
+        let gen_node = encode(&gen).unwrap();
+        assert!(gen_node.get("ops").unwrap().as_arr().unwrap()[0].get("storage").is_none());
+
+        // a mismatched envelope is rejected, not mis-executed
+        let lying = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "hdfs://genome.txt", "partitions": 2,
+             "storage": {"scheme": "s3", "key": "genome.txt"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(matches!(
+            err_of(lying),
+            WireError::BadField { field: "storage", .. }
+        ));
+
+        // an envelope on a label this reader cannot parse as a URI is
+        // ignored like an unknown node field (the label alone decides
+        // resolution, so a foreign-scheme plan still enqueues as
+        // opaque for drivers that do register the scheme)
+        let foreign = lying.replace("hdfs://genome.txt", "gcs://genome.txt");
+        assert!(decode_str(&foreign).is_ok());
+        let on_gen = lying.replace("hdfs://genome.txt", "gen:gc:8");
+        assert!(decode_str(&on_gen).is_ok());
+        // ...whatever its shape — a foreign envelope need not even be
+        // an object (but a malformed one on a label WE resolve is bad)
+        let foreign_str = foreign
+            .replace("{\"scheme\": \"s3\", \"key\": \"genome.txt\"}", "\"gcs\"");
+        assert!(decode_str(&foreign_str).is_ok());
+        let local_str = lying
+            .replace("{\"scheme\": \"s3\", \"key\": \"genome.txt\"}", "\"hdfs\"");
+        assert!(matches!(
+            err_of(&local_str),
+            WireError::BadField { field: "storage", .. }
+        ));
+
+        // an agreeing envelope (even a partial one) decodes fine
+        let truthful = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "swift://library.sdf", "partitions": 2,
+             "storage": {"scheme": "swift", "key": "library.sdf"}},
+            {"op": "collect"}
+          ]
+        }"#;
+        assert!(decode_str(truthful).is_ok());
     }
 
     #[test]

@@ -24,12 +24,15 @@ use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::{Dataset, Record};
 use crate::error::{MareError, Result};
 use crate::mare::{wire, Job, MaRe, MountPoint, Pipeline, PipelineBuilder, PipelineOp};
+use crate::storage::StorageCatalog;
 use crate::submit::{ingest_of, SourceSpec};
 
 const HELP: &str = "\
 commands:
   gen gc <lines>            generate a synthetic genome dataset
   gen vs <molecules>        generate a synthetic SDF library dataset
+  ingest <uri>              ingest from a storage backend (hdfs://k, swift://k,
+                            s3://k, local://k; sizing params ?lines=N, ?molecules=N)
   load <text> [sep]         load inline text as a dataset (records on sep, default \\n)
   map <image> <in> <out> :: <command>
                             add a map step (mounts: /path, /path:SEP, 'stdio')
@@ -98,6 +101,7 @@ impl Session {
         match head {
             "help" => Ok(HELP.to_string()),
             "gen" => self.cmd_gen(rest),
+            "ingest" => self.cmd_ingest(rest),
             "load" => self.cmd_load(rest),
             "map" => self.cmd_map(rest),
             "reduce" => self.cmd_reduce(rest),
@@ -172,10 +176,32 @@ impl Session {
                 return Err(MareError::Config(format!("gen gc|vs, not `{other}`")))
             }
         };
-        let ds = spec.materialize(self.partitions)?;
+        let ds = spec.materialize(self.partitions, self.cluster.config.workers)?;
         let parts = ds.num_partitions();
         self.set_dataset(ds);
         Ok(format!("loaded {what} in {parts} partitions"))
+    }
+
+    /// `ingest <uri>` — resolve a storage URI through the catalog (the
+    /// same path `mare work` drivers use for storage-backed plans), so
+    /// a `:save`d session plan over it stays executable anywhere.
+    fn cmd_ingest(&mut self, rest: &str) -> Result<String> {
+        let label = rest.trim();
+        if label.is_empty() {
+            return Err(MareError::Config(format!(
+                "ingest wants a storage URI (schemes: {})",
+                StorageCatalog::schemes().join(", ")
+            )));
+        }
+        let catalog = StorageCatalog::simulated(self.cluster.config.workers);
+        let (ds, report) = catalog.resolve_label(label, self.partitions)?;
+        let parts = ds.num_partitions();
+        self.set_dataset(ds);
+        Ok(format!(
+            "ingested {label}: {} B in {parts} partitions \
+             ({} local / {} remote reads, virtual {})",
+            report.bytes, report.local_reads, report.remote_reads, report.duration
+        ))
     }
 
     fn cmd_load(&mut self, rest: &str) -> Result<String> {
@@ -222,7 +248,7 @@ impl Session {
         let (label, partitions) = ingest_of(&pipeline)?;
         let spec = SourceSpec::parse(&label);
         if spec.is_executable() {
-            self.set_dataset(spec.materialize(partitions)?);
+            self.set_dataset(spec.materialize(partitions, self.cluster.config.workers)?);
         } else {
             match self.dataset.clone() {
                 // keep the current dataset, apply the plan's steps to it
@@ -488,6 +514,36 @@ mod tests {
         assert!(s.eval(":save /tmp/x.json").unwrap_err().to_string().contains("no dataset"));
         assert!(s.eval(":save").unwrap_err().to_string().contains("file path"));
         assert!(s.eval(":load /no/such/mare-plan.json").is_err());
+    }
+
+    #[test]
+    fn ingest_command_loads_storage_backed_datasets() {
+        let mut s = session();
+        let msg = s.eval("ingest hdfs://genome.txt?lines=64").unwrap();
+        assert!(msg.contains("ingested hdfs://genome.txt?lines=64"), "{msg}");
+        assert!(msg.contains("local"), "{msg}");
+        s.eval("map ubuntu /dna /count :: grep -o '[GC]' /dna | wc -l > /count").unwrap();
+        let plan = s.eval("plan").unwrap();
+        assert!(plan.contains("ingest[hdfs://genome.txt?lines=64]"), "{plan}");
+        let run = s.eval("run").unwrap();
+        assert!(run.contains("records:"), "{run}");
+
+        // storage plans save/load like gen plans: the catalog's seeded
+        // population regenerates the same store in a fresh session
+        let path = std::env::temp_dir()
+            .join(format!("mare-repl-storage-{}.json", std::process::id()));
+        let path_s = path.to_string_lossy().to_string();
+        s.eval(&format!(":save {path_s}")).unwrap();
+        let mut s2 = session();
+        assert!(s2.eval(&format!(":load {path_s}")).unwrap().contains("loaded"));
+        assert_eq!(s2.eval("plan").unwrap(), s.eval("plan").unwrap());
+        let _ = std::fs::remove_file(&path);
+
+        // bad URIs error helpfully
+        let err = s.eval("ingest nope://x").unwrap_err().to_string();
+        assert!(err.contains("not a storage URI"), "{err}");
+        let err = s.eval("ingest").unwrap_err().to_string();
+        assert!(err.contains("storage URI"), "{err}");
     }
 
     #[test]

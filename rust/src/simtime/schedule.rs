@@ -137,9 +137,17 @@ impl SlotSchedule {
                 "task wants {cpus} cpus but no worker has that many slots"
             );
 
-            // Locality preference within the wait window.
+            // Locality preference within the wait window. A preference
+            // outside this cluster's worker range (data ingested for a
+            // wider layout) is unsatisfiable here: the task schedules
+            // anywhere, non-local, with the remote penalty — it must
+            // never index past the worker tables.
             let (worker, start, local) = match t.preferred {
-                Some(p) if !self.killed[p] && (cpus as usize) <= self.slots[p].len() => {
+                Some(p)
+                    if p < self.slots.len()
+                        && !self.killed[p]
+                        && (cpus as usize) <= self.slots[p].len() =>
+                {
                     let ps = self.earliest_on(p, cpus);
                     if ps.0 <= best_start.0 + self.locality_wait.0 {
                         (p, ps, true)
@@ -250,6 +258,25 @@ mod tests {
         assert!(!p[1].local);
         // remote penalty applied
         assert_eq!(p[1].end - p[1].start, Duration::seconds(3.0));
+    }
+
+    #[test]
+    fn out_of_range_preference_schedules_remote_without_panicking() {
+        // data ingested for a wider cluster than this one: the hint
+        // names a worker that does not exist here
+        let mut s = SlotSchedule::new(2, 1);
+        let t = SlotTask {
+            id: 0,
+            duration: Duration::seconds(1.0),
+            cpus: 1,
+            preferred: Some(7),
+            remote_penalty: Duration::seconds(0.5),
+        };
+        let p = s.run(&[t]);
+        assert!(p[0].worker < 2);
+        assert!(!p[0].local, "an unsatisfiable preference is not local");
+        // the read really is remote: penalty applied
+        assert_eq!(p[0].end - p[0].start, Duration::seconds(1.5));
     }
 
     #[test]

@@ -14,13 +14,22 @@ use crate::simtime::Duration;
 use super::StorageBackend;
 
 /// Virtual-time account of one ingestion.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IngestReport {
     pub bytes: u64,
     /// Distinct workers that read in parallel.
     pub readers: usize,
     /// Virtual wall time of the parallel read (max over readers).
     pub duration: Duration,
+    /// Observed payload bytes of each ingested partition, in partition
+    /// order — what the optimizer's auto reduce-depth planning consumes
+    /// instead of nominal record sizes (`mare::opt::OptEnv`).
+    pub partition_bytes: Vec<u64>,
+    /// Partitions read by the worker hosting their primary replica.
+    pub local_reads: usize,
+    /// Partitions read across the network (no locality hint, or a hint
+    /// outside this cluster's worker range).
+    pub remote_reads: usize,
 }
 
 /// Ingest a text object, splitting on `sep` (the paper's `TextFile`
@@ -32,6 +41,21 @@ pub fn ingest_text(
     num_partitions: usize,
     workers: usize,
 ) -> Result<(Dataset, IngestReport)> {
+    let label = format!("{}://{key}", backend.name());
+    ingest_text_as(backend, key, sep, num_partitions, workers, &label)
+}
+
+/// [`ingest_text`] with an explicit dataset label (the storage catalog
+/// labels datasets with the full canonical URI, params included, so
+/// jobs built over them re-encode to the submitted label).
+pub fn ingest_text_as(
+    backend: &dyn StorageBackend,
+    key: &str,
+    sep: &str,
+    num_partitions: usize,
+    workers: usize,
+    label: &str,
+) -> Result<(Dataset, IngestReport)> {
     let bytes = backend.get(key)?;
     let total = bytes.len() as u64;
     let text = std::str::from_utf8(bytes)
@@ -42,6 +66,7 @@ pub fn ingest_text(
     let n = num_partitions.max(1);
     let workers = workers.max(1);
     let total_records = records.len();
+    let sep_len = sep.len() as u64;
 
     // contiguous chunks; partition locality = primary of the block its
     // first byte falls in
@@ -53,13 +78,16 @@ pub fn ingest_text(
         let recs: Vec<Record> = it.by_ref().take(count).map(Record::text).collect();
         let part_bytes: u64 = recs.iter().map(Record::size_bytes).sum();
         let primary = block_at(&blocks, byte_cursor).and_then(|b| b.primary);
-        byte_cursor += part_bytes;
+        // each record is followed by one `sep` in the stored object —
+        // omitting those bytes attributed partitions to earlier blocks
+        // than their true byte ranges (whitespace-only chunks dropped by
+        // `split_records` keep this approximate, never the other way)
+        byte_cursor += part_bytes + count as u64 * sep_len;
         partitions.push(Partition { records: recs, preferred_worker: primary });
     }
 
     let report = account(backend, &partitions, workers, total);
-    let label = format!("{}://{key}", backend.name());
-    Ok((Dataset::from_partitions(partitions, label), report))
+    Ok((Dataset::from_partitions(partitions, label.to_string()), report))
 }
 
 /// Ingest many objects as binary records (one record per object — the
@@ -69,6 +97,19 @@ pub fn ingest_objects(
     keys: &[&str],
     num_partitions: usize,
     workers: usize,
+) -> Result<(Dataset, IngestReport)> {
+    let label = format!("{}://[{} objects]", backend.name(), keys.len());
+    ingest_objects_as(backend, keys, num_partitions, workers, &label)
+}
+
+/// [`ingest_objects`] with an explicit dataset label (see
+/// [`ingest_text_as`]).
+pub fn ingest_objects_as(
+    backend: &dyn StorageBackend,
+    keys: &[&str],
+    num_partitions: usize,
+    workers: usize,
+    label: &str,
 ) -> Result<(Dataset, IngestReport)> {
     let n = num_partitions.max(1);
     let workers = workers.max(1);
@@ -91,28 +132,37 @@ pub fn ingest_objects(
     }
 
     let report = account(backend, &partitions, workers, total);
-    let label = format!("{}://[{} objects]", backend.name(), keys.len());
-    Ok((Dataset::from_partitions(partitions, label), report))
+    Ok((Dataset::from_partitions(partitions, label.to_string()), report))
 }
 
+/// The block whose byte range contains `byte`. Zero-length blocks
+/// occupy no byte range and are skipped — widening them to one byte
+/// (as the seed did) shifted every subsequent block's range.
 fn block_at<'a>(
     blocks: &'a [super::BlockInfo],
     byte: u64,
 ) -> Option<&'a super::BlockInfo> {
     let mut cursor = 0u64;
     for b in blocks {
-        if byte < cursor + b.len.max(1) {
+        if b.len > 0 && byte < cursor + b.len {
             return Some(b);
         }
         cursor += b.len;
     }
-    blocks.last()
+    // past the end (trailing separator bytes): the last real block
+    blocks.iter().rev().find(|b| b.len > 0).or_else(|| blocks.last())
 }
 
 /// Parallel-read accounting: each partition is read by its locality
 /// worker (or round-robin), all readers share the backend pipe. Public
 /// so format-aware ingest paths (e.g. FASTQ in `workloads::driver`) can
 /// account their own partitioning.
+///
+/// A locality hint outside this cluster's worker range (the ingest
+/// layout was computed for a larger cluster) is spread deterministically
+/// by modulo — clamping to the last worker piled every high-index hint
+/// onto it — and is accounted as a remote read, since the hinted worker
+/// does not exist here.
 pub fn account(
     backend: &dyn StorageBackend,
     partitions: &[Partition],
@@ -124,7 +174,11 @@ pub fn account(
     let readers: Vec<usize> = partitions
         .iter()
         .enumerate()
-        .map(|(i, p)| p.preferred_worker.unwrap_or(i % workers).min(workers - 1))
+        .map(|(i, p)| match p.preferred_worker {
+            Some(w) if w < workers => w,
+            Some(w) => w % workers,
+            None => i % workers,
+        })
         .collect();
     let concurrency = {
         for &r in &readers {
@@ -133,15 +187,27 @@ pub fn account(
         used.iter().filter(|&&u| u).count().max(1) as u32
     };
     let mut bytes = 0u64;
+    let mut partition_bytes = Vec::with_capacity(partitions.len());
+    let mut local_reads = 0usize;
+    let mut remote_reads = 0usize;
     for (p, &reader) in partitions.iter().zip(&readers) {
         let b = p.size_bytes();
         bytes += b;
+        partition_bytes.push(b);
+        if p.preferred_worker == Some(reader) {
+            local_reads += 1;
+        } else {
+            remote_reads += 1;
+        }
         per_worker[reader] += backend.read_time(reader, p.preferred_worker, b, concurrency);
     }
     IngestReport {
         bytes,
         readers: concurrency as usize,
         duration: per_worker.into_iter().max().unwrap_or(Duration::ZERO),
+        partition_bytes,
+        local_reads,
+        remote_reads,
     }
 }
 
@@ -230,5 +296,80 @@ mod tests {
     fn missing_key_errors() {
         let s = Swift::new();
         assert!(ingest_text(&s, "nope", "\n", 1, 1).is_err());
+    }
+
+    /// Regression: `byte_cursor` must include the separator bytes
+    /// between records — summing only record payloads attributed
+    /// partitions to earlier HDFS blocks than their true byte ranges.
+    #[test]
+    fn partition_locality_maps_to_exact_block_boundaries() {
+        // 40 records x (9 payload + 1 sep) bytes = 400 bytes; 100-byte
+        // blocks; 4 partitions of 10 records = exactly one block each
+        let mut h = Hdfs::new(4, 100);
+        let doc: String = (0..40).map(|i| format!("{i:09}\n")).collect();
+        h.put("data", doc.into_bytes()).unwrap();
+        let blocks = h.blocks("data").unwrap();
+        assert_eq!(blocks.len(), 4);
+
+        let (ds, rep) = ingest_text(&h, "data", "\n", 4, 4).unwrap();
+        match ds.plan().as_ref() {
+            crate::dataset::Plan::Source { partitions, .. } => {
+                for (i, p) in partitions.iter().enumerate() {
+                    // partition i starts at byte i*100 — block i exactly;
+                    // the payload-only cursor (i*90) put partitions 1-3
+                    // in earlier blocks
+                    assert_eq!(
+                        p.preferred_worker, blocks[i].primary,
+                        "partition {i} attributed off its true block"
+                    );
+                }
+            }
+            _ => panic!("expected a source plan"),
+        }
+        // with the cursor fixed, every read is block-local
+        assert_eq!(rep.local_reads, 4);
+        assert_eq!(rep.remote_reads, 0);
+        assert_eq!(rep.partition_bytes, vec![90, 90, 90, 90]);
+    }
+
+    /// Regression: out-of-range locality hints (ingest layout computed
+    /// for a larger cluster) must spread deterministically and count as
+    /// remote reads — clamping piled them all onto the last worker.
+    #[test]
+    fn out_of_range_hints_spread_and_count_remote() {
+        let h = Hdfs::new(16, 100);
+        let parts: Vec<Partition> = (0..8)
+            .map(|i| Partition {
+                records: vec![Record::text("x".repeat(100))],
+                preferred_worker: Some(i), // hints 0..8, cluster of 2
+            })
+            .collect();
+        let rep = account(&h, &parts, 2, 800);
+        // modulo spread: both workers read, not just the last one
+        assert_eq!(rep.readers, 2);
+        // hints 0 and 1 are in range (local); 2..8 are foreign (remote)
+        assert_eq!(rep.local_reads, 2);
+        assert_eq!(rep.remote_reads, 6);
+        assert_eq!(rep.bytes, 800);
+    }
+
+    /// Regression: a zero-length block occupies no byte range — the
+    /// seed's `len.max(1)` shifted every subsequent block's range.
+    #[test]
+    fn block_at_skips_zero_length_blocks() {
+        let blocks = vec![
+            super::super::BlockInfo { index: 0, len: 0, primary: Some(7) },
+            super::super::BlockInfo { index: 1, len: 100, primary: Some(1) },
+            super::super::BlockInfo { index: 2, len: 100, primary: Some(2) },
+        ];
+        // byte 0 is the first byte of block 1, not the empty block 0
+        assert_eq!(block_at(&blocks, 0).unwrap().index, 1);
+        assert_eq!(block_at(&blocks, 99).unwrap().index, 1);
+        assert_eq!(block_at(&blocks, 100).unwrap().index, 2);
+        // past the end: the last REAL block, not a phantom
+        assert_eq!(block_at(&blocks, 500).unwrap().index, 2);
+        // all-empty objects still resolve to something
+        let empty = vec![super::super::BlockInfo { index: 0, len: 0, primary: None }];
+        assert_eq!(block_at(&empty, 0).unwrap().index, 0);
     }
 }

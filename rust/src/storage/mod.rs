@@ -15,7 +15,11 @@
 //! * [`local`] — driver-side store for tests and small examples
 //! * [`ingest`] — parallel read of objects into a [`Dataset`] with
 //!   locality metadata + virtual ingestion timing
+//! * [`catalog`] — registry of named backends resolving `scheme://key`
+//!   URIs into ingested datasets (deterministic seeded population, so
+//!   storage-backed plans execute identically on every driver)
 
+pub mod catalog;
 pub mod hdfs;
 pub mod ingest;
 pub mod local;
@@ -25,6 +29,7 @@ pub mod swift;
 use crate::error::Result;
 use crate::simtime::Duration;
 
+pub use catalog::{StorageCatalog, StorageUri};
 pub use hdfs::Hdfs;
 pub use ingest::{ingest_text, IngestReport};
 pub use local::LocalFs;

@@ -13,9 +13,13 @@
 //! Sources travel by *label*: the plan's `ingest` node carries a label
 //! that every driver resolves with [`SourceSpec`] (`gen:gc:<lines>`,
 //! `gen:vs:<molecules>`, `gen:snp:<chromosome_bp>`, `inline:<text>`),
-//! regenerating identical records from a pinned seed. Labels outside that grammar (e.g.
-//! `hdfs://genome.txt`) still validate and enqueue, but only drivers
-//! that can reach the named storage may execute them.
+//! regenerating identical records from a pinned seed. Storage URIs
+//! (`hdfs://genome.txt`, `swift://…`, `s3://…`, `local://…`) resolve
+//! through the [`crate::storage::StorageCatalog`], whose seeded object
+//! population is equally pinned — so storage-backed plans execute
+//! end-to-end with per-partition locality hints. Labels outside both
+//! grammars still validate and enqueue, but only drivers that can
+//! reach the named source may execute them.
 //!
 //! ```
 //! use mare::cluster::ClusterConfig;
@@ -56,6 +60,7 @@ use crate::cluster::{Cluster, ClusterConfig};
 use crate::dataset::Dataset;
 use crate::error::{MareError, Result};
 use crate::mare::{wire, MaRe, Pipeline, PipelineOp};
+use crate::storage::{IngestReport, StorageCatalog, StorageUri};
 use crate::util::json::Json;
 
 /// Seed for regenerated `gen:` sources — pinned so every driver
@@ -76,7 +81,12 @@ pub enum SourceSpec {
     GenSnp { chromosome_bp: usize },
     /// `inline:<text>` — the records travel in the label itself.
     Inline { text: String },
-    /// Anything else (e.g. `hdfs://genome.txt`): validate-only here.
+    /// `hdfs://…` / `swift://…` / `s3://…` / `local://…` — resolved
+    /// through the executing driver's [`StorageCatalog`], whose seeded
+    /// deterministic object population makes every driver see the same
+    /// store (see [`crate::storage::catalog`]).
+    Storage { uri: StorageUri },
+    /// Anything else (e.g. `ftp://x`): validate-only here.
     Opaque { label: String },
 }
 
@@ -102,6 +112,9 @@ impl SourceSpec {
         if let Some(text) = label.strip_prefix("inline:") {
             return SourceSpec::Inline { text: text.to_string() };
         }
+        if let Some(uri) = StorageUri::parse(label) {
+            return SourceSpec::Storage { uri };
+        }
         SourceSpec::Opaque { label: label.to_string() }
     }
 
@@ -117,6 +130,7 @@ impl SourceSpec {
             SourceSpec::GenVs { molecules } => format!("gen:vs:{molecules}"),
             SourceSpec::GenSnp { chromosome_bp } => format!("gen:snp:{chromosome_bp}"),
             SourceSpec::Inline { text } => format!("inline:{text}"),
+            SourceSpec::Storage { uri } => uri.label(),
             SourceSpec::Opaque { label } => label.clone(),
         }
     }
@@ -124,10 +138,12 @@ impl SourceSpec {
     /// Materialize the dataset AND the reference genome the source
     /// implies (if any) from ONE generation pass — `gen:snp:` derives
     /// both from a single simulated individual instead of running the
-    /// read simulation twice.
+    /// read simulation twice. `workers` is the executing cluster's
+    /// width (storage sources lay blocks out over it for locality).
     pub fn materialize_with_reference(
         &self,
         partitions: usize,
+        workers: usize,
     ) -> Result<(Dataset, Option<crate::formats::fasta::Reference>)> {
         match self {
             SourceSpec::GenSnp { .. } => {
@@ -138,13 +154,15 @@ impl SourceSpec {
                     Some(individual.reference),
                 ))
             }
-            _ => Ok((self.materialize(partitions)?, None)),
+            _ => Ok((self.materialize(partitions, workers)?, None)),
         }
     }
 
     /// Deterministically regenerate the source dataset ([`GEN_SEED`] is
-    /// pinned, so every driver sees identical partitions).
-    pub fn materialize(&self, partitions: usize) -> Result<Dataset> {
+    /// pinned, so every driver sees identical partitions; storage URIs
+    /// resolve through the equally-pinned [`StorageCatalog`], carrying
+    /// per-partition locality hints for block-colocated backends).
+    pub fn materialize(&self, partitions: usize, workers: usize) -> Result<Dataset> {
         match self {
             SourceSpec::GenGc { lines } => Ok(Dataset::parallelize_text_labeled(
                 &crate::workloads::gc::genome_text(GEN_SEED, *lines, 80),
@@ -165,17 +183,47 @@ impl SourceSpec {
             SourceSpec::Inline { text } => {
                 Ok(Dataset::parallelize_text_labeled(text, "\n", partitions, self.label()))
             }
+            SourceSpec::Storage { uri } => {
+                let (ds, _report) =
+                    StorageCatalog::simulated(workers).resolve(uri, partitions)?;
+                Ok(ds)
+            }
             SourceSpec::Opaque { label } => Err(MareError::Submit(format!(
                 "source `{label}` is not resolvable on this driver (executable labels: \
-                 gen:gc:<lines>, gen:vs:<molecules>, gen:snp:<chromosome_bp>, inline:<text>)"
+                 gen:gc:<lines>, gen:vs:<molecules>, gen:snp:<chromosome_bp>, \
+                 inline:<text>, and storage URIs over {})",
+                StorageCatalog::schemes().join("/")
             ))),
+        }
+    }
+
+    /// [`Self::materialize`] for storage sources, also returning the
+    /// [`IngestReport`] the catalog's ingestion measured (locality
+    /// split, per-partition byte sizes). Non-storage sources report
+    /// `None` — they never cross a storage pipe.
+    pub fn materialize_with_ingest(
+        &self,
+        partitions: usize,
+        workers: usize,
+    ) -> Result<(Dataset, Option<IngestReport>)> {
+        match self {
+            SourceSpec::Storage { uri } => {
+                let (ds, report) =
+                    StorageCatalog::simulated(workers).resolve(uri, partitions)?;
+                Ok((ds, Some(report)))
+            }
+            _ => Ok((self.materialize(partitions, workers)?, None)),
         }
     }
 
     /// A placeholder dataset with the declared partition count — enough
     /// for a dry-run `build()` (validation + optimizer), never executed.
+    /// The partitions are empty (zero bytes), so the optimizer's
+    /// observed-size planning sees no observation and falls back to
+    /// nominal record sizes instead of mistaking placeholder bytes for
+    /// a measurement.
     pub fn stub(&self, partitions: usize) -> Dataset {
-        Dataset::parallelize_text_labeled("stub", "\n", partitions, self.label())
+        Dataset::parallelize_labeled(Vec::new(), partitions, self.label())
     }
 
     /// The reference genome the executing cluster must bake into its
@@ -269,7 +317,10 @@ impl Submitter {
         let spec = SourceSpec::parse(&label);
         // validation is data-independent: build() only needs the
         // partition count, so admission stays O(1) in source size —
-        // drivers materialize the real records at execution time
+        // drivers materialize the real records at execution time. The
+        // stub's zero-byte partitions keep placeholder sizes out of
+        // the dry-run's auto depth planning (nominal fallback); the
+        // driver re-plans against what its ingestion really measures.
         let source = spec.stub(partitions);
         let job = MaRe::source(self.cluster.clone(), source)
             .append_pipeline(&pipeline)
@@ -309,32 +360,65 @@ mod tests {
             SourceSpec::parse("inline:ACGT\nGGCC"),
             SourceSpec::Inline { text: "ACGT\nGGCC".into() }
         );
+        // storage URIs over registered schemes resolve (and execute)
+        let spec = SourceSpec::parse("hdfs://genome.txt?lines=64");
+        assert!(matches!(&spec, SourceSpec::Storage { uri } if uri.key == "genome.txt"));
+        assert!(spec.is_executable());
+        // unregistered schemes stay opaque
         assert_eq!(
-            SourceSpec::parse("hdfs://genome.txt"),
-            SourceSpec::Opaque { label: "hdfs://genome.txt".into() }
+            SourceSpec::parse("ftp://genome.txt"),
+            SourceSpec::Opaque { label: "ftp://genome.txt".into() }
         );
         // malformed counts degrade to opaque, not panic
         assert!(matches!(SourceSpec::parse("gen:gc:lots"), SourceSpec::Opaque { .. }));
 
-        for label in ["gen:gc:64", "gen:vs:8", "gen:snp:500", "inline:ACGT", "swift://x"] {
+        for label in [
+            "gen:gc:64",
+            "gen:vs:8",
+            "gen:snp:500",
+            "inline:ACGT",
+            "swift://x",
+            "hdfs://genome.txt?lines=64",
+            "ftp://x",
+        ] {
             assert_eq!(SourceSpec::parse(label).label(), label);
         }
     }
 
     #[test]
     fn materialized_sources_are_deterministic() {
-        let a = SourceSpec::parse("gen:gc:32").materialize(4).unwrap();
-        let b = SourceSpec::parse("gen:gc:32").materialize(4).unwrap();
+        let a = SourceSpec::parse("gen:gc:32").materialize(4, 2).unwrap();
+        let b = SourceSpec::parse("gen:gc:32").materialize(4, 2).unwrap();
         assert_eq!(a.num_partitions(), 4);
         assert_eq!(a.describe(), b.describe());
-        assert!(SourceSpec::parse("nope://x").materialize(2).is_err());
+        assert!(SourceSpec::parse("nope://x").materialize(2, 2).is_err());
+
+        // storage sources materialize with locality + an ingest report
+        let (ds, report) = SourceSpec::parse("hdfs://genome.txt?lines=64")
+            .materialize_with_ingest(4, 2)
+            .unwrap();
+        assert_eq!(ds.num_partitions(), 4);
+        let report = report.expect("storage sources measure ingestion");
+        assert_eq!(report.partition_bytes.len(), 4);
+        assert!(report.bytes > 0);
+        match ds.plan().as_ref() {
+            crate::dataset::Plan::Source { partitions, label } => {
+                assert_eq!(label, "hdfs://genome.txt?lines=64");
+                assert!(partitions.iter().all(|p| p.preferred_worker.is_some()));
+            }
+            _ => panic!("expected a source plan"),
+        }
+        // non-storage sources report no ingestion
+        let (_, none) =
+            SourceSpec::parse("gen:gc:8").materialize_with_ingest(2, 2).unwrap();
+        assert!(none.is_none());
 
         // snp sources carry the matching reference genome; others don't
         assert!(SourceSpec::parse("gen:snp:500").reference().is_some());
         assert!(SourceSpec::parse("gen:gc:8").reference().is_none());
 
         // snp sources are whole 4-line FASTQ reads, not lines
-        let reads = SourceSpec::parse("gen:snp:500").materialize(2).unwrap();
+        let reads = SourceSpec::parse("gen:snp:500").materialize(2, 2).unwrap();
         assert_eq!(reads.num_partitions(), 2);
         match reads.plan().as_ref() {
             crate::dataset::Plan::Source { partitions, .. } => {
@@ -379,8 +463,13 @@ mod tests {
         let err = submitter.validate(&empty_image).unwrap_err().to_string();
         assert!(err.contains("image must not be empty"), "{err}");
 
+        // storage sources validate (against a stub) AND are executable
+        let storage = good.replace("gen:gc:16", "hdfs://genome.txt");
+        let v = submitter.validate(&storage).unwrap();
+        assert!(v.executable);
+
         // opaque sources validate (against a stub) but are not executable
-        let opaque = good.replace("gen:gc:16", "hdfs://genome.txt");
+        let opaque = good.replace("gen:gc:16", "ftp://genome.txt");
         let v = submitter.validate(&opaque).unwrap();
         assert!(!v.executable);
     }

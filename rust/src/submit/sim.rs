@@ -36,6 +36,10 @@ pub struct Executed {
     pub launches: u64,
     /// Records in the collected output.
     pub records: u64,
+    /// Tasks that ran on their locality-preferred worker, summed over
+    /// stages (`StageReport::local_tasks`) — how HDFS- vs object-store-
+    /// backed runs compare in the Figure 3 direction.
+    pub local_tasks: u64,
 }
 
 impl Driver {
@@ -68,7 +72,8 @@ impl Driver {
         let pipeline = wire::decode(envelope)?;
         let (label, partitions) = ingest_of(&pipeline)?;
         let spec = SourceSpec::parse(&label);
-        let (source, reference) = spec.materialize_with_reference(partitions)?;
+        let (source, reference) =
+            spec.materialize_with_reference(partitions, self.config.workers)?;
         // sources that imply a reference genome (gen:snp:) need it
         // baked into the registry's alignment image, so those jobs run
         // on a per-job cluster; everything else shares the driver's
@@ -79,7 +84,13 @@ impl Driver {
         let job = MaRe::source(cluster, source).append_pipeline(&pipeline).build()?;
         let out = job.run()?;
         let records = out.partitions.iter().map(|p| p.records.len() as u64).sum();
-        Ok(Executed { explain: job.explain(), launches: job.container_launches(), records })
+        let local_tasks = out.report.stages.iter().map(|s| s.local_tasks as u64).sum();
+        Ok(Executed {
+            explain: job.explain(),
+            launches: job.container_launches(),
+            records,
+            local_tasks,
+        })
     }
 }
 
@@ -142,7 +153,7 @@ mod tests {
     /// encode it — the plan artifact the other drivers receive.
     fn gc_plan_built_on_driver_a() -> (String, String) {
         let home = Driver::new("driver-a", ClusterConfig::sized(2, 2));
-        let source = SourceSpec::parse("gen:gc:64").materialize(4).unwrap();
+        let source = SourceSpec::parse("gen:gc:64").materialize(4, 2).unwrap();
         let job = MaRe::source(home.cluster().clone(), source)
             .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
             .mounts("/dna", "/count")
@@ -184,7 +195,7 @@ mod tests {
             submitter.submit(&queue, &text).unwrap();
         }
         // one plan with an unresolvable source fails cleanly
-        let opaque = text.replace("gen:gc:64", "hdfs://genome.txt");
+        let opaque = text.replace("gen:gc:64", "ftp://genome.txt");
         submitter.submit(&queue, &opaque).unwrap();
 
         let drivers = two_drivers();

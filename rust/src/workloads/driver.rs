@@ -8,7 +8,7 @@ use crate::config::{BackendKind, RunConfigFile, Workload};
 use crate::dataset::Dataset;
 use crate::error::Result;
 use crate::mare::{wire, Job, MaRe};
-use crate::storage::{ingest_text, Hdfs, IngestReport, LocalFs, StorageBackend, Swift, S3};
+use crate::storage::{ingest_text, IngestReport, StorageBackend};
 
 use super::{gc, genlib, genreads, snp, vs};
 
@@ -20,16 +20,14 @@ pub struct DriverResult {
     pub digest: String,
 }
 
-/// Build the configured backend holding `key` = `bytes`.
+/// Build the configured backend holding `key` = `bytes`. Construction
+/// goes through the storage catalog's one backend-assembly path
+/// ([`crate::storage::StorageCatalog::open`]), so the experiment driver
+/// and submitted storage-URI plans share the same block-size/placement
+/// policy.
 pub fn make_backend(kind: BackendKind, workers: usize, key: &str, bytes: Vec<u8>) -> Result<Box<dyn StorageBackend>> {
-    // block size that spreads any input over all workers
-    let block = (bytes.len() as u64 / (workers as u64 * 4)).max(64 << 10);
-    let mut backend: Box<dyn StorageBackend> = match kind {
-        BackendKind::Hdfs => Box::new(Hdfs::new(workers, block)),
-        BackendKind::Swift => Box::new(Swift::new()),
-        BackendKind::S3 => Box::new(S3::new()),
-        BackendKind::Local => Box::new(LocalFs::new()),
-    };
+    let catalog = crate::storage::StorageCatalog::simulated(workers);
+    let mut backend = catalog.open(kind, bytes.len() as u64);
     backend.put(key, bytes)?;
     Ok(backend)
 }

@@ -30,6 +30,7 @@ const GOLDEN: &[&str] = &[
     "gc_reduce.json",
     "repartition.json",
     "collect_minimal.json",
+    "storage_ingest.json",
 ];
 
 fn golden_path(name: &str) -> String {
