@@ -7,8 +7,9 @@
 //! mare plan --workload gc|vs|snp [--json]   # logical -> optimized -> physical
 //! mare submit <plan.json> [--queue DIR]     # validate + enqueue a wire plan
 //! mare jobs [--queue DIR]                   # list queued/running/done/failed
-//! mare work [--queue DIR] [--drivers N]     # N simulated drivers drain the queue
-//! mare requeue <id> [--queue DIR]           # put a stuck/finished job back
+//! mare work [--queue DIR] [--workers N] [--fault W:K:hold|running]
+//!                                           # threaded worker pool drains the queue
+//! mare requeue <id> [--queue DIR] [--force] # put a stuck/finished job back
 //! mare inspect [--artifacts DIR]            # artifacts + stock images
 //! mare help
 //! ```
@@ -36,12 +37,15 @@ USAGE:
                          enqueue it on the spool directory
   mare jobs  [--queue DIR]
                          list submitted jobs with status + launch counts
-  mare work  [--queue DIR] [--drivers N]
-                         spin N simulated drivers that drain the queue
-  mare requeue <id> [--queue DIR]
+  mare work  [--queue DIR] [--workers N]
+                         spin a pool of N worker THREADS that
+                         concurrently claim and run queued jobs
+  mare requeue <id> [--queue DIR] [--force]
                          put a job back in the queue (recovers jobs
                          stuck `running` after a worker died; also
-                         re-runs `failed`/`done` jobs)
+                         re-runs `failed`/`done` jobs). Fresh `running`
+                         records are presumed live and refused unless
+                         --force
   mare inspect           show AOT artifacts and stock container images
   mare help              this text
 
@@ -56,13 +60,24 @@ OPTIONS (run/plan):
   --config FILE           JSON config (flags override it)
   --artifacts DIR         AOT artifact dir             [./artifacts]
 
-OPTIONS (submit/jobs/work):
+OPTIONS (submit/jobs/work/requeue):
   --queue DIR             job spool directory          [.mare/queue]
-  --drivers N             simulated drivers for work   [2]
+  --workers N             worker threads for work      [2]
+                          (cluster shape per worker comes from --config/
+                          --vcpus; for `work`, --workers sizes the POOL)
+  --drivers N             deprecated alias for --workers
+  --fault W:K:hold|running
+                          inject a worker death: worker W dies on its
+                          K-th claim, either holding the claim (`hold`;
+                          recovered by the stale sweep) or leaving the
+                          job running (`running`; recover with
+                          `mare requeue`). Comma-separate for several.
+  --stale-ms T            claim holds older than T ms are swept [10000]
+  --force                 requeue even a fresh `running` record
 ";
 
-/// Default job spool directory shared by submit/jobs/work.
-const DEFAULT_QUEUE: &str = ".mare/queue";
+/// Default job spool directory shared by submit/jobs/work/requeue.
+const DEFAULT_QUEUE: &str = mare::submit::DEFAULT_QUEUE_DIR;
 
 fn main() -> std::process::ExitCode {
     mare::util::logging::init(mare::util::logging::Level::Info);
@@ -227,24 +242,39 @@ fn cmd_requeue(args: &Args) -> Result<()> {
             mare::error::MareError::Config("usage: mare requeue <id> [--queue DIR]".into())
         })?;
     let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
-    let job = queue.requeue(id)?;
+    let job = if args.flag_bool("force") {
+        queue.requeue_with(id, std::time::Duration::ZERO, true)?
+    } else {
+        queue.requeue(id)?
+    };
     println!("job {} requeued ({})", job.id, job.summary);
     Ok(())
 }
 
 fn cmd_work(args: &Args) -> Result<()> {
-    let cfg = RunConfigFile::from_args(args)?;
+    // for `work`, --workers sizes the POOL (threads), not the simulated
+    // cluster: strip it before resolving the run config so each
+    // worker's driver keeps the configured cluster shape
+    let mut cluster_args = args.clone();
+    cluster_args.flags.remove("workers");
+    let cfg = RunConfigFile::from_args(&cluster_args)?;
     let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
-    let n = args.flag_usize("drivers", 2)?.max(1);
-    let drivers: Vec<mare::submit::Driver> = (0..n)
-        .map(|i| mare::submit::Driver::new(format!("driver-{i}"), cfg.cluster.clone()))
-        .collect();
-    let finished = mare::submit::drain(&queue, &drivers)?;
-    if finished.is_empty() {
-        println!("queue {} is empty", queue.dir().display());
-        return Ok(());
+
+    let legacy = args.flag_usize("drivers", 2)?; // pre-pool flag name
+    let workers = args.flag_usize("workers", legacy)?.max(1);
+    let mut pool_cfg = mare::submit::PoolConfig::new(workers, cfg.cluster.clone());
+    if let Some(spec) = args.flag("fault") {
+        pool_cfg.faults = mare::submit::FaultPlan::parse(spec)?;
     }
-    for job in finished {
+    let stale_default = pool_cfg.stale_after.as_millis() as u64;
+    pool_cfg.stale_after =
+        std::time::Duration::from_millis(args.flag_u64("stale-ms", stale_default)?);
+
+    let outcome = mare::submit::WorkerPool::new(pool_cfg).run(&queue)?;
+    if outcome.finished.is_empty() {
+        println!("queue {} is empty", queue.dir().display());
+    }
+    for job in &outcome.finished {
         let r = job.result.as_ref().expect("drained jobs carry a result");
         println!(
             "job {} -> {} on {} (launches={}, records={}{})",
@@ -255,6 +285,10 @@ fn cmd_work(args: &Args) -> Result<()> {
             r.records,
             if r.detail == "ok" { String::new() } else { format!(", {}", r.detail) },
         );
+    }
+    println!("pool: {} workers, {} claim conflicts", workers, outcome.total_conflicts());
+    for report in &outcome.reports {
+        println!("  {}", report.summary());
     }
     Ok(())
 }

@@ -25,7 +25,9 @@ use crate::dataset::{Dataset, Record};
 use crate::error::{MareError, Result};
 use crate::mare::{wire, Job, MaRe, MountPoint, Pipeline, PipelineBuilder, PipelineOp};
 use crate::storage::StorageCatalog;
-use crate::submit::{ingest_of, SourceSpec};
+use crate::submit::{
+    ingest_of, JobQueue, PoolConfig, SourceSpec, Submitter, WorkerPool, DEFAULT_QUEUE_DIR,
+};
 
 const HELP: &str = "\
 commands:
@@ -45,6 +47,8 @@ commands:
   :save <file>              persist the pipeline as wire JSON (docs/WIRE_FORMAT.md);
                             submit it later with `mare submit <file>`
   :load <file>              restore a saved plan (regenerates gen:/inline: sources)
+  :submit [dir]             enqueue the pipeline on the job spool [.mare/queue]
+  :work [n] [dir]           drain the spool with n worker threads [2]
   reset                     drop the pipeline, keep the dataset
   status                    cluster + pipeline summary
   help                      this text
@@ -111,6 +115,8 @@ impl Session {
             "collect" => self.cmd_run(true),
             ":save" => self.cmd_save(rest),
             ":load" => self.cmd_load_plan(rest),
+            ":submit" => self.cmd_submit(rest),
+            ":work" => self.cmd_work(rest),
             "reset" => {
                 match self.dataset.clone() {
                     Some(ds) => {
@@ -219,6 +225,19 @@ impl Session {
         Ok(format!("loaded inline text in {parts} partitions"))
     }
 
+    /// The session pipeline as a v1 wire envelope, bracketed with its
+    /// `collect` marker — the ONE encoding both `:save` writes and
+    /// `:submit` enqueues, so a saved plan and a submitted plan can
+    /// never drift apart.
+    fn encoded_pipeline(&self) -> Result<String> {
+        let b = self.builder.as_ref().ok_or_else(|| {
+            MareError::Config("no dataset loaded (try `gen gc 512`)".into())
+        })?;
+        let mut ops = b.logical().ops().to_vec();
+        ops.push(PipelineOp::Collect);
+        wire::encode_string(&Pipeline::new(ops))
+    }
+
     /// `:save <file>` — persist the recorded pipeline (bracketed with
     /// its `collect` marker) as a v1 wire envelope.
     fn cmd_save(&self, rest: &str) -> Result<String> {
@@ -226,13 +245,7 @@ impl Session {
         if path.is_empty() {
             return Err(MareError::Config(":save wants a file path".into()));
         }
-        let b = self.builder.as_ref().ok_or_else(|| {
-            MareError::Config("no dataset loaded (try `gen gc 512`)".into())
-        })?;
-        let mut ops = b.logical().ops().to_vec();
-        ops.push(PipelineOp::Collect);
-        let text = wire::encode_string(&Pipeline::new(ops))?;
-        std::fs::write(path, text)?;
+        std::fs::write(path, self.encoded_pipeline()?)?;
         Ok(format!("saved plan to {path} (submit with `mare submit {path}`)"))
     }
 
@@ -268,6 +281,62 @@ impl Session {
             .append_pipeline(&pipeline);
         self.builder = Some(b);
         Ok(format!("loaded plan from {path} | {}", self.pipeline_summary()))
+    }
+
+    /// `:submit [dir]` — run the session's pipeline through the SAME
+    /// admission control as `mare submit` (decode → dry-run build →
+    /// canonical re-encode) and enqueue it on the spool, where any
+    /// `mare work` pool (or `:work` here) can pick it up.
+    fn cmd_submit(&self, rest: &str) -> Result<String> {
+        let dir = match rest.trim() {
+            "" => DEFAULT_QUEUE_DIR,
+            dir => dir,
+        };
+        let text = self.encoded_pipeline()?;
+        let queue = JobQueue::open(dir)?;
+        let submitter = Submitter::new(self.cluster.config.clone());
+        let (id, plan) = submitter.submit(&queue, &text)?;
+        Ok(format!("job {id} queued in {} ({})", queue.dir().display(), plan.summary))
+    }
+
+    /// `:work [n] [dir]` — drain the spool with a threaded worker pool
+    /// (the `mare work` path), sized `n` threads.
+    fn cmd_work(&self, rest: &str) -> Result<String> {
+        let mut workers = 2usize;
+        let mut dir = DEFAULT_QUEUE_DIR.to_string();
+        let mut parts = rest.split_whitespace();
+        if let Some(first) = parts.next() {
+            match first.parse::<usize>() {
+                Ok(n) => {
+                    workers = n.max(1);
+                    if let Some(second) = parts.next() {
+                        dir = second.to_string();
+                    }
+                }
+                Err(_) => dir = first.to_string(),
+            }
+        }
+        let queue = JobQueue::open(dir)?;
+        let pool = WorkerPool::new(PoolConfig::new(workers, self.cluster.config.clone()));
+        let outcome = pool.run(&queue)?;
+        if outcome.finished.is_empty() {
+            return Ok(format!("queue {} is empty", queue.dir().display()));
+        }
+        let mut s = String::new();
+        for job in &outcome.finished {
+            let r = job.result.as_ref().expect("drained jobs carry a result");
+            s.push_str(&format!(
+                "job {} -> {} on {} (launches={})\n",
+                job.id,
+                job.status.name(),
+                r.driver,
+                r.launches
+            ));
+        }
+        for report in &outcome.reports {
+            s.push_str(&format!("  {}\n", report.summary()));
+        }
+        Ok(s)
     }
 
     fn parse_mount(spec: &str) -> MountPoint {
@@ -544,6 +613,28 @@ mod tests {
         assert!(err.contains("not a storage URI"), "{err}");
         let err = s.eval("ingest").unwrap_err().to_string();
         assert!(err.contains("storage URI"), "{err}");
+    }
+
+    #[test]
+    fn submit_and_work_drain_the_session_pipeline_through_a_pool() {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-repl-queue-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().to_string();
+
+        let mut s = session();
+        assert!(s.eval(":submit").unwrap_err().to_string().contains("no dataset"));
+        s.eval("gen gc 32").unwrap();
+        s.eval("map ubuntu /dna /count :: grep -o '[GC]' /dna | wc -l > /count").unwrap();
+        let msg = s.eval(&format!(":submit {dir_s}")).unwrap();
+        assert!(msg.contains("queued"), "{msg}");
+
+        // a threaded pool (the `mare work` path) picks the job up
+        let out = s.eval(&format!(":work 2 {dir_s}")).unwrap();
+        assert!(out.contains("done on pool-"), "{out}");
+        let again = s.eval(&format!(":work 2 {dir_s}")).unwrap();
+        assert!(again.contains("is empty"), "{again}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //! canonicalize → enqueue), and a multi-driver simulation ([`sim`])
 //! demonstrating that a plan built on one driver executes *identically*
 //! on any other — byte-identical `Job::explain()` physical plans and
-//! equal container-launch counters.
+//! equal container-launch counters. The [`pool`] module turns that
+//! simulation into a real concurrency exercise: a threaded
+//! [`WorkerPool`] whose workers contend for the spool's rename-locked
+//! claims, with fault injection for the crash-recovery paths
+//! (stale-hold sweep, `mare requeue`).
 //!
 //! Sources travel by *label*: the plan's `ingest` node carries a label
 //! that every driver resolves with [`SourceSpec`] (`gen:gc:<lines>`,
@@ -48,11 +52,13 @@
 //! assert!(SourceSpec::parse("gen:gc:16").is_executable());
 //! ```
 
+pub mod pool;
 pub mod queue;
 pub mod sim;
 
-pub use queue::{JobQueue, JobRecord, JobResult, JobStatus};
-pub use sim::{crosscheck, drain, Driver, Executed};
+pub use pool::{Death, DeathMode, FaultPlan, PoolConfig, PoolOutcome, PoolReport, WorkerPool};
+pub use queue::{ClaimStats, JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
+pub use sim::{crosscheck, crosscheck_threaded, drain, Driver, Executed};
 
 use std::sync::Arc;
 
@@ -66,6 +72,11 @@ use crate::util::json::Json;
 /// Seed for regenerated `gen:` sources — pinned so every driver
 /// materializes byte-identical records (same default as the CLI).
 pub const GEN_SEED: u64 = 42;
+
+/// Default job spool directory, shared by the CLI
+/// (`mare submit`/`jobs`/`work`/`requeue`) and the REPL
+/// (`:submit`/`:work`).
+pub const DEFAULT_QUEUE_DIR: &str = ".mare/queue";
 
 /// How a submitted plan's `ingest` label materializes into records on
 /// the executing driver.

@@ -1,0 +1,484 @@
+//! Threaded worker pool: N OS threads contending for one shared
+//! file-backed [`JobQueue`].
+//!
+//! [`sim::drain`](super::sim::drain) hands jobs to drivers round-robin
+//! from a single thread, which never exercises the spool's rename-locked
+//! claims under real contention. The pool does: every worker owns a
+//! [`Driver`] (its own cluster, engine and launch counter) and runs a
+//! claim → execute → finish loop against the SAME spool directory, so
+//! claim races, the mid-run stale-hold sweep and `mare requeue`
+//! recovery are hammered the way a multi-node deployment would (the
+//! ROADMAP's threaded-contention item; the paper's near-linear scaling
+//! claim is only credible if the coordination point survives this).
+//!
+//! Crash recovery is testable, not just theoretical: a [`FaultPlan`]
+//! kills chosen workers at chosen points in the claim protocol —
+//! [`DeathMode::MidClaim`] leaves a `.claim` hold that only the
+//! age-gated [`JobQueue::sweep_stale`] (called from every idle worker)
+//! can recover, and [`DeathMode::AfterClaim`] leaves the job stuck
+//! `running`, recoverable only by `mare requeue`. The headline stress
+//! gate over this module lives in `rust/tests/pool_stress.rs` and runs
+//! as a dedicated CI job.
+
+use std::thread;
+use std::time::Duration;
+
+use crate::cluster::ClusterConfig;
+use crate::error::{MareError, Result};
+
+use super::queue::{JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
+use super::sim::Driver;
+
+/// Where in the claim protocol a fault-injected worker dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeathMode {
+    /// Die between the claim's rename and its commit: the `.claim`
+    /// hold stays on disk, invisible to claims, recoverable only by
+    /// the stale-hold sweep once it ages past the gate.
+    MidClaim,
+    /// Die right after the claim commits: the job is stuck `running`
+    /// with no hold, recoverable only by `mare requeue`.
+    AfterClaim,
+}
+
+/// One injected death: worker `worker` dies on its `nth_claim`-th
+/// claim (1-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Death {
+    pub worker: usize,
+    pub nth_claim: u64,
+    pub mode: DeathMode,
+}
+
+/// The pool's injected deaths — empty in production.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub deaths: Vec<Death>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a `--fault` CLI spec: comma-separated `W:K:hold|running`
+    /// entries — worker W dies on its K-th claim, either holding the
+    /// claim (`hold`, mid-claim) or leaving the job `running`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut deaths = Vec::new();
+        for one in spec.split(',') {
+            let one = one.trim();
+            let err = || {
+                MareError::Config(format!(
+                    "bad fault `{one}` (want worker:nth-claim:hold|running, e.g. 2:3:hold)"
+                ))
+            };
+            let parts: Vec<&str> = one.split(':').collect();
+            let [w, k, m] = parts.as_slice() else {
+                return Err(err());
+            };
+            let worker = w.parse().map_err(|_| err())?;
+            let nth_claim: u64 = k.parse().map_err(|_| err())?;
+            if nth_claim == 0 {
+                return Err(err());
+            }
+            let mode = match *m {
+                "hold" => DeathMode::MidClaim,
+                "running" => DeathMode::AfterClaim,
+                _ => return Err(err()),
+            };
+            deaths.push(Death { worker, nth_claim, mode });
+        }
+        Ok(FaultPlan { deaths })
+    }
+
+    fn fires(&self, worker: usize, claim_no: u64, mode: DeathMode) -> Option<Death> {
+        self.deaths
+            .iter()
+            .copied()
+            .find(|d| d.worker == worker && d.nth_claim == claim_no && d.mode == mode)
+    }
+}
+
+/// Worker-pool configuration.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// OS threads claiming from the shared queue.
+    pub workers: usize,
+    /// Cluster shape each worker's driver executes on. One shape for
+    /// the whole pool: the determinism contract (byte-identical
+    /// `Job::explain()`, equal launch counts) is per cluster shape.
+    pub cluster: ClusterConfig,
+    /// Claim holds older than this are presumed abandoned and swept
+    /// back into the queue by idle workers.
+    pub stale_after: Duration,
+    /// Base idle sleep between empty claim scans; doubles (capped at
+    /// 8x) while the queue stays empty-but-pending.
+    pub poll: Duration,
+    /// Injected worker deaths (crash-recovery testing).
+    pub faults: FaultPlan,
+}
+
+impl PoolConfig {
+    pub fn new(workers: usize, cluster: ClusterConfig) -> PoolConfig {
+        PoolConfig {
+            workers,
+            cluster,
+            stale_after: STALE_CLAIM,
+            poll: Duration::from_millis(20),
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+/// What one worker did with its life.
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    pub worker: String,
+    /// Jobs this worker claimed (committed `running`).
+    pub claimed: u64,
+    /// Jobs it executed through to `done`/`failed`.
+    pub jobs_run: u64,
+    /// Container launches across its executed jobs.
+    pub launches: u64,
+    /// Claim rename races lost to competing workers.
+    pub claim_conflicts: u64,
+    /// Backoff sleeps its contended claim scans took.
+    pub claim_backoffs: u64,
+    /// Stale holds it swept back into the queue while idle.
+    pub swept: u64,
+    /// Set when a [`Death`] killed this worker, describing how.
+    pub died: Option<String>,
+}
+
+impl PoolReport {
+    fn new(worker: String) -> PoolReport {
+        PoolReport {
+            worker,
+            claimed: 0,
+            jobs_run: 0,
+            launches: 0,
+            claim_conflicts: 0,
+            claim_backoffs: 0,
+            swept: 0,
+            died: None,
+        }
+    }
+
+    /// `pool-3: 7 jobs, 42 launches, 5 conflicts` (+ death note).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{}: {} jobs, {} launches, {} conflicts",
+            self.worker, self.jobs_run, self.launches, self.claim_conflicts
+        );
+        if self.swept > 0 {
+            s.push_str(&format!(", swept {}", self.swept));
+        }
+        if let Some(death) = &self.died {
+            s.push_str(&format!(" [{death}]"));
+        }
+        s
+    }
+}
+
+/// Everything a pool run produced.
+#[derive(Debug)]
+pub struct PoolOutcome {
+    /// Finished records, id order, exactly as persisted by `finish`.
+    pub finished: Vec<JobRecord>,
+    /// Per-worker reports, worker-index order.
+    pub reports: Vec<PoolReport>,
+}
+
+impl PoolOutcome {
+    /// Total container launches across every worker — the exactly-once
+    /// audit: this equals the sum of per-job single-driver launch
+    /// counts iff no job executed twice and none was lost. (A doubly
+    /// executed job hides in per-record results — the second `finish`
+    /// overwrites the first — but not in the workers' own counters.)
+    pub fn total_launches(&self) -> u64 {
+        self.reports.iter().map(|r| r.launches).sum()
+    }
+
+    pub fn total_conflicts(&self) -> u64 {
+        self.reports.iter().map(|r| r.claim_conflicts).sum()
+    }
+}
+
+/// The pool itself: [`WorkerPool::run`] blocks until the spool is
+/// drained (no queued jobs, no claim holds) and every worker exited.
+pub struct WorkerPool {
+    config: PoolConfig,
+}
+
+impl WorkerPool {
+    pub fn new(config: PoolConfig) -> WorkerPool {
+        WorkerPool { config }
+    }
+
+    /// Spawn the workers and drain the queue.
+    ///
+    /// Jobs stuck `running` by an [`DeathMode::AfterClaim`] death are
+    /// NOT drained here — they are indistinguishable from a live
+    /// worker's in-flight execution, which is exactly why recovering
+    /// them is an explicit operator action (`mare requeue`).
+    pub fn run(&self, queue: &JobQueue) -> Result<PoolOutcome> {
+        if self.config.workers == 0 {
+            return Err(MareError::Submit("worker pool needs at least one worker".into()));
+        }
+        for death in &self.config.faults.deaths {
+            if death.worker >= self.config.workers {
+                return Err(MareError::Submit(format!(
+                    "fault targets worker {} but the pool has {}",
+                    death.worker, self.config.workers
+                )));
+            }
+        }
+        // someone must outlive the fault plan, or a held job's sweep
+        // never happens and the pool cannot drain
+        let immortal = (0..self.config.workers)
+            .any(|w| !self.config.faults.deaths.iter().any(|d| d.worker == w));
+        if !immortal {
+            return Err(MareError::Submit(
+                "fault plan kills every worker — at least one must survive to \
+                 recover held jobs"
+                    .into(),
+            ));
+        }
+
+        let outcomes: Vec<Result<(PoolReport, Vec<JobRecord>)>> = thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.config.workers)
+                .map(|idx| {
+                    let config = &self.config;
+                    scope.spawn(move || worker_loop(idx, config, queue))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(MareError::Submit("pool worker panicked".into()))
+                    })
+                })
+                .collect()
+        });
+
+        let mut finished = Vec::new();
+        let mut reports = Vec::new();
+        for outcome in outcomes {
+            let (report, jobs) = outcome?;
+            reports.push(report);
+            finished.extend(jobs);
+        }
+        finished.sort_by_key(|j| j.id);
+        Ok(PoolOutcome { finished, reports })
+    }
+}
+
+/// One worker's life: claim → (maybe die) → execute → finish, sweeping
+/// stale holds while idle, until the spool has nothing claimable left.
+fn worker_loop(
+    idx: usize,
+    config: &PoolConfig,
+    queue: &JobQueue,
+) -> Result<(PoolReport, Vec<JobRecord>)> {
+    let name = format!("pool-{idx}");
+    let driver = Driver::new(name.clone(), config.cluster.clone());
+    let mut report = PoolReport::new(name);
+    let mut finished = Vec::new();
+    let mut idle_rounds: u32 = 0;
+    loop {
+        // a MidClaim death replaces the worker's next claim: take the
+        // hold, then "die" with it. The death is STICKY — a doomed
+        // worker never claims normally again (falling through after a
+        // momentarily-empty scan would advance its claim count past
+        // the death and orphan the fault), it only retries the fatal
+        // claim until it lands one or the spool drains
+        if let Some(death) = config.faults.fires(idx, report.claimed + 1, DeathMode::MidClaim)
+        {
+            if let Some(id) = queue.claim_abandon()? {
+                report.died = Some(format!(
+                    "died mid-claim #{}, holding job {id}",
+                    death.nth_claim
+                ));
+                return Ok((report, finished));
+            }
+            let (queued, held) = queue.pending()?;
+            if queued == 0 && held == 0 {
+                return Ok((report, finished)); // drained before it could die
+            }
+            thread::sleep(config.poll);
+            continue;
+        }
+        let (job, stats) = queue.claim_with_stats()?;
+        report.claim_conflicts += stats.conflicts;
+        report.claim_backoffs += stats.backoffs;
+        let Some(job) = job else {
+            let swept = queue.sweep_stale(config.stale_after)?;
+            report.swept += swept as u64;
+            // drained when the scan saw nothing queued, this sweep
+            // returned nothing to the queue, and no hold can come back
+            // later — checked via the claim scan's own observation +
+            // a cheap name count, NOT a second full parse of every
+            // spool record on every idle beat. (`running` jobs belong
+            // to live workers finishing up, or to dead ones awaiting
+            // an operator requeue.)
+            if stats.queued_seen == 0 && swept == 0 && queue.held_count()? == 0 {
+                return Ok((report, finished));
+            }
+            // work exists but is not claimable yet — a live claim in
+            // flight, or a hold aging toward the sweep gate; bounded
+            // exponential idle backoff
+            thread::sleep(config.poll.saturating_mul(1u32 << idle_rounds.min(3)));
+            idle_rounds += 1;
+            continue;
+        };
+        idle_rounds = 0;
+        report.claimed += 1;
+        if let Some(death) = config.faults.fires(idx, report.claimed, DeathMode::AfterClaim) {
+            report.died = Some(format!(
+                "died after claim #{} committed, leaving job {} running",
+                death.nth_claim, job.id
+            ));
+            return Ok((report, finished));
+        }
+        let (status, result) = match driver.execute(&job.plan) {
+            Ok(ex) => (
+                JobStatus::Done,
+                JobResult {
+                    driver: driver.name.clone(),
+                    launches: ex.launches,
+                    records: ex.records,
+                    detail: "ok".into(),
+                },
+            ),
+            Err(e) => (
+                JobStatus::Failed,
+                JobResult {
+                    driver: driver.name.clone(),
+                    launches: 0,
+                    records: 0,
+                    detail: e.to_string(),
+                },
+            ),
+        };
+        report.jobs_run += 1;
+        report.launches += result.launches;
+        finished.push(queue.finish(job, status, result)?);
+    }
+}
+
+/// Compile-time proof the pool's sharing is sound: the queue handle is
+/// borrowed by every worker thread and drivers run whole jobs inside
+/// them, so everything the submit/storage path materializes must stay
+/// `Send + Sync`. If a non-thread-safe handle ever sneaks into the
+/// cluster, registry, artifact runtime or dataset types, this stops
+/// compiling — long before a stress test flakes.
+#[allow(dead_code)]
+fn assert_thread_safe() {
+    fn ok<T: Send + Sync>() {}
+    ok::<JobQueue>();
+    ok::<Driver>();
+    ok::<JobRecord>();
+    ok::<PoolConfig>();
+    ok::<crate::storage::StorageCatalog>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submit::Submitter;
+
+    fn tmp_queue(name: &str) -> JobQueue {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-pool-test-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        JobQueue::open(dir).unwrap()
+    }
+
+    fn gc_plan() -> String {
+        r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "gen:gc:16", "partitions": 2},
+            {"op": "map", "image": "ubuntu",
+             "command": "grep -o '[GC]' /dna | wc -l > /count",
+             "input": {"kind": "text", "path": "/dna"},
+             "output": {"kind": "text", "path": "/count"}},
+            {"op": "collect"}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn fault_specs_parse_and_reject_garbage() {
+        let plan = FaultPlan::parse("2:3:hold, 0:1:running").unwrap();
+        assert_eq!(plan.deaths.len(), 2);
+        assert_eq!(
+            plan.deaths[0],
+            Death { worker: 2, nth_claim: 3, mode: DeathMode::MidClaim }
+        );
+        assert_eq!(
+            plan.deaths[1],
+            Death { worker: 0, nth_claim: 1, mode: DeathMode::AfterClaim }
+        );
+        assert_eq!(plan.fires(2, 3, DeathMode::MidClaim), Some(plan.deaths[0]));
+        assert_eq!(plan.fires(2, 3, DeathMode::AfterClaim), None);
+        assert_eq!(plan.fires(1, 3, DeathMode::MidClaim), None);
+
+        for bad in ["2:3", "x:1:hold", "1:y:hold", "1:0:hold", "1:2:explode", ""] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn pool_rejects_unrunnable_configs() {
+        let q = tmp_queue("badcfg");
+        let cluster = ClusterConfig::sized(2, 2);
+
+        let pool = WorkerPool::new(PoolConfig::new(0, cluster.clone()));
+        assert!(pool.run(&q).is_err());
+
+        let mut cfg = PoolConfig::new(2, cluster.clone());
+        cfg.faults = FaultPlan::parse("5:1:hold").unwrap();
+        assert!(WorkerPool::new(cfg).run(&q).unwrap_err().to_string().contains("worker 5"));
+
+        let mut cfg = PoolConfig::new(2, cluster);
+        cfg.faults = FaultPlan::parse("0:1:hold,1:1:running").unwrap();
+        let err = WorkerPool::new(cfg).run(&q).unwrap_err().to_string();
+        assert!(err.contains("at least one must survive"), "{err}");
+    }
+
+    #[test]
+    fn a_small_pool_drains_a_queue_exactly_once() {
+        let q = tmp_queue("drain");
+        let cluster = ClusterConfig::sized(2, 2);
+        let submitter = Submitter::new(cluster.clone());
+        for _ in 0..6 {
+            submitter.submit(&q, &gc_plan()).unwrap();
+        }
+
+        let pool = WorkerPool::new(PoolConfig::new(3, cluster.clone()));
+        let outcome = pool.run(&q).unwrap();
+
+        assert_eq!(outcome.finished.len(), 6);
+        assert!(outcome.finished.iter().all(|j| j.status == JobStatus::Done));
+        // the same plan yields the same launch count on every worker —
+        // and the workers' own counters agree with the per-job records,
+        // so nothing ran twice
+        let per_job: Vec<u64> = outcome
+            .finished
+            .iter()
+            .map(|j| j.result.as_ref().unwrap().launches)
+            .collect();
+        assert!(per_job.windows(2).all(|w| w[0] == w[1]), "{per_job:?}");
+        assert_eq!(outcome.total_launches(), per_job.iter().sum::<u64>());
+        assert_eq!(outcome.reports.len(), 3);
+        assert!(outcome.reports.iter().all(|r| r.died.is_none()));
+
+        // drained spool: an immediate rerun has nothing to do
+        let rerun = pool.run(&q).unwrap();
+        assert!(rerun.finished.is_empty());
+    }
+}

@@ -9,14 +9,71 @@
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use crate::error::{MareError, Result};
 use crate::util::json::Json;
 
 /// Claim holds older than this are presumed abandoned by a dead worker
 /// (live claims last milliseconds) and are swept back into the queue
-/// on [`JobQueue::open`].
-const STALE_CLAIM_SECS: u64 = 10;
+/// on [`JobQueue::open`] — and by [`JobQueue::sweep_stale`], which a
+/// running worker pool calls from its idle loop. The same threshold
+/// gates [`JobQueue::requeue`]: a `running` record younger than this is
+/// presumed to belong to a live worker.
+pub const STALE_CLAIM: Duration = Duration::from_secs(10);
+
+/// How many full scan passes [`JobQueue::claim`] makes when every
+/// queued candidate it saw was snatched by a competing claimer, and the
+/// cap on the exponential backoff slept between passes. Bounded so a
+/// contended claim costs at most a few milliseconds before reporting
+/// "nothing claimable" back to the caller's own retry loop.
+const CLAIM_ROUNDS: u32 = 4;
+const CLAIM_BACKOFF_CAP: Duration = Duration::from_millis(16);
+
+/// Temp files carry a process-unique + monotonic suffix so two threads
+/// persisting the same job id (e.g. a `finish` racing a `requeue`)
+/// never interleave writes to one temp path — each write lands whole
+/// via its own rename, and the canonical file holds one writer's
+/// complete record, never a splice of both.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// What one [`JobQueue::claim`] scan observed — how contended the spool
+/// was, for worker-pool reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClaimStats {
+    /// Queued candidates another claimer snatched first (rename lost).
+    pub conflicts: u64,
+    /// Backoff sleeps taken between contended scan passes.
+    pub backoffs: u64,
+    /// Queued candidates the final scan pass saw. When a claim comes
+    /// back empty, `queued_seen == 0` tells the caller the spool had
+    /// nothing claimable in sight — a worker pool combines it with
+    /// [`JobQueue::held_count`] to decide termination without
+    /// re-parsing every spool record.
+    pub queued_seen: u64,
+}
+
+/// Milliseconds since the Unix epoch — the stamp embedded in claim-hold
+/// file names (see [`JobQueue::sweep_stale`]).
+fn now_millis() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Outcome of one rename-locked claim attempt on a single candidate.
+enum ClaimAttempt {
+    /// This claimer won the rename and committed the job `running`.
+    Won(JobRecord),
+    /// A competing claimer (or sweeper) touched the file first —
+    /// worth rescanning after a backoff.
+    Contended,
+    /// The job turned out not to be claimable (finished or requeued
+    /// under us) — not contention, don't back off for it.
+    Gone,
+}
 
 /// Queue lifecycle of a submitted job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,7 +184,7 @@ impl JobQueue {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
         let queue = JobQueue { dir };
-        queue.recover_stale_claims()?;
+        queue.sweep_stale(STALE_CLAIM)?;
         Ok(queue)
     }
 
@@ -139,39 +196,77 @@ impl JobQueue {
         self.dir.join(format!("job-{id:06}.json"))
     }
 
-    /// Claim holds are transient (they live for the few file ops inside
-    /// one [`Self::claim`] call); a hold that is still present — and
-    /// has AGED well past any live claim — when a process opens the
-    /// queue belongs to a dead worker. Sweep it back so the job is
-    /// claimable again rather than silently lost. The age gate keeps a
-    /// fresh `open()` from yanking an in-flight claim out from under a
-    /// live worker; if a holder is merely slower than the gate, the
-    /// job may execute twice — recoverable — while silent loss is not.
-    fn recover_stale_claims(&self) -> Result<()> {
-        self.recover_claims_older_than(STALE_CLAIM_SECS)
+    /// A claim-hold path for `id`, stamped with the claim instant IN
+    /// THE NAME: `job-NNNNNN.json.claim-<unix_millis>`. The stamp
+    /// travels atomically with the rename that takes the hold, so
+    /// there is never a moment when a freshly taken hold advertises
+    /// the canonical file's old mtime — a mid-run sweep racing such a
+    /// window would steal a live claim and double-run the job.
+    fn hold_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id:06}.json.claim-{}", now_millis()))
     }
 
-    fn recover_claims_older_than(&self, min_age_secs: u64) -> Result<()> {
+    /// Whether any claim hold (any stamp) exists for `id`.
+    fn has_hold(&self, id: u64) -> Result<bool> {
+        let prefix = format!("job-{id:06}.json.claim");
+        for entry in fs::read_dir(&self.dir)? {
+            if entry?.file_name().to_string_lossy().starts_with(&prefix) {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Claim holds are transient (they live for the few file ops inside
+    /// one [`Self::claim`] call); a hold that is still present — and
+    /// has AGED well past any live claim — belongs to a dead worker.
+    /// Sweep it back so the job is claimable again rather than silently
+    /// lost. The age gate keeps the sweep from yanking an in-flight
+    /// claim out from under a live worker; if a holder is merely slower
+    /// than the gate, the job may execute twice — recoverable — while
+    /// silent loss is not.
+    ///
+    /// Callable MID-RUN (a worker pool's idle loop calls it between
+    /// claim scans, so a pool whose worker dies holding a claim recovers
+    /// the job without waiting for the next process start), as well as
+    /// from [`Self::open`]. Returns how many holds were swept back.
+    /// Aged-out temp files (crashed writers) are deleted as a side
+    /// effect; live ones are far younger than any sane `min_age`.
+    pub fn sweep_stale(&self, min_age: Duration) -> Result<usize> {
+        let mut swept = 0;
         for entry in fs::read_dir(&self.dir)? {
             let entry = entry?;
             let name = entry.file_name();
             let name = name.to_string_lossy().to_string();
-            let Some(stem) = name.strip_suffix(".claim") else {
-                continue;
-            };
-            let age_secs = entry
+            let mtime_age = entry
                 .metadata()
                 .and_then(|m| m.modified())
                 .ok()
-                .and_then(|t| t.elapsed().ok())
-                .map(|d| d.as_secs());
-            // unreadable age counts as fresh: never sweep a hold we
-            // cannot prove stale
-            if age_secs.map(|a| a >= min_age_secs).unwrap_or(false) {
-                let _ = fs::rename(entry.path(), self.dir.join(stem));
+                .and_then(|t| t.elapsed().ok());
+            if let Some((stem, stamp)) = name.split_once(".claim") {
+                // the stamp in the hold's NAME is authoritative — it
+                // was written atomically by the claiming rename. Bare
+                // `.claim` holds (older states, hand-made test spools)
+                // fall back to the file mtime; an unreadable age counts
+                // as fresh, since a hold we cannot prove stale must
+                // never be swept out from under a live claimer.
+                let age = stamp
+                    .strip_prefix('-')
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .map(|t| Duration::from_millis(now_millis().saturating_sub(t)))
+                    .or(mtime_age);
+                if age.map(|a| a >= min_age).unwrap_or(false)
+                    && fs::rename(entry.path(), self.dir.join(stem)).is_ok()
+                {
+                    swept += 1;
+                }
+            } else if name.contains(".json.tmp-")
+                && mtime_age.map(|a| a >= min_age).unwrap_or(false)
+            {
+                let _ = fs::remove_file(entry.path());
             }
         }
-        Ok(())
+        Ok(swept)
     }
 
     /// Highest id present in the spool under ANY state — canonical,
@@ -250,14 +345,30 @@ impl JobQueue {
         Ok(id)
     }
 
-    /// Persist a record atomically: the full content goes to a temp
-    /// file that is renamed over the canonical path, so concurrent
-    /// readers never observe truncated or partial JSON.
-    pub fn write(&self, rec: &JobRecord) -> Result<()> {
-        let tmp = self.dir.join(format!("job-{:06}.json.tmp", rec.id));
+    /// A writer-unique temp path for job `id`. The `job-<id>` prefix
+    /// keeps the id reserved in [`Self::max_spool_id`] while the
+    /// canonical file is renamed aside; the pid + sequence suffix keeps
+    /// two concurrent writers of the SAME id (finish racing requeue) on
+    /// separate temp files, so each rename publishes one complete
+    /// record instead of the two writers splicing through a shared path.
+    fn tmp_path(&self, id: u64) -> PathBuf {
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        self.dir.join(format!("job-{id:06}.json.tmp-{}-{seq}", std::process::id()))
+    }
+
+    /// The one atomic-persist idiom every spool rewrite goes through:
+    /// full content to a writer-unique temp file, renamed over `dest`,
+    /// so concurrent readers never observe truncated or partial JSON.
+    fn persist_at(&self, rec: &JobRecord, dest: &Path) -> Result<()> {
+        let tmp = self.tmp_path(rec.id);
         fs::write(&tmp, rec.to_json().to_string_pretty())?;
-        fs::rename(&tmp, self.path_of(rec.id))?;
+        fs::rename(&tmp, dest)?;
         Ok(())
+    }
+
+    /// Persist a record atomically at its canonical path.
+    pub fn write(&self, rec: &JobRecord) -> Result<()> {
+        self.persist_at(rec, &self.path_of(rec.id))
     }
 
     /// Claim the lowest-id queued job (FIFO), marking it running.
@@ -268,62 +379,142 @@ impl JobQueue {
     /// queued candidate; any failure under the hold restores the file
     /// instead of stranding the job.
     pub fn claim(&self) -> Result<Option<JobRecord>> {
+        Ok(self.claim_with_stats()?.0)
+    }
+
+    /// [`Self::claim`] plus contention statistics. When a whole scan
+    /// pass saw queued candidates but lost every rename race, the scan
+    /// backs off (bounded exponential: 1ms, 2ms, 4ms, capped at 16ms,
+    /// at most 4 passes) and rescans — under an 8-thread pool hammering
+    /// one FIFO head, the immediate rescan would otherwise stampede the
+    /// directory with `read_dir` + rename traffic that mostly loses
+    /// again.
+    pub fn claim_with_stats(&self) -> Result<(Option<JobRecord>, ClaimStats)> {
+        let mut stats = ClaimStats::default();
+        for round in 0..CLAIM_ROUNDS {
+            if round > 0 {
+                stats.backoffs += 1;
+                let backoff = Duration::from_millis(1 << (round - 1));
+                std::thread::sleep(backoff.min(CLAIM_BACKOFF_CAP));
+            }
+            let mut contended = false;
+            stats.queued_seen = 0;
+            for candidate in self.list()? {
+                if candidate.status != JobStatus::Queued {
+                    continue;
+                }
+                stats.queued_seen += 1;
+                match self.try_claim_one(candidate.id)? {
+                    ClaimAttempt::Won(job) => return Ok((Some(job), stats)),
+                    ClaimAttempt::Contended => {
+                        contended = true;
+                        stats.conflicts += 1;
+                    }
+                    ClaimAttempt::Gone => {}
+                }
+            }
+            if !contended {
+                break; // genuinely nothing claimable — don't spin
+            }
+        }
+        Ok((None, stats))
+    }
+
+    /// One rename-locked claim attempt on job `id`.
+    fn try_claim_one(&self, id: u64) -> Result<ClaimAttempt> {
+        let path = self.path_of(id);
+        // the hold's name carries the claim stamp, atomically with the
+        // locking rename itself — a racing sweep always sees this hold
+        // as fresh, never the canonical file's submit-time mtime
+        let hold = self.hold_path(id);
+        if fs::rename(&path, &hold).is_err() {
+            return Ok(ClaimAttempt::Contended); // another claimer won
+        }
+        // the rename is the lock; the held file is authoritative
+        let text = match fs::read_to_string(&hold) {
+            Ok(text) => text,
+            // hold vanished: a recovering peer swept it back; retry
+            Err(_) => return Ok(ClaimAttempt::Contended),
+        };
+        let mut job = match Json::parse(&text).and_then(|j| JobRecord::from_json(&j)) {
+            Ok(job) => job,
+            Err(e) => {
+                let _ = fs::rename(&hold, &path);
+                return Err(e);
+            }
+        };
+        if job.status != JobStatus::Queued {
+            fs::rename(&hold, &path)?;
+            return Ok(ClaimAttempt::Gone); // finished/requeued under us
+        }
+        job.status = JobStatus::Running;
+        // commit by renames only: the Running record lands in the
+        // hold atomically (temp+rename), then the hold moves back
+        // to the canonical path, consuming it. After the commit no
+        // hold exists, so a stale-claim sweep can never resurrect
+        // the Queued copy over a committed Running record. (A
+        // sweep racing the *middle* of this claim can re-queue the
+        // job and at worst run it twice — the documented recovery
+        // tradeoff; it can no longer corrupt or lose state.)
+        self.persist_at(&job, &hold)?;
+        if fs::rename(&hold, &path).is_err() {
+            // a recovering peer swept the hold (carrying our fresh
+            // Running record) to the canonical path between the two
+            // renames — nobody would execute it, so put the job
+            // back in the queue instead of stranding it `running`.
+            // Forced: the swept record says `running` and is fresh,
+            // which the operator-facing age gate would refuse.
+            let _ = self.requeue_with(job.id, Duration::ZERO, true);
+            return Ok(ClaimAttempt::Contended);
+        }
+        Ok(ClaimAttempt::Won(job))
+    }
+
+    /// Fault-injection hook for crash-recovery tests and the worker
+    /// pool's death simulation: perform ONLY the first half of a claim
+    /// — the rename that takes the hold — then abandon it. This leaves
+    /// exactly the on-disk state a worker leaves when it dies mid-claim
+    /// (a `.claim` hold, stamped at the claim instant), which only
+    /// [`Self::sweep_stale`] can recover. Returns the held job's id.
+    pub fn claim_abandon(&self) -> Result<Option<u64>> {
         for candidate in self.list()? {
             if candidate.status != JobStatus::Queued {
                 continue;
             }
             let path = self.path_of(candidate.id);
-            let hold = path.with_extension("json.claim");
+            // the stamped name marks the claim instant, like a real claim
+            let hold = self.hold_path(candidate.id);
             if fs::rename(&path, &hold).is_err() {
-                continue; // another worker claimed it first
-            }
-            // the rename is the lock; the held file is authoritative
-            let text = match fs::read_to_string(&hold) {
-                Ok(text) => text,
-                // hold vanished: a recovering peer swept it back; retry
-                Err(_) => continue,
-            };
-            // re-stamp the hold: rename preserves the submit-time
-            // mtime, which would make any not-freshly-submitted job
-            // look instantly "stale" to a racing open(); rewriting
-            // pins the age gate to the CLAIM instant. (Sweepers only
-            // rename holds, never read them, so this plain write
-            // cannot be partially observed.)
-            let _ = fs::write(&hold, &text);
-            let mut job = match Json::parse(&text).and_then(|j| JobRecord::from_json(&j)) {
-                Ok(job) => job,
-                Err(e) => {
-                    let _ = fs::rename(&hold, &path);
-                    return Err(e);
-                }
-            };
-            if job.status != JobStatus::Queued {
-                fs::rename(&hold, &path)?;
                 continue;
             }
-            job.status = JobStatus::Running;
-            // commit by renames only: the Running record lands in the
-            // hold atomically (temp+rename), then the hold moves back
-            // to the canonical path, consuming it. After the commit no
-            // hold exists, so a stale-claim sweep can never resurrect
-            // the Queued copy over a committed Running record. (A
-            // sweep racing the *middle* of this claim can re-queue the
-            // job and at worst run it twice — the documented recovery
-            // tradeoff; it can no longer corrupt or lose state.)
-            let tmp = self.dir.join(format!("job-{:06}.json.tmp", job.id));
-            fs::write(&tmp, job.to_json().to_string_pretty())?;
-            fs::rename(&tmp, &hold)?;
-            if fs::rename(&hold, &path).is_err() {
-                // a recovering peer swept the hold (carrying our fresh
-                // Running record) to the canonical path between the two
-                // renames — nobody would execute it, so put the job
-                // back in the queue instead of stranding it `running`
-                let _ = self.requeue(job.id);
-                continue;
-            }
-            return Ok(Some(job));
+            return Ok(Some(candidate.id));
         }
         Ok(None)
+    }
+
+    /// Claim holds currently present (any stamp) — a cheap name scan,
+    /// no record parsing. Held jobs may return via
+    /// [`Self::sweep_stale`] once they age out, so a worker pool keeps
+    /// polling while any exist.
+    pub fn held_count(&self) -> Result<usize> {
+        let mut held = 0;
+        for entry in fs::read_dir(&self.dir)? {
+            if entry?.file_name().to_string_lossy().contains(".json.claim") {
+                held += 1;
+            }
+        }
+        Ok(held)
+    }
+
+    /// `(queued, held)` spool counts: queued jobs are claimable now;
+    /// held jobs may come back via the stale sweep, so nothing is
+    /// finished-for-good until BOTH are zero. (Parses every record —
+    /// the pool's hot idle path avoids this via
+    /// [`ClaimStats::queued_seen`] + [`Self::held_count`].)
+    pub fn pending(&self) -> Result<(usize, usize)> {
+        let queued =
+            self.list()?.iter().filter(|j| j.status == JobStatus::Queued).count();
+        Ok((queued, self.held_count()?))
     }
 
     /// Record an execution outcome for a claimed job; returns the
@@ -345,12 +536,99 @@ impl JobQueue {
     /// Put a job back in the queue, clearing any recorded result — the
     /// operator's recovery path (`mare requeue <id>`) for jobs stuck
     /// `running` after their worker died post-claim, and for re-running
-    /// `failed`/`done` jobs.
+    /// `failed`/`done` jobs. A `running` record younger than
+    /// [`STALE_CLAIM`] is presumed to belong to a live worker and is
+    /// refused (requeueing it would make a second worker execute the
+    /// job concurrently); see [`Self::requeue_with`] to tune or force.
     pub fn requeue(&self, id: u64) -> Result<JobRecord> {
-        let mut job = self.get(id)?;
+        self.requeue_with(id, STALE_CLAIM, false)
+    }
+
+    /// [`Self::requeue`] with an explicit liveness threshold. The
+    /// rewrite is rename-locked like a claim (the canonical file moves
+    /// to the `.claim` hold for the read-modify-write), so a requeue
+    /// can never interleave with a claim's own read-modify-write: one
+    /// of the two renames loses and reports contention instead of both
+    /// writing. `force` skips the liveness gate — the operator insisting
+    /// the claiming worker is dead, accepting a double execution if not.
+    pub fn requeue_with(&self, id: u64, min_age: Duration, force: bool) -> Result<JobRecord> {
+        let path = self.path_of(id);
+        // stamped name: a racing sweep sees OUR hold as fresh (see
+        // hold_path), while the held file keeps the record's mtime
+        let hold = self.hold_path(id);
+        if fs::rename(&path, &hold).is_err() {
+            return Err(if self.has_hold(id)? {
+                MareError::Submit(format!(
+                    "job {id} is mid-claim by a worker right now — retry in a moment"
+                ))
+            } else {
+                MareError::Submit(format!(
+                    "job {id}: not found in spool {}",
+                    self.dir.display()
+                ))
+            });
+        }
+        // the record's age, measured UNDER the lock from the held
+        // file's mtime (the rename preserved it): for a `running`
+        // record this is the time since the claim committed. A claim
+        // sliding in just before our rename already refreshed it, so
+        // it cannot be mistaken for a stale record.
+        let age = fs::metadata(&hold)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok());
+        let text = match fs::read_to_string(&hold) {
+            Ok(text) => text,
+            Err(_) => {
+                // a sweeper raced us and already returned the job
+                return Err(MareError::Submit(format!(
+                    "job {id} was swept back to the queue concurrently — retry"
+                )));
+            }
+        };
+        let mut job = match Json::parse(&text).and_then(|j| JobRecord::from_json(&j)) {
+            Ok(job) => job,
+            Err(e) => {
+                let _ = fs::rename(&hold, &path);
+                return Err(e);
+            }
+        };
+        // liveness gate, checked under the lock
+        if job.status == JobStatus::Running
+            && !force
+            && age.map(|a| a < min_age).unwrap_or(true)
+        {
+            // restore — unless the claiming worker's `finish` (which is
+            // not rename-locked; it owns the job) landed a newer record
+            // on the canonical path while we held the lock. hard_link
+            // is the atomic no-clobber restore: it fails if a record
+            // exists, and then the newer result must be kept, not
+            // overwritten by our stale `running` copy. It also keeps
+            // the original commit mtime, so operator retries watch the
+            // age GROW toward the gate instead of resetting it.
+            if fs::hard_link(&hold, &path).is_ok() || path.exists() {
+                let _ = fs::remove_file(&hold);
+            } else {
+                // filesystem without hard links (exFAT, some network
+                // mounts): fall back to a plain rename. The no-clobber
+                // guarantee narrows to a window, but deleting the
+                // job's only record would be strictly worse.
+                let _ = fs::rename(&hold, &path);
+            }
+            return Err(MareError::Submit(format!(
+                "job {id} is running and its record is fresh — the claiming worker is \
+                 presumed alive, and requeueing now would execute the job twice; retry \
+                 once the record is {}s old, or force the requeue",
+                min_age.as_secs()
+            )));
+        }
         job.status = JobStatus::Queued;
         job.result = None;
-        self.write(&job)?;
+        self.persist_at(&job, &hold)?;
+        // consume the hold; if a sweeper beat us to this rename, it
+        // moved our committed Queued copy to the canonical path itself,
+        // so the requeue still landed
+        let _ = fs::rename(&hold, &path);
         Ok(job)
     }
 }
@@ -433,11 +711,97 @@ mod tests {
         assert_eq!(q2.list().unwrap().len(), 1);
         // ...but once a hold has aged past any live claim, the sweep
         // returns the job to the queue
-        q2.recover_claims_older_than(0).unwrap();
+        assert_eq!(q2.sweep_stale(Duration::ZERO).unwrap(), 1);
         let jobs = q2.list().unwrap();
         assert_eq!(jobs.len(), 2);
         assert_eq!((jobs[0].id, jobs[0].status), (id, JobStatus::Queued));
         assert_eq!(q2.claim().unwrap().unwrap().id, id);
+    }
+
+    /// Regression (ISSUE 4 satellite): stale holds used to be swept only
+    /// at `open()` — a pool whose worker died mid-run leaked the job
+    /// until the next process start. `sweep_stale` is callable mid-run.
+    #[test]
+    fn sweep_stale_recovers_abandoned_holds_without_reopening() {
+        let q = tmp_queue("midrun-sweep");
+        let a = q.submit(plan(), "a".into()).unwrap();
+        let b = q.submit(plan(), "b".into()).unwrap();
+
+        // a worker dies mid-claim: hold taken, never committed
+        assert_eq!(q.claim_abandon().unwrap(), Some(a));
+        assert_eq!(q.pending().unwrap(), (1, 1));
+        // the held job is invisible to claims...
+        assert_eq!(q.claim().unwrap().unwrap().id, b);
+        assert!(q.claim().unwrap().is_none());
+
+        // ...a fresh hold survives an age-gated sweep (live claims must
+        // never be yanked)...
+        assert_eq!(q.sweep_stale(STALE_CLAIM).unwrap(), 0);
+        // ...and the SAME open queue recovers it once it ages out
+        assert_eq!(q.sweep_stale(Duration::ZERO).unwrap(), 1);
+        assert_eq!(q.pending().unwrap(), (1, 0));
+        assert_eq!(q.claim().unwrap().unwrap().id, a);
+    }
+
+    #[test]
+    fn requeue_refuses_fresh_running_records_unless_forced() {
+        let q = tmp_queue("requeue-gate");
+        let id = q.submit(plan(), "a".into()).unwrap();
+        let job = q.claim().unwrap().unwrap();
+        assert_eq!(job.id, id);
+
+        // freshly `running` = presumed live: the age-gated requeue
+        // refuses rather than risking a double execution
+        let err = q.requeue(id).unwrap_err().to_string();
+        assert!(err.contains("presumed alive"), "{err}");
+        assert_eq!(q.get(id).unwrap().status, JobStatus::Running);
+
+        // a zero threshold treats any running record as dead…
+        assert_eq!(q.requeue_with(id, Duration::ZERO, false).unwrap().status, JobStatus::Queued);
+        // …and force skips the gate entirely
+        let job = q.claim().unwrap().unwrap();
+        assert_eq!(job.id, id);
+        assert_eq!(q.requeue_with(id, STALE_CLAIM, true).unwrap().status, JobStatus::Queued);
+
+        // done/failed jobs requeue freely (intentional re-runs)
+        let job = q.claim().unwrap().unwrap();
+        let done = q
+            .finish(
+                job,
+                JobStatus::Done,
+                JobResult { driver: "d".into(), launches: 1, records: 1, detail: "ok".into() },
+            )
+            .unwrap();
+        assert_eq!(done.status, JobStatus::Done);
+        assert_eq!(q.requeue(id).unwrap().status, JobStatus::Queued);
+
+        // unknown ids get a spool-specific error, not a claim hint
+        let err = q.requeue(99).unwrap_err().to_string();
+        assert!(err.contains("not found in spool"), "{err}");
+    }
+
+    #[test]
+    fn claim_stats_report_contention_shape() {
+        let q = tmp_queue("claim-stats");
+        // empty queue: no candidates, no conflicts, no backoffs
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert!(job.is_none());
+        assert_eq!(stats, ClaimStats::default());
+
+        // a clean single-claim run sees no contention either, and the
+        // scan reports the candidate it observed
+        q.submit(plan(), "a".into()).unwrap();
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert!(job.is_some());
+        assert_eq!(stats.conflicts, 0);
+        assert_eq!(stats.queued_seen, 1);
+
+        // drained again: nothing in sight (what a pool's idle loop
+        // combines with held_count() to decide termination)
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert!(job.is_none());
+        assert_eq!(stats.queued_seen, 0);
+        assert_eq!(q.held_count().unwrap(), 0);
     }
 
     #[test]

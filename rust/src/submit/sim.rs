@@ -138,6 +138,28 @@ pub fn crosscheck(envelope: &Json, drivers: &[Driver]) -> Result<Vec<Executed>> 
     drivers.iter().map(|d| d.execute(envelope)).collect()
 }
 
+/// [`crosscheck`], but every driver executes on its own OS thread,
+/// concurrently. Results come back in driver order, so the assertions
+/// are the same — byte-identical `Job::explain()`, equal launch
+/// counts — with the added claim that the determinism contract holds
+/// no matter WHICH thread ran the job (shared state in the engine,
+/// registry or artifact runtime that is merely single-thread-
+/// deterministic would surface here).
+pub fn crosscheck_threaded(envelope: &Json, drivers: &[Driver]) -> Result<Vec<Executed>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            drivers.iter().map(|d| scope.spawn(move || d.execute(envelope))).collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    Err(MareError::Submit("crosscheck thread panicked".into()))
+                })
+            })
+            .collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +202,16 @@ mod tests {
         assert_eq!(runs[0].launches, runs[1].launches);
         assert!(runs[0].launches > 0, "the job must actually run containers");
         assert_eq!(runs[0].records, runs[1].records);
+
+        // the threaded variant upholds the same contract concurrently:
+        // byte-identical explains and launch counts, whichever thread
+        // ran the job
+        let threaded = crosscheck_threaded(&envelope, &drivers).unwrap();
+        assert_eq!(threaded.len(), 2);
+        for run in &threaded {
+            assert_eq!(run.explain, home_explain);
+            assert_eq!(run.launches, runs[0].launches);
+        }
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Contended work-pool stress — the headline CI concurrency gate
+//! (ISSUE 4; run in a loop by the `concurrency-stress` CI job).
+//!
+//! 8 worker THREADS hammer one shared file-backed spool holding 64
+//! mixed jobs (`gen:` regenerated sources and `hdfs://`/`swift://`/
+//! `local://` storage URIs), with injected worker deaths at both
+//! dangerous points of the claim protocol:
+//!
+//! * mid-claim (the `.claim` hold survives its owner) — recovered by
+//!   the age-gated stale sweep idle workers run mid-pool;
+//! * after the claim commits (the job is stuck `running`) — recovered
+//!   by the operator `requeue` path.
+//!
+//! The acceptance assertions are exactly-once accounting: every job
+//! finishes `done`, the workers' OWN launch counters sum to the sum of
+//! per-job single-driver launch counts (a doubly executed job hides in
+//! per-record results but not in the workers' counters), and a
+//! threaded crosscheck yields byte-identical `Job::explain()` per plan
+//! no matter which thread ran it. Rounds are repeated with a rotated
+//! (but pinned — sources regenerate from fixed seeds) job mix so the
+//! claim interleavings differ while every expectation stays exact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use mare::cluster::ClusterConfig;
+use mare::submit::{
+    crosscheck_threaded, Driver, FaultPlan, JobQueue, JobStatus, PoolConfig, Submitter,
+    WorkerPool, STALE_CLAIM,
+};
+use mare::util::json::Json;
+
+const WORKERS: usize = 8;
+const JOBS: usize = 64;
+const ROUNDS: usize = 2;
+
+/// One cluster shape for every driver in the test — the determinism
+/// contract (identical explain/launches) is per cluster shape.
+fn shape() -> ClusterConfig {
+    ClusterConfig::sized(2, 2)
+}
+
+fn spool(name: &str) -> JobQueue {
+    let dir = std::env::temp_dir()
+        .join(format!("mare-pool-stress-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    JobQueue::open(dir).unwrap()
+}
+
+fn map_plan(label: &str, partitions: usize) -> String {
+    format!(
+        r#"{{
+          "version": 1,
+          "ops": [
+            {{"op": "ingest", "label": "{label}", "partitions": {partitions}}},
+            {{"op": "map", "image": "ubuntu",
+             "command": "grep -o '[GC]' /dna | wc -l > /count",
+             "input": {{"kind": "text", "path": "/dna"}},
+             "output": {{"kind": "text", "path": "/count"}}}},
+            {{"op": "collect"}}
+          ]
+        }}"#
+    )
+}
+
+fn map_reduce_plan(label: &str, partitions: usize) -> String {
+    format!(
+        r#"{{
+          "version": 1,
+          "ops": [
+            {{"op": "ingest", "label": "{label}", "partitions": {partitions}}},
+            {{"op": "map", "image": "ubuntu",
+             "command": "grep -o '[GC]' /dna | wc -l > /count",
+             "input": {{"kind": "text", "path": "/dna"}},
+             "output": {{"kind": "text", "path": "/count"}}}},
+            {{"op": "reduce", "image": "ubuntu",
+             "command": "awk '{{s+=$1}} END {{print s}}' /counts > /sum",
+             "input": {{"kind": "text", "path": "/counts"}},
+             "output": {{"kind": "text", "path": "/sum"}},
+             "depth": 2}},
+            {{"op": "collect"}}
+          ]
+        }}"#
+    )
+}
+
+/// The mixed corpus: regenerated `gen:` sources and all three remote
+/// storage backends (plus `local://`), map-only and map+tree-reduce.
+fn corpus() -> Vec<String> {
+    vec![
+        map_reduce_plan("gen:gc:16", 4),
+        map_plan("inline:GATTACA\\nGCGCGC\\nTTTT", 2),
+        map_plan("hdfs://genome.txt?lines=64", 4),
+        map_plan("swift://genome.txt?lines=64", 4),
+        map_reduce_plan("local://genome.txt?lines=64", 4),
+    ]
+}
+
+/// What one single-driver execution of each plan produces — the ground
+/// truth every threaded run must match exactly.
+struct Reference {
+    explain: String,
+    launches: u64,
+}
+
+fn references(plans: &[String]) -> Vec<Reference> {
+    let reference = Driver::new("reference", shape());
+    plans
+        .iter()
+        .map(|text| {
+            let envelope = Json::parse(text).unwrap();
+            let run = reference.execute(&envelope).unwrap();
+            assert!(run.launches > 0, "reference run must launch containers");
+            Reference { explain: run.explain, launches: run.launches }
+        })
+        .collect()
+}
+
+/// The headline gate: 8 threaded workers, 64 mixed jobs, two injected
+/// deaths, exactly-once accounting, repeated rounds.
+#[test]
+fn contended_pool_drains_mixed_jobs_exactly_once_despite_deaths() {
+    let plans = corpus();
+    let refs = references(&plans);
+
+    for round in 0..ROUNDS {
+        let queue = spool(&format!("round{round}"));
+        let submitter = Submitter::new(shape());
+
+        // pinned mix: rotate which plan each id gets per round so the
+        // contention pattern changes while expectations stay exact
+        let plan_of = |id: u64| ((id as usize - 1) + round) % plans.len();
+        for id in 1..=JOBS as u64 {
+            let (got, _) = submitter.submit(&queue, &plans[plan_of(id)]).unwrap();
+            assert_eq!(got, id);
+        }
+
+        // worker 6 dies holding its 2nd claim; worker 7 dies right
+        // after its 2nd claim commits (job stuck `running`)
+        let mut config = PoolConfig::new(WORKERS, shape());
+        config.faults = FaultPlan::parse("6:2:hold,7:2:running").unwrap();
+        config.stale_after = Duration::from_millis(300);
+        config.poll = Duration::from_millis(10);
+
+        let outcome = WorkerPool::new(config.clone()).run(&queue).unwrap();
+
+        // both deaths actually fired (the fault plan is not decorative)
+        assert!(
+            outcome.reports[6].died.as_deref().unwrap_or("").contains("mid-claim"),
+            "worker 6 should die mid-claim: {:?}",
+            outcome.reports[6]
+        );
+        assert!(
+            outcome.reports[7].died.as_deref().unwrap_or("").contains("running"),
+            "worker 7 should die post-claim: {:?}",
+            outcome.reports[7]
+        );
+        // the mid-claim victim's hold was swept back by a live worker
+        // DURING the run (no reopen) and executed
+        assert!(
+            outcome.reports.iter().map(|r| r.swept).sum::<u64>() >= 1,
+            "someone must sweep the abandoned hold"
+        );
+
+        // worker 7's victim is stuck running — everything else is done
+        let stuck: Vec<u64> = queue
+            .list()
+            .unwrap()
+            .iter()
+            .filter(|j| j.status == JobStatus::Running)
+            .map(|j| j.id)
+            .collect();
+        assert_eq!(stuck.len(), 1, "exactly the post-claim victim is stuck: {stuck:?}");
+        assert_eq!(outcome.finished.len(), JOBS - 1);
+
+        // operator recovery: requeue the stuck job (zero age threshold:
+        // the test KNOWS the worker is dead), then a clean pool drains it
+        queue.requeue_with(stuck[0], Duration::ZERO, false).unwrap();
+        let recovery = WorkerPool::new(PoolConfig::new(2, shape())).run(&queue).unwrap();
+        assert_eq!(recovery.finished.len(), 1);
+        assert_eq!(recovery.finished[0].id, stuck[0]);
+
+        // exactly-once, job by job: every record is done and carries
+        // its plan's single-driver launch count
+        let jobs = queue.list().unwrap();
+        assert_eq!(jobs.len(), JOBS);
+        for job in &jobs {
+            assert_eq!(job.status, JobStatus::Done, "job {} not done", job.id);
+            let launches = job.result.as_ref().unwrap().launches;
+            let expected = refs[plan_of(job.id)].launches;
+            assert_eq!(
+                launches, expected,
+                "job {} (plan {}) launched {launches}, reference says {expected}",
+                job.id,
+                plan_of(job.id)
+            );
+        }
+
+        // exactly-once, globally: the workers' own launch counters sum
+        // to the per-plan references — a double execution would inflate
+        // this even though the second finish overwrites the record
+        let expected_total: u64 = (1..=JOBS as u64).map(|id| refs[plan_of(id)].launches).sum();
+        assert_eq!(
+            outcome.total_launches() + recovery.total_launches(),
+            expected_total,
+            "global launch count must equal the sum of single-driver counts"
+        );
+
+        // the dead workers executed what they finished, nothing more
+        assert_eq!(outcome.reports[6].jobs_run, outcome.reports[6].claimed);
+        assert_eq!(outcome.reports[7].jobs_run + 1, outcome.reports[7].claimed);
+
+        let _ = std::fs::remove_dir_all(queue.dir());
+    }
+}
+
+/// Byte-identical `Job::explain()` and equal launch counts no matter
+/// which THREAD ran the job — the determinism contract under real
+/// concurrency, for every plan in the mixed corpus.
+#[test]
+fn threaded_crosscheck_is_byte_identical_per_plan() {
+    let plans = corpus();
+    let refs = references(&plans);
+    let drivers: Vec<Driver> =
+        (0..4).map(|i| Driver::new(format!("xc-{i}"), shape())).collect();
+    for (text, reference) in plans.iter().zip(&refs) {
+        let envelope = Json::parse(text).unwrap();
+        let runs = crosscheck_threaded(&envelope, &drivers).unwrap();
+        assert_eq!(runs.len(), drivers.len());
+        for run in &runs {
+            assert_eq!(run.explain, reference.explain, "explain must be byte-identical");
+            assert_eq!(run.launches, reference.launches);
+        }
+    }
+}
+
+/// ISSUE 4 satellite: a concurrent `requeue <id>` racing an active
+/// claim must never make the job execute twice (launch-counter check)
+/// and never lose it. The hardened requeue is rename-locked against
+/// the claim and refuses fresh `running` records (presumed live), so
+/// every interleaving resolves to exactly one execution.
+#[test]
+fn requeue_racing_an_active_claim_never_duplicates_or_loses_the_job() {
+    let plans = corpus();
+    let refs = references(&plans);
+    let queue = spool("requeue-race");
+    let submitter = Submitter::new(shape());
+    let (id, _) = submitter.submit(&queue, &plans[0]).unwrap();
+
+    let claimed = AtomicBool::new(false);
+    let hammer_done = AtomicBool::new(false);
+    let executed = std::thread::scope(|scope| {
+        // operator thread: hammer requeue while the job is queued and
+        // while the worker's claim races it; every attempt must either
+        // no-op on the queued record, lose the rename race cleanly, or
+        // be refused by the liveness gate — never resurrect a claimed
+        // job. (It stops before the worker finishes: requeueing a DONE
+        // job is a legal, intentional re-run, not this race.)
+        let hammer = scope.spawn(|| {
+            let mut attempts = 0u64;
+            loop {
+                let _ = queue.requeue_with(id, STALE_CLAIM, false);
+                attempts += 1;
+                if claimed.load(Ordering::Acquire) {
+                    hammer_done.store(true, Ordering::Release);
+                    break attempts;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        });
+
+        // worker thread: claim (racing the hammer), then — once the
+        // hammer has retired — execute and finish
+        let worker = scope.spawn(|| {
+            let driver = Driver::new("racer", shape());
+            let job = loop {
+                if let Some(job) = queue.claim().unwrap() {
+                    break job;
+                }
+                // the hammer may hold the rename lock for an instant
+                std::thread::sleep(Duration::from_micros(100));
+            };
+            claimed.store(true, Ordering::Release);
+            while !hammer_done.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            let run = driver.execute(&job.plan).unwrap();
+            queue
+                .finish(
+                    job,
+                    JobStatus::Done,
+                    mare::submit::JobResult {
+                        driver: driver.name.clone(),
+                        launches: run.launches,
+                        records: run.records,
+                        detail: "ok".into(),
+                    },
+                )
+                .unwrap();
+            run.launches
+        });
+
+        assert!(hammer.join().unwrap() > 0, "the requeue hammer must actually race");
+        worker.join().unwrap()
+    });
+
+    // never lost: the job is done, with its one result
+    let job = queue.get(id).unwrap();
+    assert_eq!(job.status, JobStatus::Done);
+    assert_eq!(job.result.as_ref().unwrap().launches, executed);
+    // never duplicated: the single execution matches the single-driver
+    // reference, and no resurrected copy is left to claim
+    assert_eq!(executed, refs[0].launches);
+    assert!(queue.claim().unwrap().is_none(), "no second claimable copy may exist");
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}
