@@ -15,6 +15,13 @@ use mare::util::bench::Bench;
 fn main() {
     let mut b = Bench::new("micro_hotpath");
 
+    // ---- zero-copy data plane (PR 5): before/after-shaped pairs —
+    //      deep vs shared partition clone, owned-join vs segmented
+    //      mount materialization, owned vs zero-copy record splitting.
+    //      Shared with the `mare bench` aggregator, which archives a
+    //      run as BENCH_<PR>.json at the repo root.
+    mare::perf::hotpath_cases(&mut b);
+
     // ---- record splitting (ingest + every TextFile stage boundary)
     let sdf_doc = mare::workloads::genlib::library_sdf(1, 512);
     b.time("split_records/sdf_512mol", || {

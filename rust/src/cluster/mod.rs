@@ -309,7 +309,10 @@ impl Cluster {
                         .as_ref()
                         .map(|f| f.fails_task(stage.id, i, attempt))
                         .unwrap_or(false);
-                    let res = task::run_task(stage, &ctx, inputs[i].records.clone());
+                    // shared handle: no per-attempt deep copy of the
+                    // partition (payloads are Arc-backed; the retry
+                    // loop used to clone every record's bytes here)
+                    let res = task::run_task(stage, &ctx, &inputs[i].records);
                     match res {
                         Ok(r) if !injected_fail => return Ok((r, attempt)),
                         Ok(_) | Err(_) if attempt + 1 < self.config.max_attempts => {
@@ -460,7 +463,7 @@ impl Cluster {
                     attempt: 1000, // recovery attempt namespace
                     seed: self.config.seed.wrapping_add(0xF417 + i as u64),
                 };
-                task::run_task(stage, &ctx, inputs[i].records.clone())
+                task::run_task(stage, &ctx, &inputs[i].records)
             });
 
         let mut sched =

@@ -23,6 +23,11 @@ pub struct ShuffleStats {
 
 /// Route `outputs` (records + the worker that produced them) into a new
 /// set of partitions; returns the partitions and the shuffle account.
+///
+/// Records MOVE through the buckets: payloads are shared buffers
+/// (`util::bytes::Shared`), so a shuffle re-arranges views and charges
+/// the *modeled* network — it never re-allocates payload bytes on the
+/// host.
 pub fn shuffle(
     outputs: Vec<(usize, Vec<Record>)>,
     partitioner: &Partitioner,

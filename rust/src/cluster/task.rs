@@ -29,12 +29,18 @@ fn bytes_of(records: &[Record]) -> u64 {
 }
 
 /// Run the fused op chain over one partition's records.
-pub fn run_task(stage: &Stage, ctx: &TaskContext, input: Vec<Record>) -> Result<TaskResult> {
+///
+/// Takes the partition's records by shared handle: record payloads are
+/// `Arc`-backed ([`crate::util::bytes::Shared`]), so the per-attempt
+/// working set below is a vector of refcount bumps — retries never
+/// deep-copy the input partition (asserted by the copy-counter tests
+/// in `rust/tests/zero_copy.rs`).
+pub fn run_task(stage: &Stage, ctx: &TaskContext, input: &[Record]) -> Result<TaskResult> {
     let started = std::time::Instant::now();
-    let bytes_in = bytes_of(&input);
+    let bytes_in = bytes_of(input);
 
     let mut cost = TaskCost { cpus: stage.cpus(), ..Default::default() };
-    let mut records = input;
+    let mut records = input.to_vec();
 
     for op in &stage.ops {
         let in_bytes = bytes_of(&records);
@@ -110,7 +116,7 @@ mod tests {
         // records big enough that tmpfs staging is > 1 µs
         let input: Vec<Record> =
             (0..4).map(|_| Record::text("x".repeat(64 * 1024))).collect();
-        let r = run_task(&stage, &ctx(), input).unwrap();
+        let r = run_task(&stage, &ctx(), &input).unwrap();
         assert_eq!(r.records.len(), 2);
         assert_eq!(r.cost.container_start, CONTAINER_START);
         // fixed 1.0 + 4 records * 0.5
@@ -130,7 +136,7 @@ mod tests {
             })],
             output: StageOutput::Final,
         };
-        let r = run_task(&stage, &ctx(), vec![Record::text("x")]).unwrap();
+        let r = run_task(&stage, &ctx(), &[Record::text("x")]).unwrap();
         assert_eq!(r.cost.container_start, Duration::ZERO);
         assert_eq!(r.cost.stage_in, Duration::ZERO);
         assert_eq!(r.cost.total(), Duration::ZERO);
@@ -144,7 +150,7 @@ mod tests {
             output: StageOutput::Final,
         };
         let input: Vec<Record> = (0..4).map(|i| Record::text(format!("{i}"))).collect();
-        let r = run_task(&stage, &ctx(), input).unwrap();
+        let r = run_task(&stage, &ctx(), &input).unwrap();
         assert_eq!(r.records.len(), 1);
         assert_eq!(r.cost.container_start, CONTAINER_START + CONTAINER_START);
         // (1.0 + 4*0.5) + (1.0 + 2*0.5)

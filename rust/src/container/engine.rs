@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::error::Result;
 use crate::runtime::ToolRuntime;
+use crate::util::bytes::Shared;
 use crate::util::rng::Rng;
 
 use super::image::Registry;
@@ -28,8 +29,9 @@ pub struct RunConfig {
     pub image: String,
     pub command: String,
     pub env: BTreeMap<String, String>,
-    /// Files pre-bound into the container (input volumes).
-    pub input_files: Vec<(String, Vec<u8>)>,
+    /// Files pre-bound into the container (input volumes). [`Shared`]
+    /// buffers: binding them into the container VFS is a refcount bump.
+    pub input_files: Vec<(String, Shared)>,
     /// Disk-backed mount space instead of tmpfs (paper: TMPDIR on disk).
     pub disk_backed: bool,
     /// tmpfs capacity (ignored for disk).
@@ -60,8 +62,8 @@ impl RunConfig {
         self
     }
 
-    pub fn input(mut self, path: impl Into<String>, bytes: Vec<u8>) -> Self {
-        self.input_files.push((path.into(), bytes));
+    pub fn input(mut self, path: impl Into<String>, bytes: impl Into<Shared>) -> Self {
+        self.input_files.push((path.into(), bytes.into()));
         self
     }
 

@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::error::{MareError, Result};
+use crate::util::bytes::Shared;
 
 use super::tool::Tool;
 
@@ -20,8 +21,10 @@ pub struct Image {
     /// Compressed image size (pull cost model input).
     pub size_bytes: u64,
     tools: BTreeMap<&'static str, Arc<dyn Tool>>,
-    /// Files baked into the image (path -> content).
-    files: Vec<(String, Vec<u8>)>,
+    /// Files baked into the image (path -> content). [`Shared`], so
+    /// binding them into every container launch is a refcount bump,
+    /// not a copy of (e.g.) the reference genome per task.
+    files: Vec<(String, Shared)>,
 }
 
 impl Image {
@@ -44,7 +47,7 @@ impl Image {
         self.tools.keys().copied().collect()
     }
 
-    pub fn baked_files(&self) -> &[(String, Vec<u8>)] {
+    pub fn baked_files(&self) -> &[(String, Shared)] {
         &self.files
     }
 }
@@ -65,7 +68,7 @@ pub struct ImageBuilder {
     name: String,
     size_bytes: u64,
     tools: BTreeMap<&'static str, Arc<dyn Tool>>,
-    files: Vec<(String, Vec<u8>)>,
+    files: Vec<(String, Shared)>,
 }
 
 impl ImageBuilder {
@@ -79,8 +82,8 @@ impl ImageBuilder {
         self
     }
 
-    pub fn file(mut self, path: impl Into<String>, bytes: Vec<u8>) -> Self {
-        self.files.push((path.into(), bytes));
+    pub fn file(mut self, path: impl Into<String>, bytes: impl Into<Shared>) -> Self {
+        self.files.push((path.into(), bytes.into()));
         self
     }
 

@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{MareError, Result};
+use crate::util::bytes::Shared;
 
 /// What the filesystem is "backed" by (cost accounting + capacity).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,10 +20,12 @@ pub enum Backing {
     Disk,
 }
 
-/// In-memory filesystem.
+/// In-memory filesystem. File contents are [`Shared`] buffers, so
+/// binding an input volume or slicing records out of an output mount
+/// never duplicates payload bytes.
 #[derive(Debug, Clone)]
 pub struct Vfs {
-    files: BTreeMap<String, Vec<u8>>,
+    files: BTreeMap<String, Shared>,
     capacity: Option<u64>,
     used: u64,
     backing: Backing,
@@ -89,7 +92,8 @@ impl Vfs {
         Ok(())
     }
 
-    pub fn write(&mut self, path: &str, bytes: Vec<u8>) -> Result<()> {
+    pub fn write(&mut self, path: &str, bytes: impl Into<Shared>) -> Result<()> {
+        let bytes = bytes.into();
         let path = normalize(path)?;
         let old = self.files.get(&path).map(|b| b.len() as u64).unwrap_or(0);
         self.charge(old, bytes.len() as u64)?;
@@ -101,7 +105,14 @@ impl Vfs {
         let path = normalize(path)?;
         let old = self.files.get(&path).map(|b| b.len() as u64).unwrap_or(0);
         self.charge(old, old + bytes.len() as u64)?;
-        self.files.entry(path).or_default().extend_from_slice(bytes);
+        // files are immutable shared buffers: append rebuilds the file
+        // once (`>>` is rare in the paper's commands; `>` stays cheap)
+        let mut buf = Vec::with_capacity(old as usize + bytes.len());
+        if let Some(existing) = self.files.get(&path) {
+            buf.extend_from_slice(existing.as_slice());
+        }
+        buf.extend_from_slice(bytes);
+        self.files.insert(path, Shared::from_vec(buf));
         Ok(())
     }
 
@@ -110,6 +121,16 @@ impl Vfs {
         self.files
             .get(&path)
             .map(|v| v.as_slice())
+            .ok_or_else(|| MareError::Container(format!("no such file: {path}")))
+    }
+
+    /// Zero-copy read: a [`Shared`] view of the file's buffer (what the
+    /// TextFile stage-out boundary slices records from).
+    pub fn read_shared(&self, path: &str) -> Result<Shared> {
+        let path = normalize(path)?;
+        self.files
+            .get(&path)
+            .cloned()
             .ok_or_else(|| MareError::Container(format!("no such file: {path}")))
     }
 
@@ -162,8 +183,9 @@ impl Vfs {
             .collect())
     }
 
-    /// Take ownership of all files (used to extract output mounts).
-    pub fn take_dir(&mut self, dir: &str) -> Result<Vec<(String, Vec<u8>)>> {
+    /// Take ownership of all files (used to extract output mounts;
+    /// zero-copy — the buffers move out as [`Shared`] views).
+    pub fn take_dir(&mut self, dir: &str) -> Result<Vec<(String, Shared)>> {
         let names: Vec<String> = self.list_dir(dir)?.into_iter().map(String::from).collect();
         let mut out = Vec::with_capacity(names.len());
         for n in names {

@@ -40,15 +40,19 @@ impl Dataset {
     /// The submit subsystem resolves `gen:`/`inline:` labels back to
     /// data, so plans over such sources are executable on any driver
     /// (see `docs/WIRE_FORMAT.md`).
+    ///
+    /// The text is copied into ONE shared buffer; every record is an
+    /// O(1) slice of it ([`split_records_shared`]).
     pub fn parallelize_text_labeled(
         text: &str,
         sep: &str,
         num_partitions: usize,
         label: impl Into<String>,
     ) -> Self {
-        let records: Vec<Record> = split_records(text, sep)
+        let buf = crate::util::bytes::SharedStr::from(text);
+        let records: Vec<Record> = split_records_shared(&buf, sep)
             .into_iter()
-            .map(Record::text)
+            .map(Record::Text)
             .collect();
         Self::parallelize_labeled(records, num_partitions, label)
     }
@@ -136,6 +140,33 @@ pub fn split_records(text: &str, sep: &str) -> Vec<String> {
         .collect()
 }
 
+/// Zero-copy [`split_records`]: every chunk is an O(1) slice of the
+/// ingested buffer instead of a fresh `String`. Byte-identical chunk
+/// semantics to the owned variant (property-tested in
+/// `rust/tests/prop_invariants.rs`); this is what `parallelize_text`,
+/// `storage::ingest` and the TextFile stage-out boundary use so record
+/// payloads share the ingested allocation.
+pub fn split_records_shared(
+    text: &crate::util::bytes::SharedStr,
+    sep: &str,
+) -> Vec<crate::util::bytes::SharedStr> {
+    if sep.is_empty() {
+        return if text.is_empty() { vec![] } else { vec![text.clone()] };
+    }
+    let s = text.as_str();
+    // every chunk `str::split` yields is a subslice of `s`; its offset
+    // in the buffer is the pointer distance, so the shared variant
+    // inherits the owned variant's chunk semantics by construction
+    let base = s.as_ptr() as usize;
+    s.split(sep)
+        .filter(|chunk| !chunk.trim().is_empty())
+        .map(|chunk| {
+            let start = chunk.as_ptr() as usize - base;
+            text.slice(start, start + chunk.len())
+        })
+        .collect()
+}
+
 /// Join records with a separator for mounting (inverse of
 /// [`split_records`]; a trailing separator is added so round-trips are
 /// stable for tools that append).
@@ -178,6 +209,32 @@ mod tests {
         let text = "mol1\n$$$$\nmol2\n$$$$\n";
         let recs = split_records(text, "\n$$$$\n");
         assert_eq!(recs, vec!["mol1", "mol2"]);
+    }
+
+    #[test]
+    fn split_records_shared_matches_owned() {
+        for (text, sep) in [
+            ("a\nb\nc", "\n"),
+            ("a\nb\nc\n", "\n"),
+            ("mol1\n$$$$\nmol2\n$$$$\n", "\n$$$$\n"),
+            ("", "\n"),
+            ("\n\n", "\n"),
+            ("  \n x \n", "\n"),
+            ("no-sep-here", "|"),
+            ("whole", ""),
+        ] {
+            let buf = crate::util::bytes::SharedStr::from(text);
+            let shared: Vec<String> = split_records_shared(&buf, sep)
+                .iter()
+                .map(|s| s.as_str().to_string())
+                .collect();
+            assert_eq!(shared, split_records(text, sep), "text={text:?} sep={sep:?}");
+        }
+        // and the slices really share the source allocation
+        let buf = crate::util::bytes::SharedStr::from("a\nb");
+        let parts = split_records_shared(&buf, "\n");
+        assert_eq!(parts.len(), 2);
+        assert_eq!(buf.as_shared().ref_count(), 3);
     }
 
     #[test]

@@ -3,23 +3,32 @@
 //! Mirrors the paper's two mount-point semantics: a *text* record is one
 //! separator-delimited chunk of a `TextFile` mount; a *binary* record is
 //! one distinct file of a `BinaryFiles` mount directory.
+//!
+//! Record payloads are [`Shared`]/[`SharedStr`] views: cloning a record
+//! (or a whole [`Partition`]) bumps refcounts instead of duplicating
+//! payload bytes, so task retries, shuffle routing and driver-side
+//! collects never re-allocate data. [`Record::deep_clone`] reproduces
+//! the old owned-buffer behaviour for before/after benchmarking; it is
+//! counted by [`crate::util::bytes::payload_copies`].
+
+use crate::util::bytes::{Shared, SharedStr};
 
 /// One dataset record.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Record {
     /// A text chunk (one line, one SDF molecule, one SAM record, ...).
-    Text(String),
+    Text(SharedStr),
     /// A named binary file (e.g. a gzipped VCF shard).
-    Binary { name: String, bytes: Vec<u8> },
+    Binary { name: String, bytes: Shared },
 }
 
 impl Record {
-    pub fn text(s: impl Into<String>) -> Record {
+    pub fn text(s: impl Into<SharedStr>) -> Record {
         Record::Text(s.into())
     }
 
-    pub fn binary(name: impl Into<String>, bytes: Vec<u8>) -> Record {
-        Record::Binary { name: name.into(), bytes }
+    pub fn binary(name: impl Into<String>, bytes: impl Into<Shared>) -> Record {
+        Record::Binary { name: name.into(), bytes: bytes.into() }
     }
 
     /// Payload size in bytes (what the cost models meter).
@@ -32,13 +41,25 @@ impl Record {
 
     pub fn as_text(&self) -> Option<&str> {
         match self {
-            Record::Text(s) => Some(s),
+            Record::Text(s) => Some(s.as_str()),
             Record::Binary { .. } => None,
         }
     }
 
     pub fn is_binary(&self) -> bool {
         matches!(self, Record::Binary { .. })
+    }
+
+    /// Duplicate the payload into a private allocation (the pre-shared
+    /// clone semantics; counted as payload deep-copies — benches and
+    /// the copy-counter tests use this as the "old way" baseline).
+    pub fn deep_clone(&self) -> Record {
+        match self {
+            Record::Text(s) => Record::Text(SharedStr::from_string(s.to_owned_string())),
+            Record::Binary { name, bytes } => {
+                Record::Binary { name: name.clone(), bytes: bytes.deep_clone() }
+            }
+        }
     }
 }
 
@@ -71,6 +92,14 @@ impl Partition {
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
+
+    /// Duplicate every record payload (see [`Record::deep_clone`]).
+    pub fn deep_clone(&self) -> Partition {
+        Partition {
+            records: self.records.iter().map(Record::deep_clone).collect(),
+            preferred_worker: self.preferred_worker,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +119,17 @@ mod tests {
     fn text_accessor() {
         assert_eq!(Record::text("x").as_text(), Some("x"));
         assert_eq!(Record::binary("x", vec![]).as_text(), None);
+    }
+
+    #[test]
+    fn clone_shares_payload_deep_clone_does_not() {
+        let payload = Shared::from_vec(vec![9u8; 256]);
+        let r = Record::binary("f.bin", payload.clone());
+        let shallow = r.clone();
+        // payload + record + shallow clone = 3 views of one allocation
+        assert_eq!(payload.ref_count(), 3);
+        let deep = r.deep_clone();
+        assert_eq!(payload.ref_count(), 3, "deep clone must not share");
+        assert_eq!(deep, shallow);
     }
 }

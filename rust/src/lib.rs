@@ -45,6 +45,7 @@ pub mod metrics;
 pub mod error;
 pub mod formats;
 pub mod mare;
+pub mod perf;
 pub mod repl;
 pub mod runtime;
 pub mod simtime;

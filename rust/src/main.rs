@@ -46,6 +46,10 @@ USAGE:
                          re-runs `failed`/`done` jobs). Fresh `running`
                          records are presumed live and refused unless
                          --force
+  mare bench [--pr N] [--out FILE] [--filter S]
+                         run the data-plane hot-path micro-benchmarks
+                         and archive them as BENCH_<N>.json (repo-root
+                         perf trajectory; see README \"Benchmarks\")
   mare inspect           show AOT artifacts and stock container images
   mare help              this text
 
@@ -100,6 +104,7 @@ fn dispatch() -> Result<()> {
         Some("jobs") => cmd_jobs(&args),
         Some("work") => cmd_work(&args),
         Some("requeue") => cmd_requeue(&args),
+        Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
             println!("{HELP}");
@@ -290,6 +295,30 @@ fn cmd_work(args: &Args) -> Result<()> {
     for report in &outcome.reports {
         println!("  {}", report.summary());
     }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let pr = args.flag_u64("pr", 5)?;
+    let out = args
+        .flag("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("BENCH_{pr}.json"));
+    let filter = args.flag("filter").map(String::from);
+
+    let mut b = mare::util::bench::Bench::with_filter("micro_hotpath", filter);
+    mare::perf::hotpath_cases(&mut b);
+
+    println!();
+    println!("{:<20} {:>14} {:>14} {:>9}", "comparison", "old median", "new median", "speedup");
+    for c in mare::perf::comparisons(b.timings()) {
+        println!(
+            "{:<20} {:>11.0} ns {:>11.0} ns {:>8.2}x",
+            c.name, c.old_median_ns, c.new_median_ns, c.speedup()
+        );
+    }
+    mare::perf::write_bench_json(std::path::Path::new(&out), pr, b.timings())?;
+    println!("\narchived {} timings -> {out}", b.timings().len());
     Ok(())
 }
 

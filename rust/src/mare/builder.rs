@@ -118,6 +118,7 @@ impl PipelineBuilder {
             command: command.into(),
             depth: None,
             disk_mounts: self.disk_default,
+            fused: None,
         }));
         self
     }

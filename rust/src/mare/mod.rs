@@ -200,6 +200,7 @@ impl MaRe {
             command: spec.command,
             depth: Some(spec.depth.max(1)),
             disk_mounts: self.disk_mounts,
+            fused: None,
         };
         let lowering = Lowering::for_cluster(&self.cluster);
         let dataset = lowering.lower_op(self.dataset, &PipelineOp::Reduce(step));

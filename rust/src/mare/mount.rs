@@ -8,10 +8,19 @@
 //! * [`MountPoint::BinaryFiles`] — each record is a DISTINCT file in a
 //!   mount *directory*; results are every file found under the output
 //!   directory.
+//!
+//! Staging is allocation-light: a TextFile mount is materialized by a
+//! [`SegmentWriter`] straight from the record slices (one exact-capacity
+//! buffer, instead of the old per-record `String` clone + `join` +
+//! `into_bytes` triple copy); a BinaryFiles mount binds each record's
+//! [`Shared`] payload into the VFS by refcount. Stage-out goes the
+//! other way zero-copy: output records are O(1) slices of the VFS file
+//! buffers ([`split_records_shared`] / `take_dir`).
 
 use crate::container::Vfs;
-use crate::dataset::{join_records, split_records, Record};
+use crate::dataset::{split_records_shared, Record};
 use crate::error::{MareError, Result};
+use crate::util::bytes::{SegmentWriter, Shared, SharedStr};
 
 /// A configured mount point.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -68,57 +77,36 @@ impl MountPoint {
     pub fn stage_stdin(&self, records: &[Record]) -> Result<Option<Vec<u8>>> {
         match self {
             MountPoint::StdStream { sep } => {
-                let texts: Vec<String> = records
-                    .iter()
-                    .map(|r| {
-                        r.as_text().map(String::from).ok_or_else(|| {
-                            MareError::Container(
-                                "binary record in StdStream mount (use BinaryFiles)".into(),
-                            )
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                Ok(Some(join_records(&texts, sep).into_bytes()))
+                Ok(Some(join_text_records(records, sep, "StdStream", "BinaryFiles")?.into_vec()))
             }
             _ => Ok(None),
         }
     }
 
-    /// Records from the command's captured stdout (StdStream output only).
-    pub fn stage_stdout(&self, stdout: &[u8]) -> Result<Option<Vec<Record>>> {
+    /// Records from the command's captured stdout (StdStream output
+    /// only). Takes the buffer by value: the records are O(1) slices of
+    /// it, no copy.
+    pub fn stage_stdout(&self, stdout: Vec<u8>) -> Result<Option<Vec<Record>>> {
         match self {
             MountPoint::StdStream { sep } => {
-                let text = std::str::from_utf8(stdout).map_err(|_| {
-                    MareError::Container("streamed stdout is not UTF-8".into())
-                })?;
-                Ok(Some(split_records(text, sep).into_iter().map(Record::text).collect()))
+                let text = SharedStr::from_shared(Shared::from_vec(stdout))
+                    .map_err(|_| MareError::Container("streamed stdout is not UTF-8".into()))?;
+                Ok(Some(split_records_shared(&text, sep).into_iter().map(Record::Text).collect()))
             }
             _ => Ok(None),
         }
     }
 
     /// Materialize records into container input files (none for
-    /// streams — see [`Self::stage_stdin`]).
-    pub fn stage_in(&self, records: &[Record]) -> Result<Vec<(String, Vec<u8>)>> {
+    /// streams — see [`Self::stage_stdin`]). The returned buffers are
+    /// [`Shared`]: a TextFile mount is ONE segment-written file, a
+    /// BinaryFiles mount binds the record payloads themselves.
+    pub fn stage_in(&self, records: &[Record]) -> Result<Vec<(String, Shared)>> {
         match self {
             MountPoint::StdStream { .. } => Ok(Vec::new()),
             MountPoint::TextFile { path, sep } => {
-                let texts: Vec<String> = records
-                    .iter()
-                    .map(|r| {
-                        r.as_text().map(String::from).ok_or_else(|| {
-                            MareError::Container(format!(
-                                "binary record `{}` in TextFile mount {path} \
-                                 (use BinaryFiles)",
-                                match r {
-                                    Record::Binary { name, .. } => name.as_str(),
-                                    _ => "?",
-                                }
-                            ))
-                        })
-                    })
-                    .collect::<Result<_>>()?;
-                Ok(vec![(path.clone(), join_records(&texts, sep).into_bytes())])
+                let joined = join_text_records(records, sep, &format!("TextFile mount {path}"), "BinaryFiles")?;
+                Ok(vec![(path.clone(), joined.finish())])
             }
             MountPoint::BinaryFiles { dir } => {
                 let mut files = Vec::with_capacity(records.len());
@@ -127,7 +115,7 @@ impl MountPoint {
                     let (name, bytes) = match r {
                         Record::Binary { name, bytes } => (basename(name), bytes.clone()),
                         Record::Text(t) => {
-                            (format!("part-{i:05}.txt"), t.clone().into_bytes())
+                            (format!("part-{i:05}.txt"), t.as_shared().clone())
                         }
                     };
                     // de-clash names merged from different partitions
@@ -144,7 +132,8 @@ impl MountPoint {
     }
 
     /// Read the tool's output back into records (streams are read from
-    /// captured stdout instead — see [`Self::stage_stdout`]).
+    /// captured stdout instead — see [`Self::stage_stdout`]). Text
+    /// records are zero-copy slices of the output file's buffer.
     pub fn stage_out(&self, fs: &mut Vfs) -> Result<Vec<Record>> {
         match self {
             MountPoint::StdStream { .. } => Ok(Vec::new()),
@@ -152,8 +141,9 @@ impl MountPoint {
                 if !fs.exists(path) {
                     return Ok(vec![]); // tool produced nothing
                 }
-                let text = fs.read_string(path)?;
-                Ok(split_records(&text, sep).into_iter().map(Record::text).collect())
+                let text = SharedStr::from_shared(fs.read_shared(path)?)
+                    .map_err(|_| MareError::Container(format!("{path}: not UTF-8")))?;
+                Ok(split_records_shared(&text, sep).into_iter().map(Record::Text).collect())
             }
             MountPoint::BinaryFiles { dir } => {
                 let files = fs.take_dir(dir)?;
@@ -170,6 +160,39 @@ impl MountPoint {
             }
         }
     }
+}
+
+/// Join text records with `sep` (and a trailing `sep`, matching
+/// [`crate::dataset::join_records`]) into one segment-written buffer.
+/// A binary record is an error naming the offending mount kind.
+fn join_text_records(
+    records: &[Record],
+    sep: &str,
+    where_: &str,
+    use_instead: &str,
+) -> Result<SegmentWriter> {
+    let mut payload = 0usize;
+    for r in records {
+        match r {
+            Record::Text(t) => payload += t.len(),
+            Record::Binary { name, .. } => {
+                return Err(MareError::Container(format!(
+                    "binary record `{name}` in {where_} (use {use_instead})"
+                )))
+            }
+        }
+    }
+    if records.is_empty() {
+        return Ok(SegmentWriter::with_capacity(0));
+    }
+    let mut w = SegmentWriter::with_capacity(payload + records.len() * sep.len());
+    for r in records {
+        if let Record::Text(t) = r {
+            w.push(t.as_shared().as_slice());
+            w.push(sep.as_bytes());
+        }
+    }
+    Ok(w)
 }
 
 fn basename(p: &str) -> String {
@@ -193,6 +216,20 @@ mod tests {
         // pretend the tool copied input to output unchanged
         let out = MountPoint::text_sep("/in.sdf", "\n$$$$\n").stage_out(&mut fs).unwrap();
         assert_eq!(out, records);
+    }
+
+    #[test]
+    fn textfile_materializes_exactly_like_join_records() {
+        // the segmented writer must produce the same bytes as the old
+        // owned join (trailing separator included)
+        let records = vec![Record::text("a"), Record::text("bb"), Record::text("")];
+        let texts: Vec<String> = vec!["a".into(), "bb".into(), "".into()];
+        let mp = MountPoint::text_sep("/f", ";;");
+        let files = mp.stage_in(&records).unwrap();
+        assert_eq!(
+            files[0].1.as_slice(),
+            crate::dataset::join_records(&texts, ";;").as_bytes()
+        );
     }
 
     #[test]
@@ -239,6 +276,16 @@ mod tests {
     }
 
     #[test]
+    fn binaryfiles_staging_shares_payloads() {
+        let payload = Shared::from_vec(vec![3u8; 128]);
+        let records = vec![Record::binary("x.bin", payload.clone())];
+        let files = MountPoint::binary("/in").stage_in(&records).unwrap();
+        // payload + record + staged file = 3 views of one allocation
+        assert_eq!(payload.ref_count(), 3);
+        assert_eq!(files[0].1, payload);
+    }
+
+    #[test]
     fn empty_partition_stages_empty_file() {
         let mp = MountPoint::text("/in");
         let files = mp.stage_in(&[]).unwrap();
@@ -253,7 +300,7 @@ mod tests {
         assert!(mp.stage_in(&records).unwrap().is_empty());
         let stdin = mp.stage_stdin(&records).unwrap().unwrap();
         // pretend the tool echoed its input
-        let out = mp.stage_stdout(&stdin).unwrap().unwrap();
+        let out = mp.stage_stdout(stdin).unwrap().unwrap();
         assert_eq!(out, records);
         assert!(mp.is_stream());
     }
@@ -268,7 +315,7 @@ mod tests {
     fn non_stream_mounts_have_no_stdio() {
         let mp = MountPoint::text("/in");
         assert!(mp.stage_stdin(&[Record::text("x")]).unwrap().is_none());
-        assert!(mp.stage_stdout(b"y").unwrap().is_none());
+        assert!(mp.stage_stdout(b"y".to_vec()).unwrap().is_none());
         assert!(!mp.is_stream());
     }
 }

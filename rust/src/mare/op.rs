@@ -84,7 +84,7 @@ impl PartitionOp for ContainerOp {
         }
 
         let mut outcome = self.engine.run(&cfg)?;
-        match self.output_mount.stage_stdout(&outcome.stdout)? {
+        match self.output_mount.stage_stdout(std::mem::take(&mut outcome.stdout))? {
             Some(streamed) => Ok(streamed),
             None => self.output_mount.stage_out(&mut outcome.fs),
         }

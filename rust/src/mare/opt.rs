@@ -19,7 +19,7 @@
 use crate::cluster::task::CONTAINER_START;
 use crate::simtime::{CostModel, Duration};
 
-use super::pipeline::{MapStep, Pipeline, PipelineOp};
+use super::pipeline::{MapStep, Pipeline, PipelineOp, ReduceStep};
 
 /// What the optimizer knows about the job's environment.
 #[derive(Debug, Clone)]
@@ -73,8 +73,10 @@ impl OptEnv {
 /// What the passes did (surfaced by `explain()`).
 #[derive(Debug, Clone, Default)]
 pub struct OptReport {
-    /// Map nodes eliminated by fusion.
+    /// Map nodes eliminated by map-map fusion.
     pub fused_maps: usize,
+    /// Map nodes folded into the first level of a following reduce.
+    pub maps_fused_into_reduce: usize,
     /// Depths chosen for `depth=auto` reduces, in pipeline order.
     pub planned_depths: Vec<usize>,
 }
@@ -87,6 +89,13 @@ impl OptReport {
                 "{} map{} fused",
                 self.fused_maps,
                 if self.fused_maps == 1 { "" } else { "s" }
+            ));
+        }
+        if self.maps_fused_into_reduce > 0 {
+            parts.push(format!(
+                "{} map{} fused into reduce level 0",
+                self.maps_fused_into_reduce,
+                if self.maps_fused_into_reduce == 1 { "" } else { "s" }
             ));
         }
         for k in &self.planned_depths {
@@ -103,7 +112,8 @@ impl OptReport {
 pub fn optimize(pipeline: &Pipeline, env: &OptEnv) -> (Pipeline, OptReport) {
     let mut report = OptReport::default();
     let fused = fuse_maps(pipeline, &mut report);
-    let planned = plan_depths(&fused, env, &mut report);
+    let folded = fuse_maps_into_reduces(&fused, &mut report);
+    let planned = plan_depths(&folded, env, &mut report);
     (planned, report)
 }
 
@@ -125,6 +135,16 @@ pub fn can_fuse(a: &MapStep, b: &MapStep) -> bool {
         && a.disk_mounts == b.disk_mounts
         && !a.output_mount.is_stream()
         && a.output_mount == b.input_mount
+        // fused, `a`'s input partition is staged at a.input_mount in the
+        // SAME container fs that stage_out reads b.output_mount from; if
+        // the paths collide, a command that writes nothing would read the
+        // staged input back as its "output" (unfused it reads nothing).
+        // Streams stage no file / read captured stdout, so a stream on
+        // either side cannot collide (their shared "<stdio>" sentinel
+        // path must not trip the guard)
+        && (a.input_mount.is_stream()
+            || b.output_mount.is_stream()
+            || a.input_mount.path() != b.output_mount.path())
 }
 
 fn fuse_two(a: &MapStep, b: &MapStep) -> MapStep {
@@ -152,6 +172,53 @@ fn fuse_maps(pipeline: &Pipeline, report: &mut OptReport) -> Pipeline {
                 };
                 out.push(PipelineOp::Map(fuse_two(&prev, next)));
                 report.fused_maps += 1;
+                continue;
+            }
+        }
+        out.push(op.clone());
+    }
+    Pipeline::new(out)
+}
+
+/// Whether map `m` can fold into the FIRST tree level of reduce `r`:
+/// same image, same mount backing, `r` reads exactly the file `m`
+/// wrote, and neither boundary streams (the chained file lives in the
+/// shared container fs). Same whitespace-only-record relaxation as
+/// [`can_fuse`].
+pub fn can_fuse_into_reduce(m: &MapStep, r: &ReduceStep) -> bool {
+    m.image == r.image
+        && m.disk_mounts == r.disk_mounts
+        && !m.output_mount.is_stream()
+        && !m.input_mount.is_stream()
+        && m.output_mount == r.input_mount
+        // same collision guard as `can_fuse`: level 0 stages the input
+        // partition at m.input_mount (non-stream, per above) in the
+        // container fs stage_out reads r.output_mount from; a streamed
+        // reduce output cannot collide
+        && (r.output_mount.is_stream() || m.input_mount.path() != r.output_mount.path())
+}
+
+/// Pass 1b (ROADMAP item): fold a map into the first level of the
+/// reduce that follows it. Level 0 of the tree then runs
+/// `map.command` + reduce command in ONE container per partition —
+/// saving one container start per source partition per job — while
+/// later levels (which aggregate reducer outputs, not map inputs) run
+/// the plain reduce command. The launch-count delta is asserted in the
+/// tests below and rendered by `Job::explain()`.
+fn fuse_maps_into_reduces(pipeline: &Pipeline, report: &mut OptReport) -> Pipeline {
+    let mut out: Vec<PipelineOp> = Vec::with_capacity(pipeline.ops().len());
+    for op in pipeline.ops() {
+        if let PipelineOp::Reduce(next) = op {
+            let fusable = next.fused.is_none()
+                && matches!(out.last(), Some(PipelineOp::Map(prev)) if can_fuse_into_reduce(prev, next));
+            if fusable {
+                let Some(PipelineOp::Map(prev)) = out.pop() else {
+                    unreachable!("last element was checked to be a Map");
+                };
+                let mut folded = next.clone();
+                folded.fused = Some(prev);
+                out.push(PipelineOp::Reduce(folded));
+                report.maps_fused_into_reduce += 1;
                 continue;
             }
         }
@@ -348,6 +415,7 @@ mod tests {
                 command: "awk '{s+=$1} END {print s}' /in > /out".into(),
                 depth,
                 disk_mounts: false,
+                fused: None,
             })
         };
         let (opt, report) = optimize(&wrap(vec![reduce(None)]), &ENV);
@@ -417,6 +485,7 @@ mod tests {
             command: "awk '{s+=$1} END {print s}' /in > /out".into(),
             depth: None,
             disk_mounts: false,
+            fused: None,
         });
         let plan_with = |bytes: Option<Vec<u64>>| {
             let env = OptEnv { workers: 4, source_partitions: 256, partition_bytes: bytes };
@@ -444,9 +513,160 @@ mod tests {
         let mut r = OptReport::default();
         assert_eq!(r.summary(), "no rewrites");
         r.fused_maps = 2;
+        r.maps_fused_into_reduce = 1;
         r.planned_depths.push(2);
         let s = r.summary();
         assert!(s.contains("2 maps fused"), "{s}");
+        assert!(s.contains("1 map fused into reduce level 0"), "{s}");
         assert!(s.contains("auto-planned to 2"), "{s}");
+    }
+
+    // ------------------------------------------- map-into-reduce fusion
+
+    fn chaining_reduce(depth: Option<usize>) -> ReduceStep {
+        ReduceStep {
+            input_mount: MountPoint::text("/gc"),
+            output_mount: MountPoint::text("/sum"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /gc > /sum".into(),
+            depth,
+            disk_mounts: false,
+            fused: None,
+        }
+    }
+
+    #[test]
+    fn map_folds_into_following_reduce_when_mounts_chain() {
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -c G /dna > /gc", "/dna", "/gc")),
+            PipelineOp::Reduce(chaining_reduce(Some(1))),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 1);
+        assert_eq!(opt.num_maps(), 0, "{}", opt.describe());
+        let folded = opt
+            .ops()
+            .iter()
+            .find_map(|o| match o {
+                PipelineOp::Reduce(r) => Some(r.clone()),
+                _ => None,
+            })
+            .unwrap();
+        let m = folded.fused.expect("carries the folded map");
+        assert_eq!(m.input_mount, MountPoint::text("/dna"));
+        // the optimized-plan rendering surfaces the fold
+        assert!(opt.describe().contains("+map grep"), "{}", opt.describe());
+    }
+
+    #[test]
+    fn map_into_reduce_requires_image_and_mount_chain() {
+        // different image: no fold
+        let p = wrap(vec![
+            PipelineOp::Map(map("other", "grep -c G /dna > /gc", "/dna", "/gc")),
+            PipelineOp::Reduce(chaining_reduce(Some(1))),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 0);
+        assert_eq!(opt.num_maps(), 1);
+
+        // mounts don't chain (the gc workload's /count vs /counts): no fold
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -c G /dna > /count", "/dna", "/count")),
+            PipelineOp::Reduce(chaining_reduce(Some(1))),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 0);
+        assert_eq!(opt.num_maps(), 1);
+
+        // a shuffle between them is a hard barrier
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -c G /dna > /gc", "/dna", "/gc")),
+            PipelineOp::Repartition { partitions: 2 },
+            PipelineOp::Reduce(chaining_reduce(Some(1))),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 0);
+        assert_eq!(opt.num_maps(), 1);
+
+        // reduce output path colliding with the map's input path: the
+        // fused container would stage the input partition exactly where
+        // stage_out reads the result — no fold
+        let colliding = ReduceStep {
+            input_mount: MountPoint::text("/gc"),
+            output_mount: MountPoint::text("/dna"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /gc > /dna".into(),
+            depth: Some(1),
+            disk_mounts: false,
+            fused: None,
+        };
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -c G /dna > /gc", "/dna", "/gc")),
+            PipelineOp::Reduce(colliding),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 0);
+        assert_eq!(opt.num_maps(), 1);
+
+        // same guard on map-map fusion
+        let a = map("ubuntu", "cat /x > /mid", "/x", "/mid");
+        let b = map("ubuntu", "cat /mid > /x", "/mid", "/x");
+        assert!(!can_fuse(&a, &b));
+
+        // ...but stream boundary mounts share the "<stdio>" sentinel
+        // path and stage no file — they must NOT read as a collision
+        let mut stream_in = map("ubuntu", "grep -o G > /mid", "/x", "/mid");
+        stream_in.input_mount = MountPoint::stream();
+        let mut stream_out = map("ubuntu", "wc -l /mid", "/mid", "/x");
+        stream_out.output_mount = MountPoint::stream();
+        assert!(can_fuse(&stream_in, &stream_out));
+    }
+
+    /// The headline: folding the map into reduce level 0 launches
+    /// exactly one fewer container per source partition, with an
+    /// identical result.
+    #[test]
+    fn map_into_reduce_fusion_saves_one_launch_per_partition() {
+        use crate::cluster::{Cluster, ClusterConfig};
+        use crate::container::Registry;
+        use crate::dataset::Dataset;
+        use crate::mare::MaRe;
+        use std::sync::Arc;
+
+        let cluster = || {
+            let mut reg = Registry::new();
+            reg.push(crate::tools::images::ubuntu());
+            Arc::new(Cluster::new(Arc::new(reg), None, ClusterConfig::sized(2, 4)))
+        };
+        const PARTS: usize = 4;
+        let run = |optimize: bool| {
+            let ds = Dataset::parallelize_text(&"G\nA\nG\n".repeat(8), "\n", PARTS);
+            let mut b = MaRe::source(cluster(), ds)
+                .map("ubuntu", "grep -c G /dna > /gc")
+                .mounts("/dna", "/gc")
+                .reduce("ubuntu", "awk '{s+=$1} END {print s}' /gc > /sum")
+                .mounts("/gc", "/sum")
+                .depth(1);
+            if !optimize {
+                b = b.no_optimize();
+            }
+            let job = b.build().unwrap();
+            let text = job.collect_text().unwrap();
+            (text, job.container_launches(), job.explain())
+        };
+        let (plain_text, plain_launches, _) = run(false);
+        let (fused_text, fused_launches, fused_explain) = run(true);
+        assert_eq!(plain_text, fused_text, "fusion must not change results");
+        assert_eq!(plain_text, "16");
+        // depth-1 tree over 4 partitions: level 0 (4) + final merge (1);
+        // unfused additionally launches the 4 map containers
+        assert_eq!(plain_launches, PARTS as u64 + PARTS as u64 + 1);
+        assert_eq!(fused_launches, PARTS as u64 + 1);
+        assert_eq!(
+            plain_launches - fused_launches,
+            PARTS as u64,
+            "one container start saved per partition"
+        );
+        assert!(fused_explain.contains("fused into reduce level 0"), "{fused_explain}");
     }
 }

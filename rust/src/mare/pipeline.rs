@@ -151,6 +151,13 @@ pub struct ReduceStep {
     pub command: String,
     pub depth: Option<usize>,
     pub disk_mounts: bool,
+    /// A map the optimizer fused into this reduce's FIRST tree level
+    /// (same image, chaining mounts — `opt::can_fuse_into_reduce`):
+    /// level 0 runs `map.command` then the reduce command in ONE
+    /// container, saving one container start per partition. Always
+    /// `None` in user-written logical plans; derived metadata that is
+    /// not serialized by [`super::wire`].
+    pub fused: Option<MapStep>,
 }
 
 /// One node of the logical plan.
@@ -194,16 +201,23 @@ impl PipelineOp {
                 if m.disk_mounts { ", disk" } else { "" },
             ),
             PipelineOp::Reduce(r) => format!(
-                "reduce[{}@{} {} -> {}, depth={}{}]",
+                "reduce[{}@{} {} -> {}, depth={}{}{}]",
                 first_word(&r.command),
                 r.image,
-                r.input_mount.path(),
+                match &r.fused {
+                    Some(m) => m.input_mount.path(),
+                    None => r.input_mount.path(),
+                },
                 r.output_mount.path(),
                 match r.depth {
                     Some(k) => k.to_string(),
                     None => "auto".into(),
                 },
                 if r.disk_mounts { ", disk" } else { "" },
+                match &r.fused {
+                    Some(m) => format!(", +map {}", first_word(&m.command)),
+                    None => String::new(),
+                },
             ),
             PipelineOp::RepartitionBy { key, partitions } => {
                 format!("repartitionBy[{} -> {partitions}]", key.name().unwrap_or("keyBy"))
@@ -364,6 +378,13 @@ impl Lowering {
     /// the last aggregation has run: a reduce over an already-single
     /// partition launches ONE reducer container, not two, and a tree
     /// that converges early skips the redundant final aggregation stage.
+    ///
+    /// When the optimizer fused a preceding map into this reduce
+    /// (`ReduceStep::fused`), level 0 runs `map.command` then the reduce
+    /// command in the SAME container — reading the map's input mount,
+    /// with the intermediate file chained in the shared container fs —
+    /// which saves one container start per source partition. Later
+    /// levels aggregate reducer outputs and run the plain command.
     fn lower_reduce(&self, ds: Dataset, r: &ReduceStep) -> Dataset {
         let k = r
             .depth
@@ -380,19 +401,31 @@ impl Lowering {
         let scale = (parts as f64).powf(1.0 / k as f64).ceil().max(2.0) as usize;
 
         let mut ds = ds;
+        let mut level = 0usize;
         loop {
-            ds = ds.map_partitions(self.container_op(
-                r.input_mount.clone(),
-                r.output_mount.clone(),
-                &r.image,
-                &r.command,
-                r.disk_mounts,
-            ));
+            let op = match (&r.fused, level) {
+                (Some(m), 0) => self.container_op(
+                    m.input_mount.clone(),
+                    r.output_mount.clone(),
+                    &r.image,
+                    &format!("{}\n{}", m.command, r.command),
+                    r.disk_mounts,
+                ),
+                _ => self.container_op(
+                    r.input_mount.clone(),
+                    r.output_mount.clone(),
+                    &r.image,
+                    &r.command,
+                    r.disk_mounts,
+                ),
+            };
+            ds = ds.map_partitions(op);
             if parts == 1 {
                 break;
             }
             parts = parts.div_ceil(scale).max(1);
             ds = ds.repartition(parts);
+            level += 1;
         }
         ds
     }
@@ -419,6 +452,7 @@ mod tests {
             command: "awk '{s+=$1} END {print s}' /in > /out".into(),
             depth,
             disk_mounts: false,
+            fused: None,
         }
     }
 

@@ -189,6 +189,16 @@ fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
             ("disk_mounts", Json::Bool(m.disk_mounts)),
         ]),
         PipelineOp::Reduce(r) => {
+            if r.fused.is_some() {
+                // an optimizer-folded map has no wire representation;
+                // silently dropping it would ship a reduce-only plan
+                // that computes the wrong thing — encode the LOGICAL
+                // plan (Job::logical()), not the optimized one
+                return Err(WireError::Structure(format!(
+                    "{at}: reduce carries an optimizer-fused map; \
+                     only logical plans are serializable"
+                )));
+            }
             if let Some(k) = r.depth {
                 check_count(at, "depth", k)?;
             }
@@ -340,6 +350,8 @@ fn decode_op(node: &Json, at: &str) -> Result<PipelineOp, WireError> {
             output_mount: decode_mount(req(node, at, "output")?, &format!("{at}.output"))?,
             depth: decode_depth(req(node, at, "depth")?, at)?,
             disk_mounts: opt_bool(node, at, "disk_mounts", false)?,
+            // derived optimizer metadata: never on the wire
+            fused: None,
         })),
         "repartition_by" => {
             let name = req_str(node, at, "key")?;
@@ -588,6 +600,7 @@ mod tests {
                 command: "vcf-concat /in/*.vcf.gz | gzip -c > /out/m.vcf.gz".into(),
                 depth: Some(3),
                 disk_mounts: false,
+                fused: None,
             }),
             PipelineOp::Reduce(ReduceStep {
                 input_mount: text_mount("/counts"),
@@ -596,6 +609,7 @@ mod tests {
                 command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
                 depth: None,
                 disk_mounts: false,
+                fused: None,
             }),
             PipelineOp::Collect,
         ])
@@ -899,6 +913,7 @@ mod tests {
                 command: "c".into(),
                 depth: Some(0),
                 disk_mounts: false,
+                fused: None,
             }),
             PipelineOp::Collect,
         ]);
@@ -906,6 +921,38 @@ mod tests {
             encode(&zero_depth),
             Err(WireError::BadField { field: "depth", .. })
         ));
+    }
+
+    #[test]
+    fn encode_rejects_optimizer_fused_reduce() {
+        // a reduce carrying an optimizer-folded map has no wire
+        // representation; dropping the map silently would ship a plan
+        // that computes something else — typed error instead
+        let fused = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "x".into(), partitions: 2 },
+            PipelineOp::Reduce(ReduceStep {
+                input_mount: MountPoint::text("/gc"),
+                output_mount: MountPoint::text("/sum"),
+                image: "ubuntu".into(),
+                command: "awk '{s+=$1} END {print s}' /gc > /sum".into(),
+                depth: Some(1),
+                disk_mounts: false,
+                fused: Some(MapStep {
+                    input_mount: MountPoint::text("/dna"),
+                    output_mount: MountPoint::text("/gc"),
+                    image: "ubuntu".into(),
+                    command: "grep -c G /dna > /gc".into(),
+                    disk_mounts: false,
+                }),
+            }),
+            PipelineOp::Collect,
+        ]);
+        match encode(&fused) {
+            Err(WireError::Structure(msg)) => {
+                assert!(msg.contains("fused"), "{msg}")
+            }
+            other => panic!("expected a Structure error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! the per-partition locality hints are what lets HDFS-backed runs beat
 //! Swift in Figure 3.
 
-use crate::dataset::{split_records, Dataset, Partition, Record};
+use crate::dataset::{split_records_shared, Dataset, Partition, Record};
 use crate::error::{MareError, Result};
 use crate::simtime::Duration;
+use crate::util::bytes::{Shared, SharedStr};
 
 use super::StorageBackend;
 
@@ -56,11 +57,14 @@ pub fn ingest_text_as(
     workers: usize,
     label: &str,
 ) -> Result<(Dataset, IngestReport)> {
-    let bytes = backend.get(key)?;
-    let total = bytes.len() as u64;
-    let text = std::str::from_utf8(bytes)
+    // ONE copy of the object off the backend; every record below is an
+    // O(1) slice of this buffer (the old path re-allocated each record
+    // as its own String)
+    let buf = Shared::copy_from_slice(backend.get(key)?);
+    let total = buf.len() as u64;
+    let text = SharedStr::from_shared(buf)
         .map_err(|_| MareError::Storage(format!("{key}: not UTF-8 text")))?;
-    let records = split_records(text, sep);
+    let records = split_records_shared(&text, sep);
     let blocks = backend.blocks(key)?;
 
     let n = num_partitions.max(1);
@@ -75,7 +79,7 @@ pub fn ingest_text_as(
     let mut byte_cursor = 0u64;
     for i in 0..n {
         let count = total_records / n + usize::from(i < total_records % n);
-        let recs: Vec<Record> = it.by_ref().take(count).map(Record::text).collect();
+        let recs: Vec<Record> = it.by_ref().take(count).map(Record::Text).collect();
         let part_bytes: u64 = recs.iter().map(Record::size_bytes).sum();
         let primary = block_at(&blocks, byte_cursor).and_then(|b| b.primary);
         // each record is followed by one `sep` in the stored object —
@@ -116,7 +120,9 @@ pub fn ingest_objects_as(
     let mut records = Vec::with_capacity(keys.len());
     let mut total = 0u64;
     for k in keys {
-        let bytes = backend.get(k)?.to_vec();
+        // one copy off the backend into a shared payload; everything
+        // downstream (mounts, shuffle, collect) is a refcount bump
+        let bytes = Shared::copy_from_slice(backend.get(k)?);
         total += bytes.len() as u64;
         records.push(Record::binary(*k, bytes));
     }

@@ -33,13 +33,35 @@ pub struct Bench {
     filter: Option<String>,
     timings: Vec<Timing>,
     name: String,
+    /// Per-case measurement budget; `None` falls back to the
+    /// `MARE_BENCH_MS` env var (read, never written) or 800 ms.
+    budget_ms: Option<u64>,
 }
 
 impl Bench {
     pub fn new(name: &str) -> Self {
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench::with_filter(name, filter)
+    }
+
+    /// A bench with an explicit substring filter (the `mare bench` CLI
+    /// drives the same cases without going through argv).
+    pub fn with_filter(name: &str, filter: Option<String>) -> Self {
         println!("== bench: {name} ==");
-        Bench { filter, timings: Vec::new(), name: name.to_string() }
+        Bench { filter, timings: Vec::new(), name: name.to_string(), budget_ms: None }
+    }
+
+    /// Pin the per-case measurement budget explicitly (tests use this
+    /// instead of mutating the process environment, which is racy in
+    /// the parallel test binary).
+    pub fn budget_ms(mut self, ms: u64) -> Self {
+        self.budget_ms = Some(ms);
+        self
+    }
+
+    /// All timings recorded so far (aggregation, e.g. `mare bench`).
+    pub fn timings(&self) -> &[Timing] {
+        &self.timings
     }
 
     fn enabled(&self, case: &str) -> bool {
@@ -55,9 +77,9 @@ impl Bench {
         let t0 = Instant::now();
         f();
         let once = t0.elapsed().max(Duration::from_nanos(100));
-        let budget = Duration::from_millis(
-            std::env::var("MARE_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
-        );
+        let budget = Duration::from_millis(self.budget_ms.unwrap_or_else(|| {
+            std::env::var("MARE_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800)
+        }));
         let iters = (budget.as_nanos() / once.as_nanos()).clamp(5, 1000) as u32;
 
         let mut samples = Vec::with_capacity(iters as usize);

@@ -1,4 +1,359 @@
-//! Byte-size formatting/parsing helpers shared by configs and reports.
+//! Byte buffers: the zero-copy shared-buffer layer of the data plane,
+//! plus byte-size formatting/parsing helpers shared by configs and
+//! reports.
+//!
+//! [`Shared`] is an `Arc`-backed immutable buffer with O(1) slicing —
+//! cloning one (or a [`Record`](crate::dataset::Record) holding one) is
+//! a pointer bump, not a deep copy. [`SharedStr`] is a `Shared` whose
+//! bytes are validated UTF-8 once at construction. Together they are
+//! what lets a record payload travel ingest → task → mount → shuffle →
+//! collect without being re-allocated at every boundary (see
+//! docs/ARCHITECTURE.md "Data plane & buffer ownership").
+//!
+//! The module keeps a global **payload-copy counter**: every time bytes
+//! are copied *out of an existing `Shared`* into a fresh owned
+//! allocation ([`Shared::to_vec`], [`Shared::deep_clone`]), the counter
+//! ticks. The engine's zero-copy invariant — a map-only happy path
+//! performs zero payload deep-copies — is asserted against it in
+//! `rust/tests/zero_copy.rs`. Creating a `Shared` from foreign bytes
+//! (ingest, a tool's fresh output) is *creation*, not a copy, and does
+//! not count; neither does materializing a mount file through
+//! [`SegmentWriter`] (the file is a new artifact, not a duplicated
+//! record payload).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+// ------------------------------------------------------------ counters
+
+/// Global payload deep-copy counter (events, not bytes).
+static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+
+/// Number of payload deep-copy events since process start. Monotonic;
+/// tests measure deltas around the code under test.
+pub fn payload_copies() -> u64 {
+    PAYLOAD_COPIES.load(Ordering::Relaxed)
+}
+
+/// Record one payload deep-copy event (bytes left a `Shared` into a new
+/// owned allocation).
+pub fn note_payload_copy() {
+    PAYLOAD_COPIES.fetch_add(1, Ordering::Relaxed);
+}
+
+// -------------------------------------------------------------- Shared
+
+/// An immutable, refcounted byte buffer with O(1) slicing.
+///
+/// `clone()` bumps a refcount; [`Shared::slice`] returns a view into
+/// the same allocation. The only ways to duplicate the payload are
+/// [`Shared::to_vec`] / [`Shared::deep_clone`], which tick the global
+/// [`payload_copies`] counter.
+#[derive(Clone)]
+pub struct Shared {
+    buf: Arc<[u8]>,
+    off: usize,
+    len: usize,
+}
+
+impl Shared {
+    /// An empty buffer (no allocation shared with anything).
+    pub fn empty() -> Shared {
+        Shared { buf: Arc::from(Vec::new()), off: 0, len: 0 }
+    }
+
+    /// Take ownership of `v` (one move into the refcounted allocation;
+    /// creation, not a counted copy).
+    pub fn from_vec(v: Vec<u8>) -> Shared {
+        let len = v.len();
+        Shared { buf: Arc::from(v), off: 0, len }
+    }
+
+    /// Copy foreign bytes in (creation, not a counted copy — the source
+    /// is not a `Shared`). One allocation + memcpy, straight into the
+    /// refcounted buffer.
+    pub fn copy_from_slice(b: &[u8]) -> Shared {
+        Shared { buf: Arc::from(b), off: 0, len: b.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The viewed bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// O(1) sub-view `[start, end)` of this buffer (same allocation).
+    pub fn slice(&self, start: usize, end: usize) -> Shared {
+        assert!(start <= end && end <= self.len, "slice {start}..{end} of {}", self.len);
+        Shared { buf: self.buf.clone(), off: self.off + start, len: end - start }
+    }
+
+    /// Copy the viewed bytes into a fresh `Vec` (counted as a payload
+    /// deep-copy).
+    pub fn to_vec(&self) -> Vec<u8> {
+        note_payload_copy();
+        self.as_slice().to_vec()
+    }
+
+    /// A `Shared` over a fresh private allocation (counted) — the old
+    /// owned-buffer behaviour, kept for before/after benchmarking.
+    pub fn deep_clone(&self) -> Shared {
+        Shared::from_vec(self.to_vec())
+    }
+
+    /// How many `Shared` views share this allocation (diagnostics).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.buf)
+    }
+}
+
+impl std::ops::Deref for Shared {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Shared {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Default for Shared {
+    fn default() -> Shared {
+        Shared::empty()
+    }
+}
+
+impl PartialEq for Shared {
+    fn eq(&self, other: &Shared) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Shared {}
+
+impl std::hash::Hash for Shared {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
+
+impl std::fmt::Debug for Shared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Shared({} B)", self.len)
+    }
+}
+
+impl From<Vec<u8>> for Shared {
+    fn from(v: Vec<u8>) -> Shared {
+        Shared::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Shared {
+    fn from(b: &[u8]) -> Shared {
+        Shared::copy_from_slice(b)
+    }
+}
+
+impl From<String> for Shared {
+    fn from(s: String) -> Shared {
+        Shared::from_vec(s.into_bytes())
+    }
+}
+
+impl From<&str> for Shared {
+    fn from(s: &str) -> Shared {
+        Shared::copy_from_slice(s.as_bytes())
+    }
+}
+
+impl From<SharedStr> for Shared {
+    fn from(s: SharedStr) -> Shared {
+        s.raw
+    }
+}
+
+// ----------------------------------------------------------- SharedStr
+
+/// A [`Shared`] buffer validated as UTF-8 once at construction.
+///
+/// Derefs to `str`, so call sites that held a `String` keep compiling;
+/// clones and [`SharedStr::slice`] are O(1) views like `Shared`.
+#[derive(Clone, Default, Eq)]
+pub struct SharedStr {
+    raw: Shared,
+}
+
+impl SharedStr {
+    /// Take ownership of a `String` (no copy; UTF-8 by construction).
+    pub fn from_string(s: String) -> SharedStr {
+        SharedStr { raw: Shared::from_vec(s.into_bytes()) }
+    }
+
+    /// Validate `raw` as UTF-8 and wrap it (no copy on success).
+    pub fn from_shared(raw: Shared) -> Result<SharedStr, std::str::Utf8Error> {
+        std::str::from_utf8(raw.as_slice())?;
+        Ok(SharedStr { raw })
+    }
+
+    pub fn as_str(&self) -> &str {
+        // SAFETY: every constructor validates UTF-8 (`from_string` by
+        // the `String` type, `from_shared` explicitly, `slice` by the
+        // char-boundary assertions), and the buffer is immutable.
+        unsafe { std::str::from_utf8_unchecked(self.raw.as_slice()) }
+    }
+
+    /// The underlying byte view.
+    pub fn as_shared(&self) -> &Shared {
+        &self.raw
+    }
+
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    /// O(1) sub-view `[start, end)`; both indices must lie on char
+    /// boundaries.
+    pub fn slice(&self, start: usize, end: usize) -> SharedStr {
+        let s = self.as_str();
+        assert!(
+            s.is_char_boundary(start) && s.is_char_boundary(end),
+            "slice {start}..{end} off char boundary"
+        );
+        SharedStr { raw: self.raw.slice(start, end) }
+    }
+
+    /// Copy out an owned `String` (counted as a payload deep-copy).
+    pub fn to_owned_string(&self) -> String {
+        note_payload_copy();
+        self.as_str().to_string()
+    }
+}
+
+impl std::ops::Deref for SharedStr {
+    type Target = str;
+    fn deref(&self) -> &str {
+        self.as_str()
+    }
+}
+
+impl AsRef<str> for SharedStr {
+    fn as_ref(&self) -> &str {
+        self.as_str()
+    }
+}
+
+impl PartialEq for SharedStr {
+    fn eq(&self, other: &SharedStr) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl PartialEq<str> for SharedStr {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for SharedStr {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl std::hash::Hash for SharedStr {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_str().hash(state);
+    }
+}
+
+impl std::fmt::Debug for SharedStr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_str(), f)
+    }
+}
+
+impl std::fmt::Display for SharedStr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl From<String> for SharedStr {
+    fn from(s: String) -> SharedStr {
+        SharedStr::from_string(s)
+    }
+}
+
+impl From<&str> for SharedStr {
+    fn from(s: &str) -> SharedStr {
+        SharedStr { raw: Shared::copy_from_slice(s.as_bytes()) }
+    }
+}
+
+impl From<&String> for SharedStr {
+    fn from(s: &String) -> SharedStr {
+        SharedStr::from(s.as_str())
+    }
+}
+
+// ------------------------------------------------------- SegmentWriter
+
+/// Builds one contiguous buffer from many segments with a single
+/// exact-capacity allocation — the mount materializer (a partition's
+/// records joined by a separator into ONE container file) uses this
+/// instead of the old `Vec<String>` + `join` + `into_bytes` triple
+/// copy.
+pub struct SegmentWriter {
+    buf: Vec<u8>,
+}
+
+impl SegmentWriter {
+    /// A writer pre-sized to `capacity` bytes (pass the exact final
+    /// length to guarantee one allocation).
+    pub fn with_capacity(capacity: usize) -> SegmentWriter {
+        SegmentWriter { buf: Vec::with_capacity(capacity) }
+    }
+
+    pub fn push(&mut self, segment: &[u8]) {
+        self.buf.extend_from_slice(segment);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The finished buffer as a `Shared` (handed to the container VFS
+    /// without further copies).
+    pub fn finish(self) -> Shared {
+        Shared::from_vec(self.buf)
+    }
+
+    /// The finished buffer as owned bytes (stdin staging).
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+// ------------------------------------------------- size format helpers
 
 /// Human-readable byte size ("1.50 GiB").
 pub fn human(bytes: u64) -> String {
@@ -58,5 +413,67 @@ mod tests {
         assert_eq!(parse("2GB"), Some(2 << 30));
         assert_eq!(parse_or_number("4096"), Some(4096));
         assert_eq!(parse("x"), None);
+    }
+
+    #[test]
+    fn shared_slices_share_the_allocation() {
+        let s = Shared::from_vec(b"hello world".to_vec());
+        let hello = s.slice(0, 5);
+        let world = s.slice(6, 11);
+        assert_eq!(hello.as_slice(), b"hello");
+        assert_eq!(world.as_slice(), b"world");
+        // three views, one allocation
+        assert_eq!(s.ref_count(), 3);
+        // clones are views too
+        let c = world.clone();
+        assert_eq!(s.ref_count(), 4);
+        assert_eq!(c, world);
+    }
+
+    #[test]
+    fn clone_is_not_a_counted_copy_but_to_vec_is() {
+        let s = Shared::from_vec(vec![7u8; 1024]);
+        let _view = s.clone();
+        let _sub = s.slice(0, 512);
+        // other tests may bump the global counter concurrently, so only
+        // assert our own contribution: to_vec adds at least one event
+        let mid = payload_copies();
+        let v = s.to_vec();
+        assert_eq!(v.len(), 1024);
+        assert!(payload_copies() >= mid + 1);
+        let d = s.deep_clone();
+        assert_eq!(d, s);
+        assert_eq!(d.ref_count(), 1);
+    }
+
+    #[test]
+    fn shared_str_validates_and_slices() {
+        let s = SharedStr::from_string("héllo\nwörld".to_string());
+        assert_eq!(s.as_str(), "héllo\nwörld");
+        let first = s.slice(0, 6); // "héllo" is 6 bytes
+        assert_eq!(first.as_str(), "héllo");
+        assert_eq!(first, "héllo");
+        // invalid UTF-8 rejected without copying
+        assert!(SharedStr::from_shared(Shared::from_vec(vec![0xff, 0xfe])).is_err());
+        // valid round-trips
+        let ok = SharedStr::from_shared(Shared::from_vec(b"ok".to_vec())).unwrap();
+        assert_eq!(ok.as_str(), "ok");
+    }
+
+    #[test]
+    #[should_panic(expected = "char boundary")]
+    fn shared_str_slice_enforces_boundaries() {
+        let s = SharedStr::from_string("é".to_string());
+        let _ = s.slice(0, 1); // mid-codepoint
+    }
+
+    #[test]
+    fn segment_writer_concatenates_exactly() {
+        let mut w = SegmentWriter::with_capacity(10);
+        w.push(b"ab");
+        w.push(b"");
+        w.push(b"cde");
+        assert_eq!(w.len(), 5);
+        assert_eq!(w.finish().as_slice(), b"abcde");
     }
 }

@@ -154,7 +154,7 @@ pub fn parse_vcf_records(
                 String::from_utf8(crate::tools::posix::decompress(bytes)?)
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             } else {
-                String::from_utf8(bytes.clone())
+                String::from_utf8(bytes.to_vec())
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             };
             calls.extend(crate::formats::vcf::parse_many(&text)?);

@@ -68,7 +68,7 @@ pub fn run(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Result<Ve
                 String::from_utf8(decompress(bytes)?)
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             } else {
-                String::from_utf8(bytes.clone())
+                String::from_utf8(bytes.to_vec())
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             };
             calls.extend(vcf::parse_many(&text)?);

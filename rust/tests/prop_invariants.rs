@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use mare::dataset::{join_records, plan, split_records, Partitioner, Record};
+use mare::dataset::{join_records, plan, split_records, split_records_shared, Partitioner, Record};
 use mare::mare::MountPoint;
 use mare::prop_assert;
 use mare::simtime::{Duration, SlotSchedule, SlotTask, VirtualTime};
@@ -200,6 +200,67 @@ fn split_join_are_inverse() {
         let joined = join_records(&recs, sep);
         let split = split_records(&joined, sep);
         prop_assert!(split == recs, "{split:?} != {recs:?}");
+        Ok(())
+    });
+}
+
+/// The zero-copy split is byte-identical to the owned split on any
+/// input — including multi-byte separators, trailing separators, empty
+/// and whitespace-only chunks — and round-trips through `join_records`
+/// exactly like the owned variant.
+#[test]
+fn zero_copy_split_matches_owned_and_roundtrips() {
+    check("split-shared-equals-owned", 300, |rng| {
+        // adversarial text: chunks that are empty, whitespace-only,
+        // multi-byte (é), or contain separator fragments
+        let sep = *rng.choice(&["\n", "\n$$$$\n", ";;", "|é|"]);
+        let n = rng.below(16);
+        let mut text = String::new();
+        for _ in 0..n {
+            let chunk = match rng.below(5) {
+                0 => String::new(),
+                1 => " ".repeat(rng.below(3)),
+                2 => format!("mol-é{}", rng.below(100)),
+                3 => "$$$".to_string(), // fragment of a separator
+                _ => format!("r{}", rng.below(1000)),
+            };
+            text.push_str(&chunk);
+            text.push_str(sep);
+        }
+        if rng.bool(0.3) {
+            text.push_str("tail-no-sep"); // no trailing separator
+        }
+
+        let owned = split_records(&text, sep);
+        let buf = mare::util::bytes::SharedStr::from(text.as_str());
+        let shared = split_records_shared(&buf, sep);
+
+        prop_assert!(
+            shared.len() == owned.len(),
+            "chunk count differs: shared {} vs owned {}",
+            shared.len(),
+            owned.len()
+        );
+        for (s, o) in shared.iter().zip(&owned) {
+            prop_assert!(s.as_str() == o.as_str(), "chunk differs: {s:?} != {o:?}");
+        }
+
+        // round-trip: join(shared chunks) re-splits identically in BOTH
+        // variants (the trailing separator join_records appends is
+        // dropped by both)
+        let shared_strings: Vec<String> =
+            shared.iter().map(|s| s.as_str().to_string()).collect();
+        let rejoined = join_records(&shared_strings, sep);
+        prop_assert!(
+            split_records(&rejoined, sep) == owned,
+            "owned re-split of rejoined text diverged"
+        );
+        let rebuf = mare::util::bytes::SharedStr::from(rejoined.as_str());
+        let reshared = split_records_shared(&rebuf, sep);
+        prop_assert!(
+            reshared.iter().map(|s| s.as_str()).eq(owned.iter().map(|s| s.as_str())),
+            "shared re-split of rejoined text diverged"
+        );
         Ok(())
     });
 }

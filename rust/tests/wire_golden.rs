@@ -137,6 +137,7 @@ fn arbitrary_pipeline(rng: &mut Rng) -> Pipeline {
                 command: arbitrary_command(rng),
                 depth: if rng.bool(0.5) { None } else { Some(rng.range(1, 5)) },
                 disk_mounts: rng.bool(0.5),
+                fused: None,
             }),
             2 => PipelineOp::RepartitionBy {
                 key: KeySelector::named(rng.choice(&KeySelector::known()))

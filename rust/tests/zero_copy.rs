@@ -1,0 +1,130 @@
+//! Zero-copy data-plane invariants, asserted with the global payload
+//! deep-copy counter on `util::bytes::Shared`.
+//!
+//! This test binary is the ONLY place that asserts exact counter
+//! deltas: integration-test files run as separate processes, so no
+//! other test can bump the counter concurrently — and a local mutex
+//! serializes the tests within this file.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use mare::cluster::{Cluster, ClusterConfig, FaultSpec};
+use mare::container::Registry;
+use mare::dataset::{ClosureOp, Dataset, TaskContext};
+use mare::mare::MaRe;
+use mare::util::bytes::payload_copies;
+
+/// Serialize the counter-delta tests (they share one global counter).
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap()
+}
+
+fn cluster(cfg: ClusterConfig) -> Cluster {
+    let mut reg = Registry::new();
+    reg.push(mare::tools::images::ubuntu());
+    Cluster::new(Arc::new(reg), None, cfg)
+}
+
+fn identity_op() -> Arc<dyn mare::dataset::PartitionOp> {
+    Arc::new(ClosureOp { f: |_: &TaskContext, r| Ok(r), name: "identity".into() })
+}
+
+fn genome(lines: usize) -> String {
+    (0..lines).map(|i| format!("GATTACA-{i}\n")).collect()
+}
+
+/// The tentpole invariant: a map-only happy path — ingest, schedule,
+/// execute, collect — performs ZERO payload deep-copies. Everything is
+/// refcount bumps over the buffer `parallelize_text` ingested.
+#[test]
+fn map_only_happy_path_performs_zero_payload_copies() {
+    let _g = lock();
+    let c = cluster(ClusterConfig::sized(4, 2));
+    let text = genome(64);
+    let ds = Dataset::parallelize_text(&text, "\n", 8).map_partitions(identity_op());
+
+    let before = payload_copies();
+    let out = c.run(&ds).unwrap();
+    let copies = payload_copies() - before;
+
+    assert_eq!(copies, 0, "map-only happy path must not deep-copy payloads");
+    // semantics unchanged: collect_text is byte-identical to the input
+    assert_eq!(out.collect_text("\n"), text);
+}
+
+/// The retry-loop regression (ISSUE 5 satellite): `run_stage` used to
+/// clone the full input partition on EVERY attempt, even the first of a
+/// single-attempt task. With shared handles an injected retry copies at
+/// most once — in fact, not at all.
+#[test]
+fn injected_retry_copies_at_most_once() {
+    let _g = lock();
+    let text = genome(16);
+    let mk = |fault: Option<FaultSpec>| {
+        let mut cfg = ClusterConfig::sized(2, 2);
+        cfg.fault = fault;
+        cluster(cfg)
+    };
+    let ds = || Dataset::parallelize_text(&text, "\n", 4).map_partitions(identity_op());
+
+    let clean = mk(None).run(&ds()).unwrap();
+
+    let before = payload_copies();
+    let flaky = mk(Some(FaultSpec::TaskFlake { stage: 0, partition: 1, failures: 1 }))
+        .run(&ds())
+        .unwrap();
+    let copies = payload_copies() - before;
+
+    assert!(copies <= 1, "a retried task may copy its input at most once (got {copies})");
+    assert_eq!(flaky.report.stages[0].retried, 1);
+    assert_eq!(flaky.collect_text("\n"), clean.collect_text("\n"));
+}
+
+/// A containerized map stays record-copy-free too: stage-in
+/// materializes the mount file through the segmented writer (a new
+/// artifact, not a payload duplication) and stage-out records are
+/// slices of the container's output file.
+#[test]
+fn containerized_map_does_not_deep_copy_records() {
+    let _g = lock();
+    let c = Arc::new(cluster(ClusterConfig::sized(2, 2)));
+    let text = genome(32);
+    let job = MaRe::source(c, Dataset::parallelize_text(&text, "\n", 4))
+        .map("ubuntu", "grep -o '[GC]' /dna | wc -l > /count")
+        .mounts("/dna", "/count")
+        .build()
+        .unwrap();
+
+    let before = payload_copies();
+    let out = job.collect_text().unwrap();
+    let copies = payload_copies() - before;
+
+    assert_eq!(copies, 0, "containerized map path must not deep-copy record payloads");
+    // Listing 1 semantics hold: per-partition G/C counts
+    let total: u64 = out.lines().filter_map(|l| l.trim().parse::<u64>().ok()).sum();
+    let expected = text.chars().filter(|c| *c == 'G' || *c == 'C').count() as u64;
+    assert_eq!(total, expected);
+}
+
+/// Launch counts and `Job::explain()` stay pinned across the
+/// refactor: the gc pipeline still starts exactly (map per partition +
+/// reduce tree) containers, and the three-plan rendering is stable.
+#[test]
+fn gc_job_launch_count_and_explain_are_stable() {
+    let _g = lock();
+    let c = Arc::new(cluster(ClusterConfig::sized(2, 2)));
+    let ds = Dataset::parallelize_text(&genome(16), "\n", 4);
+    let job = mare::workloads::gc::pipeline(c, ds);
+    let text = job.collect_text().unwrap();
+    // "GATTACA-i" holds one G and one C: 16 lines x 2
+    assert_eq!(text, "32");
+    let s = job.explain();
+    assert!(s.contains("logical plan:"), "{s}");
+    assert!(s.contains("optimized plan"), "{s}");
+    assert!(s.contains("physical plan:"), "{s}");
+    // gc's /count -> /counts mounts do NOT chain, so the map must NOT
+    // fold into the reduce; launches stay the pre-fusion count:
+    // 4 maps + depth-2 tree over 4 partitions (4 + 2 + 1)
+    assert_eq!(job.container_launches(), 11);
+}
