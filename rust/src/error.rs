@@ -49,6 +49,12 @@ pub enum MareError {
 
     /// Job-submission / queue errors (submit).
     Submit(String),
+
+    /// Admission refused: the spool is at the depth limit a resident
+    /// `mare serve` daemon advertised in its control file. Retryable —
+    /// the submitter should back off and resubmit, or the operator can
+    /// raise `--max-depth`.
+    Backpressure { queued: usize, held: usize, max_depth: usize },
 }
 
 impl std::fmt::Display for MareError {
@@ -73,6 +79,12 @@ impl std::fmt::Display for MareError {
             MareError::Json(m) => write!(f, "json: {m}"),
             MareError::Wire(e) => write!(f, "wire: {e}"),
             MareError::Submit(m) => write!(f, "submit: {m}"),
+            MareError::Backpressure { queued, held, max_depth } => write!(
+                f,
+                "backpressure: spool depth {} (queued {queued} + held {held}) is at the \
+                 service limit {max_depth}; retry later or raise --max-depth",
+                queued + held
+            ),
         }
     }
 }
@@ -111,6 +123,11 @@ mod tests {
             "tool `bash` not found in image `ubuntu`"
         );
         assert_eq!(MareError::Pipeline("empty image".into()).to_string(), "pipeline: empty image");
+        let bp = MareError::Backpressure { queued: 7, held: 1, max_depth: 8 };
+        let text = bp.to_string();
+        assert!(text.contains("backpressure"), "{text}");
+        assert!(text.contains("depth 8"), "{text}");
+        assert!(text.contains("limit 8"), "{text}");
     }
 
     #[test]

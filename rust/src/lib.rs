@@ -48,6 +48,7 @@ pub mod mare;
 pub mod perf;
 pub mod repl;
 pub mod runtime;
+pub mod serve;
 pub mod simtime;
 pub mod storage;
 pub mod submit;

@@ -9,6 +9,9 @@
 //! mare jobs [--queue DIR]                   # list queued/running/done/failed
 //! mare work [--queue DIR] [--workers N] [--fault W:K:hold|running]
 //!                                           # threaded worker pool drains the queue
+//! mare serve [--queue DIR] [--workers N] [--max-depth D] [--quota t=w,...]
+//!                                           # resident multi-tenant job service
+//! mare serve --drain [--queue DIR]          # ask the resident daemon to exit
 //! mare requeue <id> [--queue DIR] [--force] # put a stuck/finished job back
 //! mare inspect [--artifacts DIR]            # artifacts + stock images
 //! mare help
@@ -40,6 +43,18 @@ USAGE:
   mare work  [--queue DIR] [--workers N]
                          spin a pool of N worker THREADS that
                          concurrently claim and run queued jobs
+  mare serve [--queue DIR] [--workers N] [--max-depth D] [--quota t=w,...]
+                         resident job service: a persistent worker fleet
+                         with fair-share + priority claim ordering over
+                         envelope `tenant`/`priority` fields, admission
+                         backpressure at --max-depth, self-healing
+                         requeue of dead workers' jobs, and atomic
+                         serve-health.json / serve-stats.json snapshots
+                         in the spool every tick
+  mare serve --drain [--queue DIR]
+                         flip the drain flag in serve-control.json: the
+                         daemon stops claiming, finishes in-flight jobs,
+                         publishes a final snapshot and exits 0
   mare requeue <id> [--queue DIR] [--force]
                          put a job back in the queue (recovers jobs
                          stuck `running` after a worker died; also
@@ -78,6 +93,17 @@ OPTIONS (submit/jobs/work/requeue):
                           `mare requeue`). Comma-separate for several.
   --stale-ms T            claim holds older than T ms are swept [10000]
   --force                 requeue even a fresh `running` record
+
+OPTIONS (serve):
+  --workers N             resident worker threads      [4]
+  --max-depth D           refuse submissions while queued+held >= D
+                          (0 = unlimited)              [256]
+  --quota t=w[,t=w...]    tenant fair-share weights; unlisted tenants
+                          weigh 1. Editable at runtime: the daemon
+                          re-reads serve-control.json every tick
+  --tick-ms T             supervisor cadence (control reload, orphan
+                          requeue, health publish)     [200]
+  --drain                 request drain instead of starting a daemon
 ";
 
 /// Default job spool directory shared by submit/jobs/work/requeue.
@@ -103,6 +129,7 @@ fn dispatch() -> Result<()> {
         Some("submit") => cmd_submit(&args),
         Some("jobs") => cmd_jobs(&args),
         Some("work") => cmd_work(&args),
+        Some("serve") => cmd_serve(&args),
         Some("requeue") => cmd_requeue(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -222,19 +249,7 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         println!("no jobs in {}", queue.dir().display());
         return Ok(());
     }
-    println!("{:>5}  {:<8} {:>9}  {}", "id", "status", "launches", "plan");
-    for job in jobs {
-        let launches = match &job.result {
-            Some(r) => r.launches.to_string(),
-            None => "-".into(),
-        };
-        println!("{:>5}  {:<8} {:>9}  {}", job.id, job.status.name(), launches, job.summary);
-        if let Some(r) = &job.result {
-            if r.detail != "ok" {
-                println!("       {} on {}: {}", job.status.name(), r.driver, r.detail);
-            }
-        }
-    }
+    print!("{}", mare::submit::render_jobs_table(&jobs, mare::submit::now_millis()));
     Ok(())
 }
 
@@ -293,6 +308,72 @@ fn cmd_work(args: &Args) -> Result<()> {
     }
     println!("pool: {} workers, {} claim conflicts", workers, outcome.total_conflicts());
     for report in &outcome.reports {
+        println!("  {}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    if args.flag_bool("drain") {
+        let control = mare::serve::request_drain(queue.dir())?;
+        println!(
+            "drain requested for {} — the daemon (max-depth {}) finishes \
+             in-flight work and exits",
+            queue.dir().display(),
+            control.max_depth
+        );
+        return Ok(());
+    }
+    // like `work`, --workers sizes the resident FLEET (threads), not
+    // the simulated cluster each worker drives
+    let mut cluster_args = args.clone();
+    cluster_args.flags.remove("workers");
+    let cfg = RunConfigFile::from_args(&cluster_args)?;
+
+    let workers = args.flag_usize("workers", 4)?.max(1);
+    let mut pool_cfg = mare::submit::PoolConfig::new(workers, cfg.cluster.clone());
+    if let Some(spec) = args.flag("fault") {
+        pool_cfg.faults = mare::submit::FaultPlan::parse(spec)?;
+    }
+    let stale_default = pool_cfg.stale_after.as_millis() as u64;
+    pool_cfg.stale_after =
+        std::time::Duration::from_millis(args.flag_u64("stale-ms", stale_default)?);
+
+    let mut serve_cfg = mare::serve::ServeConfig::new(pool_cfg);
+    serve_cfg.tick = std::time::Duration::from_millis(args.flag_u64("tick-ms", 200)?.max(1));
+    serve_cfg.max_depth = args.flag_usize("max-depth", 256)?;
+    if let Some(spec) = args.flag("quota") {
+        serve_cfg.quotas = mare::serve::parse_quotas(spec)?;
+    }
+
+    println!(
+        "serving {} with {workers} workers (tick {:?}, max-depth {}{})",
+        queue.dir().display(),
+        serve_cfg.tick,
+        serve_cfg.max_depth,
+        if serve_cfg.quotas.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", quotas {}",
+                serve_cfg
+                    .quotas
+                    .iter()
+                    .map(|(t, w)| format!("{t}={w}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
+        }
+    );
+    println!("drain with: mare serve --drain --queue {}", queue.dir().display());
+
+    let outcome = mare::serve::ServeDaemon::new(serve_cfg).run(&queue)?;
+    println!(
+        "drained after {} ticks ({} orphaned jobs requeued)",
+        outcome.ticks, outcome.orphans_requeued
+    );
+    for report in &outcome.outcome.reports {
         println!("  {}", report.summary());
     }
     Ok(())

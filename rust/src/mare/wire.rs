@@ -152,6 +152,99 @@ pub fn encode_string(pipeline: &Pipeline) -> Result<String, WireError> {
     Ok(encode(pipeline)?.to_string_pretty())
 }
 
+// ---------------------------------------------------- envelope metadata
+
+/// The tenant jobs land in when the envelope names none.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Optional scheduling metadata carried on the envelope itself:
+/// `tenant` (admission/accounting bucket for the `mare serve`
+/// fair-share scheduler) and `priority` (claim-order tie-break within
+/// a tenant; higher first; may be negative). Both are envelope keys,
+/// so every pre-serve decoder ignores them under the
+/// unknown-envelope-key rule — old readers, new envelopes, same plan.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EnvelopeMeta {
+    pub tenant: Option<String>,
+    pub priority: Option<i64>,
+}
+
+impl EnvelopeMeta {
+    pub fn is_empty(&self) -> bool {
+        self.tenant.is_none() && self.priority.is_none()
+    }
+
+    pub fn tenant_or_default(&self) -> &str {
+        self.tenant.as_deref().unwrap_or(DEFAULT_TENANT)
+    }
+
+    pub fn priority_or_default(&self) -> i64 {
+        self.priority.unwrap_or(0)
+    }
+}
+
+/// Extract the optional scheduling metadata from a v1 envelope. Absent
+/// keys mean "no metadata"; present keys are validated strictly, so a
+/// mistyped tenant fails admission instead of silently landing in the
+/// default bucket.
+pub fn decode_meta(envelope: &Json) -> Result<EnvelopeMeta, WireError> {
+    if !matches!(envelope, Json::Obj(_)) {
+        return Err(WireError::NotAnEnvelope(format!(
+            "expected a JSON object, got {envelope}"
+        )));
+    }
+    let mut meta = EnvelopeMeta::default();
+    if let Some(t) = envelope.get("tenant") {
+        let t = t.as_str().map_err(|e| WireError::BadField {
+            at: "envelope".into(),
+            field: "tenant",
+            detail: e.to_string(),
+        })?;
+        if t.is_empty() {
+            return Err(WireError::BadField {
+                at: "envelope".into(),
+                field: "tenant",
+                detail: "must be a non-empty string".into(),
+            });
+        }
+        meta.tenant = Some(t.to_string());
+    }
+    if let Some(p) = envelope.get("priority") {
+        let p = p.as_i64().map_err(|e| WireError::BadField {
+            at: "envelope".into(),
+            field: "priority",
+            detail: e.to_string(),
+        })?;
+        meta.priority = Some(p);
+    }
+    Ok(meta)
+}
+
+/// [`encode`] plus the optional scheduling metadata. With empty
+/// metadata this IS [`encode`] — the canonical envelope never grows
+/// keys it doesn't need, so plans without metadata re-encode
+/// byte-identically to every prior release.
+pub fn encode_with_meta(pipeline: &Pipeline, meta: &EnvelopeMeta) -> Result<Json, WireError> {
+    let encoded = encode(pipeline)?;
+    if meta.is_empty() {
+        return Ok(encoded);
+    }
+    let mut fields = match encoded {
+        Json::Obj(fields) => fields,
+        _ => unreachable!("encode always returns an envelope object"),
+    };
+    // canonical key order: version, kind, tenant?, priority?, ops
+    let ops = fields.pop().expect("ops is the last envelope key");
+    if let Some(t) = &meta.tenant {
+        fields.push(("tenant".to_string(), Json::str(t.as_str())));
+    }
+    if let Some(p) = meta.priority {
+        fields.push(("priority".to_string(), Json::Num(p as f64)));
+    }
+    fields.push(ops);
+    Ok(Json::Obj(fields))
+}
+
 /// Encode-side twin of the decoder's `req_count`: a plan that encodes
 /// must decode, so zero counts are rejected symmetrically and the
 /// fixed-point guarantee holds for every envelope we ever emit.
@@ -627,6 +720,64 @@ mod tests {
         let text = encode_string(&p).unwrap();
         let from_text = decode_str(&text).unwrap();
         assert_eq!(encode(&from_text).unwrap(), encoded);
+    }
+
+    #[test]
+    fn envelope_meta_roundtrips_and_decode_ignores_it() {
+        let p = kitchen_sink();
+        let plain = encode(&p).unwrap();
+        let meta = EnvelopeMeta { tenant: Some("alpha".into()), priority: Some(-2) };
+        let tagged = encode_with_meta(&p, &meta).unwrap();
+
+        // the metadata survives its own decode path
+        assert_eq!(decode_meta(&tagged).unwrap(), meta);
+        // ...while the plan decode path ignores it entirely (the
+        // unknown-envelope-key rule): same plan as the untagged form
+        let via_tagged = decode(&tagged).unwrap();
+        assert_eq!(encode(&via_tagged).unwrap(), plain);
+        assert_eq!(via_tagged.describe(), p.describe());
+        // untagged envelopes carry no metadata...
+        assert_eq!(decode_meta(&plain).unwrap(), EnvelopeMeta::default());
+        // ...and empty metadata encodes to exactly the plain envelope
+        assert_eq!(encode_with_meta(&p, &EnvelopeMeta::default()).unwrap(), plain);
+
+        // canonical key order: version, kind, tenant, priority, ops
+        let keys: Vec<&str> = match &tagged {
+            Json::Obj(fields) => fields.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => panic!("envelope must be an object"),
+        };
+        assert_eq!(keys, vec!["version", "kind", "tenant", "priority", "ops"]);
+    }
+
+    #[test]
+    fn envelope_meta_is_validated_strictly_when_present() {
+        let bad_tenant = Json::parse(
+            r#"{"version": 1, "tenant": 7,
+                "ops": [{"op": "ingest", "label": "x", "partitions": 1}, {"op": "collect"}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            decode_meta(&bad_tenant),
+            Err(WireError::BadField { field: "tenant", .. })
+        ));
+
+        let empty_tenant = Json::parse(r#"{"version": 1, "tenant": "", "ops": []}"#).unwrap();
+        assert!(matches!(
+            decode_meta(&empty_tenant),
+            Err(WireError::BadField { field: "tenant", .. })
+        ));
+
+        let frac_priority =
+            Json::parse(r#"{"version": 1, "priority": 1.5, "ops": []}"#).unwrap();
+        assert!(matches!(
+            decode_meta(&frac_priority),
+            Err(WireError::BadField { field: "priority", .. })
+        ));
+
+        // negative priorities are legal (lower-than-default urgency)
+        let neg = Json::parse(r#"{"version": 1, "priority": -3, "ops": []}"#).unwrap();
+        assert_eq!(decode_meta(&neg).unwrap().priority, Some(-3));
+        assert_eq!(decode_meta(&neg).unwrap().tenant_or_default(), DEFAULT_TENANT);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Lock-free operational counters for the resident job service.
+//!
+//! `mare serve`'s worker threads bump these from the claim/finish hot
+//! path (relaxed atomics — the counters are monotonic tallies, not
+//! synchronization), and the daemon's supervisor tick snapshots them
+//! into `serve-stats.json` for operators to poll. Snapshots are
+//! internally consistent enough for monitoring (each counter is read
+//! atomically); the FINAL snapshot written after the worker fleet has
+//! joined is exact, which is what the cross-process stress gate audits.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// The service-wide tally set. One instance lives for the lifetime of
+/// a `mare serve` daemon and is shared by every worker thread.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Claims committed (jobs moved `queued` → `running` by this fleet).
+    pub claims: AtomicU64,
+    /// Rename races lost while scanning for a claim.
+    pub claim_conflicts: AtomicU64,
+    /// Backoff sleeps taken between contended claim scans.
+    pub claim_backoffs: AtomicU64,
+    /// Stale claim holds swept back into the queue.
+    pub swept: AtomicU64,
+    /// Simulated container launches performed by finished jobs.
+    pub launches: AtomicU64,
+    /// Jobs finished `done`.
+    pub jobs_done: AtomicU64,
+    /// Jobs finished `failed`.
+    pub jobs_failed: AtomicU64,
+    /// Jobs orphaned by a dead worker and force-requeued by the daemon.
+    pub orphans_requeued: AtomicU64,
+}
+
+/// A plain-value copy of [`ServeCounters`] at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub claims: u64,
+    pub claim_conflicts: u64,
+    pub claim_backoffs: u64,
+    pub swept: u64,
+    pub launches: u64,
+    pub jobs_done: u64,
+    pub jobs_failed: u64,
+    pub orphans_requeued: u64,
+}
+
+impl ServeCounters {
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            claims: self.claims.load(Ordering::Relaxed),
+            claim_conflicts: self.claim_conflicts.load(Ordering::Relaxed),
+            claim_backoffs: self.claim_backoffs.load(Ordering::Relaxed),
+            swept: self.swept.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            orphans_requeued: self.orphans_requeued.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl CounterSnapshot {
+    /// Stable key order — the `serve-stats.json` schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("claims", Json::Num(self.claims as f64)),
+            ("claim_conflicts", Json::Num(self.claim_conflicts as f64)),
+            ("claim_backoffs", Json::Num(self.claim_backoffs as f64)),
+            ("swept", Json::Num(self.swept as f64)),
+            ("launches", Json::Num(self.launches as f64)),
+            ("jobs_done", Json::Num(self.jobs_done as f64)),
+            ("jobs_failed", Json::Num(self.jobs_failed as f64)),
+            ("orphans_requeued", Json::Num(self.orphans_requeued as f64)),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> crate::error::Result<CounterSnapshot> {
+        Ok(CounterSnapshot {
+            claims: json.req("claims")?.as_u64()?,
+            claim_conflicts: json.req("claim_conflicts")?.as_u64()?,
+            claim_backoffs: json.req("claim_backoffs")?.as_u64()?,
+            swept: json.req("swept")?.as_u64()?,
+            launches: json.req("launches")?.as_u64()?,
+            jobs_done: json.req("jobs_done")?.as_u64()?,
+            jobs_failed: json.req("jobs_failed")?.as_u64()?,
+            orphans_requeued: json.req("orphans_requeued")?.as_u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_tally_and_snapshot_roundtrips_through_json() {
+        let c = ServeCounters::default();
+        ServeCounters::add(&c.claims, 3);
+        ServeCounters::add(&c.launches, 12);
+        ServeCounters::add(&c.jobs_done, 2);
+        ServeCounters::add(&c.jobs_failed, 1);
+        let snap = c.snapshot();
+        assert_eq!((snap.claims, snap.launches), (3, 12));
+        assert_eq!(snap.jobs_done + snap.jobs_failed, 3);
+        assert_eq!(CounterSnapshot::from_json(&snap.to_json()).unwrap(), snap);
+    }
+
+    #[test]
+    fn concurrent_bumps_are_not_lost() {
+        let c = ServeCounters::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        ServeCounters::add(&c.claims, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot().claims, 8000);
+    }
+}

@@ -5,6 +5,10 @@
 //! * [`speedup`] — ingestion speedup (Figure 5): t(1 worker) / t(N).
 //! * [`WsePoint`] / [`wse_series`] — figure series helpers shared by the
 //!   benches.
+//! * [`counters`] — operational tallies feeding the `mare serve`
+//!   health surface (`serve-stats.json`).
+
+pub mod counters;
 
 use crate::simtime::VirtualTime;
 

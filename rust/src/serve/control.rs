@@ -1,0 +1,157 @@
+//! The `serve-control.json` file: how a resident daemon and the CLI
+//! talk across processes without a socket.
+//!
+//! The daemon writes the file (atomic temp+rename, like every spool
+//! write) into the spool directory when it starts, advertising its
+//! admission settings; it re-reads the file every supervisor tick, so
+//! an operator editing `max_depth`/`quotas` — or `mare serve --drain`
+//! flipping the `drain` flag — takes effect within one tick. Submitter
+//! processes read it at admission time to enforce backpressure: no
+//! daemon, no file, no depth limit.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{MareError, Result};
+use crate::util::json::Json;
+
+/// File name inside the spool directory.
+pub const CONTROL_FILE: &str = "serve-control.json";
+
+/// The advertised service settings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Control {
+    /// Refuse new submissions while `queued + held >= max_depth`.
+    /// 0 disables the depth limit.
+    pub max_depth: usize,
+    /// Drain requested: stop claiming, finish in-flight work, exit 0.
+    pub drain: bool,
+    /// Tenant weight table (see `serve::policy`).
+    pub quotas: Vec<(String, u64)>,
+}
+
+impl Control {
+    pub fn to_json(&self) -> Json {
+        let quotas = Json::Obj(
+            self.quotas.iter().map(|(t, w)| (t.clone(), Json::Num(*w as f64))).collect(),
+        );
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("max_depth", Json::Num(self.max_depth as f64)),
+            ("drain", Json::Bool(self.drain)),
+            ("quotas", quotas),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<Control> {
+        let mut quotas = Vec::new();
+        if let Some(q) = json.get("quotas") {
+            for (tenant, weight) in q.as_obj()? {
+                quotas.push((tenant.clone(), weight.as_u64()?));
+            }
+        }
+        Ok(Control {
+            max_depth: json.req("max_depth")?.as_usize()?,
+            drain: json.req("drain")?.as_bool()?,
+            quotas,
+        })
+    }
+}
+
+fn control_path(dir: &Path) -> std::path::PathBuf {
+    dir.join(CONTROL_FILE)
+}
+
+/// Atomically publish `control` into the spool directory.
+pub fn write(dir: &Path, control: &Control) -> Result<()> {
+    let tmp = dir.join(format!(
+        "{CONTROL_FILE}.tmp-{}-{}",
+        std::process::id(),
+        crate::submit::queue::now_millis()
+    ));
+    fs::write(&tmp, control.to_json().to_string_pretty())?;
+    fs::rename(&tmp, control_path(dir))?;
+    Ok(())
+}
+
+/// Read the advertised settings; `Ok(None)` when no daemon has ever
+/// published into this spool. A file that exists but does not parse is
+/// an error — admission control must not silently degrade to
+/// "unlimited" because the control file was half-edited.
+pub fn read(dir: &Path) -> Result<Option<Control>> {
+    let text = match fs::read_to_string(control_path(dir)) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let json = Json::parse(&text)
+        .map_err(|e| MareError::Submit(format!("{CONTROL_FILE}: {e}")))?;
+    Ok(Some(Control::from_json(&json)?))
+}
+
+/// `mare serve --drain`: flip the drain flag on the advertised
+/// settings (read-modify-write; the rename publish keeps readers
+/// whole). Errors when no daemon owns the spool — there is nothing to
+/// drain, and writing a fresh control file would impose admission
+/// limits no daemon advertised.
+pub fn request_drain(dir: &Path) -> Result<Control> {
+    let mut control = read(dir)?.ok_or_else(|| {
+        MareError::Submit(format!(
+            "no {CONTROL_FILE} in {} — no serve daemon owns this spool",
+            dir.display()
+        ))
+    })?;
+    control.drain = true;
+    write(dir, &control)?;
+    Ok(control)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-serve-control-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn control_roundtrips_and_drain_flips_in_place() {
+        let dir = tmp_dir("roundtrip");
+        assert_eq!(read(&dir).unwrap(), None, "no daemon, no control file");
+
+        let control = Control {
+            max_depth: 64,
+            drain: false,
+            quotas: vec![("alpha".into(), 3), ("beta".into(), 1)],
+        };
+        write(&dir, &control).unwrap();
+        assert_eq!(read(&dir).unwrap(), Some(control.clone()));
+
+        let drained = request_drain(&dir).unwrap();
+        assert!(drained.drain);
+        assert_eq!(drained.max_depth, 64, "drain preserves the other settings");
+        assert_eq!(read(&dir).unwrap().unwrap().quotas, control.quotas);
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn draining_an_unowned_spool_is_a_typed_refusal() {
+        let dir = tmp_dir("unowned");
+        let err = request_drain(&dir).unwrap_err().to_string();
+        assert!(err.contains("no serve daemon owns"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_control_files_error_rather_than_meaning_unlimited() {
+        let dir = tmp_dir("corrupt");
+        fs::write(dir.join(CONTROL_FILE), "{half a file").unwrap();
+        assert!(read(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

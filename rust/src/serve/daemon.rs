@@ -1,0 +1,468 @@
+//! The resident daemon loop behind `mare serve`.
+//!
+//! A [`ServeDaemon`] owns a persistent [`WorkerPool`] fleet in resident
+//! mode plus one supervisor loop. The workers claim/execute/finish
+//! against the shared spool exactly as `mare work` does — same rename
+//! protocol, same exactly-once guarantees — while the daemon's
+//! [`ServeHooks`] impl layers the service semantics on top:
+//!
+//! * claim ordering via the [`FairShare`] policy (weights from the
+//!   control file, reloaded every tick),
+//! * a monotone claim sequence stamped into each record so fairness is
+//!   auditable post-hoc from the spool alone,
+//! * counters + per-worker cells feeding the atomic
+//!   `serve-health.json`/`serve-stats.json` snapshots each tick,
+//! * self-healing: jobs a crashed worker left stuck `running` are
+//!   force-requeued by the supervisor (the one-shot pool leaves them
+//!   for `mare requeue`; a resident service must not),
+//! * drain: the control file's flag flips the hooks' `draining()`
+//!   answer within one tick, workers finish in-flight work and exit,
+//!   and a final snapshot with exact totals is published.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::Duration;
+
+use crate::error::{MareError, Result};
+use crate::metrics::counters::ServeCounters;
+use crate::submit::pool::{PoolConfig, PoolOutcome, ServeHooks, WorkerPool};
+use crate::submit::queue::{now_millis, ClaimStats, JobQueue, JobRecord, JobStatus};
+
+use super::control::{self, Control};
+use super::health::{HealthReport, TenantHealth, WorkerHealth};
+use super::policy::FairShare;
+
+/// Everything `mare serve` is configured with.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The worker fleet (size, cluster shape, fault plan, poll/sweep
+    /// cadence) — shared with the one-shot `mare work` path.
+    pub pool: PoolConfig,
+    /// Supervisor cadence: control reload, orphan requeue, health
+    /// publish.
+    pub tick: Duration,
+    /// Admission depth limit advertised in the control file; 0 = none.
+    pub max_depth: usize,
+    /// Initial tenant weight table (control-file reloads override it).
+    pub quotas: Vec<(String, u64)>,
+}
+
+impl ServeConfig {
+    pub fn new(pool: PoolConfig) -> ServeConfig {
+        ServeConfig {
+            pool,
+            tick: Duration::from_millis(200),
+            max_depth: 256,
+            quotas: Vec::new(),
+        }
+    }
+}
+
+/// What a completed (drained) service run reports.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// The fleet's authoritative per-worker reports and finish records.
+    pub outcome: PoolOutcome,
+    /// Supervisor ticks executed before the fleet exited.
+    pub ticks: u64,
+    /// Jobs the supervisor force-requeued after worker deaths.
+    pub orphans_requeued: u64,
+}
+
+/// Per-worker atomic cell the hooks write and the supervisor snapshots.
+#[derive(Debug, Default)]
+struct WorkerCell {
+    claimed: AtomicU64,
+    jobs_run: AtomicU64,
+    launches: AtomicU64,
+    beat_ms: AtomicU64,
+}
+
+/// The daemon's [`ServeHooks`] impl — all interior-mutable, shared
+/// between N worker threads and the supervisor.
+struct DaemonHooks {
+    policy: Mutex<FairShare>,
+    counters: ServeCounters,
+    draining: AtomicBool,
+    claim_seq: AtomicU64,
+    cells: Vec<WorkerCell>,
+    /// Job ids left stuck `running` by after-claim deaths, awaiting the
+    /// supervisor's force-requeue.
+    orphans: Mutex<Vec<u64>>,
+    /// (worker, note) for every death observed so far.
+    deaths: Mutex<Vec<(usize, String)>>,
+}
+
+impl DaemonHooks {
+    fn new(config: &ServeConfig) -> DaemonHooks {
+        DaemonHooks {
+            policy: Mutex::new(FairShare::new(&config.quotas)),
+            counters: ServeCounters::default(),
+            draining: AtomicBool::new(false),
+            claim_seq: AtomicU64::new(0),
+            cells: (0..config.pool.workers).map(|_| WorkerCell::default()).collect(),
+            orphans: Mutex::new(Vec::new()),
+            deaths: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl ServeHooks for DaemonHooks {
+    fn order(&self, candidates: &mut Vec<JobRecord>) {
+        self.policy.lock().unwrap().order(candidates);
+    }
+
+    fn claimed(&self, worker: usize, job: &mut JobRecord) {
+        // the fairness audit trail: a monotone, daemon-wide sequence
+        // stamped into the record, persisted when the worker finishes
+        job.claim_seq = Some(self.claim_seq.fetch_add(1, Ordering::Relaxed) + 1);
+        self.policy.lock().unwrap().claimed(&job.tenant);
+        ServeCounters::add(&self.counters.claims, 1);
+        ServeCounters::add(&self.cells[worker].claimed, 1);
+    }
+
+    fn scanned(&self, stats: &ClaimStats) {
+        ServeCounters::add(&self.counters.claim_conflicts, stats.conflicts);
+        ServeCounters::add(&self.counters.claim_backoffs, stats.backoffs);
+    }
+
+    fn finished(&self, worker: usize, record: &JobRecord) {
+        let launches = record.result.as_ref().map(|r| r.launches).unwrap_or(0);
+        ServeCounters::add(&self.counters.launches, launches);
+        match record.status {
+            JobStatus::Failed => ServeCounters::add(&self.counters.jobs_failed, 1),
+            _ => ServeCounters::add(&self.counters.jobs_done, 1),
+        }
+        ServeCounters::add(&self.cells[worker].jobs_run, 1);
+        ServeCounters::add(&self.cells[worker].launches, launches);
+        self.policy.lock().unwrap().finished(&record.tenant);
+    }
+
+    fn swept(&self, count: u64) {
+        ServeCounters::add(&self.counters.swept, count);
+    }
+
+    fn beat(&self, worker: usize) {
+        self.cells[worker].beat_ms.store(now_millis(), Ordering::Relaxed);
+    }
+
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    fn died(&self, worker: usize, orphaned_running: Option<u64>) {
+        let note = match orphaned_running {
+            Some(id) => {
+                self.orphans.lock().unwrap().push(id);
+                format!("died leaving job {id} running")
+            }
+            None => "died mid-claim holding a job".to_string(),
+        };
+        self.deaths.lock().unwrap().push((worker, note));
+    }
+}
+
+/// The resident service: construct with a [`ServeConfig`], then
+/// [`run`](ServeDaemon::run) blocks until drained.
+pub struct ServeDaemon {
+    config: ServeConfig,
+}
+
+impl ServeDaemon {
+    pub fn new(config: ServeConfig) -> ServeDaemon {
+        ServeDaemon { config }
+    }
+
+    /// Publish the control file (claiming the spool and clearing any
+    /// stale drain flag from a previous daemon), run the fleet + the
+    /// supervisor until a drain lands, then publish the final snapshot.
+    pub fn run(&self, queue: &JobQueue) -> Result<ServeOutcome> {
+        control::write(
+            queue.dir(),
+            &Control {
+                max_depth: self.config.max_depth,
+                drain: false,
+                quotas: self.config.quotas.clone(),
+            },
+        )?;
+        let hooks = DaemonHooks::new(&self.config);
+        let pool = WorkerPool::new(self.config.pool.clone());
+        let started_ms = now_millis();
+        let done = AtomicBool::new(false);
+        let mut ticks: u64 = 0;
+        let mut orphans_requeued: u64 = 0;
+        let mut max_depth = self.config.max_depth as u64;
+
+        let pool_result = thread::scope(|scope| {
+            let handle = scope.spawn(|| {
+                let result = pool.run_resident(queue, &hooks);
+                done.store(true, Ordering::Release);
+                result
+            });
+            // the supervisor: runs on this thread until the fleet exits.
+            // Each tick is best-effort — a transient spool error must
+            // not kill the service, so per-tick failures are dropped
+            // and the next tick retries.
+            while !done.load(Ordering::Acquire) {
+                ticks += 1;
+                let _ = self.tick_once(
+                    queue,
+                    &hooks,
+                    &mut max_depth,
+                    &mut orphans_requeued,
+                    started_ms,
+                    ticks,
+                );
+                thread::sleep(self.config.tick);
+            }
+            handle
+                .join()
+                .unwrap_or_else(|_| Err(MareError::Submit("serve worker fleet panicked".into())))
+        });
+        let outcome = pool_result?;
+
+        // the fleet is gone: recover everything it left behind so a
+        // drained spool holds only `queued` and `done` work — any
+        // remaining hold is ownerless (sweep with no age gate) and any
+        // `running` job is a dead worker's orphan (force-requeue)
+        let swept = queue.sweep_stale(Duration::ZERO)?;
+        ServeCounters::add(&hooks.counters.swept, swept as u64);
+        for job in queue.list()? {
+            if job.status == JobStatus::Running {
+                queue.requeue_with(job.id, Duration::ZERO, true)?;
+                orphans_requeued += 1;
+                ServeCounters::add(&hooks.counters.orphans_requeued, 1);
+            }
+        }
+
+        let mut report = self.snapshot(queue, &hooks, max_depth, started_ms, ticks)?;
+        report.draining = true;
+        report.final_snapshot = true;
+        // final worker rows come from the joined fleet's authoritative
+        // reports, not the racy cells — post-mortem audits sum these
+        report.workers = outcome
+            .reports
+            .iter()
+            .map(|r| WorkerHealth {
+                worker: r.worker.clone(),
+                claimed: r.claimed,
+                jobs_run: r.jobs_run,
+                launches: r.launches,
+                beat_age_ms: None,
+                died: r.died.clone(),
+            })
+            .collect();
+        report.publish(queue.dir())?;
+
+        Ok(ServeOutcome { outcome, ticks, orphans_requeued })
+    }
+
+    /// One supervisor tick: reload control, heal orphans, sweep, publish.
+    fn tick_once(
+        &self,
+        queue: &JobQueue,
+        hooks: &DaemonHooks,
+        max_depth: &mut u64,
+        orphans_requeued: &mut u64,
+        started_ms: u64,
+        tick: u64,
+    ) -> Result<()> {
+        if let Some(c) = control::read(queue.dir())? {
+            *max_depth = c.max_depth as u64;
+            hooks.policy.lock().unwrap().set_weights(&c.quotas);
+            if c.drain {
+                hooks.draining.store(true, Ordering::Release);
+            }
+        }
+        let orphans: Vec<u64> = std::mem::take(&mut *hooks.orphans.lock().unwrap());
+        for id in orphans {
+            queue.requeue_with(id, Duration::ZERO, true)?;
+            *orphans_requeued += 1;
+            ServeCounters::add(&hooks.counters.orphans_requeued, 1);
+        }
+        // workers sweep while idle; the supervisor sweeps too so a
+        // fully-busy (or decimated) fleet still recovers dead holds
+        let swept = queue.sweep_stale(self.config.pool.stale_after)?;
+        if swept > 0 {
+            ServeCounters::add(&hooks.counters.swept, swept as u64);
+        }
+        self.snapshot(queue, hooks, *max_depth, started_ms, tick)?
+            .publish(queue.dir())
+    }
+
+    /// Assemble one [`HealthReport`] from the spool + the hooks' cells.
+    fn snapshot(
+        &self,
+        queue: &JobQueue,
+        hooks: &DaemonHooks,
+        max_depth: u64,
+        started_ms: u64,
+        tick: u64,
+    ) -> Result<HealthReport> {
+        let (queued, held) = queue.pending()?;
+        let now = now_millis();
+
+        // per-tenant queued/running straight from the spool; completed
+        // from the policy's tallies (finish records may be swept away
+        // by operators, the tally is the service's own memory)
+        let mut tenants: Vec<TenantHealth> = Vec::new();
+        {
+            let policy = hooks.policy.lock().unwrap();
+            for name in policy.tenants() {
+                tenants.push(TenantHealth {
+                    tenant: name.clone(),
+                    completed: policy.completed_of(&name),
+                    ..TenantHealth::default()
+                });
+            }
+        }
+        for job in queue.list()? {
+            let pos = match tenants.iter().position(|t| t.tenant == job.tenant) {
+                Some(p) => p,
+                None => {
+                    tenants.push(TenantHealth {
+                        tenant: job.tenant.clone(),
+                        ..TenantHealth::default()
+                    });
+                    tenants.len() - 1
+                }
+            };
+            match job.status {
+                JobStatus::Queued => tenants[pos].queued += 1,
+                JobStatus::Running => tenants[pos].running += 1,
+                _ => {}
+            }
+        }
+
+        let deaths = hooks.deaths.lock().unwrap();
+        let workers = hooks
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(idx, cell)| {
+                let died = deaths
+                    .iter()
+                    .find(|(w, _)| *w == idx)
+                    .map(|(_, note)| note.clone());
+                let beat = cell.beat_ms.load(Ordering::Relaxed);
+                WorkerHealth {
+                    worker: format!("serve-{idx}"),
+                    claimed: cell.claimed.load(Ordering::Relaxed),
+                    jobs_run: cell.jobs_run.load(Ordering::Relaxed),
+                    launches: cell.launches.load(Ordering::Relaxed),
+                    beat_age_ms: if died.is_none() && beat > 0 {
+                        Some(now.saturating_sub(beat))
+                    } else {
+                        None
+                    },
+                    died,
+                }
+            })
+            .collect();
+
+        Ok(HealthReport {
+            pid: std::process::id(),
+            started_ms,
+            tick,
+            draining: hooks.draining.load(Ordering::Acquire),
+            final_snapshot: false,
+            queued: queued as u64,
+            held: held as u64,
+            max_depth,
+            tenants,
+            workers,
+            counters: hooks.counters.snapshot(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::serve::health::{self, HEALTH_FILE, STATS_FILE};
+    use crate::submit::Submitter;
+
+    fn tmp_queue(name: &str) -> JobQueue {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-serve-daemon-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        JobQueue::open(dir).unwrap()
+    }
+
+    fn plan(tenant: &str) -> String {
+        format!(
+            r#"{{
+              "version": 1,
+              "tenant": "{tenant}",
+              "ops": [
+                {{"op": "ingest", "label": "gen:gc:8", "partitions": 2}},
+                {{"op": "map", "image": "ubuntu",
+                 "command": "grep -o '[GC]' /dna | wc -l > /count",
+                 "input": {{"kind": "text", "path": "/dna"}},
+                 "output": {{"kind": "text", "path": "/count"}}}},
+                {{"op": "collect"}}
+              ]
+            }}"#
+        )
+    }
+
+    /// In-process end-to-end: submit across tenants, run the daemon in
+    /// a thread, drain via the control file, audit the exit state and
+    /// the operator files.
+    #[test]
+    fn daemon_serves_tenants_then_drains_clean() {
+        let queue = tmp_queue("drain-clean");
+        let shape = ClusterConfig::sized(2, 2);
+        let submitter = Submitter::new(shape.clone());
+        for i in 0..8 {
+            let tenant = if i % 2 == 0 { "alpha" } else { "beta" };
+            submitter.submit(&queue, &plan(tenant)).unwrap();
+        }
+
+        let mut config = ServeConfig::new(PoolConfig::new(2, shape.clone()));
+        config.tick = Duration::from_millis(20);
+        config.max_depth = 64;
+        config.quotas = vec![("alpha".into(), 2), ("beta".into(), 1)];
+        let daemon = ServeDaemon::new(config);
+
+        let outcome = thread::scope(|scope| {
+            let handle = scope.spawn(|| daemon.run(&queue));
+            // wait until the fleet works the spool dry, then drain
+            loop {
+                let all = queue.list().unwrap();
+                if !all.is_empty() && all.iter().all(|j| j.status == JobStatus::Done) {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(10));
+            }
+            control::request_drain(queue.dir()).unwrap();
+            handle.join().unwrap()
+        })
+        .unwrap();
+
+        assert!(outcome.ticks >= 1);
+        let done = queue.list().unwrap();
+        assert_eq!(done.len(), 8);
+        assert!(done.iter().all(|j| j.status == JobStatus::Done));
+        // claim sequences were stamped and persisted — the fairness
+        // audit trail exists in the spool itself
+        let mut seqs: Vec<u64> = done.iter().map(|j| j.claim_seq.unwrap()).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (1..=8).collect::<Vec<u64>>());
+
+        // final snapshot: exact totals from the joined fleet
+        let stats = health::read_json(queue.dir(), STATS_FILE).unwrap().unwrap();
+        assert!(stats.req("final").unwrap().as_bool().unwrap());
+        let rows = stats.req("workers").unwrap().as_arr().unwrap();
+        let claimed: u64 = rows.iter().map(|r| r.req("claimed").unwrap().as_u64().unwrap()).sum();
+        assert_eq!(claimed, 8);
+        let healthf = health::read_json(queue.dir(), HEALTH_FILE).unwrap().unwrap();
+        assert!(healthf.req("draining").unwrap().as_bool().unwrap());
+        let alpha = healthf.req("tenants").unwrap().req("alpha").unwrap();
+        assert_eq!(alpha.req("completed").unwrap().as_u64().unwrap(), 4);
+
+        let _ = std::fs::remove_dir_all(queue.dir());
+    }
+}

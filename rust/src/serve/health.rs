@@ -1,0 +1,275 @@
+//! The operator surface: `serve-health.json` and `serve-stats.json`.
+//!
+//! Both files live in the spool directory next to the jobs they
+//! describe and are rewritten atomically (temp+rename) every
+//! supervisor tick, so `watch cat serve-health.json` — or any poller —
+//! always reads one complete snapshot and never a torn write.
+//! `serve-health.json` answers "is the service OK right now" (depth
+//! vs limit, worker liveness, per-tenant progress); `serve-stats.json`
+//! is the counter dump monitoring systems scrape. A final snapshot of
+//! both is written after the worker fleet joins, so post-mortem reads
+//! (and the cross-process stress gate's audits) see exact totals.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::counters::CounterSnapshot;
+use crate::util::json::Json;
+
+/// File names inside the spool directory.
+pub const HEALTH_FILE: &str = "serve-health.json";
+pub const STATS_FILE: &str = "serve-stats.json";
+
+/// Per-tenant progress snapshot for the health file.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantHealth {
+    pub tenant: String,
+    pub queued: u64,
+    pub running: u64,
+    pub completed: u64,
+}
+
+/// Per-worker liveness/throughput row for the stats file.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerHealth {
+    pub worker: String,
+    pub claimed: u64,
+    pub jobs_run: u64,
+    pub launches: u64,
+    /// Milliseconds since this worker's last heartbeat at snapshot
+    /// time; `None` once the worker has exited (drain or death).
+    pub beat_age_ms: Option<u64>,
+    /// The injected/diagnosed death note, if the worker died.
+    pub died: Option<String>,
+}
+
+/// Everything one supervisor tick knows — rendered into both files.
+#[derive(Debug, Clone, Default)]
+pub struct HealthReport {
+    pub pid: u32,
+    pub started_ms: u64,
+    pub tick: u64,
+    pub draining: bool,
+    pub final_snapshot: bool,
+    pub queued: u64,
+    pub held: u64,
+    pub max_depth: u64,
+    pub tenants: Vec<TenantHealth>,
+    pub workers: Vec<WorkerHealth>,
+    pub counters: CounterSnapshot,
+}
+
+impl HealthReport {
+    /// The `serve-health.json` schema.
+    pub fn health_json(&self) -> Json {
+        let tenants = Json::Obj(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    (
+                        t.tenant.clone(),
+                        Json::obj(vec![
+                            ("queued", Json::Num(t.queued as f64)),
+                            ("running", Json::Num(t.running as f64)),
+                            ("completed", Json::Num(t.completed as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let alive = self.workers.iter().filter(|w| w.beat_age_ms.is_some()).count();
+        Json::obj(vec![
+            ("pid", Json::Num(self.pid as f64)),
+            ("started_ms", Json::Num(self.started_ms as f64)),
+            ("tick", Json::Num(self.tick as f64)),
+            ("draining", Json::Bool(self.draining)),
+            ("final", Json::Bool(self.final_snapshot)),
+            (
+                "depth",
+                Json::obj(vec![
+                    ("queued", Json::Num(self.queued as f64)),
+                    ("held", Json::Num(self.held as f64)),
+                    ("max_depth", Json::Num(self.max_depth as f64)),
+                ]),
+            ),
+            (
+                "workers",
+                Json::obj(vec![
+                    ("alive", Json::Num(alive as f64)),
+                    ("total", Json::Num(self.workers.len() as f64)),
+                ]),
+            ),
+            ("tenants", tenants),
+        ])
+    }
+
+    /// The `serve-stats.json` schema: the counter dump plus per-worker
+    /// rows.
+    pub fn stats_json(&self) -> Json {
+        let workers = Json::Arr(
+            self.workers
+                .iter()
+                .map(|w| {
+                    Json::obj(vec![
+                        ("worker", Json::str(w.worker.as_str())),
+                        ("claimed", Json::Num(w.claimed as f64)),
+                        ("jobs_run", Json::Num(w.jobs_run as f64)),
+                        ("launches", Json::Num(w.launches as f64)),
+                        (
+                            "beat_age_ms",
+                            match w.beat_age_ms {
+                                Some(a) => Json::Num(a as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                        (
+                            "died",
+                            match &w.died {
+                                Some(d) => Json::str(d.as_str()),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("pid".to_string(), Json::Num(self.pid as f64)),
+            ("tick".to_string(), Json::Num(self.tick as f64)),
+            ("final".to_string(), Json::Bool(self.final_snapshot)),
+        ];
+        if let Json::Obj(counters) = self.counters.to_json() {
+            fields.extend(counters);
+        }
+        fields.push(("workers".to_string(), workers));
+        Json::Obj(fields)
+    }
+
+    /// Write both files atomically into `dir`.
+    pub fn publish(&self, dir: &Path) -> Result<()> {
+        write_json(dir, HEALTH_FILE, &self.health_json())?;
+        write_json(dir, STATS_FILE, &self.stats_json())
+    }
+}
+
+/// The spool's atomic-publish idiom for operator files.
+fn write_json(dir: &Path, name: &str, json: &Json) -> Result<()> {
+    let tmp = dir.join(format!(
+        "{name}.tmp-{}-{}",
+        std::process::id(),
+        crate::submit::queue::now_millis()
+    ));
+    fs::write(&tmp, json.to_string_pretty())?;
+    fs::rename(&tmp, dir.join(name))?;
+    Ok(())
+}
+
+/// Read and parse an operator file; `Ok(None)` when it does not exist
+/// (daemon never started / already cleaned up).
+pub fn read_json(dir: &Path, name: &str) -> Result<Option<Json>> {
+    match fs::read_to_string(dir.join(name)) {
+        Ok(text) => Ok(Some(Json::parse(&text)?)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e.into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::counters::ServeCounters;
+
+    fn report() -> HealthReport {
+        let counters = ServeCounters::default();
+        ServeCounters::add(&counters.claims, 5);
+        ServeCounters::add(&counters.launches, 20);
+        HealthReport {
+            pid: 4242,
+            started_ms: 1_700_000_000_000,
+            tick: 17,
+            draining: false,
+            final_snapshot: false,
+            queued: 3,
+            held: 1,
+            max_depth: 64,
+            tenants: vec![
+                TenantHealth { tenant: "alpha".into(), queued: 2, running: 1, completed: 4 },
+                TenantHealth { tenant: "beta".into(), queued: 1, running: 0, completed: 1 },
+            ],
+            workers: vec![
+                WorkerHealth {
+                    worker: "serve-0".into(),
+                    claimed: 3,
+                    jobs_run: 3,
+                    launches: 12,
+                    beat_age_ms: Some(40),
+                    died: None,
+                },
+                WorkerHealth {
+                    worker: "serve-1".into(),
+                    claimed: 2,
+                    jobs_run: 1,
+                    launches: 8,
+                    beat_age_ms: None,
+                    died: Some("injected: died mid-claim".into()),
+                },
+            ],
+            counters: counters.snapshot(),
+        }
+    }
+
+    #[test]
+    fn health_json_reports_depth_liveness_and_tenants() {
+        let h = report().health_json();
+        let depth = h.req("depth").unwrap();
+        assert_eq!(depth.req("queued").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(depth.req("max_depth").unwrap().as_u64().unwrap(), 64);
+        let workers = h.req("workers").unwrap();
+        assert_eq!(workers.req("alive").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(workers.req("total").unwrap().as_u64().unwrap(), 2);
+        let alpha = h.req("tenants").unwrap().req("alpha").unwrap();
+        assert_eq!(alpha.req("completed").unwrap().as_u64().unwrap(), 4);
+    }
+
+    #[test]
+    fn stats_json_carries_counters_and_worker_rows() {
+        let s = report().stats_json();
+        assert_eq!(s.req("claims").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(s.req("launches").unwrap().as_u64().unwrap(), 20);
+        let rows = s.req("workers").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req("launches").unwrap().as_u64().unwrap(), 12);
+        assert!(matches!(rows[0].req("died").unwrap(), Json::Null));
+        assert!(rows[1]
+            .req("died")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("mid-claim"));
+    }
+
+    #[test]
+    fn publish_lands_both_files_atomically_and_read_back() {
+        let dir = std::env::temp_dir()
+            .join(format!("mare-serve-health-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+
+        assert_eq!(read_json(&dir, HEALTH_FILE).unwrap(), None);
+        report().publish(&dir).unwrap();
+        let health = read_json(&dir, HEALTH_FILE).unwrap().unwrap();
+        assert_eq!(health.req("pid").unwrap().as_u64().unwrap(), 4242);
+        let stats = read_json(&dir, STATS_FILE).unwrap().unwrap();
+        assert_eq!(stats.req("tick").unwrap().as_u64().unwrap(), 17);
+        // no temp litter left behind
+        let litter: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.contains(".tmp-"))
+            .collect();
+        assert!(litter.is_empty(), "{litter:?}");
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

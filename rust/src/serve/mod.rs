@@ -1,0 +1,31 @@
+//! `mare serve` — the resident, multi-tenant job service.
+//!
+//! One daemon per spool directory: it owns a persistent worker fleet
+//! (the same [`WorkerPool`](crate::submit::pool::WorkerPool) the
+//! one-shot `mare work` uses, in resident mode) and layers service
+//! semantics over the file-spool protocol without changing it:
+//!
+//! * [`policy`] — stride-style fair-share claim ordering with tenant
+//!   weights and per-tenant priorities. Ordering is advisory; the
+//!   spool's rename locking still decides every contended claim, so
+//!   exactly-once survives any mix of policies on one spool.
+//! * [`control`] — `serve-control.json`, the socketless control plane:
+//!   the daemon advertises its admission settings, submitters read
+//!   them to enforce backpressure, `mare serve --drain` flips the
+//!   drain flag, and the daemon re-reads every tick.
+//! * [`health`] — `serve-health.json` / `serve-stats.json`, rewritten
+//!   atomically each supervisor tick, plus a final exact snapshot when
+//!   the fleet drains.
+//! * [`daemon`] — the loop that ties them together: fleet + supervisor,
+//!   claim-sequence stamping for post-hoc fairness audits, and
+//!   self-healing requeue of jobs that dead workers left `running`.
+
+pub mod control;
+pub mod daemon;
+pub mod health;
+pub mod policy;
+
+pub use control::{request_drain, Control, CONTROL_FILE};
+pub use daemon::{ServeConfig, ServeDaemon, ServeOutcome};
+pub use health::{HealthReport, TenantHealth, WorkerHealth, HEALTH_FILE, STATS_FILE};
+pub use policy::{parse_quotas, FairShare};

@@ -56,8 +56,13 @@ pub mod pool;
 pub mod queue;
 pub mod sim;
 
-pub use pool::{Death, DeathMode, FaultPlan, PoolConfig, PoolOutcome, PoolReport, WorkerPool};
-pub use queue::{ClaimStats, JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
+pub use pool::{
+    Death, DeathMode, FaultPlan, PoolConfig, PoolOutcome, PoolReport, ServeHooks, WorkerPool,
+};
+pub use queue::{
+    fmt_age, now_millis, render_jobs_table, ClaimOrder, ClaimStats, JobQueue, JobRecord,
+    JobResult, JobStatus, STALE_CLAIM,
+};
 pub use sim::{crosscheck, crosscheck_threaded, drain, Driver, Executed};
 
 use std::sync::Arc;
@@ -293,8 +298,12 @@ pub struct ValidatedPlan {
     /// The decoded logical plan.
     pub pipeline: Pipeline,
     /// Canonical v1 re-encoding (what gets enqueued; unknown envelope
-    /// keys from the submission are dropped here).
+    /// keys from the submission are dropped here — except the
+    /// documented scheduling fields, preserved via `meta`).
     pub envelope: Json,
+    /// The envelope's optional scheduling fields (`tenant`/`priority`),
+    /// carried through canonicalization for the spool record.
+    pub meta: wire::EnvelopeMeta,
     /// `ingest[..] -> ... -> collect` one-liner.
     pub summary: String,
     /// What the optimizer would rewrite.
@@ -323,7 +332,12 @@ impl Submitter {
 
     /// Decode and dry-run-build `text` without enqueueing it.
     pub fn validate(&self, text: &str) -> Result<ValidatedPlan> {
-        let pipeline = wire::decode_str(text)?;
+        let envelope_in =
+            Json::parse(text).map_err(|e| wire::WireError::Syntax(e.to_string()))?;
+        let pipeline = wire::decode(&envelope_in)?;
+        // the documented scheduling fields survive canonicalization;
+        // everything else unknown is dropped (the unknown-field rule)
+        let meta = wire::decode_meta(&envelope_in)?;
         let (label, partitions) = ingest_of(&pipeline)?;
         let spec = SourceSpec::parse(&label);
         // validation is data-independent: build() only needs the
@@ -339,8 +353,9 @@ impl Submitter {
         let summary =
             pipeline.ops().iter().map(|o| o.label()).collect::<Vec<_>>().join(" -> ");
         Ok(ValidatedPlan {
-            envelope: wire::encode(&pipeline)?,
+            envelope: wire::encode_with_meta(&pipeline, &meta)?,
             pipeline,
+            meta,
             summary,
             opt_summary: job.opt_report().summary(),
             executable: spec.is_executable(),
@@ -348,9 +363,32 @@ impl Submitter {
     }
 
     /// Validate then enqueue. Returns the assigned job id.
+    ///
+    /// When a resident `mare serve` daemon owns the spool (it published
+    /// `serve-control.json` there), its advertised depth limit is
+    /// enforced here: a full spool is a typed
+    /// [`MareError::Backpressure`] refusal, never a hang or a silent
+    /// drop.
     pub fn submit(&self, queue: &JobQueue, text: &str) -> Result<(u64, ValidatedPlan)> {
         let plan = self.validate(text)?;
-        let id = queue.submit(plan.envelope.clone(), plan.summary.clone())?;
+        if let Some(control) = crate::serve::control::read(queue.dir())? {
+            if control.max_depth > 0 {
+                let (queued, held) = queue.pending()?;
+                if queued + held >= control.max_depth {
+                    return Err(MareError::Backpressure {
+                        queued,
+                        held,
+                        max_depth: control.max_depth,
+                    });
+                }
+            }
+        }
+        let id = queue.submit_meta(
+            plan.envelope.clone(),
+            plan.summary.clone(),
+            plan.meta.tenant_or_default(),
+            plan.meta.priority_or_default(),
+        )?;
         Ok((id, plan))
     }
 }

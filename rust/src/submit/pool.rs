@@ -26,8 +26,44 @@ use std::time::Duration;
 use crate::cluster::ClusterConfig;
 use crate::error::{MareError, Result};
 
-use super::queue::{JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
+use super::queue::{ClaimOrder, ClaimStats, JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
 use super::sim::Driver;
+
+/// Observation + policy seam a resident scheduler (`mare serve`) plugs
+/// into the worker loop. Every method has a no-op default, so a hooks
+/// impl states only what it cares about; everything is called from
+/// worker threads and must be `Sync`.
+///
+/// The seam is deliberately thin: hooks ORDER claims, OBSERVE
+/// progress, and VETO further claiming (drain) — they never touch the
+/// spool protocol itself, so exactly-once still rests entirely on the
+/// queue's rename locking no matter what a hooks impl does.
+pub trait ServeHooks: Sync {
+    /// Reorder one claim scan's queued candidates (front claims first).
+    fn order(&self, _candidates: &mut Vec<JobRecord>) {}
+    /// A claim committed: the job just moved `running` in this worker.
+    /// The record is the worker's in-memory copy — mutations (e.g.
+    /// stamping a claim sequence number) persist when `finish` writes.
+    fn claimed(&self, _worker: usize, _job: &mut JobRecord) {}
+    /// A claim scan completed (won or not) with these contention stats.
+    fn scanned(&self, _stats: &ClaimStats) {}
+    /// A job finished; `record` is exactly what was persisted.
+    fn finished(&self, _worker: usize, _record: &JobRecord) {}
+    /// An idle sweep returned `count` stale holds to the queue.
+    fn swept(&self, _count: u64) {}
+    /// Liveness heartbeat, once per loop iteration.
+    fn beat(&self, _worker: usize) {}
+    /// When true, workers finish in-flight work and exit instead of
+    /// claiming more — the drain contract.
+    fn draining(&self) -> bool {
+        false
+    }
+    /// A fault-injected death fired. `orphaned_running` carries the job
+    /// id left stuck `running` (an [`DeathMode::AfterClaim`] death) so
+    /// a supervisor can force-requeue it; `None` for a mid-claim death,
+    /// whose hold the ordinary stale sweep recovers.
+    fn died(&self, _worker: usize, _orphaned_running: Option<u64>) {}
+}
 
 /// Where in the claim protocol a fault-injected worker dies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -223,6 +259,31 @@ impl WorkerPool {
     /// worker's in-flight execution, which is exactly why recovering
     /// them is an explicit operator action (`mare requeue`).
     pub fn run(&self, queue: &JobQueue) -> Result<PoolOutcome> {
+        self.run_hooked(queue, None, false)
+    }
+
+    /// [`Self::run`] with [`ServeHooks`] observing/steering the workers
+    /// — still one-shot: the pool exits once the spool is drained OR
+    /// the hooks report draining.
+    pub fn run_with_hooks(&self, queue: &JobQueue, hooks: &dyn ServeHooks) -> Result<PoolOutcome> {
+        self.run_hooked(queue, Some(hooks), false)
+    }
+
+    /// Resident mode — the worker fleet of a `mare serve` daemon.
+    /// Workers NEVER exit on an empty spool; they idle (sweeping stale
+    /// holds) and keep serving new submissions until the hooks report
+    /// draining, then finish in-flight work and exit. Blocks until the
+    /// whole fleet has exited.
+    pub fn run_resident(&self, queue: &JobQueue, hooks: &dyn ServeHooks) -> Result<PoolOutcome> {
+        self.run_hooked(queue, Some(hooks), true)
+    }
+
+    fn run_hooked(
+        &self,
+        queue: &JobQueue,
+        hooks: Option<&dyn ServeHooks>,
+        resident: bool,
+    ) -> Result<PoolOutcome> {
         if self.config.workers == 0 {
             return Err(MareError::Submit("worker pool needs at least one worker".into()));
         }
@@ -250,7 +311,7 @@ impl WorkerPool {
             let handles: Vec<_> = (0..self.config.workers)
                 .map(|idx| {
                     let config = &self.config;
-                    scope.spawn(move || worker_loop(idx, config, queue))
+                    scope.spawn(move || worker_loop(idx, config, queue, hooks, resident))
                 })
                 .collect();
             handles
@@ -276,18 +337,37 @@ impl WorkerPool {
 }
 
 /// One worker's life: claim → (maybe die) → execute → finish, sweeping
-/// stale holds while idle, until the spool has nothing claimable left.
+/// stale holds while idle — until the spool has nothing claimable left
+/// (one-shot), or until the hooks report draining (resident).
 fn worker_loop(
     idx: usize,
     config: &PoolConfig,
     queue: &JobQueue,
+    hooks: Option<&dyn ServeHooks>,
+    resident: bool,
 ) -> Result<(PoolReport, Vec<JobRecord>)> {
-    let name = format!("pool-{idx}");
+    let name = if resident { format!("serve-{idx}") } else { format!("pool-{idx}") };
     let driver = Driver::new(name.clone(), config.cluster.clone());
     let mut report = PoolReport::new(name);
     let mut finished = Vec::new();
     let mut idle_rounds: u32 = 0;
+    // the policy closure adapting hooks to the queue's ClaimOrder seam
+    let order_fn = |candidates: &mut Vec<JobRecord>| {
+        if let Some(h) = hooks {
+            h.order(candidates);
+        }
+    };
+    let order: Option<ClaimOrder<'_>> = hooks.map(|_| &order_fn as ClaimOrder<'_>);
     loop {
+        if let Some(h) = hooks {
+            h.beat(idx);
+            // the drain contract: checked BEFORE claiming, so a
+            // draining worker finishes what it already claimed and
+            // takes nothing new
+            if h.draining() {
+                return Ok((report, finished));
+            }
+        }
         // a MidClaim death replaces the worker's next claim: take the
         // hold, then "die" with it. The death is STICKY — a doomed
         // worker never claims normally again (falling through after a
@@ -301,45 +381,65 @@ fn worker_loop(
                     "died mid-claim #{}, holding job {id}",
                     death.nth_claim
                 ));
+                if let Some(h) = hooks {
+                    h.died(idx, None); // the hold recovers via the sweep
+                }
                 return Ok((report, finished));
             }
-            let (queued, held) = queue.pending()?;
-            if queued == 0 && held == 0 {
-                return Ok((report, finished)); // drained before it could die
+            if !resident {
+                let (queued, held) = queue.pending()?;
+                if queued == 0 && held == 0 {
+                    return Ok((report, finished)); // drained before it could die
+                }
             }
             thread::sleep(config.poll);
             continue;
         }
-        let (job, stats) = queue.claim_with_stats()?;
+        let (job, stats) = queue.claim_with_stats_ordered(order)?;
         report.claim_conflicts += stats.conflicts;
         report.claim_backoffs += stats.backoffs;
-        let Some(job) = job else {
+        if let Some(h) = hooks {
+            h.scanned(&stats);
+        }
+        let Some(mut job) = job else {
             let swept = queue.sweep_stale(config.stale_after)?;
             report.swept += swept as u64;
-            // drained when the scan saw nothing queued, this sweep
-            // returned nothing to the queue, and no hold can come back
-            // later — checked via the claim scan's own observation +
-            // a cheap name count, NOT a second full parse of every
+            if swept > 0 {
+                if let Some(h) = hooks {
+                    h.swept(swept as u64);
+                }
+            }
+            // ONE-SHOT: drained when the scan saw nothing queued, this
+            // sweep returned nothing to the queue, and no hold can come
+            // back later — checked via the claim scan's own observation
+            // + a cheap name count, NOT a second full parse of every
             // spool record on every idle beat. (`running` jobs belong
             // to live workers finishing up, or to dead ones awaiting
             // an operator requeue.)
-            if stats.queued_seen == 0 && swept == 0 && queue.held_count()? == 0 {
+            // RESIDENT: an empty spool is just a quiet moment — idle
+            // and keep serving until drained via the hooks.
+            if !resident && stats.queued_seen == 0 && swept == 0 && queue.held_count()? == 0 {
                 return Ok((report, finished));
             }
-            // work exists but is not claimable yet — a live claim in
-            // flight, or a hold aging toward the sweep gate; bounded
-            // exponential idle backoff
+            // work may arrive or come back later — bounded exponential
+            // idle backoff
             thread::sleep(config.poll.saturating_mul(1u32 << idle_rounds.min(3)));
             idle_rounds += 1;
             continue;
         };
         idle_rounds = 0;
         report.claimed += 1;
+        if let Some(h) = hooks {
+            h.claimed(idx, &mut job);
+        }
         if let Some(death) = config.faults.fires(idx, report.claimed, DeathMode::AfterClaim) {
             report.died = Some(format!(
                 "died after claim #{} committed, leaving job {} running",
                 death.nth_claim, job.id
             ));
+            if let Some(h) = hooks {
+                h.died(idx, Some(job.id)); // stuck running — requeueable
+            }
             return Ok((report, finished));
         }
         let (status, result) = match driver.execute(&job.plan) {
@@ -364,7 +464,11 @@ fn worker_loop(
         };
         report.jobs_run += 1;
         report.launches += result.launches;
-        finished.push(queue.finish(job, status, result)?);
+        let record = queue.finish(job, status, result)?;
+        if let Some(h) = hooks {
+            h.finished(idx, &record);
+        }
+        finished.push(record);
     }
 }
 

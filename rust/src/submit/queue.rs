@@ -54,9 +54,15 @@ pub struct ClaimStats {
     pub queued_seen: u64,
 }
 
+/// A claim-order policy: reorders the queued candidates of one scan
+/// pass in place (front is claimed first). See
+/// [`JobQueue::claim_with_stats_ordered`].
+pub type ClaimOrder<'a> = &'a (dyn Fn(&mut Vec<JobRecord>) + Sync);
+
 /// Milliseconds since the Unix epoch — the stamp embedded in claim-hold
-/// file names (see [`JobQueue::sweep_stale`]).
-fn now_millis() -> u64 {
+/// file names (see [`JobQueue::sweep_stale`]) and in
+/// [`JobRecord::stamp_ms`]/[`JobRecord::claimed_ms`].
+pub fn now_millis() -> u64 {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)
@@ -125,6 +131,24 @@ pub struct JobRecord {
     pub status: JobStatus,
     /// `ingest[..] -> ... -> collect` summary (display only).
     pub summary: String,
+    /// Admission/accounting bucket (denormalized from the envelope's
+    /// optional `tenant` key at submit so schedulers never re-parse
+    /// plans). Legacy spool files read back as `"default"`.
+    pub tenant: String,
+    /// Claim-order tie-break within a tenant (higher first; may be
+    /// negative). Legacy spool files read back as 0.
+    pub priority: i64,
+    /// Unix millis of the last state transition (submit, claim commit,
+    /// finish, requeue) — what `mare jobs` renders as the state age.
+    /// Legacy spool files read back as 0 ("age unknown").
+    pub stamp_ms: u64,
+    /// Unix millis of the claim that moved this record `running`;
+    /// preserved through `finish` (audit trail), cleared on requeue.
+    pub claimed_ms: Option<u64>,
+    /// Global claim sequence number a resident scheduler assigned when
+    /// the claim committed — the fair-share audit trail. In-memory
+    /// between claim and finish; never set by one-shot claims.
+    pub claim_seq: Option<u64>,
     /// The canonical v1 plan envelope, exactly as admitted.
     pub plan: Json,
     /// Present once a driver has executed (or failed) the job.
@@ -142,10 +166,19 @@ impl JobRecord {
             ]),
             None => Json::Null,
         };
+        let opt_num = |v: Option<u64>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
             ("status", Json::str(self.status.name())),
             ("summary", Json::str(self.summary.as_str())),
+            ("tenant", Json::str(self.tenant.as_str())),
+            ("priority", Json::Num(self.priority as f64)),
+            ("stamp_ms", Json::Num(self.stamp_ms as f64)),
+            ("claimed_ms", opt_num(self.claimed_ms)),
+            ("claim_seq", opt_num(self.claim_seq)),
             ("plan", self.plan.clone()),
             ("result", result),
         ])
@@ -161,10 +194,30 @@ impl JobRecord {
                 detail: r.req("detail")?.as_str()?.to_string(),
             }),
         };
+        // scheduling fields default when absent, so spool files written
+        // before the serve subsystem stay readable (and vice versa:
+        // older readers ignore keys they don't know)
+        let opt_num = |key: &'static str| -> Result<Option<u64>> {
+            match json.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_u64()?)),
+            }
+        };
         Ok(JobRecord {
             id: json.req("id")?.as_u64()?,
             status: JobStatus::parse(json.req("status")?.as_str()?)?,
             summary: json.req("summary")?.as_str()?.to_string(),
+            tenant: match json.get("tenant") {
+                None | Some(Json::Null) => crate::mare::wire::DEFAULT_TENANT.to_string(),
+                Some(v) => v.as_str()?.to_string(),
+            },
+            priority: match json.get("priority") {
+                None | Some(Json::Null) => 0,
+                Some(v) => v.as_i64()?,
+            },
+            stamp_ms: opt_num("stamp_ms")?.unwrap_or(0),
+            claimed_ms: opt_num("claimed_ms")?,
+            claim_seq: opt_num("claim_seq")?,
             plan: json.req("plan")?.clone(),
             result,
         })
@@ -332,6 +385,18 @@ impl JobQueue {
     /// [`Self::write`], so readers see either the empty marker (which
     /// [`Self::list`] skips) or complete JSON — never a partial file.
     pub fn submit(&self, plan: Json, summary: String) -> Result<u64> {
+        self.submit_meta(plan, summary, crate::mare::wire::DEFAULT_TENANT, 0)
+    }
+
+    /// [`Self::submit`] with explicit scheduling metadata (tenant and
+    /// priority, denormalized from the envelope at admission).
+    pub fn submit_meta(
+        &self,
+        plan: Json,
+        summary: String,
+        tenant: &str,
+        priority: i64,
+    ) -> Result<u64> {
         let mut id = self.max_spool_id()? + 1;
         loop {
             match fs::OpenOptions::new().write(true).create_new(true).open(self.path_of(id)) {
@@ -340,7 +405,18 @@ impl JobQueue {
                 Err(e) => return Err(e.into()),
             }
         }
-        let rec = JobRecord { id, status: JobStatus::Queued, summary, plan, result: None };
+        let rec = JobRecord {
+            id,
+            status: JobStatus::Queued,
+            summary,
+            tenant: tenant.to_string(),
+            priority,
+            stamp_ms: now_millis(),
+            claimed_ms: None,
+            claim_seq: None,
+            plan,
+            result: None,
+        };
         self.write(&rec)?;
         Ok(id)
     }
@@ -390,6 +466,20 @@ impl JobQueue {
     /// directory with `read_dir` + rename traffic that mostly loses
     /// again.
     pub fn claim_with_stats(&self) -> Result<(Option<JobRecord>, ClaimStats)> {
+        self.claim_with_stats_ordered(None)
+    }
+
+    /// [`Self::claim_with_stats`] with a policy-driven claim order. The
+    /// callback reorders each scan pass's queued candidates (front is
+    /// claimed first); `None` keeps the FIFO id order every one-shot
+    /// claimer uses. This is the ONE seam a resident scheduler needs in
+    /// the spool protocol: ordering is advisory (who wins a contended
+    /// candidate is still decided by the rename), so mixed-policy
+    /// claimers on one spool stay exactly-once.
+    pub fn claim_with_stats_ordered(
+        &self,
+        order: Option<ClaimOrder<'_>>,
+    ) -> Result<(Option<JobRecord>, ClaimStats)> {
         let mut stats = ClaimStats::default();
         for round in 0..CLAIM_ROUNDS {
             if round > 0 {
@@ -398,12 +488,16 @@ impl JobQueue {
                 std::thread::sleep(backoff.min(CLAIM_BACKOFF_CAP));
             }
             let mut contended = false;
-            stats.queued_seen = 0;
-            for candidate in self.list()? {
-                if candidate.status != JobStatus::Queued {
-                    continue;
-                }
-                stats.queued_seen += 1;
+            let mut candidates: Vec<JobRecord> = self
+                .list()?
+                .into_iter()
+                .filter(|j| j.status == JobStatus::Queued)
+                .collect();
+            stats.queued_seen = candidates.len() as u64;
+            if let Some(order) = order {
+                order(&mut candidates);
+            }
+            for candidate in candidates {
                 match self.try_claim_one(candidate.id)? {
                     ClaimAttempt::Won(job) => return Ok((Some(job), stats)),
                     ClaimAttempt::Contended => {
@@ -448,6 +542,9 @@ impl JobQueue {
             return Ok(ClaimAttempt::Gone); // finished/requeued under us
         }
         job.status = JobStatus::Running;
+        let claim_instant = now_millis();
+        job.stamp_ms = claim_instant;
+        job.claimed_ms = Some(claim_instant);
         // commit by renames only: the Running record lands in the
         // hold atomically (temp+rename), then the hold moves back
         // to the canonical path, consuming it. After the commit no
@@ -529,6 +626,7 @@ impl JobQueue {
     ) -> Result<JobRecord> {
         job.status = status;
         job.result = Some(result);
+        job.stamp_ms = now_millis();
         self.write(&job)?;
         Ok(job)
     }
@@ -624,6 +722,9 @@ impl JobQueue {
         }
         job.status = JobStatus::Queued;
         job.result = None;
+        job.stamp_ms = now_millis();
+        job.claimed_ms = None;
+        job.claim_seq = None;
         self.persist_at(&job, &hold)?;
         // consume the hold; if a sweeper beat us to this rename, it
         // moved our committed Queued copy to the canonical path itself,
@@ -631,6 +732,59 @@ impl JobQueue {
         let _ = fs::rename(&hold, &path);
         Ok(job)
     }
+}
+
+/// Compact state age for operator tables: how long ago `stamp_ms`
+/// happened, as seen from `now_ms`. Pre-serve spool files carry no
+/// stamp (0) and render as `-`; so does a stamp from the future (clock
+/// skew between submitting hosts must not render as a huge age).
+pub fn fmt_age(now_ms: u64, stamp_ms: u64) -> String {
+    if stamp_ms == 0 || stamp_ms > now_ms {
+        return "-".to_string();
+    }
+    let s = (now_ms - stamp_ms) / 1000;
+    if s < 1 {
+        "<1s".to_string()
+    } else if s < 120 {
+        format!("{s}s")
+    } else if s < 120 * 60 {
+        format!("{}m", s / 60)
+    } else if s < 48 * 3600 {
+        format!("{}h", s / 3600)
+    } else {
+        format!("{}d", s / 86400)
+    }
+}
+
+/// The `mare jobs` table: one row per job with its state AGE (time
+/// since the last state transition — a `running` row that keeps aging
+/// is a stuck job, the thing this view exists to surface) and tenant.
+/// Failed rows carry their error detail on an indented follow-up line.
+pub fn render_jobs_table(jobs: &[JobRecord], now_ms: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>6}  {:<8}{:>6}  {:<10}{:>9}  {}\n",
+        "ID", "STATUS", "AGE", "TENANT", "LAUNCHES", "PLAN"
+    ));
+    for job in jobs {
+        let launches =
+            job.result.as_ref().map(|r| r.launches.to_string()).unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:>6}  {:<8}{:>6}  {:<10}{:>9}  {}\n",
+            job.id,
+            job.status.name(),
+            fmt_age(now_ms, job.stamp_ms),
+            job.tenant,
+            launches,
+            job.summary
+        ));
+        if let Some(r) = &job.result {
+            if r.detail != "ok" {
+                out.push_str(&format!("{:>6}  {}\n", "", r.detail));
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -810,6 +964,11 @@ mod tests {
             id: 7,
             status: JobStatus::Failed,
             summary: "ingest -> collect".into(),
+            tenant: "alpha".into(),
+            priority: -2,
+            stamp_ms: 1_700_000_000_123,
+            claimed_ms: Some(1_700_000_000_100),
+            claim_seq: Some(41),
             plan: plan(),
             result: Some(JobResult {
                 driver: "driver-1".into(),
@@ -823,10 +982,135 @@ mod tests {
         assert_eq!(back.status, JobStatus::Failed);
         assert_eq!(back.plan, rec.plan);
         assert_eq!(back.result.unwrap().detail, "container: image not found");
+        assert_eq!(back.tenant, "alpha");
+        assert_eq!(back.priority, -2);
+        assert_eq!(back.stamp_ms, 1_700_000_000_123);
+        assert_eq!(back.claimed_ms, Some(1_700_000_000_100));
+        assert_eq!(back.claim_seq, Some(41));
 
         assert!(JobStatus::parse("zombie").is_err());
         for s in [JobStatus::Queued, JobStatus::Running, JobStatus::Done, JobStatus::Failed] {
             assert_eq!(JobStatus::parse(s.name()).unwrap(), s);
         }
+    }
+
+    /// Spool files written before the serve subsystem carry none of the
+    /// scheduling fields — they must read back with the documented
+    /// defaults, not an error (the same unknown/absent-field tolerance
+    /// the wire envelope guarantees).
+    #[test]
+    fn legacy_spool_files_read_back_with_default_scheduling_fields() {
+        let legacy = Json::parse(
+            r#"{"id": 3, "status": "queued", "summary": "ingest -> collect",
+                "plan": {"version": 1, "ops": []}, "result": null}"#,
+        )
+        .unwrap();
+        let rec = JobRecord::from_json(&legacy).unwrap();
+        assert_eq!(rec.tenant, crate::mare::wire::DEFAULT_TENANT);
+        assert_eq!(rec.priority, 0);
+        assert_eq!(rec.stamp_ms, 0);
+        assert_eq!(rec.claimed_ms, None);
+        assert_eq!(rec.claim_seq, None);
+    }
+
+    #[test]
+    fn claims_stamp_transitions_and_requeue_clears_them() {
+        let q = tmp_queue("stamps");
+        let before = now_millis();
+        let id = q.submit(plan(), "a".into()).unwrap();
+        let queued = q.get(id).unwrap();
+        assert!(queued.stamp_ms >= before, "submit stamps the record");
+        assert_eq!(queued.claimed_ms, None);
+
+        let job = q.claim().unwrap().unwrap();
+        assert_eq!(job.claimed_ms, Some(job.stamp_ms));
+        assert!(job.stamp_ms >= queued.stamp_ms);
+        // the claim stamp is persisted, not just in-memory
+        assert_eq!(q.get(id).unwrap().claimed_ms, job.claimed_ms);
+
+        let done = q
+            .finish(
+                job,
+                JobStatus::Done,
+                JobResult { driver: "d".into(), launches: 1, records: 1, detail: "ok".into() },
+            )
+            .unwrap();
+        // finish preserves the claim stamp (audit trail) and restamps
+        assert!(done.claimed_ms.is_some());
+        assert!(done.stamp_ms >= done.claimed_ms.unwrap());
+
+        let requeued = q.requeue(id).unwrap();
+        assert_eq!(requeued.claimed_ms, None);
+        assert_eq!(requeued.claim_seq, None);
+    }
+
+    /// The policy seam: an ordering callback decides which queued
+    /// candidate a claim takes first; `None` stays FIFO by id.
+    #[test]
+    fn ordered_claims_follow_the_policy_fifo_otherwise() {
+        let q = tmp_queue("ordered-claims");
+        for (tenant, priority) in [("bulk", 0), ("bulk", 0), ("urgent", 5)] {
+            q.submit_meta(plan(), tenant.to_string(), tenant, priority).unwrap();
+        }
+
+        // policy: highest priority first, id as tie-break
+        let by_priority: &(dyn Fn(&mut Vec<JobRecord>) + Sync) =
+            &|c: &mut Vec<JobRecord>| c.sort_by_key(|j| (std::cmp::Reverse(j.priority), j.id));
+        let (job, _) = q.claim_with_stats_ordered(Some(by_priority)).unwrap();
+        let job = job.unwrap();
+        assert_eq!((job.tenant.as_str(), job.id), ("urgent", 3));
+
+        // un-ordered claims keep the FIFO contract
+        assert_eq!(q.claim().unwrap().unwrap().id, 1);
+        assert_eq!(q.claim_with_stats_ordered(None).unwrap().0.unwrap().id, 2);
+    }
+
+    #[test]
+    fn jobs_table_renders_age_tenant_and_error_detail() {
+        let now = 1_700_000_100_000; // stamps below are relative to this
+        let mk = |id, status, tenant: &str, stamp_ms, result| JobRecord {
+            id,
+            status,
+            summary: "ingest[gen:gc:8] -> collect".into(),
+            tenant: tenant.into(),
+            priority: 0,
+            stamp_ms,
+            claimed_ms: None,
+            claim_seq: None,
+            plan: plan(),
+            result,
+        };
+        let jobs = vec![
+            mk(1, JobStatus::Done, "alpha", now - 4_000, Some(JobResult {
+                driver: "d0".into(),
+                launches: 6,
+                records: 2,
+                detail: "ok".into(),
+            })),
+            mk(2, JobStatus::Running, "beta", now - 150_000, None),
+            mk(3, JobStatus::Failed, "default", 0, Some(JobResult {
+                driver: "d1".into(),
+                launches: 0,
+                records: 0,
+                detail: "container: image not found".into(),
+            })),
+        ];
+        let table = render_jobs_table(&jobs, now);
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 5, "header + 3 rows + 1 detail line:\n{table}");
+        assert!(lines[0].contains("AGE") && lines[0].contains("TENANT"), "{table}");
+        // done row: age and tenant and launches
+        assert!(lines[1].contains(" 4s") && lines[1].contains("alpha"), "{table}");
+        assert!(lines[1].contains("6"), "{table}");
+        // the stuck-running row ages in minutes — the operator's cue
+        assert!(lines[2].contains(" 2m") && lines[2].contains("beta"), "{table}");
+        // legacy record (no stamp) renders "-", not a bogus epoch age
+        assert!(lines[3].contains(" -") && lines[3].contains("default"), "{table}");
+        assert!(lines[4].contains("image not found"), "{table}");
+
+        assert_eq!(fmt_age(now, now), "<1s");
+        assert_eq!(fmt_age(now, now - 90 * 60 * 1000), "90m");
+        assert_eq!(fmt_age(now, now - 3 * 86_400_000), "3d");
+        assert_eq!(fmt_age(now, now + 5_000), "-", "future stamps (clock skew) render '-'");
     }
 }

@@ -59,6 +59,16 @@ impl Json {
         Ok(self.as_u64()? as usize)
     }
 
+    /// Signed integer (negative values allowed, fractions rejected).
+    /// Bounded to the f64-exact range like every number in this codec.
+    pub fn as_i64(&self) -> Result<i64> {
+        let f = self.as_f64()?;
+        if f.fract() != 0.0 || f.abs() >= 9.0e15 {
+            return Err(MareError::Json(format!("expected integer, got {f}")));
+        }
+        Ok(f as i64)
+    }
+
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -378,6 +388,16 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
         assert_eq!(Json::parse(r#""hi\nthere""#).unwrap(), Json::Str("hi\nthere".into()));
+    }
+
+    #[test]
+    fn signed_integers_accept_negatives_and_reject_fractions() {
+        assert_eq!(Json::Num(-7.0).as_i64().unwrap(), -7);
+        assert_eq!(Json::Num(0.0).as_i64().unwrap(), 0);
+        assert_eq!(Json::Num(12.0).as_i64().unwrap(), 12);
+        assert!(Json::Num(1.5).as_i64().is_err());
+        assert!(Json::Num(9.1e15).as_i64().is_err());
+        assert!(Json::Num(-7.0).as_u64().is_err(), "unsigned accessor still rejects negatives");
     }
 
     #[test]

@@ -20,13 +20,13 @@
 //! (but pinned — sources regenerate from fixed seeds) job mix so the
 //! claim interleavings differ while every expectation stays exact.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 use mare::cluster::ClusterConfig;
 use mare::submit::{
-    crosscheck_threaded, Driver, FaultPlan, JobQueue, JobStatus, PoolConfig, Submitter,
-    WorkerPool, STALE_CLAIM,
+    crosscheck_threaded, Driver, FaultPlan, JobQueue, JobRecord, JobStatus, PoolConfig,
+    ServeHooks, Submitter, WorkerPool, STALE_CLAIM,
 };
 use mare::util::json::Json;
 
@@ -232,6 +232,114 @@ fn threaded_crosscheck_is_byte_identical_per_plan() {
             assert_eq!(run.launches, reference.launches);
         }
     }
+}
+
+/// ISSUE 6 satellite: drain under load. A resident pool is drained
+/// MID-FLOOD — while a submitter thread is still spooling new jobs —
+/// and must finish what it already claimed, claim nothing new, and
+/// leave a spool that a fresh one-shot `mare work` pool completes
+/// exactly-once (both audits, like the headline test).
+#[test]
+fn drain_under_load_finishes_in_flight_claims_nothing_new() {
+    const PRELOADED: usize = 16;
+    const FLOODED: usize = 32;
+    const TOTAL: usize = PRELOADED + FLOODED;
+    /// Drain once this many jobs finished — mid-run, with work left.
+    const DRAIN_AFTER: u64 = 4;
+
+    /// The minimal resident-drain hooks: a flag the test flips, plus a
+    /// finish counter so the flip happens mid-run, not after the fact.
+    #[derive(Default)]
+    struct DrainHooks {
+        draining: AtomicBool,
+        finished: AtomicU64,
+    }
+    impl ServeHooks for DrainHooks {
+        fn finished(&self, _worker: usize, _record: &JobRecord) {
+            self.finished.fetch_add(1, Ordering::Relaxed);
+        }
+        fn draining(&self) -> bool {
+            self.draining.load(Ordering::Acquire)
+        }
+    }
+
+    let plans = corpus();
+    let refs = references(&plans);
+    let queue = spool("drain-under-load");
+    let submitter = Submitter::new(shape());
+    let plan_of = |id: u64| (id as usize - 1) % plans.len();
+    for id in 1..=PRELOADED as u64 {
+        submitter.submit(&queue, &plans[plan_of(id)]).unwrap();
+    }
+
+    let mut config = PoolConfig::new(4, shape());
+    config.poll = Duration::from_millis(10);
+    let pool = WorkerPool::new(config);
+    let hooks = DrainHooks::default();
+
+    let outcome = std::thread::scope(|scope| {
+        // resident fleet: never exits on an empty spool, only on drain
+        let fleet = scope.spawn(|| pool.run_resident(&queue, &hooks));
+
+        // the flood: keeps submitting while the fleet runs AND after
+        // the drain lands — late submissions must enqueue cleanly for
+        // the recovery pool, not race the exiting workers
+        let flood = scope.spawn(|| {
+            for id in (PRELOADED as u64 + 1)..=(TOTAL as u64) {
+                submitter.submit(&queue, &plans[plan_of(id)]).unwrap();
+            }
+        });
+
+        // drain mid-run: some work done, plenty still queued/in flight
+        while hooks.finished.load(Ordering::Relaxed) < DRAIN_AFTER {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        hooks.draining.store(true, Ordering::Release);
+
+        flood.join().unwrap();
+        fleet.join().unwrap().unwrap()
+    });
+
+    // in-flight work was finished, nothing new was claimed after the
+    // flag — and the flood guarantees there WAS claimable work left
+    assert!(outcome.finished.len() >= DRAIN_AFTER as usize);
+    assert!(
+        outcome.finished.len() < TOTAL,
+        "drain must stop the fleet before the flood is worked off"
+    );
+    let leftover = queue.list().unwrap();
+    assert_eq!(leftover.len(), TOTAL, "no submission may be lost");
+    assert!(
+        leftover.iter().all(|j| j.status != JobStatus::Running),
+        "drained workers must not abandon running jobs"
+    );
+    assert_eq!(queue.held_count().unwrap(), 0, "drained workers must not hold claims");
+    assert!(
+        leftover.iter().any(|j| j.status == JobStatus::Queued),
+        "the flood must leave queued work for recovery"
+    );
+
+    // a fresh one-shot pool completes the remainder...
+    let recovery = WorkerPool::new(PoolConfig::new(2, shape())).run(&queue).unwrap();
+    assert_eq!(recovery.finished.len(), TOTAL - outcome.finished.len());
+
+    // ...and both exactly-once audits hold across the drain boundary
+    let jobs = queue.list().unwrap();
+    assert_eq!(jobs.len(), TOTAL);
+    for job in &jobs {
+        assert_eq!(job.status, JobStatus::Done, "job {} not done", job.id);
+        assert_eq!(
+            job.result.as_ref().unwrap().launches,
+            refs[plan_of(job.id)].launches,
+            "job {} must match its single-driver reference",
+            job.id
+        );
+    }
+    let expected_total: u64 =
+        (1..=TOTAL as u64).map(|id| refs[plan_of(id)].launches).sum();
+    assert_eq!(outcome.total_launches() + recovery.total_launches(), expected_total);
+
+    let _ = std::fs::remove_dir_all(queue.dir());
 }
 
 /// ISSUE 4 satellite: a concurrent `requeue <id>` racing an active

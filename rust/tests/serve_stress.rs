@@ -1,0 +1,411 @@
+//! Cross-process service stress — the headline gate for `mare serve`
+//! (ISSUE 6; run in release by the `serve-stress` CI job).
+//!
+//! The REAL `mare` binary runs as a resident daemon subprocess while
+//! this test floods the shared spool from concurrent submitter threads
+//! across three tenants with different fair-share weights, and the
+//! daemon's fault plan kills workers at both dangerous points of the
+//! claim protocol. The daemon must self-heal (supervisor force-requeue
+//! of orphaned `running` jobs, stale-hold sweeps), honor `mare serve
+//! --drain` (finish in-flight, claim nothing new, exit 0), and leave a
+//! spool a fresh in-process pool completes exactly-once.
+//!
+//! Audits, both ways like `pool_stress.rs`: every job's recorded
+//! launch count equals its plan's single-driver reference, and the
+//! summed per-worker launch counters (from the daemon's final
+//! `serve-stats.json` snapshot plus the recovery pool) equal the sum
+//! of references — a doubly executed job hides in per-record results
+//! but not in the counters. Plus the fairness assertion: within the
+//! window where every tenant was backlogged (claim sequences up to the
+//! lightest tenant's last claim), the weight-3 tenant received at
+//! least twice the claims of each weight-1 tenant (FIFO would give
+//! ~1×; the stride policy targets 3×).
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mare::cluster::ClusterConfig;
+use mare::error::MareError;
+use mare::serve::{self, control, Control, ServeConfig, ServeDaemon, STATS_FILE};
+use mare::submit::{
+    Driver, JobQueue, JobStatus, PoolConfig, Submitter, WorkerPool,
+};
+use mare::util::json::Json;
+
+/// (tenant, fair-share weight, jobs preloaded, jobs flooded live).
+const TENANTS: [(&str, u64, usize, usize); 3] = [
+    ("alpha", 3, 150, 50),
+    ("beta", 1, 150, 50),
+    ("gamma", 1, 150, 50),
+];
+const TOTAL_JOBS: usize = 600;
+/// Drain once this many jobs are done — mid-flight, not after the fact.
+const DRAIN_AT: usize = 450;
+
+/// The one cluster shape every driver in this test runs — including the
+/// SUBPROCESS daemon's: `--config` pins workers/vcpus and the CLI's
+/// default `--seed` is 42, so the reference must use 42 too (NOT
+/// `ClusterConfig::sized`'s own default seed).
+fn shape() -> ClusterConfig {
+    let mut config = ClusterConfig::sized(2, 2);
+    config.seed = 42;
+    config
+}
+
+fn spool(name: &str) -> JobQueue {
+    let dir = std::env::temp_dir()
+        .join(format!("mare-serve-stress-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    JobQueue::open(dir).unwrap()
+}
+
+/// Each tenant submits its own plan template, tagged with the envelope's
+/// optional `tenant` scheduling field (older decoders ignore it).
+fn plan_of(tenant: &str) -> String {
+    match tenant {
+        "alpha" => format!(
+            r#"{{
+              "version": 1,
+              "tenant": "{tenant}",
+              "ops": [
+                {{"op": "ingest", "label": "inline:GATTACA\nGCGCGC\nTTTT", "partitions": 2}},
+                {{"op": "map", "image": "ubuntu",
+                 "command": "grep -o '[GC]' /dna | wc -l > /count",
+                 "input": {{"kind": "text", "path": "/dna"}},
+                 "output": {{"kind": "text", "path": "/count"}}}},
+                {{"op": "collect"}}
+              ]
+            }}"#
+        ),
+        "beta" => format!(
+            r#"{{
+              "version": 1,
+              "tenant": "{tenant}",
+              "ops": [
+                {{"op": "ingest", "label": "gen:gc:16", "partitions": 2}},
+                {{"op": "map", "image": "ubuntu",
+                 "command": "grep -o '[GC]' /dna | wc -l > /count",
+                 "input": {{"kind": "text", "path": "/dna"}},
+                 "output": {{"kind": "text", "path": "/count"}}}},
+                {{"op": "collect"}}
+              ]
+            }}"#
+        ),
+        _ => format!(
+            r#"{{
+              "version": 1,
+              "tenant": "{tenant}",
+              "ops": [
+                {{"op": "ingest", "label": "gen:gc:16", "partitions": 4}},
+                {{"op": "map", "image": "ubuntu",
+                 "command": "grep -o '[GC]' /dna | wc -l > /count",
+                 "input": {{"kind": "text", "path": "/dna"}},
+                 "output": {{"kind": "text", "path": "/count"}}}},
+                {{"op": "reduce", "image": "ubuntu",
+                 "command": "awk '{{s+=$1}} END {{print s}}' /counts > /sum",
+                 "input": {{"kind": "text", "path": "/counts"}},
+                 "output": {{"kind": "text", "path": "/sum"}},
+                 "depth": 2}},
+                {{"op": "collect"}}
+              ]
+            }}"#
+        ),
+    }
+}
+
+/// Single-driver launch count per tenant's plan — the exactly-once
+/// ground truth.
+fn references() -> Vec<(&'static str, u64)> {
+    let reference = Driver::new("reference", shape());
+    TENANTS
+        .iter()
+        .map(|(tenant, _, _, _)| {
+            let envelope = Json::parse(&plan_of(tenant)).unwrap();
+            let run = reference.execute(&envelope).unwrap();
+            assert!(run.launches > 0, "reference run must launch containers");
+            (*tenant, run.launches)
+        })
+        .collect()
+}
+
+fn reference_launches(refs: &[(&str, u64)], tenant: &str) -> u64 {
+    refs.iter().find(|(t, _)| *t == tenant).map(|(_, l)| *l).unwrap()
+}
+
+/// Kills the daemon on test panic so a failed assertion never leaves a
+/// resident subprocess wedged in CI.
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_until<F: FnMut() -> bool>(what: &str, timeout: Duration, mut done: F) {
+    let start = Instant::now();
+    while !done() {
+        assert!(start.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// The headline gate: real `mare serve` subprocess, 600 jobs across 3
+/// tenants from concurrent submitters, injected worker deaths,
+/// mid-flight drain, exactly-once audited both ways, fair-share ratio.
+#[test]
+fn resident_service_is_fair_self_healing_and_exactly_once() {
+    let refs = references();
+    let queue = spool("headline");
+
+    // preload a solid backlog per tenant (round-robin, so FIFO order
+    // would interleave tenants ~1:1:1 — the fairness assertion below
+    // detects the policy, not the submission order)
+    let submitter = Submitter::new(shape());
+    let preload = TENANTS.iter().map(|(_, _, p, _)| *p).max().unwrap();
+    for i in 0..preload {
+        for (tenant, _, preloaded, _) in TENANTS {
+            if i < preloaded {
+                submitter.submit(&queue, &plan_of(tenant)).unwrap();
+            }
+        }
+    }
+
+    // the real binary as a resident daemon: 6 workers over the pinned
+    // 2x2 cluster shape, fast ticks, and worker deaths at BOTH
+    // dangerous claim-protocol points (worker 4 dies holding its 3rd
+    // claim; worker 5 dies after its 3rd claim commits)
+    let config_path = queue.dir().join("cluster-config.json");
+    std::fs::write(&config_path, r#"{"cluster": {"workers": 2, "vcpus": 2}}"#).unwrap();
+    let child = Command::new(env!("CARGO_BIN_EXE_mare"))
+        .args([
+            "serve",
+            "--queue",
+            queue.dir().to_str().unwrap(),
+            "--config",
+            config_path.to_str().unwrap(),
+            "--workers",
+            "6",
+            "--tick-ms",
+            "50",
+            "--stale-ms",
+            "400",
+            "--max-depth",
+            "100000",
+            "--quota",
+            "alpha=3,beta=1,gamma=1",
+            "--fault",
+            "4:3:hold,5:3:running",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn mare serve");
+    let mut child = ChildGuard(child);
+
+    // concurrent flood: one submitter thread per tenant hammers the
+    // live spool; a Backpressure refusal is retried, never dropped
+    std::thread::scope(|scope| {
+        for (tenant, _, _, flooded) in TENANTS {
+            let dir = queue.dir().to_path_buf();
+            scope.spawn(move || {
+                let queue = JobQueue::open(dir).unwrap();
+                let submitter = Submitter::new(shape());
+                let plan = plan_of(tenant);
+                let mut sent = 0;
+                while sent < flooded {
+                    match submitter.submit(&queue, &plan) {
+                        Ok(_) => sent += 1,
+                        Err(MareError::Backpressure { .. }) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) => panic!("flood submit failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+
+    // let the daemon work most of the spool (healing its injected
+    // deaths along the way), then drain MID-FLIGHT via the real CLI
+    wait_until("the daemon to work the backlog", Duration::from_secs(240), || {
+        queue.list().unwrap().iter().filter(|j| j.status == JobStatus::Done).count()
+            >= DRAIN_AT
+    });
+    let drain = Command::new(env!("CARGO_BIN_EXE_mare"))
+        .args(["serve", "--drain", "--queue", queue.dir().to_str().unwrap()])
+        .output()
+        .expect("run mare serve --drain");
+    assert!(drain.status.success(), "--drain must exit 0");
+
+    // the drain contract: finish in-flight, claim nothing new, exit 0
+    let status = child.0.wait().expect("wait for the daemon");
+    assert!(status.success(), "drained daemon must exit 0, got {status}");
+
+    // a drained spool holds only queued + done work — no stuck
+    // `running` records, no orphaned claim holds
+    let after_drain = queue.list().unwrap();
+    assert_eq!(after_drain.len(), TOTAL_JOBS);
+    assert!(
+        after_drain.iter().all(|j| j.status != JobStatus::Running),
+        "drain must not leave running records"
+    );
+    assert_eq!(queue.held_count().unwrap(), 0, "drain must not leave claim holds");
+    let done_by_daemon =
+        after_drain.iter().filter(|j| j.status == JobStatus::Done).count();
+    assert!(done_by_daemon >= DRAIN_AT, "daemon finished {done_by_daemon}");
+
+    // the daemon's final stats snapshot: exact per-worker totals, with
+    // both injected deaths on record
+    let stats = serve::health::read_json(queue.dir(), STATS_FILE).unwrap().unwrap();
+    assert!(stats.req("final").unwrap().as_bool().unwrap());
+    let rows = stats.req("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 6);
+    let daemon_launches: u64 =
+        rows.iter().map(|r| r.req("launches").unwrap().as_u64().unwrap()).sum();
+    let died: Vec<String> = rows
+        .iter()
+        .filter_map(|r| r.req("died").unwrap().as_str().ok().map(String::from))
+        .collect();
+    assert_eq!(died.len(), 2, "both injected deaths must be reported: {died:?}");
+    assert!(died.iter().any(|d| d.contains("mid-claim")), "{died:?}");
+    assert!(died.iter().any(|d| d.contains("running")), "{died:?}");
+
+    // a fresh one-shot pool (FIFO, no hooks — mixed-policy claimers are
+    // safe on one spool) completes the drained remainder exactly-once
+    let recovery = WorkerPool::new(PoolConfig::new(2, shape())).run(&queue).unwrap();
+    assert_eq!(recovery.finished.len(), TOTAL_JOBS - done_by_daemon);
+
+    // exactly-once, job by job: every record done, every launch count
+    // equal to its tenant's single-driver reference
+    let jobs = queue.list().unwrap();
+    assert_eq!(jobs.len(), TOTAL_JOBS);
+    for job in &jobs {
+        assert_eq!(job.status, JobStatus::Done, "job {} not done", job.id);
+        let launches = job.result.as_ref().unwrap().launches;
+        let expected = reference_launches(&refs, &job.tenant);
+        assert_eq!(
+            launches, expected,
+            "job {} (tenant {}) launched {launches}, reference says {expected}",
+            job.id, job.tenant
+        );
+    }
+
+    // exactly-once, globally: the workers' own counters (daemon's final
+    // snapshot + recovery pool) sum to the references — a double
+    // execution inflates this even though the second finish overwrites
+    // the per-job record
+    let expected_total: u64 = TENANTS
+        .iter()
+        .map(|(tenant, _, p, f)| reference_launches(&refs, tenant) * (p + f) as u64)
+        .sum();
+    assert_eq!(
+        daemon_launches + recovery.total_launches(),
+        expected_total,
+        "global launch count must equal the sum of single-driver counts"
+    );
+
+    // fair share: within the backlogged window (claim sequences up to
+    // the lightest-loaded tenant's LAST claim — alpha drains ~3x faster,
+    // so its last claim bounds the window where all three tenants still
+    // competed), weight 3 must get at least 2x the claims of weight 1.
+    // Round-robin submission under FIFO would give ~1x.
+    let mut per_tenant_max = Vec::new();
+    for (tenant, _, _, _) in TENANTS {
+        let max_seq = jobs
+            .iter()
+            .filter(|j| j.tenant == tenant)
+            .filter_map(|j| j.claim_seq)
+            .max()
+            .unwrap_or(0);
+        assert!(max_seq > 0, "tenant {tenant} got no daemon claims");
+        per_tenant_max.push(max_seq);
+    }
+    let window = *per_tenant_max.iter().min().unwrap();
+    let claims_within = |tenant: &str| {
+        jobs.iter()
+            .filter(|j| j.tenant == tenant)
+            .filter_map(|j| j.claim_seq)
+            .filter(|s| *s <= window)
+            .count()
+    };
+    let (alpha, beta, gamma) =
+        (claims_within("alpha"), claims_within("beta"), claims_within("gamma"));
+    assert!(
+        alpha >= 2 * beta && alpha >= 2 * gamma,
+        "fair share violated in window <= {window}: alpha={alpha} beta={beta} gamma={gamma}"
+    );
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}
+
+/// Backpressure is a typed refusal against a full spool — never a hang
+/// or a silent drop — and the daemon's health file reflects the depth
+/// within one scheduler tick.
+#[test]
+fn backpressure_refuses_typed_and_health_reflects_depth() {
+    let queue = spool("backpressure");
+    let submitter = Submitter::new(shape());
+    let plan = plan_of("alpha");
+
+    // deterministic half: a published control file IS the admission
+    // contract, daemon or not — fill the spool to the advertised depth
+    // and the next submission must refuse with the typed error
+    control::write(
+        queue.dir(),
+        &Control { max_depth: 3, drain: false, quotas: vec![] },
+    )
+    .unwrap();
+    for _ in 0..3 {
+        submitter.submit(&queue, &plan).unwrap();
+    }
+    let err = submitter.submit(&queue, &plan).unwrap_err();
+    match err {
+        MareError::Backpressure { queued, held, max_depth } => {
+            assert_eq!((queued, held, max_depth), (3, 0, 3));
+        }
+        other => panic!("expected a typed Backpressure refusal, got: {other}"),
+    }
+    let msg = err.to_string();
+    assert!(msg.contains("backpressure"), "{msg}");
+    assert!(msg.contains("retry"), "{msg}");
+
+    // live half: a real daemon re-publishes its own limits at startup
+    // (lifting the synthetic ones above), works the backlog, and its
+    // health snapshots track spool depth tick by tick
+    let mut config = ServeConfig::new(PoolConfig::new(2, shape()));
+    config.tick = Duration::from_millis(20);
+    config.max_depth = 64;
+    let daemon = ServeDaemon::new(config);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| daemon.run(&queue));
+
+        wait_until("the daemon to lift the synthetic limit", Duration::from_secs(30), || {
+            control::read(queue.dir()).unwrap().map(|c| c.max_depth) == Some(64)
+        });
+        // the synthetic refusal is gone: this submission is admitted
+        submitter.submit(&queue, &plan).unwrap();
+
+        // within a tick of the spool emptying, health says depth 0 of 64
+        wait_until("health to reflect the worked-off depth", Duration::from_secs(60), || {
+            let Some(health) =
+                serve::health::read_json(queue.dir(), serve::HEALTH_FILE).unwrap()
+            else {
+                return false;
+            };
+            let depth = health.req("depth").unwrap();
+            depth.req("queued").unwrap().as_u64().unwrap() == 0
+                && depth.req("max_depth").unwrap().as_u64().unwrap() == 64
+        });
+
+        control::request_drain(queue.dir()).unwrap();
+        handle.join().unwrap().unwrap();
+    });
+
+    let jobs = queue.list().unwrap();
+    assert_eq!(jobs.len(), 4);
+    assert!(jobs.iter().all(|j| j.status == JobStatus::Done));
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}

@@ -31,6 +31,7 @@ const GOLDEN: &[&str] = &[
     "repartition.json",
     "collect_minimal.json",
     "storage_ingest.json",
+    "tenant_priority.json",
 ];
 
 fn golden_path(name: &str) -> String {
@@ -48,14 +49,21 @@ fn golden_files_decode_and_reencode_canonically() {
         let text = std::fs::read_to_string(golden_path(name)).expect(name);
         let decoded = wire::decode_str(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
         // the file is already in canonical form: same structure as the
-        // codec's own encoding (field names, order, values)
-        let reencoded = wire::encode(&decoded).expect(name);
+        // codec's own encoding (field names, order, values) — including
+        // the optional scheduling metadata, which the meta-aware encode
+        // preserves and plain `encode` (by design) drops
         let parsed = Json::parse(&text).expect(name);
+        let meta = wire::decode_meta(&parsed).expect(name);
+        let reencoded = wire::encode_with_meta(&decoded, &meta).expect(name);
         assert_eq!(reencoded, parsed, "{name}: golden file is not canonical");
         // and the codec's text output parses back to the same thing
         let via_text = wire::decode_str(&wire::encode_string(&decoded).expect(name))
             .expect(name);
-        assert_eq!(wire::encode(&via_text).expect(name), parsed, "{name}");
+        assert_eq!(
+            wire::encode_with_meta(&via_text, &meta).expect(name),
+            parsed,
+            "{name}"
+        );
     }
 }
 
@@ -171,6 +179,52 @@ fn encode_decode_encode_is_a_fixed_point() {
         let d2 = wire::decode_str(&text).map_err(|e| e.to_string())?;
         let e3 = wire::encode(&d2).map_err(|e| e.to_string())?;
         prop_assert!(e3 == e1, "text roundtrip drift");
+        Ok(())
+    });
+}
+
+/// The compatibility contract of the scheduling metadata: for ANY valid
+/// pipeline, an envelope tagged with `tenant`/`priority` decodes to the
+/// identical plan as the untagged one (old readers, new envelopes), the
+/// metadata survives its own roundtrip, and empty metadata re-encodes
+/// byte-identically to plain `encode` (new writers, old envelopes).
+#[test]
+fn envelopes_with_scheduling_metadata_decode_identically_without_them() {
+    check("wire-meta-compat", 250, |rng| {
+        let p = arbitrary_pipeline(rng);
+        let plain = wire::encode(&p).map_err(|e| e.to_string())?;
+
+        let meta = wire::EnvelopeMeta {
+            tenant: if rng.bool(0.7) {
+                Some((*rng.choice(&["alpha", "genomics", "team-b", "default"])).to_string())
+            } else {
+                None
+            },
+            priority: if rng.bool(0.7) { Some(rng.range(0, 21) as i64 - 10) } else { None },
+        };
+        let tagged = wire::encode_with_meta(&p, &meta).map_err(|e| e.to_string())?;
+
+        // forward compat: decoders that predate the fields see the
+        // same pipeline (the unknown-envelope-key rule, exercised
+        // through the pretty text form like a real spool file)
+        let d_plain = wire::decode(&plain).map_err(|e| e.to_string())?;
+        let d_tagged =
+            wire::decode_str(&tagged.to_string_pretty()).map_err(|e| e.to_string())?;
+        let e_plain = wire::encode(&d_plain).map_err(|e| e.to_string())?;
+        let e_tagged = wire::encode(&d_tagged).map_err(|e| e.to_string())?;
+        prop_assert!(
+            e_plain == e_tagged,
+            "metadata changed the decoded plan:\n{e_plain}\nvs\n{e_tagged}"
+        );
+
+        // the metadata itself roundtrips exactly
+        let meta_back = wire::decode_meta(&tagged).map_err(|e| e.to_string())?;
+        prop_assert!(meta_back == meta, "meta drift: {meta_back:?} vs {meta:?}");
+
+        // backward compat: empty metadata adds nothing
+        let empty = wire::encode_with_meta(&p, &wire::EnvelopeMeta::default())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(empty == plain, "empty meta must encode as plain");
         Ok(())
     });
 }
