@@ -194,6 +194,23 @@ pub struct Cluster {
     pulled: Mutex<HashSet<(usize, String)>>,
 }
 
+/// Stage-boundary persistence seam for [`Cluster::run_checkpointed`].
+///
+/// `committed(done, parts)` fires after stage `done - 1` finishes with
+/// the exact partitions the NEXT stage would consume (post-shuffle), so
+/// a later `resume()` returning `(done, parts)` re-enters the stage
+/// loop at index `done` with byte-identical inputs. An `Err` from
+/// `committed` aborts the run — fault injection uses that channel to
+/// model a worker dying between stages.
+pub trait StageCheckpointer: Sync {
+    /// State left by a previous attempt: `(stages_done, partitions)`.
+    /// `None` means start from the source.
+    fn resume(&self) -> Option<(usize, Vec<Partition>)>;
+
+    /// Persist the boundary after `done` stages have completed.
+    fn committed(&self, done: usize, parts: &[Partition]) -> Result<()>;
+}
+
 impl Cluster {
     pub fn new(
         registry: Arc<Registry>,
@@ -217,6 +234,23 @@ impl Cluster {
 
     /// Execute a dataset's lineage to completion.
     pub fn run(&self, dataset: &Dataset) -> Result<RunOutput> {
+        self.run_checkpointed(dataset, None)
+    }
+
+    /// [`Self::run`] with a stage-checkpoint seam: after every stage
+    /// boundary (post-shuffle — `current` is the next stage's exact
+    /// input) the checkpointer sees the committed partitions, and a run
+    /// may START from a checkpoint instead of the source, skipping the
+    /// stages a previous attempt already committed. Tree-reduce levels
+    /// are stages, so a depth-K reduce resumes from the last finished
+    /// level. The skipped stages perform no work and no container
+    /// launches — the launch-counter audit of a resumed run covers
+    /// only the remaining stages.
+    pub fn run_checkpointed(
+        &self,
+        dataset: &Dataset,
+        ckpt: Option<&dyn StageCheckpointer>,
+    ) -> Result<RunOutput> {
         let wall = std::time::Instant::now();
         let pp = compile(dataset.plan());
         let mut current: Vec<Partition> = pp.source;
@@ -224,7 +258,19 @@ impl Cluster {
         let mut report = RunReport::default();
         let mut dead: HashSet<usize> = HashSet::new();
 
-        for stage in &pp.stages {
+        let mut skip = 0usize;
+        if let Some(c) = ckpt {
+            if let Some((stages_done, parts)) = c.resume() {
+                if stages_done <= pp.stages.len() {
+                    skip = stages_done;
+                    current = parts;
+                }
+                // a checkpoint claiming more stages than the plan has
+                // belongs to some other plan — ignore it, run fresh
+            }
+        }
+
+        for stage in pp.stages.iter().skip(skip) {
             let (outputs, sreport, placements) =
                 self.run_stage(stage, &current, &dead, &mut now)?;
 
@@ -266,6 +312,9 @@ impl Cluster {
                 }
             };
             report.stages.push(sreport);
+            if let Some(c) = ckpt {
+                c.committed(stage.id + 1, &current)?;
+            }
         }
 
         report.makespan = now;

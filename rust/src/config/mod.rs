@@ -16,14 +16,25 @@ pub enum BackendKind {
     Swift,
     S3,
     Local,
+    /// Real filesystem objects (`file:///abs/path`): the key IS the
+    /// path. Unlike the simulated stores, `file://` objects are
+    /// *writable* through the catalog (checkpoint state lives here) and
+    /// are NOT deterministically populated, so they cannot serve as
+    /// ingest sources.
+    File,
 }
 
 impl BackendKind {
     /// Every registered backend, in registry order — the ONE table the
     /// scheme lists elsewhere (storage catalog, error messages) derive
     /// from, so adding a backend here propagates everywhere.
-    pub const ALL: [BackendKind; 4] =
-        [BackendKind::Hdfs, BackendKind::Swift, BackendKind::S3, BackendKind::Local];
+    pub const ALL: [BackendKind; 5] = [
+        BackendKind::Hdfs,
+        BackendKind::Swift,
+        BackendKind::S3,
+        BackendKind::Local,
+        BackendKind::File,
+    ];
 
     pub fn parse(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
@@ -31,8 +42,9 @@ impl BackendKind {
             "swift" => Ok(BackendKind::Swift),
             "s3" => Ok(BackendKind::S3),
             "local" => Ok(BackendKind::Local),
+            "file" => Ok(BackendKind::File),
             other => Err(MareError::Config(format!(
-                "unknown storage backend `{other}` (hdfs|swift|s3|local)"
+                "unknown storage backend `{other}` (hdfs|swift|s3|local|file)"
             ))),
         }
     }
@@ -43,6 +55,7 @@ impl BackendKind {
             BackendKind::Swift => "swift",
             BackendKind::S3 => "s3",
             BackendKind::Local => "local",
+            BackendKind::File => "file",
         }
     }
 }

@@ -55,6 +55,20 @@ pub enum MareError {
     /// the submitter should back off and resubmit, or the operator can
     /// raise `--max-depth`.
     Backpressure { queued: usize, held: usize, max_depth: usize },
+
+    /// Checkpoint state could not be written or read back (corrupt
+    /// frame, fingerprint clash, unwritable store). Execution falls
+    /// back to a from-scratch run; losing a checkpoint never loses a
+    /// job.
+    Checkpoint(String),
+
+    /// A fault-injected mid-run death (`--fault W:N:midrun@S`): the
+    /// worker stopped after committing `stages_done` stage checkpoints
+    /// and `launches` container launches. Carried as an error so the
+    /// abort travels the normal failure path, with enough context for
+    /// the worker's exactly-once accounting — the partial launches are
+    /// real work a successor must NOT repeat.
+    KilledMidRun { stages_done: usize, launches: u64 },
 }
 
 impl std::fmt::Display for MareError {
@@ -84,6 +98,11 @@ impl std::fmt::Display for MareError {
                 "backpressure: spool depth {} (queued {queued} + held {held}) is at the \
                  service limit {max_depth}; retry later or raise --max-depth",
                 queued + held
+            ),
+            MareError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            MareError::KilledMidRun { stages_done, launches } => write!(
+                f,
+                "killed mid-run after {stages_done} checkpointed stages ({launches} launches)"
             ),
         }
     }

@@ -6,13 +6,14 @@
 //!           [--reduce-depth D] [--config file.json] [--artifacts DIR]
 //! mare plan --workload gc|vs|snp [--json]   # logical -> optimized -> physical
 //! mare submit <plan.json> [--queue DIR]     # validate + enqueue a wire plan
-//! mare jobs [--queue DIR]                   # list queued/running/done/failed
-//! mare work [--queue DIR] [--workers N] [--fault W:K:hold|running]
+//! mare jobs [--queue DIR] [--tenant T]      # list queued/running/done/failed
+//! mare work [--queue DIR] [--workers N] [--fault W:K:hold|running|midrun[@S]]
 //!                                           # threaded worker pool drains the queue
 //! mare serve [--queue DIR] [--workers N] [--max-depth D] [--quota t=w,...]
-//!                                           # resident multi-tenant job service
+//!           [--max-attempts K]              # resident multi-tenant job service
 //! mare serve --drain [--queue DIR]          # ask the resident daemon to exit
 //! mare requeue <id> [--queue DIR] [--force] # put a stuck/finished job back
+//! mare dlq list|show <id>|retry <id>        # inspect/redrive dead-lettered jobs
 //! mare inspect [--artifacts DIR]            # artifacts + stock images
 //! mare help
 //! ```
@@ -38,8 +39,9 @@ USAGE:
   mare submit <plan.json> [--queue DIR]
                          validate a wire plan (docs/WIRE_FORMAT.md) and
                          enqueue it on the spool directory
-  mare jobs  [--queue DIR]
+  mare jobs  [--queue DIR] [--tenant T]
                          list submitted jobs with status + launch counts
+                         (--tenant narrows the table to one tenant)
   mare work  [--queue DIR] [--workers N]
                          spin a pool of N worker THREADS that
                          concurrently claim and run queued jobs
@@ -61,6 +63,16 @@ USAGE:
                          re-runs `failed`/`done` jobs). Fresh `running`
                          records are presumed live and refused unless
                          --force
+  mare dlq list [--queue DIR]
+                         list dead-lettered jobs (moved to dlq/ by the
+                         serve daemon once a job spends its attempt
+                         budget; see --max-attempts)
+  mare dlq show <id> [--queue DIR]
+                         full failure history of one dead-lettered job
+  mare dlq retry <id> [--queue DIR]
+                         redrive a dead-lettered job: back to `queued`
+                         with a fresh attempt budget (the failure
+                         history is preserved)
   mare bench [--pr N] [--out FILE] [--filter S]
                          run the data-plane hot-path micro-benchmarks
                          and archive them as BENCH_<N>.json (repo-root
@@ -85,12 +97,15 @@ OPTIONS (submit/jobs/work/requeue):
                           (cluster shape per worker comes from --config/
                           --vcpus; for `work`, --workers sizes the POOL)
   --drivers N             deprecated alias for --workers
-  --fault W:K:hold|running
-                          inject a worker death: worker W dies on its
-                          K-th claim, either holding the claim (`hold`;
-                          recovered by the stale sweep) or leaving the
-                          job running (`running`; recover with
-                          `mare requeue`). Comma-separate for several.
+  --fault W:K:hold|running|midrun[@S][:jID]
+                          inject a worker death: worker W (or `*` for
+                          any worker, with :jID selecting the job) dies
+                          on its K-th claim — holding the claim (`hold`;
+                          recovered by the stale sweep), leaving the job
+                          running (`running`; recover with `mare
+                          requeue`), or mid-execution after S committed
+                          stages (`midrun@S`; the successor resumes from
+                          the checkpoint). Comma-separate for several.
   --stale-ms T            claim holds older than T ms are swept [10000]
   --force                 requeue even a fresh `running` record
 
@@ -101,6 +116,8 @@ OPTIONS (serve):
   --quota t=w[,t=w...]    tenant fair-share weights; unlisted tenants
                           weigh 1. Editable at runtime: the daemon
                           re-reads serve-control.json every tick
+  --max-attempts K        dead-letter a job after K failed attempts
+                          (0 = keep failed jobs in the live spool) [0]
   --tick-ms T             supervisor cadence (control reload, orphan
                           requeue, health publish)     [200]
   --drain                 request drain instead of starting a daemon
@@ -131,6 +148,7 @@ fn dispatch() -> Result<()> {
         Some("work") => cmd_work(&args),
         Some("serve") => cmd_serve(&args),
         Some("requeue") => cmd_requeue(&args),
+        Some("dlq") => cmd_dlq(&args),
         Some("bench") => cmd_bench(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("help") | None => {
@@ -244,12 +262,70 @@ fn cmd_submit(args: &Args) -> Result<()> {
 
 fn cmd_jobs(args: &Args) -> Result<()> {
     let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
-    let jobs = queue.list()?;
+    let tenant = args.flag("tenant");
+    let jobs = mare::submit::filter_tenant(queue.list()?, tenant);
     if jobs.is_empty() {
-        println!("no jobs in {}", queue.dir().display());
+        match tenant {
+            Some(t) => println!("no jobs for tenant `{t}` in {}", queue.dir().display()),
+            None => println!("no jobs in {}", queue.dir().display()),
+        }
         return Ok(());
     }
     print!("{}", mare::submit::render_jobs_table(&jobs, mare::submit::now_millis()));
+    Ok(())
+}
+
+fn cmd_dlq(args: &Args) -> Result<()> {
+    const USAGE: &str = "usage: mare dlq list|show <id>|retry <id> [--queue DIR]";
+    let queue = mare::submit::JobQueue::open(args.flag_or("queue", DEFAULT_QUEUE))?;
+    let id_arg = |args: &Args| -> Result<u64> {
+        args.positional.get(1).and_then(|s| s.parse().ok()).ok_or_else(|| {
+            mare::error::MareError::Config(USAGE.into())
+        })
+    };
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") | None => {
+            let jobs = queue.dlq_list()?;
+            if jobs.is_empty() {
+                println!("dead-letter queue of {} is empty", queue.dir().display());
+                return Ok(());
+            }
+            print!("{}", mare::submit::render_dlq_table(&jobs, mare::submit::now_millis()));
+        }
+        Some("show") => {
+            let job = queue.dlq_get(id_arg(args)?)?;
+            let now = mare::submit::now_millis();
+            println!("job {} ({})", job.id, job.summary);
+            println!("  tenant:   {}  priority: {}", job.tenant, job.priority);
+            println!(
+                "  attempts: {} (dead-lettered {} ago)",
+                job.attempts,
+                mare::submit::fmt_age(now, job.stamp_ms)
+            );
+            for (i, f) in job.failures.iter().enumerate() {
+                println!(
+                    "  attempt {}: [{} ago, {}] {}",
+                    i + 1,
+                    mare::submit::fmt_age(now, f.at_ms),
+                    f.worker,
+                    f.detail
+                );
+            }
+            println!("  redrive with: mare dlq retry {}", job.id);
+        }
+        Some("retry") => {
+            let job = queue.dlq_retry(id_arg(args)?)?;
+            println!(
+                "job {} redriven: queued with a fresh attempt budget ({})",
+                job.id, job.summary
+            );
+        }
+        Some(other) => {
+            return Err(mare::error::MareError::Config(format!(
+                "unknown dlq action `{other}`\n{USAGE}"
+            )));
+        }
+    }
     Ok(())
 }
 
@@ -289,6 +365,9 @@ fn cmd_work(args: &Args) -> Result<()> {
     let stale_default = pool_cfg.stale_after.as_millis() as u64;
     pool_cfg.stale_after =
         std::time::Duration::from_millis(args.flag_u64("stale-ms", stale_default)?);
+    // stage checkpoints live next to the spool: a killed worker's
+    // successor resumes the job from the last committed stage
+    pool_cfg.checkpoints = Some(queue.checkpoint_dir());
 
     let outcome = mare::submit::WorkerPool::new(pool_cfg).run(&queue)?;
     if outcome.finished.is_empty() {
@@ -339,19 +418,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stale_default = pool_cfg.stale_after.as_millis() as u64;
     pool_cfg.stale_after =
         std::time::Duration::from_millis(args.flag_u64("stale-ms", stale_default)?);
+    pool_cfg.checkpoints = Some(queue.checkpoint_dir());
 
     let mut serve_cfg = mare::serve::ServeConfig::new(pool_cfg);
     serve_cfg.tick = std::time::Duration::from_millis(args.flag_u64("tick-ms", 200)?.max(1));
     serve_cfg.max_depth = args.flag_usize("max-depth", 256)?;
+    serve_cfg.max_attempts = args.flag_u64("max-attempts", 0)?;
     if let Some(spec) = args.flag("quota") {
         serve_cfg.quotas = mare::serve::parse_quotas(spec)?;
     }
 
     println!(
-        "serving {} with {workers} workers (tick {:?}, max-depth {}{})",
+        "serving {} with {workers} workers (tick {:?}, max-depth {}, max-attempts {}{})",
         queue.dir().display(),
         serve_cfg.tick,
         serve_cfg.max_depth,
+        serve_cfg.max_attempts,
         if serve_cfg.quotas.is_empty() {
             String::new()
         } else {

@@ -414,6 +414,17 @@ impl Job {
         self.cluster.run(&self.lowered)
     }
 
+    /// [`Self::run`] through a stage checkpointer: completed stage
+    /// boundaries persist as the run progresses, and a previous
+    /// attempt's committed boundary (same checkpointer state) seeds the
+    /// run past the stages it already finished.
+    pub fn run_checkpointed(
+        &self,
+        ckpt: &dyn crate::cluster::StageCheckpointer,
+    ) -> Result<RunOutput> {
+        self.cluster.run_checkpointed(&self.lowered, Some(ckpt))
+    }
+
     /// Execute and join all text records with `\n` (driver-side collect).
     pub fn collect_text(&self) -> Result<String> {
         Ok(self.run()?.collect_text("\n").trim_end().to_string())

@@ -32,6 +32,10 @@ pub struct ServeCounters {
     pub jobs_failed: AtomicU64,
     /// Jobs orphaned by a dead worker and force-requeued by the daemon.
     pub orphans_requeued: AtomicU64,
+    /// Failed jobs automatically requeued for another attempt.
+    pub retried: AtomicU64,
+    /// Jobs moved to the dead-letter queue after exhausting attempts.
+    pub dead_lettered: AtomicU64,
 }
 
 /// A plain-value copy of [`ServeCounters`] at one instant.
@@ -45,6 +49,8 @@ pub struct CounterSnapshot {
     pub jobs_done: u64,
     pub jobs_failed: u64,
     pub orphans_requeued: u64,
+    pub retried: u64,
+    pub dead_lettered: u64,
 }
 
 impl ServeCounters {
@@ -62,6 +68,8 @@ impl ServeCounters {
             jobs_done: self.jobs_done.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             orphans_requeued: self.orphans_requeued.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+            dead_lettered: self.dead_lettered.load(Ordering::Relaxed),
         }
     }
 }
@@ -78,6 +86,8 @@ impl CounterSnapshot {
             ("jobs_done", Json::Num(self.jobs_done as f64)),
             ("jobs_failed", Json::Num(self.jobs_failed as f64)),
             ("orphans_requeued", Json::Num(self.orphans_requeued as f64)),
+            ("retried", Json::Num(self.retried as f64)),
+            ("dead_lettered", Json::Num(self.dead_lettered as f64)),
         ])
     }
 
@@ -91,6 +101,13 @@ impl CounterSnapshot {
             jobs_done: json.req("jobs_done")?.as_u64()?,
             jobs_failed: json.req("jobs_failed")?.as_u64()?,
             orphans_requeued: json.req("orphans_requeued")?.as_u64()?,
+            // absent in snapshots from daemons predating the DLQ
+            retried: json.get("retried").map(|v| v.as_u64()).transpose()?.unwrap_or(0),
+            dead_lettered: json
+                .get("dead_lettered")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
         })
     }
 }

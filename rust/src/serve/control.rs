@@ -18,6 +18,11 @@ use crate::util::json::Json;
 /// File name inside the spool directory.
 pub const CONTROL_FILE: &str = "serve-control.json";
 
+/// How long a daemon heartbeat stays fresh. Past this, submitters
+/// treat the control file as a leftover from a dead daemon and stop
+/// enforcing its admission limits.
+pub const BEAT_STALE_MS: u64 = 10_000;
+
 /// The advertised service settings.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Control {
@@ -28,6 +33,14 @@ pub struct Control {
     pub drain: bool,
     /// Tenant weight table (see `serve::policy`).
     pub quotas: Vec<(String, u64)>,
+    /// Dead-letter threshold: jobs that have failed this many attempts
+    /// are moved to `dlq/` by the daemon's sweep. 0 disables the DLQ
+    /// (failed jobs stay `failed` for manual `mare requeue`).
+    pub max_attempts: u64,
+    /// Daemon heartbeat, stamped every supervisor tick. 0 means the
+    /// file was hand-authored (or written by a daemon predating the
+    /// heartbeat) — such files are enforced unconditionally.
+    pub beat_ms: u64,
 }
 
 impl Control {
@@ -40,6 +53,8 @@ impl Control {
             ("max_depth", Json::Num(self.max_depth as f64)),
             ("drain", Json::Bool(self.drain)),
             ("quotas", quotas),
+            ("max_attempts", Json::Num(self.max_attempts as f64)),
+            ("beat_ms", Json::Num(self.beat_ms as f64)),
         ])
     }
 
@@ -54,12 +69,87 @@ impl Control {
             max_depth: json.req("max_depth")?.as_usize()?,
             drain: json.req("drain")?.as_bool()?,
             quotas,
+            max_attempts: json
+                .get("max_attempts")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
+            beat_ms: json.get("beat_ms").map(|v| v.as_u64()).transpose()?.unwrap_or(0),
         })
+    }
+
+    /// Is the daemon that wrote this file still alive, as far as its
+    /// heartbeat shows? Hand-authored files (`beat_ms == 0`) are always
+    /// "live" — they carry no liveness signal and are enforced as
+    /// written, which is also what every pre-heartbeat control file
+    /// gets. A clock that reads *behind* the stamp (NTP step) counts as
+    /// live too: `saturating_sub` makes the age 0, never a huge number.
+    pub fn live(&self, now_ms: u64) -> bool {
+        self.beat_ms == 0 || now_ms.saturating_sub(self.beat_ms) <= BEAT_STALE_MS
     }
 }
 
 fn control_path(dir: &Path) -> std::path::PathBuf {
     dir.join(CONTROL_FILE)
+}
+
+/// A lock file held for the duration of a control read-modify-write.
+/// Two writers RMW the control file: the daemon (heartbeat, every
+/// tick) and `mare serve --drain` (flip the flag, once). Without
+/// mutual exclusion the beat stamp can overwrite a drain request that
+/// landed between the daemon's read and write — and a lost drain is a
+/// daemon that never exits.
+const CONTROL_LOCK: &str = "serve-control.lock";
+
+/// A lock older than this belongs to a dead process and is broken.
+const LOCK_STALE_MS: u64 = 2_000;
+
+fn with_lock<T>(dir: &Path, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    let lock = dir.join(CONTROL_LOCK);
+    loop {
+        match fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
+            Ok(mut fh) => {
+                use std::io::Write;
+                let _ = write!(fh, "{}", crate::submit::queue::now_millis());
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                // stale-holder recovery: a lock stamped long ago was
+                // left by a process that died mid-update
+                let stamp = fs::read_to_string(&lock)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u64>().ok())
+                    .unwrap_or(0);
+                let now = crate::submit::queue::now_millis();
+                if now.saturating_sub(stamp) > LOCK_STALE_MS {
+                    let _ = fs::remove_file(&lock);
+                } else {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let result = f();
+    let _ = fs::remove_file(&lock);
+    result
+}
+
+/// Read-modify-write the advertised settings under the control lock.
+/// Errors when no control file exists — there is nothing to update,
+/// and inventing one would impose settings no daemon advertised.
+pub fn update(dir: &Path, mutate: impl FnOnce(&mut Control)) -> Result<Control> {
+    with_lock(dir, || {
+        let mut control = read(dir)?.ok_or_else(|| {
+            MareError::Submit(format!(
+                "no {CONTROL_FILE} in {} — no serve daemon owns this spool",
+                dir.display()
+            ))
+        })?;
+        mutate(&mut control);
+        write(dir, &control)?;
+        Ok(control)
+    })
 }
 
 /// Atomically publish `control` into the spool directory.
@@ -90,20 +180,12 @@ pub fn read(dir: &Path) -> Result<Option<Control>> {
 }
 
 /// `mare serve --drain`: flip the drain flag on the advertised
-/// settings (read-modify-write; the rename publish keeps readers
-/// whole). Errors when no daemon owns the spool — there is nothing to
-/// drain, and writing a fresh control file would impose admission
-/// limits no daemon advertised.
+/// settings (locked read-modify-write; the rename publish keeps
+/// readers whole). Errors when no daemon owns the spool — there is
+/// nothing to drain, and writing a fresh control file would impose
+/// admission limits no daemon advertised.
 pub fn request_drain(dir: &Path) -> Result<Control> {
-    let mut control = read(dir)?.ok_or_else(|| {
-        MareError::Submit(format!(
-            "no {CONTROL_FILE} in {} — no serve daemon owns this spool",
-            dir.display()
-        ))
-    })?;
-    control.drain = true;
-    write(dir, &control)?;
-    Ok(control)
+    update(dir, |control| control.drain = true)
 }
 
 #[cfg(test)]
@@ -127,6 +209,8 @@ mod tests {
             max_depth: 64,
             drain: false,
             quotas: vec![("alpha".into(), 3), ("beta".into(), 1)],
+            max_attempts: 3,
+            beat_ms: 1_000,
         };
         write(&dir, &control).unwrap();
         assert_eq!(read(&dir).unwrap(), Some(control.clone()));
@@ -153,5 +237,62 @@ mod tests {
         fs::write(dir.join(CONTROL_FILE), "{half a file").unwrap();
         assert!(read(&dir).is_err());
         let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_updates_do_not_lose_either_writer() {
+        let dir = tmp_dir("locked-rmw");
+        let base = Control {
+            max_depth: 1,
+            drain: false,
+            quotas: Vec::new(),
+            max_attempts: 0,
+            beat_ms: 0,
+        };
+        write(&dir, &base).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..50 {
+                    update(&dir, |c| c.beat_ms += 1).unwrap();
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..50 {
+                    update(&dir, |c| c.max_attempts += 1).unwrap();
+                }
+            });
+        });
+        let c = read(&dir).unwrap().unwrap();
+        assert_eq!((c.beat_ms, c.max_attempts), (50, 50), "no lost updates under the lock");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn files_without_the_new_fields_parse_as_disabled() {
+        // a control file written by a pre-DLQ daemon (or by hand)
+        let json = Json::parse(r#"{"max_depth": 8, "drain": false, "quotas": {}}"#).unwrap();
+        let control = Control::from_json(&json).unwrap();
+        assert_eq!(control.max_attempts, 0);
+        assert_eq!(control.beat_ms, 0);
+    }
+
+    #[test]
+    fn liveness_follows_the_heartbeat_but_hand_authored_files_are_forever() {
+        let mut control = Control {
+            max_depth: 8,
+            drain: false,
+            quotas: Vec::new(),
+            max_attempts: 0,
+            beat_ms: 0,
+        };
+        // no heartbeat: no liveness signal, always enforced
+        assert!(control.live(0));
+        assert!(control.live(u64::MAX));
+        // fresh heartbeat: live; stale heartbeat: dead daemon
+        control.beat_ms = 100_000;
+        assert!(control.live(100_000 + BEAT_STALE_MS));
+        assert!(!control.live(100_000 + BEAT_STALE_MS + 1));
+        // clock behind the stamp (NTP step): still live, not a wrap
+        assert!(control.live(50_000));
     }
 }

@@ -27,7 +27,7 @@ use std::time::Duration;
 use crate::error::{MareError, Result};
 use crate::metrics::counters::ServeCounters;
 use crate::submit::pool::{PoolConfig, PoolOutcome, ServeHooks, WorkerPool};
-use crate::submit::queue::{now_millis, ClaimStats, JobQueue, JobRecord, JobStatus};
+use crate::submit::queue::{now_millis, ClaimStats, JobFailure, JobQueue, JobRecord, JobStatus};
 
 use super::control::{self, Control};
 use super::health::{HealthReport, TenantHealth, WorkerHealth};
@@ -46,6 +46,11 @@ pub struct ServeConfig {
     pub max_depth: usize,
     /// Initial tenant weight table (control-file reloads override it).
     pub quotas: Vec<(String, u64)>,
+    /// Dead-letter threshold advertised in the control file: a job
+    /// whose attempt counter reaches this is moved to `dlq/` by the
+    /// supervisor sweep instead of being retried. 0 disables both the
+    /// sweep and automatic retries (failed jobs stay `failed`).
+    pub max_attempts: u64,
 }
 
 impl ServeConfig {
@@ -55,6 +60,7 @@ impl ServeConfig {
             tick: Duration::from_millis(200),
             max_depth: 256,
             quotas: Vec::new(),
+            max_attempts: 0,
         }
     }
 }
@@ -87,9 +93,14 @@ struct DaemonHooks {
     draining: AtomicBool,
     claim_seq: AtomicU64,
     cells: Vec<WorkerCell>,
-    /// Job ids left stuck `running` by after-claim deaths, awaiting the
-    /// supervisor's force-requeue.
-    orphans: Mutex<Vec<u64>>,
+    /// Dead-letter threshold, reloaded from the control file each tick
+    /// so operators can tune it on a live daemon.
+    max_attempts: AtomicU64,
+    /// `(worker, job id)` pairs left stuck `running` by after-claim
+    /// deaths, awaiting the supervisor's force-requeue — the worker
+    /// index travels along so the requeue can charge the death against
+    /// the job's failure history.
+    orphans: Mutex<Vec<(usize, u64)>>,
     /// (worker, note) for every death observed so far.
     deaths: Mutex<Vec<(usize, String)>>,
 }
@@ -102,6 +113,7 @@ impl DaemonHooks {
             draining: AtomicBool::new(false),
             claim_seq: AtomicU64::new(0),
             cells: (0..config.pool.workers).map(|_| WorkerCell::default()).collect(),
+            max_attempts: AtomicU64::new(config.max_attempts),
             orphans: Mutex::new(Vec::new()),
             deaths: Mutex::new(Vec::new()),
         }
@@ -110,6 +122,14 @@ impl DaemonHooks {
 
 impl ServeHooks for DaemonHooks {
     fn order(&self, candidates: &mut Vec<JobRecord>) {
+        // exhausted jobs are the sweep's to dead-letter, not a worker's
+        // to claim — withholding them here closes the race where a
+        // worker burns an attempt K+1 while the supervisor is moving
+        // the job to dlq/
+        let k = self.max_attempts.load(Ordering::Relaxed);
+        if k > 0 {
+            candidates.retain(|job| job.attempts < k);
+        }
         self.policy.lock().unwrap().order(candidates);
     }
 
@@ -154,12 +174,19 @@ impl ServeHooks for DaemonHooks {
     fn died(&self, worker: usize, orphaned_running: Option<u64>) {
         let note = match orphaned_running {
             Some(id) => {
-                self.orphans.lock().unwrap().push(id);
+                self.orphans.lock().unwrap().push((worker, id));
                 format!("died leaving job {id} running")
             }
             None => "died mid-claim holding a job".to_string(),
         };
         self.deaths.lock().unwrap().push((worker, note));
+    }
+
+    fn progressed(&self, worker: usize, launches: u64) {
+        // launches a mid-run death already performed: real container
+        // work, credited before the worker's report is lost
+        ServeCounters::add(&self.counters.launches, launches);
+        ServeCounters::add(&self.cells[worker].launches, launches);
     }
 }
 
@@ -184,6 +211,8 @@ impl ServeDaemon {
                 max_depth: self.config.max_depth,
                 drain: false,
                 quotas: self.config.quotas.clone(),
+                max_attempts: self.config.max_attempts,
+                beat_ms: now_millis(),
             },
         )?;
         let hooks = DaemonHooks::new(&self.config);
@@ -230,9 +259,28 @@ impl ServeDaemon {
         ServeCounters::add(&hooks.counters.swept, swept as u64);
         for job in queue.list()? {
             if job.status == JobStatus::Running {
-                queue.requeue_with(job.id, Duration::ZERO, true)?;
+                let note = JobFailure {
+                    at_ms: now_millis(),
+                    worker: "serve-supervisor".into(),
+                    detail: "worker died leaving the job running; recovered at drain".into(),
+                };
+                queue.requeue_noting(job.id, Duration::ZERO, true, Some(note))?;
                 orphans_requeued += 1;
                 ServeCounters::add(&hooks.counters.orphans_requeued, 1);
+            }
+        }
+        // one last dead-letter pass so the drained spool never holds a
+        // job past its attempt budget — a failure landing between the
+        // final supervisor tick and the fleet's exit still reaches dlq/
+        let k = hooks.max_attempts.load(Ordering::Relaxed);
+        if k > 0 {
+            for job in queue.list()? {
+                if job.attempts >= k
+                    && matches!(job.status, JobStatus::Failed | JobStatus::Queued)
+                    && queue.dead_letter(job.id).is_ok()
+                {
+                    ServeCounters::add(&hooks.counters.dead_lettered, 1);
+                }
             }
         }
 
@@ -268,24 +316,63 @@ impl ServeDaemon {
         started_ms: u64,
         tick: u64,
     ) -> Result<()> {
-        if let Some(c) = control::read(queue.dir())? {
+        // settings reload + heartbeat in one locked read-modify-write:
+        // submitters watch `beat_ms` to know the advertised limits are
+        // still backed by a live daemon (control::BEAT_STALE_MS)
+        if let Ok(c) = control::update(queue.dir(), |c| c.beat_ms = now_millis()) {
             *max_depth = c.max_depth as u64;
+            hooks.max_attempts.store(c.max_attempts, Ordering::Relaxed);
             hooks.policy.lock().unwrap().set_weights(&c.quotas);
             if c.drain {
                 hooks.draining.store(true, Ordering::Release);
             }
         }
-        let orphans: Vec<u64> = std::mem::take(&mut *hooks.orphans.lock().unwrap());
-        for id in orphans {
-            queue.requeue_with(id, Duration::ZERO, true)?;
-            *orphans_requeued += 1;
-            ServeCounters::add(&hooks.counters.orphans_requeued, 1);
+        let orphans: Vec<(usize, u64)> = std::mem::take(&mut *hooks.orphans.lock().unwrap());
+        for (worker, id) in orphans {
+            let note = JobFailure {
+                at_ms: now_millis(),
+                worker: format!("serve-{worker}"),
+                detail: "worker died leaving the job running; requeued by the supervisor"
+                    .into(),
+            };
+            match queue.requeue_noting(id, Duration::ZERO, true, Some(note)) {
+                Ok(_) => {
+                    *orphans_requeued += 1;
+                    ServeCounters::add(&hooks.counters.orphans_requeued, 1);
+                }
+                // contended this tick (e.g. the record is mid-rename):
+                // put it back, the next tick retries
+                Err(_) => hooks.orphans.lock().unwrap().push((worker, id)),
+            }
         }
         // workers sweep while idle; the supervisor sweeps too so a
         // fully-busy (or decimated) fleet still recovers dead holds
         let swept = queue.sweep_stale(self.config.pool.stale_after)?;
         if swept > 0 {
             ServeCounters::add(&hooks.counters.swept, swept as u64);
+        }
+        // the dead-letter sweep: exhausted jobs leave the live spool;
+        // failed-but-under-budget jobs get another attempt (unless a
+        // drain is winding the service down — then they keep their
+        // `failed` record for the operator)
+        let k = hooks.max_attempts.load(Ordering::Relaxed);
+        if k > 0 {
+            let draining = hooks.draining.load(Ordering::Acquire);
+            for job in queue.list()? {
+                match job.status {
+                    JobStatus::Failed | JobStatus::Queued if job.attempts >= k => {
+                        if queue.dead_letter(job.id).is_ok() {
+                            ServeCounters::add(&hooks.counters.dead_lettered, 1);
+                        }
+                    }
+                    JobStatus::Failed if !draining => {
+                        if queue.requeue_with(job.id, Duration::ZERO, true).is_ok() {
+                            ServeCounters::add(&hooks.counters.retried, 1);
+                        }
+                    }
+                    _ => {}
+                }
+            }
         }
         self.snapshot(queue, hooks, *max_depth, started_ms, tick)?
             .publish(queue.dir())
@@ -462,6 +549,66 @@ mod tests {
         assert!(healthf.req("draining").unwrap().as_bool().unwrap());
         let alpha = healthf.req("tenants").unwrap().req("alpha").unwrap();
         assert_eq!(alpha.req("completed").unwrap().as_u64().unwrap(), 4);
+
+        let _ = std::fs::remove_dir_all(queue.dir());
+    }
+
+    /// The failure lifecycle end-to-end, in process: a poison job fails
+    /// every attempt, the sweep retries it until the budget is spent,
+    /// then relocates it to `dlq/` with its full failure history.
+    #[test]
+    fn failed_jobs_retry_until_the_budget_then_dead_letter() {
+        let queue = tmp_queue("dlq-lifecycle");
+        let shape = ClusterConfig::sized(2, 2);
+        // `frobnicate` is not in the simulated image: parses and admits
+        // fine, fails at execution — submitted via the queue API so no
+        // admission dry-run rejects it first
+        let poison = plan("alpha").replace(
+            "grep -o '[GC]' /dna | wc -l > /count",
+            "frobnicate /dna > /count",
+        );
+        let id = queue
+            .submit(crate::util::json::Json::parse(&poison).unwrap(), "poison".into())
+            .unwrap();
+
+        let mut config = ServeConfig::new(PoolConfig::new(2, shape));
+        config.tick = Duration::from_millis(20);
+        config.max_attempts = 2;
+        let daemon = ServeDaemon::new(config);
+
+        thread::scope(|scope| {
+            let handle = scope.spawn(|| daemon.run(&queue));
+            let mut waited = 0;
+            while queue.dlq_list().unwrap().is_empty() {
+                waited += 1;
+                assert!(waited < 1_000, "job never reached the dead-letter queue");
+                thread::sleep(Duration::from_millis(10));
+            }
+            control::request_drain(queue.dir()).unwrap();
+            handle.join().unwrap()
+        })
+        .unwrap();
+
+        let dead = queue.dlq_list().unwrap();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].id, id);
+        assert_eq!(dead[0].status, JobStatus::Failed);
+        assert_eq!(dead[0].attempts, 2, "the whole attempt budget was spent");
+        assert_eq!(dead[0].failures.len(), 2, "one failure context per attempt");
+        assert!(
+            dead[0].failures.iter().all(|f| f.detail.contains("frobnicate")),
+            "{:?}",
+            dead[0].failures
+        );
+        assert!(queue.list().unwrap().is_empty(), "live spool drained clean");
+
+        let stats = health::read_json(queue.dir(), STATS_FILE).unwrap().unwrap();
+        assert_eq!(stats.req("retried").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(stats.req("dead_lettered").unwrap().as_u64().unwrap(), 1);
+        // the daemon heartbeat landed in the control file
+        let c = control::read(queue.dir()).unwrap().unwrap();
+        assert!(c.beat_ms > 0, "supervisor ticks stamp the heartbeat");
+        assert_eq!(c.max_attempts, 2);
 
         let _ = std::fs::remove_dir_all(queue.dir());
     }

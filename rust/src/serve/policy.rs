@@ -175,6 +175,8 @@ mod tests {
             stamp_ms: 0,
             claimed_ms: None,
             claim_seq: None,
+            attempts: 0,
+            failures: Vec::new(),
             plan: Json::Null,
             result: None,
         }

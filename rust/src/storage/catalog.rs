@@ -175,6 +175,10 @@ impl StorageCatalog {
             BackendKind::Swift => Box::new(Swift::new()),
             BackendKind::S3 => Box::new(S3::new()),
             BackendKind::Local => Box::new(LocalFs::new()),
+            // file:// has no simulated population model — resolve()
+            // refuses it before ever opening; an empty local store is
+            // returned only for API symmetry
+            BackendKind::File => Box::new(LocalFs::new()),
         }
     }
 
@@ -222,6 +226,13 @@ impl StorageCatalog {
         uri: &StorageUri,
         partitions: usize,
     ) -> Result<(Dataset, IngestReport)> {
+        if uri.kind == BackendKind::File {
+            return Err(MareError::Storage(
+                "file:// objects are real files, not deterministic populations — \
+                 they cannot serve as ingest sources (use put_object/fetch_object)"
+                    .into(),
+            ));
+        }
         let label = uri.label();
         if uri.is_glob() {
             let objects = self.glob_objects(uri);
@@ -237,6 +248,66 @@ impl StorageCatalog {
             let mut backend = self.open(uri.kind, bytes.len() as u64);
             backend.put(&uri.key, bytes)?;
             ingest_text_as(backend.as_ref(), &uri.key, uri.sep(), partitions, self.workers, &label)
+        }
+    }
+
+    /// Write one object through a URI — the catalog's WRITE path. Only
+    /// `file://` URIs are writable: the key is a filesystem path, the
+    /// write is temp+rename atomic (readers never observe a torn
+    /// object), and parent directories are created on demand. The
+    /// simulated stores stay read-only seeded populations; asking them
+    /// to persist is an error, not a silent in-memory write that would
+    /// evaporate with the process.
+    pub fn put_object(&self, uri: &StorageUri, bytes: &[u8]) -> Result<()> {
+        if uri.kind != BackendKind::File {
+            return Err(MareError::Storage(format!(
+                "{}:// is a simulated read-only population; only file:// objects are writable",
+                uri.kind.name()
+            )));
+        }
+        let path = std::path::Path::new(&uri.key);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read one `file://` object back as a zero-copy [`Shared`] buffer
+    /// (one read into the refcounted allocation; consumers slice views
+    /// out of it). `Ok(None)` when the object does not exist — absence
+    /// is a normal answer for checkpoint state, not an error.
+    pub fn fetch_object(&self, uri: &StorageUri) -> Result<Option<crate::util::bytes::Shared>> {
+        if uri.kind != BackendKind::File {
+            return Err(MareError::Storage(format!(
+                "{}:// objects are resolved as ingest sources, not fetched; \
+                 only file:// supports fetch_object",
+                uri.kind.name()
+            )));
+        }
+        match std::fs::read(&uri.key) {
+            Ok(bytes) => Ok(Some(crate::util::bytes::Shared::from_vec(bytes))),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Delete one `file://` object; deleting a missing object is fine.
+    pub fn delete_object(&self, uri: &StorageUri) -> Result<()> {
+        if uri.kind != BackendKind::File {
+            return Err(MareError::Storage(format!(
+                "{}:// objects cannot be deleted; only file:// is writable",
+                uri.kind.name()
+            )));
+        }
+        match std::fs::remove_file(&uri.key) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
         }
     }
 
@@ -356,6 +427,33 @@ mod tests {
             }
             _ => panic!("expected a source plan"),
         }
+    }
+
+    #[test]
+    fn file_objects_write_fetch_and_delete() {
+        let dir = std::env::temp_dir().join(format!("mare-catalog-{}", std::process::id()));
+        let path = dir.join("nested").join("state.bin");
+        let uri = StorageUri::parse(&format!("file://{}", path.display())).unwrap();
+        assert_eq!(uri.kind, BackendKind::File);
+        let cat = StorageCatalog::simulated(2);
+
+        assert!(cat.fetch_object(&uri).unwrap().is_none(), "absence is Ok(None)");
+        cat.put_object(&uri, b"abc").unwrap();
+        assert_eq!(cat.fetch_object(&uri).unwrap().unwrap().as_slice(), b"abc");
+        cat.put_object(&uri, b"defg").unwrap(); // atomic replace
+        assert_eq!(cat.fetch_object(&uri).unwrap().unwrap().as_slice(), b"defg");
+        cat.delete_object(&uri).unwrap();
+        assert!(cat.fetch_object(&uri).unwrap().is_none());
+        cat.delete_object(&uri).unwrap(); // idempotent
+
+        // simulated schemes refuse the write path; file:// refuses ingest
+        let sim = StorageUri::parse("hdfs://x").unwrap();
+        assert!(cat.put_object(&sim, b"x").is_err());
+        assert!(cat.fetch_object(&sim).is_err());
+        assert!(cat.delete_object(&sim).is_err());
+        assert!(cat.resolve(&uri, 2).is_err(), "file:// is not an ingest source");
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Stage-checkpoint persistence: the durable state behind
+//! crash-recoverable job execution.
+//!
+//! [`CheckpointStore`] implements
+//! [`StageCheckpointer`](crate::cluster::StageCheckpointer) over the
+//! storage catalog's `file://` write path: after every stage boundary
+//! it overwrites ONE state object (`<dir>/state.ckpt`, temp+rename
+//! atomic) holding the number of completed stages plus the exact
+//! post-shuffle partitions the next stage consumes. A successor worker
+//! opening the same directory resumes from the last committed boundary
+//! instead of re-running the whole plan — for a depth-K tree reduce
+//! that means re-entering at the last finished level.
+//!
+//! The frame is bound to its plan by a fingerprint
+//! ([`plan_fingerprint`]): a checkpoint written for a different plan
+//! (spool id reuse, operator copying directories around) is silently
+//! ignored rather than fed into the wrong job. Corrupt or truncated
+//! frames are ignored the same way — **losing a checkpoint never loses
+//! a job**, it only costs a from-scratch re-run.
+//!
+//! Decoding is zero-copy: record payloads come back as
+//! [`Shared`]/[`SharedStr`] views slicing the one read buffer, so a
+//! resume materializes no per-record allocations beyond the `Vec`
+//! spines.
+//!
+//! ## Frame layout (all integers little-endian u64)
+//!
+//! ```text
+//! "MARECKP1"  magic (8 bytes)
+//! fingerprint  plan binding
+//! stages_done  boundaries committed
+//! npartitions
+//!   per partition:
+//!     preferred   worker hint (u64::MAX = none)
+//!     nrecords
+//!       per record:
+//!         tag u8       0 = text, 1 = binary
+//!         text:        len, bytes (UTF-8)
+//!         binary:      name_len, name, len, bytes
+//! ```
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::StageCheckpointer;
+use crate::config::BackendKind;
+use crate::dataset::{Partition, Record};
+use crate::error::{MareError, Result};
+use crate::util::bytes::{Shared, SharedStr};
+use crate::util::json::Json;
+
+use super::catalog::{StorageCatalog, StorageUri};
+
+/// Frame magic: format name + version. Bump the digit on layout
+/// changes; old frames then fail the magic check and are ignored
+/// (re-run from scratch) instead of being misparsed.
+pub const CKPT_MAGIC: &[u8; 8] = b"MARECKP1";
+
+/// Stable fingerprint binding a checkpoint to its plan: FNV-1a over the
+/// plan's canonical JSON text. Not cryptographic — it guards against
+/// *accidents* (id reuse, copied spool dirs), not adversaries.
+pub fn plan_fingerprint(plan: &Json) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in plan.to_string().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn corrupt(detail: &str) -> MareError {
+    MareError::Checkpoint(format!("corrupt frame: {detail}"))
+}
+
+/// Serialize one committed boundary.
+fn encode(fingerprint: u64, done: usize, parts: &[Partition]) -> Vec<u8> {
+    let payload: usize = parts
+        .iter()
+        .map(|p| 16 + p.records.iter().map(|r| 9 + r.size_bytes() as usize + 8).sum::<usize>())
+        .sum();
+    let mut out = Vec::with_capacity(32 + payload);
+    out.extend_from_slice(CKPT_MAGIC);
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&(done as u64).to_le_bytes());
+    out.extend_from_slice(&(parts.len() as u64).to_le_bytes());
+    for p in parts {
+        let pref = p.preferred_worker.map(|w| w as u64).unwrap_or(u64::MAX);
+        out.extend_from_slice(&pref.to_le_bytes());
+        out.extend_from_slice(&(p.records.len() as u64).to_le_bytes());
+        for r in &p.records {
+            match r {
+                Record::Text(s) => {
+                    out.push(0);
+                    out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+                    out.extend_from_slice(s.as_str().as_bytes());
+                }
+                Record::Binary { name, bytes } => {
+                    out.push(1);
+                    out.extend_from_slice(&(name.len() as u64).to_le_bytes());
+                    out.extend_from_slice(name.as_bytes());
+                    out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                    out.extend_from_slice(bytes.as_slice());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Bounds-checked reader over the one fetched buffer; payload reads are
+/// O(1) sub-views, not copies.
+struct Cursor {
+    buf: Shared,
+    off: usize,
+}
+
+impl Cursor {
+    fn take(&mut self, n: usize) -> Result<Shared> {
+        let end = self.off.checked_add(n).ok_or_else(|| corrupt("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(corrupt("truncated"));
+        }
+        let view = self.buf.slice(self.off, end);
+        self.off = end;
+        Ok(view)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let view = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(view.as_slice());
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?.as_slice()[0])
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // a claimed length beyond the buffer is corruption, not an
+        // invitation to allocate
+        if n > self.buf.len() as u64 {
+            return Err(corrupt("length exceeds frame"));
+        }
+        Ok(n as usize)
+    }
+}
+
+/// Deserialize a frame: `(fingerprint, stages_done, partitions)`.
+fn decode(buf: Shared) -> Result<(u64, usize, Vec<Partition>)> {
+    let mut c = Cursor { buf, off: 0 };
+    if c.take(8)?.as_slice() != CKPT_MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let fingerprint = c.u64()?;
+    let done = c.u64()? as usize;
+    let nparts = c.len()?;
+    let mut parts = Vec::new();
+    for _ in 0..nparts {
+        let pref = c.u64()?;
+        let preferred_worker = (pref != u64::MAX).then_some(pref as usize);
+        let nrecords = c.len()?;
+        let mut records = Vec::new();
+        for _ in 0..nrecords {
+            let record = match c.u8()? {
+                0 => {
+                    let n = c.len()?;
+                    let s = SharedStr::from_shared(c.take(n)?)
+                        .map_err(|_| corrupt("text record is not UTF-8"))?;
+                    Record::Text(s)
+                }
+                1 => {
+                    let n = c.len()?;
+                    let name = String::from_utf8(c.take(n)?.as_slice().to_vec())
+                        .map_err(|_| corrupt("binary name is not UTF-8"))?;
+                    let n = c.len()?;
+                    Record::Binary { name, bytes: c.take(n)? }
+                }
+                t => return Err(corrupt(&format!("unknown record tag {t}"))),
+            };
+            records.push(record);
+        }
+        parts.push(Partition { records, preferred_worker });
+    }
+    if c.off != c.buf.len() {
+        return Err(corrupt("trailing bytes"));
+    }
+    Ok((fingerprint, done, parts))
+}
+
+/// Durable stage checkpoints for one job, stored as a single `file://`
+/// object under the job's checkpoint directory.
+pub struct CheckpointStore {
+    catalog: StorageCatalog,
+    uri: StorageUri,
+    fingerprint: u64,
+}
+
+impl CheckpointStore {
+    /// A store over `<dir>/state.ckpt`, bound to `plan`. The directory
+    /// need not exist yet — the first commit creates it.
+    pub fn open(dir: &Path, plan: &Json) -> CheckpointStore {
+        let path = dir.join("state.ckpt");
+        CheckpointStore {
+            catalog: StorageCatalog::simulated(1),
+            uri: StorageUri {
+                kind: BackendKind::File,
+                key: path.display().to_string(),
+                params: Vec::new(),
+            },
+            fingerprint: plan_fingerprint(plan),
+        }
+    }
+
+    /// The `file://` label the state lives behind (logs, tests).
+    pub fn label(&self) -> String {
+        self.uri.label()
+    }
+
+    /// Drop the persisted state (job finished — nothing to resume).
+    pub fn clear(&self) -> Result<()> {
+        self.catalog.delete_object(&self.uri)
+    }
+}
+
+impl StageCheckpointer for CheckpointStore {
+    fn resume(&self) -> Option<(usize, Vec<Partition>)> {
+        // any failure to read or parse means "no usable checkpoint":
+        // the job re-runs from the source rather than dying over state
+        // that exists purely as an optimization
+        let buf = self.catalog.fetch_object(&self.uri).ok()??;
+        let (fingerprint, done, parts) = decode(buf).ok()?;
+        if fingerprint != self.fingerprint {
+            return None; // a different plan's state (id reuse) — ignore
+        }
+        Some((done, parts))
+    }
+
+    fn committed(&self, done: usize, parts: &[Partition]) -> Result<()> {
+        self.catalog.put_object(&self.uri, &encode(self.fingerprint, done, parts))
+    }
+}
+
+/// Fault-injection wrapper: delegates to `inner`, then aborts the run
+/// with [`MareError::KilledMidRun`] once `after` boundaries have been
+/// committed by THIS attempt (boundaries skipped via resume were
+/// committed by a previous life and do not count). The `launches` field
+/// travels as 0 here — the layer that owns the launch counter (the
+/// driver) enriches it before reporting.
+pub struct KillAfter<'a> {
+    inner: &'a dyn StageCheckpointer,
+    after: usize,
+    commits: AtomicUsize,
+}
+
+impl<'a> KillAfter<'a> {
+    pub fn new(inner: &'a dyn StageCheckpointer, after: usize) -> KillAfter<'a> {
+        KillAfter { inner, after: after.max(1), commits: AtomicUsize::new(0) }
+    }
+}
+
+impl StageCheckpointer for KillAfter<'_> {
+    fn resume(&self) -> Option<(usize, Vec<Partition>)> {
+        self.inner.resume()
+    }
+
+    fn committed(&self, done: usize, parts: &[Partition]) -> Result<()> {
+        self.inner.committed(done, parts)?;
+        if self.commits.fetch_add(1, Ordering::SeqCst) + 1 >= self.after {
+            return Err(MareError::KilledMidRun { stages_done: done, launches: 0 });
+        }
+        Ok(())
+    }
+}
+
+/// In-memory checkpointer for unit tests and same-process crosschecks —
+/// the protocol without the filesystem.
+#[derive(Default)]
+pub struct MemCheckpoint {
+    state: Mutex<Option<(usize, Vec<Partition>)>>,
+}
+
+impl MemCheckpoint {
+    pub fn new() -> MemCheckpoint {
+        MemCheckpoint::default()
+    }
+
+    /// Number of stages the stored boundary covers (None: never
+    /// committed).
+    pub fn stages_done(&self) -> Option<usize> {
+        self.state.lock().unwrap().as_ref().map(|(d, _)| *d)
+    }
+}
+
+impl StageCheckpointer for MemCheckpoint {
+    fn resume(&self) -> Option<(usize, Vec<Partition>)> {
+        self.state.lock().unwrap().clone()
+    }
+
+    fn committed(&self, done: usize, parts: &[Partition]) -> Result<()> {
+        *self.state.lock().unwrap() = Some((done, parts.to_vec()));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_parts() -> Vec<Partition> {
+        vec![
+            Partition::with_locality(
+                vec![Record::text("ACGT"), Record::binary("shard-0.gz", vec![1u8, 2, 3])],
+                2,
+            ),
+            Partition::new(vec![Record::text("")]),
+            Partition::new(Vec::new()),
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip_bytes_and_locality() {
+        let parts = sample_parts();
+        let frame = encode(7, 3, &parts);
+        let (fp, done, back) = decode(Shared::from_vec(frame)).unwrap();
+        assert_eq!(fp, 7);
+        assert_eq!(done, 3);
+        assert_eq!(back, parts);
+    }
+
+    #[test]
+    fn corrupt_frames_error_not_panic() {
+        let good = encode(7, 1, &sample_parts());
+        // truncations at every prefix length must all error cleanly
+        for cut in 0..good.len() {
+            assert!(decode(Shared::from_vec(good[..cut].to_vec())).is_err(), "cut {cut}");
+        }
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(decode(Shared::from_vec(bad)).is_err());
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode(Shared::from_vec(long)).is_err());
+        // absurd claimed length must not trigger a giant allocation
+        let mut lying = good;
+        let n = lying.len();
+        lying[n - 1] = 0xff; // corrupt the final payload length bytes
+        assert!(decode(Shared::from_vec(lying)).is_err());
+    }
+
+    #[test]
+    fn store_persists_resumes_and_clears() {
+        let dir = std::env::temp_dir().join(format!("mare-ckpt-{}", std::process::id()));
+        let plan = Json::parse(r#"{"v":1,"pipeline":[]}"#).unwrap();
+        let store = CheckpointStore::open(&dir, &plan);
+        assert!(store.label().starts_with("file://"));
+        assert!(store.resume().is_none(), "no state yet");
+
+        let parts = sample_parts();
+        store.committed(2, &parts).unwrap();
+        let (done, back) = store.resume().unwrap();
+        assert_eq!(done, 2);
+        assert_eq!(back, parts);
+
+        // a store bound to a DIFFERENT plan ignores this state
+        let other = Json::parse(r#"{"v":2,"pipeline":[]}"#).unwrap();
+        assert!(CheckpointStore::open(&dir, &other).resume().is_none());
+
+        // corrupt state on disk: resume falls back to from-scratch
+        store.committed(3, &parts).unwrap();
+        let path = dir.join("state.ckpt");
+        std::fs::write(&path, b"MARECKP1 but then nonsense").unwrap();
+        assert!(store.resume().is_none());
+
+        store.committed(4, &parts).unwrap();
+        store.clear().unwrap();
+        assert!(store.resume().is_none());
+        store.clear().unwrap(); // idempotent
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kill_after_counts_only_this_attempts_commits() {
+        let mem = MemCheckpoint::new();
+        mem.committed(1, &sample_parts()).unwrap();
+
+        let killer = KillAfter::new(&mem, 2);
+        assert_eq!(killer.resume().unwrap().0, 1, "resume passes through");
+        killer.committed(2, &sample_parts()).unwrap();
+        let err = killer.committed(3, &sample_parts()).unwrap_err();
+        match err {
+            MareError::KilledMidRun { stages_done, launches } => {
+                assert_eq!(stages_done, 3);
+                assert_eq!(launches, 0);
+            }
+            other => panic!("expected KilledMidRun, got {other}"),
+        }
+        // the inner store committed BEFORE the kill — state is durable
+        assert_eq!(mem.stages_done(), Some(3));
+    }
+}

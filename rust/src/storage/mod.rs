@@ -17,9 +17,13 @@
 //!   locality metadata + virtual ingestion timing
 //! * [`catalog`] — registry of named backends resolving `scheme://key`
 //!   URIs into ingested datasets (deterministic seeded population, so
-//!   storage-backed plans execute identically on every driver)
+//!   storage-backed plans execute identically on every driver); also
+//!   the `file://` WRITE path (real-disk objects, temp+rename atomic)
+//! * [`checkpoint`] — stage-boundary state persisted through `file://`
+//!   objects, the durable half of crash-recoverable job execution
 
 pub mod catalog;
+pub mod checkpoint;
 pub mod hdfs;
 pub mod ingest;
 pub mod local;
@@ -30,6 +34,7 @@ use crate::error::Result;
 use crate::simtime::Duration;
 
 pub use catalog::{StorageCatalog, StorageUri};
+pub use checkpoint::{plan_fingerprint, CheckpointStore, KillAfter, MemCheckpoint};
 pub use hdfs::Hdfs;
 pub use ingest::{ingest_text, IngestReport};
 pub use local::LocalFs;

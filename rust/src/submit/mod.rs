@@ -60,10 +60,10 @@ pub use pool::{
     Death, DeathMode, FaultPlan, PoolConfig, PoolOutcome, PoolReport, ServeHooks, WorkerPool,
 };
 pub use queue::{
-    fmt_age, now_millis, render_jobs_table, ClaimOrder, ClaimStats, JobQueue, JobRecord,
-    JobResult, JobStatus, STALE_CLAIM,
+    filter_tenant, fmt_age, now_millis, render_dlq_table, render_jobs_table, ClaimOrder,
+    ClaimStats, JobFailure, JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM,
 };
-pub use sim::{crosscheck, crosscheck_threaded, drain, Driver, Executed};
+pub use sim::{crosscheck, crosscheck_resumed, crosscheck_threaded, drain, Driver, Executed};
 
 use std::sync::Arc;
 
@@ -368,11 +368,14 @@ impl Submitter {
     /// `serve-control.json` there), its advertised depth limit is
     /// enforced here: a full spool is a typed
     /// [`MareError::Backpressure`] refusal, never a hang or a silent
-    /// drop.
+    /// drop. A control file whose heartbeat has gone stale belongs to a
+    /// daemon that died without cleaning up — its limits are ignored
+    /// (refusing submissions on behalf of a dead service helps nobody);
+    /// hand-authored files carry no heartbeat and are always enforced.
     pub fn submit(&self, queue: &JobQueue, text: &str) -> Result<(u64, ValidatedPlan)> {
         let plan = self.validate(text)?;
         if let Some(control) = crate::serve::control::read(queue.dir())? {
-            if control.max_depth > 0 {
+            if control.max_depth > 0 && control.live(queue::now_millis()) {
                 let (queued, held) = queue.pending()?;
                 if queued + held >= control.max_depth {
                     return Err(MareError::Backpressure {
@@ -521,5 +524,59 @@ mod tests {
         let opaque = good.replace("gen:gc:16", "ftp://genome.txt");
         let v = submitter.validate(&opaque).unwrap();
         assert!(!v.executable);
+    }
+
+    /// Regression: a control file left behind by a crashed daemon must
+    /// not gate admission forever. Liveness comes from the heartbeat;
+    /// hand-authored files (no heartbeat) keep their old always-on
+    /// behavior.
+    #[test]
+    fn stale_daemon_control_files_stop_gating_admission() {
+        use crate::serve::control::{self, Control};
+
+        let dir = std::env::temp_dir()
+            .join(format!("mare-submit-staleness-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let queue = JobQueue::open(dir.clone()).unwrap();
+        let submitter = Submitter::new(crate::cluster::ClusterConfig::sized(2, 2));
+        let plan = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "gen:gc:16", "partitions": 2},
+            {"op": "map", "image": "ubuntu", "command": "wc -l /in > /out",
+             "input": {"kind": "text", "path": "/in"},
+             "output": {"kind": "text", "path": "/out"}},
+            {"op": "collect"}
+          ]
+        }"#;
+
+        let live = Control {
+            max_depth: 1,
+            drain: false,
+            quotas: Vec::new(),
+            max_attempts: 0,
+            beat_ms: queue::now_millis(),
+        };
+        control::write(queue.dir(), &live).unwrap();
+        submitter.submit(&queue, plan).unwrap();
+        // fresh heartbeat + full spool: typed refusal
+        let err = submitter.submit(&queue, plan).unwrap_err();
+        assert!(matches!(err, MareError::Backpressure { .. }), "{err}");
+
+        // identical limits, heartbeat long stale: the daemon is dead,
+        // its depth limit no longer binds
+        let mut stale = live.clone();
+        stale.beat_ms = 1;
+        control::write(queue.dir(), &stale).unwrap();
+        submitter.submit(&queue, plan).unwrap();
+
+        // hand-authored file (beat_ms 0): enforced unconditionally
+        let mut authored = live.clone();
+        authored.beat_ms = 0;
+        control::write(queue.dir(), &authored).unwrap();
+        let err = submitter.submit(&queue, plan).unwrap_err();
+        assert!(matches!(err, MareError::Backpressure { .. }), "{err}");
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

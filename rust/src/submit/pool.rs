@@ -15,16 +15,25 @@
 //! kills chosen workers at chosen points in the claim protocol —
 //! [`DeathMode::MidClaim`] leaves a `.claim` hold that only the
 //! age-gated [`JobQueue::sweep_stale`] (called from every idle worker)
-//! can recover, and [`DeathMode::AfterClaim`] leaves the job stuck
-//! `running`, recoverable only by `mare requeue`. The headline stress
-//! gate over this module lives in `rust/tests/pool_stress.rs` and runs
-//! as a dedicated CI job.
+//! can recover, [`DeathMode::AfterClaim`] leaves the job stuck
+//! `running`, recoverable only by `mare requeue`, and
+//! [`DeathMode::MidRun`] kills a worker mid-execution after it has
+//! committed stage checkpoints — the successor resumes the job from
+//! the last committed boundary instead of starting over. Deaths can
+//! target a worker index or (`*`, with a job filter) whichever worker
+//! claims a given job, with a fleet-wide fire budget. The headline
+//! stress gates over this module live in `rust/tests/pool_stress.rs`
+//! and `rust/tests/failure_matrix.rs` and run as dedicated CI jobs.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{ClusterConfig, StageCheckpointer};
 use crate::error::{MareError, Result};
+use crate::storage::{CheckpointStore, KillAfter, MemCheckpoint};
 
 use super::queue::{ClaimOrder, ClaimStats, JobQueue, JobRecord, JobResult, JobStatus, STALE_CLAIM};
 use super::sim::Driver;
@@ -59,13 +68,19 @@ pub trait ServeHooks: Sync {
         false
     }
     /// A fault-injected death fired. `orphaned_running` carries the job
-    /// id left stuck `running` (an [`DeathMode::AfterClaim`] death) so
-    /// a supervisor can force-requeue it; `None` for a mid-claim death,
-    /// whose hold the ordinary stale sweep recovers.
+    /// id left stuck `running` (an [`DeathMode::AfterClaim`] or
+    /// [`DeathMode::MidRun`] death) so a supervisor can force-requeue
+    /// it; `None` for a mid-claim death, whose hold the ordinary stale
+    /// sweep recovers.
     fn died(&self, _worker: usize, _orphaned_running: Option<u64>) {}
+    /// A dying worker reports the container launches it committed
+    /// before a [`DeathMode::MidRun`] death — real work (it is
+    /// checkpointed; a successor will not repeat it) that must reach
+    /// the supervisor's ledger even though the job never finished.
+    fn progressed(&self, _worker: usize, _launches: u64) {}
 }
 
-/// Where in the claim protocol a fault-injected worker dies.
+/// Where in the claim/execute protocol a fault-injected worker dies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DeathMode {
     /// Die between the claim's rename and its commit: the `.claim`
@@ -75,21 +90,44 @@ pub enum DeathMode {
     /// Die right after the claim commits: the job is stuck `running`
     /// with no hold, recoverable only by `mare requeue`.
     AfterClaim,
+    /// Die mid-execution, after `after_stages` stage boundaries have
+    /// committed to the job's checkpoint store. The job is stuck
+    /// `running` like [`DeathMode::AfterClaim`], but real work already
+    /// happened — a successor claiming the requeued job resumes from
+    /// the checkpoint instead of starting over.
+    MidRun { after_stages: u64 },
 }
 
-/// One injected death: worker `worker` dies on its `nth_claim`-th
-/// claim (1-based).
+/// One injected death.
+///
+/// Worker-targeted (`worker: Some(w)`): worker `w` dies on its
+/// `nth_claim`-th claim (1-based), optionally only if that claim is of
+/// job `job`.
+///
+/// Wildcard (`worker: None`, requires `job`): WHICHEVER worker claims
+/// job `job` dies, and `nth_claim` becomes a fire *budget* — the first
+/// `nth_claim` qualifying claims die, later ones survive. This is what
+/// makes "kill the job's claimer K times, then watch attempt K+1"
+/// deterministic without knowing which worker wins each claim race.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Death {
-    pub worker: usize,
+    pub worker: Option<usize>,
     pub nth_claim: u64,
     pub mode: DeathMode,
+    pub job: Option<u64>,
 }
 
 /// The pool's injected deaths — empty in production.
+///
+/// Clones share the wildcard fire budgets (the counters are `Arc`ed),
+/// so handing the same plan to N workers still fires each wildcard
+/// death at most `nth_claim` times fleet-wide.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     pub deaths: Vec<Death>,
+    /// Per-death fire counters, parallel to `deaths` (only wildcard
+    /// deaths consume theirs).
+    spent: Vec<Arc<AtomicU64>>,
 }
 
 impl FaultPlan {
@@ -97,42 +135,140 @@ impl FaultPlan {
         FaultPlan::default()
     }
 
-    /// Parse a `--fault` CLI spec: comma-separated `W:K:hold|running`
-    /// entries — worker W dies on its K-th claim, either holding the
-    /// claim (`hold`, mid-claim) or leaving the job `running`.
+    /// Parse a `--fault` CLI spec: comma-separated
+    /// `TARGET:N:MODE[:jID]` entries.
+    ///
+    /// * `TARGET` — a worker index, or `*` for "whichever worker
+    ///   qualifies" (wildcard deaths REQUIRE a job filter)
+    /// * `N` — the worker's N-th claim (worker-targeted) or the fire
+    ///   budget (wildcard)
+    /// * `MODE` — `hold` (die mid-claim, leaving a `.claim` hold),
+    ///   `running` (die right after the claim commits), or
+    ///   `midrun[@S]` (die mid-execution after committing `S` stage
+    ///   checkpoints; default 1)
+    /// * `jID` — only claims of job ID fire the death. `hold` deaths
+    ///   cannot be job-targeted: they happen before the claim commits,
+    ///   when the job id is still unknown.
+    ///
+    /// Examples: `2:3:hold` — worker 2 dies taking its 3rd claim.
+    /// `*:2:running:j1` — the first two claimers of job 1 die.
+    /// `*:1:midrun@2:j4` — job 4's first claimer dies after
+    /// checkpointing two stages.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut deaths = Vec::new();
         for one in spec.split(',') {
             let one = one.trim();
             let err = || {
                 MareError::Config(format!(
-                    "bad fault `{one}` (want worker:nth-claim:hold|running, e.g. 2:3:hold)"
+                    "bad fault `{one}` (want worker|*:N:hold|running|midrun[@S][:jID], \
+                     e.g. 2:3:hold or *:2:running:j1)"
                 ))
             };
             let parts: Vec<&str> = one.split(':').collect();
-            let [w, k, m] = parts.as_slice() else {
-                return Err(err());
+            let (w, k, m, j) = match parts.as_slice() {
+                [w, k, m] => (*w, *k, *m, None),
+                [w, k, m, j] => (*w, *k, *m, Some(*j)),
+                _ => return Err(err()),
             };
-            let worker = w.parse().map_err(|_| err())?;
+            let worker = if w == "*" { None } else { Some(w.parse().map_err(|_| err())?) };
             let nth_claim: u64 = k.parse().map_err(|_| err())?;
             if nth_claim == 0 {
                 return Err(err());
             }
-            let mode = match *m {
+            let mode = match m {
                 "hold" => DeathMode::MidClaim,
                 "running" => DeathMode::AfterClaim,
-                _ => return Err(err()),
+                _ => {
+                    let rest = m.strip_prefix("midrun").ok_or_else(err)?;
+                    let after_stages = match rest.strip_prefix('@') {
+                        Some(n) => n.parse().map_err(|_| err())?,
+                        None if rest.is_empty() => 1,
+                        None => return Err(err()),
+                    };
+                    if after_stages == 0 {
+                        return Err(err());
+                    }
+                    DeathMode::MidRun { after_stages }
+                }
             };
-            deaths.push(Death { worker, nth_claim, mode });
+            let job = match j {
+                Some(j) => {
+                    Some(j.strip_prefix('j').ok_or_else(err)?.parse().map_err(|_| err())?)
+                }
+                None => None,
+            };
+            if worker.is_none() && job.is_none() {
+                return Err(MareError::Config(format!(
+                    "fault `{one}`: a wildcard death needs a job filter \
+                     (`*:N:mode:jID`) — without one it would kill arbitrary \
+                     claims until the budget ran out"
+                )));
+            }
+            if mode == DeathMode::MidClaim && job.is_some() {
+                return Err(MareError::Config(format!(
+                    "fault `{one}`: `hold` deaths fire BEFORE the claim commits, \
+                     when the job id is unknown — they cannot be job-targeted"
+                )));
+            }
+            deaths.push(Death { worker, nth_claim, mode, job });
         }
-        Ok(FaultPlan { deaths })
+        let spent = deaths.iter().map(|_| Arc::new(AtomicU64::new(0))).collect();
+        Ok(FaultPlan { deaths, spent })
     }
 
-    fn fires(&self, worker: usize, claim_no: u64, mode: DeathMode) -> Option<Death> {
-        self.deaths
-            .iter()
-            .copied()
-            .find(|d| d.worker == worker && d.nth_claim == claim_no && d.mode == mode)
+    /// Pre-claim deaths (`hold`): only worker-targeted entries — the
+    /// job id does not exist yet at this protocol point.
+    fn fires_mid_claim(&self, worker: usize, claim_no: u64) -> Option<Death> {
+        self.deaths.iter().copied().find(|d| {
+            d.mode == DeathMode::MidClaim && d.worker == Some(worker) && d.nth_claim == claim_no
+        })
+    }
+
+    /// Post-claim deaths (the job is known). Worker-targeted entries
+    /// fire on the worker's exact claim number; wildcard entries fire
+    /// while their shared budget lasts (one unit consumed per fire).
+    fn fires_with_job(
+        &self,
+        worker: usize,
+        claim_no: u64,
+        job: u64,
+        want: fn(&DeathMode) -> bool,
+    ) -> Option<Death> {
+        for (i, d) in self.deaths.iter().enumerate() {
+            if !want(&d.mode) {
+                continue;
+            }
+            if d.job.is_some_and(|j| j != job) {
+                continue;
+            }
+            match d.worker {
+                Some(w) => {
+                    if w == worker && d.nth_claim == claim_no {
+                        return Some(*d);
+                    }
+                }
+                None => {
+                    let budget = d.nth_claim;
+                    let won = self.spent[i]
+                        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
+                            (s < budget).then_some(s + 1)
+                        })
+                        .is_ok();
+                    if won {
+                        return Some(*d);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn fires_after_claim(&self, worker: usize, claim_no: u64, job: u64) -> Option<Death> {
+        self.fires_with_job(worker, claim_no, job, |m| *m == DeathMode::AfterClaim)
+    }
+
+    fn fires_mid_run(&self, worker: usize, claim_no: u64, job: u64) -> Option<Death> {
+        self.fires_with_job(worker, claim_no, job, |m| matches!(m, DeathMode::MidRun { .. }))
     }
 }
 
@@ -153,6 +289,11 @@ pub struct PoolConfig {
     pub poll: Duration,
     /// Injected worker deaths (crash-recovery testing).
     pub faults: FaultPlan,
+    /// Root directory for per-job stage checkpoints (usually the
+    /// queue's `checkpoints/` sibling — [`JobQueue::checkpoint_dir`]).
+    /// `None` disables checkpointing: jobs always run from scratch and
+    /// a mid-run death's partial work is lost.
+    pub checkpoints: Option<PathBuf>,
 }
 
 impl PoolConfig {
@@ -163,6 +304,7 @@ impl PoolConfig {
             stale_after: STALE_CLAIM,
             poll: Duration::from_millis(20),
             faults: FaultPlan::none(),
+            checkpoints: None,
         }
     }
 }
@@ -288,18 +430,30 @@ impl WorkerPool {
             return Err(MareError::Submit("worker pool needs at least one worker".into()));
         }
         for death in &self.config.faults.deaths {
-            if death.worker >= self.config.workers {
-                return Err(MareError::Submit(format!(
-                    "fault targets worker {} but the pool has {}",
-                    death.worker, self.config.workers
-                )));
+            if let Some(w) = death.worker {
+                if w >= self.config.workers {
+                    return Err(MareError::Submit(format!(
+                        "fault targets worker {w} but the pool has {}",
+                        self.config.workers
+                    )));
+                }
             }
         }
         // someone must outlive the fault plan, or a held job's sweep
-        // never happens and the pool cannot drain
-        let immortal = (0..self.config.workers)
-            .any(|w| !self.config.faults.deaths.iter().any(|d| d.worker == w));
-        if !immortal {
+        // never happens and the pool cannot drain. Worst case: every
+        // worker-targeted death kills a distinct worker AND every unit
+        // of wildcard budget kills yet another.
+        let doomed: std::collections::HashSet<usize> =
+            self.config.faults.deaths.iter().filter_map(|d| d.worker).collect();
+        let wildcard_budget: u64 = self
+            .config
+            .faults
+            .deaths
+            .iter()
+            .filter(|d| d.worker.is_none())
+            .map(|d| d.nth_claim)
+            .sum();
+        if doomed.len() as u64 + wildcard_budget >= self.config.workers as u64 {
             return Err(MareError::Submit(
                 "fault plan kills every worker — at least one must survive to \
                  recover held jobs"
@@ -374,8 +528,7 @@ fn worker_loop(
         // momentarily-empty scan would advance its claim count past
         // the death and orphan the fault), it only retries the fatal
         // claim until it lands one or the spool drains
-        if let Some(death) = config.faults.fires(idx, report.claimed + 1, DeathMode::MidClaim)
-        {
+        if let Some(death) = config.faults.fires_mid_claim(idx, report.claimed + 1) {
             if let Some(id) = queue.claim_abandon()? {
                 report.died = Some(format!(
                     "died mid-claim #{}, holding job {id}",
@@ -432,7 +585,7 @@ fn worker_loop(
         if let Some(h) = hooks {
             h.claimed(idx, &mut job);
         }
-        if let Some(death) = config.faults.fires(idx, report.claimed, DeathMode::AfterClaim) {
+        if let Some(death) = config.faults.fires_after_claim(idx, report.claimed, job.id) {
             report.died = Some(format!(
                 "died after claim #{} committed, leaving job {} running",
                 death.nth_claim, job.id
@@ -442,7 +595,50 @@ fn worker_loop(
             }
             return Ok((report, finished));
         }
-        let (status, result) = match driver.execute(&job.plan) {
+        // per-job checkpoint store (durable when a checkpoint root is
+        // configured; an in-memory stand-in otherwise, so a mid-run
+        // death still fires deterministically either way)
+        let ckpt_dir =
+            config.checkpoints.as_ref().map(|root| root.join(format!("job-{:06}", job.id)));
+        let midrun = config.faults.fires_mid_run(idx, report.claimed, job.id);
+        let outcome = if ckpt_dir.is_some() || midrun.is_some() {
+            let store: Box<dyn StageCheckpointer> = match &ckpt_dir {
+                Some(dir) => Box::new(CheckpointStore::open(dir, &job.plan)),
+                None => Box::new(MemCheckpoint::new()),
+            };
+            match midrun {
+                Some(death) => {
+                    let DeathMode::MidRun { after_stages } = death.mode else {
+                        unreachable!("fires_mid_run only returns MidRun deaths")
+                    };
+                    let killer = KillAfter::new(store.as_ref(), after_stages as usize);
+                    driver.execute_checkpointed(&job.plan, &killer)
+                }
+                None => driver.execute_checkpointed(&job.plan, store.as_ref()),
+            }
+        } else {
+            driver.execute(&job.plan)
+        };
+        if let Err(MareError::KilledMidRun { stages_done, launches }) = &outcome {
+            let (stages_done, launches) = (*stages_done, *launches);
+            // the fault took this worker mid-execution: the job stays
+            // `running` (requeueable, like AfterClaim), but the partial
+            // launches were REAL, checkpointed work — they go on this
+            // worker's ledger and up to the supervisor, because the
+            // successor will NOT repeat them
+            report.launches += launches;
+            report.died = Some(format!(
+                "died mid-run on job {}, {stages_done} stages checkpointed, \
+                 {launches} launches",
+                job.id
+            ));
+            if let Some(h) = hooks {
+                h.progressed(idx, launches);
+                h.died(idx, Some(job.id));
+            }
+            return Ok((report, finished));
+        }
+        let (status, result) = match outcome {
             Ok(ex) => (
                 JobStatus::Done,
                 JobResult {
@@ -462,6 +658,13 @@ fn worker_loop(
                 },
             ),
         };
+        // a finished job needs no resume state; failed jobs KEEP theirs
+        // (a retry resumes past the stages that did succeed)
+        if status == JobStatus::Done {
+            if let Some(dir) = &ckpt_dir {
+                let _ = std::fs::remove_dir_all(dir);
+            }
+        }
         report.jobs_run += 1;
         report.launches += result.launches;
         let record = queue.finish(job, status, result)?;
@@ -521,19 +724,76 @@ mod tests {
         assert_eq!(plan.deaths.len(), 2);
         assert_eq!(
             plan.deaths[0],
-            Death { worker: 2, nth_claim: 3, mode: DeathMode::MidClaim }
+            Death { worker: Some(2), nth_claim: 3, mode: DeathMode::MidClaim, job: None }
         );
         assert_eq!(
             plan.deaths[1],
-            Death { worker: 0, nth_claim: 1, mode: DeathMode::AfterClaim }
+            Death { worker: Some(0), nth_claim: 1, mode: DeathMode::AfterClaim, job: None }
         );
-        assert_eq!(plan.fires(2, 3, DeathMode::MidClaim), Some(plan.deaths[0]));
-        assert_eq!(plan.fires(2, 3, DeathMode::AfterClaim), None);
-        assert_eq!(plan.fires(1, 3, DeathMode::MidClaim), None);
+        assert_eq!(plan.fires_mid_claim(2, 3), Some(plan.deaths[0]));
+        assert_eq!(plan.fires_mid_claim(2, 2), None);
+        assert_eq!(plan.fires_mid_claim(1, 3), None);
+        // a non-job-filtered `running` death fires whatever job arrives
+        assert_eq!(plan.fires_after_claim(0, 1, 42), Some(plan.deaths[1]));
+        assert_eq!(plan.fires_after_claim(0, 2, 42), None);
 
-        for bad in ["2:3", "x:1:hold", "1:y:hold", "1:0:hold", "1:2:explode", ""] {
+        // the extended grammar: wildcard targets, job filters, midrun
+        let plan = FaultPlan::parse("*:2:running:j1, 1:1:midrun, *:1:midrun@3:j7").unwrap();
+        assert_eq!(
+            plan.deaths[0],
+            Death { worker: None, nth_claim: 2, mode: DeathMode::AfterClaim, job: Some(1) }
+        );
+        assert_eq!(
+            plan.deaths[1],
+            Death {
+                worker: Some(1),
+                nth_claim: 1,
+                mode: DeathMode::MidRun { after_stages: 1 },
+                job: None
+            }
+        );
+        assert_eq!(
+            plan.deaths[2],
+            Death {
+                worker: None,
+                nth_claim: 1,
+                mode: DeathMode::MidRun { after_stages: 3 },
+                job: Some(7)
+            }
+        );
+        // job filters screen out other jobs
+        assert_eq!(plan.fires_after_claim(0, 5, 2), None);
+        assert!(plan.fires_mid_run(3, 9, 7).is_some());
+        assert_eq!(plan.fires_mid_run(3, 9, 8), None);
+
+        for bad in [
+            "2:3",
+            "x:1:hold",
+            "1:y:hold",
+            "1:0:hold",
+            "1:2:explode",
+            "",
+            "*:1:running",      // wildcard without a job filter
+            "*:1:hold:j2",      // hold cannot be job-targeted
+            "1:1:hold:j2",      // (either way)
+            "1:1:midrun@0",     // zero stages makes no mid-run point
+            "1:1:midrun@x",
+            "1:1:midrunner",
+            "1:1:running:2",    // job filter must be jN
+            "*:0:running:j1",   // zero budget
+        ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
         }
+    }
+
+    #[test]
+    fn wildcard_budgets_are_shared_across_clones_and_exhaust() {
+        let plan = FaultPlan::parse("*:2:running:j5").unwrap();
+        let clone = plan.clone();
+        assert!(plan.fires_after_claim(0, 1, 5).is_some());
+        assert!(clone.fires_after_claim(3, 7, 5).is_some(), "clones share the budget");
+        assert!(plan.fires_after_claim(1, 2, 5).is_none(), "budget exhausted");
+        assert!(clone.fires_after_claim(1, 2, 5).is_none());
     }
 
     #[test]
@@ -548,8 +808,14 @@ mod tests {
         cfg.faults = FaultPlan::parse("5:1:hold").unwrap();
         assert!(WorkerPool::new(cfg).run(&q).unwrap_err().to_string().contains("worker 5"));
 
-        let mut cfg = PoolConfig::new(2, cluster);
+        let mut cfg = PoolConfig::new(2, cluster.clone());
         cfg.faults = FaultPlan::parse("0:1:hold,1:1:running").unwrap();
+        let err = WorkerPool::new(cfg).run(&q).unwrap_err().to_string();
+        assert!(err.contains("at least one must survive"), "{err}");
+
+        // wildcard budgets count toward the same immortality guarantee
+        let mut cfg = PoolConfig::new(2, cluster);
+        cfg.faults = FaultPlan::parse("*:2:running:j1").unwrap();
         let err = WorkerPool::new(cfg).run(&q).unwrap_err().to_string();
         assert!(err.contains("at least one must survive"), "{err}");
     }

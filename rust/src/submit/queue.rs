@@ -111,6 +111,41 @@ impl JobStatus {
     }
 }
 
+/// One recorded failed attempt: who was executing (or holding) the job
+/// and what went wrong. Accumulated on the spool record so a job that
+/// reaches the dead-letter queue carries its full failure history.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobFailure {
+    /// Unix millis when the failure was recorded.
+    pub at_ms: u64,
+    /// The worker/driver involved (e.g. `serve-2`), or the supervisor
+    /// that recovered the orphan.
+    pub worker: String,
+    /// What happened: the execution error, or the death note.
+    pub detail: String,
+}
+
+impl JobFailure {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_ms", Json::Num(self.at_ms as f64)),
+            ("worker", Json::str(self.worker.as_str())),
+            ("detail", Json::str(self.detail.as_str())),
+        ])
+    }
+
+    pub fn from_json(json: &Json) -> Result<JobFailure> {
+        Ok(JobFailure {
+            at_ms: match json.get("at_ms") {
+                None | Some(Json::Null) => 0,
+                Some(v) => v.as_u64()?,
+            },
+            worker: json.req("worker")?.as_str()?.to_string(),
+            detail: json.req("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
 /// Execution outcome recorded by the driver that ran the job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
@@ -149,6 +184,17 @@ pub struct JobRecord {
     /// the claim committed — the fair-share audit trail. In-memory
     /// between claim and finish; never set by one-shot claims.
     pub claim_seq: Option<u64>,
+    /// Execution attempts consumed so far: incremented by every claim
+    /// commit, reset by `mare dlq retry` (a fresh lease). Legacy spool
+    /// files read back as 0 — absent means zero, and zero is never
+    /// written, so records without attempts stay byte-stable through
+    /// transitions that don't touch the counter.
+    pub attempts: u64,
+    /// Per-attempt failure context (execution errors, worker-death
+    /// notes), appended as failures happen and preserved through
+    /// requeues — what `mare dlq show` surfaces. Legacy spool files
+    /// read back as empty.
+    pub failures: Vec<JobFailure>,
     /// The canonical v1 plan envelope, exactly as admitted.
     pub plan: Json,
     /// Present once a driver has executed (or failed) the job.
@@ -170,7 +216,7 @@ impl JobRecord {
             Some(n) => Json::Num(n as f64),
             None => Json::Null,
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("status", Json::str(self.status.name())),
             ("summary", Json::str(self.summary.as_str())),
@@ -179,9 +225,21 @@ impl JobRecord {
             ("stamp_ms", Json::Num(self.stamp_ms as f64)),
             ("claimed_ms", opt_num(self.claimed_ms)),
             ("claim_seq", opt_num(self.claim_seq)),
-            ("plan", self.plan.clone()),
-            ("result", result),
-        ])
+        ];
+        // absent-means-zero: never write an empty counter/history, so a
+        // legacy record's bytes survive transitions that don't own them
+        if self.attempts > 0 {
+            fields.push(("attempts", Json::Num(self.attempts as f64)));
+        }
+        if !self.failures.is_empty() {
+            fields.push((
+                "failures",
+                Json::arr(self.failures.iter().map(JobFailure::to_json)),
+            ));
+        }
+        fields.push(("plan", self.plan.clone()));
+        fields.push(("result", result));
+        Json::obj(fields)
     }
 
     pub fn from_json(json: &Json) -> Result<JobRecord> {
@@ -218,6 +276,15 @@ impl JobRecord {
             stamp_ms: opt_num("stamp_ms")?.unwrap_or(0),
             claimed_ms: opt_num("claimed_ms")?,
             claim_seq: opt_num("claim_seq")?,
+            attempts: opt_num("attempts")?.unwrap_or(0),
+            failures: match json.get("failures") {
+                None | Some(Json::Null) => Vec::new(),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(JobFailure::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            },
             plan: json.req("plan")?.clone(),
             result,
         })
@@ -323,18 +390,23 @@ impl JobQueue {
     }
 
     /// Highest id present in the spool under ANY state — canonical,
-    /// reservation marker, claim hold, or temp — so ids are never
-    /// reused while a job's file is temporarily renamed aside.
+    /// reservation marker, claim hold, temp, or dead-lettered — so ids
+    /// are never reused while a job's file is temporarily renamed aside
+    /// (and a `dlq retry` never collides with a later submission).
     fn max_spool_id(&self) -> Result<u64> {
         let mut max = 0;
-        for entry in fs::read_dir(&self.dir)? {
-            let name = entry?.file_name();
-            let name = name.to_string_lossy();
-            if let Some(rest) = name.strip_prefix("job-") {
-                let digits: String =
-                    rest.chars().take_while(|c| c.is_ascii_digit()).collect();
-                if let Ok(id) = digits.parse::<u64>() {
-                    max = max.max(id);
+        let dlq = self.dlq_dir();
+        let dirs = [Some(self.dir.as_path()), dlq.exists().then_some(dlq.as_path())];
+        for dir in dirs.into_iter().flatten() {
+            for entry in fs::read_dir(dir)? {
+                let name = entry?.file_name();
+                let name = name.to_string_lossy();
+                if let Some(rest) = name.strip_prefix("job-") {
+                    let digits: String =
+                        rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                    if let Ok(id) = digits.parse::<u64>() {
+                        max = max.max(id);
+                    }
                 }
             }
         }
@@ -414,6 +486,8 @@ impl JobQueue {
             stamp_ms: now_millis(),
             claimed_ms: None,
             claim_seq: None,
+            attempts: 0,
+            failures: Vec::new(),
             plan,
             result: None,
         };
@@ -545,6 +619,10 @@ impl JobQueue {
         let claim_instant = now_millis();
         job.stamp_ms = claim_instant;
         job.claimed_ms = Some(claim_instant);
+        // every claim commit consumes one attempt — the dead-letter
+        // gate counts leases handed out, not just recorded errors, so
+        // a worker that dies holding the lease still burned one
+        job.attempts += 1;
         // commit by renames only: the Running record lands in the
         // hold atomically (temp+rename), then the hold moves back
         // to the canonical path, consuming it. After the commit no
@@ -625,8 +703,17 @@ impl JobQueue {
         result: JobResult,
     ) -> Result<JobRecord> {
         job.status = status;
-        job.result = Some(result);
         job.stamp_ms = now_millis();
+        // a failed execution is one recorded failure context — the
+        // dead-letter queue's evidence trail accumulates here
+        if status == JobStatus::Failed {
+            job.failures.push(JobFailure {
+                at_ms: job.stamp_ms,
+                worker: result.driver.clone(),
+                detail: result.detail.clone(),
+            });
+        }
+        job.result = Some(result);
         self.write(&job)?;
         Ok(job)
     }
@@ -650,6 +737,21 @@ impl JobQueue {
     /// writing. `force` skips the liveness gate — the operator insisting
     /// the claiming worker is dead, accepting a double execution if not.
     pub fn requeue_with(&self, id: u64, min_age: Duration, force: bool) -> Result<JobRecord> {
+        self.requeue_noting(id, min_age, force, None)
+    }
+
+    /// [`Self::requeue_with`] that also appends a failure context to the
+    /// record's history — how a supervisor recovering a dead worker's
+    /// orphan charges the death against the job's attempt budget. The
+    /// existing attempt counter and failure history always survive the
+    /// requeue (only the fields a requeue owns are rewritten).
+    pub fn requeue_noting(
+        &self,
+        id: u64,
+        min_age: Duration,
+        force: bool,
+        note: Option<JobFailure>,
+    ) -> Result<JobRecord> {
         let path = self.path_of(id);
         // stamped name: a racing sweep sees OUR hold as fresh (see
         // hold_path), while the held file keeps the record's mtime
@@ -725,11 +827,149 @@ impl JobQueue {
         job.stamp_ms = now_millis();
         job.claimed_ms = None;
         job.claim_seq = None;
+        if let Some(note) = note {
+            job.failures.push(note);
+        }
         self.persist_at(&job, &hold)?;
         // consume the hold; if a sweeper beat us to this rename, it
         // moved our committed Queued copy to the canonical path itself,
         // so the requeue still landed
         let _ = fs::rename(&hold, &path);
+        Ok(job)
+    }
+
+    // ------------------------------------------------- dead-letter queue
+
+    /// The dead-letter spool: a `dlq/` subdirectory of the queue, same
+    /// one-JSON-file-per-job layout. A job lands here when its attempt
+    /// counter reaches the service's `max_attempts` budget; it leaves
+    /// only via [`Self::dlq_retry`].
+    pub fn dlq_dir(&self) -> PathBuf {
+        self.dir.join("dlq")
+    }
+
+    fn dlq_path(&self, id: u64) -> PathBuf {
+        self.dlq_dir().join(format!("job-{id:06}.json"))
+    }
+
+    /// Where a job's stage checkpoints live (see
+    /// `storage::checkpoint::CheckpointStore` — the layout is shared so
+    /// the queue can drop a job's checkpoint state when the job leaves
+    /// the live spool).
+    pub fn checkpoint_dir(&self) -> PathBuf {
+        self.dir.join("checkpoints")
+    }
+
+    fn clear_checkpoints(&self, id: u64) {
+        let _ = fs::remove_dir_all(self.checkpoint_dir().join(format!("job-{id:06}")));
+    }
+
+    /// Move an exhausted job out of the live spool into `dlq/`, via the
+    /// same rename-locked protocol as a claim: the canonical file moves
+    /// to a stamped hold (one winner), is verified not to be mid-flight
+    /// `running`, then renames into the dead-letter spool. The record's
+    /// BYTES are untouched — dead-lettering is purely a relocation, so
+    /// the attempt counter and failure history arrive exactly as the
+    /// last transition persisted them. A crash between the two renames
+    /// leaves only the hold, which the ordinary stale sweep returns to
+    /// the live spool — the job is dead-lettered again on the next
+    /// sweep, never lost and never duplicated.
+    pub fn dead_letter(&self, id: u64) -> Result<JobRecord> {
+        let path = self.path_of(id);
+        let hold = self.hold_path(id);
+        if fs::rename(&path, &hold).is_err() {
+            return Err(MareError::Submit(format!(
+                "job {id}: not movable to the dead-letter queue right now (claimed, \
+                 already dead-lettered, or not in spool {})",
+                self.dir.display()
+            )));
+        }
+        let text = match fs::read_to_string(&hold) {
+            Ok(text) => text,
+            Err(_) => {
+                return Err(MareError::Submit(format!(
+                    "job {id} was swept back to the queue concurrently — retry"
+                )))
+            }
+        };
+        let job = match Json::parse(&text).and_then(|j| JobRecord::from_json(&j)) {
+            Ok(job) => job,
+            Err(e) => {
+                let _ = fs::rename(&hold, &path);
+                return Err(e);
+            }
+        };
+        if job.status == JobStatus::Running {
+            let _ = fs::rename(&hold, &path);
+            return Err(MareError::Submit(format!(
+                "job {id} is running — requeue it before dead-lettering"
+            )));
+        }
+        fs::create_dir_all(self.dlq_dir())?;
+        fs::rename(&hold, self.dlq_path(id))?;
+        self.clear_checkpoints(id);
+        Ok(job)
+    }
+
+    /// All dead-lettered jobs, sorted by id.
+    pub fn dlq_list(&self) -> Result<Vec<JobRecord>> {
+        if !self.dlq_dir().exists() {
+            return Ok(Vec::new());
+        }
+        let mut jobs = Vec::new();
+        for entry in fs::read_dir(self.dlq_dir())? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if !(name.starts_with("job-") && name.ends_with(".json")) {
+                continue;
+            }
+            let text = match fs::read_to_string(entry.path()) {
+                Ok(text) => text,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            };
+            let json = Json::parse(&text)
+                .map_err(|e| MareError::Submit(format!("dlq file {name}: {e}")))?;
+            jobs.push(JobRecord::from_json(&json)?);
+        }
+        jobs.sort_by_key(|j| j.id);
+        Ok(jobs)
+    }
+
+    pub fn dlq_get(&self, id: u64) -> Result<JobRecord> {
+        let text = fs::read_to_string(self.dlq_path(id))
+            .map_err(|e| MareError::Submit(format!("dlq job {id}: {e}")))?;
+        let json = Json::parse(&text)?;
+        JobRecord::from_json(&json)
+    }
+
+    /// Send a dead-lettered job back to the live spool with a fresh
+    /// lease: status `queued`, result cleared, attempt counter reset to
+    /// zero (the operator explicitly granted a new budget). The failure
+    /// HISTORY is preserved — a redriven job keeps its evidence trail.
+    /// Rename-locked like every other transition: the dlq file moves to
+    /// a hold in the live spool, the rewrite lands in the hold, and the
+    /// final rename publishes it; a crash mid-way leaves a hold the
+    /// stale sweep returns to the live spool.
+    pub fn dlq_retry(&self, id: u64) -> Result<JobRecord> {
+        let hold = self.hold_path(id);
+        if fs::rename(self.dlq_path(id), &hold).is_err() {
+            return Err(MareError::Submit(format!(
+                "job {id}: not in the dead-letter queue of spool {}",
+                self.dir.display()
+            )));
+        }
+        let text = fs::read_to_string(&hold)?;
+        let mut job = Json::parse(&text).and_then(|j| JobRecord::from_json(&j))?;
+        job.status = JobStatus::Queued;
+        job.result = None;
+        job.stamp_ms = now_millis();
+        job.claimed_ms = None;
+        job.claim_seq = None;
+        job.attempts = 0;
+        self.persist_at(&job, &hold)?;
+        let _ = fs::rename(&hold, self.path_of(id));
         Ok(job)
     }
 }
@@ -783,6 +1023,41 @@ pub fn render_jobs_table(jobs: &[JobRecord], now_ms: u64) -> String {
                 out.push_str(&format!("{:>6}  {}\n", "", r.detail));
             }
         }
+    }
+    out
+}
+
+/// Tenant scoping for `mare jobs --tenant <t>`: `None` keeps every job.
+pub fn filter_tenant(jobs: Vec<JobRecord>, tenant: Option<&str>) -> Vec<JobRecord> {
+    match tenant {
+        None => jobs,
+        Some(t) => jobs.into_iter().filter(|j| j.tenant == t).collect(),
+    }
+}
+
+/// The `mare dlq list` table: attempt budget spent and the most recent
+/// failure context per dead-lettered job (the full history is one
+/// `mare dlq show <id>` away).
+pub fn render_dlq_table(jobs: &[JobRecord], now_ms: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>6}  {:>8}{:>6}  {:<10}{}\n",
+        "ID", "ATTEMPTS", "AGE", "TENANT", "LAST FAILURE"
+    ));
+    for job in jobs {
+        let last = job
+            .failures
+            .last()
+            .map(|f| format!("{}: {}", f.worker, f.detail))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:>6}  {:>8}{:>6}  {:<10}{}\n",
+            job.id,
+            job.attempts,
+            fmt_age(now_ms, job.stamp_ms),
+            job.tenant,
+            last
+        ));
     }
     out
 }
@@ -969,6 +1244,12 @@ mod tests {
             stamp_ms: 1_700_000_000_123,
             claimed_ms: Some(1_700_000_000_100),
             claim_seq: Some(41),
+            attempts: 2,
+            failures: vec![JobFailure {
+                at_ms: 1_700_000_000_050,
+                worker: "driver-0".into(),
+                detail: "container: image not found".into(),
+            }],
             plan: plan(),
             result: Some(JobResult {
                 driver: "driver-1".into(),
@@ -987,6 +1268,8 @@ mod tests {
         assert_eq!(back.stamp_ms, 1_700_000_000_123);
         assert_eq!(back.claimed_ms, Some(1_700_000_000_100));
         assert_eq!(back.claim_seq, Some(41));
+        assert_eq!(back.attempts, 2);
+        assert_eq!(back.failures, rec.failures);
 
         assert!(JobStatus::parse("zombie").is_err());
         for s in [JobStatus::Queued, JobStatus::Running, JobStatus::Done, JobStatus::Failed] {
@@ -1011,6 +1294,13 @@ mod tests {
         assert_eq!(rec.stamp_ms, 0);
         assert_eq!(rec.claimed_ms, None);
         assert_eq!(rec.claim_seq, None);
+        assert_eq!(rec.attempts, 0);
+        assert!(rec.failures.is_empty());
+        // absent-means-zero both ways: re-encoding a legacy record does
+        // not materialize empty attempt fields
+        let encoded = rec.to_json();
+        assert!(encoded.get("attempts").is_none(), "{encoded}");
+        assert!(encoded.get("failures").is_none(), "{encoded}");
     }
 
     #[test]
@@ -1077,6 +1367,8 @@ mod tests {
             stamp_ms,
             claimed_ms: None,
             claim_seq: None,
+            attempts: 0,
+            failures: Vec::new(),
             plan: plan(),
             result,
         };
@@ -1112,5 +1404,131 @@ mod tests {
         assert_eq!(fmt_age(now, now - 90 * 60 * 1000), "90m");
         assert_eq!(fmt_age(now, now - 3 * 86_400_000), "3d");
         assert_eq!(fmt_age(now, now + 5_000), "-", "future stamps (clock skew) render '-'");
+    }
+
+    /// `mare jobs --tenant` is a pure view: filtering then rendering
+    /// shows exactly the tenant's rows, with the same columns as the
+    /// unfiltered table.
+    #[test]
+    fn jobs_table_filters_by_tenant() {
+        let q = tmp_queue("tenant-filter");
+        for tenant in ["alpha", "beta", "alpha"] {
+            q.submit_meta(plan(), format!("{tenant} job"), tenant, 0).unwrap();
+        }
+        let all = q.list().unwrap();
+        assert_eq!(filter_tenant(all.clone(), None).len(), 3);
+        let alpha = filter_tenant(all.clone(), Some("alpha"));
+        assert_eq!(alpha.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(filter_tenant(all, Some("nobody")).is_empty());
+
+        let table = render_jobs_table(&alpha, now_millis());
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 alpha rows:\n{table}");
+        assert!(lines[1].contains("alpha") && lines[2].contains("alpha"), "{table}");
+        assert!(!table.contains("beta"), "{table}");
+    }
+
+    /// Claims consume attempts; failures accumulate context; requeues
+    /// preserve both; `dead_letter` is a pure relocation and
+    /// `dlq_retry` grants a fresh lease (counter reset, history kept).
+    #[test]
+    fn attempts_accumulate_and_dead_letter_round_trips() {
+        let q = tmp_queue("dlq");
+        let id = q.submit(plan(), "poison".into()).unwrap();
+        assert_eq!(q.get(id).unwrap().attempts, 0);
+
+        for attempt in 1..=2u64 {
+            let job = q.claim().unwrap().unwrap();
+            assert_eq!(job.attempts, attempt, "each claim consumes one attempt");
+            let failed = q
+                .finish(
+                    job,
+                    JobStatus::Failed,
+                    JobResult {
+                        driver: format!("d{attempt}"),
+                        launches: 0,
+                        records: 0,
+                        detail: "tool not found: frobnicate".into(),
+                    },
+                )
+                .unwrap();
+            assert_eq!(failed.failures.len(), attempt as usize);
+            if attempt < 2 {
+                let requeued = q.requeue_with(id, Duration::ZERO, false).unwrap();
+                // requeue owns status/result/claim stamps — NOT the
+                // attempt counter or the failure history
+                assert_eq!(requeued.attempts, attempt);
+                assert_eq!(requeued.failures.len(), attempt as usize);
+            }
+        }
+
+        // dead-letter: record relocates byte-identically
+        let before = fs::read_to_string(q.path_of(id)).unwrap();
+        let dead = q.dead_letter(id).unwrap();
+        assert_eq!(dead.attempts, 2);
+        assert_eq!(dead.failures.len(), 2);
+        assert!(q.get(id).is_err(), "gone from the live spool");
+        assert!(q.list().unwrap().is_empty());
+        assert_eq!(q.dlq_list().unwrap().len(), 1);
+        let after = fs::read_to_string(q.dlq_dir().join(format!("job-{id:06}.json"))).unwrap();
+        assert_eq!(before, after, "dead-lettering never rewrites the record");
+        assert!(q.dead_letter(id).is_err(), "already dead-lettered");
+
+        // ids stay reserved while the job sits in dlq/
+        let next = q.submit(plan(), "later".into()).unwrap();
+        assert!(next > id, "dlq ids must not be reused, got {next}");
+
+        // the dlq table shows the budget spent and the last context
+        let table = render_dlq_table(&q.dlq_list().unwrap(), now_millis());
+        assert!(table.contains("ATTEMPTS"), "{table}");
+        assert!(table.contains("frobnicate"), "{table}");
+
+        // retry: fresh lease, history intact, claimable again
+        let retried = q.dlq_retry(id).unwrap();
+        assert_eq!(retried.status, JobStatus::Queued);
+        assert_eq!(retried.attempts, 0);
+        assert_eq!(retried.failures.len(), 2);
+        assert!(retried.result.is_none());
+        assert!(q.dlq_list().unwrap().is_empty());
+        assert!(q.dlq_retry(id).is_err(), "no longer in the dlq");
+        let claimed = q.claim_with_stats_ordered(None).unwrap().0.unwrap();
+        assert_eq!((claimed.id, claimed.attempts), (id, 1));
+    }
+
+    #[test]
+    fn dead_letter_refuses_running_jobs() {
+        let q = tmp_queue("dlq-running");
+        let id = q.submit(plan(), "live".into()).unwrap();
+        q.claim().unwrap().unwrap();
+        let err = q.dead_letter(id).unwrap_err().to_string();
+        assert!(err.contains("running"), "{err}");
+        assert_eq!(q.get(id).unwrap().status, JobStatus::Running, "restored intact");
+    }
+
+    /// An orphan requeue charges the death against the job's budget:
+    /// the supervisor's failure note lands in the history and the
+    /// claim-time attempt survives.
+    #[test]
+    fn requeue_noting_appends_the_death_context() {
+        let q = tmp_queue("requeue-noting");
+        let id = q.submit(plan(), "orphan".into()).unwrap();
+        let job = q.claim().unwrap().unwrap();
+        assert_eq!(job.attempts, 1);
+        let requeued = q
+            .requeue_noting(
+                id,
+                Duration::ZERO,
+                true,
+                Some(JobFailure {
+                    at_ms: now_millis(),
+                    worker: "serve-3".into(),
+                    detail: "worker died leaving job running".into(),
+                }),
+            )
+            .unwrap();
+        assert_eq!(requeued.status, JobStatus::Queued);
+        assert_eq!(requeued.attempts, 1);
+        assert_eq!(requeued.failures.len(), 1);
+        assert!(requeued.failures[0].detail.contains("died"), "{:?}", requeued.failures);
     }
 }

@@ -65,10 +65,10 @@ impl Driver {
         &self.cluster
     }
 
-    /// Decode, rebuild and execute an encoded plan on THIS driver:
-    /// materialize the source from the ingest label, re-run validation,
-    /// the optimizer and the lowering, then run the job.
-    pub fn execute(&self, envelope: &Json) -> Result<Executed> {
+    /// Decode and rebuild an encoded plan into a runnable job on THIS
+    /// driver: materialize the source from the ingest label, re-run
+    /// validation, the optimizer and the lowering.
+    fn prepare(&self, envelope: &Json) -> Result<crate::mare::Job> {
         let pipeline = wire::decode(envelope)?;
         let (label, partitions) = ingest_of(&pipeline)?;
         let spec = SourceSpec::parse(&label);
@@ -81,16 +81,47 @@ impl Driver {
             Some(reference) => Self::assemble(&self.config, Some(&reference)),
             None => self.cluster.clone(),
         };
-        let job = MaRe::source(cluster, source).append_pipeline(&pipeline).build()?;
-        let out = job.run()?;
+        MaRe::source(cluster, source).append_pipeline(&pipeline).build()
+    }
+
+    fn executed(job: &crate::mare::Job, out: &crate::cluster::RunOutput) -> Executed {
         let records = out.partitions.iter().map(|p| p.records.len() as u64).sum();
         let local_tasks = out.report.stages.iter().map(|s| s.local_tasks as u64).sum();
-        Ok(Executed {
+        Executed {
             explain: job.explain(),
             launches: job.container_launches(),
             records,
             local_tasks,
-        })
+        }
+    }
+
+    /// Decode, rebuild and execute an encoded plan on THIS driver.
+    pub fn execute(&self, envelope: &Json) -> Result<Executed> {
+        let job = self.prepare(envelope)?;
+        let out = job.run()?;
+        Ok(Self::executed(&job, &out))
+    }
+
+    /// [`Self::execute`] through a stage checkpointer: completed stage
+    /// boundaries persist as the run progresses, and a previous
+    /// attempt's durable state seeds this run past the stages it
+    /// already finished. A [`MareError::KilledMidRun`] abort is
+    /// re-raised carrying the job's REAL launch counter — the partial
+    /// work is real and a successor must not be billed for it twice.
+    pub fn execute_checkpointed(
+        &self,
+        envelope: &Json,
+        ckpt: &dyn crate::cluster::StageCheckpointer,
+    ) -> Result<Executed> {
+        let job = self.prepare(envelope)?;
+        match job.run_checkpointed(ckpt) {
+            Ok(out) => Ok(Self::executed(&job, &out)),
+            Err(MareError::KilledMidRun { stages_done, .. }) => Err(MareError::KilledMidRun {
+                stages_done,
+                launches: job.container_launches(),
+            }),
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -160,6 +191,46 @@ pub fn crosscheck_threaded(envelope: &Json, drivers: &[Driver]) -> Result<Vec<Ex
     })
 }
 
+/// The determinism contract extended to CRASH RECOVERY. Driver
+/// `drivers[0]` runs the plan through a checkpointer that is killed
+/// after `after_stages` committed stage boundaries; `drivers[1]` (the
+/// "successor" claiming the dead driver's job) resumes from the durable
+/// state; `drivers[0]` also runs the plan uninterrupted on a fresh job.
+/// Returns `(partial_launches, resumed, uninterrupted)`.
+///
+/// Callers assert the recovery contract:
+/// * `resumed.explain == uninterrupted.explain` (byte-identical plans)
+/// * `resumed.records == uninterrupted.records` (identical output)
+/// * `resumed.launches < uninterrupted.launches` (checkpointed stages
+///   were NOT re-run)
+/// * `partial_launches + resumed.launches == uninterrupted.launches`
+///   (stage-level exactly-once: every launch happened on exactly one
+///   attempt)
+pub fn crosscheck_resumed(
+    envelope: &Json,
+    drivers: &[Driver],
+    after_stages: usize,
+) -> Result<(u64, Executed, Executed)> {
+    if drivers.len() < 2 {
+        return Err(MareError::Submit("crosscheck_resumed needs two drivers".into()));
+    }
+    let store = crate::storage::MemCheckpoint::new();
+    let killer = crate::storage::KillAfter::new(&store, after_stages);
+    let partial = match drivers[0].execute_checkpointed(envelope, &killer) {
+        Err(MareError::KilledMidRun { launches, .. }) => launches,
+        Ok(_) => {
+            return Err(MareError::Submit(format!(
+                "kill after {after_stages} stages never fired — the plan has too few stages \
+                 for a mid-run death"
+            )))
+        }
+        Err(e) => return Err(e),
+    };
+    let resumed = drivers[1].execute_checkpointed(envelope, &store)?;
+    let uninterrupted = drivers[0].execute(envelope)?;
+    Ok((partial, resumed, uninterrupted))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +283,33 @@ mod tests {
             assert_eq!(run.explain, home_explain);
             assert_eq!(run.launches, runs[0].launches);
         }
+    }
+
+    #[test]
+    fn a_resumed_run_matches_an_uninterrupted_one() {
+        let (text, home_explain) = gc_plan_built_on_driver_a();
+        let envelope = Json::parse(&text).unwrap();
+        let drivers = two_drivers();
+        let (partial, resumed, full) = crosscheck_resumed(&envelope, &drivers, 1).unwrap();
+        // the successor produced the SAME job as an uninterrupted run
+        assert_eq!(resumed.explain, full.explain);
+        assert_eq!(resumed.explain, home_explain);
+        assert_eq!(resumed.records, full.records);
+        // ...but skipped the checkpointed stage's containers
+        assert!(partial > 0, "the killed attempt did real work");
+        assert!(
+            resumed.launches < full.launches,
+            "resume must not re-run committed stages: {} vs {}",
+            resumed.launches,
+            full.launches
+        );
+        // stage-level exactly-once: every launch on exactly one attempt
+        assert_eq!(partial + resumed.launches, full.launches);
+
+        assert!(crosscheck_resumed(&envelope, &drivers[..1], 1).is_err());
+        // more boundaries than the plan has stages: the kill never
+        // fires and the harness reports it instead of "passing"
+        assert!(crosscheck_resumed(&envelope, &drivers, 99).is_err());
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Cross-process failure matrix — the headline gate for the dead-letter
+//! queue and checkpointed resume (ISSUE 7; run in release by the
+//! `stress` CI matrix).
+//!
+//! The REAL `mare` binary serves a spool seeded with one job per cell
+//! of the (death mode × attempt count × resume point) matrix, with a
+//! fault plan that kills whichever worker claims each targeted job:
+//!
+//! * job 1 — killed `running` twice (the full `--max-attempts 2`
+//!   budget): must land in `dlq/` with BOTH death contexts on the
+//!   record, then re-run exactly once via the real `mare dlq retry`
+//! * job 2 — killed mid-run after 1 committed stage: the successor
+//!   must resume from the checkpoint, finishing with strictly fewer
+//!   launches than a from-scratch run
+//! * job 3 — same plan, killed after 2 committed stages: resumes even
+//!   later, so its final attempt launches strictly less than job 2's
+//! * job 4 — a poison plan that fails every attempt: auto-retried
+//!   once, then dead-lettered with one execution-failure context per
+//!   attempt (it stays in the DLQ; `mare dlq show` surfaces the trail)
+//! * job 5 — killed `running` once, below the budget: auto-retried and
+//!   finished exactly once
+//! * job 6 — an untouched control job (different tenant, exercising
+//!   `mare jobs --tenant` through the real binary)
+//!
+//! Audits, both ways like `serve_stress.rs`, extended to resumed jobs:
+//! every finished record's launches+records agree with the
+//! single-driver reference (for resumed jobs the FINAL attempt is
+//! strictly cheaper), and the summed per-worker launch counters from
+//! the daemon's final snapshot — which include the partial launches
+//! the mid-run victims committed before dying — equal the references
+//! exactly: checkpointed work is never repeated and never lost.
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mare::cluster::ClusterConfig;
+use mare::serve::{self, STATS_FILE};
+use mare::submit::{Driver, JobQueue, JobStatus, Submitter};
+use mare::util::json::Json;
+
+/// The one cluster shape everything in this test runs — including the
+/// subprocess daemon's (`--config` pins workers/vcpus; the CLI default
+/// `--seed` is 42, so the reference must use 42 too).
+fn shape() -> ClusterConfig {
+    let mut config = ClusterConfig::sized(2, 2);
+    config.seed = 42;
+    config
+}
+
+fn spool(name: &str) -> JobQueue {
+    let dir = std::env::temp_dir()
+        .join(format!("mare-failure-matrix-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    JobQueue::open(dir).unwrap()
+}
+
+/// A 3-stage plan (map over 4 partitions, then a depth-2 tree reduce),
+/// so `midrun@1` and `midrun@2` kill at genuinely different resume
+/// points with real work left to do after each.
+fn multistage_plan(tenant: &str) -> String {
+    format!(
+        r#"{{
+          "version": 1,
+          "tenant": "{tenant}",
+          "ops": [
+            {{"op": "ingest", "label": "gen:gc:16", "partitions": 4}},
+            {{"op": "map", "image": "ubuntu",
+             "command": "grep -o '[GC]' /dna | wc -l > /count",
+             "input": {{"kind": "text", "path": "/dna"}},
+             "output": {{"kind": "text", "path": "/count"}}}},
+            {{"op": "reduce", "image": "ubuntu",
+             "command": "awk '{{s+=$1}} END {{print s}}' /counts > /sum",
+             "input": {{"kind": "text", "path": "/counts"}},
+             "output": {{"kind": "text", "path": "/sum"}},
+             "depth": 2}},
+            {{"op": "collect"}}
+          ]
+        }}"#
+    )
+}
+
+/// Admits fine (the tool name is free text at validation time) but
+/// fails every execution: `frobnicate` is in no simulated image.
+fn poison_plan(tenant: &str) -> String {
+    multistage_plan(tenant).replace(
+        "grep -o '[GC]' /dna | wc -l > /count",
+        "frobnicate /dna > /count",
+    )
+}
+
+/// Kills the daemon on test panic so a failed assertion never leaves a
+/// resident subprocess wedged in CI.
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_until<F: FnMut() -> bool>(what: &str, timeout: Duration, mut done: F) {
+    let start = Instant::now();
+    while !done() {
+        assert!(start.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn mare_cmd(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_mare"))
+        .args(args)
+        .output()
+        .unwrap_or_else(|e| panic!("run mare {args:?}: {e}"))
+}
+
+fn record_of(queue: &JobQueue, id: u64) -> mare::submit::JobRecord {
+    queue
+        .list()
+        .unwrap()
+        .into_iter()
+        .find(|j| j.id == id)
+        .unwrap_or_else(|| panic!("job {id} not in the live spool"))
+}
+
+/// The headline matrix: every cell through the real binary, with the
+/// two-way exactly-once audit extended to resumed jobs.
+#[test]
+fn failure_matrix_dlq_and_checkpointed_resume_through_the_real_binary() {
+    // single-driver ground truth for the shared multi-stage plan
+    let reference = Driver::new("reference", shape());
+    let ref_run = reference.execute(&Json::parse(&multistage_plan("alpha")).unwrap()).unwrap();
+    assert!(ref_run.launches > 0);
+
+    let queue = spool("headline");
+    let submitter = Submitter::new(shape());
+    // ids are assigned in submission order: 1..=6
+    submitter.submit(&queue, &multistage_plan("alpha")).unwrap(); // 1: dlq after 2 deaths
+    submitter.submit(&queue, &multistage_plan("alpha")).unwrap(); // 2: midrun@1 resume
+    submitter.submit(&queue, &multistage_plan("alpha")).unwrap(); // 3: midrun@2 resume
+    let poison = Json::parse(&poison_plan("alpha")).unwrap();
+    queue.submit_meta(poison, "poison".into(), "alpha", 0).unwrap(); // 4: fails every attempt
+    submitter.submit(&queue, &multistage_plan("alpha")).unwrap(); // 5: one death, below budget
+    submitter.submit(&queue, &multistage_plan("beta")).unwrap(); // 6: untouched control
+
+    let config_path = queue.dir().join("cluster-config.json");
+    std::fs::write(&config_path, r#"{"cluster": {"workers": 2, "vcpus": 2}}"#).unwrap();
+    let qdir = queue.dir().to_str().unwrap().to_string();
+    let child = Command::new(env!("CARGO_BIN_EXE_mare"))
+        .args([
+            "serve",
+            "--queue",
+            qdir.as_str(),
+            "--config",
+            config_path.to_str().unwrap(),
+            "--workers",
+            "6",
+            "--tick-ms",
+            "50",
+            "--stale-ms",
+            "400",
+            "--max-depth",
+            "100000",
+            "--max-attempts",
+            "2",
+            // 5 deaths total over 6 workers: whichever worker claims the
+            // targeted job dies (wildcard budgets), so the matrix is
+            // deterministic without knowing who wins each claim race
+            "--fault",
+            "*:2:running:j1,*:1:midrun@1:j2,*:1:midrun@2:j3,*:1:running:j5",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn mare serve");
+    let mut child = ChildGuard(child);
+
+    // the matrix settles: jobs 1 and 4 exhaust their budgets into dlq/,
+    // everything else (2, 3, 5, 6) finishes despite its injected death
+    wait_until("jobs 1+4 in dlq and 2/3/5/6 done", Duration::from_secs(240), || {
+        let dlq: Vec<u64> = queue.dlq_list().unwrap().iter().map(|j| j.id).collect();
+        let done = queue
+            .list()
+            .unwrap()
+            .iter()
+            .filter(|j| j.status == JobStatus::Done)
+            .count();
+        dlq == [1, 4] && done == 4
+    });
+
+    // ---- cell: K deaths -> dlq with K contexts --------------------
+    let dead = queue.dlq_get(1).unwrap();
+    assert_eq!(dead.attempts, 2, "the whole budget was spent");
+    assert_eq!(dead.failures.len(), 2, "one context per death: {:?}", dead.failures);
+    assert!(
+        dead.failures.iter().all(|f| f.detail.contains("died leaving the job running")),
+        "{:?}",
+        dead.failures
+    );
+
+    // ---- cell: fails-every-attempt -> dlq with execution contexts --
+    let poisoned = queue.dlq_get(4).unwrap();
+    assert_eq!(poisoned.attempts, 2);
+    assert_eq!(poisoned.failures.len(), 2);
+    assert!(
+        poisoned.failures.iter().all(|f| f.detail.contains("frobnicate")),
+        "{:?}",
+        poisoned.failures
+    );
+    // ... and the real CLI surfaces the evidence trail
+    let show = mare_cmd(&["dlq", "show", "4", "--queue", qdir.as_str()]);
+    assert!(show.status.success());
+    let show_out = String::from_utf8_lossy(&show.stdout).to_string();
+    assert!(show_out.contains("frobnicate"), "{show_out}");
+    assert!(show_out.contains("attempt 2"), "{show_out}");
+    let list = mare_cmd(&["dlq", "list", "--queue", qdir.as_str()]);
+    let list_out = String::from_utf8_lossy(&list.stdout).to_string();
+    assert!(list_out.contains("frobnicate"), "{list_out}");
+
+    // ---- cell: dlq retry re-runs exactly once ----------------------
+    let retry = mare_cmd(&["dlq", "retry", "1", "--queue", qdir.as_str()]);
+    assert!(retry.status.success(), "{}", String::from_utf8_lossy(&retry.stderr));
+    wait_until("the redriven job 1 to finish", Duration::from_secs(120), || {
+        record_of(&queue, 1).status == JobStatus::Done
+    });
+    let redriven = record_of(&queue, 1);
+    // fresh budget spent 1, full history preserved, full-price run
+    // (nothing was checkpointed before the pre-execution deaths)
+    assert_eq!(redriven.attempts, 1);
+    assert_eq!(redriven.failures.len(), 2);
+    assert_eq!(redriven.result.as_ref().unwrap().launches, ref_run.launches);
+
+    // drain via the real CLI; the daemon must exit 0
+    let drain = mare_cmd(&["serve", "--drain", "--queue", qdir.as_str()]);
+    assert!(drain.status.success());
+    let status = child.0.wait().expect("wait for the daemon");
+    assert!(status.success(), "drained daemon must exit 0, got {status}");
+
+    // ---- cells: checkpointed resume -------------------------------
+    // both mid-run victims' jobs finished; the FINAL attempt of each is
+    // strictly cheaper than a from-scratch run, and the later the kill,
+    // the cheaper the resume
+    let resumed_1 = record_of(&queue, 2).result.unwrap();
+    let resumed_2 = record_of(&queue, 3).result.unwrap();
+    assert!(resumed_1.launches > 0 && resumed_1.launches < ref_run.launches, "{resumed_1:?}");
+    assert!(resumed_2.launches > 0 && resumed_2.launches < resumed_1.launches, "{resumed_2:?}");
+    assert_eq!(resumed_1.records, ref_run.records, "a resumed run loses no output");
+    assert_eq!(resumed_2.records, ref_run.records);
+    // a mid-run death charges the attempt budget with context
+    for id in [2, 3] {
+        let job = record_of(&queue, id);
+        assert_eq!(job.attempts, 2, "job {id}");
+        assert_eq!(job.failures.len(), 1, "job {id}: {:?}", job.failures);
+    }
+
+    // ---- cell: a single death below the budget self-heals ----------
+    let healed = record_of(&queue, 5);
+    assert_eq!(healed.status, JobStatus::Done);
+    assert_eq!(healed.attempts, 2);
+    assert_eq!(healed.result.as_ref().unwrap().launches, ref_run.launches);
+
+    // ---- control + tenant rendering through the real binary --------
+    let control_job = record_of(&queue, 6);
+    assert_eq!(control_job.status, JobStatus::Done);
+    assert_eq!(control_job.attempts, 1, "the control job needed one attempt");
+    assert!(control_job.failures.is_empty());
+    let beta = mare_cmd(&["jobs", "--queue", qdir.as_str(), "--tenant", "beta"]);
+    let beta_out = String::from_utf8_lossy(&beta.stdout).to_string();
+    assert_eq!(beta_out.lines().count(), 2, "header + exactly job 6:\n{beta_out}");
+    assert!(beta_out.contains("beta"), "{beta_out}");
+
+    // ---- the global audit, counters vs references ------------------
+    // worker rows in the final snapshot are the joined fleet's own
+    // ledgers: full runs for jobs 1, 5, 6 plus, for jobs 2 and 3, the
+    // victims' checkpointed partial launches AND their successors'
+    // resumed remainders — summing to one reference run each. The
+    // poison job contributes zero (failed attempts record no launches).
+    let stats = serve::health::read_json(queue.dir(), STATS_FILE).unwrap().unwrap();
+    assert!(stats.req("final").unwrap().as_bool().unwrap());
+    let rows = stats.req("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 6);
+    let total: u64 = rows.iter().map(|r| r.req("launches").unwrap().as_u64().unwrap()).sum();
+    assert_eq!(
+        total,
+        5 * ref_run.launches,
+        "checkpointed work must be neither repeated nor lost"
+    );
+    let died: Vec<String> = rows
+        .iter()
+        .filter_map(|r| r.req("died").unwrap().as_str().ok().map(String::from))
+        .collect();
+    assert_eq!(died.len(), 5, "all five injected deaths on record: {died:?}");
+    assert_eq!(
+        died.iter().filter(|d| d.contains("mid-run")).count(),
+        2,
+        "{died:?}"
+    );
+    // the dlq counters made it to the operator surface
+    assert_eq!(stats.req("dead_lettered").unwrap().as_u64().unwrap(), 2);
+    assert!(stats.req("retried").unwrap().as_u64().unwrap() >= 1);
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}
+
+/// Checkpoints survive PROCESS death: a `mare work` pool loses a worker
+/// mid-run, a second `mare work` invocation (fresh process) resumes the
+/// job from the on-disk checkpoint instead of starting over.
+#[test]
+fn work_pools_resume_midrun_killed_jobs_across_processes() {
+    let reference = Driver::new("reference", shape());
+    let ref_run = reference.execute(&Json::parse(&multistage_plan("alpha")).unwrap()).unwrap();
+
+    let queue = spool("work-resume");
+    let submitter = Submitter::new(shape());
+    submitter.submit(&queue, &multistage_plan("alpha")).unwrap(); // id 1
+
+    let config_path = queue.dir().join("cluster-config.json");
+    std::fs::write(&config_path, r#"{"cluster": {"workers": 2, "vcpus": 2}}"#).unwrap();
+    let qdir = queue.dir().to_str().unwrap().to_string();
+    let cfg = config_path.to_str().unwrap().to_string();
+
+    // first pool: whichever worker claims job 1 dies after committing
+    // one stage; the pool exits with the job stuck `running`
+    let first = mare_cmd(&[
+        "work",
+        "--queue",
+        qdir.as_str(),
+        "--config",
+        cfg.as_str(),
+        "--workers",
+        "2",
+        "--fault",
+        "*:1:midrun@1:j1",
+        "--stale-ms",
+        "400",
+    ]);
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    assert_eq!(record_of(&queue, 1).status, JobStatus::Running);
+    assert!(
+        queue.checkpoint_dir().join("job-000001").join("state.ckpt").exists(),
+        "the victim committed durable checkpoint state before dying"
+    );
+
+    // operator recovery, then a FRESH process finishes the job
+    let requeue = mare_cmd(&["requeue", "1", "--queue", qdir.as_str(), "--force"]);
+    assert!(requeue.status.success(), "{}", String::from_utf8_lossy(&requeue.stderr));
+    let second = mare_cmd(&[
+        "work", "--queue", qdir.as_str(), "--config", cfg.as_str(), "--workers", "1",
+    ]);
+    assert!(second.status.success(), "{}", String::from_utf8_lossy(&second.stderr));
+
+    let job = record_of(&queue, 1);
+    assert_eq!(job.status, JobStatus::Done);
+    assert_eq!(job.attempts, 2);
+    let result = job.result.unwrap();
+    assert!(
+        result.launches > 0 && result.launches < ref_run.launches,
+        "resume must be strictly cheaper than from-scratch: {} vs {}",
+        result.launches,
+        ref_run.launches
+    );
+    assert_eq!(result.records, ref_run.records, "a resumed run loses no output");
+    assert!(
+        !queue.checkpoint_dir().join("job-000001").exists(),
+        "finished jobs leave no checkpoint state behind"
+    );
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}

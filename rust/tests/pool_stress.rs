@@ -1,5 +1,5 @@
 //! Contended work-pool stress — the headline CI concurrency gate
-//! (ISSUE 4; run in a loop by the `concurrency-stress` CI job).
+//! (ISSUE 4; run in a loop by the `stress` CI matrix).
 //!
 //! 8 worker THREADS hammer one shared file-backed spool holding 64
 //! mixed jobs (`gen:` regenerated sources and `hdfs://`/`swift://`/

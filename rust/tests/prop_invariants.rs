@@ -334,6 +334,227 @@ fn shuffle_conserves_bytes_and_records() {
     });
 }
 
+// ------------------------------------------------- spool record bytes
+
+/// Every spool transition owns a FIXED set of record fields and must
+/// leave every other byte of the on-disk JSON untouched — including on
+/// legacy records that predate `attempts`/`failures` (absent means
+/// zero, and zero is never written back). The walk drives a random
+/// record through random sequences of claim, finish (both verdicts),
+/// requeue (with and without a supervisor note), dead-letter and
+/// dlq-retry, and after each step checks the new file against the old
+/// record with ONLY the transition's owned fields replaced.
+#[test]
+fn spool_transitions_own_only_their_fields() {
+    use mare::submit::{JobFailure, JobQueue, JobRecord, JobResult, JobStatus};
+    use mare::util::json::Json;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static CASE: AtomicU64 = AtomicU64::new(0);
+
+    // before + after's values for `owned`: what the file MUST now hold
+    fn merged(before: &JobRecord, after: &JobRecord, owned: &[&str]) -> JobRecord {
+        let mut want = before.clone();
+        for field in owned {
+            match *field {
+                "status" => want.status = after.status.clone(),
+                "stamp_ms" => want.stamp_ms = after.stamp_ms,
+                "claimed_ms" => want.claimed_ms = after.claimed_ms,
+                "claim_seq" => want.claim_seq = after.claim_seq,
+                "attempts" => want.attempts = after.attempts,
+                "failures" => want.failures = after.failures.clone(),
+                "result" => want.result = after.result.clone(),
+                other => panic!("unknown owned field {other}"),
+            }
+        }
+        want
+    }
+
+    check("spool-transition-ownership", 40, |rng| {
+        let dir = std::env::temp_dir().join(format!(
+            "mare-prop-spool-{}-{}",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let q = JobQueue::open(dir.clone()).map_err(|e| e.to_string())?;
+
+        let tenant = *rng.choice(&["alpha", "beta", "default"]);
+        let plan = Json::parse(&format!(
+            r#"{{"version": 1, "label": "p{}", "ops": []}}"#,
+            rng.below(100)
+        ))
+        .map_err(|e| e.to_string())?;
+        let id = q
+            .submit_meta(
+                plan,
+                format!("prop-job-{}", rng.below(50)),
+                tenant,
+                rng.below(7) as i64 - 3,
+            )
+            .map_err(|e| e.to_string())?;
+        let live_path = q.dir().join(format!("job-{id:06}.json"));
+        let dlq_path = q.dlq_dir().join(format!("job-{id:06}.json"));
+        let legacy = rng.bool(0.3);
+        if legacy {
+            // a spool file written before tenant/priority/stamp_ms/
+            // attempts/failures existed: only the always-required keys
+            std::fs::write(
+                &live_path,
+                format!(
+                    "{{\n  \"id\": {id},\n  \"status\": \"queued\",\n  \
+                     \"summary\": \"legacy\",\n  \"plan\": {{\"version\": 1, \"ops\": []}}\n}}"
+                ),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+
+        let mut in_dlq = false;
+        for _step in 0..rng.range(3, 9) {
+            let path = if in_dlq { &dlq_path } else { &live_path };
+            let before_text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            let before = Json::parse(&before_text)
+                .and_then(|j| JobRecord::from_json(&j))
+                .map_err(|e| e.to_string())?;
+
+            // pick a transition valid for where the record is now
+            let owned: &[&str] = if in_dlq {
+                let after = q.dlq_retry(id).map_err(|e| e.to_string())?;
+                prop_assert!(after.status == JobStatus::Queued, "retry must requeue");
+                prop_assert!(after.attempts == 0, "retry grants a fresh budget");
+                prop_assert!(
+                    after.failures == before.failures,
+                    "retry must keep the evidence trail"
+                );
+                in_dlq = false;
+                &["status", "result", "stamp_ms", "claimed_ms", "claim_seq", "attempts"]
+            } else {
+                match before.status {
+                    JobStatus::Queued => {
+                        if rng.bool(0.25) {
+                            // dead-lettering is PURE relocation: the new
+                            // file is the old one, byte for byte
+                            q.dead_letter(id).map_err(|e| e.to_string())?;
+                            let moved =
+                                std::fs::read_to_string(&dlq_path).map_err(|e| e.to_string())?;
+                            prop_assert!(
+                                moved == before_text,
+                                "dead-letter rewrote the record:\n{moved}\nvs\n{before_text}"
+                            );
+                            in_dlq = true;
+                            continue;
+                        }
+                        let claimed = q.claim().map_err(|e| e.to_string())?;
+                        prop_assert!(claimed.is_some(), "sole queued job must be claimable");
+                        let after = Json::parse(
+                            &std::fs::read_to_string(&live_path).map_err(|e| e.to_string())?,
+                        )
+                        .and_then(|j| JobRecord::from_json(&j))
+                        .map_err(|e| e.to_string())?;
+                        prop_assert!(
+                            after.attempts == before.attempts + 1,
+                            "every claim commit burns one attempt: {} -> {}",
+                            before.attempts,
+                            after.attempts
+                        );
+                        &["status", "stamp_ms", "claimed_ms", "attempts"]
+                    }
+                    JobStatus::Running => {
+                        let fail = rng.bool(0.4);
+                        if rng.bool(0.3) {
+                            let note = rng.bool(0.5).then(|| JobFailure {
+                                at_ms: 1_700_000_000_000 + rng.below(1000) as u64,
+                                worker: format!("serve-{}", rng.below(4)),
+                                detail: "worker died leaving the job running".into(),
+                            });
+                            let noting = note.is_some();
+                            q.requeue_noting(id, std::time::Duration::ZERO, true, note)
+                                .map_err(|e| e.to_string())?;
+                            if noting {
+                                &[
+                                    "status",
+                                    "result",
+                                    "stamp_ms",
+                                    "claimed_ms",
+                                    "claim_seq",
+                                    "failures",
+                                ]
+                            } else {
+                                &["status", "result", "stamp_ms", "claimed_ms", "claim_seq"]
+                            }
+                        } else {
+                            let result = JobResult {
+                                driver: format!("driver-{}", rng.below(4)),
+                                launches: rng.below(100) as u64,
+                                records: rng.below(100) as u64,
+                                detail: if fail {
+                                    "tool not found: frobnicate".into()
+                                } else {
+                                    "ok".into()
+                                },
+                            };
+                            let status =
+                                if fail { JobStatus::Failed } else { JobStatus::Done };
+                            q.finish(before.clone(), status, result)
+                                .map_err(|e| e.to_string())?;
+                            if fail {
+                                &["status", "stamp_ms", "result", "failures"]
+                            } else {
+                                &["status", "stamp_ms", "result"]
+                            }
+                        }
+                    }
+                    JobStatus::Done | JobStatus::Failed => {
+                        if rng.bool(0.3) {
+                            q.dead_letter(id).map_err(|e| e.to_string())?;
+                            let moved =
+                                std::fs::read_to_string(&dlq_path).map_err(|e| e.to_string())?;
+                            prop_assert!(
+                                moved == before_text,
+                                "dead-letter rewrote the record:\n{moved}\nvs\n{before_text}"
+                            );
+                            in_dlq = true;
+                            continue;
+                        }
+                        q.requeue_with(id, std::time::Duration::ZERO, true)
+                            .map_err(|e| e.to_string())?;
+                        &["status", "result", "stamp_ms", "claimed_ms", "claim_seq"]
+                    }
+                }
+            };
+
+            let after_text =
+                std::fs::read_to_string(&live_path).map_err(|e| e.to_string())?;
+            let after = Json::parse(&after_text)
+                .and_then(|j| JobRecord::from_json(&j))
+                .map_err(|e| e.to_string())?;
+            // any failure history only ever GROWS, preserving its prefix
+            prop_assert!(
+                after.failures.len() >= before.failures.len()
+                    && after.failures[..before.failures.len()] == before.failures[..],
+                "failure history must be append-only"
+            );
+            let want = merged(&before, &after, owned).to_json().to_string_pretty();
+            prop_assert!(
+                after_text == want,
+                "transition owning {owned:?} leaked into other fields:\n\
+                 --- on disk ---\n{after_text}\n--- expected ---\n{want}"
+            );
+            // the absent-means-zero contract, explicitly: a legacy record
+            // only gains an `attempts` key once a claim consumes one
+            if legacy && !owned.contains(&"attempts") && !before_text.contains("\"attempts\"") {
+                prop_assert!(
+                    !after_text.contains("\"attempts\""),
+                    "a transition that does not own attempts materialized the key:\n{after_text}"
+                );
+            }
+        }
+
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------- vfs / shell
 
 #[test]

@@ -1,5 +1,5 @@
 //! Cross-process service stress — the headline gate for `mare serve`
-//! (ISSUE 6; run in release by the `serve-stress` CI job).
+//! (ISSUE 6; run in release by the `stress` CI matrix).
 //!
 //! The REAL `mare` binary runs as a resident daemon subprocess while
 //! this test floods the shared spool from concurrent submitter threads
@@ -352,9 +352,16 @@ fn backpressure_refuses_typed_and_health_reflects_depth() {
     // deterministic half: a published control file IS the admission
     // contract, daemon or not — fill the spool to the advertised depth
     // and the next submission must refuse with the typed error
+    // (beat_ms 0 marks it hand-authored: enforced without a heartbeat)
     control::write(
         queue.dir(),
-        &Control { max_depth: 3, drain: false, quotas: vec![] },
+        &Control {
+            max_depth: 3,
+            drain: false,
+            quotas: vec![],
+            max_attempts: 0,
+            beat_ms: 0,
+        },
     )
     .unwrap();
     for _ in 0..3 {

@@ -93,6 +93,74 @@ fn golden_files_pass_submit_admission() {
     }
 }
 
+/// Pins the SPOOL record format (not a plan envelope, so it lives
+/// outside the `GOLDEN` admission list): a dead-lettered record with
+/// the full failure evidence trail — `attempts` spent, one `failures`
+/// context per attempt, the preserved claim audit fields and the last
+/// execution's `result`. The worked example in `docs/WIRE_FORMAT.md`,
+/// the golden file and `JobRecord`'s codec are pinned together.
+#[test]
+fn dead_lettered_spool_records_match_the_golden_file() {
+    use mare::submit::{JobFailure, JobRecord, JobResult, JobStatus};
+
+    let text = std::fs::read_to_string(golden_path("dlq_attempts.json"))
+        .expect("dlq_attempts.json");
+    assert!(
+        spec_text().contains(text.trim_end()),
+        "docs/WIRE_FORMAT.md no longer contains the worked example dlq_attempts.json — \
+         update the spec and the golden file together"
+    );
+
+    let record = JobRecord {
+        id: 7,
+        status: JobStatus::Failed,
+        summary: "ingest[gen:gc:16] -> map -> collect".into(),
+        tenant: "genomics".into(),
+        priority: -1,
+        stamp_ms: 1_754_650_000_500,
+        claimed_ms: Some(1_754_650_000_400),
+        claim_seq: Some(23),
+        attempts: 2,
+        failures: vec![
+            JobFailure {
+                at_ms: 1_754_649_998_000,
+                worker: "serve-1".into(),
+                detail: "worker died leaving the job running; requeued by the supervisor"
+                    .into(),
+            },
+            JobFailure {
+                at_ms: 1_754_650_000_500,
+                worker: "serve-3".into(),
+                detail: "tool `frobnicate` not found in image `ubuntu`".into(),
+            },
+        ],
+        plan: Json::parse(&text)
+            .expect("golden parses")
+            .req("plan")
+            .expect("golden has a plan")
+            .clone(),
+        result: Some(JobResult {
+            driver: "serve-3".into(),
+            launches: 0,
+            records: 0,
+            detail: "tool `frobnicate` not found in image `ubuntu`".into(),
+        }),
+    };
+    // byte-for-byte: the golden file IS the codec's serialization
+    assert_eq!(record.to_json().to_string_pretty(), text.trim_end());
+
+    // decoding the golden reproduces every field
+    let back = JobRecord::from_json(&Json::parse(&text).unwrap()).expect("golden decodes");
+    assert_eq!(back.attempts, 2);
+    assert_eq!(back.failures, record.failures);
+    assert_eq!(back.claim_seq, Some(23));
+    assert_eq!(back.to_json().to_string_pretty(), text.trim_end());
+
+    // the embedded plan is itself a valid, admissible envelope
+    let submitter = Submitter::new(ClusterConfig::sized(2, 2));
+    submitter.validate(&record.plan.to_string_pretty()).expect("poison plans still admit");
+}
+
 // ---------------------------------------------------------- property
 
 fn arbitrary_mount(rng: &mut Rng) -> MountPoint {
