@@ -6,12 +6,18 @@
 //! chromosome-grouped GATK stage straggles on chr1. This ablation runs
 //! the SNP pipeline with (a) equal-size vs human-skewed chromosomes and
 //! (b) more/fewer chromosomes than GATK-stage slots, isolating both
-//! effects the paper's Figure 4 folds together.
+//! effects the paper's Figure 4 folds together, plus (c) the shuffle
+//! analogue: on a planted hot-KEY distribution, hash routing piles
+//! several heavy keys into one bucket while sample-based range cuts
+//! (`Partitioner::RangeByKey`) spread the mass, so the range
+//! partitioner's max/mean bucket-load ratio must beat hash's.
 //!
 //! Run: `cargo bench --bench ablation_skew`.
 
+use std::sync::Arc;
+
 use mare::cluster::ClusterConfig;
-use mare::dataset::Dataset;
+use mare::dataset::{plan, Dataset, Partitioner, Record};
 use mare::util::bench::Table;
 use mare::workloads::{self, genreads, snp};
 
@@ -103,4 +109,58 @@ fn main() {
     // gatk stage (bwa/reduce still gain some)
     let cap_gain = few.as_seconds() / more.as_seconds();
     assert!(cap_gain < 2.8, "3x workers gained {cap_gain:.2}x — cap not visible");
+
+    // (c) key skew at the shuffle boundary: hash vs range routing on a
+    // planted Zipf keyset (rank r of 64 4-mers gets max(1, 400/(r+1))
+    // records, the distribution the kmer_shuffle gate pins)
+    let mut records: Vec<Record> = Vec::new();
+    let mut rank = 0usize;
+    for b in ["A", "C", "G", "T"] {
+        for c in ["A", "C", "G", "T"] {
+            for d in ["A", "C", "G", "T"] {
+                let n = (400 / (rank + 1)).max(1);
+                records.extend((0..n).map(|_| Record::text(format!("A{b}{c}{d}"))));
+                rank += 1;
+            }
+        }
+    }
+    let total = records.len();
+    let num = 8usize;
+    let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+        Arc::new(|r: &Record| r.as_text().unwrap_or("*").to_string());
+    let max_load = |buckets: Vec<Vec<Record>>| {
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), total, "routing lost records");
+        buckets.iter().map(Vec::len).max().unwrap()
+    };
+    let hash_max = max_load(plan::route(
+        &Partitioner::HashByKey { key_fn: key_fn.clone(), num },
+        records.clone(),
+    ));
+    let range_max = max_load(plan::route(&Partitioner::RangeByKey { key_fn, num }, records));
+    let mean = total as f64 / num as f64;
+
+    let mut part = Table::new(
+        "ABL-SKEW(c) — partitioner choice on a planted hot-key distribution",
+        &["partitioner", "max bucket", "mean", "max/mean"],
+    );
+    for (name, max) in [("hash(FNV-1a)", hash_max), ("range(sampled cuts)", range_max)] {
+        part.row(vec![
+            name.into(),
+            max.to_string(),
+            format!("{mean:.0}"),
+            format!("{:.2}", max as f64 / mean),
+        ]);
+    }
+    part.print();
+    part.save("ablation_skew_partitioner");
+
+    println!(
+        "\nkey-skew: range max/mean {:.2} vs hash {:.2}",
+        range_max as f64 / mean,
+        hash_max as f64 / mean
+    );
+    assert!(
+        range_max < hash_max,
+        "range must beat hash on max/mean bucket load: range={range_max} hash={hash_max}"
+    );
 }

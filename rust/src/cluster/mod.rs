@@ -121,6 +121,12 @@ impl RunReport {
         self.stages.iter().map(|s| s.shuffle.bytes_total).sum()
     }
 
+    /// Bytes the map sides produced before any map-side combiner ran —
+    /// what the job would have shuffled with combining disabled.
+    pub fn total_pre_combine_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle.bytes_pre_combine).sum()
+    }
+
     pub fn total_remote_bytes(&self) -> u64 {
         self.stages.iter().map(|s| s.shuffle.bytes_remote).sum()
     }
@@ -300,12 +306,14 @@ impl Cluster {
                     .map(|(w, records)| Partition::with_locality(records, w))
                     .collect(),
                 StageOutput::Shuffle(partitioner) => {
-                    let (parts, stats) = shuffle::shuffle(
+                    let (parts, stats) = shuffle::shuffle_combined(
                         outputs,
                         partitioner,
+                        stage.combiner.as_ref(),
                         self.config.workers,
                         &self.config.net,
-                    );
+                        self.config.seed ^ stage.id as u64,
+                    )?;
                     now = now + stats.duration;
                     sreport.shuffle = stats;
                     parts

@@ -10,15 +10,49 @@
 //! is the behaviour behind the paper's "reduce leads to K data shuffles"
 //! cost discussion (§1.2.2).
 
-use crate::dataset::{plan::route_from, Partition, Partitioner, Record};
+use std::sync::Arc;
+
+use crate::dataset::plan::{range_cuts, range_sample_keys, route_from, route_with_cuts};
+use crate::dataset::{Partition, Partitioner, PartitionOp, Record, TaskContext};
+use crate::error::Result;
 use crate::simtime::{Duration, NetModel};
+
+use super::task::CONTAINER_START;
 
 /// Data-motion summary of one shuffle.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ShuffleStats {
+    /// Bytes the map side produced BEFORE any map-side combiner ran —
+    /// what a combiner-less shuffle would have shipped. Equal to
+    /// `bytes_total` when no combiner is attached.
+    pub bytes_pre_combine: u64,
+    /// Bytes that actually moved through the shuffle (post-combine).
     pub bytes_total: u64,
     pub bytes_remote: u64,
     pub duration: Duration,
+}
+
+impl ShuffleStats {
+    /// `bytes_pre_combine / bytes_total` — how much the map-side
+    /// combiner shrank the shuffle (1.0 when no combiner ran).
+    pub fn combine_ratio(&self) -> f64 {
+        if self.bytes_total == 0 {
+            1.0
+        } else {
+            self.bytes_pre_combine as f64 / self.bytes_total as f64
+        }
+    }
+}
+
+/// [`shuffle_combined`] without a combiner (infallible).
+pub fn shuffle(
+    outputs: Vec<(usize, Vec<Record>)>,
+    partitioner: &Partitioner,
+    workers: usize,
+    net: &NetModel,
+) -> (Vec<Partition>, ShuffleStats) {
+    shuffle_combined(outputs, partitioner, None, workers, net, 0)
+        .expect("combiner-less shuffle cannot fail")
 }
 
 /// Route `outputs` (records + the worker that produced them) into a new
@@ -28,22 +62,93 @@ pub struct ShuffleStats {
 /// (`util::bytes::Shared`), so a shuffle re-arranges views and charges
 /// the *modeled* network — it never re-allocates payload bytes on the
 /// host.
-pub fn shuffle(
+///
+/// When `combiner` is present (an associative + commutative aggregation
+/// the optimizer pushed below this boundary), it runs once per source
+/// partition BEFORE routing: the shuffle then ships partial aggregates,
+/// and `bytes_pre_combine` vs `bytes_total` records the saving. The
+/// combiner containers run in parallel across the map-side workers, so
+/// their virtual time charges as the slowest one.
+///
+/// `RangeByKey` partitioners plan ONE global cut set here from a
+/// deterministic stride-sample of the (post-combine) keys across ALL
+/// source partitions — every partition routes against the same key
+/// ranges, and because sample duplicates are kept, the cuts are
+/// frequency-weighted: skewed key distributions spread instead of
+/// piling onto one bucket.
+pub fn shuffle_combined(
     outputs: Vec<(usize, Vec<Record>)>,
     partitioner: &Partitioner,
+    combiner: Option<&Arc<dyn PartitionOp>>,
     workers: usize,
     net: &NetModel,
-) -> (Vec<Partition>, ShuffleStats) {
+    seed: u64,
+) -> Result<(Vec<Partition>, ShuffleStats)> {
     let num_out = partitioner.num_partitions();
     let workers = workers.max(1);
+    let mut stats = ShuffleStats::default();
 
+    // ---- map-side combine (partial aggregation per source partition)
+    let num_src = outputs.len();
+    let mut combine_time = Duration::ZERO;
+    let mut combined: Vec<(usize, Vec<Record>)> = Vec::with_capacity(num_src);
+    for (i, (w, records)) in outputs.into_iter().enumerate() {
+        let pre: u64 = records.iter().map(Record::size_bytes).sum();
+        stats.bytes_pre_combine += pre;
+        match combiner {
+            Some(op) => {
+                let ctx = TaskContext {
+                    partition: i,
+                    num_partitions: num_src,
+                    attempt: 0,
+                    seed: seed
+                        .wrapping_mul(0x9E3779B97F4A7C15)
+                        .wrapping_add(0xC0B1 + ((i as u64) << 16)),
+                };
+                let out = op.apply(&ctx, records)?;
+                let cost = op.cost_model();
+                let t = CONTAINER_START
+                    + cost.fixed
+                    + Duration::seconds(
+                        cost.secs_per_byte * pre as f64
+                            + cost.secs_per_record * out.len() as f64,
+                    );
+                // map-side partitions combine in parallel: bottleneck
+                if t > combine_time {
+                    combine_time = t;
+                }
+                combined.push((w, out));
+            }
+            None => combined.push((w, records)),
+        }
+    }
+
+    // ---- range-cut planning (global, post-combine)
+    let cuts = match partitioner {
+        Partitioner::RangeByKey { key_fn, num } => {
+            let total: usize = combined.iter().map(|(_, r)| r.len()).sum();
+            let sample = range_sample_keys(
+                combined.iter().map(|(_, r)| r.as_slice()),
+                total,
+                key_fn,
+            );
+            Some(range_cuts(sample, *num))
+        }
+        _ => None,
+    };
+
+    // ---- routing + data-motion accounting
     let mut buckets: Vec<Vec<Record>> = (0..num_out).map(|_| Vec::new()).collect();
     let mut sent_remote = vec![0u64; workers];
     let mut recv_remote = vec![0u64; workers];
-    let mut stats = ShuffleStats::default();
-
-    for (src_part, (src_worker, records)) in outputs.into_iter().enumerate() {
-        for (p, routed) in route_from(partitioner, records, src_part).into_iter().enumerate() {
+    for (src_part, (src_worker, records)) in combined.into_iter().enumerate() {
+        let routed = match (&cuts, partitioner) {
+            (Some(cuts), Partitioner::RangeByKey { key_fn, num }) => {
+                route_with_cuts(cuts, *num, key_fn, records)
+            }
+            _ => route_from(partitioner, records, src_part),
+        };
+        for (p, routed) in routed.into_iter().enumerate() {
             let dst_worker = p % workers;
             let bytes: u64 = routed.iter().map(Record::size_bytes).sum();
             stats.bytes_total += bytes;
@@ -54,6 +159,9 @@ pub fn shuffle(
             }
             buckets[p].extend(routed);
         }
+    }
+    if combiner.is_none() {
+        debug_assert_eq!(stats.bytes_pre_combine, stats.bytes_total);
     }
 
     // bottleneck endpoint: busiest NIC moves its bytes at LAN speed,
@@ -67,14 +175,17 @@ pub fn shuffle(
         .max()
         .unwrap_or(0);
     let spill = crate::simtime::DiskModel::hdd();
-    stats.duration = net.transfer(max_endpoint, 1) + spill.rw(max_endpoint) + spill.rw(max_endpoint);
+    stats.duration = combine_time
+        + net.transfer(max_endpoint, 1)
+        + spill.rw(max_endpoint)
+        + spill.rw(max_endpoint);
 
     let partitions = buckets
         .into_iter()
         .enumerate()
         .map(|(p, records)| Partition::with_locality(records, p % workers))
         .collect();
-    (partitions, stats)
+    Ok((partitions, stats))
 }
 
 #[cfg(test)]
@@ -133,6 +244,72 @@ mod tests {
             let firsts: std::collections::HashSet<_> =
                 p.records.iter().map(|r| &r.as_text().unwrap()[..1]).collect();
             assert!(firsts.len() <= 1);
+        }
+    }
+
+    #[test]
+    fn map_side_combiner_shrinks_shipped_bytes() {
+        use crate::dataset::{ClosureOp, TaskContext};
+        // combiner: sum each partition's numeric records into ONE record
+        let combiner: Arc<dyn PartitionOp> = Arc::new(ClosureOp {
+            f: |_: &TaskContext, recs: Vec<Record>| {
+                let sum: u64 =
+                    recs.iter().filter_map(|r| r.as_text()?.parse::<u64>().ok()).sum();
+                Ok(vec![Record::text(sum.to_string())])
+            },
+            name: "sum-combine".into(),
+        });
+        let outputs = |n: usize| -> Vec<(usize, Vec<Record>)> {
+            (0..n)
+                .map(|w| (w, (0..50).map(|i| Record::text(format!("{i}"))).collect()))
+                .collect()
+        };
+        let p = Partitioner::Balanced { num: 2 };
+        let (_, plain) = shuffle(outputs(4), &p, 4, &NetModel::lan());
+        let (parts, combined) =
+            shuffle_combined(outputs(4), &p, Some(&combiner), 4, &NetModel::lan(), 7)
+                .unwrap();
+        assert_eq!(plain.bytes_pre_combine, plain.bytes_total);
+        assert_eq!(combined.bytes_pre_combine, plain.bytes_total);
+        assert!(
+            combined.bytes_total * 4 <= combined.bytes_pre_combine,
+            "pre {} post {}",
+            combined.bytes_pre_combine,
+            combined.bytes_total
+        );
+        assert!(combined.combine_ratio() >= 4.0);
+        // one partial aggregate per source partition survived
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 4);
+        // combiner container time is charged to the shuffle clock
+        assert!(combined.duration >= CONTAINER_START);
+    }
+
+    #[test]
+    fn range_partitioner_plans_global_cuts_across_sources() {
+        let key_fn: std::sync::Arc<dyn Fn(&Record) -> String + Send + Sync> =
+            std::sync::Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
+        // the same keys appear on BOTH source partitions; a per-source
+        // cut plan could route them apart, the global plan must not
+        let outputs = vec![
+            (0, vec![Record::text("a1"), Record::text("c1")]),
+            (1, vec![Record::text("a2"), Record::text("b1"), Record::text("c2")]),
+        ];
+        let (parts, stats) = shuffle(
+            outputs,
+            &Partitioner::RangeByKey { key_fn, num: 3 },
+            2,
+            &NetModel::lan(),
+        );
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 5);
+        assert_eq!(stats.bytes_pre_combine, stats.bytes_total);
+        for key in ["a", "b", "c"] {
+            let holders = parts
+                .iter()
+                .filter(|p| {
+                    p.records.iter().any(|r| r.as_text().unwrap().starts_with(key))
+                })
+                .count();
+            assert_eq!(holders, 1, "key {key} split across partitions");
         }
     }
 

@@ -35,13 +35,21 @@ pub struct Stage {
     /// pure shuffle stage, e.g. `repartition` directly after a source).
     pub ops: Vec<Arc<dyn PartitionOp>>,
     pub output: StageOutput,
+    /// Map-side combiner of this stage's shuffle boundary, if the
+    /// optimizer pushed one below it (`Plan::Repartition::combine`):
+    /// runs once per output partition before routing, so the shuffle
+    /// ships partial aggregates. Only meaningful with
+    /// `StageOutput::Shuffle`.
+    pub combiner: Option<Arc<dyn PartitionOp>>,
 }
 
 impl Stage {
-    /// Distinct images the stage's ops run in (pull-cost accounting).
+    /// Distinct images the stage's ops run in (pull-cost accounting);
+    /// the map-side combiner's image counts — it launches on the same
+    /// workers.
     pub fn images(&self) -> Vec<&str> {
         let mut out: Vec<&str> = Vec::new();
-        for op in &self.ops {
+        for op in self.ops.iter().chain(self.combiner.iter()) {
             if let Some(img) = op.image() {
                 if !out.contains(&img) {
                     out.push(img);
@@ -59,7 +67,11 @@ impl Stage {
 
     pub fn describe(&self) -> String {
         let ops: Vec<String> = self.ops.iter().map(|o| o.label()).collect();
-        format!("stage {} [{}] -> {:?}", self.id, ops.join(" | "), self.output)
+        let combine = match &self.combiner {
+            Some(c) => format!(" +combine[{}]", c.label()),
+            None => String::new(),
+        };
+        format!("stage {} [{}]{} -> {:?}", self.id, ops.join(" | "), combine, self.output)
     }
 }
 
@@ -108,17 +120,18 @@ pub fn compile(plan: &Plan) -> PhysicalPlan {
     for node in &chain[1..] {
         match node {
             Plan::MapPartitions { op, .. } => ops.push(op.clone()),
-            Plan::Repartition { partitioner, .. } => {
+            Plan::Repartition { partitioner, combine, .. } => {
                 stages.push(Stage {
                     id: stages.len(),
                     ops: std::mem::take(&mut ops),
                     output: StageOutput::Shuffle(partitioner.clone()),
+                    combiner: combine.clone(),
                 });
             }
             Plan::Source { .. } => unreachable!("source can only be the lineage root"),
         }
     }
-    stages.push(Stage { id: stages.len(), ops, output: StageOutput::Final });
+    stages.push(Stage { id: stages.len(), ops, output: StageOutput::Final, combiner: None });
 
     PhysicalPlan { source, source_label, stages }
 }

@@ -112,6 +112,7 @@ mod tests {
             id: 0,
             ops: vec![Arc::new(FakeContainerOp)],
             output: StageOutput::Final,
+            combiner: None,
         };
         // records big enough that tmpfs staging is > 1 µs
         let input: Vec<Record> =
@@ -135,6 +136,7 @@ mod tests {
                 name: "native".into(),
             })],
             output: StageOutput::Final,
+            combiner: None,
         };
         let r = run_task(&stage, &ctx(), &[Record::text("x")]).unwrap();
         assert_eq!(r.cost.container_start, Duration::ZERO);
@@ -148,6 +150,7 @@ mod tests {
             id: 0,
             ops: vec![Arc::new(FakeContainerOp), Arc::new(FakeContainerOp)],
             output: StageOutput::Final,
+            combiner: None,
         };
         let input: Vec<Record> = (0..4).map(|i| Record::text(format!("{i}"))).collect();
         let r = run_task(&stage, &ctx(), &input).unwrap();

@@ -66,6 +66,7 @@ pub enum Workload {
     Gc,
     Vs,
     Snp,
+    Kmer,
 }
 
 impl Workload {
@@ -74,8 +75,9 @@ impl Workload {
             "gc" => Ok(Workload::Gc),
             "vs" | "virtual-screening" => Ok(Workload::Vs),
             "snp" | "snp-calling" => Ok(Workload::Snp),
+            "kmer" | "kmer-stats" => Ok(Workload::Kmer),
             other => Err(MareError::Config(format!(
-                "unknown workload `{other}` (gc|vs|snp)"
+                "unknown workload `{other}` (gc|vs|snp|kmer)"
             ))),
         }
     }
@@ -87,7 +89,7 @@ pub struct RunConfigFile {
     pub workload: Workload,
     pub backend: BackendKind,
     pub cluster: ClusterConfig,
-    /// Scale knob: molecules for VS, reads for SNP, lines for GC.
+    /// Scale knob: molecules for VS, reads for SNP, lines for GC/kmer.
     pub scale: usize,
     pub seed: u64,
     /// Tree-reduce depth (VS / GC).

@@ -105,6 +105,25 @@ impl Dataset {
         Dataset::from_plan(Arc::new(Plan::Repartition {
             parent: self.plan.clone(),
             partitioner: Partitioner::HashByKey { key_fn, num: num.max(1) },
+            combine: None,
+        }))
+    }
+
+    /// Wide transformation: skew-aware sample-based range partitioning
+    /// by a record key, with an optional map-side combiner that runs
+    /// per source partition before records are routed (what
+    /// `PipelineOp::RepartitionBy` lowers to; see
+    /// `cluster::shuffle::shuffle_combined`).
+    pub fn repartition_by_key_range(
+        &self,
+        key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>,
+        num: usize,
+        combine: Option<Arc<dyn PartitionOp>>,
+    ) -> Dataset {
+        Dataset::from_plan(Arc::new(Plan::Repartition {
+            parent: self.plan.clone(),
+            partitioner: Partitioner::RangeByKey { key_fn, num: num.max(1) },
+            combine,
         }))
     }
 
@@ -114,6 +133,7 @@ impl Dataset {
         Dataset::from_plan(Arc::new(Plan::Repartition {
             parent: self.plan.clone(),
             partitioner: Partitioner::Balanced { num: num.max(1) },
+            combine: None,
         }))
     }
 

@@ -65,6 +65,13 @@ pub struct TaskContext {
 pub enum Partitioner {
     /// Hash of a record key (the paper's `keyBy` + HashPartitioner).
     HashByKey { key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>, num: usize },
+    /// Sample-based range partitioning by a record key (the TeraSort
+    /// idiom): cut points are planned from a frequency-weighted sample
+    /// of the *observed* keys at shuffle time, so skewed key
+    /// distributions spread across partitions instead of piling onto
+    /// whichever bucket the hot keys hash into. Equal keys still always
+    /// land in the same partition.
+    RangeByKey { key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>, num: usize },
     /// Concatenate-and-chop into `num` roughly equal partitions
     /// (Spark `repartition(n)` without keys; used by tree-reduce).
     Balanced { num: usize },
@@ -76,6 +83,9 @@ impl Clone for Partitioner {
             Partitioner::HashByKey { key_fn, num } => {
                 Partitioner::HashByKey { key_fn: key_fn.clone(), num: *num }
             }
+            Partitioner::RangeByKey { key_fn, num } => {
+                Partitioner::RangeByKey { key_fn: key_fn.clone(), num: *num }
+            }
             Partitioner::Balanced { num } => Partitioner::Balanced { num: *num },
         }
     }
@@ -85,6 +95,7 @@ impl std::fmt::Debug for Partitioner {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Partitioner::HashByKey { num, .. } => write!(f, "HashByKey({num})"),
+            Partitioner::RangeByKey { num, .. } => write!(f, "RangeByKey({num})"),
             Partitioner::Balanced { num } => write!(f, "Balanced({num})"),
         }
     }
@@ -93,7 +104,18 @@ impl std::fmt::Debug for Partitioner {
 impl Partitioner {
     pub fn num_partitions(&self) -> usize {
         match self {
-            Partitioner::HashByKey { num, .. } | Partitioner::Balanced { num } => *num,
+            Partitioner::HashByKey { num, .. }
+            | Partitioner::RangeByKey { num, .. }
+            | Partitioner::Balanced { num } => *num,
+        }
+    }
+
+    /// The key function, when this partitioner routes by key.
+    pub fn key_fn(&self) -> Option<&Arc<dyn Fn(&Record) -> String + Send + Sync>> {
+        match self {
+            Partitioner::HashByKey { key_fn, .. }
+            | Partitioner::RangeByKey { key_fn, .. } => Some(key_fn),
+            Partitioner::Balanced { .. } => None,
         }
     }
 
@@ -109,14 +131,78 @@ impl Partitioner {
     }
 }
 
+/// Cap on how many keys range-cut planning sorts; beyond it keys are
+/// sampled at a deterministic stride (TeraSort samples, we stride — no
+/// RNG, reproducible routing).
+pub const RANGE_SAMPLE_CAP: usize = 1024;
+
+/// Plan `num - 1` ascending cut points from a key sample. Duplicates in
+/// the sample are KEPT, so the cuts are frequency-weighted quantiles:
+/// heavily repeated keys pull cut points toward themselves and their
+/// neighbours spread over the remaining partitions. Equal cuts (one key
+/// dominating several quantiles) are tolerated — routing stays correct,
+/// partitions between equal cuts are just empty.
+pub fn range_cuts(mut sample: Vec<String>, num: usize) -> Vec<String> {
+    sample.sort_unstable();
+    let n = sample.len();
+    if n == 0 || num <= 1 {
+        return Vec::new();
+    }
+    (1..num)
+        .map(|j| {
+            // upper edge of the j-th of `num` equal-frequency slices
+            let idx = (j * n).div_ceil(num).clamp(1, n) - 1;
+            sample[idx].clone()
+        })
+        .collect()
+}
+
+/// Bucket of `key` under ascending `cuts`: the number of cut points
+/// `< key` — keys `<= cuts[0]` route to partition 0, keys above the
+/// last cut to partition `cuts.len()`.
+pub fn range_bucket(cuts: &[String], key: &str) -> usize {
+    cuts.partition_point(|c| c.as_str() < key)
+}
+
+/// Deterministic stride-sample of the keys of `records` chains, capped
+/// at [`RANGE_SAMPLE_CAP`] total.
+pub fn range_sample_keys<'a, I>(parts: I, total: usize, key_fn: &KeyFnRef) -> Vec<String>
+where
+    I: IntoIterator<Item = &'a [Record]>,
+{
+    let stride = (total / RANGE_SAMPLE_CAP).max(1);
+    let mut keys = Vec::with_capacity(total.min(RANGE_SAMPLE_CAP) + 1);
+    let mut i = 0usize;
+    for records in parts {
+        for r in records {
+            if i % stride == 0 {
+                keys.push(key_fn(r));
+            }
+            i += 1;
+        }
+    }
+    keys
+}
+
+/// Shared key-function handle (alias to keep signatures readable).
+pub type KeyFnRef = Arc<dyn Fn(&Record) -> String + Send + Sync>;
+
 /// The lineage tree.
 pub enum Plan {
     /// Materialized input partitions (parallelize / storage ingest).
     Source { partitions: Vec<Partition>, label: String },
     /// Narrow transformation: one task per partition, no shuffle.
     MapPartitions { parent: Arc<Plan>, op: Arc<dyn PartitionOp> },
-    /// Wide transformation: shuffle into a new partitioning.
-    Repartition { parent: Arc<Plan>, partitioner: Partitioner },
+    /// Wide transformation: shuffle into a new partitioning. `combine`
+    /// is an optional map-side combiner (an associative + commutative
+    /// aggregation op the optimizer pushed below the shuffle): it runs
+    /// once per map-side partition BEFORE records are routed, so only
+    /// partial aggregates cross the simulated interconnect.
+    Repartition {
+        parent: Arc<Plan>,
+        partitioner: Partitioner,
+        combine: Option<Arc<dyn PartitionOp>>,
+    },
 }
 
 impl Plan {
@@ -151,7 +237,10 @@ impl Plan {
         match self {
             Plan::Source { label, .. } => format!("source[{label}]"),
             Plan::MapPartitions { op, .. } => format!("map[{}]", op.label()),
-            Plan::Repartition { partitioner, .. } => format!("shuffle[{partitioner:?}]"),
+            Plan::Repartition { partitioner, combine, .. } => match combine {
+                Some(c) => format!("shuffle[{partitioner:?}, +combine {}]", c.label()),
+                None => format!("shuffle[{partitioner:?}]"),
+            },
         }
     }
 
@@ -182,11 +271,24 @@ pub fn route(partitioner: &Partitioner, records: Vec<Record>) -> Vec<Vec<Record>
 /// round-robin. Without the salt, N partitions holding one record each
 /// would all route to bucket 0 (Spark staggers by partition id for the
 /// same reason).
+///
+/// `RangeByKey` here plans its cuts from THIS call's records only — the
+/// single-partition fallback. The shuffle service
+/// (`cluster::shuffle`) plans ONE global cut set over all map outputs
+/// and routes with [`route_with_cuts`] so every source partition agrees
+/// on the key ranges.
 pub fn route_from(
     partitioner: &Partitioner,
     records: Vec<Record>,
     salt: usize,
 ) -> Vec<Vec<Record>> {
+    if let Partitioner::RangeByKey { key_fn, num } = partitioner {
+        let total = records.len();
+        let sample =
+            range_sample_keys(std::iter::once(records.as_slice()), total, key_fn);
+        let cuts = range_cuts(sample, *num);
+        return route_with_cuts(&cuts, *num, key_fn, records);
+    }
     let num = partitioner.num_partitions();
     let mut buckets: Vec<Vec<Record>> = (0..num).map(|_| Vec::new()).collect();
     match partitioner {
@@ -197,11 +299,28 @@ pub fn route_from(
                 buckets[b].push(r);
             }
         }
+        Partitioner::RangeByKey { .. } => unreachable!("handled above"),
         Partitioner::Balanced { .. } => {
             for (i, r) in records.into_iter().enumerate() {
                 buckets[(salt + i) % num].push(r);
             }
         }
+    }
+    buckets
+}
+
+/// Route records into `num` buckets under pre-planned range `cuts`
+/// (see [`range_cuts`] / [`range_bucket`]).
+pub fn route_with_cuts(
+    cuts: &[String],
+    num: usize,
+    key_fn: &KeyFnRef,
+    records: Vec<Record>,
+) -> Vec<Vec<Record>> {
+    let mut buckets: Vec<Vec<Record>> = (0..num).map(|_| Vec::new()).collect();
+    for r in records {
+        let b = range_bucket(cuts, &key_fn(r)).min(num.saturating_sub(1));
+        buckets[b].push(r);
     }
     buckets
 }
@@ -247,6 +366,7 @@ mod tests {
         let shuffled = Arc::new(Plan::Repartition {
             parent: mapped,
             partitioner: Partitioner::Balanced { num: 2 },
+            combine: None,
         });
         assert_eq!(shuffled.num_partitions(), 2);
         assert_eq!(shuffled.depth(), 3);
@@ -290,5 +410,62 @@ mod tests {
     fn hash_is_stable() {
         assert_eq!(Partitioner::hash_key("chr1"), Partitioner::hash_key("chr1"));
         assert_ne!(Partitioner::hash_key("chr1"), Partitioner::hash_key("chr2"));
+    }
+
+    #[test]
+    fn range_cuts_are_weighted_quantiles() {
+        // uniform sample: cuts split evenly
+        let sample: Vec<String> = (0..8).map(|i| format!("k{i}")).collect();
+        let cuts = range_cuts(sample, 4);
+        assert_eq!(cuts, vec!["k1", "k3", "k5"]);
+        // a dominating key pulls the cuts toward itself
+        let mut skewed = vec!["hot".to_string(); 6];
+        skewed.push("a".into());
+        skewed.push("z".into());
+        let cuts = range_cuts(skewed, 4);
+        assert!(cuts.iter().filter(|c| c.as_str() == "hot").count() >= 2, "{cuts:?}");
+        // degenerate inputs
+        assert!(range_cuts(vec![], 4).is_empty());
+        assert!(range_cuts(vec!["x".into()], 1).is_empty());
+    }
+
+    #[test]
+    fn range_bucket_is_monotone_and_groups_equal_keys() {
+        let cuts = vec!["b".to_string(), "d".to_string(), "d".to_string()];
+        assert_eq!(range_bucket(&cuts, "a"), 0);
+        assert_eq!(range_bucket(&cuts, "b"), 0);
+        assert_eq!(range_bucket(&cuts, "c"), 1);
+        assert_eq!(range_bucket(&cuts, "d"), 1);
+        assert_eq!(range_bucket(&cuts, "e"), 3);
+    }
+
+    #[test]
+    fn range_routing_groups_keys_and_conserves_records() {
+        let key_fn: KeyFnRef = Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
+        let p = Partitioner::RangeByKey { key_fn, num: 3 };
+        let records: Vec<Record> = "a1 a2 b1 b2 c1 c2 c3 c4"
+            .split(' ')
+            .map(Record::text)
+            .collect();
+        let buckets = route(&p, records);
+        assert_eq!(buckets.iter().map(|b| b.len()).sum::<usize>(), 8);
+        // a key is never split across buckets (grouping invariant)
+        let mut key_bucket: std::collections::HashMap<&str, usize> =
+            std::collections::HashMap::new();
+        for (i, bucket) in buckets.iter().enumerate() {
+            for r in bucket {
+                let k = &r.as_text().unwrap()[..1];
+                assert_eq!(*key_bucket.entry(k).or_insert(i), i, "{buckets:?}");
+            }
+        }
+        // range order: every key in bucket i <= every key in bucket i+1
+        let maxes: Vec<Option<&str>> = buckets
+            .iter()
+            .map(|b| b.iter().map(|r| r.as_text().unwrap()).max())
+            .collect();
+        let non_empty: Vec<&str> = maxes.into_iter().flatten().collect();
+        let mut sorted = non_empty.clone();
+        sorted.sort_unstable();
+        assert_eq!(non_empty, sorted);
     }
 }

@@ -1,10 +1,10 @@
 //! `mare` CLI — leader entrypoint.
 //!
 //! ```text
-//! mare run  --workload gc|vs|snp --storage hdfs|swift|s3|local
+//! mare run  --workload gc|vs|snp|kmer --storage hdfs|swift|s3|local
 //!           [--workers N] [--vcpus M] [--scale S] [--seed K]
 //!           [--reduce-depth D] [--config file.json] [--artifacts DIR]
-//! mare plan --workload gc|vs|snp [--json]   # logical -> optimized -> physical
+//! mare plan --workload gc|vs|snp|kmer [--json]   # logical -> optimized -> physical
 //! mare submit <plan.json> [--queue DIR]     # validate + enqueue a wire plan
 //! mare jobs [--queue DIR] [--tenant T]      # list queued/running/done/failed
 //! mare work [--queue DIR] [--workers N] [--fault W:K:hold|running|midrun[@S]]
@@ -81,7 +81,7 @@ USAGE:
   mare help              this text
 
 OPTIONS (run/plan):
-  --workload gc|vs|snp    pipeline to run              [gc]
+  --workload gc|vs|snp|kmer   pipeline to run          [gc]
   --storage hdfs|swift|s3|local   ingestion backend    [hdfs]
   --workers N             cluster workers              [16]
   --vcpus M               vCPUs per worker             [8]
@@ -199,9 +199,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let cluster = mare::workloads::make_cluster(cfg.cluster.clone(), None, None)?;
     let storage_backed = args.flag("storage").is_some();
     let label = match (cfg.workload, storage_backed) {
-        (Workload::Gc, true) => format!("{}://genome.txt?lines=16", cfg.backend.name()),
+        (Workload::Gc | Workload::Kmer, true) => {
+            format!("{}://genome.txt?lines=16", cfg.backend.name())
+        }
         (Workload::Vs, true) => format!("{}://library.sdf?molecules=8", cfg.backend.name()),
-        (Workload::Gc, false) => "gen:gc:16".to_string(),
+        // kmer shares the GC genome generator: gen:gc: labels resolve
+        // to the same seeded text on every executing driver
+        (Workload::Gc | Workload::Kmer, false) => "gen:gc:16".to_string(),
         (Workload::Vs, false) => "gen:vs:8".to_string(),
         (Workload::Snp, _) => {
             if storage_backed {
@@ -226,6 +230,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Workload::Gc => mare::workloads::gc::pipeline(cluster, ds),
         Workload::Vs => mare::workloads::vs::pipeline(cluster, ds, cfg.reduce_depth),
         Workload::Snp => mare::workloads::snp::pipeline(cluster, ds, cfg.cluster.workers),
+        Workload::Kmer => {
+            mare::workloads::kmer::pipeline(cluster, ds, cfg.cluster.workers, true)
+        }
     };
     if args.flag_bool("json") {
         // the v1 wire envelope (docs/WIRE_FORMAT.md) — submittable as-is

@@ -119,6 +119,7 @@ impl PipelineBuilder {
             depth: None,
             disk_mounts: self.disk_default,
             fused: None,
+            combine: false,
         }));
         self
     }
@@ -132,6 +133,7 @@ impl PipelineBuilder {
         self.ops.push(PipelineOp::RepartitionBy {
             key: KeySelector::opaque(key_fn),
             partitions,
+            combine: None,
         });
         self
     }
@@ -143,7 +145,9 @@ impl PipelineBuilder {
     /// drivers. An unknown name is a build error.
     pub fn repartition_by_named(mut self, name: &str, partitions: usize) -> Self {
         match KeySelector::named(name) {
-            Some(key) => self.ops.push(PipelineOp::RepartitionBy { key, partitions }),
+            Some(key) => {
+                self.ops.push(PipelineOp::RepartitionBy { key, partitions, combine: None })
+            }
             None => self.errors.push(format!(
                 "unknown key function `{name}` (registered: {})",
                 KeySelector::known().join(", ")
@@ -254,6 +258,20 @@ impl PipelineBuilder {
                 }
             }
             _ => self.errors.push("`.depth(..)` must follow a reduce step".into()),
+        }
+        self
+    }
+
+    /// Declare the last reduce step associative + commutative. The
+    /// optimizer may then clone it below a directly preceding shuffle
+    /// boundary as a map-side combiner (`opt::push_combiners`), so the
+    /// shuffle ships partial aggregates instead of raw records. The
+    /// declaration is the caller's promise — the framework cannot check
+    /// algebraic laws of a container command.
+    pub fn combine(mut self) -> Self {
+        match self.ops.last_mut() {
+            Some(PipelineOp::Reduce(r)) => r.combine = true,
+            _ => self.errors.push("`.combine()` must follow a reduce step".into()),
         }
         self
     }
@@ -653,6 +671,29 @@ mod tests {
             "{}",
             job.logical().describe()
         );
+    }
+
+    #[test]
+    fn combine_flags_the_reduce_and_flows_into_explain() {
+        let err = MaRe::source(cluster(1), numbers(4, 2))
+            .combine()
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`.combine()` must follow a reduce step"), "{err}");
+
+        let job = MaRe::source(cluster(2), numbers(8, 4))
+            .repartition_by_named("first_word", 2)
+            .reduce("ubuntu", "awk '{s+=$1} END {print s}' /counts > /sum")
+            .mounts("/counts", "/sum")
+            .combine()
+            .build()
+            .unwrap();
+        let logical = job.logical().describe();
+        assert!(logical.contains(", combine"), "{logical}");
+        assert_eq!(job.opt_report().pushed_combiners, 1);
+        let s = job.explain();
+        assert!(s.contains("+combine"), "{s}");
     }
 
     #[test]

@@ -7,7 +7,14 @@
 //! slot occupancy is the max `cpus` over its parts (`bwa -t 8` ⇒ 8).
 
 use crate::simtime::{CostModel, Duration};
-use crate::tools::{bwa::Bwa, fred::Fred, gatk::Gatk, sdsorter::SdSorter, vcf_concat::VcfConcat};
+use crate::tools::{
+    bwa::Bwa,
+    fred::Fred,
+    gatk::Gatk,
+    kmer::{KmerAgg, Kmerize},
+    sdsorter::SdSorter,
+    vcf_concat::VcfConcat,
+};
 
 /// POSIX text tools: cheap, IO-bound.
 fn posix_model() -> CostModel {
@@ -58,6 +65,8 @@ pub fn infer(command: &str) -> CostModel {
                 }
             }
             "vcf-concat" => Some(VcfConcat::cost_model()),
+            "kmerize" => Some(Kmerize::cost_model()),
+            "kmeragg" => Some(KmerAgg::cost_model()),
             "grep" | "awk" | "wc" | "sort" | "cat" | "gzip" | "gunzip" | "zcat"
             | "samtools" | "head" | "tail" | "uniq" | "tr" | "sed" | "cut" | "echo"
             | "tee" => Some(posix_model()),
@@ -115,6 +124,15 @@ mod tests {
         assert_eq!(m.cpus, 8);
         // helper JVMs + HC fixed costs accumulate
         assert!(m.fixed >= Duration::seconds(12.0));
+    }
+
+    #[test]
+    fn kmer_tools_have_explicit_models() {
+        let m = infer("kmerize -k 4 /seq > /kmers");
+        assert_eq!(m.cpus, 1);
+        assert!(m.secs_per_byte > posix_model().secs_per_byte);
+        let m = infer("kmeragg /kmers > /counts");
+        assert!(m.secs_per_byte > posix_model().secs_per_byte);
     }
 
     #[test]

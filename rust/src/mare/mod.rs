@@ -201,6 +201,7 @@ impl MaRe {
             depth: Some(spec.depth.max(1)),
             disk_mounts: self.disk_mounts,
             fused: None,
+            combine: false,
         };
         let lowering = Lowering::for_cluster(&self.cluster);
         let dataset = lowering.lower_op(self.dataset, &PipelineOp::Reduce(step));

@@ -77,6 +77,9 @@ pub struct OptReport {
     pub fused_maps: usize,
     /// Map nodes folded into the first level of a following reduce.
     pub maps_fused_into_reduce: usize,
+    /// Combiners pushed below a preceding shuffle boundary (a
+    /// `.combine()`-declared reduce directly after a `repartitionBy`).
+    pub pushed_combiners: usize,
     /// Depths chosen for `depth=auto` reduces, in pipeline order.
     pub planned_depths: Vec<usize>,
 }
@@ -98,6 +101,13 @@ impl OptReport {
                 if self.maps_fused_into_reduce == 1 { "" } else { "s" }
             ));
         }
+        if self.pushed_combiners > 0 {
+            parts.push(format!(
+                "{} combiner{} pushed below the shuffle",
+                self.pushed_combiners,
+                if self.pushed_combiners == 1 { "" } else { "s" }
+            ));
+        }
         for k in &self.planned_depths {
             parts.push(format!("reduce depth auto-planned to {k}"));
         }
@@ -113,7 +123,8 @@ pub fn optimize(pipeline: &Pipeline, env: &OptEnv) -> (Pipeline, OptReport) {
     let mut report = OptReport::default();
     let fused = fuse_maps(pipeline, &mut report);
     let folded = fuse_maps_into_reduces(&fused, &mut report);
-    let planned = plan_depths(&folded, env, &mut report);
+    let combined = push_combiners(&folded, &mut report);
+    let planned = plan_depths(&combined, env, &mut report);
     (planned, report)
 }
 
@@ -220,6 +231,44 @@ fn fuse_maps_into_reduces(pipeline: &Pipeline, report: &mut OptReport) -> Pipeli
                 out.push(PipelineOp::Reduce(folded));
                 report.maps_fused_into_reduce += 1;
                 continue;
+            }
+        }
+        out.push(op.clone());
+    }
+    Pipeline::new(out)
+}
+
+/// Pass 1c (the shuffle-path tentpole): push a `.combine()`-declared
+/// reduce's command BELOW the shuffle boundary that feeds it. The
+/// pattern `repartitionBy` → `reduce{combine}` rewrites the
+/// repartition node to carry the reduce step as a map-side combiner:
+/// at execution time the shuffle service runs that command once per
+/// map-side partition before routing (`shuffle::shuffle_combined`), so
+/// partial aggregates — not raw records — cross the interconnect. The
+/// reduce node itself stays in place and re-aggregates the partials
+/// (sound exactly because `.combine()` asserts associativity +
+/// commutativity).
+///
+/// A reduce that already carries a fused map is skipped: the fused map
+/// runs AFTER the shuffle at tree level 0, so combining its *input*
+/// records map-side would aggregate pre-map data. (The fusion pass
+/// only folds maps adjacent to the reduce, so this pattern cannot
+/// arise today — the guard is load-bearing against pass reordering.)
+fn push_combiners(pipeline: &Pipeline, report: &mut OptReport) -> Pipeline {
+    let ops = pipeline.ops();
+    let mut out: Vec<PipelineOp> = Vec::with_capacity(ops.len());
+    for (i, op) in ops.iter().enumerate() {
+        if let PipelineOp::RepartitionBy { key, partitions, combine: None } = op {
+            if let Some(PipelineOp::Reduce(r)) = ops.get(i + 1) {
+                if r.combine && r.fused.is_none() {
+                    out.push(PipelineOp::RepartitionBy {
+                        key: key.clone(),
+                        partitions: *partitions,
+                        combine: Some(Box::new(r.clone())),
+                    });
+                    report.pushed_combiners += 1;
+                    continue;
+                }
             }
         }
         out.push(op.clone());
@@ -416,6 +465,7 @@ mod tests {
                 depth,
                 disk_mounts: false,
                 fused: None,
+                combine: false,
             })
         };
         let (opt, report) = optimize(&wrap(vec![reduce(None)]), &ENV);
@@ -486,6 +536,7 @@ mod tests {
             depth: None,
             disk_mounts: false,
             fused: None,
+            combine: false,
         });
         let plan_with = |bytes: Option<Vec<u64>>| {
             let env = OptEnv { workers: 4, source_partitions: 256, partition_bytes: bytes };
@@ -532,6 +583,7 @@ mod tests {
             depth,
             disk_mounts: false,
             fused: None,
+            combine: false,
         }
     }
 
@@ -599,6 +651,7 @@ mod tests {
             depth: Some(1),
             disk_mounts: false,
             fused: None,
+            combine: false,
         };
         let p = wrap(vec![
             PipelineOp::Map(map("ubuntu", "grep -c G /dna > /gc", "/dna", "/gc")),
@@ -668,5 +721,93 @@ mod tests {
             "one container start saved per partition"
         );
         assert!(fused_explain.contains("fused into reduce level 0"), "{fused_explain}");
+    }
+
+    // ------------------------------------------------- combiner pushdown
+
+    use crate::mare::pipeline::KeySelector;
+
+    fn assoc_reduce(combine: bool) -> ReduceStep {
+        ReduceStep {
+            input_mount: MountPoint::text("/in"),
+            output_mount: MountPoint::text("/out"),
+            image: "ubuntu".into(),
+            command: "awk '{s+=$1} END {print s}' /in > /out".into(),
+            depth: Some(1),
+            disk_mounts: false,
+            fused: None,
+            combine,
+        }
+    }
+
+    fn repart(partitions: usize) -> PipelineOp {
+        PipelineOp::RepartitionBy {
+            key: KeySelector::named("first_word").unwrap(),
+            partitions,
+            combine: None,
+        }
+    }
+
+    #[test]
+    fn declared_combine_is_pushed_below_the_shuffle() {
+        let p = wrap(vec![repart(4), PipelineOp::Reduce(assoc_reduce(true))]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.pushed_combiners, 1);
+        assert!(report.summary().contains("1 combiner pushed below the shuffle"));
+        let carried = opt
+            .ops()
+            .iter()
+            .find_map(|o| match o {
+                PipelineOp::RepartitionBy { combine, .. } => combine.as_ref(),
+                _ => None,
+            })
+            .expect("repartitionBy carries the combiner");
+        assert_eq!(carried.command, assoc_reduce(true).command);
+        // the reduce node stays in place to re-aggregate the partials
+        assert_eq!(opt.num_reduces(), 1);
+        assert!(opt.describe().contains("+combine awk"), "{}", opt.describe());
+    }
+
+    #[test]
+    fn combiner_pushdown_requires_declaration_and_adjacency() {
+        // no `.combine()` declaration: no pushdown
+        let p = wrap(vec![repart(4), PipelineOp::Reduce(assoc_reduce(false))]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.pushed_combiners, 0);
+        assert!(!opt.describe().contains("+combine"), "{}", opt.describe());
+
+        // a map between the shuffle and the reduce: no pushdown (the
+        // combiner would aggregate pre-map records)
+        let p = wrap(vec![
+            repart(4),
+            PipelineOp::Map(map("other", "cat /x > /in", "/x", "/in")),
+            PipelineOp::Reduce(assoc_reduce(true)),
+        ]);
+        let (_, report) = optimize(&p, &ENV);
+        assert_eq!(report.pushed_combiners, 0);
+
+        // balanced repartition (no keys): no pushdown — the combiner is
+        // only sound below a keyed regrouping feeding the reduce
+        let p = wrap(vec![
+            PipelineOp::Repartition { partitions: 4 },
+            PipelineOp::Reduce(assoc_reduce(true)),
+        ]);
+        let (_, report) = optimize(&p, &ENV);
+        assert_eq!(report.pushed_combiners, 0);
+    }
+
+    #[test]
+    fn combiner_and_map_fusion_compose() {
+        // map | repartitionBy | reduce{combine}: the map cannot fold
+        // into the reduce (shuffle barrier) but the combiner pushes
+        let p = wrap(vec![
+            PipelineOp::Map(map("ubuntu", "grep -c G /dna > /in", "/dna", "/in")),
+            repart(4),
+            PipelineOp::Reduce(assoc_reduce(true)),
+        ]);
+        let (opt, report) = optimize(&p, &ENV);
+        assert_eq!(report.maps_fused_into_reduce, 0);
+        assert_eq!(report.pushed_combiners, 1);
+        assert_eq!(opt.num_maps(), 1);
     }
 }

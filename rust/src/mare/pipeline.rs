@@ -78,6 +78,28 @@ fn key_prefix_colon(r: &Record) -> String {
     r.as_text().and_then(|t| t.split(':').next()).unwrap_or("").to_string()
 }
 
+/// First [`KMER_PREFIX_LEN`] characters of the first whitespace-separated
+/// token — the k-mer statistics workload's bucketing key
+/// (`workloads::kmer`): `<kmer>\t<count>` records sharing a prefix group
+/// into the same partition. Shorter tokens key on the whole token; `*`
+/// for non-text records.
+fn key_kmer_prefix(r: &Record) -> String {
+    match r.as_text().and_then(|t| t.split_whitespace().next()) {
+        Some(tok) => {
+            let end = tok
+                .char_indices()
+                .nth(KMER_PREFIX_LEN)
+                .map(|(i, _)| i)
+                .unwrap_or(tok.len());
+            tok[..end].to_string()
+        }
+        None => "*".to_string(),
+    }
+}
+
+/// Prefix length of the `kmer_prefix` named key.
+pub const KMER_PREFIX_LEN: usize = 4;
+
 /// The single registry table — [`KeySelector::known`] and
 /// [`KeySelector::named`] both derive from it, so the name list and
 /// the lookups cannot drift apart.
@@ -85,6 +107,7 @@ const KEY_REGISTRY: &[(&str, fn(&Record) -> String)] = &[
     ("chromosome", key_chromosome),
     ("first_word", key_first_word),
     ("prefix_colon", key_prefix_colon),
+    ("kmer_prefix", key_kmer_prefix),
 ];
 
 impl KeySelector {
@@ -158,6 +181,13 @@ pub struct ReduceStep {
     /// `None` in user-written logical plans; derived metadata that is
     /// not serialized by [`super::wire`].
     pub fused: Option<MapStep>,
+    /// Declares the reducer associative + commutative: aggregating
+    /// partial aggregates yields the same result as aggregating raw
+    /// records, so the optimizer may run this command as a map-side
+    /// combiner BELOW the preceding shuffle boundary
+    /// (`opt::push_combiners`). Set by the builder's `.combine()`;
+    /// serialized by [`super::wire`] as the `"combine"` field.
+    pub combine: bool,
 }
 
 /// One node of the logical plan.
@@ -167,8 +197,18 @@ pub enum PipelineOp {
     Ingest { label: String, partitions: usize },
     Map(MapStep),
     Reduce(ReduceStep),
-    /// keyBy + hash partitioner regrouping (§1.2.2).
-    RepartitionBy { key: KeySelector, partitions: usize },
+    /// keyBy + sample-based range partitioner regrouping (§1.2.2).
+    RepartitionBy {
+        key: KeySelector,
+        partitions: usize,
+        /// A combiner the optimizer pushed below this shuffle boundary
+        /// (`opt::push_combiners`): the following reduce's command runs
+        /// once per map-side partition BEFORE records are routed, so
+        /// the shuffle ships partial aggregates instead of raw records.
+        /// Always `None` in user-written logical plans; derived
+        /// metadata that is not serialized by [`super::wire`].
+        combine: Option<Box<ReduceStep>>,
+    },
     /// Balanced rebalance into `partitions` (no keys).
     Repartition { partitions: usize },
     /// Terminal marker: results are collected to the driver.
@@ -214,13 +254,24 @@ impl PipelineOp {
                     None => "auto".into(),
                 },
                 if r.disk_mounts { ", disk" } else { "" },
-                match &r.fused {
-                    Some(m) => format!(", +map {}", first_word(&m.command)),
-                    None => String::new(),
-                },
+                format!(
+                    "{}{}",
+                    match &r.fused {
+                        Some(m) => format!(", +map {}", first_word(&m.command)),
+                        None => String::new(),
+                    },
+                    if r.combine { ", combine" } else { "" },
+                ),
             ),
-            PipelineOp::RepartitionBy { key, partitions } => {
-                format!("repartitionBy[{} -> {partitions}]", key.name().unwrap_or("keyBy"))
+            PipelineOp::RepartitionBy { key, partitions, combine } => {
+                format!(
+                    "repartitionBy[{} -> {partitions}{}]",
+                    key.name().unwrap_or("keyBy"),
+                    match combine {
+                        Some(c) => format!(", +combine {}", first_word(&c.command)),
+                        None => String::new(),
+                    },
+                )
             }
             PipelineOp::Repartition { partitions } => {
                 format!("repartition[{partitions}]")
@@ -360,8 +411,22 @@ impl Lowering {
                 &m.command,
                 m.disk_mounts,
             )),
-            PipelineOp::RepartitionBy { key, partitions } => {
-                ds.repartition_by_key(key.key_fn().clone(), *partitions)
+            PipelineOp::RepartitionBy { key, partitions, combine } => {
+                // the skew-aware sample-based range partitioner (cuts
+                // planned from the observed key distribution at shuffle
+                // time), with the optimizer-pushed combiner — if any —
+                // lowered to a container op that runs per map-side
+                // partition before routing
+                let combiner = combine.as_ref().map(|c| {
+                    self.container_op(
+                        c.input_mount.clone(),
+                        c.output_mount.clone(),
+                        &c.image,
+                        &c.command,
+                        c.disk_mounts,
+                    ) as Arc<dyn crate::dataset::PartitionOp>
+                });
+                ds.repartition_by_key_range(key.key_fn().clone(), *partitions, combiner)
             }
             PipelineOp::Repartition { partitions } => ds.repartition(*partitions),
             PipelineOp::Reduce(r) => self.lower_reduce(ds, r),
@@ -453,6 +518,7 @@ mod tests {
             depth,
             disk_mounts: false,
             fused: None,
+            combine: false,
         }
     }
 
@@ -532,12 +598,16 @@ mod tests {
         assert_eq!(key_of("chromosome", &sam), "chr7");
         assert_eq!(key_of("first_word", &sam), "read1");
         assert_eq!(key_of("prefix_colon", &Record::text("chr2:r9")), "chr2");
+        assert_eq!(key_of("kmer_prefix", &Record::text("ACGTAAGG\t3")), "ACGT");
+        assert_eq!(key_of("kmer_prefix", &Record::text("AC\t1")), "AC");
         // non-text records fall back rather than panic
         assert_eq!(key_of("chromosome", &Record::binary("x.gz", vec![1])), "*");
+        assert_eq!(key_of("kmer_prefix", &Record::binary("x.gz", vec![1])), "*");
 
         let p = Pipeline::new(vec![PipelineOp::RepartitionBy {
             key: KeySelector::named("chromosome").unwrap(),
             partitions: 4,
+            combine: None,
         }]);
         assert!(p.describe().contains("repartitionBy[chromosome -> 4]"), "{}", p.describe());
     }
@@ -556,6 +626,7 @@ mod tests {
             PipelineOp::RepartitionBy {
                 key: KeySelector::opaque(Arc::new(|_: &Record| "k".into())),
                 partitions: 3,
+                combine: None,
             },
             PipelineOp::Repartition { partitions: 2 },
             PipelineOp::Reduce(sum_reduce(None)),

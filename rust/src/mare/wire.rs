@@ -295,7 +295,7 @@ fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
             if let Some(k) = r.depth {
                 check_count(at, "depth", k)?;
             }
-            Json::obj(vec![
+            let mut fields = vec![
                 ("op", Json::str("reduce")),
                 ("image", Json::str(r.image.as_str())),
                 ("command", Json::str(r.command.as_str())),
@@ -309,9 +309,28 @@ fn encode_op(op: &PipelineOp, at: &str) -> Result<Json, WireError> {
                     },
                 ),
                 ("disk_mounts", Json::Bool(r.disk_mounts)),
-            ])
+            ];
+            // absent-means-false: plans without the declaration encode
+            // byte-identically to every pre-combine release, and old
+            // decoders read new plans via the unknown-node-field rule
+            // (they lose only the optimization, never correctness —
+            // the combiner is a clone of this very reduce)
+            if r.combine {
+                fields.push(("combine", Json::Bool(true)));
+            }
+            Json::obj(fields)
         }
-        PipelineOp::RepartitionBy { key, partitions } => {
+        PipelineOp::RepartitionBy { key, partitions, combine } => {
+            if combine.is_some() {
+                // the pushed combiner is derived optimizer metadata
+                // (a clone of the downstream reduce); shipping it would
+                // double-encode the step — encode the LOGICAL plan
+                // (Job::logical()), not the optimized one
+                return Err(WireError::Structure(format!(
+                    "{at}: repartitionBy carries an optimizer-pushed combiner; \
+                     only logical plans are serializable"
+                )));
+            }
             let name = key.name().ok_or_else(|| WireError::OpaqueKeyFn { at: at.into() })?;
             check_count(at, "partitions", *partitions)?;
             Json::obj(vec![
@@ -445,6 +464,7 @@ fn decode_op(node: &Json, at: &str) -> Result<PipelineOp, WireError> {
             disk_mounts: opt_bool(node, at, "disk_mounts", false)?,
             // derived optimizer metadata: never on the wire
             fused: None,
+            combine: opt_bool(node, at, "combine", false)?,
         })),
         "repartition_by" => {
             let name = req_str(node, at, "key")?;
@@ -453,6 +473,8 @@ fn decode_op(node: &Json, at: &str) -> Result<PipelineOp, WireError> {
             Ok(PipelineOp::RepartitionBy {
                 key,
                 partitions: req_count(node, at, "partitions")?,
+                // derived optimizer metadata: never on the wire
+                combine: None,
             })
         }
         "repartition" => Ok(PipelineOp::Repartition {
@@ -677,6 +699,7 @@ mod tests {
             PipelineOp::RepartitionBy {
                 key: KeySelector::named("chromosome").unwrap(),
                 partitions: 3,
+                combine: None,
             },
             PipelineOp::Map(MapStep {
                 input_mount: MountPoint::stream(),
@@ -694,6 +717,7 @@ mod tests {
                 depth: Some(3),
                 disk_mounts: false,
                 fused: None,
+                combine: false,
             }),
             PipelineOp::Reduce(ReduceStep {
                 input_mount: text_mount("/counts"),
@@ -703,6 +727,7 @@ mod tests {
                 depth: None,
                 disk_mounts: false,
                 fused: None,
+                combine: true,
             }),
             PipelineOp::Collect,
         ])
@@ -1035,6 +1060,7 @@ mod tests {
             PipelineOp::RepartitionBy {
                 key: KeySelector::opaque(Arc::new(|_: &Record| "k".into())),
                 partitions: 2,
+                combine: None,
             },
             PipelineOp::Collect,
         ]);
@@ -1065,6 +1091,7 @@ mod tests {
                 depth: Some(0),
                 disk_mounts: false,
                 fused: None,
+                combine: false,
             }),
             PipelineOp::Collect,
         ]);
@@ -1095,12 +1122,99 @@ mod tests {
                     command: "grep -c G /dna > /gc".into(),
                     disk_mounts: false,
                 }),
+                combine: false,
             }),
             PipelineOp::Collect,
         ]);
         match encode(&fused) {
             Err(WireError::Structure(msg)) => {
                 assert!(msg.contains("fused"), "{msg}")
+            }
+            other => panic!("expected a Structure error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn combine_is_absent_unless_declared_and_roundtrips() {
+        let reduce = |combine: bool| {
+            Pipeline::new(vec![
+                PipelineOp::Ingest { label: "x".into(), partitions: 4 },
+                PipelineOp::Reduce(ReduceStep {
+                    input_mount: text_mount("/counts"),
+                    output_mount: text_mount("/sum"),
+                    image: "ubuntu".into(),
+                    command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+                    depth: None,
+                    disk_mounts: false,
+                    fused: None,
+                    combine,
+                }),
+                PipelineOp::Collect,
+            ])
+        };
+
+        // undeclared: no `combine` key at all — byte-identical to every
+        // pre-combine release of the envelope
+        let plain = encode(&reduce(false)).unwrap();
+        let node = &plain.get("ops").unwrap().as_arr().unwrap()[1];
+        assert!(node.get("combine").is_none());
+
+        // declared: `"combine": true` on the wire, and it survives the
+        // round trip
+        let tagged = encode(&reduce(true)).unwrap();
+        let node = &tagged.get("ops").unwrap().as_arr().unwrap()[1];
+        assert_eq!(node.get("combine").unwrap(), &Json::Bool(true));
+        let decoded = decode(&tagged).unwrap();
+        let PipelineOp::Reduce(r) = &decoded.ops()[1] else { panic!("expected reduce") };
+        assert!(r.combine);
+        assert_eq!(encode(&decoded).unwrap(), tagged);
+
+        // an explicit `"combine": false` decodes, then canonicalizes
+        // back to the absent form
+        let explicit = r#"{
+          "version": 1,
+          "ops": [
+            {"op": "ingest", "label": "x", "partitions": 4},
+            {"op": "reduce", "image": "ubuntu", "command": "c",
+             "input": {"kind": "text", "path": "/a"},
+             "output": {"kind": "text", "path": "/a"},
+             "depth": "auto", "combine": false},
+            {"op": "collect"}
+          ]
+        }"#;
+        let p = decode_str(explicit).unwrap();
+        let PipelineOp::Reduce(r) = &p.ops()[1] else { panic!("expected reduce") };
+        assert!(!r.combine);
+        let re = encode(&p).unwrap();
+        assert!(re.get("ops").unwrap().as_arr().unwrap()[1].get("combine").is_none());
+    }
+
+    #[test]
+    fn encode_rejects_optimizer_pushed_combiner() {
+        // the pushed combiner on a shuffle node is derived metadata,
+        // exactly like a fused map on a reduce: encoding the optimized
+        // plan is a caller bug, reported as a typed error
+        let pushed = Pipeline::new(vec![
+            PipelineOp::Ingest { label: "x".into(), partitions: 4 },
+            PipelineOp::RepartitionBy {
+                key: KeySelector::named("first_word").unwrap(),
+                partitions: 2,
+                combine: Some(Box::new(ReduceStep {
+                    input_mount: text_mount("/counts"),
+                    output_mount: text_mount("/sum"),
+                    image: "ubuntu".into(),
+                    command: "awk '{s+=$1} END {print s}' /counts > /sum".into(),
+                    depth: None,
+                    disk_mounts: false,
+                    fused: None,
+                    combine: true,
+                })),
+            },
+            PipelineOp::Collect,
+        ]);
+        match encode(&pushed) {
+            Err(WireError::Structure(msg)) => {
+                assert!(msg.contains("optimizer-pushed combiner"), "{msg}")
             }
             other => panic!("expected a Structure error, got {other:?}"),
         }

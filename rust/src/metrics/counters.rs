@@ -22,6 +22,9 @@ pub struct ServeCounters {
     pub claim_conflicts: AtomicU64,
     /// Backoff sleeps taken between contended claim scans.
     pub claim_backoffs: AtomicU64,
+    /// Spool records read + parsed by claim scans (cache misses of the
+    /// claim-scan index; unchanged records cost a `stat`, not a parse).
+    pub spool_parses: AtomicU64,
     /// Stale claim holds swept back into the queue.
     pub swept: AtomicU64,
     /// Simulated container launches performed by finished jobs.
@@ -44,6 +47,7 @@ pub struct CounterSnapshot {
     pub claims: u64,
     pub claim_conflicts: u64,
     pub claim_backoffs: u64,
+    pub spool_parses: u64,
     pub swept: u64,
     pub launches: u64,
     pub jobs_done: u64,
@@ -63,6 +67,7 @@ impl ServeCounters {
             claims: self.claims.load(Ordering::Relaxed),
             claim_conflicts: self.claim_conflicts.load(Ordering::Relaxed),
             claim_backoffs: self.claim_backoffs.load(Ordering::Relaxed),
+            spool_parses: self.spool_parses.load(Ordering::Relaxed),
             swept: self.swept.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
             jobs_done: self.jobs_done.load(Ordering::Relaxed),
@@ -81,6 +86,7 @@ impl CounterSnapshot {
             ("claims", Json::Num(self.claims as f64)),
             ("claim_conflicts", Json::Num(self.claim_conflicts as f64)),
             ("claim_backoffs", Json::Num(self.claim_backoffs as f64)),
+            ("spool_parses", Json::Num(self.spool_parses as f64)),
             ("swept", Json::Num(self.swept as f64)),
             ("launches", Json::Num(self.launches as f64)),
             ("jobs_done", Json::Num(self.jobs_done as f64)),
@@ -96,6 +102,12 @@ impl CounterSnapshot {
             claims: json.req("claims")?.as_u64()?,
             claim_conflicts: json.req("claim_conflicts")?.as_u64()?,
             claim_backoffs: json.req("claim_backoffs")?.as_u64()?,
+            // absent in snapshots from daemons predating the scan index
+            spool_parses: json
+                .get("spool_parses")
+                .map(|v| v.as_u64())
+                .transpose()?
+                .unwrap_or(0),
             swept: json.req("swept")?.as_u64()?,
             launches: json.req("launches")?.as_u64()?,
             jobs_done: json.req("jobs_done")?.as_u64()?,

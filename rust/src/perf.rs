@@ -8,18 +8,34 @@
 //! measured against (see README "Benchmarks").
 //!
 //! The headline cases are before/after shaped: each pairs the OLD
-//! owned-buffer behaviour (deep partition clones, `Vec<String>` + join
-//! mount materialization, per-record `String` splitting) against the
-//! zero-copy shared-buffer data plane that replaced it
-//! ([`crate::util::bytes`]), so the JSON proves the shared variant is
-//! faster on every axis.
+//! behaviour against the path that replaced it, so the JSON proves the
+//! new variant is faster on every axis. Two families:
+//!
+//! * zero-copy data plane (PR 5): deep partition clones, `Vec<String>`
+//!   + join mount materialization, and per-record `String` splitting
+//!   vs the shared-buffer plane ([`crate::util::bytes`]);
+//! * shuffle path (PR 8): the k-mer workload end-to-end with the
+//!   combiner declaration off vs on (map-side partial aggregation
+//!   collapses the singleton flood before a byte moves — the
+//!   shuffle-byte meter itself is gated in `tests/kmer_shuffle.rs`),
+//!   and the straggler-bound cost of the hottest bucket under FNV
+//!   hashing vs frequency-weighted range cuts on a planted Zipf skew.
 
-use crate::dataset::{join_records, split_records, split_records_shared, Partition, Record};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::dataset::{
+    join_records, plan, split_records, split_records_shared, Dataset, Partition, Partitioner,
+    Record,
+};
 use crate::error::Result;
 use crate::mare::MountPoint;
+use crate::tools::images;
 use crate::util::bench::{Bench, Timing};
 use crate::util::bytes::SharedStr;
 use crate::util::json::Json;
+use crate::workloads::kmer;
 
 /// (comparison name, old-path case, new-path case) — rows of the
 /// `comparisons` array in `BENCH_<PR>.json`.
@@ -35,6 +51,16 @@ pub const COMPARISONS: &[(&str, &str, &str)] = &[
         "mount_materialize/segmented_1k",
     ),
     ("split_records", "split/owned_10k_lines", "split/shared_10k_lines"),
+    (
+        "kmer_combine",
+        "kmer_pipeline/combine_off_16k_genome",
+        "kmer_pipeline/combine_on_16k_genome",
+    ),
+    (
+        "skew_straggler",
+        "skew_straggler/hash_hot_bucket",
+        "skew_straggler/range_hot_bucket",
+    ),
 ];
 
 /// A 1k-record, ~256 B/record text partition (the GC workload's shape).
@@ -85,6 +111,63 @@ pub fn hotpath_cases(b: &mut Bench) {
         let recs = split_records_shared(&shared_lines, "\n");
         assert_eq!(recs.len(), 10_000);
     });
+
+    // ---- shuffle path: the kmer workload end-to-end, combiner off vs
+    //      on — downstream cost tracks the records that cross the
+    //      shuffle, so collapsing singletons map-side pays for the
+    //      extra per-partition aggregation (the >= 4x byte ratio
+    //      itself is gated in tests/kmer_shuffle.rs)
+    let genome = kmer::genome_text(7, 256, 64);
+    let kmer_run = |combine: bool| {
+        let cluster = Arc::new(Cluster::new(
+            Arc::new(images::stock_registry(None)),
+            None,
+            ClusterConfig::sized(4, 2),
+        ));
+        let ds = Dataset::parallelize_text(&genome, "\n", 8);
+        let out = kmer::pipeline(cluster, ds, 8, combine).run().unwrap();
+        assert!(out.report.total_shuffled_bytes() > 0);
+    };
+    b.time("kmer_pipeline/combine_off_16k_genome", || kmer_run(false));
+    b.time("kmer_pipeline/combine_on_16k_genome", || kmer_run(true));
+
+    // ---- skew: a shuffled stage finishes when its hottest bucket
+    //      does, so straggler latency is the aggregation cost of the
+    //      max bucket. Same planted Zipf keyset as the kmer_shuffle
+    //      gate: FNV piles several heavy keys into one of 8 buckets;
+    //      frequency-weighted range cuts stop at the hottest key's own
+    //      mass (the floor no key-preserving partitioner can beat).
+    let mut skewed: Vec<Record> = Vec::new();
+    let mut rank = 0usize;
+    for b2 in ["A", "C", "G", "T"] {
+        for c in ["A", "C", "G", "T"] {
+            for d in ["A", "C", "G", "T"] {
+                let n = (400 / (rank + 1)).max(1);
+                skewed.extend((0..n).map(|_| Record::text(format!("A{b2}{c}{d}"))));
+                rank += 1;
+            }
+        }
+    }
+    let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+        Arc::new(|r: &Record| r.as_text().unwrap_or("*").to_string());
+    let hot = |buckets: Vec<Vec<Record>>| {
+        buckets.into_iter().max_by_key(|b| b.len()).expect("eight buckets")
+    };
+    let hash_hot = hot(plan::route(
+        &Partitioner::HashByKey { key_fn: key_fn.clone(), num: 8 },
+        skewed.clone(),
+    ));
+    let range_hot = hot(plan::route(&Partitioner::RangeByKey { key_fn, num: 8 }, skewed));
+    assert!(range_hot.len() < hash_hot.len(), "planted skew stopped skewing");
+    let aggregate = |bucket: &[Record]| {
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for r in bucket {
+            *counts.entry(r.as_text().unwrap()).or_insert(0) += 1;
+        }
+        assert!(counts.values().sum::<u64>() as usize == bucket.len());
+    };
+    b.time("skew_straggler/hash_hot_bucket", || aggregate(&hash_hot));
+    b.time("skew_straggler/range_hot_bucket", || aggregate(&range_hot));
 }
 
 fn timing_json(t: &Timing) -> Json {

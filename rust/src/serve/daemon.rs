@@ -145,6 +145,7 @@ impl ServeHooks for DaemonHooks {
     fn scanned(&self, stats: &ClaimStats) {
         ServeCounters::add(&self.counters.claim_conflicts, stats.conflicts);
         ServeCounters::add(&self.counters.claim_backoffs, stats.backoffs);
+        ServeCounters::add(&self.counters.spool_parses, stats.parsed);
     }
 
     fn finished(&self, worker: usize, record: &JobRecord) {

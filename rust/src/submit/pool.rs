@@ -851,4 +851,55 @@ mod tests {
         let rerun = pool.run(&q).unwrap();
         assert!(rerun.finished.is_empty());
     }
+
+    /// The claim-scan index through the hooks seam: draining N jobs
+    /// must cost far fewer record parses than the cache-less scanner,
+    /// which paid at least `queued_seen` parses on EVERY scan. With
+    /// one worker the schedule is sequential: the cold scan parses all
+    /// N, every later scan re-parses only the record the worker itself
+    /// last rewrote — ~2N parses total against ~N^2/2 without the
+    /// index.
+    #[test]
+    fn scanned_hook_reports_index_hits_not_full_reparses() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        #[derive(Default)]
+        struct ScanLedger {
+            parsed: AtomicU64,
+            naive: AtomicU64,
+        }
+        impl ServeHooks for ScanLedger {
+            fn scanned(&self, stats: &ClaimStats) {
+                self.parsed.fetch_add(stats.parsed, Ordering::Relaxed);
+                self.naive.fetch_add(stats.queued_seen, Ordering::Relaxed);
+            }
+        }
+
+        let q = tmp_queue("scan-ledger");
+        let cluster = ClusterConfig::sized(2, 2);
+        let submitter = Submitter::new(cluster.clone());
+        let jobs = 12u64;
+        for _ in 0..jobs {
+            submitter.submit(&q, &gc_plan()).unwrap();
+        }
+
+        let ledger = ScanLedger::default();
+        let pool = WorkerPool::new(PoolConfig::new(1, cluster));
+        let outcome = pool.run_with_hooks(&q, &ledger).unwrap();
+        assert_eq!(outcome.finished.len(), jobs as usize);
+
+        let parsed = ledger.parsed.load(Ordering::Relaxed);
+        let naive = ledger.naive.load(Ordering::Relaxed);
+        assert!(parsed >= jobs, "every record must be parsed at least once: {parsed}");
+        assert!(
+            parsed <= 2 * jobs,
+            "scans re-parsed unchanged records: {parsed} parses for {jobs} jobs"
+        );
+        // the cache-less floor for the same scan schedule (12+11+...+1)
+        assert!(
+            naive >= jobs * (jobs + 1) / 2,
+            "scan schedule changed — naive floor {naive} too small to compare against"
+        );
+        assert!(parsed * 2 < naive, "index saved nothing: {parsed} vs naive {naive}");
+    }
 }

@@ -7,10 +7,12 @@
 //! spool schema is documented alongside the plan envelope in
 //! `docs/WIRE_FORMAT.md`.
 
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, SystemTime};
 
 use crate::error::{MareError, Result};
 use crate::util::json::Json;
@@ -52,6 +54,13 @@ pub struct ClaimStats {
     /// [`JobQueue::held_count`] to decide termination without
     /// re-parsing every spool record.
     pub queued_seen: u64,
+    /// Spool records actually read + JSON-parsed across this claim's
+    /// scan passes. Records unchanged since the last scan are served
+    /// from the claim-scan index (see [`JobQueue::list`]) at the cost
+    /// of a `stat`, so a resident fleet idling over a big spool of
+    /// finished jobs reports `parsed == 0` here — the cache-efficiency
+    /// signal `mare serve` surfaces as `spool_parses`.
+    pub parsed: u64,
 }
 
 /// A claim-order policy: reorders the queued candidates of one scan
@@ -291,19 +300,52 @@ impl JobRecord {
     }
 }
 
+/// One claim-scan index entry: the parse of a spool file at a known
+/// file identity. Every spool rewrite goes through temp + rename
+/// ([`JobQueue::persist_at`]), so a changed record ALWAYS lands on a
+/// fresh inode — `(ino, len, mtime)` matching can never serve a stale
+/// parse, no matter how coarse the filesystem's timestamps are.
+struct CachedParse {
+    ino: u64,
+    len: u64,
+    mtime: Option<SystemTime>,
+    rec: JobRecord,
+}
+
+/// `(ino, len, mtime)` of a spool file — what the claim-scan index
+/// keys cache validity on. Inode 0 on platforms without one degrades
+/// to `(len, mtime)` matching, still safe for rename-published files
+/// on any filesystem with sub-rewrite timestamp granularity.
+fn file_identity(meta: &fs::Metadata) -> (u64, u64, Option<SystemTime>) {
+    #[cfg(unix)]
+    let ino = std::os::unix::fs::MetadataExt::ino(meta);
+    #[cfg(not(unix))]
+    let ino = 0u64;
+    (ino, meta.len(), meta.modified().ok())
+}
+
 /// The spool directory. Opening creates it and sweeps stale claim
 /// holds (left by crashed workers) back into the queue; every
 /// operation re-reads the files, so concurrent CLI invocations and
 /// multiple drivers share one queue.
+///
+/// Scans keep a per-instance claim-scan index (parse cache keyed by
+/// canonical path + file identity): the files stay the coordination
+/// point — other processes' writes are picked up by identity change —
+/// but an unchanged record costs one `stat` instead of a read + parse
+/// on every scan. A resident `mare serve` fleet polling a spool of
+/// mostly-finished jobs goes from O(jobs) parses per idle tick to
+/// zero.
 pub struct JobQueue {
     dir: PathBuf,
+    scan_cache: Mutex<HashMap<PathBuf, CachedParse>>,
 }
 
 impl JobQueue {
     pub fn open(dir: impl Into<PathBuf>) -> Result<JobQueue> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
-        let queue = JobQueue { dir };
+        let queue = JobQueue { dir, scan_cache: Mutex::new(HashMap::new()) };
         queue.sweep_stale(STALE_CLAIM)?;
         Ok(queue)
     }
@@ -415,7 +457,15 @@ impl JobQueue {
 
     /// All jobs, sorted by id.
     pub fn list(&self) -> Result<Vec<JobRecord>> {
+        Ok(self.scan()?.0)
+    }
+
+    /// [`Self::list`] through the claim-scan index; also returns how
+    /// many records were actually read + parsed (the cache misses).
+    fn scan(&self) -> Result<(Vec<JobRecord>, u64)> {
         let mut jobs = Vec::new();
+        let mut parsed = 0u64;
+        let mut seen: HashSet<PathBuf> = HashSet::new();
         for entry in fs::read_dir(&self.dir)? {
             let entry = entry?;
             let name = entry.file_name();
@@ -423,10 +473,33 @@ impl JobQueue {
             if !(name.starts_with("job-") && name.ends_with(".json")) {
                 continue;
             }
-            let text = match fs::read_to_string(entry.path()) {
-                Ok(text) => text,
+            let path = entry.path();
+            // identity is taken BEFORE the read: if a rewrite slips in
+            // between, the cache holds the newer content under the
+            // older identity and the next scan simply re-parses — an
+            // extra parse, never a stale record
+            let identity = match entry.metadata() {
+                Ok(meta) => file_identity(&meta),
                 // renamed away by a concurrent claimer between read_dir
                 // and here — the job is held, not gone; skip it
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            };
+            if identity.1 == 0 {
+                continue; // reservation marker: a submit() in progress
+            }
+            {
+                let cache = self.scan_cache.lock().unwrap();
+                if let Some(hit) = cache.get(&path) {
+                    if (hit.ino, hit.len, hit.mtime) == identity {
+                        jobs.push(hit.rec.clone());
+                        seen.insert(path);
+                        continue;
+                    }
+                }
+            }
+            let text = match fs::read_to_string(&path) {
+                Ok(text) => text,
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
                 Err(e) => return Err(e.into()),
             };
@@ -435,10 +508,21 @@ impl JobQueue {
             }
             let json = Json::parse(&text)
                 .map_err(|e| MareError::Submit(format!("spool file {name}: {e}")))?;
-            jobs.push(JobRecord::from_json(&json)?);
+            let rec = JobRecord::from_json(&json)?;
+            parsed += 1;
+            jobs.push(rec.clone());
+            self.scan_cache.lock().unwrap().insert(
+                path.clone(),
+                CachedParse { ino: identity.0, len: identity.1, mtime: identity.2, rec },
+            );
+            seen.insert(path);
         }
+        // entries whose file left the live spool (held by a claimer,
+        // dead-lettered, hand-deleted) are dropped so the index tracks
+        // the directory instead of growing without bound
+        self.scan_cache.lock().unwrap().retain(|path, _| seen.contains(path));
         jobs.sort_by_key(|j| j.id);
-        Ok(jobs)
+        Ok((jobs, parsed))
     }
 
     pub fn get(&self, id: u64) -> Result<JobRecord> {
@@ -562,11 +646,10 @@ impl JobQueue {
                 std::thread::sleep(backoff.min(CLAIM_BACKOFF_CAP));
             }
             let mut contended = false;
-            let mut candidates: Vec<JobRecord> = self
-                .list()?
-                .into_iter()
-                .filter(|j| j.status == JobStatus::Queued)
-                .collect();
+            let (jobs, parsed) = self.scan()?;
+            stats.parsed += parsed;
+            let mut candidates: Vec<JobRecord> =
+                jobs.into_iter().filter(|j| j.status == JobStatus::Queued).collect();
             stats.queued_seen = candidates.len() as u64;
             if let Some(order) = order {
                 order(&mut candidates);
@@ -1231,6 +1314,51 @@ mod tests {
         assert!(job.is_none());
         assert_eq!(stats.queued_seen, 0);
         assert_eq!(q.held_count().unwrap(), 0);
+    }
+
+    /// The claim-scan index: unchanged spool records are served from
+    /// the cache (one `stat`, no parse); records rewritten by ANY
+    /// writer — including a different queue instance on the same spool
+    /// — are re-parsed by identity change; a drained idle scan parses
+    /// nothing at all.
+    #[test]
+    fn claim_scan_index_reparses_only_changed_records() {
+        let q = tmp_queue("scan-index");
+        for i in 0..6 {
+            q.submit(plan(), format!("j{i}")).unwrap();
+        }
+
+        // cold index: the first scan parses the whole spool
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert_eq!(job.unwrap().id, 1);
+        assert_eq!(stats.parsed, 6, "cold scan parses everything");
+
+        // each later claim re-parses exactly the ONE record the
+        // previous claim rewrote (queued -> running, fresh inode)
+        for id in 2..=6u64 {
+            let (job, stats) = q.claim_with_stats().unwrap();
+            assert_eq!(job.unwrap().id, id);
+            assert_eq!(stats.parsed, 1, "claim {id} re-parsed more than the last rewrite");
+        }
+
+        // drain tail: the 6th claim's rewrite costs one last parse,
+        // then the idle loop stats 6 running records and parses none
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert!(job.is_none());
+        assert_eq!(stats.parsed, 1);
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert!(job.is_none());
+        assert_eq!((stats.parsed, stats.queued_seen), (0, 0));
+
+        // a SECOND instance on the same spool is a foreign writer: its
+        // rewrite lands on a fresh inode and invalidates our entry
+        let q2 = JobQueue::open(q.dir().to_path_buf()).unwrap();
+        q2.requeue_with(3, Duration::ZERO, true).unwrap();
+        let (job, stats) = q.claim_with_stats().unwrap();
+        assert_eq!(job.unwrap().id, 3);
+        assert_eq!(stats.parsed, 1, "only the foreign rewrite re-parses");
+        // both instances agree on the spool contents throughout
+        assert_eq!(q.list().unwrap().len(), q2.list().unwrap().len());
     }
 
     #[test]

@@ -74,6 +74,19 @@ pub fn alignment(reference: &Reference) -> Arc<Image> {
     b.build()
 }
 
+/// `mare/kmer:latest` — kmerize + kmeragg (the k-mer statistics
+/// workload's shuffle-heavy command pair).
+pub fn kmer_image() -> Arc<Image> {
+    let mut b = Image::builder("mare/kmer:latest")
+        .size(42 << 20)
+        .tool(crate::tools::kmer::kmerize_tool())
+        .tool(crate::tools::kmer::kmeragg_tool());
+    for t in posix::all() {
+        b = b.tool(t);
+    }
+    b.build()
+}
+
 /// `opengenomics/vcftools-tools:latest`.
 pub fn vcftools() -> Arc<Image> {
     let mut b =
@@ -92,6 +105,7 @@ pub fn stock_registry(reference: Option<&Reference>) -> Registry {
     reg.push(oe());
     reg.push(sdsorter_image());
     reg.push(vcftools());
+    reg.push(kmer_image());
     if let Some(r) = reference {
         reg.push(alignment(r));
     }
@@ -110,6 +124,9 @@ mod tests {
         assert!(reg.pull("mcapuccini/oe:latest").unwrap().tool("fred").is_ok());
         assert!(reg.pull("mcapuccini/sdsorter:latest").unwrap().tool("sdsorter").is_ok());
         assert!(reg.pull("opengenomics/vcftools-tools:latest").unwrap().tool("vcf-concat").is_ok());
+        let kmer = reg.pull("mare/kmer:latest").unwrap();
+        assert!(kmer.tool("kmerize").is_ok());
+        assert!(kmer.tool("kmeragg").is_ok());
         // alignment image absent without a reference
         assert!(reg.pull("mcapuccini/alignment:latest").is_err());
     }

@@ -1,0 +1,228 @@
+//! `kmerize` / `kmeragg` — k-mer counting, the shuffle-heavy workload.
+//!
+//! Canonical command pair (`workloads/kmer.rs`, README quickstart):
+//! ```text
+//! kmerize -k 4 /seq > /kmers        # one `<kmer>\t1` line per window
+//! kmeragg /kmers > /counts          # sum per kmer, sorted output
+//! ```
+//!
+//! `kmeragg` sums integer counts per key, which is associative and
+//! commutative — exactly the algebra a `.combine()` declaration
+//! promises, so the same command serves as the reduce AND the map-side
+//! combiner the optimizer pushes below the shuffle. `kmerize` is the
+//! inverse of a combiner-friendly shape: every input byte fans out into
+//! ~k output bytes, making the shuffle the dominant cost unless partial
+//! aggregation collapses the `\t1` singletons first.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::container::tool::{Tool, ToolCtx, ToolOutput};
+use crate::error::{MareError, Result};
+use crate::simtime::{CostModel, Duration};
+
+/// Slide a K window over each sequence line, emit `<kmer>\t1` lines.
+pub struct Kmerize;
+
+impl Kmerize {
+    pub fn cost_model() -> CostModel {
+        CostModel {
+            fixed: Duration::seconds(0.05),
+            secs_per_byte: 6e-9, // window slide touches every byte k times
+            secs_per_record: 0.0,
+            cpus: 1,
+        }
+    }
+}
+
+impl Tool for Kmerize {
+    fn name(&self) -> &'static str {
+        "kmerize"
+    }
+
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let k: usize = match ctx.flag_value("-k") {
+            Some(v) => v
+                .parse()
+                .ok()
+                .filter(|k| *k >= 1)
+                .ok_or_else(|| MareError::Shell(format!("kmerize: bad -k `{v}`")))?,
+            None => 4,
+        };
+        let text = match input_path(ctx, "-k")? {
+            Some(path) => ctx.fs.read_string(&path)?,
+            None => ctx.stdin_string()?,
+        };
+        let mut out = String::new();
+        for line in text.lines() {
+            let seq = line.trim();
+            if seq.len() < k || !seq.is_ascii() {
+                continue; // too short for one window / not sequence data
+            }
+            for start in 0..=seq.len() - k {
+                out.push_str(&seq[start..start + k]);
+                out.push_str("\t1\n");
+            }
+        }
+        ToolOutput::ok_str(out)
+    }
+}
+
+/// Sum `<kmer>\t<count>` lines per kmer; print sorted by kmer.
+pub struct KmerAgg;
+
+impl KmerAgg {
+    pub fn cost_model() -> CostModel {
+        CostModel {
+            fixed: Duration::seconds(0.05),
+            secs_per_byte: 3e-9, // hash-map fold, IO-bound
+            secs_per_record: 0.0,
+            cpus: 1,
+        }
+    }
+}
+
+impl Tool for KmerAgg {
+    fn name(&self) -> &'static str {
+        "kmeragg"
+    }
+
+    fn run(&self, ctx: &mut ToolCtx) -> Result<ToolOutput> {
+        let text = match input_path(ctx, "")? {
+            Some(path) => ctx.fs.read_string(&path)?,
+            None => ctx.stdin_string()?,
+        };
+        let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (kmer, count) = match line.split_once('\t') {
+                Some((k, c)) => (k, c),
+                None => {
+                    return Err(MareError::Shell(format!(
+                        "kmeragg: want `<kmer>\\t<count>` lines, got `{line}`"
+                    )))
+                }
+            };
+            let count: u64 = count.trim().parse().map_err(|_| {
+                MareError::Shell(format!("kmeragg: bad count `{count}` for `{kmer}`"))
+            })?;
+            *counts.entry(kmer.to_string()).or_insert(0) += count;
+        }
+        let mut out = String::new();
+        for (kmer, total) in &counts {
+            out.push_str(kmer);
+            out.push('\t');
+            out.push_str(&total.to_string());
+            out.push('\n');
+        }
+        ToolOutput::ok_str(out)
+    }
+}
+
+/// The single optional positional input path (stdin when absent).
+/// `value_flag` is the one flag that consumes a separate value token.
+fn input_path(ctx: &ToolCtx, value_flag: &str) -> Result<Option<String>> {
+    let mut paths: Vec<String> = Vec::new();
+    let mut skip_next = false;
+    for a in &ctx.args {
+        if skip_next {
+            skip_next = false;
+            continue;
+        }
+        if a.starts_with('-') {
+            skip_next = !value_flag.is_empty() && a == value_flag;
+            continue;
+        }
+        paths.push(a.clone());
+    }
+    match paths.len() {
+        0 => Ok(None),
+        1 => Ok(Some(paths.remove(0))),
+        _ => Err(MareError::Shell(format!("want at most one input path, got {paths:?}"))),
+    }
+}
+
+pub fn kmerize_tool() -> Arc<dyn Tool> {
+    Arc::new(Kmerize)
+}
+
+pub fn kmeragg_tool() -> Arc<dyn Tool> {
+    Arc::new(KmerAgg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::vfs::Vfs;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn run(tool: &dyn Tool, args: &[&str], stdin: &str, fs: &mut Vfs) -> Result<String> {
+        let env = BTreeMap::new();
+        let mut ctx = ToolCtx {
+            args: args.iter().map(|s| s.to_string()).collect(),
+            stdin: stdin.as_bytes().to_vec(),
+            fs,
+            env: &env,
+            runtime: None,
+            rng: Rng::new(0),
+        };
+        let out = tool.run(&mut ctx)?;
+        Ok(String::from_utf8(out.stdout).expect("tool output is UTF-8"))
+    }
+
+    #[test]
+    fn kmerize_slides_a_window_per_line() {
+        let mut fs = Vfs::disk();
+        fs.write("/seq", b"ACGTA\nGG\n".to_vec()).unwrap();
+        let out = run(&Kmerize, &["-k", "4", "/seq"], "", &mut fs).unwrap();
+        // ACGTA has two 4-windows; GG is below k and skipped
+        assert_eq!(out, "ACGT\t1\nCGTA\t1\n");
+    }
+
+    #[test]
+    fn kmerize_defaults_k4_and_reads_stdin() {
+        let mut fs = Vfs::disk();
+        let out = run(&Kmerize, &[], "AAAAA", &mut fs).unwrap();
+        assert_eq!(out, "AAAA\t1\nAAAA\t1\n");
+        assert!(run(&Kmerize, &["-k", "0"], "ACGT", &mut fs).is_err());
+    }
+
+    #[test]
+    fn kmeragg_sums_counts_sorted() {
+        let mut fs = Vfs::disk();
+        fs.write("/kmers", b"CCCC\t1\nAAAA\t2\nCCCC\t3\n".to_vec()).unwrap();
+        let out = run(&KmerAgg, &["/kmers"], "", &mut fs).unwrap();
+        assert_eq!(out, "AAAA\t3\nCCCC\t4\n");
+        assert!(run(&KmerAgg, &[], "no-tab-here", &mut fs).is_err());
+        assert!(run(&KmerAgg, &[], "AAAA\tNaN", &mut fs).is_err());
+    }
+
+    #[test]
+    fn kmeragg_is_associative_and_commutative() {
+        // agg(agg(A) ∪ agg(B)) == agg(A ∪ B) == agg(B ∪ A): the law the
+        // `.combine()` declaration promises for the pushed combiner
+        let a = "ACGT\t1\nTTTT\t1\nACGT\t1\n";
+        let b = "TTTT\t1\nGGGG\t1\n";
+        let mut fs = Vfs::disk();
+        let agg = |fs: &mut Vfs, text: &str| run(&KmerAgg, &[], text, fs).unwrap();
+        let partial = format!("{}{}", agg(&mut fs, a), agg(&mut fs, b));
+        let merged = agg(&mut fs, &partial);
+        let direct = agg(&mut fs, &format!("{a}{b}"));
+        let swapped = agg(&mut fs, &format!("{b}{a}"));
+        assert_eq!(merged, direct);
+        assert_eq!(direct, swapped);
+        assert_eq!(merged, "ACGT\t2\nGGGG\t1\nTTTT\t2\n");
+    }
+
+    #[test]
+    fn kmerize_then_kmeragg_counts_occurrences() {
+        let mut fs = Vfs::disk();
+        let kmers = run(&Kmerize, &["-k", "2"], "ABAB", &mut fs).unwrap();
+        let counts = run(&KmerAgg, &[], &kmers, &mut fs).unwrap();
+        assert_eq!(counts, "AB\t2\nBA\t1\n");
+    }
+}

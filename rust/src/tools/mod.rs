@@ -7,15 +7,17 @@
 //!   [`fred`] (OpenEye FRED docking — scores via the AOT docking
 //!   artifact), [`sdsorter`], [`bwa`] (+ a `samtools view` shim),
 //!   [`gatk`] (HaplotypeCaller via the AOT genotype artifact),
-//!   [`vcf_concat`] (vcftools).
+//!   [`vcf_concat`] (vcftools),
+//!   [`kmer`] (kmerize/kmeragg — the shuffle-heavy k-mer counter).
 //! * [`images`] — the stock image set the examples/benches pull
 //!   (`ubuntu`, `mare/oe`, `mare/sdsorter`, `mare/alignment`,
-//!   `mare/vcftools`).
+//!   `mare/vcftools`, `mare/kmer`).
 
 pub mod bwa;
 pub mod fred;
 pub mod gatk;
 pub mod images;
+pub mod kmer;
 pub mod posix;
 pub mod sdsorter;
 pub mod vcf_concat;

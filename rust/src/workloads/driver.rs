@@ -10,7 +10,7 @@ use crate::error::Result;
 use crate::mare::{wire, Job, MaRe};
 use crate::storage::{ingest_text, IngestReport, StorageBackend};
 
-use super::{gc, genlib, genreads, snp, vs};
+use super::{gc, genlib, genreads, kmer, snp, vs};
 
 /// Everything a run produces.
 pub struct DriverResult {
@@ -38,6 +38,7 @@ pub fn run(cfg: &RunConfigFile) -> Result<DriverResult> {
         Workload::Gc => run_gc(cfg),
         Workload::Vs => run_vs(cfg),
         Workload::Snp => run_snp(cfg),
+        Workload::Kmer => run_kmer(cfg),
     }
 }
 
@@ -110,6 +111,30 @@ fn run_vs(cfg: &RunConfigFile) -> Result<DriverResult> {
     Ok(DriverResult { ingest, report: out.report, digest })
 }
 
+fn run_kmer(cfg: &RunConfigFile) -> Result<DriverResult> {
+    // same seeded genome generator as GC — the workloads differ in
+    // shuffle regime (map-side shrink vs ~7x inflation), not in input
+    let genome = kmer::genome_text(cfg.seed, cfg.scale, 80);
+    let backend =
+        make_backend(cfg.backend, cfg.cluster.workers, "genome.txt", genome.into_bytes())?;
+    let (ds, ingest) = ingest_text(
+        backend.as_ref(),
+        "genome.txt",
+        "\n",
+        partitions(cfg),
+        cfg.cluster.workers,
+    )?;
+    let cluster = super::make_cluster(cfg.cluster.clone(), None, None)?;
+    let pipeline = reship(kmer::pipeline(cluster, ds, cfg.cluster.workers, true))?;
+    crate::log_debug!("kmer job:\n{}", pipeline.explain());
+    let out = pipeline.run()?;
+    let distinct = out.collect_text("\n").lines().filter(|l| !l.trim().is_empty()).count();
+    let shipped = out.report.total_shuffled_bytes();
+    let saved = out.report.total_pre_combine_bytes() - shipped;
+    let digest = format!("kmers={distinct} shuffled={shipped}B combiner_saved={saved}B");
+    Ok(DriverResult { ingest, report: out.report, digest })
+}
+
 fn run_snp(cfg: &RunConfigFile) -> Result<DriverResult> {
     // 8 chromosomes: enough for chromosome-wise grouping to matter, and
     // (like the paper's 25-chromosome cap, §1.3.2) fewer than the
@@ -170,7 +195,7 @@ mod tests {
     use crate::cluster::ClusterConfig;
 
     #[test]
-    fn all_three_workload_plans_survive_the_wire() {
+    fn all_workload_plans_survive_the_wire() {
         use crate::mare::wire;
         let mk = || {
             crate::workloads::make_cluster(ClusterConfig::sized(2, 2), None, None).unwrap()
@@ -193,7 +218,13 @@ mod tests {
             Dataset::parallelize_text("@r/1\nACGT\n+\nIIII", "\x00", 2),
             2,
         );
-        for job in [gc, vs, snp] {
+        let km = crate::workloads::kmer::pipeline(
+            mk(),
+            Dataset::parallelize_text("GATTACAGATTACA\nGGCCGGCC", "\n", 2),
+            2,
+            true,
+        );
+        for job in [gc, vs, snp, km] {
             let text = wire::encode_string(job.logical()).unwrap();
             let decoded = wire::decode_str(&text).unwrap();
             assert_eq!(decoded.describe(), job.logical().describe());

@@ -1,0 +1,132 @@
+//! k-mer statistics pipeline — the shuffle-heavy workload that
+//! motivates map-side combining.
+//!
+//! ```text
+//! kmerize -k 4 /seq > /kmers          # map: every window, `<kmer>\t1`
+//! repartitionBy[kmer_prefix -> P]     # group equal kmers together
+//! kmeragg /kmers > /counts  .combine  # reduce: sum counts per kmer
+//! ```
+//!
+//! The map inflates every input byte into a ~7-byte singleton line, so
+//! the shuffle dominates end-to-end cost — the opposite regime from the
+//! paper's GC pipeline, where the map shrinks each partition to one
+//! number. With `.combine()` the optimizer pushes `kmeragg` below the
+//! shuffle boundary and the singletons collapse to at most `4^k`
+//! distinct keys per map partition before a byte moves, which is where
+//! the `combiner_cuts_shuffle_bytes` ratio comes from.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::mare::pipeline::KMER_PREFIX_LEN;
+use crate::mare::{Job, MaRe};
+
+pub use super::gc::genome_text;
+
+/// The window size — kept equal to the `kmer_prefix` key length so the
+/// named key groups exactly by kmer.
+pub const K: usize = KMER_PREFIX_LEN;
+
+/// Build the k-mer counting job. `combine: false` is the ablation
+/// baseline: same logical plan minus the `.combine()` declaration.
+pub fn pipeline(
+    cluster: Arc<Cluster>,
+    genome: Dataset,
+    partitions: usize,
+    combine: bool,
+) -> Job {
+    let mut b = MaRe::source(cluster, genome)
+        .map("mare/kmer:latest", format!("kmerize -k {K} /seq > /kmers"))
+        .mounts("/seq", "/kmers")
+        .repartition_by_named("kmer_prefix", partitions)
+        .reduce("mare/kmer:latest", "kmeragg /kmers > /counts")
+        .mounts("/kmers", "/counts");
+    if combine {
+        b = b.combine();
+    }
+    b.build().expect("the kmer pipeline is statically valid")
+}
+
+/// Run end-to-end: sorted `<kmer>\t<count>` lines.
+pub fn run(cluster: Arc<Cluster>, genome: Dataset, partitions: usize) -> Result<String> {
+    pipeline(cluster, genome, partitions, true).collect_text()
+}
+
+/// Driver-side oracle: the same sorted `<kmer>\t<count>` rendering.
+pub fn oracle(genome: &str, k: usize) -> String {
+    let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+    for line in genome.lines() {
+        let seq = line.trim();
+        if seq.len() < k {
+            continue;
+        }
+        for start in 0..=seq.len() - k {
+            *counts.entry(&seq[start..start + k]).or_insert(0) += 1;
+        }
+    }
+    counts.iter().map(|(kmer, n)| format!("{kmer}\t{n}")).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::tools::images;
+
+    fn cluster() -> Arc<Cluster> {
+        Arc::new(Cluster::new(
+            Arc::new(images::stock_registry(None)),
+            None,
+            ClusterConfig::sized(4, 2),
+        ))
+    }
+
+    fn genome() -> String {
+        genome_text(29, 256, 64)
+    }
+
+    #[test]
+    fn matches_oracle_across_partitionings() {
+        let genome = genome();
+        let want = oracle(&genome, K);
+        for (source_parts, shuffle_parts) in [(1usize, 1usize), (4, 4), (16, 3)] {
+            let ds = Dataset::parallelize_text(&genome, "\n", source_parts);
+            assert_eq!(
+                run(cluster(), ds, shuffle_parts).unwrap(),
+                want,
+                "source={source_parts} shuffle={shuffle_parts}"
+            );
+        }
+    }
+
+    #[test]
+    fn combiner_cuts_shuffle_bytes_at_least_4x_with_identical_results() {
+        let genome = genome();
+        let run_with = |combine: bool| {
+            let ds = Dataset::parallelize_text(&genome, "\n", 4);
+            let job = pipeline(cluster(), ds, 4, combine);
+            let out = job.run().unwrap();
+            (out.collect_text("\n"), out.report.total_shuffled_bytes())
+        };
+        let (with, on_bytes) = run_with(true);
+        let (without, off_bytes) = run_with(false);
+        assert_eq!(with, without, "combining must not change the result");
+        assert_eq!(with.trim_end(), oracle(&genome, K));
+        assert!(
+            on_bytes * 4 <= off_bytes,
+            "combiner must cut shuffled bytes >= 4x: on={on_bytes} off={off_bytes}"
+        );
+    }
+
+    #[test]
+    fn explain_shows_the_pushed_combiner() {
+        let ds = Dataset::parallelize_text(&genome(), "\n", 4);
+        let job = pipeline(cluster(), ds, 4, true);
+        let s = job.explain();
+        assert!(s.contains("+combine kmeragg"), "{s}");
+        assert!(s.contains("1 combiner pushed below the shuffle"), "{s}");
+    }
+}

@@ -6,11 +6,13 @@
 //! * [`gc`] — Listing 1: GC count
 //! * [`vs`] — Listing 2: virtual screening (FRED + sdsorter)
 //! * [`snp`] — Listing 3: SNP calling (BWA + GATK + vcftools)
+//! * [`kmer`] — k-mer counting (the shuffle-heavy combine showcase)
 
 pub mod driver;
 pub mod gc;
 pub mod genlib;
 pub mod genreads;
+pub mod kmer;
 pub mod snp;
 pub mod vs;
 

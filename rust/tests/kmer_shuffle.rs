@@ -1,0 +1,180 @@
+//! Shuffle-path gates for map-side combining and skew-aware
+//! partitioning (ISSUE 8; run in release by the `stress` CI matrix,
+//! documented in docs/ARCHITECTURE.md "Shuffle & partial aggregation").
+//!
+//! Three contracts, each asserted end-to-end:
+//!
+//! * **Combine ratio** — on a genome big enough that the k-mer map
+//!   inflates every input byte into a singleton count line, declaring
+//!   `.combine()` must cut the job's total shuffled bytes by at least
+//!   4x while collecting BYTE-IDENTICAL output, and the report's
+//!   pre-combine accounting must still equal what the combiner-off
+//!   ablation actually ships on the keyed shuffle.
+//! * **Multi-driver crosscheck** — the combine declaration survives
+//!   the wire: encode the logical plan, decode it on a "different
+//!   driver" (a fresh cluster), rebuild via `append_pipeline`, and the
+//!   rebuilt job must push the same combiner, ship the same shuffle
+//!   bytes, and collect the same output.
+//! * **Skew ablation** — on a planted hot-key distribution, sample-
+//!   based range partitioning must beat hash partitioning on max/mean
+//!   bucket load, and must hit the irreducible floor (the hottest
+//!   key's own count — no key-preserving partitioner can do better).
+
+use std::sync::Arc;
+
+use mare::cluster::{Cluster, ClusterConfig};
+use mare::dataset::{plan, Dataset, Partitioner, Record};
+use mare::mare::{wire, MaRe};
+use mare::tools::images;
+use mare::workloads::kmer;
+
+fn cluster() -> Arc<Cluster> {
+    Arc::new(Cluster::new(
+        Arc::new(images::stock_registry(None)),
+        None,
+        ClusterConfig::sized(4, 2),
+    ))
+}
+
+/// A genome big enough that shuffle bytes dominate: 1024 lines x 96
+/// chars is ~98 KiB of sequence, which `kmerize` inflates ~7x into
+/// singleton lines while at most 256 distinct 4-mers per map partition
+/// survive the combiner.
+fn genome() -> String {
+    kmer::genome_text(7, 1024, 96)
+}
+
+#[test]
+fn combiner_cuts_total_shuffle_bytes_4x_end_to_end() {
+    let genome = genome();
+    let run_with = |combine: bool| {
+        let ds = Dataset::parallelize_text(&genome, "\n", 8);
+        let out = kmer::pipeline(cluster(), ds, 8, combine).run().unwrap();
+        (out.collect_text("\n"), out.report)
+    };
+    let (text_on, report_on) = run_with(true);
+    let (text_off, report_off) = run_with(false);
+
+    assert_eq!(text_on, text_off, "combining must not change the collected bytes");
+    assert_eq!(text_on.trim_end(), kmer::oracle(&genome, kmer::K), "oracle disagrees");
+
+    let on = report_on.total_shuffled_bytes();
+    let off = report_off.total_shuffled_bytes();
+    assert!(on * 4 <= off, "combiner must cut shuffled bytes >= 4x: on={on} off={off}");
+
+    // the pre-combine ledger records what WOULD have shipped: on the
+    // keyed shuffle (the stage the optimizer annotated) it must equal
+    // the bytes the combiner-off ablation actually shuffled there
+    let keyed = |r: &mare::cluster::RunReport| {
+        r.stages
+            .iter()
+            .map(|s| (s.shuffle.bytes_pre_combine, s.shuffle.bytes_total))
+            .find(|(pre, total)| pre != total)
+    };
+    let (pre, post) = keyed(&report_on).expect("the keyed shuffle must record a combine delta");
+    let off_keyed = report_off
+        .stages
+        .iter()
+        .map(|s| s.shuffle.bytes_total)
+        .max()
+        .expect("ablation ran at least one shuffle");
+    assert_eq!(
+        pre, off_keyed,
+        "pre-combine accounting must equal the ablation's actual keyed shuffle"
+    );
+    assert!(pre >= post * 4, "keyed-stage combine ratio too small: {pre} -> {post}");
+}
+
+#[test]
+fn combine_survives_the_wire_onto_a_second_driver() {
+    let genome = genome();
+    let ds = || Dataset::parallelize_text(&genome, "\n", 8);
+
+    // driver A: build the job natively and run it
+    let job = kmer::pipeline(cluster(), ds(), 8, true);
+    let out_a = job.run().unwrap();
+
+    // the wire: only the LOGICAL plan travels (the pushed combiner is
+    // derived and must be re-derived, not serialized)
+    let text = wire::encode_string(job.logical()).unwrap();
+    assert!(text.contains("\"combine\": true"), "declaration missing from the wire:\n{text}");
+
+    // driver B: fresh cluster, decode + rebuild + re-optimize
+    let decoded = wire::decode_str(&text).unwrap();
+    let rebuilt = MaRe::source(cluster(), ds()).append_pipeline(&decoded).build().unwrap();
+    assert_eq!(
+        rebuilt.opt_report().pushed_combiners,
+        1,
+        "the second driver must re-derive the pushed combiner"
+    );
+    assert_eq!(rebuilt.explain(), job.explain(), "drivers must agree on the whole plan");
+
+    let out_b = rebuilt.run().unwrap();
+    assert_eq!(
+        out_a.collect_text("\n"),
+        out_b.collect_text("\n"),
+        "drivers must collect identical bytes"
+    );
+    assert_eq!(
+        out_a.report.total_shuffled_bytes(),
+        out_b.report.total_shuffled_bytes(),
+        "drivers must ship identical shuffle bytes"
+    );
+}
+
+/// Planted skew: Zipf-ish multiplicities over the lexicographically
+/// dense `AA**`..`TA**` corner of the 4-mer space — rank r gets
+/// `max(1, 400 / (r + 1))` records, so the hottest key holds 400 of
+/// the 1873 total. FNV hashing piles several heavy keys into one of 8
+/// buckets; frequency-weighted range cuts spread the mass instead.
+#[test]
+fn range_partitioning_beats_hash_on_planted_skew() {
+    let mut kmers: Vec<String> = Vec::new();
+    for a in ["A", "C", "G", "T"] {
+        for b in ["A", "C", "G", "T"] {
+            for c in ["A", "C", "G", "T"] {
+                for d in ["A", "C", "G", "T"] {
+                    kmers.push(format!("{a}{b}{c}{d}"));
+                }
+            }
+        }
+    }
+    let num = 8usize;
+    let mut records: Vec<Record> = Vec::new();
+    let mut hottest = 0usize;
+    for (rank, k) in kmers.iter().take(64).enumerate() {
+        let n = (400 / (rank + 1)).max(1);
+        hottest = hottest.max(n);
+        records.extend((0..n).map(|_| Record::text(k.clone())));
+    }
+    let total = records.len();
+    assert_eq!(total, 1873, "planted distribution drifted");
+
+    let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+        Arc::new(|r: &Record| r.as_text().unwrap_or("*").to_string());
+    let loads = |buckets: &[Vec<Record>]| -> (usize, usize) {
+        let sizes: Vec<usize> = buckets.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), total, "routing lost records");
+        (sizes.iter().copied().max().unwrap(), total / num)
+    };
+
+    let hash = plan::route(
+        &Partitioner::HashByKey { key_fn: key_fn.clone(), num },
+        records.clone(),
+    );
+    let range = plan::route(&Partitioner::RangeByKey { key_fn, num }, records);
+    let (hash_max, mean) = loads(&hash);
+    let (range_max, _) = loads(&range);
+
+    // range hits the irreducible floor: one bucket holds exactly the
+    // hottest key, which no key-preserving partitioner can split
+    assert_eq!(range_max, hottest, "range must be optimal up to the hottest key");
+    // and hash is measurably worse on the same records (python-mirrored
+    // constants: hash max 571 vs range max 400 over mean 234)
+    assert!(
+        range_max * 4 <= hash_max * 3,
+        "range must beat hash by >= 4/3 on max load: range={range_max} hash={hash_max}"
+    );
+    assert!(hash_max * 10 >= mean * 24, "hash imbalance vanished: max={hash_max} mean={mean}");
+    assert!(range_max * 10 <= mean * 18, "range imbalance too big: max={range_max} mean={mean}");
+}

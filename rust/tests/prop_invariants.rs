@@ -334,6 +334,86 @@ fn shuffle_conserves_bytes_and_records() {
     });
 }
 
+// ------------------------------------------------ map-side combining
+
+/// Declaring `.combine()` is an OPTIMIZATION, never a semantic change:
+/// for any genome and any partitioning, the combiner-on job collects
+/// byte-identical output to the combiner-off baseline (both matching
+/// the driver-side oracle), and compiles to the same physical stage
+/// skeleton — same ops, same boundaries — apart from exactly one
+/// combiner annotation sitting on the keyed shuffle.
+#[test]
+fn combiner_changes_nothing_but_the_shuffle_annotation() {
+    use mare::cluster::{compile, ClusterConfig, PhysicalPlan, StageOutput};
+    use mare::workloads::kmer;
+
+    check("combine-on-off-equivalence", 25, |rng| {
+        let lines = rng.range(4, 48);
+        let line_len = rng.range(4, 40);
+        let source_parts = rng.range(1, 9);
+        let shuffle_parts = rng.range(1, 5);
+        let genome = kmer::genome_text(rng.below(1000) as u64, lines, line_len);
+
+        let mk = |combine: bool| {
+            let cluster = Arc::new(mare::cluster::Cluster::new(
+                Arc::new(mare::tools::images::stock_registry(None)),
+                None,
+                ClusterConfig::sized(4, 2),
+            ));
+            let ds = mare::dataset::Dataset::parallelize_text(&genome, "\n", source_parts);
+            kmer::pipeline(cluster, ds, shuffle_parts, combine)
+        };
+        let on = mk(true);
+        let off = mk(false);
+
+        // same physical skeleton: op chains and stage boundaries match
+        let pp_on = compile(on.dataset().plan());
+        let pp_off = compile(off.dataset().plan());
+        prop_assert!(
+            pp_on.stages.len() == pp_off.stages.len(),
+            "stage counts differ: {} vs {}",
+            pp_on.stages.len(),
+            pp_off.stages.len()
+        );
+        for (a, b) in pp_on.stages.iter().zip(&pp_off.stages) {
+            let ops_a: Vec<String> = a.ops.iter().map(|o| o.label()).collect();
+            let ops_b: Vec<String> = b.ops.iter().map(|o| o.label()).collect();
+            prop_assert!(ops_a == ops_b, "stage {} ops differ: {ops_a:?} vs {ops_b:?}", a.id);
+            prop_assert!(
+                format!("{:?}", a.output) == format!("{:?}", b.output),
+                "stage {} boundaries differ",
+                a.id
+            );
+        }
+
+        // ... apart from exactly one pushed combiner, on a shuffle edge
+        let combiners = |pp: &PhysicalPlan| -> Vec<usize> {
+            pp.stages.iter().filter(|s| s.combiner.is_some()).map(|s| s.id).collect()
+        };
+        let on_ids = combiners(&pp_on);
+        prop_assert!(on_ids.len() == 1, "on-plan must carry exactly one combiner: {on_ids:?}");
+        prop_assert!(combiners(&pp_off).is_empty(), "off-plan must carry none");
+        prop_assert!(
+            matches!(pp_on.stages[on_ids[0]].output, StageOutput::Shuffle(_)),
+            "the combiner must sit on a shuffle boundary"
+        );
+
+        // identical collected bytes, both equal to the oracle
+        let out_on = on.run().map_err(|e| e.to_string())?;
+        let out_off = off.run().map_err(|e| e.to_string())?;
+        let text_on = out_on.collect_text("\n");
+        prop_assert!(
+            text_on == out_off.collect_text("\n"),
+            "combining changed the collected result"
+        );
+        prop_assert!(
+            text_on.trim_end() == kmer::oracle(&genome, kmer::K),
+            "result disagrees with the oracle"
+        );
+        Ok(())
+    });
+}
+
 // ------------------------------------------------- spool record bytes
 
 /// Every spool transition owns a FIXED set of record fields and must

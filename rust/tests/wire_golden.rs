@@ -32,6 +32,7 @@ const GOLDEN: &[&str] = &[
     "collect_minimal.json",
     "storage_ingest.json",
     "tenant_priority.json",
+    "kmer_combine.json",
 ];
 
 fn golden_path(name: &str) -> String {
@@ -214,11 +215,13 @@ fn arbitrary_pipeline(rng: &mut Rng) -> Pipeline {
                 depth: if rng.bool(0.5) { None } else { Some(rng.range(1, 5)) },
                 disk_mounts: rng.bool(0.5),
                 fused: None,
+                combine: rng.bool(0.3),
             }),
             2 => PipelineOp::RepartitionBy {
                 key: KeySelector::named(rng.choice(&KeySelector::known()))
                     .expect("registered name"),
                 partitions: rng.range(1, 9),
+                combine: None,
             },
             _ => PipelineOp::Repartition { partitions: rng.range(1, 9) },
         };
@@ -307,6 +310,7 @@ fn opaque_key_fns_never_encode_but_everything_else_does() {
                 r.as_text().unwrap_or("").len().to_string()
             })),
             partitions: 2,
+            combine: None,
         },
         PipelineOp::Collect,
     ]);
