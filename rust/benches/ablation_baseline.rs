@@ -114,7 +114,8 @@ fn main() {
     };
     let wf = WorkflowEngine::new(engine, ClusterConfig::sized(workers, 8));
     let library = genlib::library_sdf(0xAB2, nmols);
-    let records: Vec<Record> = mare::dataset::split_records(&library, vs::SDF_SEP)
+    let records: Vec<Record> = mare::dataset::Splitter::new(vs::SDF_SEP)
+        .split_owned(&library)
         .into_iter()
         .map(Record::text)
         .collect();

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use mare::container::{RunConfig, Vfs};
-use mare::dataset::{split_records, Partitioner, Record};
+use mare::dataset::{Partitioner, Record, Splitter};
 use mare::simtime::{Duration, SlotSchedule, SlotTask};
 use mare::util::bench::Bench;
 
@@ -24,13 +24,15 @@ fn main() {
 
     // ---- record splitting (ingest + every TextFile stage boundary)
     let sdf_doc = mare::workloads::genlib::library_sdf(1, 512);
+    let sdf_splitter = Splitter::new("\n$$$$\n");
     b.time("split_records/sdf_512mol", || {
-        let recs = split_records(&sdf_doc, "\n$$$$\n");
+        let recs = sdf_splitter.split_owned(&sdf_doc);
         assert_eq!(recs.len(), 512);
     });
     let lines: String = (0..10_000).map(|i| format!("line-{i}\n")).collect();
+    let line_splitter = Splitter::new("\n");
     b.time("split_records/10k_lines", || {
-        let recs = split_records(&lines, "\n");
+        let recs = line_splitter.split_owned(&lines);
         assert_eq!(recs.len(), 10_000);
     });
 
@@ -71,6 +73,7 @@ fn main() {
             cpus: 1 + (i % 3) as u32,
             preferred: Some(i % 16),
             remote_penalty: Duration::seconds(0.2),
+            release: mare::simtime::VirtualTime::ZERO,
         })
         .collect();
     b.time("slot_schedule/10k_tasks_16x8", || {

@@ -128,6 +128,7 @@ impl WorkflowEngine {
                         cpus: op.cost_model().cpus.min(self.config.vcpus_per_worker),
                         preferred: None,
                         remote_penalty: Duration::ZERO,
+                        release: VirtualTime::ZERO,
                     }
                 })
                 .collect();

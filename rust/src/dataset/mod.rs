@@ -42,7 +42,7 @@ impl Dataset {
     /// (see `docs/WIRE_FORMAT.md`).
     ///
     /// The text is copied into ONE shared buffer; every record is an
-    /// O(1) slice of it ([`split_records_shared`]).
+    /// O(1) slice of it ([`Splitter::split`]).
     pub fn parallelize_text_labeled(
         text: &str,
         sep: &str,
@@ -50,7 +50,8 @@ impl Dataset {
         label: impl Into<String>,
     ) -> Self {
         let buf = crate::util::bytes::SharedStr::from(text);
-        let records: Vec<Record> = split_records_shared(&buf, sep)
+        let records: Vec<Record> = Splitter::new(sep)
+            .split(&buf)
             .into_iter()
             .map(Record::Text)
             .collect();
@@ -148,43 +149,83 @@ impl Dataset {
     }
 }
 
-/// Split on a separator, dropping empty chunks (the paper's TextFile
-/// record semantics: records joined by `sep`, e.g. "\n$$$$\n" for SDF).
-pub fn split_records(text: &str, sep: &str) -> Vec<String> {
-    if sep.is_empty() {
-        return if text.is_empty() { vec![] } else { vec![text.to_string()] };
-    }
-    text.split(sep)
-        .filter(|chunk| !chunk.trim().is_empty())
-        .map(|chunk| chunk.to_string())
-        .collect()
+/// Scanner-backed record splitter — the ONE entry point for turning a
+/// text buffer into TextFile records (the paper's semantics: records
+/// joined by `sep`, e.g. "\n$$$$\n" for SDF, with whitespace-only
+/// chunks dropped). Separator search runs through the SWAR kernels in
+/// [`crate::util::scan`]; [`Splitter::split`] yields O(1) views of the
+/// source buffer, [`Splitter::record_ranges`] exposes the exact byte
+/// offsets (what `storage::ingest` uses for block-accurate locality).
+///
+/// `parallelize_text`, `storage::ingest` and the TextFile stage-out
+/// boundary all go through this type; the free functions
+/// [`split_records`] / [`split_records_shared`] survive as thin shims.
+#[derive(Debug, Clone)]
+pub struct Splitter {
+    sep: String,
 }
 
-/// Zero-copy [`split_records`]: every chunk is an O(1) slice of the
-/// ingested buffer instead of a fresh `String`. Byte-identical chunk
-/// semantics to the owned variant (property-tested in
-/// `rust/tests/prop_invariants.rs`); this is what `parallelize_text`,
-/// `storage::ingest` and the TextFile stage-out boundary use so record
-/// payloads share the ingested allocation.
+impl Splitter {
+    pub fn new(sep: impl Into<String>) -> Splitter {
+        Splitter { sep: sep.into() }
+    }
+
+    pub fn sep(&self) -> &str {
+        &self.sep
+    }
+
+    /// Exact byte ranges `[start, end)` of the record chunks of `text`
+    /// (whitespace-only chunks dropped). An empty separator means
+    /// "don't split": the whole text is one record (or none, if empty).
+    ///
+    /// Byte-level matching of a valid-UTF-8 separator in valid-UTF-8
+    /// text always lands on char boundaries (ASCII bytes never occur
+    /// inside multi-byte sequences, and lead/continuation byte ranges
+    /// are disjoint), so the ranges are safe to slice with.
+    pub fn record_ranges(&self, text: &str) -> Vec<(usize, usize)> {
+        if self.sep.is_empty() {
+            return if text.is_empty() { vec![] } else { vec![(0, text.len())] };
+        }
+        crate::util::scan::split_ranges(text.as_bytes(), self.sep.as_bytes())
+            .into_iter()
+            .filter(|&(s, e)| !text[s..e].trim().is_empty())
+            .collect()
+    }
+
+    /// Zero-copy split: every record is an O(1) slice of `text`'s
+    /// buffer. Chunk semantics are byte-identical to
+    /// [`Splitter::split_owned`] (property-tested in
+    /// `rust/tests/prop_invariants.rs`).
+    pub fn split(&self, text: &crate::util::bytes::SharedStr) -> Vec<crate::util::bytes::SharedStr> {
+        self.record_ranges(text.as_str())
+            .into_iter()
+            .map(|(s, e)| text.slice(s, e))
+            .collect()
+    }
+
+    /// Owned split (fresh `String` per record) — the pre-zero-copy
+    /// behaviour, kept for benchmarking and driver-side callers that
+    /// need owned chunks.
+    pub fn split_owned(&self, text: &str) -> Vec<String> {
+        self.record_ranges(text)
+            .into_iter()
+            .map(|(s, e)| text[s..e].to_string())
+            .collect()
+    }
+}
+
+/// Thin shim over [`Splitter`] for callers that want owned chunks.
+#[deprecated(since = "0.9.0", note = "use Splitter::new(sep).split_owned(text)")]
+pub fn split_records(text: &str, sep: &str) -> Vec<String> {
+    Splitter::new(sep).split_owned(text)
+}
+
+/// Thin shim over [`Splitter::split`] (zero-copy split).
 pub fn split_records_shared(
     text: &crate::util::bytes::SharedStr,
     sep: &str,
 ) -> Vec<crate::util::bytes::SharedStr> {
-    if sep.is_empty() {
-        return if text.is_empty() { vec![] } else { vec![text.clone()] };
-    }
-    let s = text.as_str();
-    // every chunk `str::split` yields is a subslice of `s`; its offset
-    // in the buffer is the pointer distance, so the shared variant
-    // inherits the owned variant's chunk semantics by construction
-    let base = s.as_ptr() as usize;
-    s.split(sep)
-        .filter(|chunk| !chunk.trim().is_empty())
-        .map(|chunk| {
-            let start = chunk.as_ptr() as usize - base;
-            text.slice(start, start + chunk.len())
-        })
-        .collect()
+    Splitter::new(sep).split(text)
 }
 
 /// Join records with a separator for mounting (inverse of
@@ -200,8 +241,20 @@ pub fn join_records(records: &[String], sep: &str) -> String {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim tests exercise `split_records` on purpose
 mod tests {
     use super::*;
+
+    #[test]
+    fn splitter_exposes_exact_ranges() {
+        let sp = Splitter::new("\n$$$$\n");
+        let text = "mol1\n$$$$\nmol2\n$$$$\n";
+        assert_eq!(sp.record_ranges(text), vec![(0, 4), (10, 14)]);
+        assert_eq!(sp.split_owned(text), vec!["mol1", "mol2"]);
+        // empty separator: whole text is one record
+        assert_eq!(Splitter::new("").record_ranges("abc"), vec![(0, 3)]);
+        assert!(Splitter::new("").record_ranges("").is_empty());
+    }
 
     #[test]
     fn parallelize_balances_contiguously() {

@@ -3,6 +3,7 @@
 //! alignment image).
 
 use crate::error::{MareError, Result};
+use crate::util::scan;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Contig {
@@ -18,7 +19,10 @@ pub struct Reference {
 impl Reference {
     pub fn parse(text: &str) -> Result<Reference> {
         let mut contigs: Vec<Contig> = Vec::new();
-        for line in text.lines() {
+        // contigs stay owned (they're built by concatenation), but the
+        // line walk itself goes through the SWAR scanner
+        for (s, e) in scan::line_ranges(text.as_bytes()) {
+            let line = &text[s..e];
             if let Some(name) = line.strip_prefix('>') {
                 contigs.push(Contig {
                     name: name.split_whitespace().next().unwrap_or("").to_string(),

@@ -1,12 +1,19 @@
 //! FASTQ short reads (interleaved, as the paper ingests from 1KGP).
+//!
+//! Records are zero-copy: `parse_many` finds line boundaries with the
+//! SWAR scanner ([`crate::util::scan::line_ranges`]) and every field is
+//! an O(1) slice of the input buffer ([`SharedStr`] / [`Shared`]), not
+//! a per-record `to_string` copy.
 
 use crate::error::{MareError, Result};
+use crate::util::bytes::{Shared, SharedStr};
+use crate::util::scan;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct FastqRead {
-    pub id: String,
-    pub seq: Vec<u8>,
-    pub qual: Vec<u8>,
+    pub id: SharedStr,
+    pub seq: Shared,
+    pub qual: Shared,
 }
 
 impl FastqRead {
@@ -20,34 +27,54 @@ impl FastqRead {
     }
 }
 
-/// Parse a FASTQ chunk (4 lines per read).
-pub fn parse_many(text: &str) -> Result<Vec<FastqRead>> {
-    let lines: Vec<&str> = text.lines().collect();
+/// Parse a FASTQ chunk (4 lines per read). Fields are O(1) views of
+/// `text`'s buffer.
+pub fn parse_many(text: &SharedStr) -> Result<Vec<FastqRead>> {
+    let lines: Vec<(usize, usize)> = scan::line_ranges(text.as_shared().as_slice()).collect();
     let mut out = Vec::with_capacity(lines.len() / 4);
     let mut i = 0;
     while i < lines.len() {
-        if lines[i].trim().is_empty() {
+        let line = |k: usize| &text[lines[k].0..lines[k].1];
+        if line(i).trim().is_empty() {
             i += 1;
             continue;
         }
         if i + 3 >= lines.len() {
             return Err(err(format!("truncated read at line {i}")));
         }
-        let id = lines[i]
-            .strip_prefix('@')
-            .ok_or_else(|| err(format!("expected @ header, got `{}`", lines[i])))?;
-        if !lines[i + 2].starts_with('+') {
+        if !line(i).starts_with('@') {
+            return Err(err(format!("expected @ header, got `{}`", line(i))));
+        }
+        if !line(i + 2).starts_with('+') {
             return Err(err(format!("expected + separator at line {}", i + 2)));
         }
-        let seq = lines[i + 1].trim().as_bytes().to_vec();
-        let qual = lines[i + 3].trim().as_bytes().to_vec();
-        if seq.len() != qual.len() {
+        let id = text.slice(lines[i].0 + 1, lines[i].1);
+        let (s0, s1) = trimmed(text, lines[i + 1]);
+        let (q0, q1) = trimmed(text, lines[i + 3]);
+        if s1 - s0 != q1 - q0 {
             return Err(err(format!("seq/qual length mismatch for `{id}`")));
         }
-        out.push(FastqRead { id: id.to_string(), seq, qual });
+        out.push(FastqRead {
+            id,
+            seq: text.as_shared().slice(s0, s1),
+            qual: text.as_shared().slice(q0, q1),
+        });
         i += 4;
     }
     Ok(out)
+}
+
+/// Old owned-`&str` entry point, kept for one release.
+#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
+pub fn parse_many_str(text: &str) -> Result<Vec<FastqRead>> {
+    parse_many(&text.into())
+}
+
+/// Whitespace-trimmed sub-range of line `(s, e)` within `text`.
+fn trimmed(text: &SharedStr, (s, e): (usize, usize)) -> (usize, usize) {
+    let t = text[s..e].trim();
+    let off = t.as_ptr() as usize - text.as_str().as_ptr() as usize;
+    (off, off + t.len())
 }
 
 pub fn write_many(reads: &[FastqRead]) -> String {
@@ -65,17 +92,27 @@ mod tests {
     #[test]
     fn roundtrip() {
         let reads = vec![
-            FastqRead { id: "r1/1".into(), seq: b"ACGT".to_vec(), qual: b"IIII".to_vec() },
-            FastqRead { id: "r1/2".into(), seq: b"GGCC".to_vec(), qual: b"HHHH".to_vec() },
+            FastqRead { id: "r1/1".into(), seq: b"ACGT".to_vec().into(), qual: b"IIII".to_vec().into() },
+            FastqRead { id: "r1/2".into(), seq: b"GGCC".to_vec().into(), qual: b"HHHH".to_vec().into() },
         ];
         let text = write_many(&reads);
-        assert_eq!(parse_many(&text).unwrap(), reads);
+        assert_eq!(parse_many(&text.into()).unwrap(), reads);
+    }
+
+    #[test]
+    fn fields_are_views_of_the_input_buffer() {
+        let text = SharedStr::from("@r9\nACGTAC\n+\nIIIIII\n");
+        let reads = parse_many(&text).unwrap();
+        // text + id + seq + qual = 4 handles on ONE allocation
+        assert_eq!(text.as_shared().ref_count(), 4);
+        assert_eq!(reads[0].id, "r9");
+        assert_eq!(reads[0].seq.as_slice(), b"ACGTAC");
     }
 
     #[test]
     fn rejects_malformed() {
-        assert!(parse_many("@r1\nACGT\n+\n").is_err()); // truncated
-        assert!(parse_many("r1\nACGT\n+\nIIII\n").is_err()); // no @
-        assert!(parse_many("@r1\nACGT\n+\nII\n").is_err()); // qual mismatch
+        assert!(parse_many(&"@r1\nACGT\n+\n".into()).is_err()); // truncated
+        assert!(parse_many(&"r1\nACGT\n+\nIIII\n".into()).is_err()); // no @
+        assert!(parse_many(&"@r1\nACGT\n+\nII\n".into()).is_err()); // qual mismatch
     }
 }

@@ -1,22 +1,27 @@
 //! SAM alignment records (the text format the paper converts to so the
 //! chromosome id is parseable for `repartitionBy` — Listing 3).
+//!
+//! Fields are zero-copy [`SharedStr`]/[`Shared`] views: lines come from
+//! the SWAR scanner and tab fields are O(1) slices of the input buffer.
 
 use crate::error::{MareError, Result};
+use crate::util::bytes::{Shared, SharedStr};
+use crate::util::scan;
 
 pub const FLAG_UNMAPPED: u16 = 0x4;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct SamRecord {
-    pub qname: String,
+    pub qname: SharedStr,
     pub flag: u16,
     /// Reference (chromosome) name, `*` if unmapped.
-    pub rname: String,
+    pub rname: SharedStr,
     /// 1-based leftmost position, 0 if unmapped.
     pub pos: u64,
     pub mapq: u8,
-    pub cigar: String,
-    pub seq: Vec<u8>,
-    pub qual: Vec<u8>,
+    pub cigar: SharedStr,
+    pub seq: Shared,
+    pub qual: Shared,
 }
 
 impl SamRecord {
@@ -24,20 +29,22 @@ impl SamRecord {
         self.flag & FLAG_UNMAPPED == 0 && self.rname != "*"
     }
 
-    pub fn parse(line: &str) -> Result<SamRecord> {
-        let f: Vec<&str> = line.split('\t').collect();
+    /// Parse one alignment line; string/byte fields are O(1) views.
+    pub fn parse(line: &SharedStr) -> Result<SamRecord> {
+        let f = scan::split_ranges(line.as_shared().as_slice(), b"\t");
         if f.len() < 11 {
             return Err(err(format!("{} fields, want >= 11: `{line}`", f.len())));
         }
+        let raw = |i: usize| &line[f[i].0..f[i].1];
         Ok(SamRecord {
-            qname: f[0].to_string(),
-            flag: f[1].parse().map_err(|_| err(format!("bad flag `{}`", f[1])))?,
-            rname: f[2].to_string(),
-            pos: f[3].parse().map_err(|_| err(format!("bad pos `{}`", f[3])))?,
-            mapq: f[4].parse().map_err(|_| err(format!("bad mapq `{}`", f[4])))?,
-            cigar: f[5].to_string(),
-            seq: f[9].as_bytes().to_vec(),
-            qual: f[10].as_bytes().to_vec(),
+            qname: line.slice(f[0].0, f[0].1),
+            flag: raw(1).parse().map_err(|_| err(format!("bad flag `{}`", raw(1))))?,
+            rname: line.slice(f[2].0, f[2].1),
+            pos: raw(3).parse().map_err(|_| err(format!("bad pos `{}`", raw(3))))?,
+            mapq: raw(4).parse().map_err(|_| err(format!("bad mapq `{}`", raw(4))))?,
+            cigar: line.slice(f[5].0, f[5].1),
+            seq: line.as_shared().slice(f[9].0, f[9].1),
+            qual: line.as_shared().slice(f[10].0, f[10].1),
         })
     }
 
@@ -56,18 +63,40 @@ impl SamRecord {
     }
 }
 
-/// Parse SAM text, skipping header (@) lines.
-pub fn parse_many(text: &str) -> Result<Vec<SamRecord>> {
-    text.lines()
-        .filter(|l| !l.starts_with('@') && !l.trim().is_empty())
-        .map(SamRecord::parse)
-        .collect()
+/// Parse SAM text, skipping header (@) lines. Record fields are views
+/// of `text`'s buffer.
+pub fn parse_many(text: &SharedStr) -> Result<Vec<SamRecord>> {
+    let mut out = Vec::new();
+    for (s, e) in scan::line_ranges(text.as_shared().as_slice()) {
+        let l = &text[s..e];
+        if l.starts_with('@') || l.trim().is_empty() {
+            continue;
+        }
+        out.push(SamRecord::parse(&text.slice(s, e))?);
+    }
+    Ok(out)
+}
+
+/// Old owned-`&str` entry point, kept for one release.
+#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
+pub fn parse_many_str(text: &str) -> Result<Vec<SamRecord>> {
+    parse_many(&text.into())
 }
 
 /// The chromosome id of one SAM line — the paper's `parseChromosomeId`
-/// keyBy function (Listing 3, line 12).
+/// keyBy function (Listing 3, line 12). Two SWAR tab hops, no split
+/// allocation.
 pub fn parse_chromosome_id(sam_line: &str) -> String {
-    sam_line.split('\t').nth(2).unwrap_or("*").to_string()
+    let b = sam_line.as_bytes();
+    let mut at = 0usize;
+    for _ in 0..2 {
+        match scan::memchr(b'\t', &b[at..]) {
+            Some(i) => at += i + 1,
+            None => return "*".to_string(),
+        }
+    }
+    let end = scan::memchr(b'\t', &b[at..]).map_or(b.len(), |i| at + i);
+    sam_line[at..end].to_string()
 }
 
 fn err(detail: String) -> MareError {
@@ -86,15 +115,15 @@ mod tests {
             pos: 12345,
             mapq: 60,
             cigar: "100M".into(),
-            seq: b"ACGT".to_vec(),
-            qual: b"IIII".to_vec(),
+            seq: b"ACGT".to_vec().into(),
+            qual: b"IIII".to_vec().into(),
         }
     }
 
     #[test]
     fn roundtrip() {
         let line = rec().to_line();
-        let parsed = SamRecord::parse(&line).unwrap();
+        let parsed = SamRecord::parse(&line.into()).unwrap();
         assert_eq!(parsed, rec());
         assert!(parsed.is_mapped());
     }
@@ -103,13 +132,23 @@ mod tests {
     fn chromosome_key_fn() {
         assert_eq!(parse_chromosome_id(&rec().to_line()), "chr2");
         assert_eq!(parse_chromosome_id("garbage"), "*");
+        assert_eq!(parse_chromosome_id("a\tb\t"), "");
     }
 
     #[test]
     fn header_lines_skipped() {
         let text = format!("@HD\tVN:1.6\n@SQ\tSN:chr2\tLN:100\n{}\n", rec().to_line());
-        let recs = parse_many(&text).unwrap();
+        let recs = parse_many(&text.into()).unwrap();
         assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn fields_are_views_of_the_line() {
+        let text = SharedStr::from(rec().to_line());
+        let recs = parse_many(&text).unwrap();
+        // qname + rname + cigar + seq + qual + the text handle
+        assert_eq!(text.as_shared().ref_count(), 6);
+        assert_eq!(recs[0].rname, "chr2");
     }
 
     #[test]
@@ -121,6 +160,6 @@ mod tests {
 
     #[test]
     fn rejects_short_lines() {
-        assert!(SamRecord::parse("a\tb\tc").is_err());
+        assert!(SamRecord::parse(&"a\tb\tc".into()).is_err());
     }
 }

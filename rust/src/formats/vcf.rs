@@ -1,32 +1,39 @@
 //! VCF variant calls (the SNP pipeline's output format).
+//!
+//! String fields are [`SharedStr`] views: `parse_many` line-scans with
+//! the SWAR kernel and `parse` tab-splits each line into O(1) slices.
 
 use crate::error::{MareError, Result};
+use crate::util::bytes::SharedStr;
+use crate::util::scan;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct VcfRecord {
-    pub chrom: String,
+    pub chrom: SharedStr,
     pub pos: u64,
-    pub id: String,
-    pub ref_base: String,
-    pub alt: String,
+    pub id: SharedStr,
+    pub ref_base: SharedStr,
+    pub alt: SharedStr,
     pub qual: f32,
-    pub genotype: String, // GT sample field, e.g. "0/1"
+    pub genotype: SharedStr, // GT sample field, e.g. "0/1"
 }
 
 impl VcfRecord {
-    pub fn parse(line: &str) -> Result<VcfRecord> {
-        let f: Vec<&str> = line.split('\t').collect();
+    /// Parse one record line; string fields are O(1) views of `line`.
+    pub fn parse(line: &SharedStr) -> Result<VcfRecord> {
+        let f = scan::split_ranges(line.as_shared().as_slice(), b"\t");
         if f.len() < 10 {
             return Err(err(format!("{} fields, want >= 10: `{line}`", f.len())));
         }
+        let raw = |i: usize| &line[f[i].0..f[i].1];
         Ok(VcfRecord {
-            chrom: f[0].to_string(),
-            pos: f[1].parse().map_err(|_| err(format!("bad pos `{}`", f[1])))?,
-            id: f[2].to_string(),
-            ref_base: f[3].to_string(),
-            alt: f[4].to_string(),
-            qual: f[5].parse().map_err(|_| err(format!("bad qual `{}`", f[5])))?,
-            genotype: f[9].to_string(),
+            chrom: line.slice(f[0].0, f[0].1),
+            pos: raw(1).parse().map_err(|_| err(format!("bad pos `{}`", raw(1))))?,
+            id: line.slice(f[2].0, f[2].1),
+            ref_base: line.slice(f[3].0, f[3].1),
+            alt: line.slice(f[4].0, f[4].1),
+            qual: raw(5).parse().map_err(|_| err(format!("bad qual `{}`", raw(5))))?,
+            genotype: line.slice(f[9].0, f[9].1),
         })
     }
 
@@ -40,12 +47,24 @@ impl VcfRecord {
 
 pub const HEADER: &str = "##fileformat=VCFv4.2\n##source=MaRe-sim-HaplotypeCaller\n#CHROM\tPOS\tID\tREF\tALT\tQUAL\tFILTER\tINFO\tFORMAT\tSAMPLE\n";
 
-/// Parse a VCF document (header tolerated and skipped).
-pub fn parse_many(text: &str) -> Result<Vec<VcfRecord>> {
-    text.lines()
-        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
-        .map(VcfRecord::parse)
-        .collect()
+/// Parse a VCF document (header tolerated and skipped). Record fields
+/// are views of `text`'s buffer.
+pub fn parse_many(text: &SharedStr) -> Result<Vec<VcfRecord>> {
+    let mut out = Vec::new();
+    for (s, e) in scan::line_ranges(text.as_shared().as_slice()) {
+        let l = &text[s..e];
+        if l.starts_with('#') || l.trim().is_empty() {
+            continue;
+        }
+        out.push(VcfRecord::parse(&text.slice(s, e))?);
+    }
+    Ok(out)
+}
+
+/// Old owned-`&str` entry point, kept for one release.
+#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
+pub fn parse_many_str(text: &str) -> Result<Vec<VcfRecord>> {
+    parse_many(&text.into())
 }
 
 /// Serialize with header.
@@ -63,7 +82,7 @@ pub fn write_many(records: &[VcfRecord]) -> String {
 pub fn concat(docs: &[String]) -> Result<String> {
     let mut all = Vec::new();
     for d in docs {
-        all.extend(parse_many(d)?);
+        all.extend(parse_many(&d.into())?);
     }
     all.sort_by(|a, b| (a.chrom.clone(), a.pos).cmp(&(b.chrom.clone(), b.pos)));
     Ok(write_many(&all))
@@ -93,7 +112,7 @@ mod tests {
     fn roundtrip() {
         let records = vec![rec("chr1", 10), rec("chr2", 5)];
         let text = write_many(&records);
-        assert_eq!(parse_many(&text).unwrap(), records);
+        assert_eq!(parse_many(&text.into()).unwrap(), records);
     }
 
     #[test]
@@ -101,7 +120,7 @@ mod tests {
         let a = write_many(&[rec("chr2", 100)]);
         let b = write_many(&[rec("chr1", 50), rec("chr2", 20)]);
         let merged = concat(&[a, b]).unwrap();
-        let recs = parse_many(&merged).unwrap();
+        let recs = parse_many(&merged.clone().into()).unwrap();
         assert_eq!(recs.len(), 3);
         assert_eq!(recs[0].chrom, "chr1");
         assert_eq!((recs[1].pos, recs[2].pos), (20, 100));
@@ -110,7 +129,16 @@ mod tests {
     }
 
     #[test]
+    fn fields_are_views_not_copies() {
+        let text = SharedStr::from(write_many(&[rec("chrX", 7)]));
+        let recs = parse_many(&text).unwrap();
+        // 5 string fields + the document handle share one buffer
+        assert_eq!(text.as_shared().ref_count(), 6);
+        assert_eq!(recs[0].genotype, "0/1");
+    }
+
+    #[test]
     fn rejects_garbage() {
-        assert!(VcfRecord::parse("chr1\tx").is_err());
+        assert!(VcfRecord::parse(&"chr1\tx".into()).is_err());
     }
 }

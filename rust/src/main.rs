@@ -469,12 +469,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let pr = args.flag_u64("pr", 5)?;
+    let pr = args.flag_u64("pr", 9)?;
     let out = args
         .flag("out")
         .map(String::from)
         .unwrap_or_else(|| format!("BENCH_{pr}.json"));
     let filter = args.flag("filter").map(String::from);
+
+    // bench-smoke greps this to assert the scalar fallback is what ran
+    // under MARE_SCAN_FORCE_SCALAR=1
+    println!("scan kernel: {}", mare::util::scan::active_kernel());
 
     let mut b = mare::util::bench::Bench::with_filter("micro_hotpath", filter);
     mare::perf::hotpath_cases(&mut b);

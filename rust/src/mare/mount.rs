@@ -15,10 +15,10 @@
 //! `into_bytes` triple copy); a BinaryFiles mount binds each record's
 //! [`Shared`] payload into the VFS by refcount. Stage-out goes the
 //! other way zero-copy: output records are O(1) slices of the VFS file
-//! buffers ([`split_records_shared`] / `take_dir`).
+//! buffers ([`Splitter::split`] / `take_dir`).
 
 use crate::container::Vfs;
-use crate::dataset::{split_records_shared, Record};
+use crate::dataset::{Record, Splitter};
 use crate::error::{MareError, Result};
 use crate::util::bytes::{SegmentWriter, Shared, SharedStr};
 
@@ -91,7 +91,7 @@ impl MountPoint {
             MountPoint::StdStream { sep } => {
                 let text = SharedStr::from_shared(Shared::from_vec(stdout))
                     .map_err(|_| MareError::Container("streamed stdout is not UTF-8".into()))?;
-                Ok(Some(split_records_shared(&text, sep).into_iter().map(Record::Text).collect()))
+                Ok(Some(Splitter::new(sep.as_str()).split(&text).into_iter().map(Record::Text).collect()))
             }
             _ => Ok(None),
         }
@@ -143,7 +143,7 @@ impl MountPoint {
                 }
                 let text = SharedStr::from_shared(fs.read_shared(path)?)
                     .map_err(|_| MareError::Container(format!("{path}: not UTF-8")))?;
-                Ok(split_records_shared(&text, sep).into_iter().map(Record::Text).collect())
+                Ok(Splitter::new(sep.as_str()).split(&text).into_iter().map(Record::Text).collect())
             }
             MountPoint::BinaryFiles { dir } => {
                 let files = fs.take_dir(dir)?;

@@ -73,9 +73,15 @@ fn key_first_word(r: &Record) -> String {
     r.as_text().and_then(|t| t.split_whitespace().next()).unwrap_or("").to_string()
 }
 
-/// Text before the first `:`.
+/// Text before the first `:` (SWAR byte scan — this runs once per
+/// record on the shuffle path).
 fn key_prefix_colon(r: &Record) -> String {
-    r.as_text().and_then(|t| t.split(':').next()).unwrap_or("").to_string()
+    r.as_text()
+        .map(|t| {
+            let end = crate::util::scan::memchr(b':', t.as_bytes()).unwrap_or(t.len());
+            t[..end].to_string()
+        })
+        .unwrap_or_default()
 }
 
 /// First [`KMER_PREFIX_LEN`] characters of the first whitespace-separated

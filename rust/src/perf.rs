@@ -25,16 +25,14 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::dataset::{
-    join_records, plan, split_records, split_records_shared, Dataset, Partition, Partitioner,
-    Record,
-};
+use crate::dataset::{join_records, plan, Dataset, Partition, Partitioner, Record, Splitter};
 use crate::error::Result;
 use crate::mare::MountPoint;
 use crate::tools::images;
 use crate::util::bench::{Bench, Timing};
 use crate::util::bytes::SharedStr;
 use crate::util::json::Json;
+use crate::util::scan;
 use crate::workloads::kmer;
 
 /// (comparison name, old-path case, new-path case) — rows of the
@@ -51,6 +49,7 @@ pub const COMPARISONS: &[(&str, &str, &str)] = &[
         "mount_materialize/segmented_1k",
     ),
     ("split_records", "split/owned_10k_lines", "split/shared_10k_lines"),
+    ("scan_find", "scan/scalar_find_256k", "scan/swar_find_256k"),
     (
         "kmer_combine",
         "kmer_pipeline/combine_off_16k_genome",
@@ -100,16 +99,31 @@ pub fn hotpath_cases(b: &mut Bench) {
     });
 
     // ---- record splitting: owned per-chunk Strings vs O(1) slices of
-    //      the ingested buffer (every TextFile stage boundary)
+    //      the ingested buffer (every TextFile stage boundary); both
+    //      paths ride the SWAR scanner now, so the delta isolates the
+    //      allocation cost
     let lines: String = (0..10_000).map(|i| format!("line-{i}\n")).collect();
+    let splitter = Splitter::new("\n");
     b.time("split/owned_10k_lines", || {
-        let recs = split_records(&lines, "\n");
+        let recs = splitter.split_owned(&lines);
         assert_eq!(recs.len(), 10_000);
     });
     let shared_lines = SharedStr::from_string(lines.clone());
     b.time("split/shared_10k_lines", || {
-        let recs = split_records_shared(&shared_lines, "\n");
+        let recs = splitter.split(&shared_lines);
         assert_eq!(recs.len(), 10_000);
+    });
+
+    // ---- separator scan: byte-at-a-time scalar vs the 8-byte SWAR
+    //      kernel, needle at the far end of a 256 KiB haystack
+    let mut hay = vec![b'G'; 256 << 10];
+    let last = hay.len() - 1;
+    hay[last] = b'\n';
+    b.time("scan/scalar_find_256k", || {
+        assert_eq!(scan::memchr_scalar(b'\n', &hay), Some(last));
+    });
+    b.time("scan/swar_find_256k", || {
+        assert_eq!(scan::memchr_swar(b'\n', &hay), Some(last));
     });
 
     // ---- shuffle path: the kmer workload end-to-end, combiner off vs
@@ -168,6 +182,50 @@ pub fn hotpath_cases(b: &mut Bench) {
     };
     b.time("skew_straggler/hash_hot_bucket", || aggregate(&hash_hot));
     b.time("skew_straggler/range_hot_bucket", || aggregate(&range_hot));
+}
+
+/// One row of the streamed-vs-batch ingest ledger.
+pub struct StreamIngestRow {
+    pub mode: &'static str,
+    pub first_partition_ready_ms: f64,
+    pub fully_materialized_ms: f64,
+}
+
+/// Deterministic *virtual-time* ledger for streamed vs batch ingest of
+/// a 64 KiB HDFS object over 8 partitions / 4 readers. These are
+/// simtime rows, not wall-clock timings: streaming does not make
+/// ingest faster, it makes the first partition usable before the last
+/// byte lands (`first_partition_ready < fully_materialized`), which is
+/// what lets `cluster::run_streamed` overlap map tasks with ingest.
+pub fn stream_ingest_ledger() -> Result<Vec<StreamIngestRow>> {
+    use crate::storage::StorageBackend;
+    let mut hdfs = crate::storage::Hdfs::new(4, 8 << 10);
+    let payload: String = (0..1024).map(|i| format!("{i:063}\n")).collect(); // 64 KiB
+    hdfs.put("stream.txt", payload.into_bytes())?;
+    let ms = |d: crate::simtime::Duration| d.as_seconds() * 1e3;
+    let (_, batch) =
+        crate::storage::ingest::ingest_text_as(&hdfs, "stream.txt", "\n", 8, 4, "bench")?;
+    let (_, streamed) = crate::storage::ingest::ingest_text_streamed_as(
+        &hdfs,
+        "stream.txt",
+        "\n",
+        8,
+        4,
+        "bench",
+        |_| {},
+    )?;
+    Ok(vec![
+        StreamIngestRow {
+            mode: "batch",
+            first_partition_ready_ms: ms(batch.first_partition_ready),
+            fully_materialized_ms: ms(batch.fully_materialized),
+        },
+        StreamIngestRow {
+            mode: "streamed",
+            first_partition_ready_ms: ms(streamed.first_partition_ready),
+            fully_materialized_ms: ms(streamed.fully_materialized),
+        },
+    ])
 }
 
 fn timing_json(t: &Timing) -> Json {
@@ -236,6 +294,16 @@ pub fn write_bench_json(path: &std::path::Path, pr: u64, timings: &[Timing]) -> 
             ])
         })
         .collect();
+    let ledger: Vec<Json> = stream_ingest_ledger()?
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("mode", Json::str(r.mode)),
+                ("first_partition_ready_ms", Json::num(r.first_partition_ready_ms)),
+                ("fully_materialized_ms", Json::num(r.fully_materialized_ms)),
+            ])
+        })
+        .collect();
     let doc = Json::obj(vec![
         ("bench", Json::str("micro_hotpath")),
         ("pr", Json::num(pr as f64)),
@@ -245,6 +313,8 @@ pub fn write_bench_json(path: &std::path::Path, pr: u64, timings: &[Timing]) -> 
         ("provenance", Json::str("measured")),
         ("timings", Json::Arr(timings.iter().map(timing_json).collect())),
         ("comparisons", Json::Arr(comps)),
+        // virtual-time rows (simtime ledger), not wall-clock timings
+        ("stream_ingest", Json::Arr(ledger)),
     ]);
     std::fs::write(path, doc.to_string_pretty())?;
     Ok(())
@@ -279,9 +349,26 @@ mod tests {
         let json = Json::parse(&text).unwrap();
         assert!(json.get("timings").is_some());
         assert!(json.get("comparisons").is_some());
+        assert!(json.get("stream_ingest").is_some());
         assert!(text.contains("\"pr\""));
         // a real run stamps itself measured (seeded placeholders differ)
         assert!(text.contains("measured"), "{text}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stream_ingest_ledger_overlaps_only_when_streamed() {
+        let rows = stream_ingest_ledger().unwrap();
+        let batch = rows.iter().find(|r| r.mode == "batch").unwrap();
+        let streamed = rows.iter().find(|r| r.mode == "streamed").unwrap();
+        assert_eq!(batch.first_partition_ready_ms, batch.fully_materialized_ms);
+        assert!(
+            streamed.first_partition_ready_ms < streamed.fully_materialized_ms,
+            "streamed first={} fully={}",
+            streamed.first_partition_ready_ms,
+            streamed.fully_materialized_ms
+        );
+        // streaming changes visibility, not total ingest time
+        assert_eq!(streamed.fully_materialized_ms, batch.fully_materialized_ms);
     }
 }

@@ -24,6 +24,11 @@ pub struct SlotTask {
     /// Extra duration if scheduled *off* the preferred worker
     /// (remote read of the cached partition).
     pub remote_penalty: Duration,
+    /// Earliest virtual time the task may start — its input partition's
+    /// availability. ZERO for batch-materialized inputs; streamed
+    /// ingest sets it to the partition's seal time so map tasks overlap
+    /// the tail of materialization without reading unsealed bytes.
+    pub release: VirtualTime,
 }
 
 /// Where a task ended up.
@@ -126,7 +131,7 @@ impl SlotSchedule {
                 if self.killed[w] || (cpus as usize) > self.slots[w].len() {
                     continue;
                 }
-                let s = self.earliest_on(w, cpus);
+                let s = self.earliest_on(w, cpus).max(t.release);
                 if s < best_start {
                     best_start = s;
                     best_w = w;
@@ -148,7 +153,7 @@ impl SlotSchedule {
                         && !self.killed[p]
                         && (cpus as usize) <= self.slots[p].len() =>
                 {
-                    let ps = self.earliest_on(p, cpus);
+                    let ps = self.earliest_on(p, cpus).max(t.release);
                     if ps.0 <= best_start.0 + self.locality_wait.0 {
                         (p, ps, true)
                     } else {
@@ -195,6 +200,7 @@ mod tests {
             cpus: 1,
             preferred: None,
             remote_penalty: Duration::ZERO,
+            release: VirtualTime::ZERO,
         }
     }
 
@@ -229,6 +235,7 @@ mod tests {
             cpus: 1,
             preferred: Some(1),
             remote_penalty: Duration::seconds(10.0),
+            release: VirtualTime::ZERO,
         };
         let p = s.run(&[t]);
         assert_eq!(p[0].worker, 1);
@@ -245,6 +252,7 @@ mod tests {
             cpus: 1,
             preferred: Some(0),
             remote_penalty: Duration::ZERO,
+            release: VirtualTime::ZERO,
         };
         let wants_zero = SlotTask {
             id: 1,
@@ -252,6 +260,7 @@ mod tests {
             cpus: 1,
             preferred: Some(0),
             remote_penalty: Duration::seconds(2.0),
+            release: VirtualTime::ZERO,
         };
         let p = s.run(&[filler, wants_zero]);
         assert_eq!(p[1].worker, 1);
@@ -271,6 +280,7 @@ mod tests {
             cpus: 1,
             preferred: Some(7),
             remote_penalty: Duration::seconds(0.5),
+            release: VirtualTime::ZERO,
         };
         let p = s.run(&[t]);
         assert!(p[0].worker < 2);
@@ -288,11 +298,36 @@ mod tests {
             cpus: 8,
             preferred: None,
             remote_penalty: Duration::ZERO,
+            release: VirtualTime::ZERO,
         };
         let small = task(1, 1.0);
         let p = s.run(&[big, small]);
         // small must wait for the 8-cpu task (LPT runs big first)
         assert_eq!(p[1].start, VirtualTime::seconds(4.0));
+    }
+
+    #[test]
+    fn release_time_gates_start_even_on_idle_workers() {
+        // an idle cluster cannot start a task before its input is sealed
+        let mut s = SlotSchedule::new(2, 1);
+        let gated = SlotTask { release: VirtualTime::seconds(5.0), ..task(0, 1.0) };
+        let free = task(1, 1.0);
+        let p = s.run(&[gated, free]);
+        assert_eq!(p[0].start, VirtualTime::seconds(5.0));
+        assert_eq!(p[0].end, VirtualTime::seconds(6.0));
+        // the unreleased task does not block the other worker
+        assert_eq!(p[1].start, VirtualTime::ZERO);
+        // locality still honored relative to the release clamp
+        let mut s = SlotSchedule::new(2, 1);
+        let local = SlotTask {
+            preferred: Some(1),
+            release: VirtualTime::seconds(2.0),
+            ..task(0, 1.0)
+        };
+        let p = s.run(&[local]);
+        assert_eq!(p[0].worker, 1);
+        assert!(p[0].local);
+        assert_eq!(p[0].start, VirtualTime::seconds(2.0));
     }
 
     #[test]
@@ -305,6 +340,7 @@ mod tests {
             cpus: 16,
             preferred: None,
             remote_penalty: Duration::ZERO,
+            release: VirtualTime::ZERO,
         };
         s.run(&[t]);
     }

@@ -41,7 +41,9 @@ use crate::config::BackendKind;
 use crate::dataset::Dataset;
 use crate::error::{MareError, Result};
 
-use super::ingest::{ingest_objects_as, ingest_text_as, IngestReport};
+use super::ingest::{
+    ingest_objects_as, ingest_text_as, ingest_text_streamed_as, IngestReport, SealedPartition,
+};
 use super::{Hdfs, LocalFs, StorageBackend, Swift, S3};
 
 /// Seed for deterministic object population — pinned to the same value
@@ -141,23 +143,73 @@ fn key_hash(key: &str) -> u64 {
 pub struct StorageCatalog {
     workers: usize,
     seed: u64,
+    /// Out-of-tree backends, registered by scheme (see [`Self::register`]).
+    /// Unlike the built-in schemes these arrive PRE-POPULATED: the
+    /// catalog ingests whatever the caller `put` into them instead of a
+    /// seeded population.
+    registered: Vec<(String, Box<dyn StorageBackend>)>,
 }
 
 impl StorageCatalog {
     /// The catalog every simulated driver uses ([`CATALOG_SEED`]).
     pub fn simulated(workers: usize) -> StorageCatalog {
-        StorageCatalog { workers: workers.max(1), seed: CATALOG_SEED }
+        StorageCatalog { workers: workers.max(1), seed: CATALOG_SEED, registered: Vec::new() }
     }
 
     /// A catalog with a custom population seed (tests, what-if runs).
     pub fn with_seed(workers: usize, seed: u64) -> StorageCatalog {
-        StorageCatalog { workers: workers.max(1), seed }
+        StorageCatalog { workers: workers.max(1), seed, registered: Vec::new() }
     }
 
-    /// Registered scheme names, in registry order (derived from
+    /// Built-in scheme names, in registry order (derived from
     /// [`BackendKind::ALL`] so the lists cannot drift).
     pub fn schemes() -> Vec<&'static str> {
         BackendKind::ALL.iter().map(|k| k.name()).collect()
+    }
+
+    /// Register an out-of-tree backend under `scheme`, joining the
+    /// fixed [`BackendKind::ALL`] table for THIS catalog instance.
+    /// Built-in schemes cannot be shadowed, and a scheme registers at
+    /// most once. Registered schemes resolve through
+    /// [`Self::resolve_label`]; on the submit wire their labels are not
+    /// [`StorageUri`]s, so they travel under the foreign-scheme-ignored
+    /// rule (opaque, validate-only) and only execute on a driver whose
+    /// catalog has the backend registered.
+    pub fn register(&mut self, scheme: &str, backend: Box<dyn StorageBackend>) -> Result<()> {
+        if scheme.is_empty() || !scheme.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+            return Err(MareError::Storage(format!(
+                "`{scheme}` is not a valid scheme name (ascii alphanumeric / `-`)"
+            )));
+        }
+        if BackendKind::parse(scheme).is_ok() {
+            return Err(MareError::Storage(format!(
+                "scheme `{scheme}` is built in and cannot be shadowed"
+            )));
+        }
+        if self.registered.iter().any(|(s, _)| s == scheme) {
+            return Err(MareError::Storage(format!("scheme `{scheme}` is already registered")));
+        }
+        self.registered.push((scheme.to_string(), backend));
+        Ok(())
+    }
+
+    /// Scheme names registered via [`Self::register`], in order.
+    pub fn registered_schemes(&self) -> Vec<&str> {
+        self.registered.iter().map(|(s, _)| s.as_str()).collect()
+    }
+
+    /// The registered backend + object key a label addresses, if its
+    /// scheme was [`Self::register`]ed (query params are sizing knobs
+    /// for seeded populations — registered backends hold real objects,
+    /// so the key stops at `?`).
+    fn registered_for<'a>(&'a self, label: &'a str) -> Option<(&'a dyn StorageBackend, &'a str)> {
+        let (scheme, rest) = label.split_once("://")?;
+        let (_, backend) = self.registered.iter().find(|(s, _)| s == scheme)?;
+        let key = rest.split('?').next().unwrap_or(rest);
+        if key.is_empty() {
+            return None;
+        }
+        Some((backend.as_ref(), key))
     }
 
     /// Construct the backend a scheme names. HDFS picks a block size
@@ -251,6 +303,44 @@ impl StorageCatalog {
         }
     }
 
+    /// [`Self::resolve`], but each text partition is sealed — handed to
+    /// `on_seal` — as soon as its byte range has been read, so the
+    /// cluster can release map tasks against sealed partitions while
+    /// later ones are still in flight. Glob (binary-objects) sources
+    /// have no record-streaming shape — whole objects are the records —
+    /// so they fall back to batch semantics: no early seals, and the
+    /// report pins `first_partition_ready == fully_materialized`.
+    pub fn resolve_streamed(
+        &self,
+        uri: &StorageUri,
+        partitions: usize,
+        on_seal: impl FnMut(&SealedPartition),
+    ) -> Result<(Dataset, IngestReport)> {
+        if uri.kind == BackendKind::File {
+            return Err(MareError::Storage(
+                "file:// objects are real files, not deterministic populations — \
+                 they cannot serve as ingest sources (use put_object/fetch_object)"
+                    .into(),
+            ));
+        }
+        let label = uri.label();
+        if uri.is_glob() {
+            return self.resolve(uri, partitions);
+        }
+        let bytes = self.object_bytes(uri);
+        let mut backend = self.open(uri.kind, bytes.len() as u64);
+        backend.put(&uri.key, bytes)?;
+        ingest_text_streamed_as(
+            backend.as_ref(),
+            &uri.key,
+            uri.sep(),
+            partitions,
+            self.workers,
+            &label,
+            on_seal,
+        )
+    }
+
     /// Write one object through a URI — the catalog's WRITE path. Only
     /// `file://` URIs are writable: the key is a filesystem path, the
     /// write is temp+rename atomic (readers never observe a torn
@@ -311,12 +401,19 @@ impl StorageCatalog {
         }
     }
 
-    /// [`Self::resolve`] from a raw label; errors on non-URI labels.
+    /// [`Self::resolve`] from a raw label. Schemes registered via
+    /// [`Self::register`] resolve first (against the backend's real
+    /// objects, record separator by key extension); everything else
+    /// must be a built-in storage URI.
     pub fn resolve_label(
         &self,
         label: &str,
         partitions: usize,
     ) -> Result<(Dataset, IngestReport)> {
+        if let Some((backend, key)) = self.registered_for(label) {
+            let sep = if key.ends_with(".sdf") { crate::workloads::vs::SDF_SEP } else { "\n" };
+            return ingest_text_as(backend, key, sep, partitions, self.workers, label);
+        }
         let uri = StorageUri::parse(label).ok_or_else(|| {
             MareError::Storage(format!(
                 "`{label}` is not a storage URI (schemes: {})",
@@ -463,5 +560,68 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("not a storage URI"), "{err}");
+    }
+
+    /// Out-of-tree backends join the scheme table via `register`, and
+    /// their labels travel the submit wire under the existing
+    /// foreign-scheme-ignored rule: opaque (validate-only) on drivers
+    /// without the backend, resolvable on a catalog that registered it.
+    #[test]
+    fn registered_schemes_resolve_and_stay_opaque_on_the_wire() {
+        let mut cat = StorageCatalog::simulated(2);
+        // built-in schemes cannot be shadowed; bad names are refused
+        assert!(cat.register("hdfs", Box::new(LocalFs::new())).is_err());
+        assert!(cat.register("", Box::new(LocalFs::new())).is_err());
+        assert!(cat.register("no/slash", Box::new(LocalFs::new())).is_err());
+
+        // a registered backend resolves its REAL objects (no seeded
+        // population) — params are stripped from the key
+        let mut b = LocalFs::new();
+        b.put("data.txt", b"a\nb\nc\nd".to_vec()).unwrap();
+        cat.register("ceph", Box::new(b)).unwrap();
+        assert!(cat.register("ceph", Box::new(LocalFs::new())).is_err(), "no duplicates");
+        assert_eq!(cat.registered_schemes(), vec!["ceph"]);
+
+        let (ds, rep) = cat.resolve_label("ceph://data.txt?ignored=1", 2).unwrap();
+        assert_eq!(ds.num_partitions(), 2);
+        assert_eq!(rep.bytes, 4); // four 1-byte records
+        let texts: Vec<String> = records_of(&ds)
+            .iter()
+            .map(|r| r.as_text().unwrap().to_string())
+            .collect();
+        assert_eq!(texts, vec!["a", "b", "c", "d"]);
+        // missing objects error instead of silently populating
+        assert!(cat.resolve_label("ceph://nope.txt", 2).is_err());
+
+        // the wire: an unknown registered scheme is not a StorageUri,
+        // so it round-trips as an opaque label (validate-only)
+        assert!(StorageUri::parse("ceph://data.txt").is_none());
+        let spec = crate::submit::SourceSpec::parse("ceph://data.txt?ignored=1");
+        assert!(!spec.is_executable(), "foreign schemes are validate-only");
+        assert_eq!(spec.label(), "ceph://data.txt?ignored=1", "label survives the wire");
+    }
+
+    /// Streamed resolution seals every text partition early and yields
+    /// the same dataset/accounting as batch; glob sources fall back to
+    /// batch semantics (no early seals).
+    #[test]
+    fn streamed_resolution_seals_early_and_matches_batch() {
+        let uri = StorageUri::parse("hdfs://genome.txt?lines=256").unwrap();
+        let cat = StorageCatalog::simulated(4);
+        let (batch, brep) = cat.resolve(&uri, 8).unwrap();
+        let mut seals = 0usize;
+        let (streamed, srep) = cat.resolve_streamed(&uri, 8, |_| seals += 1).unwrap();
+        assert_eq!(seals, 8);
+        assert_eq!(records_of(&batch), records_of(&streamed));
+        assert_eq!(srep.bytes, brep.bytes);
+        assert_eq!(srep.duration, brep.duration);
+        assert!(srep.first_partition_ready < srep.fully_materialized, "{srep:?}");
+        assert_eq!(brep.first_partition_ready, brep.fully_materialized);
+
+        let glob = StorageUri::parse("swift://m-*.bin?objects=3&bytes=16").unwrap();
+        let (_, grep) = cat
+            .resolve_streamed(&glob, 2, |_| panic!("globs must not seal early"))
+            .unwrap();
+        assert_eq!(grep.first_partition_ready, grep.fully_materialized);
     }
 }

@@ -6,11 +6,23 @@
 //! quantity behind Figure 5 (speedup = t(1 reader)/t(N readers)), and
 //! the per-partition locality hints are what lets HDFS-backed runs beat
 //! Swift in Figure 3.
+//!
+//! Two ingest shapes share the partitioning code:
+//!
+//! * **batch** ([`ingest_text_as`]) — partitions become visible only
+//!   once the whole object has materialized;
+//! * **streamed** ([`ingest_text_streamed_as`]) — each partition's
+//!   `Shared` view is yielded through a seal callback as soon as its
+//!   byte range has been read, so the cluster can start map tasks while
+//!   later partitions are still in flight. Both shapes produce
+//!   byte-identical partitions and byte accounting (property-tested in
+//!   `rust/tests/prop_invariants.rs`); they differ only in the
+//!   `first_partition_ready` ledger entry.
 
-use crate::dataset::{split_records_shared, Dataset, Partition, Record};
+use crate::dataset::{Dataset, Partition, Record, Splitter};
 use crate::error::{MareError, Result};
 use crate::simtime::Duration;
-use crate::util::bytes::{Shared, SharedStr};
+use crate::util::bytes::{SegmentWriter, Shared, SharedStr};
 
 use super::StorageBackend;
 
@@ -31,6 +43,16 @@ pub struct IngestReport {
     /// Partitions read across the network (no locality hint, or a hint
     /// outside this cluster's worker range).
     pub remote_reads: usize,
+    /// Virtual time at which the first partition became available to
+    /// the scheduler. Batch ingest publishes nothing before the whole
+    /// object lands, so this equals [`IngestReport::fully_materialized`]
+    /// there; streamed ingest seals each partition as its byte range
+    /// finishes, so this is strictly earlier whenever more than one
+    /// seal happens (the overlap the streaming path buys, as a ledger).
+    pub first_partition_ready: Duration,
+    /// Virtual time at which the whole object finished materializing
+    /// (identical to [`IngestReport::duration`]).
+    pub fully_materialized: Duration,
 }
 
 /// Ingest a text object, splitting on `sep` (the paper's `TextFile`
@@ -57,40 +79,100 @@ pub fn ingest_text_as(
     workers: usize,
     label: &str,
 ) -> Result<(Dataset, IngestReport)> {
-    // ONE copy of the object off the backend; every record below is an
-    // O(1) slice of this buffer (the old path re-allocated each record
-    // as its own String)
-    let buf = Shared::copy_from_slice(backend.get(key)?);
+    let (text, total) = materialize_object(backend, key)?;
+    let partitions =
+        partition_text(&text, sep, num_partitions.max(1), &backend.blocks(key)?);
+    let report = account(backend, &partitions, workers.max(1), total);
+    Ok((Dataset::from_partitions(partitions, label.to_string()), report))
+}
+
+/// Stream a text object's bytes off the backend through an
+/// exact-capacity [`SegmentWriter`] in bounded chunks (still exactly
+/// ONE copy off the backend — the chunking models arrival, not extra
+/// allocation).
+const STREAM_CHUNK: usize = 64 << 10;
+
+fn materialize_object(backend: &dyn StorageBackend, key: &str) -> Result<(SharedStr, u64)> {
+    let src = backend.get(key)?;
+    let mut w = SegmentWriter::with_capacity(src.len());
+    for chunk in src.chunks(STREAM_CHUNK.max(1)) {
+        w.push(chunk);
+    }
+    let buf = w.finish();
     let total = buf.len() as u64;
     let text = SharedStr::from_shared(buf)
         .map_err(|_| MareError::Storage(format!("{key}: not UTF-8 text")))?;
-    let records = split_records_shared(&text, sep);
-    let blocks = backend.blocks(key)?;
+    Ok((text, total))
+}
 
-    let n = num_partitions.max(1);
-    let workers = workers.max(1);
-    let total_records = records.len();
-    let sep_len = sep.len() as u64;
-
-    // contiguous chunks; partition locality = primary of the block its
-    // first byte falls in
+/// Contiguous record chunks over the scanner's exact byte ranges;
+/// partition locality = primary of the block holding its first
+/// record's true byte offset (the pre-scanner path approximated this
+/// with a payload+separator cursor).
+fn partition_text(
+    text: &SharedStr,
+    sep: &str,
+    n: usize,
+    blocks: &[super::BlockInfo],
+) -> Vec<Partition> {
+    let ranges = Splitter::new(sep).record_ranges(text.as_str());
+    let total_records = ranges.len();
     let mut partitions: Vec<Partition> = Vec::with_capacity(n);
-    let mut it = records.into_iter();
-    let mut byte_cursor = 0u64;
+    let mut cursor = 0usize;
     for i in 0..n {
         let count = total_records / n + usize::from(i < total_records % n);
-        let recs: Vec<Record> = it.by_ref().take(count).map(Record::Text).collect();
-        let part_bytes: u64 = recs.iter().map(Record::size_bytes).sum();
-        let primary = block_at(&blocks, byte_cursor).and_then(|b| b.primary);
-        // each record is followed by one `sep` in the stored object —
-        // omitting those bytes attributed partitions to earlier blocks
-        // than their true byte ranges (whitespace-only chunks dropped by
-        // `split_records` keep this approximate, never the other way)
-        byte_cursor += part_bytes + count as u64 * sep_len;
+        let chunk = &ranges[cursor..cursor + count];
+        cursor += count;
+        let recs: Vec<Record> =
+            chunk.iter().map(|&(s, e)| Record::Text(text.slice(s, e))).collect();
+        let start_byte =
+            chunk.first().map(|&(s, _)| s as u64).unwrap_or(text.len() as u64);
+        let primary = block_at(blocks, start_byte).and_then(|b| b.primary);
         partitions.push(Partition { records: recs, preferred_worker: primary });
     }
+    partitions
+}
 
-    let report = account(backend, &partitions, workers, total);
+/// One partition sealed by streamed ingest: its records are final (O(1)
+/// views of the object buffer) and its byte range finished arriving at
+/// `ready_at` virtual time.
+#[derive(Debug, Clone)]
+pub struct SealedPartition {
+    /// Position in the dataset's partition order.
+    pub index: usize,
+    pub partition: Partition,
+    pub ready_at: Duration,
+}
+
+/// [`ingest_text_as`], but each partition is sealed — handed to
+/// `on_seal` — as soon as its byte range has been read by its assigned
+/// reader, in ascending `ready_at` order. The returned dataset and
+/// byte accounting are identical to the batch path; only
+/// `first_partition_ready` differs (min seal time instead of full
+/// materialization).
+pub fn ingest_text_streamed_as(
+    backend: &dyn StorageBackend,
+    key: &str,
+    sep: &str,
+    num_partitions: usize,
+    workers: usize,
+    label: &str,
+    mut on_seal: impl FnMut(&SealedPartition),
+) -> Result<(Dataset, IngestReport)> {
+    let (text, total) = materialize_object(backend, key)?;
+    let partitions =
+        partition_text(&text, sep, num_partitions.max(1), &backend.blocks(key)?);
+    let (report, seals) =
+        account_with_seals(backend, &partitions, workers.max(1), total);
+    let mut order: Vec<usize> = (0..partitions.len()).collect();
+    order.sort_by_key(|&i| seals[i]);
+    for i in order {
+        on_seal(&SealedPartition {
+            index: i,
+            partition: partitions[i].clone(), // refcount bumps, no copy
+            ready_at: seals[i],
+        });
+    }
     Ok((Dataset::from_partitions(partitions, label.to_string()), report))
 }
 
@@ -173,8 +255,25 @@ pub fn account(
     backend: &dyn StorageBackend,
     partitions: &[Partition],
     workers: usize,
-    _total: u64,
+    total: u64,
 ) -> IngestReport {
+    let (mut report, _) = account_with_seals(backend, partitions, workers, total);
+    // batch semantics: nothing is visible before the whole object lands
+    report.first_partition_ready = report.fully_materialized;
+    report
+}
+
+/// [`account`] that also returns each partition's **seal time** — the
+/// virtual time its assigned reader finished reading it, with reads on
+/// one reader happening in partition order. The report's
+/// `first_partition_ready` is the minimum seal (streamed semantics);
+/// [`account`] overwrites it back to `fully_materialized` for batch.
+pub fn account_with_seals(
+    backend: &dyn StorageBackend,
+    partitions: &[Partition],
+    workers: usize,
+    _total: u64,
+) -> (IngestReport, Vec<Duration>) {
     let mut per_worker = vec![Duration::ZERO; workers];
     let mut used = vec![false; workers];
     let readers: Vec<usize> = partitions
@@ -196,6 +295,7 @@ pub fn account(
     let mut partition_bytes = Vec::with_capacity(partitions.len());
     let mut local_reads = 0usize;
     let mut remote_reads = 0usize;
+    let mut seals = Vec::with_capacity(partitions.len());
     for (p, &reader) in partitions.iter().zip(&readers) {
         let b = p.size_bytes();
         bytes += b;
@@ -206,15 +306,20 @@ pub fn account(
             remote_reads += 1;
         }
         per_worker[reader] += backend.read_time(reader, p.preferred_worker, b, concurrency);
+        seals.push(per_worker[reader]);
     }
-    IngestReport {
+    let duration = per_worker.into_iter().max().unwrap_or(Duration::ZERO);
+    let report = IngestReport {
         bytes,
         readers: concurrency as usize,
-        duration: per_worker.into_iter().max().unwrap_or(Duration::ZERO),
+        duration,
         partition_bytes,
         local_reads,
         remote_reads,
-    }
+        first_partition_ready: seals.iter().copied().min().unwrap_or(duration),
+        fully_materialized: duration,
+    };
+    (report, seals)
 }
 
 #[cfg(test)]
@@ -357,6 +462,65 @@ mod tests {
         assert_eq!(rep.local_reads, 2);
         assert_eq!(rep.remote_reads, 6);
         assert_eq!(rep.bytes, 800);
+    }
+
+    /// Streamed ingest must seal every partition (ascending ready_at,
+    /// final records) and show the overlap in the ledger: with several
+    /// partitions per reader, the first seal lands strictly before full
+    /// materialization, while the partitions and byte accounting stay
+    /// identical to the batch path.
+    #[test]
+    fn streamed_ingest_seals_early_and_matches_batch() {
+        let mut h = Hdfs::new(4, 100);
+        let doc: String = (0..40).map(|i| format!("{i:09}\n")).collect();
+        h.put("data", doc.into_bytes()).unwrap();
+
+        let (batch_ds, batch_rep) = ingest_text_as(&h, "data", "\n", 8, 4, "l").unwrap();
+        let mut seals: Vec<SealedPartition> = Vec::new();
+        let (ds, rep) =
+            ingest_text_streamed_as(&h, "data", "\n", 8, 4, "l", |s| seals.push(s.clone()))
+                .unwrap();
+
+        // every partition sealed exactly once, in ascending ready_at
+        assert_eq!(seals.len(), 8);
+        assert!(seals.windows(2).all(|w| w[0].ready_at <= w[1].ready_at));
+        let mut seen: Vec<usize> = seals.iter().map(|s| s.index).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+
+        // the streaming win, as a ledger
+        assert!(rep.first_partition_ready < rep.fully_materialized, "{rep:?}");
+        assert_eq!(rep.fully_materialized, rep.duration);
+        // batch publishes nothing early
+        assert_eq!(batch_rep.first_partition_ready, batch_rep.fully_materialized);
+
+        // identical partitions + identical byte accounting
+        assert_eq!(rep.bytes, batch_rep.bytes);
+        assert_eq!(rep.partition_bytes, batch_rep.partition_bytes);
+        assert_eq!(rep.readers, batch_rep.readers);
+        assert_eq!(rep.local_reads, batch_rep.local_reads);
+        assert_eq!(rep.duration, batch_rep.duration);
+        match (ds.plan().as_ref(), batch_ds.plan().as_ref()) {
+            (
+                crate::dataset::Plan::Source { partitions: a, .. },
+                crate::dataset::Plan::Source { partitions: b, .. },
+            ) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.records, y.records);
+                    assert_eq!(x.preferred_worker, y.preferred_worker);
+                }
+            }
+            _ => panic!("expected source plans"),
+        }
+        // sealed records are views of the object buffer, not copies
+        for s in &seals {
+            for r in &s.partition.records {
+                if let Record::Text(t) = r {
+                    assert!(t.as_shared().ref_count() > 2, "sealed record was copied");
+                }
+            }
+        }
     }
 
     /// Regression: a zero-length block occupies no byte range — the

@@ -36,7 +36,7 @@ use crate::simtime::Duration;
 pub use catalog::{StorageCatalog, StorageUri};
 pub use checkpoint::{plan_fingerprint, CheckpointStore, KillAfter, MemCheckpoint};
 pub use hdfs::Hdfs;
-pub use ingest::{ingest_text, IngestReport};
+pub use ingest::{ingest_text, IngestReport, SealedPartition};
 pub use local::LocalFs;
 pub use s3::S3;
 pub use swift::Swift;

@@ -127,7 +127,7 @@ impl Gatk {
             .ok_or_else(|| MareError::Shell("gatk AddOrReplaceReadGroups: --OUTPUT required".into()))?;
         let sort = ctx.flag_value("--SORT_ORDER").unwrap_or_else(|| "coordinate".into());
 
-        let text = ctx.fs.read_string(&input)?;
+        let text = crate::util::bytes::SharedStr::from(ctx.fs.read_string(&input)?);
         let mut header: Vec<&str> = text.lines().filter(|l| l.starts_with('@')).collect();
         let rg = "@RG\tID:mare\tSM:SAMPLE\tPL:ILLUMINA\tLB:lib1";
         header.retain(|l| !l.starts_with("@RG"));
@@ -159,11 +159,11 @@ impl Gatk {
         let input = ctx
             .flag_value("--INPUT")
             .ok_or_else(|| MareError::Shell("gatk BuildBamIndex: --INPUT required".into()))?;
-        let text = ctx.fs.read_string(&input)?;
+        let text = crate::util::bytes::SharedStr::from(ctx.fs.read_string(&input)?);
         let records = sam::parse_many(&text)?;
         let mut per_contig: std::collections::BTreeMap<String, u64> = Default::default();
         for r in records.iter().filter(|r| r.is_mapped()) {
-            *per_contig.entry(r.rname.clone()).or_default() += 1;
+            *per_contig.entry(r.rname.to_string()).or_default() += 1;
         }
         let mut idx = String::from("# mare bam index\n");
         for (c, n) in per_contig {
@@ -196,7 +196,7 @@ impl Gatk {
         })?;
 
         let reference = Reference::parse(&ctx.fs.read_string(&ref_path)?)?;
-        let text = ctx.fs.read_string(&input)?;
+        let text = crate::util::bytes::SharedStr::from(ctx.fs.read_string(&input)?);
         let records = sam::parse_many(&text)?;
 
         let mut calls: Vec<VcfRecord> = Vec::new();
@@ -236,20 +236,21 @@ impl Gatk {
                     "0/1".to_string()
                 };
                 calls.push(VcfRecord {
-                    chrom: pileup.contig.clone(),
+                    chrom: pileup.contig.as_str().into(),
                     pos: *pos as u64 + 1,
                     id: ".".into(),
-                    ref_base: (ref_base as char).to_string(),
+                    ref_base: (ref_base as char).to_string().into(),
                     alt: if alts.len() == 2 {
                         format!(
                             "{},{}",
                             alts[0] as char, alts[1] as char
                         )
+                        .into()
                     } else {
-                        alt
+                        alt.into()
                     },
                     qual: call.qual,
-                    genotype: format!("{genotype}:{gt_name}"),
+                    genotype: format!("{genotype}:{gt_name}").into(),
                 });
             }
         }
@@ -314,7 +315,7 @@ mod tests {
         Gatk.run(&mut c).unwrap();
         let out = fs.read_string("/out.bam").unwrap();
         assert!(out.contains("@RG\tID:mare"));
-        let recs = sam::parse_many(&out).unwrap();
+        let recs = sam::parse_many(&out.into()).unwrap();
         assert_eq!(recs[0].qname, "r1"); // sorted by pos now
         assert_eq!(recs[1].qname, "r2");
     }
@@ -361,8 +362,8 @@ mod tests {
                 pos: 3,
                 mapq: 60,
                 cigar: "4M".into(),
-                seq: b"ACGT".to_vec(),
-                qual: b"IIII".to_vec(),
+                seq: b"ACGT".to_vec().into(),
+                qual: b"IIII".to_vec().into(),
             },
             SamRecord {
                 qname: "r2".into(),
@@ -371,8 +372,8 @@ mod tests {
                 pos: 3,
                 mapq: 60,
                 cigar: "4M".into(),
-                seq: b"ACGA".to_vec(),
-                qual: b"IIII".to_vec(),
+                seq: b"ACGA".to_vec().into(),
+                qual: b"IIII".to_vec().into(),
             },
         ];
         let piles = build_pileups(&recs, &r);

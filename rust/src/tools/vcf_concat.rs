@@ -107,7 +107,7 @@ mod tests {
         .unwrap();
         let out = run(&mut fs, &["/in/a.vcf", "/in/b.vcf.gz"]).unwrap();
         let text = String::from_utf8(out.stdout).unwrap();
-        let recs = vcf::parse_many(&text).unwrap();
+        let recs = vcf::parse_many(&text.as_str().into()).unwrap();
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].chrom, "chr1"); // sorted
         assert_eq!(text.matches("##fileformat").count(), 1);

@@ -141,6 +141,24 @@ impl PartialEq for Shared {
 
 impl Eq for Shared {}
 
+impl PartialEq<[u8]> for Shared {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Shared {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Shared {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 impl std::hash::Hash for Shared {
     fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
         self.as_slice().hash(state);
@@ -272,6 +290,24 @@ impl PartialEq<str> for SharedStr {
 impl PartialEq<&str> for SharedStr {
     fn eq(&self, other: &&str) -> bool {
         self.as_str() == *other
+    }
+}
+
+impl PartialEq<String> for SharedStr {
+    fn eq(&self, other: &String) -> bool {
+        self.as_str() == other.as_str()
+    }
+}
+
+impl PartialOrd for SharedStr {
+    fn partial_cmp(&self, other: &SharedStr) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SharedStr {
+    fn cmp(&self, other: &SharedStr) -> std::cmp::Ordering {
+        self.as_str().cmp(other.as_str())
     }
 }
 

@@ -10,6 +10,7 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod rx;
+pub mod scan;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,313 @@
+//! SWAR (SIMD-within-a-register) byte scanning — the zero-dependency
+//! separator-search kernel under every record split, line scan and
+//! shuffle key extraction.
+//!
+//! The word-at-a-time trick is the classic memchr recipe: broadcast the
+//! needle byte across a `u64`, XOR it into an 8-byte chunk of the
+//! haystack (matching bytes become zero), then detect a zero byte with
+//!
+//! ```text
+//! (x - 0x0101..) & !x & 0x8080..
+//! ```
+//!
+//! which sets bit 7 of every byte lane that was zero. Subtraction
+//! borrows can only corrupt lanes *above* the first zero lane, so the
+//! lowest set bit is exact and `trailing_zeros() / 8` is the match
+//! offset. Chunks are loaded with `u64::from_le_bytes`, which makes the
+//! lane order little-endian on every platform — no `unsafe`, no
+//! endian-conditional code.
+//!
+//! Multi-byte separators go through [`find`]: SWAR-scan for first-byte
+//! candidates (restricted to offsets where the whole needle still
+//! fits), then confirm the tail with a slice compare. Matches are
+//! non-overlapping and leftmost-first, exactly like `str::find` /
+//! `str::split`.
+//!
+//! Every SWAR kernel has a scalar twin (`*_scalar`) that is the
+//! reference semantics; `rust/tests/prop_invariants.rs` drives them
+//! against each other across random corpora, separator lengths 1–6 and
+//! all 8 buffer alignments. Setting `MARE_SCAN_FORCE_SCALAR=1` makes
+//! the public entry points dispatch to the scalar twins — CI's
+//! bench-smoke job runs once in that mode so the fallback cannot
+//! bit-rot.
+
+use std::sync::OnceLock;
+
+const LO: u64 = 0x0101_0101_0101_0101;
+const HI: u64 = 0x8080_8080_8080_8080;
+
+/// Bit 7 of every byte lane of `x` that is zero.
+#[inline(always)]
+fn zero_byte_mask(x: u64) -> u64 {
+    x.wrapping_sub(LO) & !x & HI
+}
+
+/// True when `MARE_SCAN_FORCE_SCALAR` is set (read once per process).
+fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var("MARE_SCAN_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// Which kernel the public entry points dispatch to: `"swar"` or
+/// `"scalar"`. `mare bench` prints this so CI can assert the fallback
+/// path is the one being exercised.
+pub fn active_kernel() -> &'static str {
+    if force_scalar() {
+        "scalar"
+    } else {
+        "swar"
+    }
+}
+
+/// First offset of `needle` in `hay`, 8 bytes per iteration.
+pub fn memchr_swar(needle: u8, hay: &[u8]) -> Option<usize> {
+    let broadcast = (needle as u64).wrapping_mul(LO);
+    let mut chunks = hay.chunks_exact(8);
+    let mut off = 0usize;
+    for c in &mut chunks {
+        let x = u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")) ^ broadcast;
+        let m = zero_byte_mask(x);
+        if m != 0 {
+            return Some(off + (m.trailing_zeros() / 8) as usize);
+        }
+        off += 8;
+    }
+    chunks.remainder().iter().position(|&b| b == needle).map(|i| off + i)
+}
+
+/// Reference semantics for [`memchr_swar`].
+pub fn memchr_scalar(needle: u8, hay: &[u8]) -> Option<usize> {
+    hay.iter().position(|&b| b == needle)
+}
+
+/// First offset of byte `needle` in `hay`.
+pub fn memchr(needle: u8, hay: &[u8]) -> Option<usize> {
+    if force_scalar() {
+        memchr_scalar(needle, hay)
+    } else {
+        memchr_swar(needle, hay)
+    }
+}
+
+/// First offset of `needle` in `hay` (empty needle matches at 0):
+/// SWAR first-byte candidates + tail confirm.
+pub fn find_swar(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    match needle.len() {
+        0 => return Some(0),
+        1 => return memchr_swar(needle[0], hay),
+        n if n > hay.len() => return None,
+        _ => {}
+    }
+    // candidate starts are offsets where the whole needle still fits
+    let last = hay.len() - needle.len();
+    let mut at = 0usize;
+    while at <= last {
+        let pos = at + memchr_swar(needle[0], &hay[at..=last])?;
+        if hay[pos + 1..pos + needle.len()] == needle[1..] {
+            return Some(pos);
+        }
+        at = pos + 1;
+    }
+    None
+}
+
+/// Reference semantics for [`find_swar`].
+pub fn find_scalar(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() {
+        return Some(0);
+    }
+    if needle.len() > hay.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// First offset of `needle` in `hay`.
+pub fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if force_scalar() {
+        find_scalar(hay, needle)
+    } else {
+        find_swar(hay, needle)
+    }
+}
+
+/// Leftmost-first, non-overlapping match offsets of `needle` in `hay`
+/// (steps by `needle.len()` past each match, like `str::split`'s
+/// separator walk). An empty needle yields nothing.
+pub fn find_iter<'h, 'n>(hay: &'h [u8], needle: &'n [u8]) -> FindIter<'h, 'n> {
+    FindIter { hay, needle, at: 0 }
+}
+
+pub struct FindIter<'h, 'n> {
+    hay: &'h [u8],
+    needle: &'n [u8],
+    at: usize,
+}
+
+impl Iterator for FindIter<'_, '_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.needle.is_empty() || self.at > self.hay.len() {
+            return None;
+        }
+        let pos = self.at + find(&self.hay[self.at..], self.needle)?;
+        self.at = pos + self.needle.len();
+        Some(pos)
+    }
+}
+
+/// Byte ranges of the chunks `sep` splits `hay` into — exactly
+/// `str::split`'s segmentation: empty input is one empty chunk,
+/// adjacent/trailing separators produce empty chunks. `sep` must be
+/// non-empty (callers special-case empty separators, which mean "don't
+/// split" at the record layer, not the per-char walk `str::split`
+/// does).
+pub fn split_ranges(hay: &[u8], sep: &[u8]) -> Vec<(usize, usize)> {
+    debug_assert!(!sep.is_empty(), "empty separator is a caller-level special case");
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for pos in find_iter(hay, sep) {
+        out.push((start, pos));
+        start = pos + sep.len();
+    }
+    out.push((start, hay.len()));
+    out
+}
+
+/// Byte ranges of the lines of `hay`, matching `str::lines`: split on
+/// `\n`, strip one trailing `\r` per line, and a final `\n` does not
+/// open an empty trailing line.
+pub fn line_ranges(hay: &[u8]) -> LineRanges<'_> {
+    LineRanges { hay, at: 0, done: hay.is_empty() }
+}
+
+pub struct LineRanges<'h> {
+    hay: &'h [u8],
+    at: usize,
+    done: bool,
+}
+
+impl Iterator for LineRanges<'_> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.done {
+            return None;
+        }
+        let start = self.at;
+        match memchr(b'\n', &self.hay[start..]) {
+            Some(p) => {
+                let mut end = start + p;
+                self.at = end + 1;
+                if self.at == self.hay.len() {
+                    self.done = true;
+                }
+                if end > start && self.hay[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                Some((start, end))
+            }
+            None => {
+                self.done = true;
+                Some((start, self.hay.len()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn memchr_agrees_with_scalar_on_every_alignment_and_length() {
+        let mut rng = Rng::new(0x5CA7);
+        let buf: Vec<u8> = (0..257).map(|_| rng.below(7) as u8 + b'a').collect();
+        for align in 0..8 {
+            for len in 0..64 {
+                if align + len > buf.len() {
+                    continue;
+                }
+                let hay = &buf[align..align + len];
+                for needle in [b'a', b'c', b'g', b'z'] {
+                    assert_eq!(
+                        memchr_swar(needle, hay),
+                        memchr_scalar(needle, hay),
+                        "align {align} len {len} needle {needle}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memchr_finds_matches_in_the_tail_remainder() {
+        // match past the last full 8-byte chunk
+        let hay = b"0123456789abcdeX";
+        assert_eq!(memchr_swar(b'X', &hay[..]), Some(15));
+        assert_eq!(memchr_swar(b'X', &hay[..15]), None);
+    }
+
+    #[test]
+    fn find_matches_str_find_semantics() {
+        let cases: &[(&str, &str)] = &[
+            ("", ""),
+            ("abc", ""),
+            ("", "x"),
+            ("abc", "abc"),
+            ("abc", "abcd"),
+            ("aaab", "ab"),
+            ("xxabxxabxx", "ab"),
+            ("ababab", "abab"),
+            ("a\n$\nb", "\n$\n"),
+        ];
+        for (hay, needle) in cases {
+            let want = hay.find(needle);
+            assert_eq!(find_swar(hay.as_bytes(), needle.as_bytes()), want, "{hay:?}/{needle:?}");
+            assert_eq!(find_scalar(hay.as_bytes(), needle.as_bytes()), want, "{hay:?}/{needle:?}");
+        }
+    }
+
+    #[test]
+    fn find_iter_is_non_overlapping() {
+        let pos: Vec<usize> = find_iter(b"aaaa", b"aa").collect();
+        assert_eq!(pos, vec![0, 2]);
+        let none: Vec<usize> = find_iter(b"aaaa", b"").collect();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn split_ranges_matches_str_split() {
+        for (hay, sep) in
+            [("", "\n"), ("a\nb", "\n"), ("a\nb\n", "\n"), ("\n\n", "\n"), ("x;;y;;", ";;")]
+        {
+            let want: Vec<&str> = hay.split(sep).collect();
+            let got: Vec<&str> = split_ranges(hay.as_bytes(), sep.as_bytes())
+                .into_iter()
+                .map(|(s, e)| &hay[s..e])
+                .collect();
+            assert_eq!(got, want, "{hay:?}/{sep:?}");
+        }
+    }
+
+    #[test]
+    fn line_ranges_matches_str_lines() {
+        for hay in ["", "\n", "a", "a\n", "a\nb", "a\r\nb\r\n", "\r", "a\r\r\nb", "\n\nx\n"] {
+            let want: Vec<&str> = hay.lines().collect();
+            let got: Vec<&str> =
+                line_ranges(hay.as_bytes()).map(|(s, e)| &hay[s..e]).collect();
+            assert_eq!(got, want, "{hay:?}");
+        }
+    }
+
+    #[test]
+    fn active_kernel_names_a_kernel() {
+        assert!(["swar", "scalar"].contains(&active_kernel()));
+    }
+}

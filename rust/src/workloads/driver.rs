@@ -182,7 +182,7 @@ pub fn parse_vcf_records(
                 String::from_utf8(bytes.to_vec())
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             };
-            calls.extend(crate::formats::vcf::parse_many(&text)?);
+            calls.extend(crate::formats::vcf::parse_many(&text.into())?);
         }
     }
     calls.sort_by(|a, b| (a.chrom.clone(), a.pos).cmp(&(b.chrom.clone(), b.pos)));
@@ -326,7 +326,7 @@ pub fn ingest_fastq(
         std::str::from_utf8(bytes)
             .map_err(|_| crate::error::MareError::Storage(format!("{key}: not UTF-8")))?
     };
-    let reads = crate::formats::fastq::parse_many(text)?;
+    let reads = crate::formats::fastq::parse_many(&text.into())?;
     let records: Vec<crate::dataset::Record> = reads
         .iter()
         .map(|r| crate::dataset::Record::text(r.to_fastq().trim_end().to_string()))

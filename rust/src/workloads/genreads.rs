@@ -138,9 +138,9 @@ pub fn reads(cfg: &ReadSimConfig, ind: &Individual) -> Vec<FastqRead> {
                 }
             }
             out.push(FastqRead {
-                id: format!("sim.{read_id}/1"),
-                seq,
-                qual: vec![b'I'; cfg.read_len],
+                id: format!("sim.{read_id}/1").into(),
+                seq: seq.into(),
+                qual: vec![b'I'; cfg.read_len].into(),
             });
             read_id += 1;
         }
@@ -201,7 +201,7 @@ mod tests {
     #[test]
     fn reads_parse_as_fastq() {
         let (text, _) = reads_fastq(&small());
-        let parsed = crate::formats::fastq::parse_many(&text).unwrap();
+        let parsed = crate::formats::fastq::parse_many(&text.into()).unwrap();
         assert!(!parsed.is_empty());
         assert!(parsed.iter().all(|r| r.seq.len() == 100));
     }

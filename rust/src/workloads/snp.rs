@@ -71,7 +71,7 @@ pub fn run(cluster: Arc<Cluster>, reads: Dataset, num_nodes: usize) -> Result<Ve
                 String::from_utf8(bytes.to_vec())
                     .map_err(|_| crate::error::MareError::Storage(format!("{name}: not UTF-8")))?
             };
-            calls.extend(vcf::parse_many(&text)?);
+            calls.extend(vcf::parse_many(&text.into())?);
         }
     }
     calls.sort_by(|a, b| (a.chrom.clone(), a.pos).cmp(&(b.chrom.clone(), b.pos)));
@@ -88,7 +88,7 @@ pub fn score_calls(
     let truth_set: HashSet<(String, u64)> =
         truth.iter().map(|t| (t.chrom.clone(), t.pos as u64 + 1)).collect();
     let call_set: HashSet<(String, u64)> =
-        calls.iter().map(|c| (c.chrom.clone(), c.pos)).collect();
+        calls.iter().map(|c| (c.chrom.to_string(), c.pos)).collect();
     let tp = call_set.intersection(&truth_set).count();
     let fp = call_set.difference(&truth_set).count();
     let fn_ = truth_set.difference(&call_set).count();

@@ -121,7 +121,7 @@ fn snp_pipeline_recovers_planted_snps() {
         ..Default::default()
     };
     let (fastq, individual) = genreads::reads_fastq(&sim);
-    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq)
+    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq.into())
         .unwrap()
         .iter()
         .map(|r| mare::dataset::Record::text(r.to_fastq().trim_end().to_string()))
@@ -197,7 +197,7 @@ fn snp_output_is_valid_gzipped_vcf() {
         ..Default::default()
     };
     let (fastq, individual) = genreads::reads_fastq(&sim);
-    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq)
+    let reads: Vec<mare::dataset::Record> = mare::formats::fastq::parse_many(&fastq.into())
         .unwrap()
         .iter()
         .map(|r| mare::dataset::Record::text(r.to_fastq().trim_end().to_string()))

@@ -93,6 +93,7 @@ fn schedule_respects_capacity_and_completeness() {
                 cpus: 1 + (rng.below(vcpus as usize)) as u32,
                 preferred: if rng.bool(0.5) { Some(rng.below(workers)) } else { None },
                 remote_penalty: Duration::seconds(rng.f64()),
+                release: VirtualTime::ZERO,
             })
             .collect();
         let mut s = SlotSchedule::new(workers, vcpus);
@@ -150,6 +151,7 @@ fn locality_never_hurts_makespan_much() {
                     cpus: 1,
                     preferred: if with_pref { Some(prefs[id]) } else { None },
                     remote_penalty: Duration::ZERO,
+                    release: VirtualTime::ZERO,
                 })
                 .collect();
             let mut s = SlotSchedule::new(workers, 4);
@@ -669,6 +671,174 @@ fn vfs_usage_accounting_is_exact() {
             "usage {} != expected {want}",
             fs.used_bytes()
         );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------ SWAR scanner kernels
+
+/// The SWAR kernels must agree byte-for-byte with the naive scalar
+/// reference on arbitrary input: random corpora over a small alphabet
+/// (so needles actually occur), separator lengths 1–6, all 8 buffer
+/// alignments (subslicing shifts the word phase of the 8-byte chunk
+/// walk), zero/0xFF lanes, and empty haystacks.
+#[test]
+fn swar_kernels_match_scalar_reference() {
+    use mare::util::scan;
+    check("swar-matches-scalar", 250, |rng| {
+        let len = rng.below(180);
+        let pool: [u8; 8] = [b'a', b'b', b'G', b'\n', b'\r', b'$', 0x00, 0xFF];
+        let buf: Vec<u8> = (0..len + 8).map(|_| *rng.choice(&pool)).collect();
+        let sep_len = rng.range(1, 7);
+        let needle: Vec<u8> = (0..sep_len).map(|_| *rng.choice(&pool)).collect();
+        for align in 0..8usize {
+            let hay = &buf[align..align + len];
+
+            let b = *rng.choice(&pool);
+            prop_assert!(
+                scan::memchr_swar(b, hay) == scan::memchr_scalar(b, hay),
+                "memchr diverged: align {align} needle {b}"
+            );
+
+            let swar = scan::find_swar(hay, &needle);
+            let scalar = scan::find_scalar(hay, &needle);
+            prop_assert!(
+                swar == scalar,
+                "find diverged: align {align} needle {needle:?} ({swar:?} vs {scalar:?})"
+            );
+
+            // non-overlapping iteration against a naive stepper
+            let mut naive = Vec::new();
+            let mut at = 0usize;
+            while let Some(p) = scan::find_scalar(&hay[at..], &needle) {
+                naive.push(at + p);
+                at += p + needle.len();
+            }
+            let got: Vec<usize> = scan::find_iter(hay, &needle).collect();
+            prop_assert!(
+                got == naive,
+                "find_iter diverged at align {align}: {got:?} vs {naive:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// `split_ranges` and `line_ranges` reproduce `str::split` /
+/// `str::lines` segmentation exactly on random UTF-8 documents
+/// (multi-byte codepoints included), for separator lengths 1–6 —
+/// including adjacent separators (empty chunks), trailing separators,
+/// and `\r\n` line endings.
+#[test]
+fn scanner_segmentation_matches_std() {
+    use mare::util::scan;
+    check("scanner-split-matches-std", 250, |rng| {
+        let seps = ["\n", ";", ";;", "\n$$$$\n", "é|", "||--||"];
+        let sep = *rng.choice(&seps);
+        let pieces = ["", "a", "bb", "é", "名", "x\ny", "q\r"];
+        let mut text = String::new();
+        for _ in 0..rng.below(12) {
+            text.push_str(rng.choice(&pieces));
+            if rng.bool(0.6) {
+                text.push_str(sep);
+            }
+        }
+
+        let want: Vec<&str> = text.split(sep).collect();
+        let got: Vec<&str> = scan::split_ranges(text.as_bytes(), sep.as_bytes())
+            .into_iter()
+            .map(|(s, e)| &text[s..e])
+            .collect();
+        prop_assert!(got == want, "split_ranges diverged on {text:?} / {sep:?}");
+
+        let want_lines: Vec<&str> = text.lines().collect();
+        let got_lines: Vec<&str> =
+            scan::line_ranges(text.as_bytes()).map(|(s, e)| &text[s..e]).collect();
+        prop_assert!(got_lines == want_lines, "line_ranges diverged on {text:?}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------- streamed ingest
+
+/// Streaming ingest is an overlap optimization, never a semantic one:
+/// for random objects, partition counts, and cluster sizes, the
+/// streamed path must produce byte-identical partitions and identical
+/// byte accounting to the batch path. The only permitted difference is
+/// the `first_partition_ready` ledger entry (min seal ≤ full
+/// materialization; batch pins the two equal).
+#[test]
+fn streamed_ingest_equals_batch_ingest() {
+    use mare::storage::{ingest, Hdfs, StorageBackend};
+    check("streamed-equals-batch", 80, |rng| {
+        let workers = rng.range(1, 6);
+        let block = (rng.range(1, 9) * 64) as u64;
+        let mut h = Hdfs::new(workers, block);
+        let n = rng.below(120);
+        let payload: String =
+            (0..n).map(|i| format!("r{i}-{}\n", "x".repeat(rng.below(24)))).collect();
+        h.put("obj", payload.into_bytes()).map_err(|e| e.to_string())?;
+        let parts = rng.range(1, 10);
+
+        let (bds, brep) = ingest::ingest_text_as(&h, "obj", "\n", parts, workers, "p")
+            .map_err(|e| e.to_string())?;
+        let mut seals: Vec<(usize, Duration)> = Vec::new();
+        let (sds, srep) = ingest::ingest_text_streamed_as(
+            &h,
+            "obj",
+            "\n",
+            parts,
+            workers,
+            "p",
+            |s| seals.push((s.index, s.ready_at)),
+        )
+        .map_err(|e| e.to_string())?;
+
+        // every partition sealed exactly once, in ascending ready_at
+        prop_assert!(seals.len() == parts, "sealed {} of {parts}", seals.len());
+        prop_assert!(
+            seals.windows(2).all(|w| w[0].1 <= w[1].1),
+            "seals out of order: {seals:?}"
+        );
+        let mut seen: Vec<usize> = seals.iter().map(|s| s.0).collect();
+        seen.sort_unstable();
+        prop_assert!(seen == (0..parts).collect::<Vec<_>>(), "seal indices {seen:?}");
+
+        // identical byte accounting
+        prop_assert!(srep.bytes == brep.bytes, "bytes {} vs {}", srep.bytes, brep.bytes);
+        prop_assert!(srep.partition_bytes == brep.partition_bytes, "partition_bytes diverged");
+        prop_assert!(srep.readers == brep.readers, "readers diverged");
+        prop_assert!(srep.local_reads == brep.local_reads, "local_reads diverged");
+        prop_assert!(srep.remote_reads == brep.remote_reads, "remote_reads diverged");
+        prop_assert!(srep.duration == brep.duration, "duration diverged");
+        prop_assert!(
+            srep.fully_materialized == brep.fully_materialized,
+            "fully_materialized diverged"
+        );
+        // the ledger difference: batch publishes nothing early
+        prop_assert!(
+            brep.first_partition_ready == brep.fully_materialized,
+            "batch leaked an early seal"
+        );
+        prop_assert!(
+            srep.first_partition_ready <= srep.fully_materialized,
+            "first seal after full materialization"
+        );
+
+        // identical partitions (records and locality), byte for byte
+        match (sds.plan().as_ref(), bds.plan().as_ref()) {
+            (
+                mare::dataset::Plan::Source { partitions: a, .. },
+                mare::dataset::Plan::Source { partitions: b, .. },
+            ) => {
+                prop_assert!(a.len() == b.len(), "partition count diverged");
+                for (x, y) in a.iter().zip(b.iter()) {
+                    prop_assert!(x.records == y.records, "records diverged");
+                    prop_assert!(x.preferred_worker == y.preferred_worker, "locality diverged");
+                }
+            }
+            _ => prop_assert!(false, "expected source plans"),
+        }
         Ok(())
     });
 }

@@ -107,6 +107,36 @@ fn containerized_map_does_not_deep_copy_records() {
     assert_eq!(total, expected);
 }
 
+/// The streamed ingest path keeps the tentpole guarantee: resolving a
+/// storage URI with per-partition seals and running the job gated on
+/// those seal times (`run_streamed`) performs ZERO payload deep-copies
+/// — the single materialization off the backend is the only payload
+/// traffic, and every sealed partition is a view of that buffer.
+#[test]
+fn streamed_ingest_and_gated_run_stay_zero_copy() {
+    let _g = lock();
+    use mare::simtime::Duration;
+    use mare::storage::{StorageCatalog, StorageUri};
+
+    let uri = StorageUri::parse("hdfs://genome.txt?lines=64").unwrap();
+    let cat = StorageCatalog::simulated(2);
+    let c = cluster(ClusterConfig::sized(2, 2));
+
+    let before = payload_copies();
+    let mut ready = vec![Duration::ZERO; 4];
+    let (source, report) =
+        cat.resolve_streamed(&uri, 4, |s| ready[s.index] = s.ready_at).unwrap();
+    let ds = source.map_partitions(identity_op());
+    let out = c.run_streamed(&ds, &ready).unwrap();
+    let copies = payload_copies() - before;
+
+    assert_eq!(copies, 0, "streamed ingest + gated run must not deep-copy payloads");
+    assert!(report.first_partition_ready < report.fully_materialized, "{report:?}");
+    // gating changes visibility, not semantics
+    let batch = c.run(&ds).unwrap();
+    assert_eq!(out.collect_text("\n"), batch.collect_text("\n"));
+}
+
 /// Launch counts and `Job::explain()` stay pinned across the
 /// refactor: the gc pipeline still starts exactly (map per partition +
 /// reduce tree) containers, and the three-plan rendering is stable.
