@@ -136,7 +136,10 @@ fn main() {
         &Partitioner::HashByKey { key_fn: key_fn.clone(), num },
         records.clone(),
     ));
-    let range_max = max_load(plan::route(&Partitioner::RangeByKey { key_fn, num }, records));
+    let range_max = max_load(plan::route(
+        &Partitioner::RangeByKey { key_fn, num, observed: None },
+        records,
+    ));
     let mean = total as f64 / num as f64;
 
     let mut part = Table::new(

@@ -18,6 +18,11 @@ pub enum FaultSpec {
     /// outputs are recomputed on the survivors, and the worker takes no
     /// further tasks.
     WorkerLoss { worker: usize, after_stage: usize },
+    /// Worker runs `factor` times slower than nominal for the whole
+    /// run — a plantable, deterministic straggler (the target of
+    /// speculative execution). Nothing *fails*; the worker just drags
+    /// every stage it takes tasks in.
+    SlowWorker { worker: usize, factor: f64 },
 }
 
 impl FaultSpec {
@@ -27,7 +32,7 @@ impl FaultSpec {
             FaultSpec::TaskFlake { stage: s, partition: p, failures } => {
                 s == stage && p == partition && attempt < failures
             }
-            FaultSpec::WorkerLoss { .. } => false,
+            FaultSpec::WorkerLoss { .. } | FaultSpec::SlowWorker { .. } => false,
         }
     }
 
@@ -38,6 +43,36 @@ impl FaultSpec {
                 Some(worker)
             }
             _ => None,
+        }
+    }
+
+    /// The planted straggler, if any: `(worker, slowdown factor)`.
+    pub fn slow_worker(&self) -> Option<(usize, f64)> {
+        match *self {
+            FaultSpec::SlowWorker { worker, factor } => Some((worker, factor)),
+            _ => None,
+        }
+    }
+
+    /// Parse the `mare run --fault` grammar. Today only the straggler
+    /// form `W:slow:F` (slow worker W down by factor F > 0) is
+    /// CLI-reachable; the other variants are injected by tests.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            [w, "slow", f] => {
+                let worker = w
+                    .parse::<usize>()
+                    .map_err(|_| format!("--fault {s}: worker must be a number, got {w:?}"))?;
+                let factor = f
+                    .parse::<f64>()
+                    .map_err(|_| format!("--fault {s}: factor must be a number, got {f:?}"))?;
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(format!("--fault {s}: factor must be positive, got {f}"));
+                }
+                Ok(FaultSpec::SlowWorker { worker, factor })
+            }
+            _ => Err(format!("--fault {s}: expected W:slow:F (e.g. --fault 0:slow:4)")),
         }
     }
 }
@@ -63,5 +98,31 @@ mod tests {
         assert_eq!(f.worker_lost_after(0), Some(3));
         assert_eq!(f.worker_lost_after(1), None);
         assert!(!f.fails_task(0, 0, 0));
+    }
+
+    #[test]
+    fn slow_worker_drags_but_never_fails() {
+        let f = FaultSpec::SlowWorker { worker: 2, factor: 4.0 };
+        assert_eq!(f.slow_worker(), Some((2, 4.0)));
+        assert!(!f.fails_task(0, 0, 0));
+        assert_eq!(f.worker_lost_after(0), None);
+        let flake = FaultSpec::TaskFlake { stage: 0, partition: 0, failures: 1 };
+        assert_eq!(flake.slow_worker(), None);
+    }
+
+    #[test]
+    fn parse_accepts_only_the_straggler_grammar() {
+        assert_eq!(
+            FaultSpec::parse("0:slow:4").unwrap(),
+            FaultSpec::SlowWorker { worker: 0, factor: 4.0 }
+        );
+        assert_eq!(
+            FaultSpec::parse("3:slow:1.5").unwrap(),
+            FaultSpec::SlowWorker { worker: 3, factor: 1.5 }
+        );
+        for bad in ["", "0:slow", "0:slow:0", "0:slow:-2", "x:slow:4", "0:kill:4", "0:slow:nan"] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(err.contains("--fault"), "{bad:?} -> {err}");
+        }
     }
 }

@@ -27,8 +27,9 @@ use std::sync::{Arc, Mutex};
 use crate::container::Registry;
 use crate::dataset::{Dataset, Partition, TaskContext};
 use crate::error::{MareError, Result};
-use crate::simtime::{Duration, NetModel, SlotSchedule, SlotTask, VirtualTime};
+use crate::simtime::{Duration, NetModel, SlotSchedule, SlotTask, SpecOutcome, VirtualTime};
 
+pub use crate::simtime::SpeculationPolicy;
 pub use fault::FaultSpec;
 pub use shuffle::ShuffleStats;
 pub use stage::{compile, PhysicalPlan, Stage, StageOutput};
@@ -49,6 +50,10 @@ pub struct ClusterConfig {
     pub max_attempts: u32,
     /// Injected fault, if any.
     pub fault: Option<FaultSpec>,
+    /// Speculative execution of straggler tasks (None = off). Racing a
+    /// copy launches extra containers, so jobs that pin launch counts
+    /// leave this off; the audit weakens to `launches >= tasks`.
+    pub speculation: Option<SpeculationPolicy>,
     /// Base seed for per-task deterministic RNG ($RANDOM etc).
     pub seed: u64,
     /// Host threads for real execution (None = all cores).
@@ -70,6 +75,7 @@ impl ClusterConfig {
             registry_net: NetModel::new(0.030, 120e6).with_aggregate(1.2e9),
             max_attempts: 4,
             fault: None,
+            speculation: None,
             seed: 0x4d6152655f764c,
             host_threads: None,
         }
@@ -77,6 +83,11 @@ impl ClusterConfig {
 
     pub fn with_fault(mut self, fault: FaultSpec) -> Self {
         self.fault = Some(fault);
+        self
+    }
+
+    pub fn with_speculation(mut self, policy: SpeculationPolicy) -> Self {
+        self.speculation = Some(policy);
         self
     }
 
@@ -96,6 +107,13 @@ pub struct StageReport {
     pub recomputed: usize,
     /// Tasks that ran on their locality-preferred worker.
     pub local_tasks: usize,
+    /// Speculative copies launched against stragglers.
+    pub speculated: usize,
+    /// Races the speculative copy won (original cancelled).
+    pub spec_wins: usize,
+    /// Attempts cancelled by first-finisher-wins — exactly one loser
+    /// per race, so this always equals `speculated`.
+    pub spec_cancelled: usize,
     pub makespan: Duration,
     pub shuffle: ShuffleStats,
     /// Sum of virtual task costs (utilization = busy / (makespan*slots)).
@@ -161,6 +179,12 @@ impl RunReport {
                 "  stage {}: {} tasks ({} local, {} retried, {} recomputed), makespan {}, shuffle {} B\n",
                 st.stage, st.tasks, st.local_tasks, st.retried, st.recomputed, st.makespan, st.shuffle.bytes_total
             ));
+            if st.speculated > 0 {
+                s.push_str(&format!(
+                    "    speculation: {} copies launched, {} won, {} attempts cancelled\n",
+                    st.speculated, st.spec_wins, st.spec_cancelled
+                ));
+            }
         }
         s
     }
@@ -430,23 +454,32 @@ impl Cluster {
         for &w in dead {
             sched.kill_worker(w);
         }
+        // planted straggler: the slowed worker drags every duration
+        // placed on it (the target speculative execution races)
+        if let Some((w, factor)) = self.config.fault.as_ref().and_then(|f| f.slow_worker()) {
+            sched.set_slowdown(w, factor);
+        }
         self.charge_pulls(stage, dead, &mut sched);
+
+        // injected failures before the first success of partition `i`
+        let injected_failures = |i: usize| -> u32 {
+            self.config
+                .fault
+                .as_ref()
+                .map(|f| {
+                    (0..self.config.max_attempts)
+                        .take_while(|&a| f.fails_task(stage.id, i, a))
+                        .count() as u32
+                })
+                .unwrap_or(0)
+        };
 
         let slot_tasks: Vec<SlotTask> = task_results
             .iter()
             .enumerate()
             .map(|(i, tr)| {
                 // failed attempts re-occupied the slot: charge attempts+1x
-                let attempts = 1 + self
-                    .config
-                    .fault
-                    .as_ref()
-                    .map(|f| {
-                        (0..self.config.max_attempts)
-                            .take_while(|&a| f.fails_task(stage.id, i, a))
-                            .count() as u32
-                    })
-                    .unwrap_or(0);
+                let attempts = 1 + injected_failures(i);
                 let d = Duration(tr.cost.total().0 * attempts as u64);
                 SlotTask {
                     id: i,
@@ -463,7 +496,40 @@ impl Cluster {
                 }
             })
             .collect();
-        let placements = sched.run(&slot_tasks);
+        let (placements, spec) = match &self.config.speculation {
+            Some(policy) => sched.run_speculated(&slot_tasks, policy),
+            None => (sched.run(&slot_tasks), SpecOutcome::default()),
+        };
+
+        // Speculative copies really run: re-execute each raced task
+        // with the SAME context as its committed attempt, so the copy's
+        // output is byte-identical by determinism (whichever attempt
+        // wins the race, the stage commits the same bytes) while the
+        // engine's container-launch counter genuinely ticks once per
+        // copy — the audit for a speculating run is `launches >= tasks`
+        // with the surplus equal to `speculated`.
+        for d in &spec.decisions {
+            let i = d.id;
+            let attempt = injected_failures(i);
+            let ctx = TaskContext {
+                partition: i,
+                num_partitions: n,
+                attempt,
+                seed: self
+                    .config
+                    .seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add((stage.id as u64) << 32 | (i as u64) << 8 | attempt as u64),
+            };
+            let copy = task::run_task(stage, &ctx, &inputs[i].records)?;
+            sreport.real += copy.cost.real;
+            if d.copy_wins {
+                task_results[i] = copy;
+            }
+        }
+        sreport.speculated = spec.speculated();
+        sreport.spec_wins = spec.wins();
+        sreport.spec_cancelled = spec.cancelled();
 
         // a task only counts as local when it HAD a locality preference
         // and honored it — tasks with no preference (driver-side
@@ -558,6 +624,10 @@ impl Cluster {
                 .with_locality_wait(self.config.locality_wait);
         for &w in dead {
             sched.kill_worker(w);
+        }
+        // a planted straggler stays slow during recovery too
+        if let Some((w, factor)) = self.config.fault.as_ref().and_then(|f| f.slow_worker()) {
+            sched.set_slowdown(w, factor);
         }
         let mut slot_tasks = Vec::with_capacity(victims.len());
         let mut results = Vec::with_capacity(victims.len());
@@ -747,6 +817,48 @@ mod tests {
         assert!(out.report.stages[0].recomputed > 0);
         // lost time shows up: recovery makespan >= clean
         assert!(out.report.makespan >= clean.report.makespan);
+    }
+
+    #[test]
+    fn speculation_races_a_planted_straggler_and_recovers_makespan() {
+        // 8 x 2s tasks on 4 workers x 2 slots; worker 0 planted 4x
+        // slow. Baseline 2s; straggling 8s; with speculation the two
+        // stuck tasks get copies at the 75% watermark (2s) finishing at
+        // 4s — >= 2x of the lost makespan won back, bytes identical.
+        let ds = || {
+            let recs: Vec<Record> = (0..8).map(|i| Record::text(format!("{i}"))).collect();
+            Dataset::parallelize(recs, 8).map_partitions(Arc::new(CostlyUpper))
+        };
+        let shape = || ClusterConfig::sized(4, 2);
+        let slow = || shape().with_fault(FaultSpec::SlowWorker { worker: 0, factor: 4.0 });
+        let run = |cfg: ClusterConfig| {
+            Cluster::new(Arc::new(Registry::new()), None, cfg).run(&ds()).unwrap()
+        };
+        let base = run(shape());
+        let off = run(slow());
+        let on = run(slow().with_speculation(SpeculationPolicy::default()));
+
+        // byte-identical output, speculation on or off, straggler or not
+        assert_eq!(on.collect_text("\n"), off.collect_text("\n"));
+        assert_eq!(on.collect_text("\n"), base.collect_text("\n"));
+
+        let s = &on.report.stages[0];
+        assert!(s.speculated >= 1, "the straggler must be raced");
+        assert_eq!(s.spec_cancelled, s.speculated, "one loser per race");
+        assert!(s.spec_wins <= s.speculated);
+        assert_eq!(off.report.stages[0].speculated, 0);
+
+        // >= 2x of the lost makespan is recovered
+        let lost = off.report.makespan - base.report.makespan;
+        let still = on.report.makespan - base.report.makespan;
+        assert!(lost > Duration::ZERO, "the straggler must hurt: {:?}", off.report.makespan);
+        assert!(
+            lost.0 >= 2 * still.0,
+            "speculation must recover >= 2x: base={} off={} on={}",
+            base.report.makespan,
+            off.report.makespan,
+            on.report.makespan
+        );
     }
 
     #[test]

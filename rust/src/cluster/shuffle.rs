@@ -12,15 +12,22 @@
 
 use std::sync::Arc;
 
-use crate::dataset::plan::{range_cuts, range_sample_keys, route_from, route_with_cuts};
+use crate::dataset::plan::{
+    range_cuts, range_cuts_weighted, range_sample_keys, route_from, route_with_cuts,
+};
 use crate::dataset::{Partition, Partitioner, PartitionOp, Record, TaskContext};
 use crate::error::Result;
 use crate::simtime::{Duration, NetModel};
 
 use super::task::CONTAINER_START;
 
+/// Cap on how many distinct keys a shuffle records in
+/// [`ShuffleStats::key_freqs`]; past it the heaviest keys are kept
+/// (ties broken by key order, so the histogram stays deterministic).
+pub const KEY_FREQ_CAP: usize = 4096;
+
 /// Data-motion summary of one shuffle.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ShuffleStats {
     /// Bytes the map side produced BEFORE any map-side combiner ran —
     /// what a combiner-less shuffle would have shipped. Equal to
@@ -30,6 +37,14 @@ pub struct ShuffleStats {
     pub bytes_total: u64,
     pub bytes_remote: u64,
     pub duration: Duration,
+    /// Observed (post-combine) key histogram, sorted by key, capped at
+    /// [`KEY_FREQ_CAP`] heaviest keys; empty for key-less partitioners.
+    /// Feed it back as `Partitioner::RangeByKey { observed }` (via
+    /// `Dataset::repartition_by_key_range_observed`) when reshuffling
+    /// the same key space: measured frequencies plan strictly better
+    /// cuts than the in-shuffle stride sample on skew the stride
+    /// misses.
+    pub key_freqs: Vec<(String, u64)>,
 }
 
 impl ShuffleStats {
@@ -123,17 +138,39 @@ pub fn shuffle_combined(
         }
     }
 
-    // ---- range-cut planning (global, post-combine)
-    let cuts = match partitioner {
-        Partitioner::RangeByKey { key_fn, num } => {
-            let total: usize = combined.iter().map(|(_, r)| r.len()).sum();
-            let sample = range_sample_keys(
-                combined.iter().map(|(_, r)| r.as_slice()),
-                total,
-                key_fn,
-            );
-            Some(range_cuts(sample, *num))
+    // ---- observed key histogram (post-combine, keyed partitioners)
+    if let Some(key_fn) = partitioner.key_fn() {
+        let mut freqs = std::collections::BTreeMap::<String, u64>::new();
+        for (_, records) in &combined {
+            for r in records {
+                *freqs.entry(key_fn(r)).or_insert(0) += 1;
+            }
         }
+        stats.key_freqs = freqs.into_iter().collect();
+        if stats.key_freqs.len() > KEY_FREQ_CAP {
+            // keep the heaviest keys (deterministic tie-break by key),
+            // then restore key order
+            stats.key_freqs.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            stats.key_freqs.truncate(KEY_FREQ_CAP);
+            stats.key_freqs.sort();
+        }
+    }
+
+    // ---- range-cut planning (global, post-combine); exact frequencies
+    // from a prior shuffle of the same key space win over the sample
+    let cuts = match partitioner {
+        Partitioner::RangeByKey { key_fn, num, observed } => match observed {
+            Some(freqs) => Some(range_cuts_weighted(freqs, *num)),
+            None => {
+                let total: usize = combined.iter().map(|(_, r)| r.len()).sum();
+                let sample = range_sample_keys(
+                    combined.iter().map(|(_, r)| r.as_slice()),
+                    total,
+                    key_fn,
+                );
+                Some(range_cuts(sample, *num))
+            }
+        },
         _ => None,
     };
 
@@ -143,7 +180,7 @@ pub fn shuffle_combined(
     let mut recv_remote = vec![0u64; workers];
     for (src_part, (src_worker, records)) in combined.into_iter().enumerate() {
         let routed = match (&cuts, partitioner) {
-            (Some(cuts), Partitioner::RangeByKey { key_fn, num }) => {
+            (Some(cuts), Partitioner::RangeByKey { key_fn, num, .. }) => {
                 route_with_cuts(cuts, *num, key_fn, records)
             }
             _ => route_from(partitioner, records, src_part),
@@ -296,7 +333,7 @@ mod tests {
         ];
         let (parts, stats) = shuffle(
             outputs,
-            &Partitioner::RangeByKey { key_fn, num: 3 },
+            &Partitioner::RangeByKey { key_fn, num: 3, observed: None },
             2,
             &NetModel::lan(),
         );
@@ -311,6 +348,46 @@ mod tests {
                 .count();
             assert_eq!(holders, 1, "key {key} split across partitions");
         }
+    }
+
+    #[test]
+    fn key_histogram_round_trips_into_observed_cuts() {
+        let key_fn = || -> std::sync::Arc<dyn Fn(&Record) -> String + Send + Sync> {
+            std::sync::Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string())
+        };
+        let outputs = || -> Vec<(usize, Vec<Record>)> {
+            vec![
+                (0, vec![Record::text("a1"), Record::text("c1"), Record::text("c2")]),
+                (1, vec![Record::text("a2"), Record::text("b1"), Record::text("c3")]),
+            ]
+        };
+        let plain = Partitioner::RangeByKey { key_fn: key_fn(), num: 3, observed: None };
+        let (parts, stats) = shuffle(outputs(), &plain, 2, &NetModel::lan());
+        // the shuffle measured the exact post-combine histogram
+        assert_eq!(
+            stats.key_freqs,
+            vec![("a".to_string(), 2), ("b".to_string(), 1), ("c".to_string(), 3)]
+        );
+        // key-less partitioners record nothing
+        let (_, balanced) =
+            shuffle(outputs(), &Partitioner::Balanced { num: 3 }, 2, &NetModel::lan());
+        assert!(balanced.key_freqs.is_empty());
+        // feeding the histogram back as `observed` replans the same cuts
+        // (the in-shuffle sample is exact below RANGE_SAMPLE_CAP), so
+        // the partitions are identical — the observed path is a drop-in
+        let fed = Partitioner::RangeByKey {
+            key_fn: key_fn(),
+            num: 3,
+            observed: Some(Arc::new(stats.key_freqs.clone())),
+        };
+        let (parts2, stats2) = shuffle(outputs(), &fed, 2, &NetModel::lan());
+        let shape = |ps: &[Partition]| -> Vec<Vec<String>> {
+            ps.iter()
+                .map(|p| p.records.iter().map(|r| r.as_text().unwrap().to_string()).collect())
+                .collect()
+        };
+        assert_eq!(shape(&parts), shape(&parts2));
+        assert_eq!(stats2.key_freqs, stats.key_freqs);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! and scale. The `mare` binary and the benches share this so every
 //! experiment is reproducible from a single description.
 
-use crate::cluster::ClusterConfig;
+use crate::cluster::{ClusterConfig, FaultSpec, SpeculationPolicy};
 use crate::error::{MareError, Result};
 use crate::simtime::Duration;
 use crate::util::cli::Args;
@@ -130,6 +130,20 @@ impl RunConfigFile {
         let mut cluster = ClusterConfig::sized(workers, vcpus as u32);
         cluster.locality_wait = cfg.cluster.locality_wait;
         cluster.seed = args.flag_u64("seed", cfg.seed)?;
+        cluster.fault = cfg.cluster.fault;
+        cluster.speculation = cfg.cluster.speculation;
+        // `--fault` is shared with the pool's worker-death grammar
+        // (`W:K:hold|running|midrun[@S]`, parsed by `mare work`/`mare
+        // serve` into a FaultPlan) — only the straggler form `W:slow:F`
+        // targets the simulated cluster, so that's the one we claim
+        if let Some(spec) = args.flag("fault") {
+            if spec.contains(":slow:") {
+                cluster.fault = Some(FaultSpec::parse(spec).map_err(MareError::Config)?);
+            }
+        }
+        if args.flag_bool("speculate") {
+            cluster.speculation = Some(SpeculationPolicy::default());
+        }
         cfg.cluster = cluster;
         cfg.scale = args.flag_usize("scale", cfg.scale)?;
         cfg.seed = args.flag_u64("seed", cfg.seed)?;
@@ -159,6 +173,15 @@ impl RunConfigFile {
             cfg.cluster = ClusterConfig::sized(workers, vcpus as u32);
             if let Some(lw) = c.get("locality_wait_s") {
                 cfg.cluster.locality_wait = Duration::seconds(lw.as_f64()?);
+            }
+            if let Some(f) = c.get("fault") {
+                cfg.cluster.fault =
+                    Some(FaultSpec::parse(f.as_str()?).map_err(MareError::Config)?);
+            }
+            if let Some(s) = c.get("speculate") {
+                if s.as_bool()? {
+                    cfg.cluster.speculation = Some(SpeculationPolicy::default());
+                }
             }
         }
         if let Some(s) = j.get("scale") {
@@ -231,6 +254,58 @@ mod tests {
         assert_eq!(cfg.cluster.locality_wait, Duration::seconds(1.5));
         assert_eq!(cfg.reduce_depth, 3);
         assert_eq!(cfg.cluster.seed, 7);
+    }
+
+    #[test]
+    fn straggler_and_speculation_flags_reach_the_cluster() {
+        let cfg = RunConfigFile::from_args(&args(&[
+            "run",
+            "--fault",
+            "0:slow:4",
+            "--speculate",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.cluster.fault, Some(FaultSpec::SlowWorker { worker: 0, factor: 4.0 }));
+        assert_eq!(cfg.cluster.speculation, Some(SpeculationPolicy::default()));
+
+        // the pool's worker-death grammar is NOT ours to claim: `mare
+        // work --fault 1:2:hold` must pass through to FaultPlan::parse
+        let cfg = RunConfigFile::from_args(&args(&["work", "--fault", "1:2:hold"])).unwrap();
+        assert_eq!(cfg.cluster.fault, None);
+        assert_eq!(cfg.cluster.speculation, None);
+
+        // a malformed straggler spec is an error, not a silent ignore
+        assert!(RunConfigFile::from_args(&args(&["run", "--fault", "x:slow:4"])).is_err());
+    }
+
+    #[test]
+    fn json_config_wires_fault_and_speculation() {
+        let j = Json::parse(
+            r#"{"cluster":{"workers":4,"vcpus":2,"fault":"1:slow:3","speculate":true}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfigFile::from_json(&j).unwrap();
+        assert_eq!(cfg.cluster.fault, Some(FaultSpec::SlowWorker { worker: 1, factor: 3.0 }));
+        assert_eq!(cfg.cluster.speculation, Some(SpeculationPolicy::default()));
+
+        // CLI flags layered on a config file keep the file's settings
+        // (no flag given) and can still override the shape
+        let base = r#"{"cluster":{"workers":4,"vcpus":2,"speculate":true}}"#;
+        let dir = std::env::temp_dir().join("mare_cfg_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, base).unwrap();
+        let cfg = RunConfigFile::from_args(&args(&[
+            "run",
+            "--config",
+            path.to_str().unwrap(),
+            "--workers",
+            "8",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.cluster.workers, 8);
+        assert_eq!(cfg.cluster.speculation, Some(SpeculationPolicy::default()));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -123,7 +123,31 @@ impl Dataset {
     ) -> Dataset {
         Dataset::from_plan(Arc::new(Plan::Repartition {
             parent: self.plan.clone(),
-            partitioner: Partitioner::RangeByKey { key_fn, num: num.max(1) },
+            partitioner: Partitioner::RangeByKey { key_fn, num: num.max(1), observed: None },
+            combine,
+        }))
+    }
+
+    /// [`Self::repartition_by_key_range`] planning its cuts from a
+    /// measured key histogram instead of the in-shuffle stride sample —
+    /// feed a prior stage's `ShuffleStats::key_freqs` when the SAME key
+    /// space is reshuffled. Exact frequencies beat the stride on skew
+    /// the stride systematically misses (hot keys clustered between
+    /// sample positions); see `plan::range_cuts_weighted`.
+    pub fn repartition_by_key_range_observed(
+        &self,
+        key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>,
+        num: usize,
+        combine: Option<Arc<dyn PartitionOp>>,
+        observed: Arc<Vec<(String, u64)>>,
+    ) -> Dataset {
+        Dataset::from_plan(Arc::new(Plan::Repartition {
+            parent: self.plan.clone(),
+            partitioner: Partitioner::RangeByKey {
+                key_fn,
+                num: num.max(1),
+                observed: Some(observed),
+            },
             combine,
         }))
     }
@@ -158,8 +182,7 @@ impl Dataset {
 /// offsets (what `storage::ingest` uses for block-accurate locality).
 ///
 /// `parallelize_text`, `storage::ingest` and the TextFile stage-out
-/// boundary all go through this type; the free functions
-/// [`split_records`] / [`split_records_shared`] survive as thin shims.
+/// boundary all go through this type.
 #[derive(Debug, Clone)]
 pub struct Splitter {
     sep: String,
@@ -214,23 +237,9 @@ impl Splitter {
     }
 }
 
-/// Thin shim over [`Splitter`] for callers that want owned chunks.
-#[deprecated(since = "0.9.0", note = "use Splitter::new(sep).split_owned(text)")]
-pub fn split_records(text: &str, sep: &str) -> Vec<String> {
-    Splitter::new(sep).split_owned(text)
-}
-
-/// Thin shim over [`Splitter::split`] (zero-copy split).
-pub fn split_records_shared(
-    text: &crate::util::bytes::SharedStr,
-    sep: &str,
-) -> Vec<crate::util::bytes::SharedStr> {
-    Splitter::new(sep).split(text)
-}
-
 /// Join records with a separator for mounting (inverse of
-/// [`split_records`]; a trailing separator is added so round-trips are
-/// stable for tools that append).
+/// [`Splitter::split_owned`]; a trailing separator is added so
+/// round-trips are stable for tools that append).
 pub fn join_records(records: &[String], sep: &str) -> String {
     if records.is_empty() {
         return String::new();
@@ -241,7 +250,6 @@ pub fn join_records(records: &[String], sep: &str) -> String {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the shim tests exercise `split_records` on purpose
 mod tests {
     use super::*;
 
@@ -278,14 +286,14 @@ mod tests {
     }
 
     #[test]
-    fn split_records_custom_separator() {
+    fn split_owned_custom_separator() {
         let text = "mol1\n$$$$\nmol2\n$$$$\n";
-        let recs = split_records(text, "\n$$$$\n");
+        let recs = Splitter::new("\n$$$$\n").split_owned(text);
         assert_eq!(recs, vec!["mol1", "mol2"]);
     }
 
     #[test]
-    fn split_records_shared_matches_owned() {
+    fn zero_copy_split_matches_owned() {
         for (text, sep) in [
             ("a\nb\nc", "\n"),
             ("a\nb\nc\n", "\n"),
@@ -296,16 +304,15 @@ mod tests {
             ("no-sep-here", "|"),
             ("whole", ""),
         ] {
+            let sp = Splitter::new(sep);
             let buf = crate::util::bytes::SharedStr::from(text);
-            let shared: Vec<String> = split_records_shared(&buf, sep)
-                .iter()
-                .map(|s| s.as_str().to_string())
-                .collect();
-            assert_eq!(shared, split_records(text, sep), "text={text:?} sep={sep:?}");
+            let shared: Vec<String> =
+                sp.split(&buf).iter().map(|s| s.as_str().to_string()).collect();
+            assert_eq!(shared, sp.split_owned(text), "text={text:?} sep={sep:?}");
         }
         // and the slices really share the source allocation
         let buf = crate::util::bytes::SharedStr::from("a\nb");
-        let parts = split_records_shared(&buf, "\n");
+        let parts = Splitter::new("\n").split(&buf);
         assert_eq!(parts.len(), 2);
         assert_eq!(buf.as_shared().ref_count(), 3);
     }
@@ -314,7 +321,7 @@ mod tests {
     fn split_join_roundtrip() {
         let recs = vec!["a".to_string(), "b".to_string()];
         let joined = join_records(&recs, "\n$$$$\n");
-        assert_eq!(split_records(&joined, "\n$$$$\n"), recs);
+        assert_eq!(Splitter::new("\n$$$$\n").split_owned(&joined), recs);
     }
 
     #[test]

@@ -71,7 +71,18 @@ pub enum Partitioner {
     /// distributions spread across partitions instead of piling onto
     /// whichever bucket the hot keys hash into. Equal keys still always
     /// land in the same partition.
-    RangeByKey { key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>, num: usize },
+    ///
+    /// When `observed` carries exact key frequencies from a prior
+    /// shuffle of the same key space (`ShuffleStats::key_freqs`), cut
+    /// planning uses them via [`range_cuts_weighted`] instead of the
+    /// in-shuffle stride sample — the stride can systematically miss
+    /// hot keys whose records cluster between sample positions, the
+    /// measured histogram cannot.
+    RangeByKey {
+        key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync>,
+        num: usize,
+        observed: Option<Arc<Vec<(String, u64)>>>,
+    },
     /// Concatenate-and-chop into `num` roughly equal partitions
     /// (Spark `repartition(n)` without keys; used by tree-reduce).
     Balanced { num: usize },
@@ -83,9 +94,11 @@ impl Clone for Partitioner {
             Partitioner::HashByKey { key_fn, num } => {
                 Partitioner::HashByKey { key_fn: key_fn.clone(), num: *num }
             }
-            Partitioner::RangeByKey { key_fn, num } => {
-                Partitioner::RangeByKey { key_fn: key_fn.clone(), num: *num }
-            }
+            Partitioner::RangeByKey { key_fn, num, observed } => Partitioner::RangeByKey {
+                key_fn: key_fn.clone(),
+                num: *num,
+                observed: observed.clone(),
+            },
             Partitioner::Balanced { num } => Partitioner::Balanced { num: *num },
         }
     }
@@ -95,7 +108,12 @@ impl std::fmt::Debug for Partitioner {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Partitioner::HashByKey { num, .. } => write!(f, "HashByKey({num})"),
-            Partitioner::RangeByKey { num, .. } => write!(f, "RangeByKey({num})"),
+            Partitioner::RangeByKey { num, observed: None, .. } => {
+                write!(f, "RangeByKey({num})")
+            }
+            Partitioner::RangeByKey { num, observed: Some(_), .. } => {
+                write!(f, "RangeByKey({num}, observed)")
+            }
             Partitioner::Balanced { num } => write!(f, "Balanced({num})"),
         }
     }
@@ -155,6 +173,43 @@ pub fn range_cuts(mut sample: Vec<String>, num: usize) -> Vec<String> {
             sample[idx].clone()
         })
         .collect()
+}
+
+/// [`range_cuts`] over an exact key histogram instead of a flat sample:
+/// plan `num - 1` ascending cut points from `(key, count)` frequencies,
+/// equivalent to expanding every key `count` times and running
+/// [`range_cuts`] — without materializing the expansion. This is the
+/// planning path for `Partitioner::RangeByKey { observed: Some(..) }`,
+/// fed from a prior shuffle's `ShuffleStats::key_freqs`.
+pub fn range_cuts_weighted(freqs: &[(String, u64)], num: usize) -> Vec<String> {
+    if num <= 1 {
+        return Vec::new();
+    }
+    let mut sorted: Vec<(&str, u64)> =
+        freqs.iter().filter(|&&(_, c)| c > 0).map(|(k, c)| (k.as_str(), *c)).collect();
+    sorted.sort_unstable();
+    let total: u64 = sorted.iter().map(|&(_, c)| c).sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    let mut cuts = Vec::with_capacity(num - 1);
+    let mut it = sorted.iter();
+    let mut cur = it.next().expect("total > 0 implies a key");
+    let mut below = 0u64; // records on keys strictly before `cur`
+    for j in 1..num {
+        // 1-based rank of the record closing the j-th equal-frequency
+        // slice — the same rank `range_cuts` indexes in its flat sample
+        let target = ((j as u64) * total).div_ceil(num as u64).clamp(1, total);
+        while below + cur.1 < target {
+            below += cur.1;
+            match it.next() {
+                Some(next) => cur = next,
+                None => break,
+            }
+        }
+        cuts.push(cur.0.to_string());
+    }
+    cuts
 }
 
 /// Bucket of `key` under ascending `cuts`: the number of cut points
@@ -282,11 +337,16 @@ pub fn route_from(
     records: Vec<Record>,
     salt: usize,
 ) -> Vec<Vec<Record>> {
-    if let Partitioner::RangeByKey { key_fn, num } = partitioner {
-        let total = records.len();
-        let sample =
-            range_sample_keys(std::iter::once(records.as_slice()), total, key_fn);
-        let cuts = range_cuts(sample, *num);
+    if let Partitioner::RangeByKey { key_fn, num, observed } = partitioner {
+        let cuts = match observed {
+            Some(freqs) => range_cuts_weighted(freqs, *num),
+            None => {
+                let total = records.len();
+                let sample =
+                    range_sample_keys(std::iter::once(records.as_slice()), total, key_fn);
+                range_cuts(sample, *num)
+            }
+        };
         return route_with_cuts(&cuts, *num, key_fn, records);
     }
     let num = partitioner.num_partitions();
@@ -430,6 +490,58 @@ mod tests {
     }
 
     #[test]
+    fn weighted_cuts_match_the_expanded_sample() {
+        // range_cuts_weighted(histogram) must equal range_cuts(expansion)
+        let freqs: Vec<(String, u64)> = vec![
+            ("a".into(), 3),
+            ("b".into(), 1),
+            ("hot".into(), 9),
+            ("z".into(), 2),
+        ];
+        let mut expanded: Vec<String> = Vec::new();
+        for (k, c) in &freqs {
+            for _ in 0..*c {
+                expanded.push(k.clone());
+            }
+        }
+        for num in [1usize, 2, 3, 4, 7, 20] {
+            assert_eq!(
+                range_cuts_weighted(&freqs, num),
+                range_cuts(expanded.clone(), num),
+                "num={num}"
+            );
+        }
+        // zero-count keys are ignored, degenerate inputs yield no cuts
+        assert_eq!(
+            range_cuts_weighted(&[("x".into(), 0), ("y".into(), 4)], 2),
+            vec!["y".to_string()]
+        );
+        assert!(range_cuts_weighted(&[], 4).is_empty());
+        assert!(range_cuts_weighted(&[("x".into(), 0)], 4).is_empty());
+    }
+
+    #[test]
+    fn observed_frequencies_replan_the_routing_cuts() {
+        // 1 "a" + 9 "m" records: the flat sample's median key is "m",
+        // so the cut lands at "m" and BOTH keys route at-or-below it —
+        // bucket 0 takes everything. A histogram weighting "a" as the
+        // heavy key cuts at "a" instead and the two keys separate,
+        // proving route() consults `observed` over the sample.
+        let key_fn: KeyFnRef = Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
+        let records: Vec<Record> = std::iter::once(Record::text("a0"))
+            .chain((0..9).map(|i| Record::text(format!("m{i}"))))
+            .collect();
+        let sizes = |buckets: Vec<Vec<Record>>| -> Vec<usize> {
+            buckets.iter().map(|b| b.len()).collect()
+        };
+        let p = Partitioner::RangeByKey { key_fn: key_fn.clone(), num: 2, observed: None };
+        assert_eq!(sizes(route(&p, records.clone())), vec![10, 0]);
+        let observed = Arc::new(vec![("a".to_string(), 9u64), ("m".to_string(), 1u64)]);
+        let p = Partitioner::RangeByKey { key_fn, num: 2, observed: Some(observed) };
+        assert_eq!(sizes(route(&p, records)), vec![1, 9]);
+    }
+
+    #[test]
     fn range_bucket_is_monotone_and_groups_equal_keys() {
         let cuts = vec!["b".to_string(), "d".to_string(), "d".to_string()];
         assert_eq!(range_bucket(&cuts, "a"), 0);
@@ -442,7 +554,7 @@ mod tests {
     #[test]
     fn range_routing_groups_keys_and_conserves_records() {
         let key_fn: KeyFnRef = Arc::new(|r: &Record| r.as_text().unwrap()[..1].to_string());
-        let p = Partitioner::RangeByKey { key_fn, num: 3 };
+        let p = Partitioner::RangeByKey { key_fn, num: 3, observed: None };
         let records: Vec<Record> = "a1 a2 b1 b2 c1 c2 c3 c4"
             .split(' ')
             .map(Record::text)

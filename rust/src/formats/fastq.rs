@@ -64,12 +64,6 @@ pub fn parse_many(text: &SharedStr) -> Result<Vec<FastqRead>> {
     Ok(out)
 }
 
-/// Old owned-`&str` entry point, kept for one release.
-#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
-pub fn parse_many_str(text: &str) -> Result<Vec<FastqRead>> {
-    parse_many(&text.into())
-}
-
 /// Whitespace-trimmed sub-range of line `(s, e)` within `text`.
 fn trimmed(text: &SharedStr, (s, e): (usize, usize)) -> (usize, usize) {
     let t = text[s..e].trim();

@@ -77,12 +77,6 @@ pub fn parse_many(text: &SharedStr) -> Result<Vec<SamRecord>> {
     Ok(out)
 }
 
-/// Old owned-`&str` entry point, kept for one release.
-#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
-pub fn parse_many_str(text: &str) -> Result<Vec<SamRecord>> {
-    parse_many(&text.into())
-}
-
 /// The chromosome id of one SAM line — the paper's `parseChromosomeId`
 /// keyBy function (Listing 3, line 12). Two SWAR tab hops, no split
 /// allocation.

@@ -61,12 +61,6 @@ pub fn parse_many(text: &SharedStr) -> Result<Vec<VcfRecord>> {
     Ok(out)
 }
 
-/// Old owned-`&str` entry point, kept for one release.
-#[deprecated(since = "0.9.0", note = "wrap the text in a `SharedStr` and call `parse_many`")]
-pub fn parse_many_str(text: &str) -> Result<Vec<VcfRecord>> {
-    parse_many(&text.into())
-}
-
 /// Serialize with header.
 pub fn write_many(records: &[VcfRecord]) -> String {
     let mut out = String::from(HEADER);

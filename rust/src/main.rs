@@ -90,6 +90,13 @@ OPTIONS (run/plan):
   --reduce-depth D        tree-reduce depth K          [2]
   --config FILE           JSON config (flags override it)
   --artifacts DIR         AOT artifact dir             [./artifacts]
+  --fault W:slow:F        plant a deterministic straggler: worker W runs
+                          F times slower for the whole run (nothing
+                          fails; the worker just drags its stages)
+  --speculate             speculative execution: race straggling tasks
+                          with a copy on another worker, first finisher
+                          wins (Spark-default policy: quantile 0.75,
+                          multiplier 1.5, <= 4 copies per stage)
 
 OPTIONS (submit/jobs/work/requeue):
   --queue DIR             job spool directory          [.mare/queue]
@@ -469,7 +476,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let pr = args.flag_u64("pr", 9)?;
+    let pr = args.flag_u64("pr", 10)?;
     let out = args
         .flag("out")
         .map(String::from)
@@ -491,6 +498,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
             c.name, c.old_median_ns, c.new_median_ns, c.speedup()
         );
     }
+    println!();
+    println!(
+        "{:<28} {:>12} {:>11} {:>6} {:>10}",
+        "speculation (simtime)", "makespan", "speculated", "wins", "cancelled"
+    );
+    for r in mare::perf::speculation_ledger()? {
+        println!(
+            "{:<28} {:>9.1} ms {:>11} {:>6} {:>10}",
+            r.mode, r.makespan_ms, r.speculated, r.spec_wins, r.spec_cancelled
+        );
+    }
+
     mare::perf::write_bench_json(std::path::Path::new(&out), pr, b.timings())?;
     println!("\narchived {} timings -> {out}", b.timings().len());
     Ok(())

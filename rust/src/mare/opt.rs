@@ -135,7 +135,7 @@ pub fn optimize(pipeline: &Pipeline, env: &OptEnv) -> (Pipeline, OptReport) {
 ///
 /// Known semantic relaxation (same family as Spark's stage pipelining
 /// of side-effecting ops): the unfused boundary round-trips records
-/// through `split_records`, which drops whitespace-only chunks, while
+/// through `dataset::Splitter`, which drops whitespace-only chunks, while
 /// the fused command reads `a`'s raw output file in place. A map whose
 /// output is entirely whitespace can therefore yield a different
 /// downstream result fused vs unfused. None of the paper's commands

@@ -19,7 +19,12 @@
 //!   collapses the singleton flood before a byte moves — the
 //!   shuffle-byte meter itself is gated in `tests/kmer_shuffle.rs`),
 //!   and the straggler-bound cost of the hottest bucket under FNV
-//!   hashing vs frequency-weighted range cuts on a planted Zipf skew.
+//!   hashing vs frequency-weighted range cuts on a planted Zipf skew;
+//! * straggler mitigation (PR 10): the `speculation/*` virtual-time
+//!   ledger — the same container job with no straggler, with a planted
+//!   4x-slow worker, and with speculative execution racing the
+//!   straggler, so the JSON proves the makespan win (the >= 2x
+//!   recovery is gated in `tests/speculation.rs` and below).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -171,7 +176,10 @@ pub fn hotpath_cases(b: &mut Bench) {
         &Partitioner::HashByKey { key_fn: key_fn.clone(), num: 8 },
         skewed.clone(),
     ));
-    let range_hot = hot(plan::route(&Partitioner::RangeByKey { key_fn, num: 8 }, skewed));
+    let range_hot = hot(plan::route(
+        &Partitioner::RangeByKey { key_fn, num: 8, observed: None },
+        skewed,
+    ));
     assert!(range_hot.len() < hash_hot.len(), "planted skew stopped skewing");
     let aggregate = |bucket: &[Record]| {
         let mut counts: HashMap<&str, u64> = HashMap::new();
@@ -225,6 +233,53 @@ pub fn stream_ingest_ledger() -> Result<Vec<StreamIngestRow>> {
             first_partition_ready_ms: ms(streamed.first_partition_ready),
             fully_materialized_ms: ms(streamed.fully_materialized),
         },
+    ])
+}
+
+/// One row of the straggler/speculation ledger.
+pub struct SpeculationRow {
+    pub mode: &'static str,
+    pub makespan_ms: f64,
+    pub speculated: usize,
+    pub spec_wins: usize,
+    pub spec_cancelled: usize,
+}
+
+/// Deterministic *virtual-time* ledger for speculative execution: the
+/// same 8-task container map (4 workers x 2 slots) run three ways —
+/// clean, with a planted 4x-slow worker, and with speculation racing
+/// that straggler. Simtime rows, not wall-clock timings: speculation
+/// does not make tasks faster, it stops the stage from waiting on the
+/// dragged copies (`straggler_on` wins back >= 2x of what
+/// `straggler_off` lost versus `no_straggler`).
+pub fn speculation_ledger() -> Result<Vec<SpeculationRow>> {
+    use crate::cluster::{FaultSpec, SpeculationPolicy};
+    let run = |mode: &'static str, cfg: ClusterConfig| -> Result<SpeculationRow> {
+        let mut reg = crate::container::Registry::new();
+        reg.push(images::ubuntu());
+        let cluster = Arc::new(Cluster::new(Arc::new(reg), None, cfg));
+        let text = (0..8).map(|i| format!("r{i}")).collect::<Vec<_>>().join("\n");
+        let ds = Dataset::parallelize_text(&text, "\n", 8);
+        let out = crate::mare::MaRe::source(cluster, ds)
+            .map("ubuntu", "tr r R < /in > /out")
+            .mounts("/in", "/out")
+            .build()?
+            .run()?;
+        let s = &out.report.stages[0];
+        Ok(SpeculationRow {
+            mode,
+            makespan_ms: out.report.makespan.as_seconds() * 1e3,
+            speculated: s.speculated,
+            spec_wins: s.spec_wins,
+            spec_cancelled: s.spec_cancelled,
+        })
+    };
+    let shape = || ClusterConfig::sized(4, 2);
+    let slow = || shape().with_fault(FaultSpec::SlowWorker { worker: 0, factor: 4.0 });
+    Ok(vec![
+        run("speculation/no_straggler", shape())?,
+        run("speculation/straggler_off", slow())?,
+        run("speculation/straggler_on", slow().with_speculation(SpeculationPolicy::default()))?,
     ])
 }
 
@@ -304,6 +359,18 @@ pub fn write_bench_json(path: &std::path::Path, pr: u64, timings: &[Timing]) -> 
             ])
         })
         .collect();
+    let spec: Vec<Json> = speculation_ledger()?
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("mode", Json::str(r.mode)),
+                ("makespan_ms", Json::num(r.makespan_ms)),
+                ("speculated", Json::num(r.speculated as f64)),
+                ("spec_wins", Json::num(r.spec_wins as f64)),
+                ("spec_cancelled", Json::num(r.spec_cancelled as f64)),
+            ])
+        })
+        .collect();
     let doc = Json::obj(vec![
         ("bench", Json::str("micro_hotpath")),
         ("pr", Json::num(pr as f64)),
@@ -313,8 +380,9 @@ pub fn write_bench_json(path: &std::path::Path, pr: u64, timings: &[Timing]) -> 
         ("provenance", Json::str("measured")),
         ("timings", Json::Arr(timings.iter().map(timing_json).collect())),
         ("comparisons", Json::Arr(comps)),
-        // virtual-time rows (simtime ledger), not wall-clock timings
+        // virtual-time rows (simtime ledgers), not wall-clock timings
         ("stream_ingest", Json::Arr(ledger)),
+        ("speculation", Json::Arr(spec)),
     ]);
     std::fs::write(path, doc.to_string_pretty())?;
     Ok(())
@@ -350,10 +418,39 @@ mod tests {
         assert!(json.get("timings").is_some());
         assert!(json.get("comparisons").is_some());
         assert!(json.get("stream_ingest").is_some());
+        assert!(json.get("speculation").is_some());
+        assert!(text.contains("speculation/straggler_on"), "{text}");
         assert!(text.contains("\"pr\""));
         // a real run stamps itself measured (seeded placeholders differ)
         assert!(text.contains("measured"), "{text}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn speculation_ledger_recovers_the_straggler_makespan() {
+        let rows = speculation_ledger().unwrap();
+        let ms = |mode: &str| {
+            rows.iter().find(|r| r.mode.ends_with(mode)).expect("ledger row")
+        };
+        let base = ms("no_straggler");
+        let off = ms("straggler_off");
+        let on = ms("straggler_on");
+        assert_eq!(base.speculated, 0);
+        assert_eq!(off.speculated, 0, "speculation off must not race");
+        assert!(on.speculated >= 1, "the straggler must be raced");
+        assert_eq!(on.spec_cancelled, on.speculated, "one loser per race");
+        assert!(on.spec_wins <= on.speculated);
+
+        let lost = off.makespan_ms - base.makespan_ms;
+        let still = on.makespan_ms - base.makespan_ms;
+        assert!(lost > 0.0, "the straggler must hurt: off={}", off.makespan_ms);
+        assert!(
+            lost >= 2.0 * still,
+            "speculation must recover >= 2x: base={} off={} on={}",
+            base.makespan_ms,
+            off.makespan_ms,
+            on.makespan_ms
+        );
     }
 
     #[test]

@@ -19,7 +19,9 @@ pub mod schedule;
 
 pub use cost::{CostModel, TaskCost};
 pub use net::{DiskModel, NetModel};
-pub use schedule::{SlotSchedule, SlotTask, TaskPlacement};
+pub use schedule::{
+    SlotSchedule, SlotTask, SpecDecision, SpecOutcome, SpeculationPolicy, TaskPlacement,
+};
 
 /// Virtual time in microseconds (fixed point; f64 drift would make the
 /// WSE tables flaky).

@@ -41,6 +41,65 @@ pub struct TaskPlacement {
     pub local: bool,
 }
 
+/// When to race a straggling task — the analogue of Spark's
+/// `spark.speculation.*` knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculationPolicy {
+    /// Fraction of the stage's tasks that must have finished before any
+    /// speculative copy launches (`spark.speculation.quantile`).
+    pub quantile: f64,
+    /// A running task is a straggler when its projected duration
+    /// exceeds `multiplier x median(finished durations)`.
+    pub multiplier: f64,
+    /// At most this many speculative copies per stage.
+    pub max_inflight: usize,
+}
+
+impl Default for SpeculationPolicy {
+    fn default() -> Self {
+        SpeculationPolicy { quantile: 0.75, multiplier: 1.5, max_inflight: 4 }
+    }
+}
+
+/// One speculation race: the copy's placement, who won, and the end
+/// time the stage commits for the task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecDecision {
+    pub id: usize,
+    pub copy_worker: usize,
+    pub copy_start: VirtualTime,
+    pub copy_end: VirtualTime,
+    /// True when the copy finished first (the original was cancelled);
+    /// false when the original won (the copy was cancelled).
+    pub copy_wins: bool,
+    pub committed_end: VirtualTime,
+}
+
+/// Everything a speculation pass did, for the stage report's audit:
+/// every race launches exactly one copy and cancels exactly one loser,
+/// so `cancelled() == speculated()` and `wins() <= speculated()`.
+#[derive(Debug, Clone, Default)]
+pub struct SpecOutcome {
+    pub decisions: Vec<SpecDecision>,
+}
+
+impl SpecOutcome {
+    /// Speculative copies launched.
+    pub fn speculated(&self) -> usize {
+        self.decisions.len()
+    }
+
+    /// Races the copy won (the original attempt was cancelled).
+    pub fn wins(&self) -> usize {
+        self.decisions.iter().filter(|d| d.copy_wins).count()
+    }
+
+    /// Attempts cancelled — one loser per race, whichever side lost.
+    pub fn cancelled(&self) -> usize {
+        self.decisions.len()
+    }
+}
+
 /// Slot-level schedule over a set of workers.
 #[derive(Debug)]
 pub struct SlotSchedule {
@@ -48,6 +107,10 @@ pub struct SlotSchedule {
     slots: Vec<Vec<VirtualTime>>,
     locality_wait: Duration,
     killed: Vec<bool>,
+    /// Per-worker speed factor: every duration placed on worker `w` is
+    /// scaled by `slowdown[w]` (1.0 = nominal, 4.0 = 4x slower — a
+    /// planted straggler).
+    slowdown: Vec<f64>,
 }
 
 impl SlotSchedule {
@@ -56,6 +119,7 @@ impl SlotSchedule {
             slots: vec![vec![VirtualTime::ZERO; vcpus_per_worker as usize]; workers],
             locality_wait: Duration::seconds(3.0),
             killed: vec![false; workers],
+            slowdown: vec![1.0; workers],
         }
     }
 
@@ -81,6 +145,24 @@ impl SlotSchedule {
     /// Existing placements stand; makespan ignores the dead worker.
     pub fn kill_worker(&mut self, worker: usize) {
         self.killed[worker] = true;
+    }
+
+    /// Slow `worker` down by `factor`: every duration placed there is
+    /// scaled by it. Out-of-range workers are ignored (a fault spec may
+    /// name a worker a smaller cluster does not have).
+    pub fn set_slowdown(&mut self, worker: usize, factor: f64) {
+        assert!(factor > 0.0, "slowdown factor must be positive");
+        if worker < self.slowdown.len() {
+            self.slowdown[worker] = factor;
+        }
+    }
+
+    fn scaled(d: Duration, factor: f64) -> Duration {
+        if factor == 1.0 {
+            d
+        } else {
+            Duration((d.0 as f64 * factor).round() as u64)
+        }
     }
 
     /// Earliest time `cpus` slots are simultaneously free on `worker`.
@@ -168,12 +250,140 @@ impl SlotSchedule {
             } else {
                 t.duration + t.remote_penalty
             };
-            let end = start + dur;
+            let end = start + Self::scaled(dur, self.slowdown[worker]);
             self.reserve(worker, cpus, end);
             placements.push(TaskPlacement { id: t.id, worker, start, end, local });
         }
         placements.sort_by_key(|p| p.id);
         placements
+    }
+
+    /// Undo the tail of a reservation: `cpus` slots on `worker` that
+    /// currently free at `old_end` free at `new_end` instead (the
+    /// cancelled loser of a speculation race releases its slots the
+    /// moment the winner commits). If later tasks already stacked onto
+    /// those slots the slot value moved past `old_end` and nothing is
+    /// reclaimed — conservative: the model then under-claims the win,
+    /// never over-claims it.
+    fn release_to(&mut self, worker: usize, cpus: u32, old_end: VirtualTime, new_end: VirtualTime) {
+        let slots = &mut self.slots[worker];
+        let take = (cpus as usize).min(slots.len());
+        let mut done = 0usize;
+        for s in slots.iter_mut().rev() {
+            if done == take {
+                break;
+            }
+            if *s == old_end {
+                *s = new_end;
+                done += 1;
+            }
+        }
+        slots.sort();
+    }
+
+    /// [`Self::run`], then a speculation pass: once `policy.quantile`
+    /// of the stage's tasks have finished (virtual time `t_q`), any
+    /// task whose projected duration exceeds `policy.multiplier x
+    /// median(finished)` gets a copy launched on the fastest-available
+    /// other live worker (earliest projected *finish*, so a slowed
+    /// worker loses even when its slot frees first; locality and
+    /// release times still apply). The stage commits whichever attempt
+    /// finishes first; the loser is cancelled and its slots reclaimed.
+    ///
+    /// Returns the committed placements (same order as ids, winners
+    /// substituted) plus the race ledger for the launch-counter audit.
+    pub fn run_speculated(
+        &mut self,
+        tasks: &[SlotTask],
+        policy: &SpeculationPolicy,
+    ) -> (Vec<TaskPlacement>, SpecOutcome) {
+        let mut placements = self.run(tasks);
+        let mut outcome = SpecOutcome::default();
+        let n = placements.len();
+        if n == 0 || policy.max_inflight == 0 {
+            return (placements, outcome);
+        }
+
+        // The watermark: when `quantile` of the stage has finished, and
+        // the median duration among those finishers.
+        let need = ((policy.quantile * n as f64).ceil() as usize).clamp(1, n);
+        let mut by_end: Vec<(VirtualTime, Duration)> =
+            placements.iter().map(|p| (p.end, p.end - p.start)).collect();
+        by_end.sort();
+        let t_q = by_end[need - 1].0;
+        let mut finished: Vec<Duration> = by_end[..need].iter().map(|&(_, d)| d).collect();
+        finished.sort();
+        let threshold = Self::scaled(finished[need / 2], policy.multiplier);
+
+        // Stragglers, worst first, capped at the in-flight budget.
+        let mut stragglers: Vec<usize> = (0..n)
+            .filter(|&i| {
+                placements[i].end > t_q && placements[i].end - placements[i].start > threshold
+            })
+            .collect();
+        stragglers.sort_by_key(|&i| std::cmp::Reverse(placements[i].end));
+        stragglers.truncate(policy.max_inflight);
+
+        for i in stragglers {
+            let orig = placements[i];
+            let t = *tasks.iter().find(|t| t.id == orig.id).expect("placement without a task");
+            let cpus = t.cpus.max(1);
+            // Copy worker: live, not the original's, with enough slots;
+            // earliest projected copy finish wins.
+            let mut best: Option<(usize, VirtualTime, VirtualTime)> = None;
+            for w in 0..self.slots.len() {
+                if w == orig.worker || self.killed[w] || (cpus as usize) > self.slots[w].len() {
+                    continue;
+                }
+                let start = self.earliest_on(w, cpus).max(t.release).max(t_q);
+                // as in `run`: a task with no preference is local
+                // anywhere; with one, off-preference pays the penalty
+                let base = if t.preferred.is_none_or(|p| p == w) {
+                    t.duration
+                } else {
+                    t.duration + t.remote_penalty
+                };
+                let end = start + Self::scaled(base, self.slowdown[w]);
+                if best.is_none_or(|(_, _, e)| end < e) {
+                    best = Some((w, start, end));
+                }
+            }
+            let Some((w, copy_start, copy_end)) = best else { continue };
+            if copy_end < orig.end {
+                // The copy wins: the original is cancelled the moment
+                // the copy finishes, so its slots free at that instant.
+                self.reserve(w, cpus, copy_end);
+                self.release_to(orig.worker, cpus, orig.end, copy_end);
+                placements[i] = TaskPlacement {
+                    id: orig.id,
+                    worker: w,
+                    start: copy_start,
+                    end: copy_end,
+                    local: t.preferred.is_none_or(|p| p == w),
+                };
+                outcome.decisions.push(SpecDecision {
+                    id: orig.id,
+                    copy_worker: w,
+                    copy_start,
+                    copy_end,
+                    copy_wins: true,
+                    committed_end: copy_end,
+                });
+            } else {
+                // The original wins: the copy holds its slots until the
+                // original's finish cancels it.
+                self.reserve(w, cpus, orig.end.max(copy_start));
+                outcome.decisions.push(SpecDecision {
+                    id: orig.id,
+                    copy_worker: w,
+                    copy_start,
+                    copy_end,
+                    copy_wins: false,
+                    committed_end: orig.end,
+                });
+            }
+        }
+        (placements, outcome)
     }
 
     /// Makespan so far (max slot free time over live workers).
@@ -328,6 +538,116 @@ mod tests {
         assert_eq!(p[0].worker, 1);
         assert!(p[0].local);
         assert_eq!(p[0].start, VirtualTime::seconds(2.0));
+    }
+
+    #[test]
+    fn slowdown_scales_placed_durations() {
+        let mut s = SlotSchedule::new(2, 1);
+        s.set_slowdown(0, 4.0);
+        let p = s.run(&[task(0, 1.0), task(1, 1.0)]);
+        // earliest-start ties break toward worker 0, which then runs
+        // 4x slower; the other task lands on worker 1 at full speed
+        assert_eq!(p[0].worker, 0);
+        assert_eq!(p[0].end - p[0].start, Duration::seconds(4.0));
+        assert_eq!(p[1].worker, 1);
+        assert_eq!(p[1].end - p[1].start, Duration::seconds(1.0));
+        // out-of-range factors are ignored, not a panic
+        s.set_slowdown(99, 2.0);
+    }
+
+    #[test]
+    fn speculation_rescues_a_planted_straggler() {
+        // 8 equal 1s tasks on 4 workers x 2 slots, worker 0 planted 4x
+        // slow: the two tasks stuck there straggle to 4s while the
+        // other six finish at 1s. With the default policy the 75%
+        // watermark passes at 1s, both stragglers get copies on fast
+        // workers finishing at 2s, and the losers' slots are reclaimed.
+        let mut s = SlotSchedule::new(4, 2);
+        s.set_slowdown(0, 4.0);
+        let tasks: Vec<SlotTask> = (0..8).map(|i| task(i, 1.0)).collect();
+        let (p, spec) = s.run_speculated(&tasks, &SpeculationPolicy::default());
+        assert_eq!(spec.speculated(), 2);
+        assert_eq!(spec.wins(), 2);
+        assert_eq!(spec.cancelled(), 2);
+        for d in &spec.decisions {
+            assert!(d.copy_wins);
+            assert_ne!(d.copy_worker, 0, "a copy must leave the slow worker");
+            assert_eq!(d.copy_start, VirtualTime::seconds(1.0));
+            assert_eq!(d.committed_end, VirtualTime::seconds(2.0));
+        }
+        assert!(p.iter().all(|pl| pl.end <= VirtualTime::seconds(2.0)), "{p:?}");
+        assert_eq!(s.makespan(), VirtualTime::seconds(2.0), "losers' slots reclaimed");
+    }
+
+    #[test]
+    fn speculation_is_a_no_op_without_stragglers() {
+        let tasks: Vec<SlotTask> = (0..8).map(|i| task(i, 1.0)).collect();
+        let mut plain = SlotSchedule::new(2, 2);
+        let expect = plain.run(&tasks);
+        let mut s = SlotSchedule::new(2, 2);
+        let (p, spec) = s.run_speculated(&tasks, &SpeculationPolicy::default());
+        assert_eq!(p, expect);
+        assert_eq!(spec.speculated(), 0);
+        assert_eq!(s.makespan(), plain.makespan());
+    }
+
+    #[test]
+    fn a_losing_copy_is_cancelled_and_the_original_stands() {
+        // 4 x 1s tasks on 2 workers x 1 slot, worker 0 4x slow: by the
+        // time the watermark passes (3s) the only other slot frees at
+        // 3s, so the copy would finish at 4s — no earlier than the
+        // original. The copy launches, loses the race and is cancelled.
+        let mut s = SlotSchedule::new(2, 1);
+        s.set_slowdown(0, 4.0);
+        let tasks: Vec<SlotTask> = (0..4).map(|i| task(i, 1.0)).collect();
+        let (p, spec) = s.run_speculated(&tasks, &SpeculationPolicy::default());
+        assert_eq!(spec.speculated(), 1);
+        assert_eq!(spec.wins(), 0);
+        assert_eq!(spec.cancelled(), 1);
+        let d = spec.decisions[0];
+        assert!(!d.copy_wins);
+        assert_eq!(d.committed_end, VirtualTime::seconds(4.0));
+        assert_eq!(p[0].worker, 0, "the original placement stands");
+        assert_eq!(s.makespan(), VirtualTime::seconds(4.0));
+    }
+
+    /// Regression alongside `out_of_range_preference_...`: speculation
+    /// interacting with `kill_worker` / `delay_worker` — a speculative
+    /// copy must never be placed on a killed worker, and a delayed
+    /// worker gates the copy's start like any other placement.
+    #[test]
+    fn speculative_copies_never_land_on_killed_workers() {
+        let pol = SpeculationPolicy { quantile: 0.5, multiplier: 1.5, max_inflight: 4 };
+        // 3 workers, worker 2 dead, worker 0 planted 8x slow: rescue
+        // copies may only use worker 1.
+        let mut s = SlotSchedule::new(3, 1);
+        s.kill_worker(2);
+        s.set_slowdown(0, 8.0);
+        let tasks: Vec<SlotTask> = (0..4).map(|i| task(i, 1.0)).collect();
+        let (p, spec) = s.run_speculated(&tasks, &pol);
+        assert!(!spec.decisions.is_empty(), "the planted straggler must be raced");
+        for d in &spec.decisions {
+            assert_eq!(d.copy_worker, 1, "never the killed worker, never the original's");
+        }
+        assert!(p.iter().all(|pl| pl.worker != 2));
+
+        // a delayed worker cannot start a copy before it is ready
+        let mut s = SlotSchedule::new(2, 1);
+        s.set_slowdown(0, 8.0);
+        s.delay_worker(1, VirtualTime::seconds(3.0));
+        let (_, spec) = s.run_speculated(&[task(0, 1.0), task(1, 1.0)], &pol);
+        assert!(!spec.decisions.is_empty());
+        for d in &spec.decisions {
+            assert!(d.copy_start >= VirtualTime::seconds(3.0));
+        }
+
+        // with the straggler's own worker the only one, no copy can
+        // launch at all — speculation degrades to a no-op
+        let mut s = SlotSchedule::new(1, 4);
+        let mut tasks: Vec<SlotTask> = (0..6).map(|i| task(i, 1.0)).collect();
+        tasks.push(task(6, 5.0));
+        let (_, spec) = s.run_speculated(&tasks, &pol);
+        assert_eq!(spec.speculated(), 0, "a straggler with nowhere to copy is left alone");
     }
 
     #[test]

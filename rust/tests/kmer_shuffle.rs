@@ -162,7 +162,10 @@ fn range_partitioning_beats_hash_on_planted_skew() {
         &Partitioner::HashByKey { key_fn: key_fn.clone(), num },
         records.clone(),
     );
-    let range = plan::route(&Partitioner::RangeByKey { key_fn, num }, records);
+    let range = plan::route(
+        &Partitioner::RangeByKey { key_fn, num, observed: None },
+        records,
+    );
     let (hash_max, mean) = loads(&hash);
     let (range_max, _) = loads(&range);
 
@@ -177,4 +180,76 @@ fn range_partitioning_beats_hash_on_planted_skew() {
     );
     assert!(hash_max * 10 >= mean * 24, "hash imbalance vanished: max={hash_max} mean={mean}");
     assert!(range_max * 10 <= mean * 18, "range imbalance too big: max={range_max} mean={mean}");
+}
+
+/// Observed-frequency cut planning (ISSUE 10 satellite, the ROADMAP
+/// range-partitioner follow-up): when the SAME key space is reshuffled,
+/// feeding the prior shuffle's measured `ShuffleStats::key_freqs` back
+/// as `RangeByKey { observed }` must beat the in-shuffle stride sample
+/// on skew the stride systematically misses.
+///
+/// The plant: 1024 groups of 4 records laid out `[light, heavy, heavy,
+/// heavy]` — 4096 records total, so the stride sampler (cap 1024) keeps
+/// every 4th record, which is EXACTLY the light at each group head. The
+/// sample sees a uniform distribution over 64 light keys and never one
+/// of the 3072 heavy records (`zz1`/`zz2`, 1536 each, sorting above all
+/// lights), so its cuts dump both heavy keys plus the top lights into
+/// the last bucket: max load 3200/4096. The measured histogram gives
+/// each heavy key its own bucket: max load 1536 — the hottest key's own
+/// mass, the floor no key-preserving partitioner can beat.
+#[test]
+fn observed_frequencies_beat_the_stride_sample_on_hidden_skew() {
+    let mut records: Vec<Record> = Vec::new();
+    for g in 0..1024usize {
+        records.push(Record::text(format!("a{:02}", g % 64)));
+        let heavy = if g % 2 == 0 { "zz1" } else { "zz2" };
+        records.extend((0..3).map(|_| Record::text(heavy)));
+    }
+    let total = records.len();
+    assert_eq!(total, 4096);
+    let num = 8usize;
+    let key_fn: Arc<dyn Fn(&Record) -> String + Send + Sync> =
+        Arc::new(|r: &Record| r.as_text().unwrap_or("*").to_string());
+    let max_load = |buckets: &[Vec<Record>]| -> usize {
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), total, "routing lost records");
+        buckets.iter().map(Vec::len).max().unwrap()
+    };
+
+    // the stride-sampled cuts miss every heavy record
+    let sampled = plan::route(
+        &Partitioner::RangeByKey { key_fn: key_fn.clone(), num, observed: None },
+        records.clone(),
+    );
+    let sampled_max = max_load(&sampled);
+    assert_eq!(sampled_max, 3200, "the plant no longer hides from the stride");
+
+    // a prior shuffle of the same key space measured the histogram;
+    // hash-partitioned here, as a first `repartition_by_key` pass would
+    let (_, stats) = mare::cluster::shuffle::shuffle(
+        vec![(0, records.clone())],
+        &Partitioner::HashByKey { key_fn: key_fn.clone(), num },
+        4,
+        &mare::simtime::NetModel::lan(),
+    );
+    let heavy_count = |k: &str| -> u64 {
+        stats.key_freqs.iter().find(|(key, _)| key == k).map(|&(_, c)| c).unwrap_or(0)
+    };
+    assert_eq!(stats.key_freqs.len(), 66, "64 lights + 2 heavies");
+    assert_eq!(heavy_count("zz1"), 1536);
+    assert_eq!(heavy_count("zz2"), 1536);
+
+    // feeding it back isolates each heavy key at the irreducible floor
+    let fed = Partitioner::RangeByKey {
+        key_fn,
+        num,
+        observed: Some(Arc::new(stats.key_freqs.clone())),
+    };
+    let observed = plan::route(&fed, records);
+    let observed_max = max_load(&observed);
+    assert_eq!(observed_max, 1536, "observed cuts must hit the hottest-key floor");
+    assert!(
+        sampled_max >= 2 * observed_max,
+        "observed cuts must recover >= 2x of the stride's max load: \
+         sampled={sampled_max} observed={observed_max}"
+    );
 }

@@ -234,6 +234,74 @@ fn threaded_crosscheck_is_byte_identical_per_plan() {
     }
 }
 
+/// ISSUE 10 satellite: the exactly-once audit survives speculative
+/// execution. With a planted 4x-slow worker and speculation on, racing
+/// straggler copies launch EXTRA containers — deterministically, so
+/// per-job launch counts still match a single-driver reference built
+/// with the SAME speculative shape, the workers' global counter still
+/// sums exactly, and the speculative shape never launches fewer
+/// containers than the plain one (copies only ever add).
+#[test]
+fn speculation_enabled_round_keeps_exactly_once_accounting() {
+    use mare::cluster::{FaultSpec, SpeculationPolicy};
+
+    const SPEC_JOBS: usize = 10;
+    let spec_shape = || -> ClusterConfig {
+        shape()
+            .with_fault(FaultSpec::SlowWorker { worker: 0, factor: 4.0 })
+            .with_speculation(SpeculationPolicy::default())
+    };
+    let plans = corpus();
+    let plain_refs = references(&plans);
+    let reference = Driver::new("reference-spec", spec_shape());
+    let spec_refs: Vec<Reference> = plans
+        .iter()
+        .map(|text| {
+            let envelope = Json::parse(text).unwrap();
+            let run = reference.execute(&envelope).unwrap();
+            Reference { explain: run.explain, launches: run.launches }
+        })
+        .collect();
+    for (s, p) in spec_refs.iter().zip(&plain_refs) {
+        assert_eq!(s.explain, p.explain, "speculation must not change the plan");
+        assert!(
+            s.launches >= p.launches,
+            "speculative copies can only add launches: {} < {}",
+            s.launches,
+            p.launches
+        );
+    }
+
+    let queue = spool("speculation");
+    let submitter = Submitter::new(spec_shape());
+    let plan_of = |id: u64| (id as usize - 1) % plans.len();
+    for id in 1..=SPEC_JOBS as u64 {
+        submitter.submit(&queue, &plans[plan_of(id)]).unwrap();
+    }
+    let mut config = PoolConfig::new(4, spec_shape());
+    config.poll = Duration::from_millis(10);
+    let outcome = WorkerPool::new(config).run(&queue).unwrap();
+    assert_eq!(outcome.finished.len(), SPEC_JOBS);
+
+    // exactly-once, job by job and globally, under racing copies
+    let jobs = queue.list().unwrap();
+    assert_eq!(jobs.len(), SPEC_JOBS);
+    for job in &jobs {
+        assert_eq!(job.status, JobStatus::Done, "job {} not done", job.id);
+        assert_eq!(
+            job.result.as_ref().unwrap().launches,
+            spec_refs[plan_of(job.id)].launches,
+            "job {} must match its speculative single-driver reference",
+            job.id
+        );
+    }
+    let expected_total: u64 =
+        (1..=SPEC_JOBS as u64).map(|id| spec_refs[plan_of(id)].launches).sum();
+    assert_eq!(outcome.total_launches(), expected_total);
+
+    let _ = std::fs::remove_dir_all(queue.dir());
+}
+
 /// ISSUE 6 satellite: drain under load. A resident pool is drained
 /// MID-FLOOD — while a submitter thread is still spooling new jobs —
 /// and must finish what it already claimed, claim nothing new, and

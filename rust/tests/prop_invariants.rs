@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use mare::dataset::{join_records, plan, split_records, split_records_shared, Partitioner, Record};
+use mare::dataset::{join_records, plan, Partitioner, Record, Splitter};
 use mare::mare::MountPoint;
 use mare::prop_assert;
 use mare::simtime::{Duration, SlotSchedule, SlotTask, VirtualTime};
@@ -200,7 +200,7 @@ fn split_join_are_inverse() {
             (0..n).map(|i| format!("r{i}x{}", rng.below(100))).collect();
         let sep = *rng.choice(&["\n", "\n$$$$\n", ";;"]);
         let joined = join_records(&recs, sep);
-        let split = split_records(&joined, sep);
+        let split = Splitter::new(sep).split_owned(&joined);
         prop_assert!(split == recs, "{split:?} != {recs:?}");
         Ok(())
     });
@@ -233,9 +233,10 @@ fn zero_copy_split_matches_owned_and_roundtrips() {
             text.push_str("tail-no-sep"); // no trailing separator
         }
 
-        let owned = split_records(&text, sep);
+        let sp = Splitter::new(sep);
+        let owned = sp.split_owned(&text);
         let buf = mare::util::bytes::SharedStr::from(text.as_str());
-        let shared = split_records_shared(&buf, sep);
+        let shared = sp.split(&buf);
 
         prop_assert!(
             shared.len() == owned.len(),
@@ -254,11 +255,11 @@ fn zero_copy_split_matches_owned_and_roundtrips() {
             shared.iter().map(|s| s.as_str().to_string()).collect();
         let rejoined = join_records(&shared_strings, sep);
         prop_assert!(
-            split_records(&rejoined, sep) == owned,
+            sp.split_owned(&rejoined) == owned,
             "owned re-split of rejoined text diverged"
         );
         let rebuf = mare::util::bytes::SharedStr::from(rejoined.as_str());
-        let reshared = split_records_shared(&rebuf, sep);
+        let reshared = sp.split(&rebuf);
         prop_assert!(
             reshared.iter().map(|s| s.as_str()).eq(owned.iter().map(|s| s.as_str())),
             "shared re-split of rejoined text diverged"
@@ -412,6 +413,88 @@ fn combiner_changes_nothing_but_the_shuffle_annotation() {
             text_on.trim_end() == kmer::oracle(&genome, kmer::K),
             "result disagrees with the oracle"
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------- speculative execution
+
+/// Speculative execution is a MAKESPAN optimization, never a semantic
+/// change: for random pipelines, random cluster shapes, random planted
+/// stragglers, and random speculation policies, the speculation-on run
+/// must collect byte-identical output to the speculation-off baseline,
+/// agree on the whole plan (`explain()`), and reconcile its counters —
+/// first-finisher-wins cancels exactly one loser per race, and a race
+/// can't be won more often than it was entered.
+#[test]
+fn speculation_changes_makespan_but_never_bytes() {
+    use mare::cluster::{ClusterConfig, FaultSpec, SpeculationPolicy};
+    use mare::workloads::kmer;
+
+    check("speculation-on-off-equivalence", 20, |rng| {
+        let lines = rng.range(4, 40);
+        let line_len = rng.range(4, 32);
+        let source_parts = rng.range(1, 9);
+        let shuffle_parts = rng.range(1, 5);
+        let combine = rng.bool(0.5);
+        let workers = rng.range(2, 6);
+        let vcpus = rng.range(1, 4) as u32;
+        let genome = kmer::genome_text(rng.below(1000) as u64, lines, line_len);
+        let slow = rng.bool(0.7).then(|| FaultSpec::SlowWorker {
+            worker: rng.below(workers),
+            factor: 1.0 + rng.f64() * 7.0,
+        });
+        let policy = SpeculationPolicy {
+            quantile: 0.5 + rng.f64() * 0.45,
+            multiplier: 1.05 + rng.f64(),
+            max_inflight: rng.range(1, 5),
+        };
+
+        let mk = |speculate: bool| {
+            let mut config = ClusterConfig::sized(workers, vcpus);
+            if let Some(f) = slow {
+                config = config.with_fault(f);
+            }
+            if speculate {
+                config = config.with_speculation(policy);
+            }
+            let cluster = Arc::new(mare::cluster::Cluster::new(
+                Arc::new(mare::tools::images::stock_registry(None)),
+                None,
+                config,
+            ));
+            let ds = mare::dataset::Dataset::parallelize_text(&genome, "\n", source_parts);
+            kmer::pipeline(cluster, ds, shuffle_parts, combine)
+        };
+        let on = mk(true);
+        let off = mk(false);
+        prop_assert!(on.explain() == off.explain(), "speculation leaked into the plan");
+
+        let out_on = on.run().map_err(|e| e.to_string())?;
+        let out_off = off.run().map_err(|e| e.to_string())?;
+        prop_assert!(
+            out_on.collect_text("\n") == out_off.collect_text("\n"),
+            "speculation changed the collected result"
+        );
+        for s in &out_on.report.stages {
+            prop_assert!(
+                s.spec_cancelled == s.speculated,
+                "stage {}: every race cancels exactly one loser ({} vs {})",
+                s.stage,
+                s.spec_cancelled,
+                s.speculated
+            );
+            prop_assert!(
+                s.spec_wins <= s.speculated,
+                "stage {}: {} wins from {} copies",
+                s.stage,
+                s.spec_wins,
+                s.speculated
+            );
+        }
+        for s in &out_off.report.stages {
+            prop_assert!(s.speculated == 0, "speculation off must launch no copies");
+        }
         Ok(())
     });
 }

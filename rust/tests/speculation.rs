@@ -1,0 +1,181 @@
+//! Speculative-execution gates (ISSUE 10; run in release by the
+//! `stress` CI matrix, documented in docs/ARCHITECTURE.md "Straggler
+//! mitigation: speculative execution").
+//!
+//! Four contracts, each asserted end-to-end through the public job API:
+//!
+//! * **Makespan recovery** — on a container job with a planted 4x-slow
+//!   worker, turning speculation on must win back >= 2x of the makespan
+//!   the straggler cost, while collecting BYTE-IDENTICAL output.
+//! * **Launch audit** — speculative copies really launch containers:
+//!   the engine counter reads `tasks + speculated`, never less than
+//!   `tasks`, and the surplus is exactly the stage's `speculated`.
+//! * **Multi-stage byte-identity** — on the shuffling k-mer pipeline,
+//!   speculation on vs off must agree on every collected byte and on
+//!   `explain()` (the plan is untouched; only the schedule races).
+//! * **Fault composition** — speculation enabled alongside a worker
+//!   loss must keep lineage recovery byte-identical (the killed-worker
+//!   placement rule itself is pinned in `simtime::schedule` unit
+//!   tests; here the two features just have to coexist).
+
+use std::sync::Arc;
+
+use mare::cluster::{Cluster, ClusterConfig, FaultSpec, SpeculationPolicy};
+use mare::config::RunConfigFile;
+use mare::container::Registry;
+use mare::dataset::Dataset;
+use mare::mare::{Job, MaRe};
+use mare::simtime::Duration;
+use mare::tools::images;
+use mare::util::cli::Args;
+use mare::workloads::kmer;
+
+const TASKS: usize = 8;
+
+fn cluster(cfg: ClusterConfig) -> Arc<Cluster> {
+    let mut reg = Registry::new();
+    reg.push(images::ubuntu());
+    Arc::new(Cluster::new(Arc::new(reg), None, cfg))
+}
+
+/// A map-only container job: 8 equal-sized partitions, one `tr`
+/// container each, so every task has the same nominal duration and the
+/// slowed worker's tasks are unambiguous stragglers.
+fn upper_job(cfg: ClusterConfig) -> Job {
+    let text = (0..TASKS).map(|i| format!("r{i}")).collect::<Vec<_>>().join("\n");
+    let ds = Dataset::parallelize_text(&text, "\n", TASKS);
+    MaRe::source(cluster(cfg), ds)
+        .map("ubuntu", "tr r R < /in > /out")
+        .mounts("/in", "/out")
+        .build()
+        .expect("valid map job")
+}
+
+fn shape() -> ClusterConfig {
+    ClusterConfig::sized(4, 2)
+}
+
+fn slow() -> ClusterConfig {
+    shape().with_fault(FaultSpec::SlowWorker { worker: 0, factor: 4.0 })
+}
+
+#[test]
+fn speculation_recovers_a_planted_straggler_makespan() {
+    let base = upper_job(shape()).run().unwrap();
+    let off = upper_job(slow()).run().unwrap();
+    let on = upper_job(slow().with_speculation(SpeculationPolicy::default())).run().unwrap();
+
+    // byte-identical output, straggler or not, speculation on or off
+    assert_eq!(on.collect_text("\n"), off.collect_text("\n"));
+    assert_eq!(on.collect_text("\n"), base.collect_text("\n"));
+    assert!(on.collect_text("\n").contains("R0"));
+
+    let s = &on.report.stages[0];
+    assert_eq!(s.tasks, TASKS);
+    assert!(s.speculated >= 1, "the straggler's tasks must be raced");
+    assert_eq!(s.spec_cancelled, s.speculated, "one cancelled loser per race");
+    assert!(s.spec_wins <= s.speculated);
+    assert_eq!(off.report.stages[0].speculated, 0, "speculation off must not race");
+
+    // >= 2x of the straggler's damage is won back
+    let lost = off.report.makespan - base.report.makespan;
+    let still = on.report.makespan - base.report.makespan;
+    assert!(lost > Duration::ZERO, "the straggler must hurt the makespan");
+    assert!(
+        lost.0 >= 2 * still.0,
+        "speculation must recover >= 2x: base={} off={} on={}",
+        base.report.makespan,
+        off.report.makespan,
+        on.report.makespan
+    );
+}
+
+#[test]
+fn speculative_copies_tick_the_container_launch_counter() {
+    let plain = upper_job(slow());
+    plain.run().unwrap();
+    let launches_plain = plain.container_launches();
+    assert_eq!(launches_plain, TASKS as u64, "one container per task without speculation");
+
+    let racing = upper_job(slow().with_speculation(SpeculationPolicy::default()));
+    let out = racing.run().unwrap();
+    let s = &out.report.stages[0];
+    let launches = racing.container_launches();
+    assert!(launches >= s.tasks as u64, "audit floor: launches >= tasks");
+    assert_eq!(
+        launches,
+        (s.tasks + s.speculated) as u64,
+        "the launch surplus must be exactly the speculated copies"
+    );
+    assert!(s.speculated >= 1, "this shape must actually race");
+}
+
+#[test]
+fn multi_stage_pipeline_is_byte_identical_with_speculation() {
+    let genome = kmer::genome_text(11, 64, 48);
+    let run = |cfg: ClusterConfig| {
+        let reg = Arc::new(images::stock_registry(None));
+        let cl = Arc::new(Cluster::new(reg, None, cfg));
+        let ds = Dataset::parallelize_text(&genome, "\n", 8);
+        let job = kmer::pipeline(cl, ds, 4, true);
+        let explain = job.explain();
+        (job.run().unwrap(), explain)
+    };
+    let (off, explain_off) = run(slow());
+    let (on, explain_on) = run(slow().with_speculation(SpeculationPolicy::default()));
+
+    assert_eq!(explain_on, explain_off, "speculation must not touch the plan");
+    assert_eq!(on.collect_text("\n"), off.collect_text("\n"), "collected bytes must agree");
+    for s in &on.report.stages {
+        assert_eq!(s.spec_cancelled, s.speculated, "stage {}: one loser per race", s.stage);
+        assert!(s.spec_wins <= s.speculated, "stage {}", s.stage);
+    }
+    assert!(on.report.makespan <= off.report.makespan, "racing can only help the makespan");
+}
+
+#[test]
+fn speculation_composes_with_worker_loss_recovery() {
+    let genome = kmer::genome_text(13, 64, 48);
+    let run = |cfg: ClusterConfig| {
+        let reg = Arc::new(images::stock_registry(None));
+        let cl = Arc::new(Cluster::new(reg, None, cfg));
+        let ds = Dataset::parallelize_text(&genome, "\n", 8);
+        kmer::pipeline(cl, ds, 4, true).run().unwrap()
+    };
+    let clean = run(shape());
+    let lossy = run(
+        shape()
+            .with_fault(FaultSpec::WorkerLoss { worker: 1, after_stage: 0 })
+            .with_speculation(SpeculationPolicy::default()),
+    );
+    assert_eq!(
+        lossy.collect_text("\n"),
+        clean.collect_text("\n"),
+        "lineage recovery under speculation must stay byte-identical"
+    );
+    assert!(lossy.report.stages[0].recomputed > 0, "the loss must actually trigger recovery");
+    for s in &lossy.report.stages {
+        assert_eq!(s.spec_cancelled, s.speculated, "stage {}", s.stage);
+    }
+}
+
+#[test]
+fn cli_grammar_reaches_the_cluster_config() {
+    // the straggler grammar itself
+    assert_eq!(
+        FaultSpec::parse("2:slow:3.5").unwrap(),
+        FaultSpec::SlowWorker { worker: 2, factor: 3.5 }
+    );
+    for bad in ["2:slow:0", "2:slow:-1", "slow", "2:kill:3"] {
+        assert!(FaultSpec::parse(bad).unwrap_err().contains("--fault"), "{bad:?}");
+    }
+
+    // `mare run --fault 0:slow:4 --speculate` lands on the ClusterConfig
+    let args = Args::parse(
+        ["run", "--fault", "0:slow:4", "--speculate"].iter().map(|s| s.to_string()),
+    )
+    .unwrap();
+    let cfg = RunConfigFile::from_args(&args).unwrap();
+    assert_eq!(cfg.cluster.fault, Some(FaultSpec::SlowWorker { worker: 0, factor: 4.0 }));
+    assert_eq!(cfg.cluster.speculation, Some(SpeculationPolicy::default()));
+}
